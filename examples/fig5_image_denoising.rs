@@ -1,0 +1,121 @@
+//! Fig. 5 — image denoising via model-distributed dictionary learning
+//! (§IV-B). **The end-to-end headline driver**: trains the distributed
+//! dictionary online over the agent network, denoises a σ=50-corrupted
+//! scene, and compares against the centralized comparator [6], in both
+//! data configurations:
+//!
+//! * all agents informed (Fig. 5h/i + the per-agent PSNR sweep 5g);
+//! * only agent 1 informed (Fig. 5e/f).
+//!
+//! Paper numbers (van Hateren scenes, N = 196, 1M patches):
+//! corrupted 14.06 dB → [6] 21.77 dB, distributed 21.97/21.98 dB.
+//! Scaled defaults here (synthetic scenes, N = 64, ~12k patch
+//! presentations) reproduce the *shape*: distributed ≈ centralized ≫
+//! corrupted, uniform across agents, single-informed ≈ all-informed.
+//!
+//! Outputs: results/fig5_psnr.csv, results/fig5_per_agent_psnr.csv,
+//! results/fig5_{clean,noisy,denoised}.pgm, results/fig5_atoms.csv
+//!
+//! Flags: --quick (smaller run), --paper-scale, --skip-single.
+
+use ddl::cli::Args;
+use ddl::config::experiment::DenoiseConfig;
+use ddl::coordinator::csv::{write_csv, write_labeled_csv};
+use ddl::coordinator::run_denoise;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let mut cfg = if args.flag("paper-scale") {
+        DenoiseConfig::paper_scale()
+    } else {
+        DenoiseConfig::default()
+    };
+    if args.flag("quick") {
+        cfg.agents = 32;
+        cfg.train_samples = 2_000;
+        cfg.train_infer.iters = 120;
+        cfg.denoise_infer.iters = 150;
+        cfg.image_side = 96;
+        cfg.denoise_stride = 3;
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed).unwrap();
+
+    println!("Fig. 5: image denoising (N = {} agents, M = {})", cfg.agents, cfg.patch * cfg.patch);
+
+    // --- configuration A: all agents informed, with baseline + per-agent ---
+    println!("\n[A] all agents informed (Fig. 5g/h/i)");
+    let report_all = run_denoise(&cfg, true, true, |s| println!("  {s}")).unwrap();
+
+    // --- configuration B: only agent 1 informed (Fig. 5e/f) ---
+    let report_single = if args.flag("skip-single") {
+        None
+    } else {
+        println!("\n[B] only agent 1 informed (Fig. 5e/f)");
+        let mut cfg_single = cfg.clone();
+        cfg_single.informed = Some(1);
+        Some(run_denoise(&cfg_single, false, false, |s| println!("  {s}")).unwrap())
+    };
+
+    // --- report ---
+    println!("\n== Fig. 5 PSNR summary (paper: 14.06 / 21.77 / 21.97 / 21.98 dB) ==");
+    println!("corrupted:                {:.2} dB", report_all.psnr_noisy);
+    println!(
+        "centralized [6]:          {:.2} dB",
+        report_all.psnr_centralized.unwrap_or(f64::NAN)
+    );
+    if let Some(rs) = &report_single {
+        println!("distributed (1 informed): {:.2} dB", rs.psnr_distributed);
+    }
+    println!("distributed (all):        {:.2} dB", report_all.psnr_distributed);
+
+    let mut rows = vec![
+        ("corrupted".to_string(), vec![report_all.psnr_noisy]),
+        (
+            "centralized".to_string(),
+            vec![report_all.psnr_centralized.unwrap_or(f64::NAN)],
+        ),
+        ("distributed_all".to_string(), vec![report_all.psnr_distributed]),
+    ];
+    if let Some(rs) = &report_single {
+        rows.push(("distributed_single".to_string(), vec![rs.psnr_distributed]));
+    }
+    write_labeled_csv(Path::new("results/fig5_psnr.csv"), &["config", "psnr_db"], &rows).unwrap();
+
+    // Per-agent PSNR (Fig. 5g): uniformity across the network.
+    if !report_all.per_agent_psnr.is_empty() {
+        let pa: Vec<Vec<f64>> = report_all
+            .per_agent_psnr
+            .iter()
+            .enumerate()
+            .map(|(k, &p)| vec![k as f64, p])
+            .collect();
+        write_csv(Path::new("results/fig5_per_agent_psnr.csv"), &["agent", "psnr_db"], &pa)
+            .unwrap();
+        let min = report_all.per_agent_psnr.iter().cloned().fold(f64::MAX, f64::min);
+        let max = report_all.per_agent_psnr.iter().cloned().fold(f64::MIN, f64::max);
+        println!(
+            "per-agent PSNR (Fig. 5g): {:.2}–{:.2} dB (spread {:.2} dB — paper: 'relatively uniform')",
+            min,
+            max,
+            max - min
+        );
+    }
+
+    // Images + learned atoms for eyeballing.
+    let (clean, noisy, denoised) = &report_all.images;
+    clean.write_pgm(Path::new("results/fig5_clean.pgm")).unwrap();
+    noisy.write_pgm(Path::new("results/fig5_noisy.pgm")).unwrap();
+    denoised.write_pgm(Path::new("results/fig5_denoised.pgm")).unwrap();
+    let dict = &report_all.dictionary;
+    let atom_rows: Vec<Vec<f64>> = (0..dict.cols())
+        .map(|q| dict.col(q).iter().map(|&v| v as f64).collect())
+        .collect();
+    write_csv(
+        Path::new("results/fig5_atoms.csv"),
+        &vec!["px"; dict.rows()],
+        &atom_rows,
+    )
+    .unwrap();
+    println!("wrote results/fig5_* (psnr csv, per-agent csv, pgm images, atoms)");
+}

@@ -1,0 +1,86 @@
+//! Fig. 7 + Table IV — novel document detection with the Huber residual
+//! (§IV-C2).
+//!
+//! Same streaming protocol as Fig. 6 but: Huber loss (η = 0.2, dual box
+//! `‖ν‖∞ ≤ 1` enforced by projected diffusion), γ = 1, evaluation on the
+//! *incoming* batch, and novel topics appear only at time-steps
+//! 1, 2, 5, 6, 8 (the paper's ordered-data schedule) — so ROC curves are
+//! produced only at those steps. Comparator: centralized ADMM ℓ1
+//! dictionary learning [11] on ℓ1-normalized data.
+//!
+//! Paper shape (Table IV): diffusion ≈0.79–0.96 ≫ ADMM ≈0.61–0.73;
+//! sparse topology ≈ fully connected (±0.01).
+//!
+//! Outputs: results/table4_auc.csv, results/fig7_roc_s<step>_<algo>.csv
+
+use ddl::cli::Args;
+use ddl::config::experiment::NoveltyConfig;
+use ddl::coordinator::csv::write_labeled_csv;
+use ddl::coordinator::{run_novelty, NoveltyAlgo};
+use ddl::metrics::roc::write_roc_csv;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let mut cfg = NoveltyConfig::huber();
+    if args.flag("quick") {
+        cfg.vocab = 300;
+        cfg.batch_docs = 120;
+        cfg.dist_iters = 150;
+        cfg.fc_iters = 60;
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed).unwrap();
+    cfg.time_steps = args.usize_or("steps", cfg.time_steps).unwrap();
+
+    println!(
+        "Fig. 7 / Table IV: novelty detection, Huber residual (η=0.2, γ={}, vocab {})",
+        cfg.gamma, cfg.vocab
+    );
+    println!("(novel topics only at steps 1, 2, 5, 6, 8 — others produce no ROC)");
+    let algos = [
+        NoveltyAlgo::CentralizedAdmm,
+        NoveltyAlgo::DiffusionFullyConnected,
+        NoveltyAlgo::Diffusion,
+    ];
+    let report = run_novelty(&cfg, &algos, |s| println!("  {s}")).unwrap();
+
+    println!("\n== Table IV (AUC; paper: ADMM ~0.61-0.73, diffusion ~0.79-0.96) ==");
+    println!("{:<6} {:<10} {:<12} {:<10}", "step", "admm[11]", "diff (FC)", "diffusion");
+    let mut csv_rows = Vec::new();
+    for s in 1..=cfg.time_steps {
+        let get = |algo: &str| {
+            report
+                .steps
+                .iter()
+                .find(|r| r.step == s && r.algo == algo)
+                .map(|r| r.auc)
+        };
+        if let (Some(a), Some(fc), Some(d)) = (get("admm"), get("diffusion_fc"), get("diffusion")) {
+            println!("{s:<6} {a:<10.3} {fc:<12.3} {d:<10.3}");
+            csv_rows.push((format!("{s}"), vec![a, fc, d]));
+        }
+    }
+    write_labeled_csv(
+        Path::new("results/table4_auc.csv"),
+        &["step", "admm", "diffusion_fc", "diffusion"],
+        &csv_rows,
+    )
+    .unwrap();
+
+    for r in &report.steps {
+        let path = format!("results/fig7_roc_s{}_{}.csv", r.step, r.algo);
+        write_roc_csv(Path::new(&path), &r.roc).unwrap();
+    }
+    println!("\nwrote results/table4_auc.csv and results/fig7_roc_s*_*.csv");
+
+    // Shape checks.
+    let mut d_beats_admm = 0;
+    let mut total = 0;
+    for row in &csv_rows {
+        total += 1;
+        if row.1[2] > row.1[0] {
+            d_beats_admm += 1;
+        }
+    }
+    println!("diffusion > ADMM on {d_beats_admm}/{total} evaluated steps (paper: all)");
+}

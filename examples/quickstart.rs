@@ -1,0 +1,22 @@
+//! Quickstart: verify the whole three-layer stack composes.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT HLO artifact (L1 Pallas kernel fused into the L2 jax
+//! graph), executes it through PJRT from rust (L3), cross-checks against
+//! the native engine, and applies one dictionary update.
+
+use std::path::Path;
+
+fn main() {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    match ddl::coordinator::quickstart::run_quickstart(Path::new(&dir), &mut |s| println!("{s}")) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("quickstart failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts for the rust
+PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/): ``python -m compile.aot --out-dir ../artifacts``
+
+Emits one ``<name>.hlo.txt`` per artifact plus ``manifest.json`` recording
+shapes, variants, and iteration counts — parsed by rust/src/runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple{1,2,3})."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# Artifact table: name -> (builder, shapes, metadata).
+# One atom per agent (K = N) on the HLO path, as in the paper's experiments.
+def artifact_specs(scale: str):
+    """Artifact definitions. `scale` picks the shape preset."""
+    presets = {
+        "default": dict(
+            denoise=dict(m=100, n=64, train_iters=200, denoise_iters=300),
+            novelty=dict(m=800, n=40, iters=150),
+            quickstart=dict(m=16, n=8, iters=60),
+        ),
+        "tiny": dict(  # CI-fast preset used by pytest
+            denoise=dict(m=16, n=6, train_iters=20, denoise_iters=25),
+            novelty=dict(m=24, n=5, iters=15),
+            quickstart=dict(m=16, n=8, iters=60),
+        ),
+    }
+    p = presets[scale]
+    dn, nv, qs = p["denoise"], p["novelty"], p["quickstart"]
+
+    specs = {}
+
+    def infer_spec(name, variant, m, n, iters, with_cost):
+        build = (
+            model.make_infer_with_cost(variant, iters)
+            if with_cost
+            else model.make_inference(variant, iters)
+        )
+        specs[name] = dict(
+            build=build,
+            args=[f32(n, m), f32(m), f32(n, n), f32(n), f32(8)],
+            meta=dict(
+                kind="infer",
+                variant=variant,
+                m=m,
+                n=n,
+                iters=iters,
+                with_cost=with_cost,
+                inputs=["wt", "x", "at", "theta", "params"],
+                outputs=["v", "y"] + (["cost"] if with_cost else []),
+            ),
+        )
+
+    infer_spec("denoise_infer", "sq", dn["m"], dn["n"], dn["train_iters"], False)
+    infer_spec("denoise_infer_long", "sq", dn["m"], dn["n"], dn["denoise_iters"], False)
+    infer_spec("novelty_sq_infer", "nmf", nv["m"], nv["n"], nv["iters"], True)
+    infer_spec("novelty_huber_infer", "huber", nv["m"], nv["n"], nv["iters"], True)
+    infer_spec("quickstart_infer", "sq", qs["m"], qs["n"], qs["iters"], False)
+
+    for name, nonneg, (m, n) in [
+        ("denoise_update", False, (dn["m"], dn["n"])),
+        ("novelty_update", True, (nv["m"], nv["n"])),
+    ]:
+        specs[name] = dict(
+            build=model.make_dict_update(nonneg=nonneg),
+            args=[f32(n, m), f32(m), f32(n), f32()],
+            meta=dict(
+                kind="update",
+                nonneg=nonneg,
+                m=m,
+                n=n,
+                inputs=["wt", "nu", "y", "mu_w"],
+                outputs=["wt_new"],
+            ),
+        )
+    return specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", default="default", choices=["default", "tiny"])
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = artifact_specs(args.scale)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"version": 1, "scale": args.scale, "artifacts": {}}
+    for name, spec in specs.items():
+        if only and name not in only:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        lowered = jax.jit(spec["build"]).lower(*spec["args"])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = dict(file=fname, **spec["meta"])
+        print(f"  wrote {path} ({len(text)//1024} KiB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

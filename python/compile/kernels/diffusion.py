@@ -1,0 +1,169 @@
+"""L1 Pallas kernels: the fused per-iteration hot-spot of the diffusion
+inference (paper Eqs. 31a/31b, Algs. 2-4).
+
+State layout mirrors the rust engine: the dual iterates are stacked as
+``V (N, M)`` (row k = agent k's nu) and the dictionary is stored
+*transposed* as ``Wt (N, M)`` (row k = agent k's atom w_k; the paper's
+experiments use one atom per agent, K = N). This makes the adapt step a
+row-parallel fused elementwise+reduction (VPU-shaped) and the combine step
+``V <- A^T Psi`` a plain matmul (MXU-shaped).
+
+Kernels must run with ``interpret=True`` on CPU PJRT: real TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot execute. BlockSpecs are
+still written for TPU tiling so the VMEM/MXU reasoning in DESIGN.md
+carries over.
+
+Scalar hyperparameters are packed into a ``params (8,)`` operand so one
+AOT artifact serves every step-size/regularizer setting at a given shape:
+
+    params = [mu, gamma, delta, cf_over_n, inv_informed, clip_bound,
+              unused, unused]
+
+``cf_over_n`` is c_f/N with grad f*(nu) = c_f nu (1 for squared-l2, eta
+for Huber). ``clip_bound <= 0`` disables the V_f box projection.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of scalar slots in the params operand.
+N_PARAMS = 8
+
+
+def _threshold(s, gamma, *, onesided: bool):
+    """T_gamma (two-sided) or T^+_gamma (one-sided) soft threshold."""
+    if onesided:
+        return jnp.maximum(s - gamma, 0.0)
+    return jnp.sign(s) * jnp.maximum(jnp.abs(s) - gamma, 0.0)
+
+
+def _adapt_kernel(v_ref, wt_ref, x_ref, theta_ref, params_ref, psi_ref, *, onesided: bool):
+    """psi_k = nu_k - mu*(cf/N nu_k - theta_k x) - (mu/delta) thr(w_k^T nu_k) w_k.
+
+    Operates on a (bn, M) row panel of V / Wt held in VMEM.
+    """
+    mu = params_ref[0]
+    gamma = params_ref[1]
+    delta = params_ref[2]
+    cf_over_n = params_ref[3]
+
+    v = v_ref[...]          # (bn, M)
+    wt = wt_ref[...]        # (bn, M)
+    x = x_ref[...]          # (M,)
+    theta = theta_ref[...]  # (bn,)
+
+    s = jnp.sum(wt * v, axis=1)                       # w_k^T nu_k, (bn,)
+    thr = _threshold(s, gamma, onesided=onesided)     # (bn,)
+    psi = (
+        v * (1.0 - mu * cf_over_n)
+        + mu * theta[:, None] * x[None, :]
+        - (mu / delta) * thr[:, None] * wt
+    )
+    psi_ref[...] = psi
+
+
+def adapt(v, wt, x, theta, params, *, onesided: bool, block_n: int = 64, interpret: bool = True):
+    """Run the adapt step over all agents. Shapes: v,wt (N,M); x (M,);
+    theta (N,); params (N_PARAMS,)."""
+    n, m = v.shape
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    kernel = functools.partial(_adapt_kernel, onesided=onesided)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((N_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), v.dtype),
+        interpret=interpret,
+    )(v, wt, x, theta, params)
+
+
+def _combine_kernel(at_ref, psi_ref, params_ref, out_ref, *, clip: bool):
+    """out = A^T Psi over a (bi, M) output panel; full-K contraction.
+
+    The contraction dimension (neighbors) is loaded whole per program —
+    at experiment scales (N <= 256) the (bi, N) x (N, M) panels fit VMEM
+    comfortably; the matmul maps onto the MXU.
+    """
+    acc = jnp.dot(at_ref[...], psi_ref[...], preferred_element_type=jnp.float32)
+    if clip:
+        bound = params_ref[5]
+        acc = jnp.clip(acc, -bound, bound)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def combine(at, psi, params, *, clip: bool, block_n: int = 64, interpret: bool = True):
+    """Combine step ``V = A^T Psi`` (+ optional entrywise clip to
+    [-params[5], params[5]], Eq. 35b). at is A transposed, (N, N)."""
+    n, m = psi.shape
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    kernel = functools.partial(_combine_kernel, clip=clip)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+            pl.BlockSpec((N_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), psi.dtype),
+        interpret=interpret,
+    )(at, psi, params)
+
+
+def diffusion_step(v, wt, x, at, theta, params, *, onesided: bool, clip: bool,
+                   block_n: int = 64, interpret: bool = True):
+    """One full ATC diffusion iteration: adapt then combine."""
+    psi = adapt(v, wt, x, theta, params, onesided=onesided, block_n=block_n,
+                interpret=interpret)
+    return combine(at, psi, params, clip=clip, block_n=block_n, interpret=interpret)
+
+
+def _recover_kernel(v_ref, wt_ref, params_ref, y_ref, *, onesided: bool):
+    """y_k = thr_gamma(w_k^T nu_k)/delta (Eq. 37 / Table II)."""
+    gamma = params_ref[1]
+    delta = params_ref[2]
+    s = jnp.sum(wt_ref[...] * v_ref[...], axis=1)
+    y_ref[...] = _threshold(s, gamma, onesided=onesided) / delta
+
+
+def recover_y(v, wt, params, *, onesided: bool, block_n: int = 64, interpret: bool = True):
+    """Primal recovery for every agent's own atom from its own dual row."""
+    n, m = v.shape
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    kernel = functools.partial(_recover_kernel, onesided=onesided)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((N_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), v.dtype),
+        interpret=interpret,
+    )(v, wt, params)
+
+
+def pack_params(mu, gamma, delta, cf_over_n, inv_informed=0.0, clip_bound=0.0):
+    """Pack scalars into the params operand."""
+    return jnp.array(
+        [mu, gamma, delta, cf_over_n, inv_informed, clip_bound, 0.0, 0.0],
+        dtype=jnp.float32,
+    )

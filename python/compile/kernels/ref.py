@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Pallas kernels (the L1 correctness contract).
+
+Implements the same diffusion step with plain jax.numpy; pytest asserts
+allclose between this and the Pallas path across shapes/dtypes/params
+(hypothesis sweeps in python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def threshold(s, gamma, *, onesided: bool):
+    """T_gamma / T^+_gamma soft threshold (paper Eqs. 78/86)."""
+    if onesided:
+        return jnp.maximum(s - gamma, 0.0)
+    return jnp.sign(s) * jnp.maximum(jnp.abs(s) - gamma, 0.0)
+
+
+def adapt(v, wt, x, theta, params, *, onesided: bool):
+    """Reference adapt step (Eq. 31a specialization, Algs. 2-4)."""
+    mu, gamma, delta, cf_over_n = params[0], params[1], params[2], params[3]
+    s = jnp.sum(wt * v, axis=1)
+    thr = threshold(s, gamma, onesided=onesided)
+    return (
+        v * (1.0 - mu * cf_over_n)
+        + mu * theta[:, None] * x[None, :]
+        - (mu / delta) * thr[:, None] * wt
+    )
+
+
+def combine(at, psi, params, *, clip: bool):
+    """Reference combine step V = A^T Psi (Eq. 31b), optional box (35b)."""
+    out = at @ psi
+    if clip:
+        bound = params[5]
+        out = jnp.clip(out, -bound, bound)
+    return out
+
+
+def diffusion_step(v, wt, x, at, theta, params, *, onesided: bool, clip: bool):
+    """One full ATC iteration."""
+    return combine(at, adapt(v, wt, x, theta, params, onesided=onesided), params, clip=clip)
+
+
+def recover_y(v, wt, params, *, onesided: bool):
+    """y_k = thr_gamma(w_k^T nu_k)/delta (Eq. 37 / Table II)."""
+    gamma, delta = params[1], params[2]
+    s = jnp.sum(wt * v, axis=1)
+    return threshold(s, gamma, onesided=onesided) / delta
+
+
+def run_inference(wt, x, at, theta, params, iters, *, onesided: bool, clip: bool):
+    """Full reference inference loop (python loop; small iters only)."""
+    n, m = wt.shape
+    v = jnp.zeros((n, m), dtype=wt.dtype)
+    for _ in range(iters):
+        v = diffusion_step(v, wt, x, at, theta, params, onesided=onesided, clip=clip)
+    return v, recover_y(v, wt, params, onesided=onesided)

@@ -1,0 +1,126 @@
+"""L2: the jax compute graphs that get AOT-lowered to HLO artifacts.
+
+Each graph fuses the *entire* per-sample inference loop (``lax.fori_loop``
+over the L1 Pallas diffusion step) plus primal recovery into a single
+executable, so the rust request path never crosses the host boundary
+mid-inference. Variants:
+
+* ``infer_sq``     — squared-l2 residual, two-sided T_gamma (denoising);
+* ``infer_nmf``    — squared-l2, one-sided T^+ (novelty, Fig. 6);
+* ``infer_huber``  — Huber residual, one-sided T^+, l-inf box (Fig. 7);
+* ``dict_update``  — Eq. 51 atom update + constraint projection;
+* ``novelty_cost`` — the dual-cost novelty score (Eqs. 59/63-66).
+
+All graphs take the transposed dictionary ``Wt (N, M)`` (row k = atom of
+agent k; one atom per agent as in the paper's experiments), the combine
+matrix transposed ``At (N, N)``, the informed mask ``theta (N,)`` and a
+packed scalar ``params (8,)`` operand (see kernels/diffusion.py), so one
+artifact per (shape, variant, iteration count) serves all hyperparameter
+settings.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import diffusion as K
+from .kernels import ref as R
+
+
+def _variant_flags(variant: str):
+    if variant == "sq":
+        return dict(onesided=False, clip=False)
+    if variant == "nmf":
+        return dict(onesided=True, clip=False)
+    if variant == "huber":
+        return dict(onesided=True, clip=True)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def make_inference(variant: str, iters: int, *, use_pallas: bool = True, block_n: int = 64):
+    """Build the fused inference function ``(wt, x, at, theta, params) ->
+    (V, y)`` with a fixed iteration count (lowered into one fori_loop)."""
+    flags = _variant_flags(variant)
+
+    def infer(wt, x, at, theta, params):
+        n, m = wt.shape
+        v0 = jnp.zeros((n, m), dtype=wt.dtype)
+
+        if use_pallas:
+            step = functools.partial(
+                K.diffusion_step, block_n=block_n, interpret=True, **flags
+            )
+        else:
+            step = functools.partial(R.diffusion_step, **flags)
+
+        def body(_, v):
+            return step(v, wt, x, at, theta, params)
+
+        v = jax.lax.fori_loop(0, iters, body, v0)
+        if use_pallas:
+            y = K.recover_y(v, wt, params, block_n=block_n, interpret=True,
+                            onesided=flags["onesided"])
+        else:
+            y = R.recover_y(v, wt, params, onesided=flags["onesided"])
+        return v, y
+
+    return infer
+
+
+def dict_update(wt, nu, y, mu_w, *, nonneg: bool):
+    """Eq. 51: ``w_k <- Pi(w_k + mu_w y_k nu)`` for every agent, with the
+    unit-ball (or non-negative unit-ball) projection of Eqs. 45/47.
+
+    ``nu (M,)`` is each agent's converged dual estimate (the rust driver
+    passes per-agent rows when minibatching).
+    """
+    w_new = wt + mu_w * y[:, None] * nu[None, :]
+    if nonneg:
+        w_new = jnp.maximum(w_new, 0.0)
+    norms = jnp.sqrt(jnp.sum(w_new * w_new, axis=1, keepdims=True))
+    scale = jnp.where(norms > 1.0, 1.0 / jnp.maximum(norms, 1e-12), 1.0)
+    return w_new * scale
+
+
+def novelty_cost(wt, v, x, params, *, variant: str):
+    """Novelty score ``-g = sum_k J_k(nu; x)`` (higher = worse fit = more
+    novel). Per-agent h* terms use each agent's own dual row; the f* and
+    data terms use the network-average nu (all-informed configuration,
+    Eq. 59). The 1/N scaling is absorbed into the detection threshold.
+    """
+    flags = _variant_flags(variant)
+    gamma, delta = params[1], params[2]
+    cf = params[3] * wt.shape[0]  # cf_over_n * N = c_f (eta or 1)
+    nu_bar = jnp.mean(v, axis=0)
+    s = jnp.sum(wt * v, axis=1) / delta  # per-agent w_k^T nu_k / delta
+    t = R.threshold(s, gamma / delta, onesided=flags["onesided"])
+    # S_{gamma/delta}(s) per agent (Table II footnotes b/d), summed.
+    h_conj = jnp.sum(-0.5 * delta * t * t - gamma * jnp.abs(t) + delta * s * t)
+    f_conj = 0.5 * cf * jnp.sum(nu_bar * nu_bar)
+    # score = g(nu) = -(sum_k J_k); by strong duality the primal optimum.
+    return -(f_conj - jnp.dot(nu_bar, x) + h_conj)
+
+
+def make_infer_with_cost(variant: str, iters: int, *, use_pallas: bool = True,
+                         block_n: int = 64):
+    """Inference + novelty score in one artifact (the novelty serving
+    path): ``(wt, x, at, theta, params) -> (V, y, cost)``."""
+    infer = make_inference(variant, iters, use_pallas=use_pallas, block_n=block_n)
+
+    def run(wt, x, at, theta, params):
+        v, y = infer(wt, x, at, theta, params)
+        return v, y, novelty_cost(wt, v, x, params, variant=variant)
+
+    return run
+
+
+def make_dict_update(*, nonneg: bool):
+    """Wrap dict_update for AOT export: ``(wt, nu, y, mu_w) -> wt'``."""
+
+    def run(wt, nu, y, mu_w):
+        return dict_update(wt, nu, y, mu_w, nonneg=nonneg)
+
+    return run

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and hyperparameters; every property asserts
+allclose between the interpret-mode Pallas path and ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diffusion as K
+from compile.kernels import ref as R
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_problem(rng, n, m):
+    v = rng.standard_normal((n, m)).astype(np.float32)
+    wt = rng.standard_normal((n, m)).astype(np.float32)
+    wt /= np.maximum(np.linalg.norm(wt, axis=1, keepdims=True), 1e-6)
+    x = rng.standard_normal(m).astype(np.float32)
+    at = rng.random((n, n)).astype(np.float32)
+    at /= at.sum(axis=1, keepdims=True)  # row-stochastic is enough for math checks
+    theta = np.full(n, 1.0 / n, dtype=np.float32)
+    return v, wt, x, at, theta
+
+
+shape_st = st.tuples(st.integers(2, 40), st.integers(2, 50))
+param_st = st.tuples(
+    st.floats(0.01, 1.0),   # mu
+    st.floats(0.0, 2.0),    # gamma
+    st.floats(0.05, 1.0),   # delta
+    st.floats(0.1, 1.0),    # cf (as c_f, divided by n below)
+)
+
+
+@given(shape=shape_st, hp=param_st, onesided=st.booleans(), seed=st.integers(0, 2**31))
+def test_adapt_matches_ref(shape, hp, onesided, seed):
+    n, m = shape
+    mu, gamma, delta, cf = hp
+    rng = np.random.default_rng(seed)
+    v, wt, x, _, theta = rand_problem(rng, n, m)
+    params = K.pack_params(mu, gamma, delta, cf / n)
+    got = K.adapt(jnp.array(v), jnp.array(wt), jnp.array(x), jnp.array(theta),
+                  params, onesided=onesided, block_n=16)
+    want = R.adapt(jnp.array(v), jnp.array(wt), jnp.array(x), jnp.array(theta),
+                   params, onesided=onesided)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(shape=shape_st, clip=st.booleans(), seed=st.integers(0, 2**31))
+def test_combine_matches_ref(shape, clip, seed):
+    n, m = shape
+    rng = np.random.default_rng(seed)
+    v, _, _, at, _ = rand_problem(rng, n, m)
+    params = K.pack_params(0.1, 0.5, 0.2, 1.0 / n, clip_bound=0.7)
+    got = K.combine(jnp.array(at), jnp.array(v), params, clip=clip, block_n=16)
+    want = R.combine(jnp.array(at), jnp.array(v), params, clip=clip)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    if clip:
+        assert np.abs(np.asarray(got)).max() <= 0.7 + 1e-6
+
+
+@given(shape=shape_st, hp=param_st, onesided=st.booleans(), clip=st.booleans(),
+       seed=st.integers(0, 2**31))
+def test_full_step_matches_ref(shape, hp, onesided, clip, seed):
+    n, m = shape
+    mu, gamma, delta, cf = hp
+    rng = np.random.default_rng(seed)
+    v, wt, x, at, theta = rand_problem(rng, n, m)
+    params = K.pack_params(mu, gamma, delta, cf / n, clip_bound=1.0)
+    got = K.diffusion_step(jnp.array(v), jnp.array(wt), jnp.array(x), jnp.array(at),
+                           jnp.array(theta), params, onesided=onesided, clip=clip,
+                           block_n=16)
+    want = R.diffusion_step(jnp.array(v), jnp.array(wt), jnp.array(x), jnp.array(at),
+                            jnp.array(theta), params, onesided=onesided, clip=clip)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(shape=shape_st, hp=param_st, onesided=st.booleans(), seed=st.integers(0, 2**31))
+def test_recover_y_matches_ref(shape, hp, onesided, seed):
+    n, m = shape
+    mu, gamma, delta, cf = hp
+    rng = np.random.default_rng(seed)
+    v, wt, _, _, _ = rand_problem(rng, n, m)
+    params = K.pack_params(mu, gamma, delta, cf / n)
+    got = K.recover_y(jnp.array(v), jnp.array(wt), params, onesided=onesided, block_n=16)
+    want = R.recover_y(jnp.array(v), jnp.array(wt), params, onesided=onesided)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    if onesided:
+        assert np.asarray(got).min() >= 0.0
+
+
+def test_block_size_invariance():
+    """Tiling must not change results (BlockSpec correctness)."""
+    rng = np.random.default_rng(0)
+    v, wt, x, at, theta = rand_problem(rng, 37, 23)  # awkward sizes
+    params = K.pack_params(0.3, 0.4, 0.2, 1.0 / 37)
+    outs = [
+        np.asarray(K.diffusion_step(jnp.array(v), jnp.array(wt), jnp.array(x),
+                                    jnp.array(at), jnp.array(theta), params,
+                                    onesided=False, clip=False, block_n=b))
+        for b in (4, 16, 37, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+
+def test_threshold_zero_gamma_is_identity_two_sided():
+    s = jnp.array([-2.0, -0.5, 0.0, 0.7, 3.0])
+    np.testing.assert_allclose(R.threshold(s, 0.0, onesided=False), s)
+    np.testing.assert_allclose(
+        R.threshold(s, 0.0, onesided=True), jnp.maximum(s, 0.0)
+    )
+
+
+@pytest.mark.parametrize("onesided", [False, True])
+def test_inference_loop_reaches_consensus(onesided):
+    """With a doubly-stochastic A and small mu, agents agree at the end."""
+    rng = np.random.default_rng(1)
+    n, m = 8, 12
+    v, wt, x, _, theta = rand_problem(rng, n, m)
+    at = np.full((n, n), 1.0 / n, dtype=np.float32)  # fully connected
+    params = K.pack_params(0.2, 0.1, 0.5, 1.0 / n)
+    v, y = R.run_inference(jnp.array(wt), jnp.array(x), jnp.array(at),
+                           jnp.array(theta), params, 300,
+                           onesided=onesided, clip=False)
+    v = np.asarray(v)
+    spread = np.abs(v - v.mean(axis=0, keepdims=True)).max()
+    assert spread < 1e-4, spread

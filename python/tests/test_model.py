@@ -1,0 +1,109 @@
+"""L2 correctness: fused inference graphs, dictionary update, novelty cost."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import diffusion as K
+from compile.kernels import ref as R
+
+
+def problem(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    wt = rng.standard_normal((n, m)).astype(np.float32)
+    wt /= np.maximum(np.linalg.norm(wt, axis=1, keepdims=True), 1e-6)
+    x = rng.standard_normal(m).astype(np.float32)
+    # Metropolis-like symmetric doubly-stochastic matrix: lazy random walk.
+    a = np.full((n, n), 1.0 / (2 * n), dtype=np.float32)
+    np.fill_diagonal(a, 1.0 / (2 * n) + 0.5)
+    theta = np.full(n, 1.0 / n, dtype=np.float32)
+    return jnp.array(wt), jnp.array(x), jnp.array(a), jnp.array(theta)
+
+
+@pytest.mark.parametrize("variant", ["sq", "nmf", "huber"])
+def test_fused_inference_matches_ref_loop(variant):
+    n, m, iters = 7, 11, 40
+    wt, x, at, theta = problem(n, m, seed=3)
+    params = K.pack_params(0.2, 0.3, 0.4, 1.0 / n, clip_bound=1.0)
+    flags = model._variant_flags(variant)
+    infer = model.make_inference(variant, iters, use_pallas=True, block_n=4)
+    v_got, y_got = jax.jit(infer)(wt, x, at, theta, params)
+    v_want, y_want = R.run_inference(wt, x, at, theta, params, iters, **flags)
+    np.testing.assert_allclose(v_got, v_want, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(y_got, y_want, rtol=5e-5, atol=5e-5)
+
+
+def test_pallas_and_jnp_paths_agree():
+    n, m, iters = 6, 9, 25
+    wt, x, at, theta = problem(n, m, seed=4)
+    params = K.pack_params(0.3, 0.2, 0.5, 1.0 / n)
+    f_pallas = model.make_inference("sq", iters, use_pallas=True, block_n=8)
+    f_jnp = model.make_inference("sq", iters, use_pallas=False)
+    v1, y1 = jax.jit(f_pallas)(wt, x, at, theta, params)
+    v2, y2 = jax.jit(f_jnp)(wt, x, at, theta, params)
+    np.testing.assert_allclose(v1, v2, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(y1, y2, rtol=5e-5, atol=5e-5)
+
+
+def test_dict_update_projection():
+    n, m = 5, 8
+    rng = np.random.default_rng(5)
+    wt = jnp.array(rng.standard_normal((n, m)).astype(np.float32))
+    nu = jnp.array(rng.standard_normal(m).astype(np.float32)) * 10.0
+    y = jnp.array(rng.standard_normal(n).astype(np.float32))
+    out = model.dict_update(wt, nu, y, 1.0, nonneg=False)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert (norms <= 1.0 + 1e-5).all()
+    out_nn = model.dict_update(wt, nu, y, 1.0, nonneg=True)
+    assert np.asarray(out_nn).min() >= 0.0
+
+
+def test_dict_update_zero_step_inside_ball_is_identity():
+    n, m = 4, 6
+    rng = np.random.default_rng(6)
+    wt = rng.standard_normal((n, m)).astype(np.float32)
+    wt /= 2.0 * np.linalg.norm(wt, axis=1, keepdims=True)  # strictly inside
+    out = model.dict_update(jnp.array(wt), jnp.zeros(m), jnp.zeros(n), 0.0, nonneg=False)
+    np.testing.assert_allclose(out, wt, rtol=1e-6, atol=1e-7)
+
+
+def test_novelty_cost_orders_fit_quality():
+    """A document synthesized from the atoms must score lower than an
+    orthogonal one (the detector's core property)."""
+    n, m, iters = 8, 20, 400
+    rng = np.random.default_rng(7)
+    wt = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    wt /= np.linalg.norm(wt, axis=1, keepdims=True)
+    a = np.full((n, n), 1.0 / n, dtype=np.float32)
+    theta = np.full(n, 1.0 / n, dtype=np.float32)
+    params = K.pack_params(0.3, 0.05, 0.1, 1.0 / n)
+
+    modeled = wt.T @ np.abs(rng.random(n)).astype(np.float32)
+    modeled /= np.linalg.norm(modeled)
+    novel = np.abs(rng.standard_normal(m)).astype(np.float32)
+    novel /= np.linalg.norm(novel)
+
+    run = jax.jit(model.make_infer_with_cost("nmf", iters, use_pallas=False))
+    def score(x):
+        _, _, c = run(jnp.array(wt), jnp.array(x), jnp.array(a), jnp.array(theta), params)
+        return float(c)
+
+    assert score(novel) > score(modeled)
+
+
+def test_novelty_cost_matches_primal_at_optimum():
+    """Strong duality: the converged score equals the primal objective."""
+    n, m, iters = 6, 10, 3000
+    wt, x, at, theta = problem(n, m, seed=8)
+    at = jnp.full((n, n), 1.0 / n)  # fully connected for fast consensus
+    gamma, delta = 0.1, 0.5
+    params = K.pack_params(0.3, gamma, delta, 1.0 / n)
+    run = jax.jit(model.make_infer_with_cost("sq", iters, use_pallas=False))
+    v, y, cost = run(wt, x, at, theta, params)
+    resid = np.asarray(x) - np.asarray(wt).T @ np.asarray(y)
+    primal = (0.5 * (resid ** 2).sum()
+              + gamma * np.abs(np.asarray(y)).sum()
+              + 0.5 * delta * (np.asarray(y) ** 2).sum())
+    assert abs(float(cost) - primal) < 2e-2 * (1.0 + primal), (float(cost), primal)

@@ -1,0 +1,74 @@
+//! Baseline solver costs: the centralized comparators' per-sample work,
+//! for the efficiency discussion in EXPERIMENTS.md §Perf.
+
+use ddl::baselines::{AdmmDictLearner, AdmmOptions, MairalLearner, MairalOptions};
+use ddl::bench::Bencher;
+use ddl::math::Mat;
+use ddl::rng::Pcg64;
+
+fn rand_dict(m: usize, k: usize, rng: &mut Pcg64, nonneg: bool) -> Mat {
+    let mut w = Mat::from_fn(m, k, |_, _| if nonneg { rng.next_normal().abs() } else { rng.next_normal() });
+    ddl::model::dictionary::normalize_columns(&mut w);
+    w
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::new(4);
+
+    // Mairal at denoise scale (M=100, K=64) and novelty scale (M=800, K=40).
+    for &(m, k, label) in &[
+        (100usize, 64usize, "mairal step (100,64)"),
+        (800, 40, "mairal step (800,40)"),
+    ] {
+        let w = rand_dict(m, k, &mut rng, false);
+        let mut learner = MairalLearner::new(w, MairalOptions::denoising());
+        let x = rng.normal_vec(m);
+        b.bench(label, || {
+            learner.step(&x).unwrap();
+        });
+        b.bench(&format!("{label} [code only]"), || {
+            std::hint::black_box(learner.code(&x));
+        });
+    }
+
+    // ADMM at novelty scale.
+    {
+        let (m, k) = (800usize, 40usize);
+        let w = rand_dict(m, k, &mut rng, true);
+        let learner = AdmmDictLearner::new(w, AdmmOptions::default());
+        let mut x: Vec<f32> = rng.normal_vec(m).iter().map(|v| v.abs()).collect();
+        let n1 = ddl::math::vector::norm1(&x);
+        ddl::math::vector::scale(1.0 / n1, &mut x);
+        b.bench("admm code (800,40), 35 iters", || {
+            std::hint::black_box(learner.code(&x));
+        });
+        b.bench("admm objective (800,40)", || {
+            std::hint::black_box(learner.objective(&x));
+        });
+    }
+
+    // Exact dual solve (the CVX stand-in) at tuning scale.
+    {
+        let (m, k) = (400usize, 10usize);
+        let mut rng2 = Pcg64::new(5);
+        let dict = ddl::model::DistributedDictionary::random(
+            m,
+            k,
+            k,
+            ddl::model::AtomConstraint::NonNegUnitBall,
+            &mut rng2,
+        )
+        .unwrap();
+        let task = ddl::model::TaskSpec::HuberNmf { gamma: 1.0, delta: 0.1, eta: 0.2 };
+        let x: Vec<f32> = rng2.normal_vec(m).iter().map(|v| v.abs() * 0.05).collect();
+        b.bench("exact dual FISTA (400,10) huber", || {
+            std::hint::black_box(
+                ddl::infer::exact_dual(&dict, &task, &x, 1e-7, 5000).unwrap().iters,
+            );
+        });
+    }
+
+    b.write_csv(std::path::Path::new("results/bench_baselines.csv")).unwrap();
+    println!("\nwrote results/bench_baselines.csv");
+}

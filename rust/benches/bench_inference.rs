@@ -1,0 +1,90 @@
+//! Inference hot path: native diffusion vs the AOT/PJRT executable, per
+//! paper experiment shape, plus the BSP message-passing executor for the
+//! distribution-overhead view.
+//!
+//! Reported as time per full inference (all iterations) and per-iteration
+//! effective GFLOP/s ≈ (2·N²·M + ~8·N·M) / t_iter. Compare against the
+//! gemm roofline from `bench_linalg` (EXPERIMENTS.md §Perf).
+
+use ddl::bench::Bencher;
+use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::infer::{DiffusionEngine, DiffusionParams};
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::net::BspNetwork;
+use ddl::rng::Pcg64;
+use ddl::runtime::exec::ParamPack;
+use ddl::runtime::Runtime;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::new(2);
+
+    // --- native engine across experiment shapes ---
+    for &(n, m, iters, label) in &[
+        (64usize, 100usize, 200usize, "native denoise (64,100)x200"),
+        (196, 100, 300, "native paper (196,100)x300"),
+        (80, 800, 150, "native novelty (80,800)x150"),
+    ] {
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.3 };
+        let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+        let flops = iters as f64 * (2.0 * (n * n * m) as f64 + 8.0 * (n * m) as f64);
+        b.bench_work(label, flops, || {
+            eng.reset();
+            eng.run(&dict, &task, &x, DiffusionParams { mu: 0.1, iters }).unwrap();
+            std::hint::black_box(eng.nu(0));
+        });
+    }
+
+    // --- BSP message-passing executor (distribution overhead) ---
+    {
+        let (n, m, iters) = (64usize, 100usize, 200usize);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.3 };
+        let flops = iters as f64 * (2.0 * (n * n * m) as f64 + 8.0 * (n * m) as f64);
+        b.bench_work("bsp denoise (64,100)x200", flops, || {
+            let mut net = BspNetwork::new(g.clone(), a.clone(), m, None);
+            net.run(&dict, &task, &x, DiffusionParams { mu: 0.1, iters }).unwrap();
+            std::hint::black_box(net.nu(0));
+        });
+    }
+
+    // --- HLO/PJRT path at artifact shapes ---
+    match Runtime::new(Path::new("artifacts")) {
+        Err(e) => println!("(skipping HLO benches: {e})"),
+        Ok(rt) => {
+            for name in ["denoise_infer", "novelty_sq_infer", "quickstart_infer"] {
+                let Ok(infer) = rt.load_infer(name) else { continue };
+                let (n, m) = (infer.info.n, infer.info.m);
+                let iters = infer.info.iters.unwrap_or(1);
+                let dict =
+                    DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng)
+                        .unwrap();
+                let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+                let at = metropolis_weights(&g).transpose();
+                let wt = dict.mat().transpose();
+                let x = rng.normal_vec(m);
+                let theta = vec![1.0 / n as f32; n];
+                let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.3 };
+                let pack = ParamPack::from_task(&task, n, 0.1);
+                let flops = iters as f64 * (2.0 * (n * n * m) as f64 + 8.0 * (n * m) as f64);
+                b.bench_work(&format!("hlo {name} ({n},{m})x{iters}"), flops, || {
+                    let out = infer.run(&wt, &x, &at, &theta, pack).unwrap();
+                    std::hint::black_box(out.y.len());
+                });
+            }
+        }
+    }
+
+    b.write_csv(Path::new("results/bench_inference.csv")).unwrap();
+    println!("\nwrote results/bench_inference.csv");
+}

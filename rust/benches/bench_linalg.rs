@@ -1,0 +1,65 @@
+//! Linalg roofline: gemm/gemv/dot at the experiment shapes.
+//!
+//! The combine step `V ← AᵀΨ` is `2·N²·M` flops per diffusion iteration —
+//! the inference hot spot. This bench establishes the achievable GFLOP/s
+//! for the gemm microkernel so `bench_inference` can report efficiency
+//! against it (EXPERIMENTS.md §Perf).
+
+use ddl::bench::Bencher;
+use ddl::math::{blas, Mat};
+use ddl::rng::Pcg64;
+
+fn rand_mat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.next_normal())
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::new(1);
+
+    // Square gemm sweep (roofline trend).
+    for &n in &[32usize, 64, 128, 256] {
+        let a = rand_mat(n, n, &mut rng);
+        let x = rand_mat(n, n, &mut rng);
+        let mut c = Mat::zeros(n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        b.bench_work(&format!("gemm {n}x{n}x{n}"), flops, || {
+            blas::gemm(n, n, n, 1.0, a.as_slice(), x.as_slice(), 0.0, c.as_mut_slice());
+            std::hint::black_box(&c);
+        });
+    }
+
+    // Experiment shapes: combine at denoise (N=64, M=100), denoise
+    // paper-scale (N=196, M=100), novelty (N=80, M=800).
+    for &(n, m, label) in &[
+        (64usize, 100usize, "combine denoise (64,100)"),
+        (196, 100, "combine paper (196,100)"),
+        (80, 800, "combine novelty (80,800)"),
+    ] {
+        let at = rand_mat(n, n, &mut rng);
+        let psi = rand_mat(n, m, &mut rng);
+        let mut v = Mat::zeros(n, m);
+        let flops = 2.0 * (n * n * m) as f64;
+        b.bench_work(label, flops, || {
+            blas::gemm(n, m, n, 1.0, at.as_slice(), psi.as_slice(), 0.0, v.as_mut_slice());
+            std::hint::black_box(&v);
+        });
+    }
+
+    // gemv and dot at adapt-step shapes.
+    let a = rand_mat(100, 100, &mut rng);
+    let x: Vec<f32> = rng.normal_vec(100);
+    let mut y = vec![0.0f32; 100];
+    b.bench_work("gemv 100x100", 2.0 * 100.0 * 100.0, || {
+        blas::gemv(100, 100, a.as_slice(), &x, &mut y);
+        std::hint::black_box(&y);
+    });
+    let u: Vec<f32> = rng.normal_vec(800);
+    let w: Vec<f32> = rng.normal_vec(800);
+    b.bench_work("dot 800", 2.0 * 800.0, || {
+        std::hint::black_box(blas::dot(&u, &w));
+    });
+
+    b.write_csv(std::path::Path::new("results/bench_linalg.csv")).unwrap();
+    println!("\nwrote results/bench_linalg.csv");
+}

@@ -1,0 +1,94 @@
+//! End-to-end pipeline throughput + design-choice ablations.
+//!
+//! * training samples/s for the Fig. 5 denoise configuration (the
+//!   system's "serving" rate);
+//! * minibatch-size ablation (paper footnote 4 uses 4);
+//! * topology ablation: iterations-to-consensus vs spectral gap;
+//! * per-sample denoising latency.
+
+use ddl::bench::Bencher;
+use ddl::config::experiment::DenoiseConfig;
+use ddl::data::{synth_scene, PatchSampler};
+use ddl::graph::{laplacian::spectral_gap, metropolis_weights, Graph, Topology};
+use ddl::infer::{DiffusionEngine, DiffusionParams};
+use ddl::learn::{OnlineTrainer, TrainerOptions};
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::ops::prox::DictProx;
+use ddl::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::new(3);
+    let cfg = DenoiseConfig::default();
+    let m = cfg.patch * cfg.patch;
+    let n = cfg.agents;
+    let task = TaskSpec::SparseCoding { gamma: cfg.train_infer.gamma, delta: cfg.train_infer.delta };
+
+    let images = vec![synth_scene(96, &mut rng)];
+    let mut sampler = PatchSampler::new(images, cfg.patch, 11);
+    let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+    let a = metropolis_weights(&g);
+
+    // --- minibatch ablation: samples/s at batch 1, 4, 16 ---
+    for &batch in &[1usize, 4, 16] {
+        let mut dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let mut tr = OnlineTrainer::new(
+            &a,
+            m,
+            None,
+            TrainerOptions {
+                infer: DiffusionParams { mu: cfg.train_infer.mu, iters: cfg.train_infer.iters },
+                prox: DictProx::None,
+            },
+        )
+        .unwrap();
+        let samples: Vec<Vec<f32>> = (0..batch).map(|_| sampler.sample().0).collect();
+        let refs: Vec<&[f32]> = samples.iter().map(|v| v.as_slice()).collect();
+        b.bench_work(&format!("train step, minibatch {batch}"), batch as f64, || {
+            tr.step(&mut dict, &task, &refs, cfg.mu_w).unwrap();
+        });
+    }
+
+    // --- denoise latency per patch (inference + recovery) ---
+    {
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+        let (patch, _) = sampler.sample();
+        b.bench(&format!("denoise patch ({n},{m})x{}", cfg.denoise_infer.iters), || {
+            eng.reset();
+            eng.run(&dict, &task, &patch, DiffusionParams {
+                mu: cfg.denoise_infer.mu,
+                iters: cfg.denoise_infer.iters,
+            })
+            .unwrap();
+            std::hint::black_box(eng.recover_y(&dict, &task));
+        });
+    }
+
+    // --- topology ablation: fixed iteration budget, report disagreement ---
+    println!("\ntopology ablation (iterations to reach the same budget):");
+    for (label, topo) in [
+        ("ring", Topology::Ring { k: 1 }),
+        ("er_p02", Topology::ErdosRenyi { p: 0.2 }),
+        ("er_p05", Topology::ErdosRenyi { p: 0.5 }),
+        ("complete", Topology::FullyConnected),
+    ] {
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let x = rng.normal_vec(m);
+        let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.1, iters: 300 }).unwrap();
+        println!(
+            "  {label:<9} gap {:.3} → disagreement {:.3e} after 300 iters",
+            spectral_gap(&a),
+            eng.disagreement()
+        );
+    }
+
+    b.write_csv(std::path::Path::new("results/bench_pipeline.csv")).unwrap();
+    println!("\nwrote results/bench_pipeline.csv");
+}

@@ -1,0 +1,287 @@
+//! Online ℓ1-dictionary learning via ADMM (Kasiviswanathan et al., NIPS
+//! 2012) — reference [11], the comparator in Fig. 7 / Table IV.
+//!
+//! Model: `min_{W,Y} ‖X − WY‖₁ + γ‖Y‖₁` with non-negative atoms in the
+//! ℓ1 ball (`‖w‖₁ ≤ 1, w ⪰ 0`) and ℓ1-normalized data.
+//!
+//! Sparse coding splits `r = x − Wy` and alternates:
+//! `y ← argmin γ‖y‖₁ + (ρ/2)‖x − Wy − r + u‖²` (ISTA inner loop),
+//! `r ← prox_{‖·‖₁/ρ}(x − Wy + u)` (soft threshold),
+//! `u ← u + x − Wy − r` (dual ascent).
+//! The dictionary update is projected subgradient descent on
+//! `‖x − Wy‖₁` with ℓ1-ball + non-negativity projection.
+
+use crate::math::Mat;
+use crate::ops::{project_l1_ball, soft_threshold, soft_threshold_plus};
+
+/// ADMM options (defaults follow the protocol in §IV-C2).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmmOptions {
+    /// ℓ1 weight on the coefficients.
+    pub gamma: f32,
+    /// Augmented-Lagrangian parameter ρ.
+    pub rho: f32,
+    /// ADMM iterations per sample (paper caps sparse coding at 35).
+    pub admm_iters: usize,
+    /// ISTA iterations inside the y-update.
+    pub ista_iters: usize,
+    /// Dictionary subgradient steps per batch (paper caps at 10).
+    pub dict_iters: usize,
+    /// Dictionary step size.
+    pub dict_step: f32,
+    /// Non-negative coefficients.
+    pub nonneg: bool,
+}
+
+impl Default for AdmmOptions {
+    fn default() -> Self {
+        AdmmOptions {
+            gamma: 1.0,
+            rho: 1.0,
+            admm_iters: 35,
+            ista_iters: 12,
+            dict_iters: 10,
+            dict_step: 0.05,
+            nonneg: true,
+        }
+    }
+}
+
+/// Online ℓ1 dictionary learner.
+pub struct AdmmDictLearner {
+    pub w: Mat,
+    opts: AdmmOptions,
+    /// Lipschitz estimate for the ISTA inner step (‖W‖² · ρ).
+    lip: f32,
+}
+
+impl AdmmDictLearner {
+    pub fn new(w0: Mat, opts: AdmmOptions) -> Self {
+        let mut s = AdmmDictLearner { w: w0, opts, lip: 1.0 };
+        s.refresh_lipschitz();
+        s
+    }
+
+    /// Recompute the ISTA Lipschitz estimate after external edits to `w`.
+    pub fn refresh_lipschitz_pub(&mut self) {
+        self.refresh_lipschitz();
+    }
+
+    fn refresh_lipschitz(&mut self) {
+        let gram = self.w.transpose().matmul(&self.w).unwrap();
+        let (sig, _) = crate::math::solve::power_iteration(&gram, 60, 0xADA);
+        self.lip = (self.opts.rho * sig.max(1e-6)).max(1e-6);
+    }
+
+    /// ADMM sparse coding; returns `(y, r)` with residual split `r`.
+    pub fn code(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let k = self.w.cols();
+        let m = self.w.rows();
+        let mut y = vec![0.0f32; k];
+        let mut r = vec![0.0f32; m];
+        let mut u = vec![0.0f32; m];
+        let rho = self.opts.rho;
+        let step = 1.0 / self.lip;
+        for _ in 0..self.opts.admm_iters {
+            // y-step: ISTA on γ‖y‖₁ + (ρ/2)‖x − Wy − r + u‖².
+            for _ in 0..self.opts.ista_iters {
+                let wy = self.w.matvec(&y).unwrap();
+                // grad = −ρ Wᵀ(x − Wy − r + u)
+                let mut resid = vec![0.0f32; m];
+                for i in 0..m {
+                    resid[i] = x[i] - wy[i] - r[i] + u[i];
+                }
+                let grad = self.w.matvec_t(&resid).unwrap();
+                for j in 0..k {
+                    let cand = y[j] + step * rho * grad[j];
+                    y[j] = if self.opts.nonneg {
+                        soft_threshold_plus(cand, step * self.opts.gamma)
+                    } else {
+                        soft_threshold(cand, step * self.opts.gamma)
+                    };
+                }
+            }
+            // r-step: prox of ‖·‖₁/ρ at (x − Wy + u).
+            let wy = self.w.matvec(&y).unwrap();
+            for i in 0..m {
+                r[i] = soft_threshold(x[i] - wy[i] + u[i], 1.0 / rho);
+            }
+            // u-step.
+            for i in 0..m {
+                u[i] += x[i] - wy[i] - r[i];
+            }
+        }
+        (y, r)
+    }
+
+    /// Representation objective `‖x − Wy‖₁ + γ‖y‖₁` at the coded solution
+    /// (the ADMM comparator's novelty score).
+    pub fn objective(&self, x: &[f32]) -> f32 {
+        let (y, _) = self.code(x);
+        let wy = self.w.matvec(&y).unwrap();
+        let resid = crate::math::vector::sub(x, &wy);
+        crate::math::vector::norm1(&resid) + self.opts.gamma * crate::math::vector::norm1(&y)
+    }
+
+    /// Batch dictionary update: projected subgradient on Σ‖x − Wy‖₁.
+    pub fn update_dictionary(&mut self, batch: &[(&[f32], Vec<f32>)]) {
+        if batch.is_empty() {
+            return;
+        }
+        let m = self.w.rows();
+        let k = self.w.cols();
+        for _ in 0..self.opts.dict_iters {
+            let mut grad = Mat::zeros(m, k);
+            for (x, y) in batch {
+                let wy = self.w.matvec(y).unwrap();
+                // subgrad of ‖x − Wy‖₁ wrt W = −sign(x − Wy) yᵀ
+                let sign: Vec<f32> = x
+                    .iter()
+                    .zip(&wy)
+                    .map(|(&xv, &wv)| (xv - wv).signum())
+                    .collect();
+                crate::math::blas::ger(m, k, -1.0, &sign, y, grad.as_mut_slice());
+            }
+            let step = self.opts.dict_step / batch.len() as f32;
+            for (wv, &gv) in self.w.as_mut_slice().iter_mut().zip(grad.as_slice()) {
+                *wv -= step * gv;
+            }
+            // Project columns onto {‖w‖₁ ≤ 1, w ⪰ 0}.
+            for q in 0..k {
+                let mut col = self.w.col(q);
+                for v in &mut col {
+                    *v = v.max(0.0);
+                }
+                project_l1_ball(&mut col, 1.0);
+                self.w.set_col(q, &col);
+            }
+        }
+        self.refresh_lipschitz();
+    }
+
+    /// Alternate coding and dictionary updates over a batch (the paper
+    /// initializes with 35 alternations).
+    pub fn fit_batch(&mut self, xs: &[&[f32]], alternations: usize) {
+        for _ in 0..alternations {
+            let coded: Vec<(&[f32], Vec<f32>)> =
+                xs.iter().map(|&x| (x, self.code(x).0)).collect();
+            self.update_dictionary(&coded);
+        }
+    }
+
+    /// Grow the dictionary with `extra` random non-negative ℓ1-ball atoms.
+    pub fn expand(&mut self, extra: usize, rng: &mut crate::rng::Pcg64) {
+        let m = self.w.rows();
+        let old_k = self.w.cols();
+        let new_k = old_k + extra;
+        let mut w = Mat::zeros(m, new_k);
+        for r in 0..m {
+            w.row_mut(r)[..old_k].copy_from_slice(self.w.row(r));
+        }
+        for q in old_k..new_k {
+            let mut col: Vec<f32> = (0..m).map(|_| rng.next_normal().abs()).collect();
+            let n1 = crate::math::vector::norm1(&col);
+            if n1 > 0.0 {
+                crate::math::vector::scale(1.0 / n1, &mut col);
+            }
+            w.set_col(q, &col);
+        }
+        self.w = w;
+        self.refresh_lipschitz();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn l1_dict(m: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut w = Mat::from_fn(m, k, |_, _| rng.next_normal().abs());
+        for q in 0..k {
+            let mut col = w.col(q);
+            let n = crate::math::vector::norm1(&col);
+            crate::math::vector::scale(1.0 / n, &mut col);
+            w.set_col(q, &col);
+        }
+        w
+    }
+
+    #[test]
+    fn coding_reduces_l1_objective_vs_zero() {
+        let (m, k) = (20, 6);
+        let mut rng = Pcg64::new(1);
+        let w = l1_dict(m, k, 2);
+        // x built from the dictionary so a good code exists.
+        let coeff: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let x = w.matvec(&coeff).unwrap();
+        let learner = AdmmDictLearner::new(w, AdmmOptions { gamma: 0.01, ..Default::default() });
+        let (y, _) = learner.code(&x);
+        let wy = learner.w.matvec(&y).unwrap();
+        let fit = crate::math::vector::norm1(&crate::math::vector::sub(&x, &wy));
+        let zero_fit = crate::math::vector::norm1(&x);
+        assert!(fit < 0.3 * zero_fit, "fit {fit} vs zero {zero_fit}");
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn dictionary_stays_feasible_after_update() {
+        let (m, k) = (15, 4);
+        let mut rng = Pcg64::new(3);
+        let mut learner = AdmmDictLearner::new(l1_dict(m, k, 4), AdmmOptions::default());
+        let xs: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                let mut x: Vec<f32> = rng.normal_vec(m).iter().map(|v| v.abs()).collect();
+                let n = crate::math::vector::norm1(&x);
+                crate::math::vector::scale(1.0 / n, &mut x);
+                x
+            })
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        learner.fit_batch(&refs, 3);
+        for q in 0..k {
+            let col = learner.w.col(q);
+            assert!(crate::math::vector::norm1(&col) <= 1.0 + 1e-4);
+            assert!(col.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn training_improves_fit_on_planted_data() {
+        let (m, k) = (18, 5);
+        let mut rng = Pcg64::new(5);
+        let planted = l1_dict(m, k, 6);
+        let sample = |rng: &mut Pcg64| {
+            let q = rng.next_below(k as u64) as usize;
+            let mut x = planted.col(q);
+            for v in &mut x {
+                *v *= 0.9 + 0.2 * rng.next_f32();
+            }
+            x
+        };
+        let mut learner = AdmmDictLearner::new(
+            l1_dict(m, k, 7),
+            AdmmOptions { gamma: 0.05, dict_step: 0.1, ..Default::default() },
+        );
+        let probe: Vec<Vec<f32>> = (0..10).map(|_| sample(&mut rng)).collect();
+        let before: f32 = probe.iter().map(|x| learner.objective(x)).sum();
+        let xs: Vec<Vec<f32>> = (0..40).map(|_| sample(&mut rng)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        learner.fit_batch(&refs, 8);
+        let after: f32 = probe.iter().map(|x| learner.objective(x)).sum();
+        assert!(after < before, "objective did not improve: {before} → {after}");
+    }
+
+    #[test]
+    fn expand_adds_feasible_atoms() {
+        let mut rng = Pcg64::new(8);
+        let mut learner = AdmmDictLearner::new(l1_dict(10, 3, 9), AdmmOptions::default());
+        learner.expand(2, &mut rng);
+        assert_eq!(learner.w.cols(), 5);
+        for q in 3..5 {
+            let col = learner.w.col(q);
+            assert!((crate::math::vector::norm1(&col) - 1.0).abs() < 1e-4);
+        }
+    }
+}

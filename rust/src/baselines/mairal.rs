@@ -1,0 +1,334 @@
+//! Online dictionary learning (Mairal et al., JMLR 2010) — reference [6].
+//!
+//! The centralized comparator for Figs. 5–6 / Table III. Alternates:
+//!
+//! 1. **Sparse coding** of each sample by coordinate descent on the
+//!    elastic net `min_y ½‖x − Wy‖² + γ‖y‖₁ + (δ/2)‖y‖²` (with a
+//!    non-negative variant for NMF/topic tasks);
+//! 2. **Dictionary update** by block-coordinate descent on the surrogate
+//!    `½ tr(WᵀWA) − tr(WᵀB)` with the accumulators `A ← A + yyᵀ`,
+//!    `B ← B + xyᵀ`, projecting atoms onto the constraint set.
+
+use crate::error::Result;
+use crate::math::{blas, Mat};
+use crate::model::{AtomConstraint, TaskSpec};
+use crate::ops::{soft_threshold, soft_threshold_plus};
+
+/// Coordinate-descent elastic net:
+/// `min_y ½‖x − Wy‖² + γ‖y‖₁ + (δ/2)‖y‖²` (two-sided), or the
+/// non-negative variant when `nonneg` is set.
+///
+/// `gram = WᵀW` and `corr = Wᵀx` must be precomputed; `y` is updated in
+/// place (warm starts welcome). Returns the number of sweeps used.
+pub fn elastic_net_cd(
+    gram: &Mat,
+    corr: &[f32],
+    gamma: f32,
+    delta: f32,
+    nonneg: bool,
+    y: &mut [f32],
+    max_sweeps: usize,
+    tol: f32,
+) -> usize {
+    let k = corr.len();
+    debug_assert_eq!(gram.rows(), k);
+    debug_assert_eq!(y.len(), k);
+    // Residual correlation r = corr − Gram·y maintained incrementally.
+    let mut r = corr.to_vec();
+    for j in 0..k {
+        if y[j] != 0.0 {
+            let gj = gram.row(j);
+            let yj = y[j];
+            for i in 0..k {
+                r[i] -= gj[i] * yj;
+            }
+        }
+    }
+    for sweep in 0..max_sweeps {
+        let mut max_delta = 0.0f32;
+        for j in 0..k {
+            let gjj = gram.get(j, j).max(1e-12);
+            // Partial residual excludes y_j's own contribution.
+            let rho = r[j] + gjj * y[j];
+            let new = if nonneg {
+                soft_threshold_plus(rho, gamma) / (gjj + delta)
+            } else {
+                soft_threshold(rho, gamma) / (gjj + delta)
+            };
+            let diff = new - y[j];
+            if diff != 0.0 {
+                let gj = gram.row(j);
+                for i in 0..k {
+                    r[i] -= gj[i] * diff;
+                }
+                y[j] = new;
+                max_delta = max_delta.max(diff.abs());
+            }
+        }
+        if max_delta < tol {
+            return sweep + 1;
+        }
+    }
+    max_sweeps
+}
+
+/// Options for the online learner.
+#[derive(Clone, Copy, Debug)]
+pub struct MairalOptions {
+    pub gamma: f32,
+    pub delta: f32,
+    /// Non-negative coding + atoms (NMF / topic modeling).
+    pub nonneg: bool,
+    /// Coordinate-descent sweeps per sample.
+    pub cd_sweeps: usize,
+    /// Dictionary block-coordinate passes per sample.
+    pub dict_passes: usize,
+}
+
+impl MairalOptions {
+    /// Paper §IV-B settings for the denoising comparison.
+    pub fn denoising() -> Self {
+        MairalOptions { gamma: 45.0, delta: 0.1, nonneg: false, cd_sweeps: 60, dict_passes: 1 }
+    }
+    /// Paper §IV-C1 settings for the novelty comparison.
+    pub fn novelty() -> Self {
+        MairalOptions { gamma: 0.05, delta: 0.1, nonneg: true, cd_sweeps: 60, dict_passes: 1 }
+    }
+}
+
+/// Online dictionary learner with A/B accumulators.
+pub struct MairalLearner {
+    pub w: Mat,
+    a: Mat,
+    b: Mat,
+    opts: MairalOptions,
+    samples_seen: usize,
+}
+
+impl MairalLearner {
+    pub fn new(w0: Mat, opts: MairalOptions) -> Self {
+        let k = w0.cols();
+        let m = w0.rows();
+        MairalLearner { w: w0, a: Mat::zeros(k, k), b: Mat::zeros(m, k), opts, samples_seen: 0 }
+    }
+
+    /// Sparse-code `x` against the current dictionary.
+    pub fn code(&self, x: &[f32]) -> Vec<f32> {
+        let gram = self.w.transpose().matmul(&self.w).unwrap();
+        let corr = self.w.matvec_t(x).unwrap();
+        let mut y = vec![0.0f32; self.w.cols()];
+        elastic_net_cd(
+            &gram,
+            &corr,
+            self.opts.gamma,
+            self.opts.delta,
+            self.opts.nonneg,
+            &mut y,
+            self.opts.cd_sweeps,
+            1e-6,
+        );
+        y
+    }
+
+    /// Representation loss `½‖x − Wy‖² + γ‖y‖₁ + (δ/2)‖y‖²` at the coded
+    /// solution (the novelty score of the centralized comparator).
+    pub fn objective(&self, x: &[f32]) -> f32 {
+        let y = self.code(x);
+        let wy = self.w.matvec(&y).unwrap();
+        let r = crate::math::vector::sub(x, &wy);
+        0.5 * crate::math::vector::norm2_sq(&r)
+            + self.opts.gamma * crate::math::vector::norm1(&y)
+            + 0.5 * self.opts.delta * crate::math::vector::norm2_sq(&y)
+    }
+
+    /// Process one sample: code, accumulate, update the dictionary.
+    pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let y = self.code(x);
+        let k = self.w.cols();
+        let m = self.w.rows();
+        // A += y yᵀ (+ δI contribution keeps diagonals positive);
+        // B += x yᵀ.
+        blas::ger(k, k, 1.0, &y, &y, self.a.as_mut_slice());
+        blas::ger(m, k, 1.0, x, &y, self.b.as_mut_slice());
+        self.samples_seen += 1;
+        self.update_dictionary();
+        Ok(y)
+    }
+
+    /// Block-coordinate dictionary update (Mairal Alg. 2):
+    /// `u_j = (b_j − W a_j)/A_jj + w_j`, then project onto the constraint.
+    fn update_dictionary(&mut self) {
+        let k = self.w.cols();
+        let m = self.w.rows();
+        for _ in 0..self.opts.dict_passes {
+            for j in 0..k {
+                let ajj = self.a.get(j, j);
+                if ajj < 1e-10 {
+                    continue; // atom never used yet
+                }
+                // w_j ← w_j + (b_j − W a_j)/A_jj, column ops on row-major W.
+                let aj = self.a.col(j);
+                let waj = self.w.matvec(&aj).unwrap();
+                for r in 0..m {
+                    let bval = self.b.get(r, j);
+                    let cur = self.w.get(r, j);
+                    let mut v = cur + (bval - waj[r]) / ajj;
+                    if self.opts.nonneg {
+                        v = v.max(0.0);
+                    }
+                    self.w.set(r, j, v);
+                }
+                // Project onto the unit ball.
+                let mut col = self.w.col(j);
+                crate::ops::project_unit_ball(&mut col);
+                self.w.set_col(j, &col);
+            }
+        }
+    }
+
+    /// Grow the dictionary by `extra` random atoms (novelty time-steps).
+    pub fn expand(&mut self, extra: usize, rng: &mut crate::rng::Pcg64) {
+        let m = self.w.rows();
+        let old_k = self.w.cols();
+        let new_k = old_k + extra;
+        let mut w = Mat::zeros(m, new_k);
+        for r in 0..m {
+            w.row_mut(r)[..old_k].copy_from_slice(self.w.row(r));
+        }
+        for q in old_k..new_k {
+            let mut col: Vec<f32> = (0..m)
+                .map(|_| {
+                    let v = rng.next_normal();
+                    if self.opts.nonneg {
+                        v.abs()
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            crate::math::vector::normalize(&mut col);
+            w.set_col(q, &col);
+        }
+        // Preserve accumulator history for old atoms; zero for new.
+        let mut a = Mat::zeros(new_k, new_k);
+        for r in 0..old_k {
+            a.row_mut(r)[..old_k].copy_from_slice(self.a.row(r));
+        }
+        let mut b = Mat::zeros(m, new_k);
+        for r in 0..m {
+            b.row_mut(r)[..old_k].copy_from_slice(self.b.row(r));
+        }
+        self.w = w;
+        self.a = a;
+        self.b = b;
+    }
+
+    /// Constraint-consistent task spec (used by cross-comparison tests).
+    pub fn task(&self) -> TaskSpec {
+        if self.opts.nonneg {
+            TaskSpec::Nmf { gamma: self.opts.gamma, delta: self.opts.delta }
+        } else {
+            TaskSpec::SparseCoding { gamma: self.opts.gamma, delta: self.opts.delta }
+        }
+    }
+
+    /// Atom constraint for this learner.
+    pub fn constraint(&self) -> AtomConstraint {
+        if self.opts.nonneg {
+            AtomConstraint::NonNegUnitBall
+        } else {
+            AtomConstraint::UnitBall
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_dict(m: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut w = Mat::from_fn(m, k, |_, _| rng.next_normal());
+        crate::model::dictionary::normalize_columns(&mut w);
+        w
+    }
+
+    /// Coordinate descent must solve the elastic net: validate against the
+    /// FISTA dual solver through the primal-dual relationship.
+    #[test]
+    fn cd_matches_exact_dual_solution() {
+        let (m, k) = (12, 6);
+        let mut rng = Pcg64::new(1);
+        let w = random_dict(m, k, 2);
+        let x = rng.normal_vec(m);
+        let (gamma, delta) = (0.2f32, 0.5f32);
+        let gram = w.transpose().matmul(&w).unwrap();
+        let corr = w.matvec_t(&x).unwrap();
+        let mut y = vec![0.0f32; k];
+        elastic_net_cd(&gram, &corr, gamma, delta, false, &mut y, 500, 1e-9);
+
+        let dict = crate::model::DistributedDictionary::from_mat(w, k).unwrap();
+        let task = TaskSpec::SparseCoding { gamma, delta };
+        let exact = crate::infer::exact_dual(&dict, &task, &x, 1e-8, 20000).unwrap();
+        crate::testutil::assert_close(&y, &exact.y, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn cd_nonneg_variant_nonnegative() {
+        let (m, k) = (10, 5);
+        let mut rng = Pcg64::new(3);
+        let w = random_dict(m, k, 4);
+        let x = rng.normal_vec(m);
+        let gram = w.transpose().matmul(&w).unwrap();
+        let corr = w.matvec_t(&x).unwrap();
+        let mut y = vec![0.0f32; k];
+        elastic_net_cd(&gram, &corr, 0.05, 0.1, true, &mut y, 200, 1e-8);
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn online_learning_reduces_objective() {
+        let (m, k) = (16, 8);
+        let mut rng = Pcg64::new(5);
+        let planted = random_dict(m, k, 6);
+        let sample = |rng: &mut Pcg64| {
+            let mut x = vec![0.0f32; m];
+            for _ in 0..2 {
+                let q = rng.next_below(k as u64) as usize;
+                crate::math::vector::axpy(0.5 + rng.next_f32(), &planted.col(q), &mut x);
+            }
+            x
+        };
+        let mut learner = MairalLearner::new(
+            random_dict(m, k, 7),
+            MairalOptions { gamma: 0.05, delta: 0.1, nonneg: false, cd_sweeps: 50, dict_passes: 1 },
+        );
+        let probe: Vec<Vec<f32>> = (0..20).map(|_| sample(&mut rng)).collect();
+        let before: f32 = probe.iter().map(|x| learner.objective(x)).sum();
+        for _ in 0..300 {
+            let x = sample(&mut rng);
+            learner.step(&x).unwrap();
+        }
+        let after: f32 = probe.iter().map(|x| learner.objective(x)).sum();
+        assert!(after < 0.6 * before, "objective did not improve: {before} → {after}");
+        // Atoms remain feasible.
+        for q in 0..k {
+            assert!(crate::math::vector::norm2(&learner.w.col(q)) <= 1.0 + 1e-4);
+        }
+    }
+
+    #[test]
+    fn expand_preserves_atoms_and_accumulators() {
+        let mut rng = Pcg64::new(8);
+        let mut learner = MairalLearner::new(random_dict(6, 3, 9), MairalOptions::novelty());
+        let x: Vec<f32> = rng.normal_vec(6).iter().map(|v| v.abs()).collect();
+        learner.step(&x).unwrap();
+        let w0 = learner.w.col(0);
+        learner.expand(2, &mut rng);
+        assert_eq!(learner.w.cols(), 5);
+        crate::testutil::assert_close(&learner.w.col(0), &w0, 1e-7, 0.0);
+        assert_eq!(learner.a.rows(), 5);
+        assert_eq!(learner.b.cols(), 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Centralized baselines the paper compares against.
+//!
+//! * [`mairal`] — online dictionary learning of Mairal, Bach, Ponce &
+//!   Sapiro (JMLR 2010) [6]: the comparator in Fig. 5 (denoising) and
+//!   Fig. 6 / Table III (novelty). Re-implemented from the paper since the
+//!   SPAMS toolbox is MATLAB/C++.
+//! * [`admm`] — the online ℓ1-dictionary learning of Kasiviswanathan,
+//!   Wang, Banerjee & Melville (NIPS 2012) [11]: the comparator in
+//!   Fig. 7 / Table IV.
+
+pub mod admm;
+pub mod mairal;
+
+pub use admm::{AdmmDictLearner, AdmmOptions};
+pub use mairal::{elastic_net_cd, MairalLearner, MairalOptions};

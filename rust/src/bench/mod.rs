@@ -1,0 +1,194 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with median / MAD / percentile
+//! reporting and a throughput helper. Used by the `rust/benches/*.rs`
+//! targets (declared with `harness = false`).
+
+use crate::math::stats;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall times in seconds.
+    pub samples: Vec<f64>,
+    /// Optional work units per iteration (e.g. flops) for throughput.
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn mad_s(&self) -> f64 {
+        stats::mad(&self.samples)
+    }
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+    /// Work units per second at the median (e.g. GFLOP/s when work = flops).
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.median_s())
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        let med = self.median_s();
+        let (scaled, unit) = scale_time(med);
+        let mut line = format!(
+            "{:<44} {:>9.3} {}  (mad {:.1}%, p95 {:.3} {}, n={})",
+            self.name,
+            scaled,
+            unit,
+            100.0 * self.mad_s() / med.max(1e-18),
+            scale_time(self.p95_s()).0,
+            scale_time(self.p95_s()).1,
+            self.samples.len()
+        );
+        if let Some(tp) = self.throughput() {
+            line.push_str(&format!("  [{:.2} Gunit/s]", tp / 1e9));
+        }
+        line
+    }
+}
+
+fn scale_time(s: f64) -> (f64, &'static str) {
+    if s >= 1.0 {
+        (s, "s ")
+    } else if s >= 1e-3 {
+        (s * 1e3, "ms")
+    } else if s >= 1e-6 {
+        (s * 1e6, "µs")
+    } else {
+        (s * 1e9, "ns")
+    }
+}
+
+/// Benchmark runner with global time budget per case.
+pub struct Bencher {
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Maximum measured iterations.
+    pub max_iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    /// Soft time budget per case in seconds.
+    pub budget_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_iters: 5, max_iters: 200, warmup: 2, budget_s: 2.0, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher for CI-style runs.
+    pub fn quick() -> Self {
+        Bencher { min_iters: 3, max_iters: 30, warmup: 1, budget_s: 0.5, results: Vec::new() }
+    }
+
+    /// Time `f`, which must perform one full unit of work per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_work(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput as `work` units per second.
+    pub fn bench_work(&mut self, name: &str, work: f64, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_work(name, Some(work), &mut f)
+    }
+
+    fn bench_with_work(
+        &mut self,
+        name: &str,
+        work: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters || start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult { name: name.to_string(), samples, work_per_iter: work };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All accumulated results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write a CSV of results (name, median_s, mad_s, p95_s, throughput).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,median_s,mad_s,p95_s,throughput_per_s")?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{:.9},{:.9},{:.9},{}",
+                r.name,
+                r.median_s(),
+                r.mad_s(),
+                r.p95_s(),
+                r.throughput().map(|t| format!("{t:.3}")).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher { min_iters: 4, max_iters: 8, warmup: 1, budget_s: 0.05, results: vec![] };
+        let mut count = 0usize;
+        b.bench("noop", || count += 1);
+        let r = &b.results()[0];
+        assert!(r.samples.len() >= 4);
+        assert!(count >= r.samples.len()); // warmup + measured
+        assert!(r.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher::quick();
+        b.bench_work("sleepless", 1e6, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut b = Bencher::quick();
+        b.bench("noop", || {});
+        let path = std::env::temp_dir().join("ddl_bench_test.csv");
+        b.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,"));
+        assert!(text.contains("noop"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,142 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `ddl <command> [--key value]... [--flag]...`. Typed getters
+//! with defaults keep the drivers terse.
+
+use crate::error::{DdlError, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(DdlError::Config("empty option name".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed getters with defaults; malformed values are errors.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| DdlError::Config(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    /// f32 with default.
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| DdlError::Config(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    /// u64 with default (seeds).
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| DdlError::Config(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["denoise", "--agents", "64", "--gamma=45.0", "--paper-scale"]);
+        assert_eq!(a.command.as_deref(), Some("denoise"));
+        assert_eq!(a.usize_or("agents", 0).unwrap(), 64);
+        assert_eq!(a.f32_or("gamma", 0.0).unwrap(), 45.0);
+        assert!(a.flag("paper-scale"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let a = parse(&["novelty"]);
+        assert_eq!(a.usize_or("steps", 8).unwrap(), 8);
+        assert_eq!(a.f32_or("mu", 0.5).unwrap(), 0.5);
+        assert_eq!(a.str_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn malformed_value_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "one", "two", "--k", "3"]);
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+}

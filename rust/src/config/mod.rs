@@ -1,0 +1,13 @@
+//! Configuration substrate: minimal JSON and TOML parsers plus typed
+//! experiment configs.
+//!
+//! `serde` is unavailable offline, so the repo ships a small recursive-
+//! descent JSON parser (used for the AOT `artifacts/manifest.json`) and a
+//! TOML-subset parser (used for experiment config files under `configs/`).
+
+pub mod experiment;
+pub mod json;
+pub mod toml;
+
+pub use json::JsonValue;
+pub use toml::TomlDoc;

@@ -1,0 +1,243 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / homogeneous arrays of numbers, `#` comments. That's
+//! everything the `configs/*.toml` files use.
+
+use crate::error::{DdlError, Result};
+use std::collections::BTreeMap;
+
+/// A TOML scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_f32(&self) -> Option<f32> {
+        self.as_f64().map(|v| v as f32)
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document: sections of key-value pairs. Keys outside any
+/// section live in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            doc.sections
+                .entry(current.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Get `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    /// Typed getters with defaults (experiment configs are all-optional).
+    pub fn f32_or(&self, section: &str, key: &str, default: f32) -> f32 {
+        self.get(section, key).and_then(|v| v.as_f32()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// Section names present.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> DdlError {
+    DdlError::Config(format!("toml parse error on line {}: {}", lineno + 1, msg))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue> {
+    if text.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::String(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim(), lineno))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    text.parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| err(lineno, &format!("cannot parse value '{text}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment config
+seed = 42
+
+[denoise]
+gamma = 45.0
+delta = 0.1
+agents = 64
+paper_scale = false
+label = "fig5"
+sizes = [10, 10]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.f32_or("denoise", "gamma", 0.0), 45.0);
+        assert_eq!(doc.usize_or("denoise", "agents", 0), 64);
+        assert!(!doc.bool_or("denoise", "paper_scale", true));
+        assert_eq!(doc.str_or("denoise", "label", ""), "fig5");
+        match doc.get("denoise", "sizes").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 2),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.f32_or("x", "y", 1.5), 1.5);
+        assert_eq!(doc.usize_or("x", "y", 7), 7);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = TomlDoc::parse("name = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.str_or("", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+        assert!(TomlDoc::parse("k = 12abc").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.5\nc = 1e-3").unwrap();
+        assert_eq!(doc.get("", "a").unwrap(), &TomlValue::Int(3));
+        assert_eq!(doc.get("", "b").unwrap(), &TomlValue::Float(3.5));
+        assert_eq!(doc.get("", "c").unwrap(), &TomlValue::Float(1e-3));
+    }
+}

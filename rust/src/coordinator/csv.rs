@@ -1,0 +1,59 @@
+//! Minimal CSV writer for `results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows of f64 columns with a header line.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:.6}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write labeled rows (first column is a string label).
+pub fn write_labeled_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[(String, Vec<f64>)],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for (label, row) in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:.6}")).collect();
+        writeln!(f, "{label},{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let p = std::env::temp_dir().join("ddl_csv_test.csv");
+        write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("a,b\n1.000000,2.000000\n"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writes_labeled_rows() {
+        let p = std::env::temp_dir().join("ddl_csv_label_test.csv");
+        write_labeled_csv(&p, &["algo", "auc"], &[("diffusion".into(), vec![0.93])]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("diffusion,0.930000"));
+        std::fs::remove_file(&p).ok();
+    }
+}

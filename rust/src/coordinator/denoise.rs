@@ -1,0 +1,234 @@
+//! Image-denoising pipeline (paper §IV-B, Fig. 5).
+//!
+//! 1. Train the model-distributed dictionary online on DC-removed patches
+//!    from synthetic natural scenes (Alg. 2), in minibatches of 4 with
+//!    gradient averaging (footnote 4);
+//! 2. Corrupt a held-out scene with σ = 50 AWGN (14.1 dB);
+//! 3. Denoise: for every sliding patch, infer the dual ν° and reconstruct
+//!    `z° = x − ν°` (Table II), add the DC back, overlap-add;
+//! 4. Score PSNR — optionally per agent (Fig. 5g), where each agent
+//!    reconstructs from its **own** dual iterate.
+//!
+//! The centralized comparator [6] trains on the same patch stream and
+//! denoises with its own elastic-net coding.
+
+use crate::baselines::{MairalLearner, MairalOptions};
+use crate::config::experiment::DenoiseConfig;
+use crate::data::{add_awgn, synth_scene, Image, PatchSampler, Reconstructor};
+use crate::error::Result;
+use crate::graph::{metropolis_weights, Graph, Topology};
+use crate::infer::{DiffusionEngine, DiffusionParams};
+use crate::learn::{OnlineTrainer, TrainerOptions};
+use crate::math::Mat;
+use crate::metrics::psnr;
+use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use crate::ops::prox::DictProx;
+use crate::rng::Pcg64;
+
+/// Results of a full denoising run.
+#[derive(Clone, Debug)]
+pub struct DenoiseReport {
+    pub psnr_noisy: f64,
+    /// Distributed method, consensus reconstruction.
+    pub psnr_distributed: f64,
+    /// Centralized [6] comparator (None if skipped).
+    pub psnr_centralized: Option<f64>,
+    /// Per-agent PSNR (Fig. 5g), when requested.
+    pub per_agent_psnr: Vec<f64>,
+    /// Final training loss (diagnostics).
+    pub final_train_loss: f64,
+    /// The learned dictionary (for atom visualization).
+    pub dictionary: Mat,
+    /// Images for optional PGM export: (clean, noisy, denoised).
+    pub images: (Image, Image, Image),
+}
+
+/// Run the experiment. `informed`: `None` = all agents see the data;
+/// `Some(k)` = only the first `k` agents do (Fig. 5e/f uses `Some(1)`).
+/// `with_baseline` additionally trains and scores the centralized [6]
+/// learner. `per_agent` computes the Fig. 5g per-agent PSNR sweep.
+pub fn run_denoise(
+    cfg: &DenoiseConfig,
+    with_baseline: bool,
+    per_agent: bool,
+    mut progress: impl FnMut(&str),
+) -> Result<DenoiseReport> {
+    let mut rng = Pcg64::new(cfg.seed);
+    let m = cfg.patch * cfg.patch;
+    let n = cfg.agents;
+    let task = TaskSpec::SparseCoding {
+        gamma: cfg.train_infer.gamma,
+        delta: cfg.train_infer.delta,
+    };
+
+    // --- data ---
+    let train_images: Vec<Image> =
+        (0..6).map(|_| synth_scene(cfg.image_side, &mut rng)).collect();
+    // Reject near-flat training patches: at γ = 45 they code to y = 0 and
+    // contribute no dictionary gradient (Eq. 51 with y° = 0).
+    let mut sampler =
+        PatchSampler::new(train_images, cfg.patch, rng.next_u64()).with_min_std(35.0);
+    let clean = synth_scene(cfg.image_side, &mut rng);
+    let noisy = add_awgn(&clean, cfg.noise_sigma, &mut rng);
+    let psnr_noisy = psnr(&clean.pixels, &noisy.pixels, 255.0);
+    progress(&format!("corrupted image PSNR: {psnr_noisy:.2} dB"));
+
+    // --- network ---
+    let g = Graph::generate(n, &Topology::ErdosRenyi { p: cfg.edge_prob }, &mut rng);
+    let a = metropolis_weights(&g);
+    let informed_idx: Option<Vec<usize>> = cfg.informed.map(|k| (0..k).collect());
+
+    // --- distributed training (Alg. 2) ---
+    let mut dict =
+        DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng)?;
+    let mut trainer = OnlineTrainer::new(
+        &a,
+        m,
+        informed_idx.as_deref(),
+        TrainerOptions {
+            infer: DiffusionParams { mu: cfg.train_infer.mu, iters: cfg.train_infer.iters },
+            prox: DictProx::None,
+        },
+    )?;
+    let steps = cfg.train_samples / cfg.minibatch.max(1);
+    let mut final_loss = 0.0;
+    let mut baseline = with_baseline.then(|| {
+        MairalLearner::new(
+            dict.mat().clone(),
+            MairalOptions {
+                gamma: cfg.train_infer.gamma,
+                delta: cfg.train_infer.delta,
+                ..MairalOptions::denoising()
+            },
+        )
+    });
+
+    for step in 0..steps {
+        let batch: Vec<(Vec<f32>, f32)> = (0..cfg.minibatch).map(|_| sampler.sample()).collect();
+        let refs: Vec<&[f32]> = batch.iter().map(|(p, _)| p.as_slice()).collect();
+        let stats = trainer.step(&mut dict, &task, &refs, cfg.mu_w)?;
+        final_loss = stats.mean_loss;
+        if let Some(b) = baseline.as_mut() {
+            for (p, _) in &batch {
+                b.step(p)?;
+            }
+        }
+        if step % (steps / 10).max(1) == 0 {
+            progress(&format!(
+                "train step {step}/{steps}: loss {:.1}, sparsity {:.2}, disagreement {:.2e}",
+                stats.mean_loss, stats.mean_sparsity, stats.mean_disagreement
+            ));
+        }
+    }
+
+    // --- denoising pass ---
+    progress("denoising with the distributed dictionary...");
+    let infer = DiffusionParams { mu: cfg.denoise_infer.mu, iters: cfg.denoise_infer.iters };
+    let mut engine = DiffusionEngine::new(&a, m, informed_idx.as_deref())?;
+    let corners =
+        Reconstructor::corners(noisy.width, noisy.height, cfg.patch, cfg.denoise_stride);
+    let mut rec = Reconstructor::new(noisy.width, noisy.height, cfg.patch);
+    let mut per_agent_rec: Vec<Reconstructor> = if per_agent {
+        (0..n).map(|_| Reconstructor::new(noisy.width, noisy.height, cfg.patch)).collect()
+    } else {
+        Vec::new()
+    };
+    let mut patch = vec![0.0f32; m];
+    for &(r, c) in &corners {
+        crate::data::patches::extract_patch(&noisy, r, c, cfg.patch, &mut patch);
+        let dc = crate::math::vector::mean(&patch);
+        for v in &mut patch {
+            *v -= dc;
+        }
+        engine.reset();
+        engine.run(&dict, &task, &patch, infer)?;
+        // z° = x − ν° (Table II, squared-ℓ2 residual), DC restored.
+        let nu = engine.consensus_nu();
+        let z: Vec<f32> = patch.iter().zip(&nu).map(|(&x, &v)| x - v + dc).collect();
+        rec.add_patch(r, c, &z);
+        if per_agent {
+            for (k, prec) in per_agent_rec.iter_mut().enumerate() {
+                let nu_k = engine.nu(k);
+                let zk: Vec<f32> =
+                    patch.iter().zip(nu_k).map(|(&x, &v)| x - v + dc).collect();
+                prec.add_patch(r, c, &zk);
+            }
+        }
+    }
+    let denoised = rec.finish(&noisy);
+    let psnr_distributed = psnr(&clean.pixels, &denoised.pixels, 255.0);
+    progress(&format!("distributed PSNR: {psnr_distributed:.2} dB"));
+
+    let per_agent_psnr: Vec<f64> = per_agent_rec
+        .into_iter()
+        .map(|prec| psnr(&clean.pixels, &prec.finish(&noisy).pixels, 255.0))
+        .collect();
+
+    // --- centralized comparator ---
+    let psnr_centralized = match baseline {
+        None => None,
+        Some(b) => {
+            progress("denoising with the centralized [6] dictionary...");
+            let mut rec = Reconstructor::new(noisy.width, noisy.height, cfg.patch);
+            for &(r, c) in &corners {
+                crate::data::patches::extract_patch(&noisy, r, c, cfg.patch, &mut patch);
+                let dc = crate::math::vector::mean(&patch);
+                for v in &mut patch {
+                    *v -= dc;
+                }
+                let y = b.code(&patch);
+                let wy = b.w.matvec(&y)?;
+                let z: Vec<f32> = wy.iter().map(|&v| v + dc).collect();
+                rec.add_patch(r, c, &z);
+            }
+            let img = rec.finish(&noisy);
+            let p = psnr(&clean.pixels, &img.pixels, 255.0);
+            progress(&format!("centralized PSNR: {p:.2} dB"));
+            Some(p)
+        }
+    };
+
+    Ok(DenoiseReport {
+        psnr_noisy,
+        psnr_distributed,
+        psnr_centralized,
+        per_agent_psnr,
+        final_train_loss: final_loss,
+        dictionary: dict.mat().clone(),
+        images: (clean, noisy, denoised),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::InferenceConfig;
+
+    /// Miniature end-to-end smoke: the full pipeline runs and denoising
+    /// improves over the corrupted image.
+    #[test]
+    fn mini_denoise_improves_psnr() {
+        let cfg = DenoiseConfig {
+            seed: 3,
+            agents: 16,
+            patch: 6,
+            train_samples: 240,
+            minibatch: 4,
+            mu_w: 2e-4,
+            train_infer: InferenceConfig { mu: 0.5, iters: 60, gamma: 30.0, delta: 0.1 },
+            denoise_infer: InferenceConfig { mu: 0.8, iters: 80, gamma: 30.0, delta: 0.1 },
+            image_side: 48,
+            noise_sigma: 50.0,
+            denoise_stride: 3,
+            informed: None,
+            edge_prob: 0.5,
+        };
+        let report = run_denoise(&cfg, false, false, |_| {}).unwrap();
+        assert!(
+            report.psnr_distributed > report.psnr_noisy + 1.0,
+            "denoise {:.2} dB should beat noisy {:.2} dB",
+            report.psnr_distributed,
+            report.psnr_noisy
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment coordinators: full pipelines behind the paper's figures.
+//!
+//! * [`denoise`] — Fig. 5: train a model-distributed dictionary on natural
+//!   scene patches, denoise a corrupted image, compare to centralized [6];
+//! * [`novelty`] — Figs. 6–7 / Tables III–IV: streaming novel-document
+//!   detection with dictionary/network expansion per time-step;
+//! * [`csv`] — tiny CSV writer for `results/`.
+
+pub mod csv;
+pub mod denoise;
+pub mod novelty;
+pub mod quickstart;
+pub mod tuning;
+
+pub use denoise::{run_denoise, DenoiseReport};
+pub use novelty::{run_novelty, NoveltyAlgo, NoveltyReport, StepResult};

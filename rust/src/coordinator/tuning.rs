@@ -1,0 +1,129 @@
+//! Step-size tuning procedure (§IV-A, Fig. 4).
+//!
+//! For a chosen μ and iteration budget: compute the exact `(y°, ν°)` with
+//! the FISTA solver (the CVX stand-in), run the distributed diffusion, and
+//! record per-iteration SNR of both the primal `y_i` (Eq. 54) and the dual
+//! `ν_{k,i}` against the exact solutions. The chosen μ must drive both
+//! curves to an acceptable SNR (40–50 dB in the paper's example) within
+//! the iteration budget.
+
+use crate::config::experiment::NoveltyConfig;
+use crate::data::{CorpusConfig, CorpusStream};
+use crate::error::Result;
+use crate::graph::{metropolis_weights, Graph, Topology};
+use crate::infer::{exact_dual, DiffusionParams};
+use crate::math::Mat;
+use crate::metrics::snr_db;
+use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use crate::rng::Pcg64;
+
+/// One point on the Fig. 4 learning curves.
+#[derive(Clone, Copy, Debug)]
+pub struct TuningPoint {
+    pub iter: usize,
+    /// `10·log10(‖y°‖²/‖y_i − y°‖²)` at agent-local recovery (Eq. 54).
+    pub y_snr_db: f64,
+    /// `10·log10(‖ν°‖²/‖ν_{k,i} − ν°‖²)` at a fixed probe agent.
+    pub nu_snr_db: f64,
+}
+
+/// Reproduce the Fig. 4 setup: the Huber novelty configuration on one
+/// corpus sample, measuring SNR trajectories for the given μ.
+pub fn tuning_curves(mu: f32, iters: usize, seed: u64) -> Result<Vec<TuningPoint>> {
+    let cfg = NoveltyConfig::huber();
+    let mut rng = Pcg64::new(seed);
+    let task = TaskSpec::HuberNmf { gamma: cfg.gamma, delta: cfg.delta, eta: 0.2 };
+
+    // One document from the corpus.
+    let schedule = CorpusStream::huber_schedule(cfg.topics, cfg.time_steps);
+    let mut corpus = CorpusStream::new(
+        CorpusConfig { vocab: 400, topics: cfg.topics, seed, ..Default::default() },
+        schedule,
+    );
+    let mut docs = corpus.batch(0, 2 * 10 + 12);
+    // Probe sample: a fresh document whose topic one of the atoms covers.
+    let atom_topics: Vec<usize> = docs.iter().take(10).map(|d| d.topic).collect();
+    let pos = (10..docs.len())
+        .find(|&i| atom_topics.contains(&docs[i].topic))
+        .expect("corpus cycles topics, so a matching probe doc exists");
+    let doc = docs.swap_remove(pos);
+    let m = doc.features.len();
+
+    // Dictionary at the initial scale (10 atoms/agents), *warm-started*
+    // from corpus documents — the paper's Fig. 4 probes the tuned system
+    // mid-training, where atoms already correlate with the data (a cold
+    // random dictionary would make the primal degenerately zero under
+    // γ = 1). Each agent's atom is a (feasible) normalized document.
+    let n = 10; // paper: 10 initial atoms/agents
+    let mut dict =
+        DistributedDictionary::random(m, n, n, AtomConstraint::NonNegUnitBall, &mut rng)?;
+    for (k, d) in docs.iter().take(n).enumerate() {
+        let mut atom = d.features.clone();
+        crate::math::vector::normalize(&mut atom);
+        dict.mat_mut().set_col(k, &atom);
+    }
+    let g = Graph::generate(n, &Topology::ErdosRenyi { p: cfg.edge_prob }, &mut rng);
+    let a = metropolis_weights(&g);
+
+    // Scale the sample so the elastic-net correlations sit a few γ above
+    // threshold (the trained-system operating point).
+    let mut x = doc.features;
+    let s = dict.mat().matvec_t(&x)?;
+    let smax = s.iter().fold(0.0f32, |m, &v| m.max(v));
+    if smax > 0.0 {
+        crate::math::vector::scale(3.0 * task.gamma() / smax, &mut x);
+    }
+
+    // Ground truth from the exact solver.
+    let exact = exact_dual(&dict, &task, &x, 1e-9, 50_000)?;
+
+    curves_against_exact(&dict, &task, &x, &a, mu, iters, &exact.nu, &exact.y)
+}
+
+/// SNR trajectories of diffusion against a supplied exact solution,
+/// probing agent 0 (any agent works after convergence).
+pub fn curves_against_exact(
+    dict: &DistributedDictionary,
+    task: &TaskSpec,
+    x: &[f32],
+    a: &Mat,
+    mu: f32,
+    iters: usize,
+    nu_exact: &[f32],
+    y_exact: &[f32],
+) -> Result<Vec<TuningPoint>> {
+    let m = dict.m();
+    let mut engine = crate::infer::DiffusionEngine::new(a, m, None)?;
+    let mut points = Vec::with_capacity(iters);
+    for it in 1..=iters {
+        engine.run(dict, task, x, DiffusionParams { mu, iters: 1 })?;
+        let y_i = engine.recover_y(dict, task);
+        points.push(TuningPoint {
+            iter: it,
+            y_snr_db: snr_db(y_exact, &y_i),
+            nu_snr_db: snr_db(nu_exact, engine.nu(0)),
+        });
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snr_curves_increase_with_iterations() {
+        // μ = 0.3 converges smoothly for every seed; μ = 0.5 can sit at
+        // the edge of a period-2 oscillation on some problem draws (the
+        // exact behaviour Fig. 4's tuning procedure is designed to spot).
+        let pts = tuning_curves(0.3, 600, 3).unwrap();
+        assert_eq!(pts.len(), 600);
+        let early = pts[9].nu_snr_db;
+        let late = pts[599].nu_snr_db;
+        assert!(late > early, "dual SNR should improve: {early} → {late}");
+        // Both curves clearly positive at the plateau (max over the tail
+        // tolerates residual oscillation).
+        let y_tail = pts[590..].iter().map(|p| p.y_snr_db).fold(f64::MIN, f64::max);
+        assert!(y_tail > 10.0, "y SNR tail {y_tail}");
+    }
+}

@@ -1,0 +1,371 @@
+//! Synthetic topic-model corpus — the TDT2 substitute (DESIGN.md §4).
+//!
+//! The NIST TDT2 corpus is LDC-licensed and not redistributable, so the
+//! novelty experiments run on a generated corpus that reproduces the two
+//! properties the detector exploits: documents have low-rank topical
+//! structure (each document's tf-idf vector is approximately a non-negative
+//! combination of its dominant topic's word distribution), and novel
+//! topics appear at controlled time-steps. Word distributions per topic
+//! are Dirichlet draws concentrated on a topic-specific vocabulary band
+//! plus a shared background band; documents mix a dominant topic with
+//! background noise; features are tf-idf, ℓ2- (or ℓ1-) normalized.
+
+use crate::rng::{Categorical, Dirichlet, Pcg64};
+use std::collections::BTreeSet;
+
+/// One document: its feature vector and ground-truth dominant topic.
+#[derive(Clone, Debug)]
+pub struct Document {
+    pub features: Vec<f32>,
+    pub topic: usize,
+}
+
+/// Corpus generator configuration.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// Vocabulary size (paper TDT2: 19527; scaled default 800).
+    pub vocab: usize,
+    /// Number of topics (paper: 30).
+    pub topics: usize,
+    /// Words per document (drawn uniformly in this range).
+    pub doc_len: (usize, usize),
+    /// Dominant-topic weight (rest is background mixture).
+    pub dominance: f64,
+    /// ℓ1 instead of ℓ2 feature normalization (the ADMM baseline of [11]
+    /// uses ℓ1).
+    pub l1_normalize: bool,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 800,
+            topics: 30,
+            doc_len: (60, 140),
+            dominance: 0.85,
+            l1_normalize: false,
+            seed: 0x7D72,
+        }
+    }
+}
+
+/// Streaming corpus with a novel-topic schedule.
+///
+/// `schedule[s]` lists the topics first introduced at time-step `s`
+/// (step 0 is the initialization batch). Documents in batch `s` draw their
+/// dominant topic from all topics introduced at steps `≤ s`, with a boost
+/// for the newest ones so each step contains a solid block of novel
+/// documents (mirroring TDT2's by-topic ordering).
+pub struct CorpusStream {
+    cfg: CorpusConfig,
+    /// Per-topic word samplers.
+    word_dist: Vec<Categorical>,
+    /// idf weights from a reference collection.
+    idf: Vec<f32>,
+    /// Topics introduced per step.
+    schedule: Vec<Vec<usize>>,
+    rng: Pcg64,
+}
+
+impl CorpusStream {
+    /// Build the generator. `schedule` must cover every topic exactly once.
+    pub fn new(cfg: CorpusConfig, schedule: Vec<Vec<usize>>) -> Self {
+        let all: Vec<usize> = schedule.iter().flatten().copied().collect();
+        let unique: BTreeSet<usize> = all.iter().copied().collect();
+        assert_eq!(all.len(), unique.len(), "schedule repeats a topic");
+        assert!(
+            unique.iter().all(|&t| t < cfg.topics),
+            "schedule topic out of range"
+        );
+        assert_eq!(unique.len(), cfg.topics, "schedule must cover every topic");
+
+        let mut rng = Pcg64::new(cfg.seed);
+        // Topic word distributions: band of dedicated words + background.
+        let background = cfg.vocab / 5; // first 20% of vocab shared
+        let band = (cfg.vocab - background) / cfg.topics;
+        let mut word_dist = Vec::with_capacity(cfg.topics);
+        for t in 0..cfg.topics {
+            let mut weights = vec![0.0f64; cfg.vocab];
+            // Background mass.
+            let bg = Dirichlet::symmetric(background, 0.5).sample(&mut rng);
+            for (i, &w) in bg.iter().enumerate() {
+                weights[i] = 0.25 * w;
+            }
+            // Dedicated band mass.
+            let start = background + t * band;
+            let len = if t == cfg.topics - 1 { cfg.vocab - start } else { band };
+            let dw = Dirichlet::symmetric(len, 0.3).sample(&mut rng);
+            for (i, &w) in dw.iter().enumerate() {
+                weights[start + i] = 0.75 * w;
+            }
+            word_dist.push(Categorical::new(&weights));
+        }
+
+        // idf from a reference collection spanning all topics.
+        let ref_docs = 40 * cfg.topics;
+        let mut df = vec![0usize; cfg.vocab];
+        for d in 0..ref_docs {
+            let t = d % cfg.topics;
+            let counts = draw_counts(&cfg, &word_dist, t, &mut rng);
+            for (w, &c) in counts.iter().enumerate() {
+                if c > 0.0 {
+                    df[w] += 1;
+                }
+            }
+        }
+        let idf: Vec<f32> = df
+            .iter()
+            .map(|&d| ((ref_docs as f32 + 1.0) / (d as f32 + 1.0)).ln())
+            .collect();
+
+        CorpusStream { cfg, word_dist, idf, schedule, rng }
+    }
+
+    /// Default schedule used by the squared-ℓ2 experiment: 6 initial
+    /// topics, then 3 new topics at every one of 8 steps (6 + 24 = 30).
+    pub fn spread_schedule(topics: usize, steps: usize) -> Vec<Vec<usize>> {
+        let init = topics - steps * ((topics.saturating_sub(topics / 5)) / steps.max(1)).min(3);
+        let init = init.max(1);
+        let mut schedule = vec![(0..init).collect::<Vec<_>>()];
+        let mut next = init;
+        for s in 0..steps {
+            let remaining = topics - next;
+            let left_steps = steps - s;
+            let take = remaining.div_ceil(left_steps);
+            schedule.push((next..next + take).collect());
+            next += take;
+        }
+        schedule
+    }
+
+    /// Schedule matching the Huber experiment of §IV-C2: novel topics only
+    /// at steps 1, 2, 5, 6, 8 (1-based); other steps introduce nothing.
+    pub fn huber_schedule(topics: usize, steps: usize) -> Vec<Vec<usize>> {
+        let novel_steps = [1usize, 2, 5, 6, 8];
+        let active: Vec<usize> = novel_steps.iter().filter(|&&s| s <= steps).copied().collect();
+        let init = topics / 2;
+        let mut schedule = vec![(0..init).collect::<Vec<_>>()];
+        let mut next = init;
+        for s in 1..=steps {
+            if active.contains(&s) {
+                let pos = active.iter().position(|&a| a == s).unwrap();
+                let remaining = topics - next;
+                let left = active.len() - pos;
+                let take = remaining.div_ceil(left);
+                schedule.push((next..next + take).collect());
+                next += take;
+            } else {
+                schedule.push(Vec::new());
+            }
+        }
+        schedule
+    }
+
+    /// Topics introduced at step `s` (0 = initialization batch).
+    pub fn new_topics_at(&self, s: usize) -> &[usize] {
+        &self.schedule[s]
+    }
+
+    /// All topics seen in steps `0..=s`.
+    pub fn seen_through(&self, s: usize) -> BTreeSet<usize> {
+        self.schedule[..=s.min(self.schedule.len() - 1)]
+            .iter()
+            .flatten()
+            .copied()
+            .collect()
+    }
+
+    /// Number of schedule steps (including step 0).
+    pub fn steps(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Generate batch for step `s` with `n` documents. Novel topics (those
+    /// introduced at step `s`) receive ≈35% of the batch.
+    pub fn batch(&mut self, s: usize, n: usize) -> Vec<Document> {
+        let seen_before: Vec<usize> = if s == 0 {
+            Vec::new()
+        } else {
+            self.seen_through(s - 1).into_iter().collect()
+        };
+        let new: Vec<usize> = self.schedule[s].clone();
+        let mut docs = Vec::with_capacity(n);
+        for i in 0..n {
+            let topic = if s == 0 {
+                new[i % new.len()]
+            } else if !new.is_empty() && self.rng.next_f64() < 0.35 {
+                new[self.rng.next_below(new.len() as u64) as usize]
+            } else if !seen_before.is_empty() {
+                seen_before[self.rng.next_below(seen_before.len() as u64) as usize]
+            } else {
+                new[self.rng.next_below(new.len() as u64) as usize]
+            };
+            docs.push(self.make_doc(topic));
+        }
+        docs
+    }
+
+    /// Fixed test set spanning all topics (the sq-Euclid protocol keeps a
+    /// held-out set with every category present).
+    pub fn test_set(&mut self, n: usize) -> Vec<Document> {
+        (0..n)
+            .map(|i| {
+                let topic = i % self.cfg.topics;
+                self.make_doc(topic)
+            })
+            .collect()
+    }
+
+    fn make_doc(&mut self, topic: usize) -> Document {
+        let counts = draw_counts(&self.cfg, &self.word_dist, topic, &mut self.rng);
+        let mut feat: Vec<f32> = counts
+            .iter()
+            .zip(&self.idf)
+            .map(|(&c, &w)| c * w)
+            .collect();
+        if self.cfg.l1_normalize {
+            let n = crate::math::vector::norm1(&feat);
+            if n > 0.0 {
+                crate::math::vector::scale(1.0 / n, &mut feat);
+            }
+        } else {
+            crate::math::vector::normalize(&mut feat);
+        }
+        Document { features: feat, topic }
+    }
+
+    /// Vocabulary size (feature dimension M).
+    pub fn dim(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+/// Draw raw term counts for a document with the given dominant topic.
+fn draw_counts(
+    cfg: &CorpusConfig,
+    word_dist: &[Categorical],
+    topic: usize,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let span = cfg.doc_len.1 - cfg.doc_len.0;
+    let len = cfg.doc_len.0 + if span > 0 { rng.next_below(span as u64 + 1) as usize } else { 0 };
+    let mut counts = vec![0.0f32; cfg.vocab];
+    for _ in 0..len {
+        let t = if rng.next_f64() < cfg.dominance {
+            topic
+        } else {
+            rng.next_below(cfg.topics as u64) as usize
+        };
+        let w = word_dist[t].sample(rng);
+        counts[w] += 1.0;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CorpusConfig {
+        CorpusConfig { vocab: 120, topics: 6, ..Default::default() }
+    }
+
+    #[test]
+    fn spread_schedule_covers_all_topics_once() {
+        let s = CorpusStream::spread_schedule(30, 8);
+        let all: Vec<usize> = s.iter().flatten().copied().collect();
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert_eq!(all.len(), 30);
+        assert_eq!(s.len(), 9); // init + 8 steps
+        assert!(!s[0].is_empty());
+    }
+
+    #[test]
+    fn huber_schedule_only_at_paper_steps() {
+        let s = CorpusStream::huber_schedule(30, 8);
+        assert_eq!(s.len(), 9);
+        for (step, topics) in s.iter().enumerate().skip(1) {
+            let should_have = [1, 2, 5, 6, 8].contains(&step);
+            assert_eq!(!topics.is_empty(), should_have, "step {step}");
+        }
+        let all: Vec<usize> = s.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 30);
+    }
+
+    #[test]
+    fn features_normalized() {
+        let cfg = small_cfg();
+        let sched = CorpusStream::spread_schedule(6, 3);
+        let mut cs = CorpusStream::new(cfg, sched);
+        let docs = cs.batch(0, 10);
+        for d in &docs {
+            let n = crate::math::vector::norm2(&d.features);
+            assert!((n - 1.0).abs() < 1e-4, "norm {n}");
+            assert!(d.features.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn l1_normalization_option() {
+        let cfg = CorpusConfig { l1_normalize: true, ..small_cfg() };
+        let sched = CorpusStream::spread_schedule(6, 3);
+        let mut cs = CorpusStream::new(cfg, sched);
+        let docs = cs.batch(0, 5);
+        for d in &docs {
+            let n = crate::math::vector::norm1(&d.features);
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn same_topic_docs_more_similar_than_cross_topic() {
+        let cfg = small_cfg();
+        let sched = vec![(0..6).collect::<Vec<_>>()];
+        let mut cs = CorpusStream::new(cfg, sched);
+        let docs = cs.test_set(60);
+        let mut same = Vec::new();
+        let mut cross = Vec::new();
+        for i in 0..docs.len() {
+            for j in i + 1..docs.len() {
+                let sim = crate::math::blas::dot(&docs[i].features, &docs[j].features) as f64;
+                if docs[i].topic == docs[j].topic {
+                    same.push(sim);
+                } else {
+                    cross.push(sim);
+                }
+            }
+        }
+        let ms = crate::math::stats::mean(&same);
+        let mc = crate::math::stats::mean(&cross);
+        assert!(ms > 2.0 * mc, "same-topic sim {ms} vs cross {mc}");
+    }
+
+    #[test]
+    fn batch_contains_novel_docs_when_scheduled() {
+        let cfg = small_cfg();
+        let sched = CorpusStream::spread_schedule(6, 3);
+        let mut cs = CorpusStream::new(cfg, sched);
+        let _ = cs.batch(0, 20);
+        let seen = cs.seen_through(0);
+        let b1 = cs.batch(1, 60);
+        let novel = b1.iter().filter(|d| !seen.contains(&d.topic)).count();
+        assert!(novel > 10, "only {novel} novel docs in step-1 batch");
+        assert!(novel < 40, "too many novel docs: {novel}");
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule must cover every topic")]
+    fn incomplete_schedule_rejected() {
+        CorpusStream::new(small_cfg(), vec![vec![0, 1]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule repeats a topic")]
+    fn duplicate_schedule_rejected() {
+        CorpusStream::new(small_cfg(), vec![vec![0, 1, 2, 3, 4, 5], vec![0]]);
+    }
+}

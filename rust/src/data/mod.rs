@@ -1,0 +1,16 @@
+//! Data substrates.
+//!
+//! The paper's datasets are not redistributable (van Hateren natural
+//! images; the LDC-licensed TDT2 corpus), so this module builds synthetic
+//! equivalents that preserve the statistics the algorithms exploit — see
+//! DESIGN.md §4 for the substitution arguments.
+
+pub mod corpus;
+pub mod images;
+pub mod noise;
+pub mod patches;
+
+pub use corpus::{CorpusConfig, CorpusStream, Document};
+pub use images::{synth_scene, Image};
+pub use noise::add_awgn;
+pub use patches::{extract_patch, PatchSampler, Reconstructor};

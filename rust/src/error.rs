@@ -1,0 +1,28 @@
+//! Crate-wide error type.
+use thiserror::Error;
+
+/// Errors surfaced by the ddl library.
+#[derive(Error, Debug)]
+pub enum DdlError {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DdlError>;
+
+impl From<xla::Error> for DdlError {
+    fn from(e: xla::Error) -> Self {
+        DdlError::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,163 @@
+//! Graph Laplacian spectral analysis.
+//!
+//! The paper checks network connectivity "by inspecting the algebraic
+//! connectivity of the graph Laplacian matrix" (§IV-B). We provide exactly
+//! that: the Fiedler value λ₂(L), computed by power iteration on a shifted,
+//! deflated Laplacian — no external eigensolver needed.
+
+use super::Graph;
+use crate::math::{solve::power_iteration, Mat};
+
+/// Dense graph Laplacian `L = D − A`.
+pub fn laplacian(g: &Graph) -> Mat {
+    let n = g.n();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        l.set(i, i, g.degree(i) as f32);
+        for &j in g.neighbors(i) {
+            l.set(i, j, -1.0);
+        }
+    }
+    l
+}
+
+/// Algebraic connectivity λ₂ of the Laplacian (the Fiedler value).
+/// Positive iff the graph is connected.
+///
+/// Method: λ_max from power iteration, then power-iterate `(λ_max I − L)`
+/// with deflation of the all-ones kernel vector; λ₂ = λ_max − μ where μ is
+/// the dominant eigenvalue of the deflated complement.
+pub fn algebraic_connectivity(g: &Graph) -> f32 {
+    let n = g.n();
+    if n <= 1 {
+        return 0.0;
+    }
+    let l = laplacian(g);
+    let (lmax, _) = power_iteration(&l, 300, 0xF1ED);
+    let lmax = lmax.max(1e-6);
+    // B = λ_max I − L restricted to 1⊥: deflate by subtracting the mean.
+    let mut b = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = if i == j { lmax } else { 0.0 } - l.get(i, j);
+            b.set(i, j, v);
+        }
+    }
+    // Power iteration with mean-deflation each step.
+    let mut rng = crate::rng::Pcg64::new(0xF1ED2);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+    deflate_mean(&mut v);
+    crate::math::vector::normalize(&mut v);
+    let mut mu = 0.0;
+    let mut bv = vec![0.0f32; n];
+    for _ in 0..500 {
+        crate::math::blas::gemv(n, n, b.as_slice(), &v, &mut bv);
+        deflate_mean(&mut bv);
+        mu = crate::math::blas::dot(&v, &bv);
+        let nn = crate::math::vector::norm2(&bv);
+        if nn < 1e-12 {
+            break;
+        }
+        for (vi, &bi) in v.iter_mut().zip(&bv) {
+            *vi = bi / nn;
+        }
+    }
+    (lmax - mu).max(0.0)
+}
+
+/// Spectral gap of a doubly-stochastic combination matrix `A`:
+/// `1 − |λ₂(A)|`, which governs the diffusion mixing rate. Computed by
+/// deflating the Perron vector (uniform, since A is doubly stochastic).
+pub fn spectral_gap(a: &Mat) -> f32 {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut rng = crate::rng::Pcg64::new(0x5EC7);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+    deflate_mean(&mut v);
+    crate::math::vector::normalize(&mut v);
+    let mut av = vec![0.0f32; n];
+    let mut lam = 0.0f32;
+    for _ in 0..500 {
+        crate::math::blas::gemv(n, n, a.as_slice(), &v, &mut av);
+        deflate_mean(&mut av);
+        let nn = crate::math::vector::norm2(&av);
+        if nn < 1e-12 {
+            lam = 0.0;
+            break;
+        }
+        lam = nn; // |λ₂| since v stays unit-norm in 1⊥
+        for (vi, &ai) in v.iter_mut().zip(&av) {
+            *vi = ai / nn;
+        }
+    }
+    (1.0 - lam.abs()).clamp(0.0, 1.0)
+}
+
+fn deflate_mean(v: &mut [f32]) {
+    let m = crate::math::vector::mean(v);
+    for x in v.iter_mut() {
+        *x -= m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{metropolis_weights, Topology};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let g = Graph::generate(12, &Topology::ErdosRenyi { p: 0.5 }, &mut Pcg64::new(1));
+        let l = laplacian(&g);
+        for i in 0..12 {
+            let s: f32 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn connected_graph_positive_fiedler() {
+        let g = Graph::generate(16, &Topology::ErdosRenyi { p: 0.5 }, &mut Pcg64::new(2));
+        let l2 = algebraic_connectivity(&g);
+        assert!(l2 > 0.1, "λ₂ = {l2}");
+    }
+
+    #[test]
+    fn disconnected_graph_zero_fiedler() {
+        let g = Graph::from_adjacency(vec![vec![1], vec![0], vec![3], vec![2]]);
+        let l2 = algebraic_connectivity(&g);
+        assert!(l2 < 1e-2, "λ₂ = {l2}");
+    }
+
+    #[test]
+    fn complete_graph_fiedler_is_n() {
+        // K_n has λ₂ = n.
+        let g = Graph::generate(8, &Topology::FullyConnected, &mut Pcg64::new(3));
+        let l2 = algebraic_connectivity(&g);
+        assert!((l2 - 8.0).abs() < 0.1, "λ₂ = {l2}");
+    }
+
+    #[test]
+    fn ring_fiedler_matches_formula() {
+        // Cycle C_n: λ₂ = 2(1 − cos(2π/n)).
+        let n = 10;
+        let g = Graph::generate(n, &Topology::Ring { k: 1 }, &mut Pcg64::new(4));
+        let expect = 2.0 * (1.0 - (2.0 * std::f32::consts::PI / n as f32).cos());
+        let l2 = algebraic_connectivity(&g);
+        assert!((l2 - expect).abs() < 0.02, "λ₂ = {l2}, expect {expect}");
+    }
+
+    #[test]
+    fn spectral_gap_larger_for_denser_graphs() {
+        let mut rng = Pcg64::new(5);
+        let ring = Graph::generate(20, &Topology::Ring { k: 1 }, &mut rng);
+        let dense = Graph::generate(20, &Topology::ErdosRenyi { p: 0.7 }, &mut rng);
+        let gap_ring = spectral_gap(&metropolis_weights(&ring));
+        let gap_dense = spectral_gap(&metropolis_weights(&dense));
+        assert!(
+            gap_dense > gap_ring,
+            "dense gap {gap_dense} should beat ring gap {gap_ring}"
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Combination matrices for diffusion (Eq. 32).
+//!
+//! The Metropolis(-Hastings) rule produces a symmetric doubly-stochastic
+//! matrix from local degree information only — exactly what the paper uses
+//! (§IV-B, "we use the Metropolis rule, which is known to be
+//! doubly-stochastic"). The fully-connected comparator uses
+//! `A = (1/N)·11ᵀ`.
+
+use super::Graph;
+use crate::math::Mat;
+
+/// Metropolis-rule combination matrix:
+/// `a_{ℓk} = 1 / max(d_ℓ, d_k)` for neighbors `ℓ ≠ k`,
+/// `a_{kk} = 1 − Σ_{ℓ≠k} a_{ℓk}`, zero otherwise. Symmetric and doubly
+/// stochastic by construction; every diagonal entry is positive.
+pub fn metropolis_weights(g: &Graph) -> Mat {
+    let n = g.n();
+    let mut a = Mat::zeros(n, n);
+    for k in 0..n {
+        let dk = g.degree(k) as f32;
+        let mut off_sum = 0.0;
+        for &l in g.neighbors(k) {
+            let dl = g.degree(l) as f32;
+            let w = 1.0 / (dk.max(dl) + 1.0); // +1: degrees counted incl. self
+            a.set(l, k, w);
+            off_sum += w;
+        }
+        a.set(k, k, 1.0 - off_sum);
+    }
+    a
+}
+
+/// Uniform averaging matrix `A = (1/N)·11ᵀ` — the paper's fully-connected
+/// configuration (§IV-C1).
+pub fn uniform_weights(n: usize) -> Mat {
+    Mat::full(n, n, 1.0 / n as f32)
+}
+
+/// Check double stochasticity (`A1 = Aᵀ1 = 1`), non-negativity, and zero
+/// pattern consistency with the graph (entries only on edges + diagonal).
+pub fn is_doubly_stochastic(a: &Mat, tol: f32) -> bool {
+    let n = a.rows();
+    if a.cols() != n {
+        return false;
+    }
+    for i in 0..n {
+        let mut row = 0.0;
+        let mut col = 0.0;
+        for j in 0..n {
+            let v = a.get(i, j);
+            if v < -tol {
+                return false;
+            }
+            row += v;
+            col += a.get(j, i);
+        }
+        if (row - 1.0).abs() > tol || (col - 1.0).abs() > tol {
+            return false;
+        }
+    }
+    true
+}
+
+/// Verify the sparsity pattern of `A` respects the graph: `a_{ℓk} > 0` only
+/// if `ℓ = k` or `ℓ ∈ N_k`.
+pub fn respects_topology(a: &Mat, g: &Graph, tol: f32) -> bool {
+    let n = g.n();
+    for k in 0..n {
+        for l in 0..n {
+            if a.get(l, k).abs() > tol && l != k && !g.neighbors(k).contains(&l) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn metropolis_doubly_stochastic_on_random_graphs() {
+        for seed in 0..5 {
+            let g = Graph::generate(25, &Topology::ErdosRenyi { p: 0.5 }, &mut Pcg64::new(seed));
+            let a = metropolis_weights(&g);
+            assert!(is_doubly_stochastic(&a, 1e-5), "seed {seed}");
+            assert!(respects_topology(&a, &g, 1e-9), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn metropolis_symmetric() {
+        let g = Graph::generate(15, &Topology::ErdosRenyi { p: 0.4 }, &mut Pcg64::new(9));
+        let a = metropolis_weights(&g);
+        for i in 0..15 {
+            for j in 0..15 {
+                assert!((a.get(i, j) - a.get(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn metropolis_positive_diagonal() {
+        let g = Graph::generate(20, &Topology::ErdosRenyi { p: 0.8 }, &mut Pcg64::new(11));
+        let a = metropolis_weights(&g);
+        for i in 0..20 {
+            assert!(a.get(i, i) > 0.0, "diagonal {i} = {}", a.get(i, i));
+        }
+    }
+
+    #[test]
+    fn uniform_weights_are_doubly_stochastic() {
+        let a = uniform_weights(7);
+        assert!(is_doubly_stochastic(&a, 1e-6));
+        assert!((a.get(3, 4) - 1.0 / 7.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn detects_non_doubly_stochastic() {
+        let mut a = uniform_weights(3);
+        a.set(0, 0, 0.9);
+        assert!(!is_doubly_stochastic(&a, 1e-6));
+    }
+
+    #[test]
+    fn detects_topology_violation() {
+        let g = Graph::generate(4, &Topology::Ring { k: 1 }, &mut Pcg64::new(13));
+        let a = uniform_weights(4); // dense A cannot respect a ring
+        assert!(!respects_topology(&a, &g, 1e-9));
+    }
+}

@@ -1,0 +1,13 @@
+//! Network topology substrate.
+//!
+//! The paper's experiments run over an Erdős–Rényi random graph with edge
+//! probability 0.5, regenerated until connected (checked through the
+//! algebraic connectivity of the graph Laplacian), with the Metropolis
+//! rule supplying a doubly-stochastic combination matrix (Eq. 32 and §IV-B).
+
+pub mod laplacian;
+pub mod metropolis;
+pub mod topology;
+
+pub use metropolis::{is_doubly_stochastic, metropolis_weights, uniform_weights};
+pub use topology::{Graph, Topology};

@@ -1,0 +1,268 @@
+//! Undirected graph topologies over `N` agents.
+
+use crate::rng::Pcg64;
+
+/// Topology families used by the experiments and ablations.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// Erdős–Rényi `G(N, p)`, regenerated until connected (paper setting:
+    /// `p = 0.5`).
+    ErdosRenyi { p: f64 },
+    /// Ring lattice where each agent links to `k` neighbors on each side.
+    Ring { k: usize },
+    /// 2D grid (row-major), 4-neighborhood.
+    Grid,
+    /// Complete graph (the paper's "fully connected" comparator).
+    FullyConnected,
+}
+
+/// Undirected graph with adjacency lists. Self-loops are implicit: every
+/// agent is always in its own neighborhood `N_k` (paper Fig. 1).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    /// Sorted neighbor lists, *excluding* self.
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build a graph of the given topology; for `ErdosRenyi` the graph is
+    /// resampled until connected (paper §IV-B protocol), up to 1000 tries.
+    pub fn generate(n: usize, topology: &Topology, rng: &mut Pcg64) -> Graph {
+        assert!(n > 0);
+        match topology {
+            Topology::ErdosRenyi { p } => {
+                for _ in 0..1000 {
+                    let g = Self::erdos_renyi(n, *p, rng);
+                    if g.is_connected() {
+                        return g;
+                    }
+                }
+                panic!("failed to sample a connected G({n}, {p}) in 1000 tries");
+            }
+            Topology::Ring { k } => Self::ring(n, *k),
+            Topology::Grid => Self::grid(n),
+            Topology::FullyConnected => Self::complete(n),
+        }
+    }
+
+    fn erdos_renyi(n: usize, p: f64, rng: &mut Pcg64) -> Graph {
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in i + 1..n {
+                if rng.next_f64() < p {
+                    adj[i].push(j);
+                    adj[j].push(i);
+                }
+            }
+        }
+        Graph { n, adj }
+    }
+
+    fn ring(n: usize, k: usize) -> Graph {
+        let mut adj = vec![Vec::new(); n];
+        let k = k.max(1).min(n.saturating_sub(1) / 2 + 1);
+        for i in 0..n {
+            for d in 1..=k {
+                let j = (i + d) % n;
+                if i != j && !adj[i].contains(&j) {
+                    adj[i].push(j);
+                    adj[j].push(i);
+                }
+            }
+        }
+        for a in &mut adj {
+            a.sort_unstable();
+        }
+        Graph { n, adj }
+    }
+
+    fn grid(n: usize) -> Graph {
+        let side = (n as f64).sqrt().ceil() as usize;
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n {
+            let (r, c) = (i / side, i % side);
+            let link = |j: usize, adj: &mut Vec<Vec<usize>>| {
+                if j < n {
+                    adj[i].push(j);
+                    adj[j].push(i);
+                }
+            };
+            if c + 1 < side {
+                link(i + 1, &mut adj);
+            }
+            if r + 1 < side.div_ceil(1) {
+                link(i + side, &mut adj);
+            }
+        }
+        for a in &mut adj {
+            a.sort_unstable();
+            a.dedup();
+        }
+        Graph { n, adj }
+    }
+
+    fn complete(n: usize) -> Graph {
+        let adj = (0..n)
+            .map(|i| (0..n).filter(|&j| j != i).collect())
+            .collect();
+        Graph { n, adj }
+    }
+
+    /// Build directly from adjacency lists (testing / hand-crafted
+    /// topologies). Lists are normalized (sorted, deduped); symmetry is the
+    /// caller's responsibility.
+    pub fn from_adjacency(adj: Vec<Vec<usize>>) -> Graph {
+        let n = adj.len();
+        let mut adj = adj;
+        for a in &mut adj {
+            a.sort_unstable();
+            a.dedup();
+        }
+        Graph { n, adj }
+    }
+
+    /// Number of agents.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Neighbors of `k`, excluding `k` itself.
+    pub fn neighbors(&self, k: usize) -> &[usize] {
+        &self.adj[k]
+    }
+
+    /// Degree of `k` excluding self.
+    pub fn degree(&self, k: usize) -> usize {
+        self.adj[k].len()
+    }
+
+    /// Total undirected edge count.
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(0);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Grow the graph by `extra` new agents (novelty time-steps add 10
+    /// nodes per step, §IV-C): each new agent wires to existing + new
+    /// agents with probability `p`, retrying until the whole graph stays
+    /// connected (guaranteed by forcing at least one link).
+    pub fn grow(&mut self, extra: usize, p: f64, rng: &mut Pcg64) {
+        let old_n = self.n;
+        self.n += extra;
+        self.adj.resize(self.n, Vec::new());
+        for i in old_n..self.n {
+            for j in 0..i {
+                if rng.next_f64() < p {
+                    self.adj[i].push(j);
+                    self.adj[j].push(i);
+                }
+            }
+            if self.adj[i].is_empty() {
+                // Force connectivity with one uniformly chosen peer.
+                let j = rng.next_below(i as u64) as usize;
+                self.adj[i].push(j);
+                self.adj[j].push(i);
+            }
+        }
+        for a in &mut self.adj {
+            a.sort_unstable();
+            a.dedup();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_renyi_connected_by_construction() {
+        let mut rng = Pcg64::new(1);
+        let g = Graph::generate(30, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 30);
+        // symmetry
+        for i in 0..30 {
+            for &j in g.neighbors(i) {
+                assert!(g.neighbors(j).contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::generate(6, &Topology::Ring { k: 1 }, &mut Pcg64::new(2));
+        assert!(g.is_connected());
+        for i in 0..6 {
+            assert_eq!(g.degree(i), 2, "node {i}");
+        }
+        assert_eq!(g.edge_count(), 6);
+    }
+
+    #[test]
+    fn complete_graph() {
+        let g = Graph::generate(5, &Topology::FullyConnected, &mut Pcg64::new(3));
+        for i in 0..5 {
+            assert_eq!(g.degree(i), 4);
+        }
+        assert_eq!(g.edge_count(), 10);
+    }
+
+    #[test]
+    fn grid_connected() {
+        let g = Graph::generate(12, &Topology::Grid, &mut Pcg64::new(4));
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 12);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        // Hand-build two components.
+        let g = Graph { n: 4, adj: vec![vec![1], vec![0], vec![3], vec![2]] };
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn grow_keeps_connected_and_symmetric() {
+        let mut rng = Pcg64::new(5);
+        let mut g = Graph::generate(10, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        g.grow(10, 0.5, &mut rng);
+        assert_eq!(g.n(), 20);
+        assert!(g.is_connected());
+        for i in 0..20 {
+            for &j in g.neighbors(i) {
+                assert!(g.neighbors(j).contains(&i), "{i}-{j} asymmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn grow_forced_link_when_p_zero() {
+        let mut rng = Pcg64::new(6);
+        let mut g = Graph::generate(5, &Topology::Ring { k: 1 }, &mut rng);
+        g.grow(3, 0.0, &mut rng);
+        assert!(g.is_connected());
+    }
+}

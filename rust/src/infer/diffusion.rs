@@ -1,0 +1,461 @@
+//! ATC diffusion over the dual problem — the paper's core algorithm
+//! (Eqs. 31/35, specialized in Algs. 2–4).
+//!
+//! Per iteration, every agent `k` runs a local **adapt** step
+//!
+//! ```text
+//! ψ_k = ν_k − μ·∇J_k(ν_k; x)
+//!     = ν_k − μ·(c_f/N · ν_k − θ_k/|N_I| · x) − (μ/δ)·W_k thr_γ(W_kᵀ ν_k)
+//! ```
+//!
+//! followed by the neighborhood **combine** `ν_k = Σ_ℓ a_{ℓk} ψ_ℓ`
+//! (optionally projected onto `V_f` for the Huber task, Eq. 35b). The
+//! engine stores the stacked iterates as `V ∈ R^{N×M}` so combine is one
+//! gemm `V ← AᵀΨ` — the same layout the L1 Pallas kernel uses.
+//!
+//! Buffers are pre-allocated once; the per-iteration hot loop performs no
+//! heap allocation (see EXPERIMENTS.md §Perf).
+
+use crate::error::{DdlError, Result};
+use crate::math::{blas, Mat};
+use crate::model::{DistributedDictionary, TaskSpec};
+use crate::ops::project::clip_linf;
+
+/// Diffusion hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DiffusionParams {
+    /// Step size μ.
+    pub mu: f32,
+    /// Iteration count.
+    pub iters: usize,
+}
+
+/// Reusable diffusion inference engine for a fixed network size.
+pub struct DiffusionEngine {
+    /// Stacked dual iterates `V` (`N × M`), row `k` = agent `k`'s ν.
+    v: Mat,
+    /// Adapt outputs `Ψ` (`N × M`).
+    psi: Mat,
+    /// Combination matrix transpose `Aᵀ` (`N × N`) — stored transposed so
+    /// combine is a plain row-major gemm.
+    at: Mat,
+    /// Scratch: per-atom thresholded correlations (`K`).
+    thr: Vec<f32>,
+    /// Informed-agent mask θ (`N`), entries 1/|N_I| or 0 (Eq. 29).
+    theta: Vec<f32>,
+    /// Fast path: `A = (1/N)·11ᵀ` (fully connected) — combine collapses
+    /// to a row average, O(N·M) instead of O(N²·M).
+    uniform_a: bool,
+    n: usize,
+    m: usize,
+}
+
+impl DiffusionEngine {
+    /// Create an engine for an `n`-agent network over data dimension `m`.
+    ///
+    /// `informed`: indices of the agents in `N_I` that observe the data
+    /// sample (paper Fig. 1); pass `None` for "all agents informed".
+    pub fn new(a: &Mat, m: usize, informed: Option<&[usize]>) -> Result<Self> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(DdlError::Shape("combination matrix must be square".into()));
+        }
+        let mut theta = vec![0.0f32; n];
+        match informed {
+            None => theta.fill(1.0 / n as f32),
+            Some(idx) => {
+                if idx.is_empty() {
+                    return Err(DdlError::Config("at least one informed agent required".into()));
+                }
+                let w = 1.0 / idx.len() as f32;
+                for &k in idx {
+                    if k >= n {
+                        return Err(DdlError::Config(format!("informed agent {k} out of range")));
+                    }
+                    theta[k] = w;
+                }
+            }
+        }
+        Ok(DiffusionEngine {
+            v: Mat::zeros(n, m),
+            psi: Mat::zeros(n, m),
+            uniform_a: is_uniform(a),
+            at: a.transpose(),
+            thr: Vec::new(),
+            theta,
+            n,
+            m,
+        })
+    }
+
+    /// Replace the combination matrix (topology change between time-steps).
+    pub fn set_combination(&mut self, a: &Mat) -> Result<()> {
+        if a.rows() != self.n || a.cols() != self.n {
+            return Err(DdlError::Shape("combination matrix shape mismatch".into()));
+        }
+        self.uniform_a = is_uniform(a);
+        self.at = a.transpose();
+        Ok(())
+    }
+
+    /// Reset all dual iterates to zero (cold start for a new sample).
+    pub fn reset(&mut self) {
+        self.v.as_mut_slice().fill(0.0);
+    }
+
+    /// Warm start: every *informed* agent initializes its dual iterate at
+    /// `scale · x` locally (no communication — the agent already holds
+    /// `x`). With `scale = 1/c_f` this jumps straight to the `y = 0`
+    /// stationary point `ν = f'(x)`'s linear regime, skipping the slow
+    /// O(N/(μ·c_f)) magnitude build-up that dominates cold-start Huber
+    /// runs. Uninformed agents stay at zero and catch up via combine.
+    pub fn reset_warm(&mut self, x: &[f32], scale: f32) {
+        debug_assert_eq!(x.len(), self.m);
+        for k in 0..self.n {
+            let informed = self.theta[k] > 0.0;
+            let row = self.v.row_mut(k);
+            if informed {
+                for (r, &xi) in row.iter_mut().zip(x) {
+                    *r = scale * xi;
+                }
+            } else {
+                row.fill(0.0);
+            }
+        }
+    }
+
+    /// Run `params.iters` diffusion iterations for data sample `x`.
+    ///
+    /// Returns after convergence; read results through [`Self::nu`],
+    /// [`Self::consensus_nu`], or [`Self::recover_y`].
+    pub fn run(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+        params: DiffusionParams,
+    ) -> Result<()> {
+        if x.len() != self.m {
+            return Err(DdlError::Shape(format!(
+                "sample length {} != engine dimension {}",
+                x.len(),
+                self.m
+            )));
+        }
+        if dict.agents() != self.n {
+            return Err(DdlError::Shape(format!(
+                "dictionary has {} agents, engine {}",
+                dict.agents(),
+                self.n
+            )));
+        }
+        if dict.m() != self.m {
+            return Err(DdlError::Shape("dictionary row dimension mismatch".into()));
+        }
+        self.thr.resize(dict.k(), 0.0);
+        let cf_over_n = task.conj_grad_scale() / self.n as f32;
+        let inv_delta = 1.0 / task.delta();
+        let mu = params.mu;
+        let clip = task.dual_clip();
+
+        for _ in 0..params.iters {
+            // --- adapt (Eq. 31a): ψ_k = ν_k − μ ∇J_k(ν_k) ---
+            for k in 0..self.n {
+                let nu = self.v.row(k);
+                // s = W_kᵀ ν_k, thresholded.
+                dict.block_correlations(k, nu, &mut self.thr);
+                let (start, len) = dict.block(k);
+                for q in start..start + len {
+                    self.thr[q] = task.threshold(self.thr[q]);
+                }
+                // ψ = ν − μ(c_f/N · ν − θ_k x)
+                let theta_k = self.theta[k];
+                let psi = self.psi.row_mut(k);
+                let nu = self.v.row(k);
+                for i in 0..self.m {
+                    psi[i] = nu[i] - mu * (cf_over_n * nu[i] - theta_k * x[i]);
+                }
+                // ψ -= (μ/δ) Σ_q thr(s_q) w_q  — only agent k's atoms.
+                for q in start..start + len {
+                    self.thr[q] *= -mu * inv_delta;
+                }
+                dict.block_accumulate(k, &self.thr, self.psi.row_mut(k));
+            }
+            // --- combine (Eq. 31b): V ← Aᵀ Ψ ---
+            if self.uniform_a {
+                // Fully-connected fast path: every row of AᵀΨ equals the
+                // column mean of Ψ — O(N·M) instead of O(N²·M).
+                let inv_n = 1.0 / self.n as f32;
+                let (v, psi) = (self.v.as_mut_slice(), self.psi.as_slice());
+                v[..self.m].fill(0.0);
+                for k in 0..self.n {
+                    let row = &psi[k * self.m..(k + 1) * self.m];
+                    for i in 0..self.m {
+                        v[i] += row[i];
+                    }
+                }
+                for i in 0..self.m {
+                    v[i] *= inv_n;
+                }
+                let (first, rest) = v.split_at_mut(self.m);
+                for k in 1..self.n {
+                    rest[(k - 1) * self.m..k * self.m].copy_from_slice(first);
+                }
+            } else {
+                blas::gemm(
+                    self.n,
+                    self.m,
+                    self.n,
+                    1.0,
+                    self.at.as_slice(),
+                    self.psi.as_slice(),
+                    0.0,
+                    self.v.as_mut_slice(),
+                );
+            }
+            // --- projection onto V_f (Eq. 35b), Huber only ---
+            if let Some(bound) = clip {
+                clip_linf(self.v.as_mut_slice(), bound);
+            }
+        }
+        Ok(())
+    }
+
+    /// Agent `k`'s current dual estimate `ν_{k,i}`.
+    pub fn nu(&self, k: usize) -> &[f32] {
+        self.v.row(k)
+    }
+
+    /// Network-average dual estimate (diagnostics; a real deployment reads
+    /// any single agent after convergence).
+    pub fn consensus_nu(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m];
+        for k in 0..self.n {
+            crate::math::vector::axpy(1.0, self.v.row(k), &mut out);
+        }
+        crate::math::vector::scale(1.0 / self.n as f32, &mut out);
+        out
+    }
+
+    /// Maximum pairwise disagreement `max_k ‖ν_k − ν̄‖` — a consensus
+    /// diagnostic.
+    pub fn disagreement(&self) -> f32 {
+        let mean = self.consensus_nu();
+        (0..self.n)
+            .map(|k| crate::math::vector::dist_sq(self.v.row(k), &mean).sqrt())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Primal recovery (Eq. 37 / Table II): `y_q = thr_γ(w_qᵀ ν_k)/δ` for
+    /// each agent's own atoms, using each agent's **local** dual iterate —
+    /// no extra communication, exactly as in Algs. 2–4.
+    pub fn recover_y(&self, dict: &DistributedDictionary, task: &TaskSpec) -> Vec<f32> {
+        let mut y = vec![0.0f32; dict.k()];
+        let inv_delta = 1.0 / task.delta();
+        let mut s = vec![0.0f32; dict.k()];
+        for k in 0..self.n {
+            dict.block_correlations(k, self.v.row(k), &mut s);
+            let (start, len) = dict.block(k);
+            for q in start..start + len {
+                y[q] = task.threshold(s[q]) * inv_delta;
+            }
+        }
+        y
+    }
+
+    /// Whether the fully-connected fast path is active.
+    pub fn is_fully_connected(&self) -> bool {
+        self.uniform_a
+    }
+
+    /// Number of agents.
+    pub fn agents(&self) -> usize {
+        self.n
+    }
+
+    /// Data dimension.
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+}
+
+/// Detect `A = (1/N)·11ᵀ` (all entries equal and doubly stochastic).
+fn is_uniform(a: &Mat) -> bool {
+    let n = a.rows();
+    if n == 0 || a.cols() != n {
+        return false;
+    }
+    let expect = 1.0 / n as f32;
+    a.as_slice().iter().all(|&v| (v - expect).abs() <= 1e-7 * (1.0 + expect))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{metropolis_weights, uniform_weights, Graph, Topology};
+    use crate::model::AtomConstraint;
+    use crate::rng::Pcg64;
+
+    fn setup(
+        n: usize,
+        m: usize,
+        seed: u64,
+    ) -> (DistributedDictionary, Mat, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x: Vec<f32> = rng.normal_vec(m);
+        (dict, a, x)
+    }
+
+    /// Consensus disagreement is O(μ): it must shrink proportionally as μ
+    /// shrinks (the diffusion fixed-point property from [17]).
+    #[test]
+    fn iterates_converge_to_consensus() {
+        let (dict, a, x) = setup(8, 12, 1);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 12, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.2, iters: 3000 }).unwrap();
+        let d_big = eng.disagreement();
+        eng.reset();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.02, iters: 30_000 }).unwrap();
+        let d_small = eng.disagreement();
+        assert!(d_small < 0.05, "disagreement at small μ: {d_small}");
+        assert!(
+            d_small < 0.25 * d_big,
+            "disagreement must scale with μ: {d_big} → {d_small}"
+        );
+    }
+
+    /// Fixed point must satisfy the dual optimality condition
+    /// Σ_k ∇J_k(ν°) = 0, i.e. ν° − x + (1/δ) W thr(Wᵀν°) = 0 (sq-Euclid).
+    #[test]
+    fn fixed_point_satisfies_stationarity() {
+        let (dict, a, x) = setup(6, 10, 2);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.02, iters: 30_000 }).unwrap();
+        let nu = eng.consensus_nu();
+        // grad = ν − x + (1/δ) Σ_q thr(w_qᵀν) w_q
+        let s = dict.mat().matvec_t(&nu).unwrap();
+        let coeff: Vec<f32> = s.iter().map(|&v| task.threshold(v) / task.delta()).collect();
+        let wy = dict.mat().matvec(&coeff).unwrap();
+        let mut grad = vec![0.0f32; 10];
+        for i in 0..10 {
+            grad[i] = nu[i] - x[i] + wy[i];
+        }
+        // The fixed point sits O(μ) from the optimum (constant step size).
+        let gn = crate::math::vector::norm2(&grad);
+        assert!(gn < 5e-2, "stationarity residual {gn}");
+    }
+
+    /// Eq. 53: at the optimum ν° = x − W y° for the squared-ℓ2 residual.
+    #[test]
+    fn nu_equals_residual_at_optimum() {
+        let (dict, a, x) = setup(6, 10, 3);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.02, iters: 30_000 }).unwrap();
+        let nu = eng.consensus_nu();
+        let y = eng.recover_y(&dict, &task);
+        let wy = dict.mat().matvec(&y).unwrap();
+        for i in 0..10 {
+            assert!(
+                (nu[i] - (x[i] - wy[i])).abs() < 3e-2,
+                "i={i}: ν {} vs residual {}",
+                nu[i],
+                x[i] - wy[i]
+            );
+        }
+    }
+
+    /// Single informed agent reaches the same solution as all-informed
+    /// (the paper's headline distributed-data property).
+    #[test]
+    fn single_informed_agent_matches_all_informed() {
+        let (dict, a, x) = setup(8, 12, 4);
+        let task = TaskSpec::SparseCoding { gamma: 0.3, delta: 0.5 };
+        // Both configurations share the same optimum; their O(μ) biases
+        // differ, so compare at a small step size.
+        let params = DiffusionParams { mu: 0.01, iters: 60_000 };
+        let mut all = DiffusionEngine::new(&a, 12, None).unwrap();
+        all.run(&dict, &task, &x, params).unwrap();
+        let mut one = DiffusionEngine::new(&a, 12, Some(&[0])).unwrap();
+        one.run(&dict, &task, &x, params).unwrap();
+        let na = all.consensus_nu();
+        let no = one.consensus_nu();
+        crate::testutil::assert_close(&no, &na, 2e-2, 5e-2);
+    }
+
+    #[test]
+    fn huber_iterates_stay_in_box() {
+        let (dict, a, mut x) = setup(6, 10, 5);
+        crate::math::vector::scale(5.0, &mut x); // make the box active
+        let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
+        let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.3, iters: 500 }).unwrap();
+        for k in 0..6 {
+            assert!(crate::math::vector::norm_inf(eng.nu(k)) <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn nmf_recovered_y_nonnegative() {
+        let (dict, a, x) = setup(6, 10, 6);
+        let task = TaskSpec::Nmf { gamma: 0.05, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.3, iters: 1000 }).unwrap();
+        let y = eng.recover_y(&dict, &task);
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn fully_connected_consensus_after_one_combine() {
+        let (dict, _, x) = setup(5, 8, 7);
+        let a = uniform_weights(5);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 8, None).unwrap();
+        assert!(eng.is_fully_connected());
+        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.3, iters: 1 }).unwrap();
+        // After combine with A = 11ᵀ/N every row is identical.
+        assert!(eng.disagreement() < 1e-6);
+    }
+
+    /// The FC fast path must match the generic gemm combine bit-for-bit
+    /// in structure (same math, different order — allow f32 roundoff).
+    #[test]
+    fn fc_fast_path_matches_gemm_combine() {
+        let (dict, _, x) = setup(6, 10, 9);
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.4 };
+        let params = DiffusionParams { mu: 0.3, iters: 37 };
+        let a = uniform_weights(6);
+        let mut fast = DiffusionEngine::new(&a, 10, None).unwrap();
+        assert!(fast.is_fully_connected());
+        fast.run(&dict, &task, &x, params).unwrap();
+        // Force the slow path by perturbing A negligibly below the doubly-
+        // stochastic tolerance but above the uniform-detection threshold.
+        let mut a2 = a.clone();
+        a2.set(0, 0, a2.get(0, 0) + 3e-6);
+        a2.set(0, 1, a2.get(0, 1) - 3e-6);
+        let mut slow = DiffusionEngine::new(&a2, 10, None).unwrap();
+        assert!(!slow.is_fully_connected());
+        slow.run(&dict, &task, &x, params).unwrap();
+        for k in 0..6 {
+            crate::testutil::assert_close(fast.nu(k), slow.nu(k), 2e-4, 2e-3);
+        }
+    }
+
+    #[test]
+    fn shape_errors_detected() {
+        let (dict, a, x) = setup(5, 8, 8);
+        let mut eng = DiffusionEngine::new(&a, 8, None).unwrap();
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let bad_x = vec![0.0; 7];
+        assert!(eng.run(&dict, &task, &bad_x, DiffusionParams { mu: 0.1, iters: 1 }).is_err());
+        assert!(DiffusionEngine::new(&a, 8, Some(&[9])).is_err());
+        assert!(DiffusionEngine::new(&a, 8, Some(&[])).is_err());
+        let _ = x;
+    }
+}

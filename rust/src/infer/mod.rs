@@ -1,0 +1,18 @@
+//! Inference engines for the dual sparse-coding problem (paper §III).
+//!
+//! * [`diffusion`] — the paper's contribution: ATC diffusion over the dual
+//!   (Algs. 1–4), fully distributed, with projected combine for
+//!   constrained dual domains.
+//! * [`exact`] — FISTA on the dual to machine precision; the CVX
+//!   replacement that supplies ground truth `(ν°, y°)` for Fig. 4 and for
+//!   the step-size tuning procedure of §IV-A.
+//! * [`cost`] — dual-cost evaluation and the scalar cost-consensus
+//!   diffusion (Eq. 65) used for distributed novelty scoring.
+
+pub mod cost;
+pub mod diffusion;
+pub mod exact;
+
+pub use cost::{dual_cost_sum, local_cost, scalar_consensus};
+pub use diffusion::{DiffusionEngine, DiffusionParams};
+pub use exact::{exact_dual, ExactSolution};

@@ -1,0 +1,12 @@
+//! Dictionary learning: the fully-local update (Eq. 51), minibatch
+//! averaging (paper footnote 4), step-size schedules, and the online
+//! trainer that alternates distributed inference with local updates
+//! (Alg. 1).
+
+pub mod schedule;
+pub mod trainer;
+pub mod update;
+
+pub use schedule::StepSchedule;
+pub use trainer::{OnlineTrainer, TrainerOptions, TrainStats};
+pub use update::dictionary_update;

@@ -1,0 +1,52 @@
+//! Dictionary step-size schedules.
+
+/// Step-size schedule μ_w(·).
+#[derive(Clone, Copy, Debug)]
+pub enum StepSchedule {
+    /// Constant μ_w (image denoising, §IV-B: μ_w = 5e-5).
+    Constant(f32),
+    /// `μ_w(s) = num / s` over time-steps (novelty, §IV-C: 10/s).
+    InverseTime { num: f32 },
+    /// `μ_w(t) = num / (offset + t)` over samples.
+    InverseSample { num: f32, offset: f32 },
+}
+
+impl StepSchedule {
+    /// Step size at 1-based step `s`.
+    pub fn at(&self, s: usize) -> f32 {
+        let s = s.max(1) as f32;
+        match *self {
+            StepSchedule::Constant(v) => v,
+            StepSchedule::InverseTime { num } => num / s,
+            StepSchedule::InverseSample { num, offset } => num / (offset + s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = StepSchedule::Constant(5e-5);
+        assert_eq!(s.at(1), 5e-5);
+        assert_eq!(s.at(100), 5e-5);
+    }
+
+    #[test]
+    fn inverse_time_decays() {
+        let s = StepSchedule::InverseTime { num: 10.0 };
+        assert_eq!(s.at(1), 10.0);
+        assert_eq!(s.at(2), 5.0);
+        assert_eq!(s.at(5), 2.0);
+        // Guard against s = 0.
+        assert_eq!(s.at(0), 10.0);
+    }
+
+    #[test]
+    fn inverse_sample_offset() {
+        let s = StepSchedule::InverseSample { num: 1.0, offset: 9.0 };
+        assert_eq!(s.at(1), 0.1);
+    }
+}

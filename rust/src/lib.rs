@@ -1,0 +1,49 @@
+//! # ddl — Dictionary Learning over Distributed Models
+//!
+//! A production-quality reproduction of:
+//!
+//! > J. Chen, Z. J. Towfic, and A. H. Sayed, "Dictionary Learning over
+//! > Distributed Models," IEEE Transactions on Signal Processing, 2014.
+//! > DOI: 10.1109/TSP.2014.2385045
+//!
+//! The library implements *model-distributed* dictionary learning: a network
+//! of `N` agents, each in charge of a block of dictionary atoms, cooperates
+//! to solve the sparse-coding (inference) problem through its **dual**, which
+//! decomposes into a sum-of-costs that diffusion strategies minimize with
+//! only neighborhood communication of the dual variable `nu`. The optimal
+//! dual variable then drives fully local dictionary updates (Eq. 51 in the
+//! paper) — no agent ever shares its atoms or coefficients.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: network simulation, diffusion
+//!   orchestration, trainers, experiment drivers, metrics, baselines.
+//! * **L2 (python/compile/model.py)** — JAX inference/update graphs, AOT
+//!   lowered to HLO text, executed from rust through PJRT ([`runtime`]).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   per-agent diffusion step (adapt + combine), numerically checked
+//!   against a pure-jnp oracle.
+//!
+//! The native rust implementation in [`infer`] mirrors the L1/L2 compute
+//! exactly and is cross-validated against the HLO path in integration tests.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod graph;
+pub mod infer;
+pub mod learn;
+pub mod math;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod ops;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+
+pub use error::{DdlError, Result};

@@ -1,0 +1,187 @@
+//! `ddl` — command-line launcher for the distributed dictionary learning
+//! framework.
+//!
+//! Subcommands:
+//! * `info`      — artifact registry + PJRT platform + topology diagnostics
+//! * `quickstart`— tiny end-to-end run over the HLO path
+//! * `denoise`   — Fig. 5 image-denoising experiment
+//! * `novelty`   — Fig. 6/7 novel-document-detection experiment
+//! * `tune`      — §IV-A step-size tuning curves (Fig. 4 procedure)
+//!
+//! Options can come from a TOML config (`--config path`) with CLI
+//! overrides; see `configs/*.toml`.
+
+use ddl::cli::Args;
+use ddl::config::experiment::{DenoiseConfig, NoveltyConfig};
+use ddl::config::TomlDoc;
+use ddl::coordinator::{run_denoise, run_novelty, NoveltyAlgo};
+use std::path::Path;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("quickstart") => cmd_quickstart(&args),
+        Some("denoise") => cmd_denoise(&args),
+        Some("novelty") => cmd_novelty(&args),
+        Some("tune") => cmd_tune(&args),
+        _ => {
+            println!("{HELP}");
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+ddl — Dictionary Learning over Distributed Models (Chen, Towfic, Sayed; IEEE TSP 2014)
+
+USAGE: ddl <command> [options]
+
+COMMANDS:
+  info        show artifacts, PJRT platform, topology diagnostics
+  quickstart  tiny end-to-end run over the AOT/PJRT path
+  denoise     image-denoising experiment (Fig. 5)     [--config f] [--informed k]
+              [--agents n] [--train-samples n] [--baseline] [--per-agent]
+  novelty     novel-document detection (Figs. 6-7)    [--config f] [--huber]
+              [--algos diffusion,diffusion_fc,mairal,admm] [--steps n]
+  tune        step-size tuning SNR curves (Fig. 4)    [--mu x] [--iters n]
+
+Common: --seed n, --artifacts dir (default: artifacts)";
+
+fn run(code: impl FnOnce() -> ddl::Result<()>) -> i32 {
+    match code() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = args.str_or("artifacts", "artifacts").to_string();
+    run(move || {
+        match ddl::runtime::Runtime::new(Path::new(&dir)) {
+            Ok(rt) => {
+                println!("PJRT platform: {}", rt.platform());
+                println!("artifacts:");
+                for name in rt.names() {
+                    println!("  {name}");
+                }
+            }
+            Err(e) => println!("runtime unavailable: {e}"),
+        }
+        // Topology diagnostics at the denoise default scale.
+        let mut rng = ddl::rng::Pcg64::new(1);
+        let g = ddl::graph::Graph::generate(
+            64,
+            &ddl::graph::Topology::ErdosRenyi { p: 0.5 },
+            &mut rng,
+        );
+        let a = ddl::graph::metropolis_weights(&g);
+        println!(
+            "G(64, 0.5): edges={}, algebraic connectivity={:.3}, spectral gap={:.3}",
+            g.edge_count(),
+            ddl::graph::laplacian::algebraic_connectivity(&g),
+            ddl::graph::laplacian::spectral_gap(&a),
+        );
+        Ok(())
+    })
+}
+
+fn cmd_quickstart(args: &Args) -> i32 {
+    let dir = args.str_or("artifacts", "artifacts").to_string();
+    run(move || {
+        ddl::coordinator::quickstart::run_quickstart(Path::new(&dir), &mut |s| println!("{s}"))
+    })
+}
+
+fn cmd_denoise(args: &Args) -> i32 {
+    run(|| {
+        let doc = match args.get("config") {
+            Some(p) => TomlDoc::load(Path::new(p))?,
+            None => TomlDoc::default(),
+        };
+        let mut cfg = DenoiseConfig::from_toml(&doc);
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.agents = args.usize_or("agents", cfg.agents)?;
+        cfg.train_samples = args.usize_or("train-samples", cfg.train_samples)?;
+        if let Some(k) = args.get("informed") {
+            cfg.informed = Some(
+                k.parse()
+                    .map_err(|_| ddl::DdlError::Config(format!("--informed: bad value '{k}'")))?,
+            );
+        }
+        let report = run_denoise(&cfg, args.flag("baseline"), args.flag("per-agent"), |s| {
+            println!("{s}")
+        })?;
+        println!("== denoise results ==");
+        println!("corrupted:   {:.2} dB", report.psnr_noisy);
+        println!("distributed: {:.2} dB", report.psnr_distributed);
+        if let Some(p) = report.psnr_centralized {
+            println!("centralized: {p:.2} dB");
+        }
+        if !report.per_agent_psnr.is_empty() {
+            let min = report.per_agent_psnr.iter().cloned().fold(f64::MAX, f64::min);
+            let max = report.per_agent_psnr.iter().cloned().fold(f64::MIN, f64::max);
+            println!("per-agent:   {min:.2}–{max:.2} dB across {} agents", report.per_agent_psnr.len());
+        }
+        Ok(())
+    })
+}
+
+fn cmd_novelty(args: &Args) -> i32 {
+    run(|| {
+        let doc = match args.get("config") {
+            Some(p) => TomlDoc::load(Path::new(p))?,
+            None => TomlDoc::default(),
+        };
+        let base = if args.flag("huber") {
+            NoveltyConfig::huber()
+        } else {
+            NoveltyConfig::squared_l2()
+        };
+        let mut cfg = NoveltyConfig::from_toml(&doc, base);
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.time_steps = args.usize_or("steps", cfg.time_steps)?;
+        let algos: Vec<NoveltyAlgo> = args
+            .str_or("algos", "diffusion,diffusion_fc")
+            .split(',')
+            .map(|s| match s.trim() {
+                "diffusion" => Ok(NoveltyAlgo::Diffusion),
+                "diffusion_fc" => Ok(NoveltyAlgo::DiffusionFullyConnected),
+                "mairal" => Ok(NoveltyAlgo::CentralizedMairal),
+                "admm" => Ok(NoveltyAlgo::CentralizedAdmm),
+                other => Err(ddl::DdlError::Config(format!("unknown algo '{other}'"))),
+            })
+            .collect::<ddl::Result<_>>()?;
+        let report = run_novelty(&cfg, &algos, |s| println!("{s}"))?;
+        println!("== AUC table ==");
+        println!("{:<6} {:<14} {:>6}", "step", "algo", "auc");
+        for (step, algo, auc) in report.auc_rows() {
+            println!("{step:<6} {algo:<14} {auc:>6.3}");
+        }
+        Ok(())
+    })
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    run(|| {
+        let mu = args.f32_or("mu", 0.5)?;
+        let iters = args.usize_or("iters", 1000)?;
+        let seed = args.u64_or("seed", 7)?;
+        let curves = ddl::coordinator::tuning::tuning_curves(mu, iters, seed)?;
+        println!("iter, y_snr_db, nu_snr_db");
+        for p in curves.iter().step_by((iters / 25).max(1)) {
+            println!("{}, {:.2}, {:.2}", p.iter, p.y_snr_db, p.nu_snr_db);
+        }
+        Ok(())
+    })
+}

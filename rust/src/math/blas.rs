@@ -1,0 +1,309 @@
+//! Allocation-free BLAS-like kernels on raw slices.
+//!
+//! `gemm` is the perf-critical kernel: the diffusion *combine* step
+//! `V ← AᵀΨ` dominates the inference flop count (`2·N²·M` per iteration).
+//! The implementation is a cache-blocked, register-tiled microkernel
+//! (4x8 accumulator tile, unrolled k-loop) that the compiler
+//! auto-vectorizes well at `opt-level=3`. See EXPERIMENTS.md §Perf for the
+//! measured roofline.
+
+/// `C = alpha * A*B + beta * C` where `A` is `m x k`, `B` is `k x n`,
+/// `C` is `m x n`, all row-major.
+pub fn gemm(m: usize, n: usize, k: usize, alpha: f32, a: &[f32], b: &[f32], beta: f32, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+
+    // Cache blocking parameters (L1-friendly for f32 on a typical x86 core).
+    const MC: usize = 64;
+    const KC: usize = 256;
+    const NC: usize = 512;
+
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                gemm_block(ic, jc, pc, mb, nb, kb, n, k, alpha, a, b, c);
+            }
+        }
+    }
+}
+
+/// Inner blocked panel: C[ic..ic+mb, jc..jc+nb] += alpha * A_panel * B_panel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn gemm_block(
+    ic: usize,
+    jc: usize,
+    pc: usize,
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    const MR: usize = 4; // rows per register tile
+    const NR: usize = 8; // cols per register tile
+
+    let mut i = 0;
+    while i < mb {
+        let mr = MR.min(mb - i);
+        let mut j = 0;
+        while j < nb {
+            let nr = NR.min(nb - j);
+            if mr == MR && nr == NR {
+                micro_4x8(ic + i, jc + j, pc, kb, n, k, alpha, a, b, c);
+            } else {
+                // Edge tile: simple loop.
+                for ii in 0..mr {
+                    let arow = (ic + i + ii) * k + pc;
+                    let crow = (ic + i + ii) * n + jc + j;
+                    for jj in 0..nr {
+                        let mut acc = 0.0f32;
+                        for p in 0..kb {
+                            acc += a[arow + p] * b[(pc + p) * n + jc + j + jj];
+                        }
+                        c[crow + jj] += alpha * acc;
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// 4x8 register-tiled microkernel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_4x8(
+    row: usize,
+    col: usize,
+    pc: usize,
+    kb: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    let mut acc = [[0.0f32; 8]; 4];
+    let a0 = row * k + pc;
+    let a1 = (row + 1) * k + pc;
+    let a2 = (row + 2) * k + pc;
+    let a3 = (row + 3) * k + pc;
+    for p in 0..kb {
+        let brow = (pc + p) * n + col;
+        let bvals = &b[brow..brow + 8];
+        let av = [a[a0 + p], a[a1 + p], a[a2 + p], a[a3 + p]];
+        for (ai, accrow) in av.iter().zip(acc.iter_mut()) {
+            for (jj, accv) in accrow.iter_mut().enumerate() {
+                *accv += ai * bvals[jj];
+            }
+        }
+    }
+    for (ii, accrow) in acc.iter().enumerate() {
+        let crow = (row + ii) * n + col;
+        let cv = &mut c[crow..crow + 8];
+        for (jj, &v) in accrow.iter().enumerate() {
+            cv[jj] += alpha * v;
+        }
+    }
+}
+
+/// `y = A*x` for row-major `A (m x n)`; `y` is overwritten.
+pub fn gemv(m: usize, n: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for (r, yv) in y.iter_mut().enumerate() {
+        *yv = dot(&a[r * n..(r + 1) * n], x);
+    }
+}
+
+/// `y = Aᵀ*x` for row-major `A (m x n)`; `y` (len n) is overwritten.
+pub fn gemv_t(m: usize, n: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for r in 0..m {
+        let xr = x[r];
+        if xr == 0.0 {
+            continue;
+        }
+        let row = &a[r * n..(r + 1) * n];
+        for (yv, &av) in y.iter_mut().zip(row) {
+            *yv += xr * av;
+        }
+    }
+}
+
+/// Dot product with 4-way unrolled accumulation (helps the vectorizer and
+/// improves numerical behaviour vs a single serial accumulator).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Rank-1 update `A += alpha * x yᵀ` for row-major `A (m x n)`.
+pub fn ger(m: usize, n: usize, alpha: f32, x: &[f32], y: &[f32], a: &mut [f32]) {
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(a.len(), m * n);
+    for r in 0..m {
+        let ax = alpha * x[r];
+        if ax == 0.0 {
+            continue;
+        }
+        let row = &mut a[r * n..(r + 1) * n];
+        for (av, &yv) in row.iter_mut().zip(y) {
+            *av += ax * yv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference triple-loop gemm for validation.
+    fn gemm_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn pseudo(seed: u64, n: usize) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f32 / (1u64 << 53) as f32) * 2.0 - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gemm_matches_reference_various_shapes() {
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (4, 8, 16), (17, 23, 9), (64, 64, 64), (65, 70, 33)] {
+            let a = pseudo(m as u64, m * k);
+            let b = pseudo(n as u64 + 100, k * n);
+            let mut c = vec![0.0; m * n];
+            gemm(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            let cref = gemm_ref(m, n, k, &a, &b);
+            for (x, y) in c.iter().zip(&cref) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{m}x{n}x{k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let (m, n, k) = (5, 6, 4);
+        let a = pseudo(1, m * k);
+        let b = pseudo(2, k * n);
+        let c0 = pseudo(3, m * n);
+        let mut c = c0.clone();
+        gemm(m, n, k, 2.0, &a, &b, 0.5, &mut c);
+        let cref = gemm_ref(m, n, k, &a, &b);
+        for i in 0..m * n {
+            let expect = 2.0 * cref[i] + 0.5 * c0[i];
+            assert!((c[i] - expect).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let (m, n) = (13, 29);
+        let a = pseudo(7, m * n);
+        let x = pseudo(8, n);
+        let mut y = vec![0.0; m];
+        gemv(m, n, &a, &x, &mut y);
+        let yref = gemm_ref(m, 1, n, &a, &x);
+        for i in 0..m {
+            assert!((y[i] - yref[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_transpose() {
+        let (m, n) = (11, 17);
+        let a = pseudo(9, m * n);
+        let x = pseudo(10, m);
+        let mut y = vec![0.0; n];
+        gemv_t(m, n, &a, &x, &mut y);
+        // transpose A and gemv
+        let mut at = vec![0.0; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                at[c * m + r] = a[r * n + c];
+            }
+        }
+        let mut yref = vec![0.0; n];
+        gemv(n, m, &at, &x, &mut yref);
+        for i in 0..n {
+            assert!((y[i] - yref[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        let a = pseudo(11, 103);
+        assert!((dot(&a, &a) - a.iter().map(|v| v * v).sum::<f32>()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let (m, n) = (3, 4);
+        let mut a = vec![0.0; m * n];
+        ger(m, n, 2.0, &[1., 2., 3.], &[1., 0., 1., 0.], &mut a);
+        assert_eq!(a[0], 2.0); // 2*1*1
+        assert_eq!(a[2], 2.0);
+        assert_eq!(a[1 * n + 0], 4.0);
+        assert_eq!(a[2 * n + 2], 6.0);
+        assert_eq!(a[1], 0.0);
+    }
+}

@@ -1,0 +1,383 @@
+//! Row-major dense `f32` matrix.
+
+use crate::error::{DdlError, Result};
+use std::fmt;
+
+/// Row-major dense matrix of `f32`.
+///
+/// The type is deliberately small: it owns a `Vec<f32>` and exposes
+/// shape-checked views. Hot-path kernels live in [`crate::math::blas`]
+/// and operate on raw slices to keep them allocation-free.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix of shape `rows x cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(DdlError::Shape(format!(
+                "from_vec: {}x{} needs {} elements, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Build from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw row-major data.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Borrow row `r` mutably.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Copy column `c` into a fresh vector.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        debug_assert!(c < self.cols);
+        (0..self.rows).map(|r| self.data[r * self.cols + c]).collect()
+    }
+
+    /// Write `v` into column `c`.
+    pub fn set_col(&mut self, c: usize, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.rows);
+        for (r, &x) in v.iter().enumerate() {
+            self.data[r * self.cols + c] = x;
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on larger matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * rhs` (allocates; see `blas::gemm` for the
+    /// in-place kernel).
+    pub fn matmul(&self, rhs: &Mat) -> Result<Mat> {
+        if self.cols != rhs.rows {
+            return Err(DdlError::Shape(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, rhs.rows, rhs.cols
+            )));
+        }
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        crate::math::blas::gemm(
+            self.rows,
+            rhs.cols,
+            self.cols,
+            1.0,
+            &self.data,
+            &rhs.data,
+            0.0,
+            &mut out.data,
+        );
+        Ok(out)
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if self.cols != x.len() {
+            return Err(DdlError::Shape(format!(
+                "matvec: {}x{} * len {}",
+                self.rows,
+                self.cols,
+                x.len()
+            )));
+        }
+        let mut y = vec![0.0; self.rows];
+        crate::math::blas::gemv(self.rows, self.cols, &self.data, x, &mut y);
+        Ok(y)
+    }
+
+    /// `selfᵀ * x` without materializing the transpose.
+    pub fn matvec_t(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if self.rows != x.len() {
+            return Err(DdlError::Shape(format!(
+                "matvec_t: ({}x{})ᵀ * len {}",
+                self.rows,
+                self.cols,
+                x.len()
+            )));
+        }
+        let mut y = vec![0.0; self.cols];
+        crate::math::blas::gemv_t(self.rows, self.cols, &self.data, x, &mut y);
+        Ok(y)
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(DdlError::Shape("axpy: shape mismatch".into()));
+        }
+        crate::math::vector::axpy(alpha, &other.data, &mut self.data);
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f32 {
+        crate::math::vector::norm2(&self.data)
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Check shapes and subtract: `self - other`.
+    pub fn sub(&self, other: &Mat) -> Result<Mat> {
+        if self.shape() != other.shape() {
+            return Err(DdlError::Shape("sub: shape mismatch".into()));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a - b)
+            .collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Max relative elementwise difference against `other`, with absolute
+    /// floor `eps` in the denominator (used by cross-validation tests).
+    pub fn rel_diff(&self, other: &Mat, eps: f32) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs() / (a.abs().max(b.abs()).max(eps)))
+            .fold(0.0f32, f32::max)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for r in 0..show_r {
+            write!(f, "  ")?;
+            for c in 0..show_c {
+                write!(f, "{:10.4} ", self.get(r, c))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_eye() {
+        let z = Mat::zeros(3, 4);
+        assert_eq!(z.shape(), (3, 4));
+        assert!(z.as_slice().iter().all(|&v| v == 0.0));
+        let i = Mat::eye(3);
+        assert_eq!(i.get(0, 0), 1.0);
+        assert_eq!(i.get(0, 1), 0.0);
+        assert_eq!(i.sum(), 3.0);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Mat::from_fn(7, 13, |r, c| (r * 13 + c) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (13, 7));
+        assert_eq!(t.get(3, 5), m.get(5, 3));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = Mat::from_fn(4, 4, |r, c| (r + 2 * c) as f32);
+        let i = Mat::eye(4);
+        assert_eq!(m.matmul(&i).unwrap(), m);
+        assert_eq!(i.matmul(&m).unwrap(), m);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn matvec_and_transposed() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(a.matvec(&[1., 1., 1.]).unwrap(), vec![6., 15.]);
+        assert_eq!(a.matvec_t(&[1., 1.]).unwrap(), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn col_ops() {
+        let mut m = Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(m.col(1), vec![1., 3., 5.]);
+        m.set_col(0, &[9., 9., 9.]);
+        assert_eq!(m.col(0), vec![9., 9., 9.]);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Mat::full(2, 2, 1.0);
+        let b = Mat::full(2, 2, 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.as_slice(), &[2.0, 2.0, 2.0, 2.0]);
+        assert!((a.frob_norm() - 4.0).abs() < 1e-6);
+        assert_eq!(a.max_abs(), 2.0);
+    }
+
+    #[test]
+    fn rel_diff_detects_mismatch() {
+        let a = Mat::full(2, 2, 1.0);
+        let mut b = a.clone();
+        assert_eq!(a.rel_diff(&b, 1e-6), 0.0);
+        b.set(0, 0, 1.1);
+        assert!(a.rel_diff(&b, 1e-6) > 0.05);
+    }
+}

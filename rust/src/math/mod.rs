@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate.
+//!
+//! The build environment is fully offline (no `ndarray`/`nalgebra`), so the
+//! library ships its own small, fast, row-major `f32` matrix type plus the
+//! kernels the learning stack needs: a blocked gemm microkernel, gemv,
+//! vector ops, and a Cholesky solver (used by the Mairal baseline).
+
+pub mod blas;
+pub mod matrix;
+pub mod solve;
+pub mod stats;
+pub mod vector;
+
+pub use matrix::Mat;

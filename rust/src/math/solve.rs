@@ -1,0 +1,149 @@
+//! Direct solvers: Cholesky factorization and triangular solves.
+//!
+//! Used by the Mairal-2010 centralized baseline (normal-equation lasso
+//! warm starts) and by tests that need exact small-system solutions.
+
+use crate::error::{DdlError, Result};
+use crate::math::Mat;
+
+/// Cholesky factorization `A = L Lᵀ` of a symmetric positive-definite
+/// matrix. Returns the lower-triangular factor `L` (full storage, upper
+/// half zeroed).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(DdlError::Shape("cholesky: matrix not square".into()));
+    }
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(DdlError::Other(format!(
+                        "cholesky: not positive definite at pivot {i} (s = {s})"
+                    )));
+                }
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L x = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.get(i, k) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Solve `Lᵀ x = b` for lower-triangular `L` (back substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l.get(k, i) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Solve the SPD system `A x = b` via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f32]) -> Result<Vec<f32>> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Ok(solve_lower_t(&l, &y))
+}
+
+/// Largest eigenvalue (and eigenvector) of a symmetric matrix via power
+/// iteration. Used for Lipschitz-constant estimation in FISTA and for the
+/// Laplacian spectral analysis in [`crate::graph`].
+pub fn power_iteration(a: &Mat, iters: usize, seed: u64) -> (f32, Vec<f32>) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "power_iteration: square matrix required");
+    let mut rng = crate::rng::Pcg64::new(seed);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+    crate::math::vector::normalize(&mut v);
+    let mut lambda = 0.0;
+    let mut av = vec![0.0; n];
+    for _ in 0..iters {
+        crate::math::blas::gemv(n, n, a.as_slice(), &v, &mut av);
+        lambda = crate::math::blas::dot(&v, &av);
+        let nn = crate::math::vector::norm2(&av);
+        if nn == 0.0 {
+            return (0.0, v);
+        }
+        for (vi, &ai) in v.iter_mut().zip(&av) {
+            *vi = ai / nn;
+        }
+    }
+    (lambda, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd_matrix(n: usize, seed: u64) -> Mat {
+        // A = B Bᵀ + n I is SPD.
+        let mut rng = crate::rng::Pcg64::new(seed);
+        let b = Mat::from_fn(n, n, |_, _| rng.next_f32() - 0.5);
+        let mut a = b.matmul(&b.transpose()).unwrap();
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f32);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd_matrix(8, 42);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose()).unwrap();
+        assert!(a.rel_diff(&rec, 1e-3) < 1e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap(); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_spd_accurate() {
+        let a = spd_matrix(10, 7);
+        let x_true: Vec<f32> = (0..10).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let b = a.matvec(&x_true).unwrap();
+        let x = solve_spd(&a, &b).unwrap();
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-3, "{xs} vs {xt}");
+        }
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant() {
+        // diag(5, 2, 1) has top eigenvalue 5 with e1.
+        let a = Mat::from_vec(3, 3, vec![5., 0., 0., 0., 2., 0., 0., 0., 1.]).unwrap();
+        let (lambda, v) = power_iteration(&a, 200, 3);
+        assert!((lambda - 5.0).abs() < 1e-3);
+        assert!(v[0].abs() > 0.99);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation metrics: PSNR (Fig. 5), ROC/AUC (Figs. 6–7, Tables III–IV),
+//! and SNR learning curves (Fig. 4).
+
+pub mod psnr;
+pub mod roc;
+pub mod snr;
+
+pub use psnr::{mse, psnr};
+pub use roc::{auc, roc_curve, RocPoint};
+pub use snr::snr_db;

@@ -1,0 +1,59 @@
+//! Peak signal-to-noise ratio (paper footnote 5):
+//! `PSNR = 10·log10(I_max² / MSE)`.
+
+/// Mean squared error between two images (flattened).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// PSNR in dB with peak intensity `i_max` (the paper uses the maximum
+/// pixel intensity of the image, 255 for 8-bit scenes).
+pub fn psnr(reference: &[f32], test: &[f32], i_max: f32) -> f64 {
+    let e = mse(reference, test);
+    if e <= 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * ((i_max as f64).powi(2) / e).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_infinite_psnr() {
+        let img = vec![1.0, 2.0, 3.0];
+        assert!(psnr(&img, &img, 255.0).is_infinite());
+    }
+
+    #[test]
+    fn known_value() {
+        // MSE = 4 → PSNR = 10 log10(255²/4) ≈ 42.11 dB.
+        let a = vec![0.0f32; 10];
+        let b = vec![2.0f32; 10];
+        let p = psnr(&a, &b, 255.0);
+        assert!((p - 42.1103).abs() < 1e-3, "{p}");
+    }
+
+    #[test]
+    fn paper_noise_level_gives_14db() {
+        // σ = 50 AWGN on a 255-peak image → PSNR = 10 log10(255²/2500) ≈ 14.15 dB,
+        // matching the paper's reported 14.06 dB corrupted image.
+        let p = 10.0 * (255.0f64 * 255.0 / 2500.0).log10();
+        assert!((p - 14.15).abs() < 0.01);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 3.0], &[1.0, 1.0]), 2.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+}

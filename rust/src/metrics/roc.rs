@@ -1,0 +1,162 @@
+//! ROC curves and AUC for novelty detection (Figs. 6–7, Tables III–IV).
+//!
+//! Scores are novelty scores (higher ⇒ "declare novel"); labels mark the
+//! ground-truth novel documents. Sweeping the threshold χ traces the ROC.
+
+/// One operating point: probability of false alarm vs detection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RocPoint {
+    pub pfa: f64,
+    pub pd: f64,
+    pub threshold: f64,
+}
+
+/// Full ROC curve from per-sample `(score, is_novel)` pairs, sorted by
+/// descending threshold; includes the (0,0) and (1,1) endpoints.
+pub fn roc_curve(scores: &[f64], labels: &[bool]) -> Vec<RocPoint> {
+    assert_eq!(scores.len(), labels.len());
+    let pos = labels.iter().filter(|&&l| l).count();
+    let neg = labels.len() - pos;
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut curve = vec![RocPoint { pfa: 0.0, pd: 0.0, threshold: f64::INFINITY }];
+    let (mut tp, mut fp) = (0usize, 0usize);
+    let mut i = 0;
+    while i < order.len() {
+        // Process ties as one block so the curve is threshold-consistent.
+        let t = scores[order[i]];
+        while i < order.len() && scores[order[i]] == t {
+            if labels[order[i]] {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            i += 1;
+        }
+        curve.push(RocPoint {
+            pfa: if neg > 0 { fp as f64 / neg as f64 } else { 0.0 },
+            pd: if pos > 0 { tp as f64 / pos as f64 } else { 0.0 },
+            threshold: t,
+        });
+    }
+    curve
+}
+
+/// Area under the ROC curve via the Mann–Whitney U statistic (ties count
+/// half) — exact, no curve discretization error.
+pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let pos: Vec<f64> = scores
+        .iter()
+        .zip(labels)
+        .filter_map(|(&s, &l)| l.then_some(s))
+        .collect();
+    let neg: Vec<f64> = scores
+        .iter()
+        .zip(labels)
+        .filter_map(|(&s, &l)| (!l).then_some(s))
+        .collect();
+    if pos.is_empty() || neg.is_empty() {
+        return f64::NAN;
+    }
+    let mut wins = 0.0f64;
+    for &p in &pos {
+        for &n in &neg {
+            if p > n {
+                wins += 1.0;
+            } else if p == n {
+                wins += 0.5;
+            }
+        }
+    }
+    wins / (pos.len() as f64 * neg.len() as f64)
+}
+
+/// Write an ROC curve to CSV (`pfa,pd,threshold`).
+pub fn write_roc_csv(path: &std::path::Path, curve: &[RocPoint]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "pfa,pd,threshold")?;
+    for p in curve {
+        writeln!(f, "{:.6},{:.6},{:.6e}", p.pfa, p.pd, p.threshold)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_auc_one() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let labels = vec![true, true, false, false];
+        assert_eq!(auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn inverted_separation_auc_zero() {
+        let scores = vec![0.1, 0.2, 0.8, 0.9];
+        let labels = vec![true, true, false, false];
+        assert_eq!(auc(&scores, &labels), 0.0);
+    }
+
+    #[test]
+    fn random_scores_auc_half() {
+        let mut rng = crate::rng::Pcg64::new(1);
+        let n = 4000;
+        let scores: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.3).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.03, "auc {a}");
+    }
+
+    #[test]
+    fn ties_count_half() {
+        let scores = vec![0.5, 0.5];
+        let labels = vec![true, false];
+        assert_eq!(auc(&scores, &labels), 0.5);
+    }
+
+    #[test]
+    fn degenerate_labels_nan() {
+        assert!(auc(&[0.1, 0.2], &[true, true]).is_nan());
+        assert!(auc(&[0.1, 0.2], &[false, false]).is_nan());
+    }
+
+    #[test]
+    fn curve_monotone_and_bounded() {
+        let mut rng = crate::rng::Pcg64::new(2);
+        let scores: Vec<f64> = (0..200).map(|_| rng.next_f64()).collect();
+        let labels: Vec<bool> = (0..200).map(|i| i % 3 == 0).collect();
+        let c = roc_curve(&scores, &labels);
+        assert_eq!(c[0].pfa, 0.0);
+        assert_eq!(c[0].pd, 0.0);
+        let last = c.last().unwrap();
+        assert!((last.pfa - 1.0).abs() < 1e-12);
+        assert!((last.pd - 1.0).abs() < 1e-12);
+        for w in c.windows(2) {
+            assert!(w[1].pfa >= w[0].pfa);
+            assert!(w[1].pd >= w[0].pd);
+            assert!(w[1].threshold <= w[0].threshold);
+        }
+    }
+
+    /// Trapezoid integration of the curve must match the Mann–Whitney AUC.
+    #[test]
+    fn curve_area_matches_mann_whitney() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        let scores: Vec<f64> = (0..500).map(|_| rng.next_f64()).collect();
+        let labels: Vec<bool> = scores.iter().map(|&s| s + 0.3 * rng.next_f64() > 0.6).collect();
+        let c = roc_curve(&scores, &labels);
+        let mut area = 0.0;
+        for w in c.windows(2) {
+            area += (w[1].pfa - w[0].pfa) * 0.5 * (w[0].pd + w[1].pd);
+        }
+        let mw = auc(&scores, &labels);
+        assert!((area - mw).abs() < 1e-9, "trapezoid {area} vs U {mw}");
+    }
+}

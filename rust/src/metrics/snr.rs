@@ -1,0 +1,46 @@
+//! SNR measures for the Fig. 4 learning curves (§IV-A):
+//! `SNR(i) = 10·log10(‖ref‖² / ‖est_i − ref‖²)`.
+
+/// SNR of `est` against `reference`, in dB. Returns +∞ for an exact match
+/// and −∞ for a zero reference with non-zero estimate.
+pub fn snr_db(reference: &[f32], est: &[f32]) -> f64 {
+    assert_eq!(reference.len(), est.len());
+    let sig: f64 = reference.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let err: f64 = reference
+        .iter()
+        .zip(est)
+        .map(|(&r, &e)| ((r - e) as f64).powi(2))
+        .sum();
+    if err == 0.0 {
+        return f64::INFINITY;
+    }
+    if sig == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    10.0 * (sig / err).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_infinite() {
+        assert!(snr_db(&[1.0, 2.0], &[1.0, 2.0]).is_infinite());
+    }
+
+    #[test]
+    fn known_value() {
+        // ref = [1,0], est = [0.9,0]: SNR = 10 log10(1/0.01) = 20 dB.
+        let s = snr_db(&[1.0, 0.0], &[0.9, 0.0]);
+        assert!((s - 20.0).abs() < 1e-5, "{s}");
+    }
+
+    #[test]
+    fn snr_improves_as_error_shrinks() {
+        let reference = vec![1.0, -1.0, 0.5];
+        let far: Vec<f32> = reference.iter().map(|v| v + 0.5).collect();
+        let near: Vec<f32> = reference.iter().map(|v| v + 0.01).collect();
+        assert!(snr_db(&reference, &near) > snr_db(&reference, &far));
+    }
+}

@@ -1,0 +1,377 @@
+//! The model-distributed dictionary `W = [W_1 … W_N]` (Eq. 8).
+//!
+//! Each agent `k` owns a contiguous block of atom columns `W_k`
+//! (`M × N_k`); the paper's experiments use one atom per agent
+//! (`N_k = 1`), but the type supports arbitrary blocks so the library
+//! scales to fewer agents than atoms.
+
+use crate::error::{DdlError, Result};
+use crate::math::Mat;
+use crate::model::AtomConstraint;
+use crate::ops::project::{project_columns_nonneg_unit_ball, project_columns_unit_ball};
+use crate::rng::Pcg64;
+
+/// Distributed dictionary: an `M × K` matrix with an agent→atom-block map.
+#[derive(Clone, Debug)]
+pub struct DistributedDictionary {
+    /// Row-major `M × K` atom matrix.
+    w: Mat,
+    /// `blocks[k] = (start, len)`: agent `k` owns atoms
+    /// `start..start+len`.
+    blocks: Vec<(usize, usize)>,
+}
+
+impl DistributedDictionary {
+    /// Random initialization (paper §IV-B: iid standard normal entries,
+    /// then columns scaled into the constraint set).
+    pub fn random(
+        m: usize,
+        k: usize,
+        agents: usize,
+        constraint: AtomConstraint,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        if agents == 0 || k < agents {
+            return Err(DdlError::Config(format!(
+                "dictionary: need at least one atom per agent (K={k}, N={agents})"
+            )));
+        }
+        let mut w = Mat::from_fn(m, k, |_, _| rng.next_normal());
+        if constraint == AtomConstraint::NonNegUnitBall {
+            // Non-negative tasks start from |N(0,1)| atoms.
+            for v in w.as_mut_slice() {
+                *v = v.abs();
+            }
+        }
+        normalize_columns(&mut w);
+        let blocks = even_blocks(k, agents);
+        Ok(DistributedDictionary { w, blocks })
+    }
+
+    /// Wrap an existing matrix with an even agent partition.
+    pub fn from_mat(w: Mat, agents: usize) -> Result<Self> {
+        let k = w.cols();
+        if agents == 0 || k < agents {
+            return Err(DdlError::Config(format!(
+                "dictionary: need at least one atom per agent (K={k}, N={agents})"
+            )));
+        }
+        let blocks = even_blocks(k, agents);
+        Ok(DistributedDictionary { w, blocks })
+    }
+
+    /// Data dimension `M`.
+    pub fn m(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Total atom count `K`.
+    pub fn k(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Number of agents `N`.
+    pub fn agents(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Atom block `(start, len)` of agent `k`.
+    pub fn block(&self, k: usize) -> (usize, usize) {
+        self.blocks[k]
+    }
+
+    /// The full matrix (test/baseline access; a real deployment would never
+    /// materialize this at one agent — the point of the paper).
+    pub fn mat(&self) -> &Mat {
+        &self.w
+    }
+
+    /// Mutable access to the full matrix.
+    pub fn mat_mut(&mut self) -> &mut Mat {
+        &mut self.w
+    }
+
+    /// Copy atom `q` into a fresh vector.
+    pub fn atom(&self, q: usize) -> Vec<f32> {
+        self.w.col(q)
+    }
+
+    /// Correlations `s_q = w_qᵀ ν` for every atom `q` in agent `k`'s block,
+    /// written into `out[start..start+len]`.
+    pub fn block_correlations(&self, k: usize, nu: &[f32], out: &mut [f32]) {
+        let (start, len) = self.blocks[k];
+        debug_assert_eq!(nu.len(), self.m());
+        debug_assert_eq!(out.len(), self.k());
+        let kk = self.k();
+        let w = self.w.as_slice();
+        for q in start..start + len {
+            let mut s = 0.0f32;
+            for r in 0..self.m() {
+                s += w[r * kk + q] * nu[r];
+            }
+            out[q] = s;
+        }
+    }
+
+    /// Add `coeff[q] * w_q` for agent `k`'s atoms into `acc` (length M).
+    pub fn block_accumulate(&self, k: usize, coeff: &[f32], acc: &mut [f32]) {
+        let (start, len) = self.blocks[k];
+        let kk = self.k();
+        let w = self.w.as_slice();
+        for q in start..start + len {
+            let c = coeff[q];
+            if c == 0.0 {
+                continue;
+            }
+            for (r, a) in acc.iter_mut().enumerate() {
+                *a += c * w[r * kk + q];
+            }
+        }
+    }
+
+    /// Rank-1-per-atom dictionary update for agent `k` (Eq. 51, before
+    /// prox/projection): `W_k += μ_w · ν yₖᵀ`.
+    pub fn block_gradient_step(&mut self, k: usize, mu_w: f32, nu: &[f32], y: &[f32]) {
+        let (start, len) = self.blocks[k];
+        let kk = self.k();
+        let m = self.m();
+        let w = self.w.as_mut_slice();
+        for q in start..start + len {
+            let g = mu_w * y[q];
+            if g == 0.0 {
+                continue;
+            }
+            for r in 0..m {
+                w[r * kk + q] += g * nu[r];
+            }
+        }
+    }
+
+    /// Project agent `k`'s atoms onto the constraint set.
+    pub fn project_block(&mut self, k: usize, constraint: AtomConstraint) {
+        let (start, len) = self.blocks[k];
+        let kk = self.k();
+        let m = self.m();
+        let w = self.w.as_mut_slice();
+        for q in start..start + len {
+            match constraint {
+                AtomConstraint::UnitBall => {
+                    let mut nsq = 0.0f32;
+                    for r in 0..m {
+                        nsq += w[r * kk + q] * w[r * kk + q];
+                    }
+                    if nsq > 1.0 {
+                        let inv = 1.0 / nsq.sqrt();
+                        for r in 0..m {
+                            w[r * kk + q] *= inv;
+                        }
+                    }
+                }
+                AtomConstraint::NonNegUnitBall => {
+                    let mut nsq = 0.0f32;
+                    for r in 0..m {
+                        let v = w[r * kk + q].max(0.0);
+                        w[r * kk + q] = v;
+                        nsq += v * v;
+                    }
+                    if nsq > 1.0 {
+                        let inv = 1.0 / nsq.sqrt();
+                        for r in 0..m {
+                            w[r * kk + q] *= inv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Expand the dictionary by `extra` atoms distributed over `new_agents`
+    /// additional agents (novelty time-steps, §IV-C: "the dictionary is
+    /// expanded by adding nodes to the network"). Existing atoms are
+    /// preserved.
+    pub fn expand(
+        &mut self,
+        extra: usize,
+        new_agents: usize,
+        constraint: AtomConstraint,
+        rng: &mut Pcg64,
+    ) -> Result<()> {
+        if new_agents == 0 || extra < new_agents {
+            return Err(DdlError::Config(format!(
+                "expand: need at least one atom per new agent (extra={extra}, new={new_agents})"
+            )));
+        }
+        let m = self.m();
+        let old_k = self.k();
+        let new_k = old_k + extra;
+        let mut w = Mat::zeros(m, new_k);
+        for r in 0..m {
+            let dst = &mut w.as_mut_slice()[r * new_k..r * new_k + old_k];
+            dst.copy_from_slice(&self.w.row(r)[..old_k]);
+        }
+        for q in old_k..new_k {
+            let mut col = vec![0.0f32; m];
+            for v in col.iter_mut() {
+                let g = rng.next_normal();
+                *v = if constraint == AtomConstraint::NonNegUnitBall { g.abs() } else { g };
+            }
+            // Normalize only the new atoms; existing atoms are preserved
+            // bit-for-bit ("the previous atoms are preserved", §IV-C1).
+            crate::math::vector::normalize(&mut col);
+            w.set_col(q, &col);
+        }
+        self.w = w;
+        let added = even_blocks(extra, new_agents)
+            .into_iter()
+            .map(|(s, l)| (s + old_k, l));
+        self.blocks.extend(added);
+        Ok(())
+    }
+}
+
+/// Partition `k` atoms over `n` agents as evenly as possible.
+fn even_blocks(k: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = k / n;
+    let rem = k % n;
+    let mut blocks = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        blocks.push((start, len));
+        start += len;
+    }
+    blocks
+}
+
+/// Scale every column to unit ℓ2 norm (paper init: "columns are then
+/// scaled to guarantee that the sub-unit-norm constraint is satisfied").
+pub fn normalize_columns(w: &mut Mat) {
+    let (m, k) = w.shape();
+    let data = w.as_mut_slice();
+    for q in 0..k {
+        let mut nsq = 0.0f32;
+        for r in 0..m {
+            nsq += data[r * k + q] * data[r * k + q];
+        }
+        if nsq > 0.0 {
+            let inv = 1.0 / nsq.sqrt();
+            for r in 0..m {
+                data[r * k + q] *= inv;
+            }
+        }
+    }
+}
+
+/// Project all columns onto the constraint set (centralized baselines).
+pub fn project_all_columns(w: &mut Mat, constraint: AtomConstraint) {
+    let (m, k) = w.shape();
+    match constraint {
+        AtomConstraint::UnitBall => project_columns_unit_ball(w.as_mut_slice(), m, k),
+        AtomConstraint::NonNegUnitBall => {
+            project_columns_nonneg_unit_ball(w.as_mut_slice(), m, k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_blocks_partition() {
+        assert_eq!(even_blocks(10, 3), vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(even_blocks(4, 4), vec![(0, 1), (1, 1), (2, 1), (3, 1)]);
+        let blocks = even_blocks(7, 2);
+        let total: usize = blocks.iter().map(|b| b.1).sum();
+        assert_eq!(total, 7);
+    }
+
+    #[test]
+    fn random_dictionary_unit_columns() {
+        let mut rng = Pcg64::new(1);
+        let d = DistributedDictionary::random(20, 8, 8, AtomConstraint::UnitBall, &mut rng).unwrap();
+        for q in 0..8 {
+            let n = crate::math::vector::norm2(&d.atom(q));
+            assert!((n - 1.0).abs() < 1e-5, "atom {q} norm {n}");
+        }
+        assert_eq!(d.agents(), 8);
+        assert_eq!(d.block(3), (3, 1));
+    }
+
+    #[test]
+    fn nonneg_dictionary_nonneg() {
+        let mut rng = Pcg64::new(2);
+        let d =
+            DistributedDictionary::random(10, 6, 3, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        assert!(d.mat().as_slice().iter().all(|&v| v >= 0.0));
+        assert_eq!(d.block(0), (0, 2));
+    }
+
+    #[test]
+    fn rejects_more_agents_than_atoms() {
+        let mut rng = Pcg64::new(3);
+        assert!(DistributedDictionary::random(5, 3, 4, AtomConstraint::UnitBall, &mut rng).is_err());
+    }
+
+    #[test]
+    fn block_correlations_match_gemv() {
+        let mut rng = Pcg64::new(4);
+        let d = DistributedDictionary::random(12, 9, 3, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let nu: Vec<f32> = rng.normal_vec(12);
+        let full = d.mat().matvec_t(&nu).unwrap();
+        let mut out = vec![0.0; 9];
+        for k in 0..3 {
+            d.block_correlations(k, &nu, &mut out);
+        }
+        crate::testutil::assert_close(&out, &full, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn block_accumulate_matches_matvec() {
+        let mut rng = Pcg64::new(5);
+        let d = DistributedDictionary::random(8, 6, 2, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let y: Vec<f32> = rng.normal_vec(6);
+        let mut acc = vec![0.0; 8];
+        for k in 0..2 {
+            d.block_accumulate(k, &y, &mut acc);
+        }
+        let direct = d.mat().matvec(&y).unwrap();
+        crate::testutil::assert_close(&acc, &direct, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn gradient_step_and_projection() {
+        let mut rng = Pcg64::new(6);
+        let mut d =
+            DistributedDictionary::random(4, 2, 2, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let before = d.atom(0);
+        let nu = vec![10.0, 0.0, 0.0, 0.0];
+        let mut y = vec![0.0; 2];
+        y[0] = 1.0;
+        d.block_gradient_step(0, 1.0, &nu, &y);
+        assert!((d.atom(0)[0] - (before[0] + 10.0)).abs() < 1e-5);
+        // Atom 1 untouched (owned by agent 1, and y[1] = 0 anyway).
+        d.project_block(0, AtomConstraint::UnitBall);
+        assert!(crate::math::vector::norm2(&d.atom(0)) <= 1.0 + 1e-5);
+    }
+
+    #[test]
+    fn expand_preserves_existing_atoms() {
+        let mut rng = Pcg64::new(7);
+        let mut d =
+            DistributedDictionary::random(6, 4, 4, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let a0 = d.atom(0);
+        d.expand(3, 3, AtomConstraint::NonNegUnitBall, &mut rng).unwrap();
+        assert_eq!(d.k(), 7);
+        assert_eq!(d.agents(), 7);
+        crate::testutil::assert_close(&d.atom(0), &a0, 1e-7, 0.0);
+        for q in 4..7 {
+            let n = crate::math::vector::norm2(&d.atom(q));
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+        assert_eq!(d.block(4), (4, 1));
+        assert_eq!(d.block(6), (6, 1));
+    }
+}

@@ -1,0 +1,8 @@
+//! Model types: the distributed dictionary and the task family
+//! (residual loss + regularizer pairs from paper Tables I–II).
+
+pub mod dictionary;
+pub mod task;
+
+pub use dictionary::DistributedDictionary;
+pub use task::{AtomConstraint, TaskSpec};

@@ -1,0 +1,232 @@
+//! Task specification: the `(f, h_y, h_W, W_k)` quadruple of paper Table I,
+//! together with the conjugate-side quantities of Table II that the dual
+//! diffusion algorithm actually evaluates.
+
+use crate::ops::{
+    huber_sum, s_conj, s_conj_plus, soft_threshold, soft_threshold_plus,
+};
+
+/// Constraint set `W_k` for dictionary atoms (Table I last column).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AtomConstraint {
+    /// `‖w‖₂ ≤ 1` (Eq. 3 / projection Eq. 45).
+    UnitBall,
+    /// `‖w‖₂ ≤ 1, w ⪰ 0` (Eq. 4 / projection Eq. 47).
+    NonNegUnitBall,
+}
+
+/// A dictionary-learning task instance from paper Table I/II.
+///
+/// Everything the diffusion inference needs is captured by four
+/// ingredients:
+/// * the threshold operator (`T_γ` two-sided for elastic net, `T⁺_γ`
+///   one-sided for the non-negative elastic net),
+/// * the conjugate-gradient scale `c_f` with `∇f*(ν) = c_f · ν`
+///   (`1` for `f = ½‖u‖²`, `η` for Huber),
+/// * the dual-domain box `V_f` (`∞` for squared-ℓ2, `‖ν‖_∞ ≤ 1` for Huber),
+/// * the atom constraint set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskSpec {
+    /// Sparse SVD / image denoising: `f = ½‖u‖²`, elastic net (Table I
+    /// rows 1–2 with `h_W = 0`).
+    SparseCoding { gamma: f32, delta: f32 },
+    /// Non-negative matrix factorization / topic modeling: `f = ½‖u‖²`,
+    /// non-negative elastic net (Table I row 3).
+    Nmf { gamma: f32, delta: f32 },
+    /// Huber-residual NMF (Table I row 4): `f = Σ L(uₘ)`.
+    HuberNmf { gamma: f32, delta: f32, eta: f32 },
+}
+
+impl TaskSpec {
+    /// ℓ1 weight γ.
+    pub fn gamma(&self) -> f32 {
+        match *self {
+            TaskSpec::SparseCoding { gamma, .. }
+            | TaskSpec::Nmf { gamma, .. }
+            | TaskSpec::HuberNmf { gamma, .. } => gamma,
+        }
+    }
+
+    /// ℓ2 weight δ.
+    pub fn delta(&self) -> f32 {
+        match *self {
+            TaskSpec::SparseCoding { delta, .. }
+            | TaskSpec::Nmf { delta, .. }
+            | TaskSpec::HuberNmf { delta, .. } => delta,
+        }
+    }
+
+    /// `c_f` in `∇f*(ν) = c_f · ν` (Table II column 3: `f* = ½‖ν‖²` or
+    /// `(η/2)‖ν‖²`).
+    pub fn conj_grad_scale(&self) -> f32 {
+        match *self {
+            TaskSpec::SparseCoding { .. } | TaskSpec::Nmf { .. } => 1.0,
+            TaskSpec::HuberNmf { eta, .. } => eta,
+        }
+    }
+
+    /// Box bound of `V_f` (Table II column 4), if any.
+    pub fn dual_clip(&self) -> Option<f32> {
+        match self {
+            TaskSpec::SparseCoding { .. } | TaskSpec::Nmf { .. } => None,
+            TaskSpec::HuberNmf { .. } => Some(1.0),
+        }
+    }
+
+    /// Threshold operator `thr(·)` with level γ applied to `wᵀν`
+    /// (`y° = thr(wᵀν)/δ`, Table II last column).
+    #[inline]
+    pub fn threshold(&self, s: f32) -> f32 {
+        match *self {
+            TaskSpec::SparseCoding { gamma, .. } => soft_threshold(s, gamma),
+            TaskSpec::Nmf { gamma, .. } | TaskSpec::HuberNmf { gamma, .. } => {
+                soft_threshold_plus(s, gamma)
+            }
+        }
+    }
+
+    /// Conjugate value `h*_k(Wᵀν)` given the pre-computed correlations
+    /// `s = Wᵀν` (paper evaluates it as `S_{γ/δ}(s/δ)`).
+    pub fn h_conj(&self, s: &[f32]) -> f32 {
+        let scaled: Vec<f32> = s.iter().map(|&v| v / self.delta()).collect();
+        match self {
+            TaskSpec::SparseCoding { gamma, delta } => s_conj(&scaled, *gamma, *delta),
+            TaskSpec::Nmf { gamma, delta } | TaskSpec::HuberNmf { gamma, delta, .. } => {
+                s_conj_plus(&scaled, *gamma, *delta)
+            }
+        }
+    }
+
+    /// `f*(ν)` (Table II column 2).
+    pub fn f_conj(&self, nu: &[f32]) -> f32 {
+        let nsq = crate::math::vector::norm2_sq(nu);
+        match *self {
+            TaskSpec::SparseCoding { .. } | TaskSpec::Nmf { .. } => 0.5 * nsq,
+            TaskSpec::HuberNmf { eta, .. } => 0.5 * eta * nsq,
+        }
+    }
+
+    /// Primal residual loss `f(u)`.
+    pub fn f_loss(&self, u: &[f32]) -> f32 {
+        match *self {
+            TaskSpec::SparseCoding { .. } | TaskSpec::Nmf { .. } => {
+                0.5 * crate::math::vector::norm2_sq(u)
+            }
+            TaskSpec::HuberNmf { eta, .. } => huber_sum(u, eta),
+        }
+    }
+
+    /// Regularizer value `h_y(y)` (elastic net or non-negative elastic net;
+    /// returns `+∞` for infeasible non-negative arguments).
+    pub fn h_reg(&self, y: &[f32]) -> f32 {
+        let (gamma, delta) = (self.gamma(), self.delta());
+        match self {
+            TaskSpec::SparseCoding { .. } => {
+                gamma * crate::math::vector::norm1(y)
+                    + 0.5 * delta * crate::math::vector::norm2_sq(y)
+            }
+            TaskSpec::Nmf { .. } | TaskSpec::HuberNmf { .. } => {
+                if y.iter().any(|&v| v < 0.0) {
+                    f32::INFINITY
+                } else {
+                    gamma * y.iter().sum::<f32>()
+                        + 0.5 * delta * crate::math::vector::norm2_sq(y)
+                }
+            }
+        }
+    }
+
+    /// Atom constraint set for this task (Table I last column).
+    pub fn atom_constraint(&self) -> AtomConstraint {
+        match self {
+            TaskSpec::SparseCoding { .. } => AtomConstraint::UnitBall,
+            TaskSpec::Nmf { .. } | TaskSpec::HuberNmf { .. } => AtomConstraint::NonNegUnitBall,
+        }
+    }
+
+    /// Gradient of the residual loss `f'_u(u)` — used by Eq. 50 checks.
+    pub fn f_grad(&self, u: &[f32], out: &mut [f32]) {
+        match *self {
+            TaskSpec::SparseCoding { .. } | TaskSpec::Nmf { .. } => out.copy_from_slice(u),
+            TaskSpec::HuberNmf { eta, .. } => {
+                for (o, &v) in out.iter_mut().zip(u) {
+                    *o = crate::ops::huber_grad(v, eta);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let t = TaskSpec::HuberNmf { gamma: 1.0, delta: 0.1, eta: 0.2 };
+        assert_eq!(t.gamma(), 1.0);
+        assert_eq!(t.delta(), 0.1);
+        assert_eq!(t.conj_grad_scale(), 0.2);
+        assert_eq!(t.dual_clip(), Some(1.0));
+        assert_eq!(t.atom_constraint(), AtomConstraint::NonNegUnitBall);
+        let s = TaskSpec::SparseCoding { gamma: 45.0, delta: 0.1 };
+        assert_eq!(s.conj_grad_scale(), 1.0);
+        assert_eq!(s.dual_clip(), None);
+        assert_eq!(s.atom_constraint(), AtomConstraint::UnitBall);
+    }
+
+    #[test]
+    fn threshold_dispatch() {
+        let sc = TaskSpec::SparseCoding { gamma: 1.0, delta: 0.1 };
+        assert_eq!(sc.threshold(-3.0), -2.0);
+        let nmf = TaskSpec::Nmf { gamma: 1.0, delta: 0.1 };
+        assert_eq!(nmf.threshold(-3.0), 0.0);
+        assert_eq!(nmf.threshold(3.0), 2.0);
+    }
+
+    #[test]
+    fn f_loss_and_conjugate_consistent() {
+        // Fenchel–Young equality at ν = ∇f(u): f(u) + f*(ν) = uᵀν.
+        let u = vec![0.3f32, -0.8, 1.2];
+        for t in [
+            TaskSpec::SparseCoding { gamma: 1.0, delta: 0.1 },
+            TaskSpec::HuberNmf { gamma: 1.0, delta: 0.1, eta: 0.2 },
+        ] {
+            let mut nu = vec![0.0; 3];
+            t.f_grad(&u, &mut nu);
+            let lhs = t.f_loss(&u) + t.f_conj(&nu);
+            let rhs = crate::math::blas::dot(&u, &nu);
+            assert!((lhs - rhs).abs() < 1e-5, "{t:?}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn h_reg_infeasible_nonneg() {
+        let nmf = TaskSpec::Nmf { gamma: 1.0, delta: 0.1 };
+        assert!(nmf.h_reg(&[0.5, -0.1]).is_infinite());
+        assert!(nmf.h_reg(&[0.5, 0.1]).is_finite());
+    }
+
+    /// `h*(Wᵀν) = sup_y [(Wᵀν)ᵀy − h(y)]`: check the closed form against a
+    /// grid search in 1D.
+    #[test]
+    fn h_conj_matches_grid_supremum() {
+        for t in [
+            TaskSpec::SparseCoding { gamma: 0.7, delta: 0.3 },
+            TaskSpec::Nmf { gamma: 0.7, delta: 0.3 },
+        ] {
+            for &a in &[-2.0f32, -0.4, 0.0, 0.5, 1.8] {
+                let closed = t.h_conj(&[a]);
+                let mut best = f32::NEG_INFINITY;
+                for i in -4000..=4000 {
+                    let y = i as f32 * 0.005;
+                    let h = t.h_reg(&[y]);
+                    if h.is_finite() {
+                        best = best.max(a * y - h);
+                    }
+                }
+                assert!((closed - best).abs() < 1e-3, "{t:?} a={a}: {closed} vs {best}");
+            }
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Bulk-synchronous message-passing executor.
+//!
+//! Runs the identical diffusion recursion as
+//! [`crate::infer::DiffusionEngine`], but each agent only ever touches its
+//! own state plus explicit [`PsiMessage`]s received from graph neighbors —
+//! no global matrices. Used to validate that the gemm engine is a faithful
+//! simulation and to account communication (paper's efficiency claim:
+//! `M` floats per edge per iteration, nothing else).
+
+use crate::error::Result;
+use crate::graph::Graph;
+use crate::infer::DiffusionParams;
+use crate::math::Mat;
+use crate::model::{DistributedDictionary, TaskSpec};
+use crate::net::message::{MessageStats, PsiMessage};
+use crate::ops::project::clip_linf;
+
+/// Per-agent state in the message-passing simulation.
+struct AgentState {
+    nu: Vec<f32>,
+    psi: Vec<f32>,
+    inbox: Vec<PsiMessage>,
+}
+
+/// Bulk-synchronous network executor.
+pub struct BspNetwork {
+    agents: Vec<AgentState>,
+    /// Combination weights `a[l][k]` aligned with the graph (column = k).
+    weights: Mat,
+    graph: Graph,
+    theta: Vec<f32>,
+    stats: MessageStats,
+}
+
+impl BspNetwork {
+    /// Build over a graph with its (doubly-stochastic) combination matrix.
+    pub fn new(graph: Graph, weights: Mat, m: usize, informed: Option<&[usize]>) -> Self {
+        let n = graph.n();
+        assert_eq!(weights.rows(), n);
+        let mut theta = vec![0.0f32; n];
+        match informed {
+            None => theta.fill(1.0 / n as f32),
+            Some(idx) => {
+                let w = 1.0 / idx.len() as f32;
+                for &k in idx {
+                    theta[k] = w;
+                }
+            }
+        }
+        let agents = (0..n)
+            .map(|_| AgentState { nu: vec![0.0; m], psi: vec![0.0; m], inbox: Vec::new() })
+            .collect();
+        BspNetwork { agents, weights, graph, theta, stats: MessageStats::default() }
+    }
+
+    /// Run diffusion; agents communicate only along graph edges.
+    pub fn run(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+        params: DiffusionParams,
+    ) -> Result<()> {
+        let n = self.agents.len();
+        let m = x.len();
+        let cf_over_n = task.conj_grad_scale() / n as f32;
+        let inv_delta = 1.0 / task.delta();
+        let clip = task.dual_clip();
+        let mut thr = vec![0.0f32; dict.k()];
+
+        for iter in 0..params.iters {
+            // Adapt: local-only computation.
+            for k in 0..n {
+                let ag = &mut self.agents[k];
+                dict.block_correlations(k, &ag.nu, &mut thr);
+                let (start, len) = dict.block(k);
+                for q in start..start + len {
+                    thr[q] = task.threshold(thr[q]) * (-params.mu * inv_delta);
+                }
+                for i in 0..m {
+                    ag.psi[i] =
+                        ag.nu[i] - params.mu * (cf_over_n * ag.nu[i] - self.theta[k] * x[i]);
+                }
+                dict.block_accumulate(k, &thr, &mut ag.psi);
+            }
+            // Exchange: ψ flows along edges only.
+            for k in 0..n {
+                let psi = self.agents[k].psi.clone();
+                for &nb in self.graph.neighbors(k) {
+                    let msg = PsiMessage { from: k, iter, psi: psi.clone() };
+                    self.stats.record(&msg);
+                    self.agents[nb].inbox.push(msg);
+                }
+            }
+            // Combine: a_{kk} ψ_k + Σ incoming a_{ℓk} ψ_ℓ.
+            for k in 0..n {
+                let akk = self.weights.get(k, k);
+                let ag = &mut self.agents[k];
+                for i in 0..m {
+                    ag.nu[i] = akk * ag.psi[i];
+                }
+                let inbox = std::mem::take(&mut ag.inbox);
+                for msg in &inbox {
+                    let w = self.weights.get(msg.from, k);
+                    for i in 0..m {
+                        self.agents[k].nu[i] += w * msg.psi[i];
+                    }
+                }
+                if let Some(b) = clip {
+                    clip_linf(&mut self.agents[k].nu, b);
+                }
+            }
+            self.stats.rounds += 1;
+        }
+        Ok(())
+    }
+
+    /// Agent `k`'s dual estimate.
+    pub fn nu(&self, k: usize) -> &[f32] {
+        &self.agents[k].nu
+    }
+
+    /// Traffic statistics.
+    pub fn stats(&self) -> MessageStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{metropolis_weights, Topology};
+    use crate::infer::DiffusionEngine;
+    use crate::model::AtomConstraint;
+    use crate::rng::Pcg64;
+
+    /// The message-passing executor and the gemm engine must produce
+    /// bit-comparable iterates (same arithmetic, different organization).
+    #[test]
+    fn bsp_matches_gemm_engine() {
+        let (n, m) = (7, 9);
+        let mut rng = Pcg64::new(1);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams { mu: 0.3, iters: 57 };
+
+        let mut engine = DiffusionEngine::new(&a, m, None).unwrap();
+        engine.run(&dict, &task, &x, params).unwrap();
+
+        let mut bsp = BspNetwork::new(g, a, m, None);
+        bsp.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            crate::testutil::assert_close(bsp.nu(k), engine.nu(k), 1e-4, 1e-3);
+        }
+    }
+
+    #[test]
+    fn traffic_matches_edge_count() {
+        let (n, m) = (6, 5);
+        let mut rng = Pcg64::new(2);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 1 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let iters = 10;
+        let edges = g.edge_count();
+        let mut bsp = BspNetwork::new(g, a, m, None);
+        bsp.run(&dict, &task, &x, DiffusionParams { mu: 0.2, iters }).unwrap();
+        let st = bsp.stats();
+        // Each undirected edge carries 2 messages per round.
+        assert_eq!(st.messages, 2 * edges * iters);
+        assert_eq!(st.rounds, iters);
+        assert_eq!(st.bytes, st.messages * (16 + m * 4));
+    }
+
+    #[test]
+    fn huber_clipped_in_bsp_too() {
+        let (n, m) = (5, 6);
+        let mut rng = Pcg64::new(3);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let g = Graph::generate(n, &Topology::FullyConnected, &mut rng);
+        let a = metropolis_weights(&g);
+        let mut x = rng.normal_vec(m);
+        crate::math::vector::scale(8.0, &mut x);
+        let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
+        let mut bsp = BspNetwork::new(g, a, m, None);
+        bsp.run(&dict, &task, &x, DiffusionParams { mu: 0.4, iters: 100 }).unwrap();
+        for k in 0..n {
+            assert!(crate::math::vector::norm_inf(bsp.nu(k)) <= 1.0 + 1e-6);
+        }
+    }
+}

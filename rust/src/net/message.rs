@@ -1,0 +1,65 @@
+//! Message types and traffic accounting for the simulated network.
+
+/// One diffusion message: agent `from`'s intermediate estimate ψ for
+/// iteration `iter`. This is the *only* payload agents ever exchange —
+/// `M` floats per neighbor per iteration; atoms `W_k` and coefficients
+/// `y_k` never leave their agent (the paper's privacy property).
+#[derive(Clone, Debug)]
+pub struct PsiMessage {
+    pub from: usize,
+    pub iter: usize,
+    pub psi: Vec<f32>,
+}
+
+impl PsiMessage {
+    /// Wire size in bytes (header + payload), for traffic accounting.
+    pub fn wire_bytes(&self) -> usize {
+        2 * std::mem::size_of::<u64>() + self.psi.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Cumulative traffic statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MessageStats {
+    pub messages: usize,
+    pub bytes: usize,
+    pub rounds: usize,
+}
+
+impl MessageStats {
+    pub fn record(&mut self, msg: &PsiMessage) {
+        self.messages += 1;
+        self.bytes += msg.wire_bytes();
+    }
+
+    /// Average bytes per agent per round.
+    pub fn bytes_per_agent_round(&self, agents: usize) -> f64 {
+        if self.rounds == 0 || agents == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / (self.rounds as f64 * agents as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_counts_payload() {
+        let m = PsiMessage { from: 0, iter: 3, psi: vec![0.0; 10] };
+        assert_eq!(m.wire_bytes(), 16 + 40);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = MessageStats::default();
+        let m = PsiMessage { from: 1, iter: 0, psi: vec![0.0; 4] };
+        s.record(&m);
+        s.record(&m);
+        s.rounds = 2;
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.bytes, 2 * (16 + 16));
+        assert!((s.bytes_per_agent_round(1) - 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Simulated distributed runtime.
+//!
+//! The matrix-form engine in [`crate::infer::diffusion`] computes the
+//! combine step as one gemm — fast, but it hides the message-passing
+//! structure. This module makes the distribution *real*: agents with
+//! mailboxes exchange `ψ` vectors along graph edges only, with message
+//! and byte accounting, in two executors:
+//!
+//! * [`bsp`] — deterministic bulk-synchronous rounds (used by tests to
+//!   prove equivalence with the gemm engine, and by the drivers when
+//!   accounting is wanted);
+//! * [`actors`] — one OS thread per agent with channels, demonstrating
+//!   that the algorithm runs on a genuinely concurrent substrate.
+
+pub mod actors;
+pub mod bsp;
+pub mod message;
+
+pub use bsp::BspNetwork;
+pub use message::{MessageStats, PsiMessage};

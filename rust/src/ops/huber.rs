@@ -1,0 +1,97 @@
+//! Huber loss, gradient, and conjugate (paper Table I footnote c,
+//! Appendix A Eqs. 71–73).
+
+/// Scalar Huber loss
+/// `L(u) = u²/(2η)` for `|u| < η`, else `|u| − η/2`.
+#[inline]
+pub fn huber(u: f32, eta: f32) -> f32 {
+    if u.abs() < eta {
+        u * u / (2.0 * eta)
+    } else {
+        u.abs() - eta / 2.0
+    }
+}
+
+/// Gradient of the scalar Huber loss: `u/η` inside, `sgn(u)` outside.
+#[inline]
+pub fn huber_grad(u: f32, eta: f32) -> f32 {
+    if u.abs() < eta {
+        u / eta
+    } else {
+        u.signum()
+    }
+}
+
+/// Sum of scalar Huber losses over a vector: `f(u) = Σ L(uₘ)`.
+pub fn huber_sum(u: &[f32], eta: f32) -> f32 {
+    u.iter().map(|&v| huber(v, eta) as f64).sum::<f64>() as f32
+}
+
+/// Conjugate of the summed Huber loss: `f*(ν) = (η/2)‖ν‖²` on the domain
+/// `‖ν‖_∞ ≤ 1` (Eqs. 72–73).
+pub fn huber_conjugate(nu: &[f32], eta: f32) -> f32 {
+    debug_assert!(
+        nu.iter().all(|&v| v.abs() <= 1.0 + 1e-5),
+        "huber_conjugate evaluated outside its domain"
+    );
+    0.5 * eta * crate::math::vector::norm2_sq(nu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_inside_linear_outside() {
+        let eta = 0.2;
+        assert!((huber(0.1, eta) - 0.1 * 0.1 / 0.4).abs() < 1e-7);
+        assert!((huber(1.0, eta) - (1.0 - 0.1)).abs() < 1e-7);
+        assert!((huber(-1.0, eta) - 0.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn continuous_at_eta() {
+        let eta = 0.5;
+        let inside = huber(eta - 1e-6, eta);
+        let outside = huber(eta + 1e-6, eta);
+        assert!((inside - outside).abs() < 1e-5);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let eta = 0.3;
+        for &u in &[-1.0f32, -0.31, -0.1, 0.0, 0.15, 0.31, 2.0] {
+            let h = 1e-3;
+            let fd = (huber(u + h, eta) - huber(u - h, eta)) / (2.0 * h);
+            assert!(
+                (huber_grad(u, eta) - fd).abs() < 1e-2,
+                "u={u}: grad {} vs fd {fd}",
+                huber_grad(u, eta)
+            );
+        }
+    }
+
+    #[test]
+    fn grad_bounded_by_one() {
+        for &u in &[-100.0f32, -1.0, 0.0, 1.0, 100.0] {
+            assert!(huber_grad(u, 0.2).abs() <= 1.0);
+        }
+    }
+
+    /// Fenchel–Young: L(u) + L*(ν) >= u·ν, equality at ν = L'(u).
+    #[test]
+    fn fenchel_young_equality_at_gradient() {
+        let eta = 0.2;
+        for &u in &[-2.0f32, -0.15, 0.0, 0.1, 0.5, 3.0] {
+            let nu = huber_grad(u, eta);
+            let lhs = huber(u, eta) + 0.5 * eta * nu * nu;
+            assert!((lhs - u * nu).abs() < 1e-5, "u={u}: {lhs} vs {}", u * nu);
+        }
+    }
+
+    #[test]
+    fn conjugate_sum_value() {
+        let nu = [0.5f32, -0.5, 1.0];
+        assert!((huber_conjugate(&nu, 0.2) - 0.5 * 0.2 * 1.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,17 @@
+//! Proximal, conjugate, and projection operators from the paper.
+//!
+//! Implements Table II and Appendix A of Chen–Towfic–Sayed 2014:
+//! soft-thresholding operators `T_λ` / `T⁺_λ`, the conjugate values
+//! `S_{γ/δ}` / `S⁺_{γ/δ}` of the (non-negative) elastic net, the Huber
+//! loss and its conjugate, and the projection operators used by the
+//! dictionary update (Eqs. 45/47) and by projected diffusion (Eq. 34).
+
+pub mod huber;
+pub mod project;
+pub mod prox;
+pub mod threshold;
+
+pub use huber::{huber, huber_conjugate, huber_grad, huber_sum};
+pub use project::{clip_linf, project_l1_ball, project_nonneg_unit_ball, project_unit_ball};
+pub use prox::{prox_l1, prox_zero};
+pub use threshold::{s_conj, s_conj_plus, soft_threshold, soft_threshold_plus};

@@ -1,0 +1,214 @@
+//! Projection operators.
+//!
+//! * [`project_unit_ball`] — Eq. 45, dictionary-atom constraint `‖w‖₂ ≤ 1`.
+//! * [`project_nonneg_unit_ball`] — Eq. 47, NMF constraint `‖w‖₂ ≤ 1, w ⪰ 0`.
+//! * [`clip_linf`] — Eq. 34, the `V_f` box for the Huber dual.
+//! * [`project_l1_ball`] — Duchi et al. 2008, used by the ADMM [11] baseline
+//!   whose atoms live in the ℓ1 ball.
+
+use crate::math::vector::{norm2, scale};
+
+/// Project onto the unit ℓ2 ball in place (Eq. 45).
+pub fn project_unit_ball(w: &mut [f32]) {
+    let n = norm2(w);
+    if n > 1.0 {
+        scale(1.0 / n, w);
+    }
+}
+
+/// Project onto `{w : ‖w‖₂ ≤ 1, w ⪰ 0}` in place (Eq. 47): clamp negatives
+/// to zero first, then scale into the ball.
+pub fn project_nonneg_unit_ball(w: &mut [f32]) {
+    for v in w.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    project_unit_ball(w);
+}
+
+/// Entrywise clip to `[-bound, bound]` in place (Eq. 34 with bound 1 — the
+/// projection onto `V_f = {‖ν‖_∞ ≤ 1}` for the Huber conjugate domain).
+pub fn clip_linf(v: &mut [f32], bound: f32) {
+    debug_assert!(bound >= 0.0);
+    for x in v.iter_mut() {
+        *x = x.clamp(-bound, bound);
+    }
+}
+
+/// Project onto the ℓ1 ball of given `radius` (Duchi–Shalev-Shwartz–Singer
+/// –Chandra 2008, O(n log n) sort variant). In place; no-op if already
+/// inside.
+pub fn project_l1_ball(w: &mut [f32], radius: f32) {
+    assert!(radius > 0.0);
+    let l1: f32 = w.iter().map(|v| v.abs()).sum();
+    if l1 <= radius {
+        return;
+    }
+    let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    let mut acc = 0.0f32;
+    let mut theta = 0.0f32;
+    for (i, &m) in mags.iter().enumerate() {
+        acc += m;
+        let t = (acc - radius) / (i as f32 + 1.0);
+        if m - t <= 0.0 {
+            break;
+        }
+        theta = t;
+    }
+    for v in w.iter_mut() {
+        *v = super::threshold::soft_threshold(*v, theta);
+    }
+}
+
+/// Project every column of a row-major `M x K` dictionary onto the unit
+/// ball (the learning-side use of Eq. 45).
+pub fn project_columns_unit_ball(w: &mut [f32], m: usize, k: usize) {
+    debug_assert_eq!(w.len(), m * k);
+    for c in 0..k {
+        let mut nsq = 0.0f32;
+        for r in 0..m {
+            let v = w[r * k + c];
+            nsq += v * v;
+        }
+        if nsq > 1.0 {
+            let inv = 1.0 / nsq.sqrt();
+            for r in 0..m {
+                w[r * k + c] *= inv;
+            }
+        }
+    }
+}
+
+/// Project every column onto the non-negative unit ball (Eq. 47).
+pub fn project_columns_nonneg_unit_ball(w: &mut [f32], m: usize, k: usize) {
+    debug_assert_eq!(w.len(), m * k);
+    for c in 0..k {
+        let mut nsq = 0.0f32;
+        for r in 0..m {
+            let v = w[r * k + c].max(0.0);
+            w[r * k + c] = v;
+            nsq += v * v;
+        }
+        if nsq > 1.0 {
+            let inv = 1.0 / nsq.sqrt();
+            for r in 0..m {
+                w[r * k + c] *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::vector::{norm1, norm2};
+
+    #[test]
+    fn unit_ball_inside_untouched() {
+        let mut w = vec![0.3, 0.4];
+        project_unit_ball(&mut w);
+        assert_eq!(w, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn unit_ball_outside_scaled_to_boundary() {
+        let mut w = vec![3.0, 4.0];
+        project_unit_ball(&mut w);
+        assert!((norm2(&w) - 1.0).abs() < 1e-6);
+        assert!((w[0] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nonneg_ball_clamps_then_scales() {
+        let mut w = vec![-5.0, 3.0, 4.0];
+        project_nonneg_unit_ball(&mut w);
+        assert_eq!(w[0], 0.0);
+        assert!((norm2(&w) - 1.0).abs() < 1e-6);
+        assert!(w.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn clip_linf_boxes() {
+        let mut v = vec![-2.0, -0.5, 0.0, 0.5, 2.0];
+        clip_linf(&mut v, 1.0);
+        assert_eq!(v, vec![-1.0, -0.5, 0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn l1_ball_inside_untouched() {
+        let mut w = vec![0.2, -0.3];
+        project_l1_ball(&mut w, 1.0);
+        assert_eq!(w, vec![0.2, -0.3]);
+    }
+
+    #[test]
+    fn l1_ball_projection_properties() {
+        let mut w = vec![3.0, -1.0, 0.5, 0.0];
+        let orig = w.clone();
+        project_l1_ball(&mut w, 1.0);
+        assert!((norm1(&w) - 1.0).abs() < 1e-5, "norm1 {}", norm1(&w));
+        // Signs preserved, magnitudes shrunk.
+        for (a, b) in w.iter().zip(&orig) {
+            assert!(a.abs() <= b.abs() + 1e-6);
+            assert!(a * b >= 0.0);
+        }
+    }
+
+    /// The ℓ1 projection must be the closest point — check against a brute
+    /// force search on a 2D grid.
+    #[test]
+    fn l1_ball_is_euclidean_projection_2d() {
+        let target = [1.5f32, 0.7];
+        let mut w = target;
+        project_l1_ball(&mut w, 1.0);
+        let d_proj = (w[0] - target[0]).powi(2) + (w[1] - target[1]).powi(2);
+        // Brute-force over the ℓ1 sphere boundary.
+        let mut best = f32::MAX;
+        let steps = 4000;
+        for i in 0..=steps {
+            let a = i as f32 / steps as f32; // |x| = a, |y| = 1-a
+            for (sx, sy) in [(1.0f32, 1.0f32), (1.0, -1.0), (-1.0, 1.0), (-1.0, -1.0)] {
+                let (x, y) = (sx * a, sy * (1.0 - a));
+                let d = (x - target[0]).powi(2) + (y - target[1]).powi(2);
+                best = best.min(d);
+            }
+        }
+        assert!(d_proj <= best + 1e-4, "proj dist {d_proj} vs brute {best}");
+    }
+
+    #[test]
+    fn column_projection_matches_vector_projection() {
+        let m = 4;
+        let k = 3;
+        let mut rng = crate::rng::Pcg64::new(5);
+        let mut w: Vec<f32> = (0..m * k).map(|_| 2.0 * rng.next_normal()).collect();
+        let mut cols: Vec<Vec<f32>> = (0..k)
+            .map(|c| (0..m).map(|r| w[r * k + c]).collect())
+            .collect();
+        project_columns_unit_ball(&mut w, m, k);
+        for (c, col) in cols.iter_mut().enumerate() {
+            project_unit_ball(col);
+            for r in 0..m {
+                assert!((w[r * k + c] - col[r]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn nonneg_column_projection() {
+        let m = 3;
+        let k = 2;
+        let mut w = vec![-1.0, 2.0, 3.0, 0.1, 4.0, -0.2];
+        project_columns_nonneg_unit_ball(&mut w, m, k);
+        for c in 0..k {
+            let mut nsq = 0.0;
+            for r in 0..m {
+                assert!(w[r * k + c] >= 0.0);
+                nsq += w[r * k + c] * w[r * k + c];
+            }
+            assert!(nsq <= 1.0 + 1e-6);
+        }
+    }
+}

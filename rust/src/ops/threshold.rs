@@ -1,0 +1,150 @@
+//! Soft-thresholding operators and elastic-net conjugate values (paper
+//! Table II footnotes a–d, Appendix A).
+
+/// Two-sided soft threshold `[T_λ(x)]ₙ = (|xₙ| − λ)₊ · sgn(xₙ)` (Eq. 78).
+#[inline]
+pub fn soft_threshold(x: f32, lambda: f32) -> f32 {
+    let a = x.abs() - lambda;
+    if a > 0.0 {
+        a * x.signum()
+    } else {
+        0.0
+    }
+}
+
+/// One-sided soft threshold `[T⁺_λ(x)]ₙ = (xₙ − λ)₊` (Eq. 86) — the
+/// non-negative (NMF / topic modeling) variant.
+#[inline]
+pub fn soft_threshold_plus(x: f32, lambda: f32) -> f32 {
+    (x - lambda).max(0.0)
+}
+
+/// Vectorized two-sided threshold into `out`.
+pub fn soft_threshold_vec(x: &[f32], lambda: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = soft_threshold(v, lambda);
+    }
+}
+
+/// Vectorized one-sided threshold into `out`.
+pub fn soft_threshold_plus_vec(x: &[f32], lambda: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = soft_threshold_plus(v, lambda);
+    }
+}
+
+/// Elastic-net conjugate value `S_{γ/δ}(x)` (Table II footnote b):
+///
+/// `S_{γ/δ}(x) = −(δ/2)‖T(x)‖₂² − γ‖T(x)‖₁ + δ·xᵀT(x)` with `T = T_{γ/δ}`.
+///
+/// Equals `h*(δ·x)` for `h(y) = γ‖y‖₁ + (δ/2)‖y‖₂²` evaluated at `ν` with
+/// `x = Wᵀν/δ`.
+pub fn s_conj(x: &[f32], gamma: f32, delta: f32) -> f32 {
+    let lam = gamma / delta;
+    let mut acc = 0.0f64;
+    for &v in x {
+        let t = soft_threshold(v, lam);
+        acc += (-0.5 * delta * t * t - gamma * t.abs() + delta * v * t) as f64;
+    }
+    acc as f32
+}
+
+/// Non-negative elastic-net conjugate value `S⁺_{γ/δ}(x)` (Table II
+/// footnote d), with `T⁺ = T⁺_{γ/δ}`.
+pub fn s_conj_plus(x: &[f32], gamma: f32, delta: f32) -> f32 {
+    let lam = gamma / delta;
+    let mut acc = 0.0f64;
+    for &v in x {
+        let t = soft_threshold_plus(v, lam);
+        acc += (-0.5 * delta * t * t - gamma * t + delta * v * t) as f64;
+    }
+    acc as f32
+}
+
+/// Scalar conjugate of the elastic net evaluated directly by maximizing
+/// `a·y − γ|y| − (δ/2)y²` over `y` (closed form). Used by property tests to
+/// validate [`s_conj`].
+pub fn elastic_net_conjugate_direct(a: f32, gamma: f32, delta: f32) -> f32 {
+    // Optimal y = T_{γ/δ}(a/δ); value = a y − γ|y| − δ/2 y².
+    let y = soft_threshold(a / delta, gamma / delta);
+    a * y - gamma * y.abs() - 0.5 * delta * y * y
+}
+
+/// Scalar conjugate of the non-negative elastic net (direct evaluation).
+pub fn nonneg_elastic_net_conjugate_direct(a: f32, gamma: f32, delta: f32) -> f32 {
+    let y = soft_threshold_plus(a / delta, gamma / delta);
+    a * y - gamma * y - 0.5 * delta * y * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn soft_threshold_plus_cases() {
+        assert_eq!(soft_threshold_plus(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold_plus(-3.0, 1.0), 0.0);
+        assert_eq!(soft_threshold_plus(0.5, 1.0), 0.0);
+    }
+
+    /// `S_{γ/δ}(Wᵀν/δ)` must equal the direct supremum value of the
+    /// conjugate — the identity the whole dual construction rests on.
+    #[test]
+    fn s_conj_matches_direct_supremum() {
+        let (gamma, delta) = (0.7f32, 0.3f32);
+        for &a in &[-3.0f32, -1.0, -0.1, 0.0, 0.2, 1.5, 4.0] {
+            // s_conj takes x = a/δ per Table II convention.
+            let via_s = s_conj(&[a / delta], gamma, delta);
+            let direct = elastic_net_conjugate_direct(a, gamma, delta);
+            assert!(
+                (via_s - direct).abs() < 1e-5,
+                "a={a}: S gives {via_s}, direct {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn s_conj_plus_matches_direct_supremum() {
+        let (gamma, delta) = (0.5f32, 0.2f32);
+        for &a in &[-2.0f32, -0.3, 0.0, 0.4, 1.0, 3.0] {
+            let via_s = s_conj_plus(&[a / delta], gamma, delta);
+            let direct = nonneg_elastic_net_conjugate_direct(a, gamma, delta);
+            assert!(
+                (via_s - direct).abs() < 1e-5,
+                "a={a}: S+ gives {via_s}, direct {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn conjugates_are_nonnegative_at_zero_arg() {
+        // h*(0) = -inf h >= -h(0) = 0, and h >= 0 with h(0)=0 => h*(0) = 0.
+        assert!((s_conj(&[0.0], 1.0, 0.5)).abs() < 1e-7);
+        assert!((s_conj_plus(&[0.0], 1.0, 0.5)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn vectorized_matches_scalar() {
+        let x = [-2.0f32, -0.5, 0.0, 0.7, 3.0];
+        let mut out = [0.0f32; 5];
+        soft_threshold_vec(&x, 0.6, &mut out);
+        for (i, &v) in x.iter().enumerate() {
+            assert_eq!(out[i], soft_threshold(v, 0.6));
+        }
+        soft_threshold_plus_vec(&x, 0.6, &mut out);
+        for (i, &v) in x.iter().enumerate() {
+            assert_eq!(out[i], soft_threshold_plus(v, 0.6));
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Distributions built on [`Pcg64`]: Dirichlet and categorical sampling.
+//!
+//! These drive the synthetic topic-model corpus generator
+//! ([`crate::data::corpus`]) that substitutes for the LDC-licensed TDT2
+//! dataset.
+
+use super::Pcg64;
+
+/// Dirichlet distribution over the simplex.
+#[derive(Clone, Debug)]
+pub struct Dirichlet {
+    alpha: Vec<f64>,
+}
+
+impl Dirichlet {
+    /// Symmetric Dirichlet with concentration `alpha` over `k` categories.
+    pub fn symmetric(k: usize, alpha: f64) -> Self {
+        assert!(k > 0 && alpha > 0.0);
+        Dirichlet { alpha: vec![alpha; k] }
+    }
+
+    /// General Dirichlet.
+    pub fn new(alpha: Vec<f64>) -> Self {
+        assert!(!alpha.is_empty() && alpha.iter().all(|&a| a > 0.0));
+        Dirichlet { alpha }
+    }
+
+    /// Draw a probability vector.
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let mut g: Vec<f64> = self.alpha.iter().map(|&a| rng.next_gamma(a)).collect();
+        let s: f64 = g.iter().sum();
+        if s <= 0.0 {
+            // Degenerate draw (possible with tiny alpha): fall back to uniform.
+            let k = g.len() as f64;
+            return vec![1.0 / k; g.len()];
+        }
+        for v in &mut g {
+            *v /= s;
+        }
+        g
+    }
+}
+
+/// Categorical sampler with O(log k) draws via cumulative sums.
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    cdf: Vec<f64>,
+}
+
+impl Categorical {
+    /// Build from (unnormalized) non-negative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0, "categorical weight must be non-negative");
+            acc += w;
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "categorical: all weights zero");
+        for v in &mut cdf {
+            *v /= acc;
+        }
+        Categorical { cdf }
+    }
+
+    /// Draw a category index.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        // Binary search for the first cdf entry >= u.
+        match self
+            .cdf
+            .binary_search_by(|v| v.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirichlet_on_simplex() {
+        let d = Dirichlet::symmetric(5, 0.7);
+        let mut rng = Pcg64::new(31);
+        for _ in 0..100 {
+            let p = d.sample(&mut rng);
+            assert_eq!(p.len(), 5);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_mean_matches_alpha() {
+        let d = Dirichlet::new(vec![2.0, 1.0, 1.0]);
+        let mut rng = Pcg64::new(37);
+        let n = 20_000;
+        let mut m = [0.0f64; 3];
+        for _ in 0..n {
+            let p = d.sample(&mut rng);
+            for i in 0..3 {
+                m[i] += p[i];
+            }
+        }
+        for v in &mut m {
+            *v /= n as f64;
+        }
+        assert!((m[0] - 0.5).abs() < 0.01, "{m:?}");
+        assert!((m[1] - 0.25).abs() < 0.01, "{m:?}");
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let c = Categorical::new(&[1.0, 3.0]);
+        let mut rng = Pcg64::new(41);
+        let n = 40_000;
+        let ones = (0..n).filter(|_| c.sample(&mut rng) == 1).count();
+        let p = ones as f64 / n as f64;
+        assert!((p - 0.75).abs() < 0.01, "p {p}");
+    }
+
+    #[test]
+    fn categorical_zero_weight_never_drawn() {
+        let c = Categorical::new(&[0.0, 1.0, 0.0]);
+        let mut rng = Pcg64::new(43);
+        for _ in 0..1000 {
+            assert_eq!(c.sample(&mut rng), 1);
+        }
+    }
+}

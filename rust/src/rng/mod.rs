@@ -1,0 +1,13 @@
+//! Deterministic random number generation substrate.
+//!
+//! No `rand` crate offline — this module provides a PCG-64 (PCG-XSL-RR)
+//! generator plus the distributions the experiments need: uniform, normal
+//! (Ziggurat-free Box–Muller), Dirichlet, categorical, and Fisher–Yates
+//! shuffling. All experiment drivers take explicit seeds so every figure
+//! is exactly reproducible.
+
+pub mod dist;
+pub mod pcg;
+
+pub use dist::{Categorical, Dirichlet};
+pub use pcg::Pcg64;

@@ -1,0 +1,150 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use crate::config::JsonValue;
+use crate::error::{DdlError, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one AOT artifact, as written by `python/compile/aot.py`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    /// "infer" or "update".
+    pub kind: String,
+    /// Task variant for infer artifacts ("sq" | "nmf" | "huber").
+    pub variant: Option<String>,
+    /// Data dimension M.
+    pub m: usize,
+    /// Agents N (= atoms K on the HLO path).
+    pub n: usize,
+    /// Baked iteration count (infer artifacts).
+    pub iters: Option<usize>,
+    /// Whether the infer artifact also emits the novelty cost.
+    pub with_cost: bool,
+}
+
+/// Registry over an artifacts directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ArtifactRegistry {
+    /// Load `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            DdlError::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let doc = JsonValue::parse(&text)?;
+        let version = doc
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| DdlError::Config("manifest missing version".into()))?;
+        if version != 1 {
+            return Err(DdlError::Config(format!("unsupported manifest version {version}")));
+        }
+        let arts = doc
+            .get("artifacts")
+            .and_then(|v| v.as_object())
+            .ok_or_else(|| DdlError::Config("manifest missing artifacts".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let get_usize = |key: &str| -> Result<usize> {
+                spec.get(key)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| DdlError::Config(format!("artifact {name}: missing {key}")))
+            };
+            let file = spec
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| DdlError::Config(format!("artifact {name}: missing file")))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    kind: spec
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("infer")
+                        .to_string(),
+                    variant: spec.get("variant").and_then(|v| v.as_str()).map(String::from),
+                    m: get_usize("m")?,
+                    n: get_usize("n")?,
+                    iters: spec.get("iters").and_then(|v| v.as_usize()),
+                    with_cost: spec
+                        .get("with_cost")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                },
+            );
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Lookup by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| {
+            DdlError::Runtime(format!(
+                "artifact '{name}' not in manifest ({}); available: {:?}",
+                self.dir.display(),
+                self.artifacts.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("ddl_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "scale": "tiny", "artifacts": {
+                "quickstart_infer": {"file": "quickstart_infer.hlo.txt", "kind": "infer",
+                  "variant": "sq", "m": 16, "n": 8, "iters": 60, "with_cost": false,
+                  "inputs": ["wt","x","at","theta","params"], "outputs": ["v","y"]}
+            }}"#,
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        let a = reg.get("quickstart_infer").unwrap();
+        assert_eq!(a.m, 16);
+        assert_eq!(a.n, 8);
+        assert_eq!(a.iters, Some(60));
+        assert_eq!(a.variant.as_deref(), Some("sq"));
+        assert!(!a.with_cost);
+        assert!(reg.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_and_bad_manifests() {
+        let dir = std::env::temp_dir().join("ddl_manifest_missing");
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        write_manifest(&dir, r#"{"version": 99, "artifacts": {}}"#);
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        write_manifest(&dir, r#"{"version": 1, "artifacts": {"x": {"kind": "infer"}}}"#);
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

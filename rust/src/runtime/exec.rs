@@ -1,0 +1,194 @@
+//! PJRT execution: compile HLO-text artifacts once, run them repeatedly
+//! from the coordinator's request path.
+
+use crate::error::{DdlError, Result};
+use crate::math::Mat;
+use crate::runtime::artifact::{ArtifactInfo, ArtifactRegistry};
+use std::path::Path;
+
+/// Outputs of one inference execution.
+#[derive(Clone, Debug)]
+pub struct InferOutput {
+    /// Stacked dual iterates `V (N, M)`.
+    pub v: Mat,
+    /// Recovered coefficients `y (N,)` (one atom per agent).
+    pub y: Vec<f32>,
+    /// Novelty score (artifacts exported `with_cost`).
+    pub cost: Option<f32>,
+}
+
+/// PJRT runtime: a CPU client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+}
+
+/// A compiled inference artifact bound to its metadata.
+pub struct LoadedInfer {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ArtifactInfo,
+}
+
+/// A compiled dictionary-update artifact.
+pub struct LoadedUpdate {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ArtifactInfo,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, registry })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<String> {
+        self.registry.names().map(String::from).collect()
+    }
+
+    fn compile(&self, info: &ArtifactInfo) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&info.file).map_err(|e| {
+            DdlError::Runtime(format!("loading {}: {e}", info.file.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Compile an inference artifact.
+    pub fn load_infer(&self, name: &str) -> Result<LoadedInfer> {
+        let info = self.registry.get(name)?.clone();
+        if info.kind != "infer" {
+            return Err(DdlError::Runtime(format!("artifact {name} is not an infer graph")));
+        }
+        Ok(LoadedInfer { exe: self.compile(&info)?, info })
+    }
+
+    /// Compile a dictionary-update artifact.
+    pub fn load_update(&self, name: &str) -> Result<LoadedUpdate> {
+        let info = self.registry.get(name)?.clone();
+        if info.kind != "update" {
+            return Err(DdlError::Runtime(format!("artifact {name} is not an update graph")));
+        }
+        Ok(LoadedUpdate { exe: self.compile(&info)?, info })
+    }
+}
+
+/// Pack a row-major matrix into an XLA literal of shape `(rows, cols)`.
+fn mat_literal(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.as_slice()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Pack a vector into an XLA literal of shape `(len,)`.
+fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Unpack a literal into a `Mat` of the expected shape.
+fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data = lit.to_vec::<f32>()?;
+    Mat::from_vec(rows, cols, data)
+}
+
+/// The packed scalar parameter block (must match kernels/diffusion.py).
+#[derive(Clone, Copy, Debug)]
+pub struct ParamPack {
+    pub mu: f32,
+    pub gamma: f32,
+    pub delta: f32,
+    /// `c_f / N` with `∇f*(ν) = c_f ν`.
+    pub cf_over_n: f32,
+    pub clip_bound: f32,
+}
+
+impl ParamPack {
+    /// Derive from a task spec and network size.
+    pub fn from_task(task: &crate::model::TaskSpec, n: usize, mu: f32) -> Self {
+        ParamPack {
+            mu,
+            gamma: task.gamma(),
+            delta: task.delta(),
+            cf_over_n: task.conj_grad_scale() / n as f32,
+            clip_bound: task.dual_clip().unwrap_or(0.0),
+        }
+    }
+
+    fn to_vec(self) -> Vec<f32> {
+        vec![self.mu, self.gamma, self.delta, self.cf_over_n, 0.0, self.clip_bound, 0.0, 0.0]
+    }
+}
+
+impl LoadedInfer {
+    /// Execute: inputs are the transposed dictionary `Wt (N, M)` (row k =
+    /// atom of agent k), the sample `x (M,)`, the transposed combination
+    /// matrix `At (N, N)`, the informed mask `theta (N,)`, and the scalar
+    /// params.
+    pub fn run(&self, wt: &Mat, x: &[f32], at: &Mat, theta: &[f32], p: ParamPack) -> Result<InferOutput> {
+        let (n, m) = (self.info.n, self.info.m);
+        if wt.shape() != (n, m) || at.shape() != (n, n) || x.len() != m || theta.len() != n {
+            return Err(DdlError::Shape(format!(
+                "artifact {} expects Wt ({n},{m}), x ({m},), At ({n},{n}); got Wt {:?}, x {}, At {:?}",
+                self.info.name,
+                wt.shape(),
+                x.len(),
+                at.shape()
+            )));
+        }
+        let inputs = [
+            mat_literal(wt)?,
+            vec_literal(x),
+            mat_literal(at)?,
+            vec_literal(theta),
+            vec_literal(&p.to_vec()),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let expected = if self.info.with_cost { 3 } else { 2 };
+        if tuple.len() != expected {
+            return Err(DdlError::Runtime(format!(
+                "artifact {}: expected {expected}-tuple, got {}",
+                self.info.name,
+                tuple.len()
+            )));
+        }
+        let v = literal_to_mat(&tuple[0], n, m)?;
+        let y = tuple[1].to_vec::<f32>()?;
+        let cost = if self.info.with_cost {
+            Some(tuple[2].to_vec::<f32>()?[0])
+        } else {
+            None
+        };
+        Ok(InferOutput { v, y, cost })
+    }
+}
+
+impl LoadedUpdate {
+    /// Execute the Eq. 51 update: `Wt' = Π(Wt + μ_w y νᵀ)`.
+    pub fn run(&self, wt: &Mat, nu: &[f32], y: &[f32], mu_w: f32) -> Result<Mat> {
+        let (n, m) = (self.info.n, self.info.m);
+        if wt.shape() != (n, m) || nu.len() != m || y.len() != n {
+            return Err(DdlError::Shape(format!(
+                "artifact {}: shape mismatch (Wt {:?}, nu {}, y {})",
+                self.info.name,
+                wt.shape(),
+                nu.len(),
+                y.len()
+            )));
+        }
+        let inputs = [
+            mat_literal(wt)?,
+            vec_literal(nu),
+            vec_literal(y),
+            xla::Literal::scalar(mu_w),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        literal_to_mat(&out, n, m)
+    }
+}

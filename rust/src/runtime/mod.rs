@@ -1,0 +1,19 @@
+//! PJRT runtime bridge: load the AOT HLO artifacts and execute them from
+//! the rust request path.
+//!
+//! Python (L1/L2) runs once at `make artifacts`; afterwards this module is
+//! the only touchpoint with the compiled computations:
+//!
+//! ```text
+//! PjRtClient::cpu() → HloModuleProto::from_text_file → client.compile
+//!                   → executable.execute(literals)
+//! ```
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactInfo, ArtifactRegistry};
+pub use exec::{InferOutput, LoadedInfer, LoadedUpdate, Runtime};

@@ -1,0 +1,208 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Seeded generators + linear shrinking: on failure the runner retries with
+//! progressively "smaller" inputs (shrunk toward zero / shorter) and reports
+//! the smallest failing case. Deliberately tiny but covers what the
+//! invariant tests need: scalars, vectors, matrices, and graphs.
+
+use crate::rng::Pcg64;
+
+/// A generated value together with shrink candidates.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    /// Draw a value.
+    fn gen(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Produce progressively simpler variants of `v` (possibly empty).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Uniform `f32` in `[lo, hi]`.
+pub struct F32Range {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for F32Range {
+    type Value = f32;
+    fn gen(&self, rng: &mut Pcg64) -> f32 {
+        self.lo + (self.hi - self.lo) * rng.next_f32()
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let zero = self.lo.max(0.0f32.min(self.hi));
+        if (*v - zero).abs() < 1e-6 {
+            Vec::new()
+        } else {
+            vec![zero, (*v + zero) / 2.0]
+        }
+    }
+}
+
+/// Vector of `f32` with length in `[min_len, max_len]` and entries in
+/// `[lo, hi]`.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn gen(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let span = (self.max_len - self.min_len) as u64;
+        let len = self.min_len + if span > 0 { rng.next_below(span + 1) as usize } else { 0 };
+        (0..len)
+            .map(|_| self.lo + (self.hi - self.lo) * rng.next_f32())
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2].to_vec().into_iter().chain(std::iter::empty()).collect::<Vec<_>>());
+            let mut half = v.clone();
+            half.truncate((v.len() + self.min_len) / 2);
+            out.push(half);
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|&x| x / 2.0).collect());
+            out.push(vec![0.0; v.len()]);
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn gen(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropFailure<V: std::fmt::Debug> {
+    pub seed: u64,
+    pub case: usize,
+    pub original: V,
+    pub shrunk: V,
+    pub message: String,
+}
+
+/// Run `prop` over `cases` generated inputs; on failure shrink (up to 200
+/// steps) and panic with the minimal counterexample.
+pub fn check<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let v = gen.gen(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Shrink loop.
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= 200 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed {seed}, case {case}):\n  original: {v:?}\n  shrunk:   {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are close within `atol + rtol·|b|`, with a helpful
+/// message naming the first offending index.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "index {i}: {x} vs {y} (|diff| {} > tol {tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 100, &VecF32 { min_len: 0, max_len: 20, lo: -1.0, hi: 1.0 }, |v| {
+            if v.iter().all(|x| x.abs() <= 1.0) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_case() {
+        check(2, 100, &VecF32 { min_len: 1, max_len: 30, lo: -10.0, hi: 10.0 }, |v| {
+            // False property: all sums are below 5.
+            if v.iter().sum::<f32>() < 5.0 {
+                Ok(())
+            } else {
+                Err(format!("sum = {}", v.iter().sum::<f32>()))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_magnitude() {
+        let g = F32Range { lo: 0.0, hi: 100.0 };
+        let cands = g.shrink(&64.0);
+        assert!(cands.iter().any(|&c| c < 64.0));
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        let g = Pair(F32Range { lo: 0.0, hi: 1.0 }, F32Range { lo: 5.0, hi: 6.0 });
+        let mut rng = Pcg64::new(3);
+        let (a, b) = g.gen(&mut rng);
+        assert!((0.0..=1.0).contains(&a));
+        assert!((5.0..=6.0).contains(&b));
+    }
+
+    #[test]
+    fn assert_close_accepts_within_tol() {
+        assert_close(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "index 1")]
+    fn assert_close_names_index() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-3, 0.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! End-to-end integration: the full stack composes.
+//!
+//! * quickstart: artifacts load, HLO inference matches native, update runs;
+//! * HLO-driven training: a short online training loop where *inference
+//!   runs through the PJRT executable* and the dictionary update runs
+//!   through the update artifact — Python never appears on this path.
+
+use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::rng::Pcg64;
+use ddl::runtime::exec::ParamPack;
+use ddl::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn quickstart_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut lines = Vec::new();
+    ddl::coordinator::quickstart::run_quickstart(dir, &mut |s| lines.push(s.to_string()))
+        .expect("quickstart should succeed");
+    assert!(lines.iter().any(|l| l.contains("quickstart OK")));
+}
+
+/// Train on planted-dictionary data with inference + update both on the
+/// HLO path; the representation loss must drop.
+#[test]
+fn hlo_training_loop_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let infer = rt.load_infer("quickstart_infer").unwrap();
+    let (n, m) = (infer.info.n, infer.info.m);
+
+    // The update artifact shapes must match quickstart's; otherwise use the
+    // native update (still an end-to-end inference test).
+    let update = rt.load_update("denoise_update").ok().filter(|u| u.info.n == n && u.info.m == m);
+
+    let mut rng = Pcg64::new(0xE2E);
+    let planted = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let sample = |rng: &mut Pcg64| -> Vec<f32> {
+        let mut x = vec![0.0f32; m];
+        for _ in 0..2 {
+            let q = rng.next_below(n as u64) as usize;
+            ddl::math::vector::axpy(0.5 + rng.next_f32(), &planted.atom(q), &mut x);
+        }
+        x
+    };
+
+    let mut dict = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+    let a = metropolis_weights(&g);
+    let at = a.transpose();
+    let theta = vec![1.0 / n as f32; n];
+    let task = TaskSpec::SparseCoding { gamma: 0.05, delta: 0.2 };
+    let pack = ParamPack::from_task(&task, n, 0.3);
+    let mu_w = 0.05f32;
+
+    let loss = |dict: &DistributedDictionary, xs: &[Vec<f32>]| -> f32 {
+        xs.iter()
+            .map(|x| {
+                let out = infer
+                    .run(&dict.mat().transpose(), x, &at, &theta, pack)
+                    .unwrap();
+                let wy = dict.mat().matvec(&out.y).unwrap();
+                let r = ddl::math::vector::sub(x, &wy);
+                task.f_loss(&r)
+            })
+            .sum::<f32>()
+    };
+
+    let probe: Vec<Vec<f32>> = (0..8).map(|_| sample(&mut rng)).collect();
+    let before = loss(&dict, &probe);
+
+    for _ in 0..120 {
+        let x = sample(&mut rng);
+        let out = infer.run(&dict.mat().transpose(), &x, &at, &theta, pack).unwrap();
+        let nu = out.v.row(0).to_vec(); // any agent's estimate post-consensus
+        match &update {
+            Some(u) => {
+                let wt2 = u.run(&dict.mat().transpose(), &nu, &out.y, mu_w).unwrap();
+                *dict.mat_mut() = wt2.transpose();
+            }
+            None => {
+                for k in 0..n {
+                    dict.block_gradient_step(k, mu_w, &nu, &out.y);
+                    dict.project_block(k, task.atom_constraint());
+                }
+            }
+        }
+    }
+    let after = loss(&dict, &probe);
+    assert!(
+        after < 0.8 * before,
+        "HLO training loop did not reduce loss: {before} → {after}"
+    );
+}

@@ -1,0 +1,198 @@
+//! Integration: the AOT HLO path must match the native rust engine.
+//!
+//! This is the three-layer contract test — L1 Pallas kernels lowered
+//! through L2 into `artifacts/*.hlo.txt`, executed via PJRT from L3, are
+//! compared against the pure-rust `DiffusionEngine` on identical inputs.
+//!
+//! Requires `make artifacts` (skips with a message when absent, so plain
+//! `cargo test` works before the python step).
+
+use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::infer::{DiffusionEngine, DiffusionParams};
+use ddl::math::Mat;
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::rng::Pcg64;
+use ddl::runtime::exec::ParamPack;
+use ddl::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// Build a problem matching an infer artifact's (n, m).
+fn problem(n: usize, m: usize, seed: u64, nonneg: bool) -> (DistributedDictionary, Mat, Vec<f32>, Graph) {
+    let mut rng = Pcg64::new(seed);
+    let constraint = if nonneg { AtomConstraint::NonNegUnitBall } else { AtomConstraint::UnitBall };
+    let dict = DistributedDictionary::random(m, n, n, constraint, &mut rng).unwrap();
+    let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+    let a = metropolis_weights(&g);
+    let x = rng.normal_vec(m);
+    (dict, a, x, g)
+}
+
+/// Transposed-dictionary view for the HLO path (row k = atom k).
+fn wt_of(dict: &DistributedDictionary) -> Mat {
+    dict.mat().transpose()
+}
+
+#[test]
+fn quickstart_infer_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let infer = rt.load_infer("quickstart_infer").unwrap();
+    let (n, m) = (infer.info.n, infer.info.m);
+    let iters = infer.info.iters.unwrap();
+    let (dict, a, x, _) = problem(n, m, 42, false);
+    let task = TaskSpec::SparseCoding { gamma: 0.3, delta: 0.4 };
+    let mu = 0.25f32;
+
+    // HLO path.
+    let theta = vec![1.0 / n as f32; n];
+    let out = infer
+        .run(&wt_of(&dict), &x, &a.transpose(), &theta, ParamPack::from_task(&task, n, mu))
+        .unwrap();
+
+    // Native path.
+    let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+    eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+
+    for k in 0..n {
+        for i in 0..m {
+            let h = out.v.get(k, i);
+            let r = eng.nu(k)[i];
+            assert!(
+                (h - r).abs() <= 1e-4 + 1e-3 * r.abs(),
+                "V[{k},{i}]: hlo {h} vs native {r}"
+            );
+        }
+    }
+    let y_native = eng.recover_y(&dict, &task);
+    for k in 0..n {
+        assert!(
+            (out.y[k] - y_native[k]).abs() <= 1e-4 + 1e-3 * y_native[k].abs(),
+            "y[{k}]: hlo {} vs native {}",
+            out.y[k],
+            y_native[k]
+        );
+    }
+}
+
+#[test]
+fn novelty_huber_infer_matches_native_and_scores() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let infer = rt.load_infer("novelty_huber_infer").unwrap();
+    let (n, m) = (infer.info.n, infer.info.m);
+    let iters = infer.info.iters.unwrap();
+    let (dict, a, mut x, _) = problem(n, m, 7, true);
+    for v in &mut x {
+        *v = v.abs();
+    }
+    ddl::math::vector::normalize(&mut x);
+    let task = TaskSpec::HuberNmf { gamma: 0.2, delta: 0.1, eta: 0.2 };
+    let mu = 0.1f32;
+
+    let theta = vec![1.0 / n as f32; n];
+    let out = infer
+        .run(&wt_of(&dict), &x, &a.transpose(), &theta, ParamPack::from_task(&task, n, mu))
+        .unwrap();
+
+    let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+    eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+
+    // Dual iterates match.
+    for k in 0..n {
+        for i in 0..m {
+            let h = out.v.get(k, i);
+            let r = eng.nu(k)[i];
+            assert!((h - r).abs() <= 1e-4 + 1e-3 * r.abs(), "V[{k},{i}]: {h} vs {r}");
+        }
+    }
+    // Box respected.
+    assert!(out.v.max_abs() <= 1.0 + 1e-5);
+    // Cost matches the native novelty score g = −Σ J_k evaluated on the
+    // same iterates.
+    let cost = out.cost.expect("huber artifact exports cost");
+    let nu_bar = eng.consensus_nu();
+    // Native: f*(ν̄) − ν̄ᵀx + Σ_k h*_k(own rows).
+    let mut hsum = 0.0f32;
+    let mut s = vec![0.0f32; dict.k()];
+    for k in 0..n {
+        dict.block_correlations(k, eng.nu(k), &mut s);
+        let (start, len) = dict.block(k);
+        hsum += task.h_conj(&s[start..start + len]);
+    }
+    let native_cost =
+        -(task.f_conj(&nu_bar) - ddl::math::blas::dot(&nu_bar, &x) + hsum);
+    assert!(
+        (cost - native_cost).abs() <= 1e-3 + 1e-2 * native_cost.abs(),
+        "cost: hlo {cost} vs native {native_cost}"
+    );
+}
+
+#[test]
+fn dict_update_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let update = rt.load_update("denoise_update").unwrap();
+    let (n, m) = (update.info.n, update.info.m);
+    let mut rng = Pcg64::new(9);
+    let mut dict =
+        DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let nu = rng.normal_vec(m);
+    let y = rng.normal_vec(n);
+    let mu_w = 0.3f32;
+
+    let wt_new = update.run(&wt_of(&dict), &nu, &y, mu_w).unwrap();
+
+    // Native Eq. 51 with the same consensus nu at every agent.
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.1 };
+    for k in 0..n {
+        dict.block_gradient_step(k, mu_w, &nu, &y);
+        dict.project_block(k, task.atom_constraint());
+    }
+    let native_wt = wt_of(&dict);
+    for k in 0..n {
+        for i in 0..m {
+            let h = wt_new.get(k, i);
+            let r = native_wt.get(k, i);
+            assert!((h - r).abs() <= 1e-5 + 1e-4 * r.abs(), "Wt[{k},{i}]: {h} vs {r}");
+        }
+    }
+}
+
+#[test]
+fn informed_subset_via_theta_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let infer = rt.load_infer("quickstart_infer").unwrap();
+    let (n, m) = (infer.info.n, infer.info.m);
+    let iters = infer.info.iters.unwrap();
+    let (dict, a, x, _) = problem(n, m, 11, false);
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.4 };
+    let mu = 0.2f32;
+
+    // Only agent 0 informed: theta = e0 (|N_I| = 1).
+    let mut theta = vec![0.0f32; n];
+    theta[0] = 1.0;
+    let out = infer
+        .run(&wt_of(&dict), &x, &a.transpose(), &theta, ParamPack::from_task(&task, n, mu))
+        .unwrap();
+
+    let mut eng = DiffusionEngine::new(&a, m, Some(&[0])).unwrap();
+    eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+    for k in 0..n {
+        for i in 0..m {
+            let h = out.v.get(k, i);
+            let r = eng.nu(k)[i];
+            assert!((h - r).abs() <= 1e-4 + 1e-3 * r.abs(), "V[{k},{i}]: {h} vs {r}");
+        }
+    }
+}

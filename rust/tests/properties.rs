@@ -1,0 +1,262 @@
+//! Cross-module property tests (seeded generators + shrinking from
+//! `ddl::testutil`). These pin down the mathematical invariants the whole
+//! reproduction rests on.
+
+use ddl::graph::{is_doubly_stochastic, metropolis_weights, Graph, Topology};
+use ddl::infer::cost::dual_cost_sum;
+use ddl::math::Mat;
+use ddl::metrics::auc;
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::ops::{project_l1_ball, project_nonneg_unit_ball, project_unit_ball};
+use ddl::rng::Pcg64;
+use ddl::testutil::{check, F32Range, VecF32};
+
+/// Metropolis weights are doubly stochastic for any connected G(n, p).
+#[test]
+fn prop_metropolis_doubly_stochastic() {
+    let mut rng = Pcg64::new(0xA1);
+    for trial in 0..40 {
+        let n = 3 + (rng.next_below(30) as usize);
+        let p = 0.15 + 0.8 * rng.next_f64();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p }, &mut rng);
+        let a = metropolis_weights(&g);
+        assert!(is_doubly_stochastic(&a, 1e-4), "trial {trial}: n={n}, p={p:.2}");
+    }
+}
+
+/// Euclidean projections are idempotent and non-expansive toward the set.
+#[test]
+fn prop_projections_idempotent() {
+    let gen = VecF32 { min_len: 1, max_len: 40, lo: -5.0, hi: 5.0 };
+    check(0xB2, 120, &gen, |v| {
+        let mut a = v.clone();
+        project_unit_ball(&mut a);
+        let mut b = a.clone();
+        project_unit_ball(&mut b);
+        if ddl::math::vector::dist_sq(&a, &b) > 1e-10 {
+            return Err("unit-ball projection not idempotent".into());
+        }
+        let mut c = v.clone();
+        project_nonneg_unit_ball(&mut c);
+        if c.iter().any(|&x| x < 0.0) || ddl::math::vector::norm2(&c) > 1.0 + 1e-5 {
+            return Err(format!("nonneg ball violated: {c:?}"));
+        }
+        let mut d = v.clone();
+        project_l1_ball(&mut d, 1.0);
+        if ddl::math::vector::norm1(&d) > 1.0 + 1e-4 {
+            return Err(format!("l1 ball violated: norm {}", ddl::math::vector::norm1(&d)));
+        }
+        let mut e = d.clone();
+        project_l1_ball(&mut e, 1.0);
+        if ddl::math::vector::dist_sq(&d, &e) > 1e-8 {
+            return Err("l1 projection not idempotent".into());
+        }
+        Ok(())
+    });
+}
+
+/// Fenchel–Young: h(y) + h*(Wᵀν) ≥ (Wᵀν)ᵀ y for the elastic net (feasible
+/// y only for the non-negative variant).
+#[test]
+fn prop_fenchel_young_elastic_net() {
+    let mut rng = Pcg64::new(0xC3);
+    for _ in 0..200 {
+        let k = 1 + rng.next_below(6) as usize;
+        let gamma = 0.05 + rng.next_f32();
+        let delta = 0.05 + rng.next_f32();
+        let a: Vec<f32> = (0..k).map(|_| 3.0 * (rng.next_f32() - 0.5)).collect();
+        for task in [
+            TaskSpec::SparseCoding { gamma, delta },
+            TaskSpec::Nmf { gamma, delta },
+        ] {
+            let y: Vec<f32> = (0..k)
+                .map(|_| {
+                    let v = 2.0 * (rng.next_f32() - 0.5);
+                    if matches!(task, TaskSpec::Nmf { .. }) {
+                        v.abs()
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let h = task.h_reg(&y);
+            let hstar = task.h_conj(&a);
+            let inner = ddl::math::blas::dot(&a, &y);
+            assert!(
+                h + hstar >= inner - 1e-3 * (1.0 + inner.abs()),
+                "{task:?}: FY violated: h {h} + h* {hstar} < {inner}"
+            );
+        }
+    }
+}
+
+/// Weak duality: for every ν and every feasible y,
+/// g(ν) = −Σ J_k(ν) ≤ f(x − Wy) + h(y).
+#[test]
+fn prop_weak_duality() {
+    let mut rng = Pcg64::new(0xD4);
+    for trial in 0..60 {
+        let m = 4 + rng.next_below(10) as usize;
+        let k = 2 + rng.next_below(6) as usize;
+        let dict =
+            DistributedDictionary::random(m, k, k, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let x = rng.normal_vec(m);
+        let gamma = 0.05 + 0.5 * rng.next_f32();
+        let delta = 0.1 + 0.5 * rng.next_f32();
+        let task = TaskSpec::SparseCoding { gamma, delta };
+        let nu = rng.normal_vec(m);
+        let y = rng.normal_vec(k);
+        let g = -dual_cost_sum(&dict, &task, &nu, &x);
+        let wy = dict.mat().matvec(&y).unwrap();
+        let resid = ddl::math::vector::sub(&x, &wy);
+        let primal = task.f_loss(&resid) + task.h_reg(&y);
+        assert!(
+            g <= primal + 1e-3 * (1.0 + primal.abs()),
+            "trial {trial}: weak duality violated: g {g} > primal {primal}"
+        );
+    }
+}
+
+/// Huber weak duality with the ℓ∞ dual-domain constraint.
+#[test]
+fn prop_weak_duality_huber() {
+    let mut rng = Pcg64::new(0xE5);
+    for _ in 0..60 {
+        let m = 4 + rng.next_below(8) as usize;
+        let k = 2 + rng.next_below(4) as usize;
+        let dict =
+            DistributedDictionary::random(m, k, k, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::HuberNmf { gamma: 0.2, delta: 0.3, eta: 0.2 };
+        // ν must lie in V_f.
+        let mut nu = rng.normal_vec(m);
+        ddl::ops::clip_linf(&mut nu, 1.0);
+        let y: Vec<f32> = rng.normal_vec(k).iter().map(|v| v.abs()).collect();
+        let g = -dual_cost_sum(&dict, &task, &nu, &x);
+        let wy = dict.mat().matvec(&y).unwrap();
+        let resid = ddl::math::vector::sub(&x, &wy);
+        let primal = task.f_loss(&resid) + task.h_reg(&y);
+        assert!(g <= primal + 1e-3 * (1.0 + primal.abs()), "g {g} > primal {primal}");
+    }
+}
+
+/// AUC is invariant under strictly monotone transforms of the scores.
+#[test]
+fn prop_auc_monotone_invariant() {
+    let mut rng = Pcg64::new(0xF6);
+    for _ in 0..30 {
+        let n = 20 + rng.next_below(200) as usize;
+        let scores: Vec<f64> = (0..n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.4).collect();
+        if labels.iter().all(|&l| l) || labels.iter().all(|&l| !l) {
+            continue;
+        }
+        let base = auc(&scores, &labels);
+        let warped: Vec<f64> = scores.iter().map(|&s| (s * 1.7).exp()).collect();
+        let a2 = auc(&warped, &labels);
+        assert!((base - a2).abs() < 1e-12, "{base} vs {a2}");
+    }
+}
+
+/// The diffusion fixed point scales correctly: scaling x scales ν° for the
+/// (unregularized-path) linear regime γ = 0 where the dual is linear.
+#[test]
+fn prop_dual_linearity_gamma_zero() {
+    let mut rng = Pcg64::new(0x17);
+    let m = 8;
+    let k = 5;
+    let dict = DistributedDictionary::random(m, k, k, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let task = TaskSpec::SparseCoding { gamma: 0.0, delta: 0.5 };
+    let x = rng.normal_vec(m);
+    let sol1 = ddl::infer::exact_dual(&dict, &task, &x, 1e-9, 20000).unwrap();
+    let x2: Vec<f32> = x.iter().map(|v| 2.0 * v).collect();
+    let sol2 = ddl::infer::exact_dual(&dict, &task, &x2, 1e-9, 20000).unwrap();
+    for i in 0..m {
+        assert!(
+            (2.0 * sol1.nu[i] - sol2.nu[i]).abs() < 1e-3 * (1.0 + sol2.nu[i].abs()),
+            "i={i}: {} vs {}",
+            2.0 * sol1.nu[i],
+            sol2.nu[i]
+        );
+    }
+}
+
+/// Dictionary expansion never disturbs previously learned atoms, across
+/// random sizes.
+#[test]
+fn prop_expand_preserves_prefix() {
+    let mut rng = Pcg64::new(0x28);
+    for _ in 0..25 {
+        let m = 4 + rng.next_below(12) as usize;
+        let k = 2 + rng.next_below(6) as usize;
+        let extra = 1 + rng.next_below(5) as usize;
+        let mut d =
+            DistributedDictionary::random(m, k, k, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let before: Vec<Vec<f32>> = (0..k).map(|q| d.atom(q)).collect();
+        d.expand(extra, extra, AtomConstraint::NonNegUnitBall, &mut rng).unwrap();
+        for (q, b) in before.iter().enumerate() {
+            let after = d.atom(q);
+            assert_eq!(&after, b, "atom {q} changed by expansion");
+        }
+        assert_eq!(d.k(), k + extra);
+    }
+}
+
+/// The trainer must reject malformed inputs instead of corrupting state.
+#[test]
+fn failure_injection_shape_mismatches() {
+    let mut rng = Pcg64::new(0x39);
+    let dict =
+        DistributedDictionary::random(8, 4, 4, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let a = ddl::graph::uniform_weights(4);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+    let mut eng = ddl::infer::DiffusionEngine::new(&a, 8, None).unwrap();
+    // Wrong x length.
+    assert!(eng
+        .run(&dict, &task, &[0.0; 7], ddl::infer::DiffusionParams { mu: 0.1, iters: 1 })
+        .is_err());
+    // Wrong dictionary dimension.
+    let dict_bad =
+        DistributedDictionary::random(9, 4, 4, AtomConstraint::UnitBall, &mut rng).unwrap();
+    assert!(eng
+        .run(&dict_bad, &task, &[0.0; 8], ddl::infer::DiffusionParams { mu: 0.1, iters: 1 })
+        .is_err());
+    // Wrong agent count.
+    let dict_n =
+        DistributedDictionary::random(8, 6, 6, AtomConstraint::UnitBall, &mut rng).unwrap();
+    assert!(eng
+        .run(&dict_n, &task, &[0.0; 8], ddl::infer::DiffusionParams { mu: 0.1, iters: 1 })
+        .is_err());
+    // Non-square combination matrix.
+    assert!(ddl::infer::DiffusionEngine::new(&Mat::zeros(3, 4), 8, None).is_err());
+}
+
+/// gemm must agree with the naive triple loop on adversarial shapes
+/// (shrinking finds minimal failing dims if the microkernel breaks).
+#[test]
+fn prop_gemm_matches_naive() {
+    let shape_gen = VecF32 { min_len: 3, max_len: 3, lo: 1.0, hi: 40.0 };
+    check(0x4A, 40, &shape_gen, |dims| {
+        let (m, n, k) = (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+        let mut rng = Pcg64::new((m * 1000 + n * 100 + k) as u64);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let mut c = vec![0.0f32; m * n];
+        ddl::math::blas::gemm(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                if (c[i * n + j] - acc).abs() > 1e-3 * (1.0 + acc.abs()) {
+                    return Err(format!("({m},{n},{k}) at [{i},{j}]: {} vs {acc}", c[i * n + j]));
+                }
+            }
+        }
+        Ok(())
+    });
+    let _ = F32Range { lo: 0.0, hi: 1.0 }; // keep the generator API exercised
+}
