@@ -44,7 +44,7 @@ fn main() {
         ("single", Some(vec![0usize])),
     ] {
         let mut eng = DiffusionEngine::new(&a, m, informed.as_deref()).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(mu, iters)).unwrap();
         let nu = eng.consensus_nu();
         let err = ddl::math::vector::dist_sq(&nu, &exact.nu).sqrt()
             / ddl::math::vector::norm2(&exact.nu);
@@ -71,7 +71,7 @@ fn main() {
         let a = metropolis_weights(&g);
         let gap = spectral_gap(&a);
         let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(mu, iters)).unwrap();
         let nu = eng.consensus_nu();
         let err = ddl::math::vector::dist_sq(&nu, &exact.nu).sqrt()
             / ddl::math::vector::norm2(&exact.nu);

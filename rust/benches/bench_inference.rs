@@ -1,14 +1,24 @@
-//! Inference hot path: native diffusion vs the AOT/PJRT executable, per
-//! paper experiment shape, plus the BSP message-passing executor for the
-//! distribution-overhead view.
+//! Inference hot path: combine-path (dense gemm vs CSR spmm) and
+//! thread-scaling sweeps across topologies and network sizes, plus the
+//! native-vs-AOT/PJRT and BSP comparisons.
 //!
-//! Reported as time per full inference (all iterations) and per-iteration
-//! effective GFLOP/s ≈ (2·N²·M + ~8·N·M) / t_iter. Compare against the
-//! gemm roofline from `bench_linalg` (EXPERIMENTS.md §Perf).
+//! The sweep covers ring / grid / Erdős–Rényi topologies at
+//! N ∈ {50, 100, 200, 400} (M = 100), timing the combine step in isolation
+//! (CSR spmm vs the dense gemm the seed engine used) and the full `run()`
+//! end-to-end at 1 and 4 worker threads. Headline figures are written to
+//! `BENCH_inference.json` (tracked across PRs; see EXPERIMENTS.md §Perf):
+//!
+//! * `combine_speedup_csr_vs_dense_n200_deg8` — sparse-combine win at the
+//!   degree-≈8, N = 200 operating point;
+//! * `e2e_speedup_sparse_t4_vs_dense_t1_n200_deg8` — full-run win of the
+//!   sparse 4-thread path over the single-threaded dense seed path.
+//!
+//! Pass `--fast` (or set `BENCH_FAST=1`) for the CI smoke configuration.
 
 use ddl::bench::Bencher;
-use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::graph::{metropolis_csr, metropolis_weights, Graph, Topology};
 use ddl::infer::{DiffusionEngine, DiffusionParams};
+use ddl::math::Mat;
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::net::BspNetwork;
 use ddl::rng::Pcg64;
@@ -17,15 +27,19 @@ use ddl::runtime::Runtime;
 use std::path::Path;
 
 fn main() {
-    let mut b = Bencher::new();
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("BENCH_FAST").map(|v| v != "0").unwrap_or(false);
+    let mut b = if fast { Bencher::quick() } else { Bencher::new() };
     let mut rng = Pcg64::new(2);
+    let mut derived: Vec<(String, f64)> = Vec::new();
 
-    // --- native engine across experiment shapes ---
+    // --- native engine across paper experiment shapes ---
     for &(n, m, iters, label) in &[
         (64usize, 100usize, 200usize, "native denoise (64,100)x200"),
         (196, 100, 300, "native paper (196,100)x300"),
         (80, 800, 150, "native novelty (80,800)x150"),
     ] {
+        let iters = if fast { iters / 10 } else { iters };
         let dict =
             DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
         let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
@@ -36,14 +50,146 @@ fn main() {
         let flops = iters as f64 * (2.0 * (n * n * m) as f64 + 8.0 * (n * m) as f64);
         b.bench_work(label, flops, || {
             eng.reset();
-            eng.run(&dict, &task, &x, DiffusionParams { mu: 0.1, iters }).unwrap();
+            eng.run(&dict, &task, &x, DiffusionParams::new(0.1, iters)).unwrap();
             std::hint::black_box(eng.nu(0));
         });
     }
 
+    // --- combine-step and end-to-end sweep over sparse topologies ---
+    let ns: &[usize] = if fast { &[50, 100] } else { &[50, 100, 200, 400] };
+    let m = 100usize;
+    let iters = if fast { 20 } else { 100 };
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.3 };
+    for &n in ns {
+        let topologies: Vec<(&str, Topology)> = vec![
+            // Degree ≈ 8 everywhere: ring with 4 neighbors a side, 4-conn
+            // grid, and G(N, p) with expected degree 8.
+            ("ring_k4", Topology::Ring { k: 4 }),
+            ("grid", Topology::Grid),
+            ("er_deg8", Topology::ErdosRenyi { p: (8.0 / (n as f64 - 1.0)).min(1.0) }),
+        ];
+        for (tname, topo) in topologies {
+            let g = Graph::generate(n, &topo, &mut rng);
+            let a = metropolis_weights(&g);
+            let at_csr = metropolis_csr(&g);
+            let at_dense = a.transpose();
+            let psi = Mat::from_fn(n, m, |_, _| rng.next_normal());
+            let mut v = Mat::zeros(n, m);
+            let dense_flops = 2.0 * (n * n * m) as f64;
+            let sparse_flops = 2.0 * (at_csr.nnz() * m) as f64;
+
+            let dense_med = {
+                let r = b.bench_work(&format!("combine dense {tname} N={n}"), dense_flops, || {
+                    ddl::math::blas::gemm(
+                        n,
+                        m,
+                        n,
+                        1.0,
+                        at_dense.as_slice(),
+                        psi.as_slice(),
+                        0.0,
+                        v.as_mut_slice(),
+                    );
+                    std::hint::black_box(&v);
+                });
+                r.median_s()
+            };
+            let csr_med = {
+                let r = b.bench_work(&format!("combine csr {tname} N={n}"), sparse_flops, || {
+                    at_csr.spmm(psi.as_slice(), m, v.as_mut_slice());
+                    std::hint::black_box(&v);
+                });
+                r.median_s()
+            };
+            if tname == "ring_k4" {
+                derived.push((
+                    format!("combine_speedup_csr_vs_dense_n{n}_deg8"),
+                    dense_med / csr_med.max(1e-12),
+                ));
+            }
+
+            // End-to-end run() on the degree-8 ring only (one topology is
+            // enough for the trend; the combine micro covers the rest).
+            if tname == "ring_k4" {
+                let dict =
+                    DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng)
+                        .unwrap();
+                let x = rng.normal_vec(m);
+                let flops = iters as f64 * (2.0 * (n * n * m) as f64 + 8.0 * (n * m) as f64);
+
+                // Seed path: dense gemm combine, single thread.
+                let mut eng_dense = DiffusionEngine::new(&a, m, None).unwrap();
+                eng_dense.set_combination_dense(&a).unwrap();
+                let dense_run = {
+                    let r = b.bench_work(
+                        &format!("run dense t1 {tname} N={n}x{iters}"),
+                        flops,
+                        || {
+                            eng_dense.reset();
+                            eng_dense
+                                .run(&dict, &task, &x, DiffusionParams::new(0.1, iters))
+                                .unwrap();
+                            std::hint::black_box(eng_dense.nu(0));
+                        },
+                    );
+                    r.median_s()
+                };
+
+                // Sparse combine, single thread.
+                let mut eng_sparse =
+                    DiffusionEngine::new_csr(metropolis_csr(&g), m, None).unwrap();
+                assert_eq!(eng_sparse.combine_path(), "sparse");
+                let sparse_run = {
+                    let r = b.bench_work(
+                        &format!("run sparse t1 {tname} N={n}x{iters}"),
+                        flops,
+                        || {
+                            eng_sparse.reset();
+                            eng_sparse
+                                .run(&dict, &task, &x, DiffusionParams::new(0.1, iters))
+                                .unwrap();
+                            std::hint::black_box(eng_sparse.nu(0));
+                        },
+                    );
+                    r.median_s()
+                };
+
+                // Sparse combine, 4 worker threads.
+                let sparse_t4_run = {
+                    let r = b.bench_work(
+                        &format!("run sparse t4 {tname} N={n}x{iters}"),
+                        flops,
+                        || {
+                            eng_sparse.reset();
+                            eng_sparse
+                                .run(
+                                    &dict,
+                                    &task,
+                                    &x,
+                                    DiffusionParams::new(0.1, iters).with_threads(4),
+                                )
+                                .unwrap();
+                            std::hint::black_box(eng_sparse.nu(0));
+                        },
+                    );
+                    r.median_s()
+                };
+
+                derived.push((
+                    format!("e2e_speedup_sparse_t1_vs_dense_t1_n{n}_deg8"),
+                    dense_run / sparse_run.max(1e-12),
+                ));
+                derived.push((
+                    format!("e2e_speedup_sparse_t4_vs_dense_t1_n{n}_deg8"),
+                    dense_run / sparse_t4_run.max(1e-12),
+                ));
+            }
+        }
+    }
+
     // --- BSP message-passing executor (distribution overhead) ---
     {
-        let (n, m, iters) = (64usize, 100usize, 200usize);
+        let (n, m, iters) = (64usize, 100usize, if fast { 20 } else { 200 });
         let dict =
             DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
         let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
@@ -51,9 +197,9 @@ fn main() {
         let x = rng.normal_vec(m);
         let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.3 };
         let flops = iters as f64 * (2.0 * (n * n * m) as f64 + 8.0 * (n * m) as f64);
-        b.bench_work("bsp denoise (64,100)x200", flops, || {
+        b.bench_work(&format!("bsp denoise (64,100)x{iters}"), flops, || {
             let mut net = BspNetwork::new(g.clone(), a.clone(), m, None);
-            net.run(&dict, &task, &x, DiffusionParams { mu: 0.1, iters }).unwrap();
+            net.run(&dict, &task, &x, DiffusionParams::new(0.1, iters)).unwrap();
             std::hint::black_box(net.nu(0));
         });
     }
@@ -85,6 +231,11 @@ fn main() {
         }
     }
 
+    println!("\nderived figures:");
+    for (k, v) in &derived {
+        println!("  {k} = {v:.2}x");
+    }
     b.write_csv(Path::new("results/bench_inference.csv")).unwrap();
-    println!("\nwrote results/bench_inference.csv");
+    b.write_json(Path::new("BENCH_inference.json"), &derived).unwrap();
+    println!("\nwrote results/bench_inference.csv and BENCH_inference.json");
 }

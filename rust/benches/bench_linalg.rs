@@ -6,7 +6,7 @@
 //! against it (EXPERIMENTS.md §Perf).
 
 use ddl::bench::Bencher;
-use ddl::math::{blas, Mat};
+use ddl::math::{blas, CsrMat, Mat};
 use ddl::rng::Pcg64;
 
 fn rand_mat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
@@ -42,6 +42,30 @@ fn main() {
         let flops = 2.0 * (n * n * m) as f64;
         b.bench_work(label, flops, || {
             blas::gemm(n, m, n, 1.0, at.as_slice(), psi.as_slice(), 0.0, v.as_mut_slice());
+            std::hint::black_box(&v);
+        });
+    }
+
+    // CSR spmm at combine shapes: degree-8 sparsity vs the dense gemm
+    // above (the sparse-combine roofline; EXPERIMENTS.md §Perf).
+    for &(n, m, label) in &[
+        (196usize, 100usize, "spmm deg8 (196,100)"),
+        (400, 100, "spmm deg8 (400,100)"),
+    ] {
+        let a = Mat::from_fn(n, n, |r, c| {
+            let d = (r as i64 - c as i64).rem_euclid(n as i64);
+            if d <= 4 || d >= n as i64 - 4 {
+                0.11
+            } else {
+                0.0
+            }
+        });
+        let at = CsrMat::from_dense_transposed(&a, 0.0);
+        let psi = rand_mat(n, m, &mut rng);
+        let mut v = Mat::zeros(n, m);
+        let flops = 2.0 * (at.nnz() * m) as f64;
+        b.bench_work(label, flops, || {
+            at.spmm(psi.as_slice(), m, v.as_mut_slice());
             std::hint::black_box(&v);
         });
     }

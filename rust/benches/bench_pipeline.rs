@@ -38,7 +38,7 @@ fn main() {
             m,
             None,
             TrainerOptions {
-                infer: DiffusionParams { mu: cfg.train_infer.mu, iters: cfg.train_infer.iters },
+                infer: DiffusionParams::new(cfg.train_infer.mu, cfg.train_infer.iters),
                 prox: DictProx::None,
             },
         )
@@ -58,10 +58,12 @@ fn main() {
         let (patch, _) = sampler.sample();
         b.bench(&format!("denoise patch ({n},{m})x{}", cfg.denoise_infer.iters), || {
             eng.reset();
-            eng.run(&dict, &task, &patch, DiffusionParams {
-                mu: cfg.denoise_infer.mu,
-                iters: cfg.denoise_infer.iters,
-            })
+            eng.run(
+                &dict,
+                &task,
+                &patch,
+                DiffusionParams::new(cfg.denoise_infer.mu, cfg.denoise_infer.iters),
+            )
             .unwrap();
             std::hint::black_box(eng.recover_y(&dict, &task));
         });
@@ -81,7 +83,7 @@ fn main() {
             DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
         let x = rng.normal_vec(m);
         let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.1, iters: 300 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.1, 300)).unwrap();
         println!(
             "  {label:<9} gap {:.3} → disagreement {:.3e} after 300 iters",
             spectral_gap(&a),

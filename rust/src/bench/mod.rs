@@ -53,6 +53,21 @@ impl BenchResult {
     }
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn scale_time(s: f64) -> (f64, &'static str) {
     if s >= 1.0 {
         (s, "s ")
@@ -133,6 +148,54 @@ impl Bencher {
         &self.results
     }
 
+    /// Write results as JSON: `{"results": [...], "derived": {...}}`.
+    ///
+    /// `derived` carries computed summary figures (speedup ratios etc.) so
+    /// cross-PR tracking files like `BENCH_inference.json` are
+    /// self-contained.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        derived: &[(String, f64)],
+    ) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"results\": [")?;
+        for (i, r) in self.results.iter().enumerate() {
+            let tp = r
+                .throughput()
+                .map(|t| format!("{t:.3}"))
+                .unwrap_or_else(|| "null".to_string());
+            let comma = if i + 1 < self.results.len() { "," } else { "" };
+            writeln!(
+                f,
+                "    {{\"name\": \"{}\", \"median_s\": {:.9}, \"mad_s\": {:.9}, \"p95_s\": {:.9}, \"samples\": {}, \"throughput_per_s\": {}}}{}",
+                json_escape(&r.name),
+                r.median_s(),
+                r.mad_s(),
+                r.p95_s(),
+                r.samples.len(),
+                tp,
+                comma
+            )?;
+        }
+        writeln!(f, "  ],")?;
+        writeln!(f, "  \"derived\": {{")?;
+        for (i, (k, v)) in derived.iter().enumerate() {
+            let comma = if i + 1 < derived.len() { "," } else { "" };
+            writeln!(f, "    \"{}\": {:.6}{}", json_escape(k), v, comma)?;
+        }
+        writeln!(f, "  }}")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+
     /// Write a CSV of results (name, median_s, mad_s, p95_s, throughput).
     pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
         use std::io::Write;
@@ -178,6 +241,28 @@ mod tests {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_written_and_parses() {
+        let mut b = Bencher::quick();
+        b.bench_work("unit \"quoted\"", 10.0, || {});
+        let path = std::env::temp_dir().join("ddl_bench_test.json");
+        b.write_json(&path, &[("speedup_x".to_string(), 5.25)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::config::json::JsonValue::parse(&text).unwrap();
+        let results = doc.get("results").unwrap();
+        match results {
+            crate::config::json::JsonValue::Array(items) => {
+                assert_eq!(items.len(), 1);
+                assert_eq!(items[0].get("name").unwrap().as_str(), Some("unit \"quoted\""));
+                assert!(items[0].get("median_s").unwrap().as_f64().is_some());
+            }
+            other => panic!("results not an array: {other:?}"),
+        }
+        let sp = doc.get("derived").unwrap().get("speedup_x").unwrap().as_f64().unwrap();
+        assert!((sp - 5.25).abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub struct InferenceConfig {
     pub gamma: f32,
     /// ℓ2 weight δ of the elastic net.
     pub delta: f32,
+    /// Worker threads for the adapt/combine loops (results are identical
+    /// for every value; 1 = serial).
+    pub threads: usize,
 }
 
 /// Image denoising experiment (Fig. 5).
@@ -57,8 +60,8 @@ impl Default for DenoiseConfig {
             train_samples: 12_000,
             minibatch: 4,
             mu_w: 5e-5,
-            train_infer: InferenceConfig { mu: 0.7, iters: 200, gamma: 45.0, delta: 0.1 },
-            denoise_infer: InferenceConfig { mu: 1.0, iters: 300, gamma: 45.0, delta: 0.1 },
+            train_infer: InferenceConfig { mu: 0.7, iters: 200, gamma: 45.0, delta: 0.1, threads: 1 },
+            denoise_infer: InferenceConfig { mu: 1.0, iters: 300, gamma: 45.0, delta: 0.1, threads: 1 },
             image_side: 192,
             noise_sigma: 50.0,
             denoise_stride: 2,
@@ -74,8 +77,8 @@ impl DenoiseConfig {
         DenoiseConfig {
             agents: 196,
             train_samples: 1_000_000,
-            train_infer: InferenceConfig { mu: 0.7, iters: 300, gamma: 45.0, delta: 0.1 },
-            denoise_infer: InferenceConfig { mu: 1.0, iters: 500, gamma: 45.0, delta: 0.1 },
+            train_infer: InferenceConfig { mu: 0.7, iters: 300, gamma: 45.0, delta: 0.1, threads: 1 },
+            denoise_infer: InferenceConfig { mu: 1.0, iters: 500, gamma: 45.0, delta: 0.1, threads: 1 },
             image_side: 1019,
             denoise_stride: 1,
             ..Default::default()
@@ -107,6 +110,9 @@ impl DenoiseConfig {
         c.image_side = doc.usize_or("denoise", "image_side", c.image_side);
         c.noise_sigma = doc.f32_or("denoise", "noise_sigma", c.noise_sigma);
         c.denoise_stride = doc.usize_or("denoise", "denoise_stride", c.denoise_stride);
+        let threads = doc.usize_or("denoise", "threads", c.train_infer.threads);
+        c.train_infer.threads = threads;
+        c.denoise_infer.threads = threads;
         c
     }
 }
@@ -154,6 +160,8 @@ pub struct NoveltyConfig {
     pub mu_w_num: f32,
     /// Edge probability for the per-step random topology (paper: 0.5).
     pub edge_prob: f64,
+    /// Worker threads for inference and cost consensus (1 = serial).
+    pub threads: usize,
 }
 
 impl NoveltyConfig {
@@ -180,6 +188,7 @@ impl NoveltyConfig {
             fc_iters: 100,
             mu_w_num: 10.0,
             edge_prob: 0.5,
+            threads: 1,
         }
     }
 
@@ -210,6 +219,7 @@ impl NoveltyConfig {
         c.fc_iters = doc.usize_or("novelty", "fc_iters", c.fc_iters);
         c.mu_w_num = doc.f32_or("novelty", "mu_w_num", c.mu_w_num);
         c.edge_prob = doc.f32_or("novelty", "edge_prob", c.edge_prob as f32) as f64;
+        c.threads = doc.usize_or("novelty", "threads", c.threads);
         c
     }
 }
@@ -251,14 +261,26 @@ mod tests {
 
     #[test]
     fn toml_overrides_apply() {
-        let doc = TomlDoc::parse("[denoise]\nagents = 16\ngamma = 30.0\n[novelty]\nvocab = 500\n")
-            .unwrap();
+        let doc = TomlDoc::parse(
+            "[denoise]\nagents = 16\ngamma = 30.0\nthreads = 4\n[novelty]\nvocab = 500\nthreads = 2\n",
+        )
+        .unwrap();
         let d = DenoiseConfig::from_toml(&doc);
         assert_eq!(d.agents, 16);
         assert_eq!(d.train_infer.gamma, 30.0);
         assert_eq!(d.denoise_infer.gamma, 30.0);
+        assert_eq!(d.train_infer.threads, 4);
+        assert_eq!(d.denoise_infer.threads, 4);
         let n = NoveltyConfig::from_toml(&doc, NoveltyConfig::squared_l2());
         assert_eq!(n.vocab, 500);
         assert_eq!(n.topics, 30);
+        assert_eq!(n.threads, 2);
+    }
+
+    #[test]
+    fn threads_default_to_serial() {
+        assert_eq!(DenoiseConfig::default().train_infer.threads, 1);
+        assert_eq!(NoveltyConfig::squared_l2().threads, 1);
+        assert_eq!(NoveltyConfig::huber().threads, 1);
     }
 }

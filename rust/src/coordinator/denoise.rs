@@ -86,7 +86,8 @@ pub fn run_denoise(
         m,
         informed_idx.as_deref(),
         TrainerOptions {
-            infer: DiffusionParams { mu: cfg.train_infer.mu, iters: cfg.train_infer.iters },
+            infer: DiffusionParams::new(cfg.train_infer.mu, cfg.train_infer.iters)
+                .with_threads(cfg.train_infer.threads),
             prox: DictProx::None,
         },
     )?;
@@ -123,8 +124,10 @@ pub fn run_denoise(
 
     // --- denoising pass ---
     progress("denoising with the distributed dictionary...");
-    let infer = DiffusionParams { mu: cfg.denoise_infer.mu, iters: cfg.denoise_infer.iters };
+    let infer = DiffusionParams::new(cfg.denoise_infer.mu, cfg.denoise_infer.iters)
+        .with_threads(cfg.denoise_infer.threads);
     let mut engine = DiffusionEngine::new(&a, m, informed_idx.as_deref())?;
+    engine.reserve_atoms(dict.k());
     let corners =
         Reconstructor::corners(noisy.width, noisy.height, cfg.patch, cfg.denoise_stride);
     let mut rec = Reconstructor::new(noisy.width, noisy.height, cfg.patch);
@@ -134,6 +137,10 @@ pub fn run_denoise(
         Vec::new()
     };
     let mut patch = vec![0.0f32; m];
+    // Reused across patches — the streaming denoise loop allocates only for
+    // per-agent reconstruction (`consensus_nu_into` is allocation-free).
+    let mut nu = vec![0.0f32; m];
+    let mut z = vec![0.0f32; m];
     for &(r, c) in &corners {
         crate::data::patches::extract_patch(&noisy, r, c, cfg.patch, &mut patch);
         let dc = crate::math::vector::mean(&patch);
@@ -143,8 +150,10 @@ pub fn run_denoise(
         engine.reset();
         engine.run(&dict, &task, &patch, infer)?;
         // z° = x − ν° (Table II, squared-ℓ2 residual), DC restored.
-        let nu = engine.consensus_nu();
-        let z: Vec<f32> = patch.iter().zip(&nu).map(|(&x, &v)| x - v + dc).collect();
+        engine.consensus_nu_into(&mut nu);
+        for ((zi, &x), &v) in z.iter_mut().zip(&patch).zip(&nu) {
+            *zi = x - v + dc;
+        }
         rec.add_patch(r, c, &z);
         if per_agent {
             for (k, prec) in per_agent_rec.iter_mut().enumerate() {
@@ -215,8 +224,8 @@ mod tests {
             train_samples: 240,
             minibatch: 4,
             mu_w: 2e-4,
-            train_infer: InferenceConfig { mu: 0.5, iters: 60, gamma: 30.0, delta: 0.1 },
-            denoise_infer: InferenceConfig { mu: 0.8, iters: 80, gamma: 30.0, delta: 0.1 },
+            train_infer: InferenceConfig { mu: 0.5, iters: 60, gamma: 30.0, delta: 0.1, threads: 1 },
+            denoise_infer: InferenceConfig { mu: 0.8, iters: 80, gamma: 30.0, delta: 0.1, threads: 2 },
             image_side: 48,
             noise_sigma: 50.0,
             denoise_stride: 3,

@@ -12,7 +12,7 @@ use crate::config::experiment::{NoveltyConfig, ResidualKind};
 use crate::data::{CorpusConfig, CorpusStream, Document};
 use crate::error::Result;
 use crate::graph::{metropolis_weights, uniform_weights, Graph, Topology};
-use crate::infer::{scalar_consensus, DiffusionEngine, DiffusionParams};
+use crate::infer::{scalar_consensus_threaded, DiffusionEngine, DiffusionParams};
 use crate::learn::StepSchedule;
 use crate::math::Mat;
 use crate::metrics::{auc, roc_curve, RocPoint};
@@ -47,8 +47,9 @@ fn seed_atoms_into(
 /// columns `start..` after document seeding.
 fn l1_feasible_columns(w: &mut Mat, start: usize) {
     let k = w.cols();
+    let mut col = vec![0.0f32; w.rows()];
     for q in start..k {
-        let mut col = w.col(q);
+        w.col_into(q, &mut col);
         for v in &mut col {
             *v = v.max(0.0);
         }
@@ -112,6 +113,7 @@ struct DiffusionState {
     a: Mat,
     mu: f32,
     iters: usize,
+    threads: usize,
 }
 
 impl DiffusionState {
@@ -129,7 +131,12 @@ impl DiffusionState {
         x: &[f32],
     ) -> Result<f64> {
         engine.reset_warm(x, 1.0 / task.conj_grad_scale());
-        engine.run(&self.dict, task, x, DiffusionParams { mu: self.mu, iters: self.iters })?;
+        engine.run(
+            &self.dict,
+            task,
+            x,
+            DiffusionParams::new(self.mu, self.iters).with_threads(self.threads),
+        )?;
         let n = self.dict.agents();
         let mut local = vec![0.0f32; n];
         let mut s = vec![0.0f32; self.dict.k()];
@@ -144,7 +151,7 @@ impl DiffusionState {
         }
         // Scalar consensus; all agents converge to −mean(J) = g°/N·N⁻¹...
         // the 1/N scaling is absorbed into the ROC threshold sweep.
-        let g = scalar_consensus(&self.a, &local, 0.05, 400);
+        let g = scalar_consensus_threaded(&self.a, &local, 0.05, 400, self.threads);
         Ok(g[0] as f64)
     }
 
@@ -156,12 +163,11 @@ impl DiffusionState {
     ) -> Result<()> {
         let m = docs[0].features.len();
         let mut engine = self.engine(m)?;
+        engine.reserve_atoms(self.dict.k());
+        let params = DiffusionParams::new(self.mu, self.iters).with_threads(self.threads);
         for d in docs {
             engine.reset_warm(&d.features, 1.0 / task.conj_grad_scale());
-            engine.run(&self.dict, task, &d.features, DiffusionParams {
-                mu: self.mu,
-                iters: self.iters,
-            })?;
+            engine.run(&self.dict, task, &d.features, params)?;
             let y = engine.recover_y(&self.dict, task);
             let constraint = task.atom_constraint();
             for k in 0..self.dict.agents() {
@@ -264,6 +270,7 @@ pub fn run_novelty(
                     a,
                     mu: cfg.dist_mu,
                     iters: cfg.dist_iters,
+                    threads: cfg.threads,
                 });
             }
             NoveltyAlgo::DiffusionFullyConnected => {
@@ -276,6 +283,7 @@ pub fn run_novelty(
                     a,
                     mu: cfg.fc_mu,
                     iters: cfg.fc_iters,
+                    threads: cfg.threads,
                 });
             }
             NoveltyAlgo::CentralizedMairal => {

@@ -45,7 +45,7 @@ pub fn run_quickstart(artifacts: &Path, log: &mut dyn FnMut(&str)) -> Result<()>
 
     // Native cross-check.
     let mut eng = DiffusionEngine::new(&a, m, None)?;
-    eng.run(&dict, &task, &x, DiffusionParams { mu, iters })?;
+    eng.run(&dict, &task, &x, DiffusionParams::new(mu, iters))?;
     let y_native = eng.recover_y(&dict, &task);
     let max_diff = out
         .y

@@ -94,9 +94,10 @@ pub fn curves_against_exact(
 ) -> Result<Vec<TuningPoint>> {
     let m = dict.m();
     let mut engine = crate::infer::DiffusionEngine::new(a, m, None)?;
+    engine.reserve_atoms(dict.k());
     let mut points = Vec::with_capacity(iters);
     for it in 1..=iters {
-        engine.run(dict, task, x, DiffusionParams { mu, iters: 1 })?;
+        engine.run(dict, task, x, DiffusionParams::new(mu, 1))?;
         let y_i = engine.recover_y(dict, task);
         points.push(TuningPoint {
             iter: it,

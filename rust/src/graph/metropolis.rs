@@ -7,7 +7,7 @@
 //! `A = (1/N)·11ᵀ`.
 
 use super::Graph;
-use crate::math::Mat;
+use crate::math::{CsrMat, Mat};
 
 /// Metropolis-rule combination matrix:
 /// `a_{ℓk} = 1 / max(d_ℓ, d_k)` for neighbors `ℓ ≠ k`,
@@ -28,6 +28,44 @@ pub fn metropolis_weights(g: &Graph) -> Mat {
         a.set(k, k, 1.0 - off_sum);
     }
     a
+}
+
+/// Metropolis combination matrix built **directly in CSR**, never
+/// materializing the dense `N×N` form. Returns the CSR of `Aᵀ` (row `k`
+/// holds the weights `a_{ℓk}` flowing *into* agent `k`), which is exactly
+/// the layout the combine step `V ← AᵀΨ` consumes; since the Metropolis
+/// rule is symmetric this is also the CSR of `A` itself.
+///
+/// Weights match [`metropolis_weights`] bit-for-bit: the same per-neighbor
+/// expression and the same accumulation order for the diagonal.
+pub fn metropolis_csr(g: &Graph) -> CsrMat {
+    let n = g.n();
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    indptr.push(0);
+    for k in 0..n {
+        let dk = g.degree(k) as f32;
+        let nbrs = g.neighbors(k);
+        let mut off_sum = 0.0;
+        let mut row: Vec<(usize, f32)> = Vec::with_capacity(nbrs.len() + 1);
+        for &l in nbrs {
+            let dl = g.degree(l) as f32;
+            let w = 1.0 / (dk.max(dl) + 1.0); // +1: degrees counted incl. self
+            row.push((l, w));
+            off_sum += w;
+        }
+        // Neighbor lists are sorted and exclude self: splice the diagonal in.
+        let pos = row.partition_point(|&(l, _)| l < k);
+        row.insert(pos, (k, 1.0 - off_sum));
+        for (l, w) in row {
+            indices.push(l);
+            values.push(w);
+        }
+        indptr.push(indices.len());
+    }
+    CsrMat::from_parts(n, n, indptr, indices, values)
+        .expect("metropolis CSR is valid by construction")
 }
 
 /// Uniform averaging matrix `A = (1/N)·11ᵀ` — the paper's fully-connected
@@ -123,6 +161,33 @@ mod tests {
         let mut a = uniform_weights(3);
         a.set(0, 0, 0.9);
         assert!(!is_doubly_stochastic(&a, 1e-6));
+    }
+
+    #[test]
+    fn csr_matches_dense_metropolis_exactly() {
+        for seed in 0..4 {
+            let g = Graph::generate(
+                22,
+                &Topology::ErdosRenyi { p: 0.3 },
+                &mut Pcg64::new(100 + seed),
+            );
+            let dense = metropolis_weights(&g);
+            let csr = metropolis_csr(&g);
+            assert_eq!(csr.rows(), 22);
+            // Same values at every coordinate (Aᵀ row k == A column k; and
+            // A is symmetric, so comparing against the transpose is exact).
+            assert_eq!(csr.to_dense(), dense.transpose(), "seed {seed}");
+            // Structural sparsity: diag + one entry per directed edge.
+            assert_eq!(csr.nnz(), 22 + 2 * g.edge_count());
+        }
+    }
+
+    #[test]
+    fn csr_on_ring_has_bounded_degree() {
+        let g = Graph::generate(30, &Topology::Ring { k: 2 }, &mut Pcg64::new(7));
+        let csr = metropolis_csr(&g);
+        assert_eq!(csr.nnz(), 30 * 5); // 4 neighbors + self per agent
+        assert!(csr.density() < 0.2);
     }
 
     #[test]

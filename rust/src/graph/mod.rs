@@ -9,5 +9,5 @@ pub mod laplacian;
 pub mod metropolis;
 pub mod topology;
 
-pub use metropolis::{is_doubly_stochastic, metropolis_weights, uniform_weights};
+pub use metropolis::{is_doubly_stochastic, metropolis_csr, metropolis_weights, uniform_weights};
 pub use topology::{Graph, Topology};

@@ -10,6 +10,8 @@
 
 use crate::math::{blas, Mat};
 use crate::model::{DistributedDictionary, TaskSpec};
+use crate::net::pool::{chunk_range, SharedRows, WorkerPool};
+use std::sync::Barrier;
 
 /// Local dual cost `J_k(ν; x)` of Eq. 29 for agent `k` (all-informed form,
 /// Eq. 59: data term weighted 1/N).
@@ -48,23 +50,77 @@ pub fn dual_cost_sum(dict: &DistributedDictionary, task: &TaskSpec, nu: &[f32], 
 /// which converges to `g° = −(1/N) Σ_k j_k` at every agent. Returns the
 /// per-agent estimates after `iters` iterations.
 pub fn scalar_consensus(a: &Mat, j: &[f32], mu_g: f32, iters: usize) -> Vec<f32> {
+    scalar_consensus_threaded(a, j, mu_g, iters, 1)
+}
+
+/// [`scalar_consensus`] with a worker-thread count. Agents are partitioned
+/// into static row chunks (adapt then combine, one barrier per phase), so
+/// the result is bit-identical for every `threads` value. Only pays off
+/// for large `N`; `threads = 1` takes the allocation-free serial path.
+pub fn scalar_consensus_threaded(
+    a: &Mat,
+    j: &[f32],
+    mu_g: f32,
+    iters: usize,
+    threads: usize,
+) -> Vec<f32> {
     let n = a.rows();
     assert_eq!(a.cols(), n);
     assert_eq!(j.len(), n);
     let mut g = vec![0.0f32; n];
     let mut phi = vec![0.0f32; n];
-    for _ in 0..iters {
-        for k in 0..n {
-            phi[k] = g[k] - mu_g * (j[k] + g[k]);
-        }
-        // g = Aᵀ φ
-        for k in 0..n {
-            let mut acc = 0.0f32;
-            for l in 0..n {
-                acc += a.get(l, k) * phi[l];
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        for _ in 0..iters {
+            for k in 0..n {
+                phi[k] = g[k] - mu_g * (j[k] + g[k]);
             }
-            g[k] = acc;
+            // g = Aᵀ φ
+            for k in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..n {
+                    acc += a.get(l, k) * phi[l];
+                }
+                g[k] = acc;
+            }
         }
+        return g;
+    }
+    {
+        let g_sh = SharedRows::new(&mut g);
+        let phi_sh = SharedRows::new(&mut phi);
+        let barrier = Barrier::new(threads);
+        WorkerPool::new(threads).spmd(|w| {
+            let rows = chunk_range(n, threads, w);
+            for _ in 0..iters {
+                {
+                    // Adapt: each worker reads and writes only its own rows.
+                    // SAFETY: row windows are disjoint per worker; the
+                    // barrier below orders them against the combine reads.
+                    let g_own = unsafe { g_sh.rows(rows.start, rows.len(), 1) };
+                    let phi_own = unsafe { phi_sh.rows_mut(rows.start, rows.len(), 1) };
+                    for (i, k) in rows.clone().enumerate() {
+                        phi_own[i] = g_own[i] - mu_g * (j[k] + g_own[i]);
+                    }
+                }
+                barrier.wait();
+                {
+                    // Combine: read all of φ, write own g rows.
+                    // SAFETY: φ is read-only until the next barrier; g row
+                    // windows are disjoint per worker.
+                    let phi_all = unsafe { phi_sh.rows(0, n, 1) };
+                    let g_own = unsafe { g_sh.rows_mut(rows.start, rows.len(), 1) };
+                    for (i, k) in rows.clone().enumerate() {
+                        let mut acc = 0.0f32;
+                        for l in 0..n {
+                            acc += a.get(l, k) * phi_all[l];
+                        }
+                        g_own[i] = acc;
+                    }
+                }
+                barrier.wait();
+            }
+        });
     }
     g
 }
@@ -102,6 +158,19 @@ mod tests {
         let est = scalar_consensus(&a, &j, 0.01, 20_000);
         for (k, &e) in est.iter().enumerate() {
             assert!((e - target).abs() < 1e-2, "agent {k}: {e} vs {target}");
+        }
+    }
+
+    #[test]
+    fn scalar_consensus_threaded_is_bit_identical() {
+        let mut rng = Pcg64::new(5);
+        let g = Graph::generate(23, &Topology::ErdosRenyi { p: 0.3 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let j: Vec<f32> = (0..23).map(|i| (i as f32 * 0.37).sin()).collect();
+        let serial = scalar_consensus(&a, &j, 0.1, 500);
+        for threads in [2, 3, 4] {
+            let par = scalar_consensus_threaded(&a, &j, 0.1, 500, threads);
+            assert_eq!(serial, par, "threads = {threads}");
         }
     }
 

@@ -10,16 +10,38 @@
 //!
 //! followed by the neighborhood **combine** `ν_k = Σ_ℓ a_{ℓk} ψ_ℓ`
 //! (optionally projected onto `V_f` for the Huber task, Eq. 35b). The
-//! engine stores the stacked iterates as `V ∈ R^{N×M}` so combine is one
-//! gemm `V ← AᵀΨ` — the same layout the L1 Pallas kernel uses.
+//! engine stores the stacked iterates as `V ∈ R^{N×M}` and dispatches the
+//! combine `V ← AᵀΨ` over three paths, selected when the combination
+//! matrix is installed (`new` / `set_combination`):
 //!
-//! Buffers are pre-allocated once; the per-iteration hot loop performs no
-//! heap allocation (see EXPERIMENTS.md §Perf).
+//! * **uniform** — `A = (1/N)·11ᵀ`: combine collapses to a row average,
+//!   `O(N·M)`;
+//! * **sparse** — `Aᵀ` stored in CSR when its density is at most
+//!   [`SPARSE_DENSITY_MAX`]: combine is an spmm, `O(|E|·M)` — the scaling
+//!   regime the paper targets (hundreds of agents, small neighborhoods);
+//! * **dense** — the blocked gemm fallback, `O(N²·M)`.
+//!
+//! Both the embarrassingly-parallel adapt loop and the combine row ranges
+//! run on a scoped worker pool when `DiffusionParams::threads > 1`. Work is
+//! split by static row partition ([`crate::net::chunk_range`]), so every
+//! row is produced by the same arithmetic regardless of thread count — the
+//! `ν` trajectory is bit-identical for `threads = 1` and `threads = T`.
+//!
+//! Buffers (including per-worker threshold scratch) are sized once and
+//! reused; the per-iteration hot loop performs no heap allocation (see
+//! EXPERIMENTS.md §Perf).
 
 use crate::error::{DdlError, Result};
-use crate::math::{blas, Mat};
+use crate::math::{blas, CsrMat, Mat};
 use crate::model::{DistributedDictionary, TaskSpec};
+use crate::net::pool::{chunk_range, SharedRows, WorkerPool};
 use crate::ops::project::clip_linf;
+use std::sync::Barrier;
+
+/// Densest combination matrix the engine will store as CSR: below this fill
+/// fraction spmm beats the blocked gemm comfortably; above it, gemm's
+/// locality wins.
+pub const SPARSE_DENSITY_MAX: f32 = 0.25;
 
 /// Diffusion hyperparameters.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +50,55 @@ pub struct DiffusionParams {
     pub mu: f32,
     /// Iteration count.
     pub iters: usize,
+    /// Worker threads for the adapt/combine loops (1 = serial). Results
+    /// are bit-identical for every value.
+    pub threads: usize,
+}
+
+impl DiffusionParams {
+    /// Serial parameters (the common case).
+    pub fn new(mu: f32, iters: usize) -> Self {
+        DiffusionParams { mu, iters, threads: 1 }
+    }
+
+    /// Builder-style thread override.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+/// Combine-path dispatch, chosen when the combination matrix is installed.
+enum Combine {
+    /// `A = (1/N)·11ᵀ`: combine is the column mean broadcast to all rows.
+    Uniform,
+    /// CSR of `Aᵀ` — combine is an spmm over neighborhood edges only.
+    Sparse(CsrMat),
+    /// Dense `Aᵀ` — combine is one row-major gemm.
+    Dense(Mat),
+}
+
+impl Combine {
+    fn build(a: &Mat) -> Combine {
+        if is_uniform(a) {
+            return Combine::Uniform;
+        }
+        let n = a.rows();
+        let nnz = a.as_slice().iter().filter(|v| **v != 0.0).count();
+        if (nnz as f32) <= SPARSE_DENSITY_MAX * (n * n) as f32 {
+            Combine::Sparse(CsrMat::from_dense_transposed(a, 0.0))
+        } else {
+            Combine::Dense(a.transpose())
+        }
+    }
+
+    fn path(&self) -> &'static str {
+        match self {
+            Combine::Uniform => "uniform",
+            Combine::Sparse(_) => "sparse",
+            Combine::Dense(_) => "dense",
+        }
+    }
 }
 
 /// Reusable diffusion inference engine for a fixed network size.
@@ -36,16 +107,15 @@ pub struct DiffusionEngine {
     v: Mat,
     /// Adapt outputs `Ψ` (`N × M`).
     psi: Mat,
-    /// Combination matrix transpose `Aᵀ` (`N × N`) — stored transposed so
-    /// combine is a plain row-major gemm.
-    at: Mat,
-    /// Scratch: per-atom thresholded correlations (`K`).
+    /// Combine dispatch (uniform / CSR spmm / dense gemm).
+    combine: Combine,
+    /// Scratch: per-atom thresholded correlations (`K`), serial path.
     thr: Vec<f32>,
+    /// Per-worker threshold scratch for the threaded path; sized once and
+    /// reused across `run` calls.
+    worker_thr: Vec<Vec<f32>>,
     /// Informed-agent mask θ (`N`), entries 1/|N_I| or 0 (Eq. 29).
     theta: Vec<f32>,
-    /// Fast path: `A = (1/N)·11ᵀ` (fully connected) — combine collapses
-    /// to a row average, O(N·M) instead of O(N²·M).
-    uniform_a: bool,
     n: usize,
     m: usize,
 }
@@ -60,29 +130,33 @@ impl DiffusionEngine {
         if a.cols() != n {
             return Err(DdlError::Shape("combination matrix must be square".into()));
         }
-        let mut theta = vec![0.0f32; n];
-        match informed {
-            None => theta.fill(1.0 / n as f32),
-            Some(idx) => {
-                if idx.is_empty() {
-                    return Err(DdlError::Config("at least one informed agent required".into()));
-                }
-                let w = 1.0 / idx.len() as f32;
-                for &k in idx {
-                    if k >= n {
-                        return Err(DdlError::Config(format!("informed agent {k} out of range")));
-                    }
-                    theta[k] = w;
-                }
-            }
+        Ok(DiffusionEngine {
+            v: Mat::zeros(n, m),
+            psi: Mat::zeros(n, m),
+            combine: Combine::build(a),
+            thr: Vec::new(),
+            worker_thr: Vec::new(),
+            theta: build_theta(n, informed)?,
+            n,
+            m,
+        })
+    }
+
+    /// Create an engine directly from a CSR combination matrix (`Aᵀ` rows,
+    /// as produced by [`crate::graph::metropolis_csr`]) — the dense `N×N`
+    /// form is never materialized.
+    pub fn new_csr(at: CsrMat, m: usize, informed: Option<&[usize]>) -> Result<Self> {
+        let n = at.rows();
+        if at.cols() != n {
+            return Err(DdlError::Shape("combination matrix must be square".into()));
         }
         Ok(DiffusionEngine {
             v: Mat::zeros(n, m),
             psi: Mat::zeros(n, m),
-            uniform_a: is_uniform(a),
-            at: a.transpose(),
+            combine: Combine::Sparse(at),
             thr: Vec::new(),
-            theta,
+            worker_thr: Vec::new(),
+            theta: build_theta(n, informed)?,
             n,
             m,
         })
@@ -93,9 +167,51 @@ impl DiffusionEngine {
         if a.rows() != self.n || a.cols() != self.n {
             return Err(DdlError::Shape("combination matrix shape mismatch".into()));
         }
-        self.uniform_a = is_uniform(a);
-        self.at = a.transpose();
+        self.combine = Combine::build(a);
         Ok(())
+    }
+
+    /// Replace the combination matrix with a CSR `Aᵀ` (sparse path forced).
+    pub fn set_combination_csr(&mut self, at: CsrMat) -> Result<()> {
+        if at.rows() != self.n || at.cols() != self.n {
+            return Err(DdlError::Shape("combination matrix shape mismatch".into()));
+        }
+        self.combine = Combine::Sparse(at);
+        Ok(())
+    }
+
+    /// Install a combination matrix on the dense-gemm path regardless of
+    /// its sparsity (benchmark / equivalence-test comparator).
+    pub fn set_combination_dense(&mut self, a: &Mat) -> Result<()> {
+        if a.rows() != self.n || a.cols() != self.n {
+            return Err(DdlError::Shape("combination matrix shape mismatch".into()));
+        }
+        self.combine = Combine::Dense(a.transpose());
+        Ok(())
+    }
+
+    /// Pre-size the threshold scratch for a dictionary with `atoms` total
+    /// atoms, so even the first `run` call allocates nothing. `run` calls
+    /// this itself (a no-op once sized); streaming callers may invoke it
+    /// eagerly at setup time.
+    pub fn reserve_atoms(&mut self, atoms: usize) {
+        if self.thr.len() != atoms {
+            self.thr.resize(atoms, 0.0);
+        }
+    }
+
+    fn ensure_scratch(&mut self, threads: usize, atoms: usize) {
+        self.reserve_atoms(atoms);
+        if threads > 1 {
+            if self.worker_thr.len() < threads {
+                self.worker_thr.resize_with(threads, Vec::new);
+            }
+            for t in &mut self.worker_thr[..threads] {
+                if t.len() != atoms {
+                    t.resize(atoms, 0.0);
+                }
+            }
+        }
     }
 
     /// Reset all dual iterates to zero (cold start for a new sample).
@@ -152,7 +268,23 @@ impl DiffusionEngine {
         if dict.m() != self.m {
             return Err(DdlError::Shape("dictionary row dimension mismatch".into()));
         }
-        self.thr.resize(dict.k(), 0.0);
+        let threads = params.threads.max(1).min(self.n.max(1));
+        self.ensure_scratch(threads, dict.k());
+        if threads == 1 {
+            self.run_serial(dict, task, x, params)
+        } else {
+            self.run_parallel(dict, task, x, params, threads)
+        }
+        Ok(())
+    }
+
+    fn run_serial(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+        params: DiffusionParams,
+    ) {
         let cf_over_n = task.conj_grad_scale() / self.n as f32;
         let inv_delta = 1.0 / task.delta();
         let mu = params.mu;
@@ -161,64 +293,135 @@ impl DiffusionEngine {
         for _ in 0..params.iters {
             // --- adapt (Eq. 31a): ψ_k = ν_k − μ ∇J_k(ν_k) ---
             for k in 0..self.n {
-                let nu = self.v.row(k);
-                // s = W_kᵀ ν_k, thresholded.
-                dict.block_correlations(k, nu, &mut self.thr);
-                let (start, len) = dict.block(k);
-                for q in start..start + len {
-                    self.thr[q] = task.threshold(self.thr[q]);
-                }
-                // ψ = ν − μ(c_f/N · ν − θ_k x)
-                let theta_k = self.theta[k];
-                let psi = self.psi.row_mut(k);
-                let nu = self.v.row(k);
-                for i in 0..self.m {
-                    psi[i] = nu[i] - mu * (cf_over_n * nu[i] - theta_k * x[i]);
-                }
-                // ψ -= (μ/δ) Σ_q thr(s_q) w_q  — only agent k's atoms.
-                for q in start..start + len {
-                    self.thr[q] *= -mu * inv_delta;
-                }
-                dict.block_accumulate(k, &self.thr, self.psi.row_mut(k));
+                adapt_row(
+                    dict,
+                    task,
+                    x,
+                    self.theta[k],
+                    k,
+                    self.v.row(k),
+                    self.psi.row_mut(k),
+                    &mut self.thr,
+                    mu,
+                    cf_over_n,
+                    inv_delta,
+                );
             }
             // --- combine (Eq. 31b): V ← Aᵀ Ψ ---
-            if self.uniform_a {
-                // Fully-connected fast path: every row of AᵀΨ equals the
-                // column mean of Ψ — O(N·M) instead of O(N²·M).
-                let inv_n = 1.0 / self.n as f32;
-                let (v, psi) = (self.v.as_mut_slice(), self.psi.as_slice());
-                v[..self.m].fill(0.0);
-                for k in 0..self.n {
-                    let row = &psi[k * self.m..(k + 1) * self.m];
-                    for i in 0..self.m {
-                        v[i] += row[i];
-                    }
+            match &self.combine {
+                Combine::Uniform => {
+                    uniform_combine(self.v.as_mut_slice(), self.psi.as_slice(), self.n, self.m)
                 }
-                for i in 0..self.m {
-                    v[i] *= inv_n;
+                Combine::Sparse(at) => {
+                    at.spmm_rows(0..self.n, self.psi.as_slice(), self.m, self.v.as_mut_slice())
                 }
-                let (first, rest) = v.split_at_mut(self.m);
-                for k in 1..self.n {
-                    rest[(k - 1) * self.m..k * self.m].copy_from_slice(first);
-                }
-            } else {
-                blas::gemm(
+                Combine::Dense(at) => blas::gemm(
                     self.n,
                     self.m,
                     self.n,
                     1.0,
-                    self.at.as_slice(),
+                    at.as_slice(),
                     self.psi.as_slice(),
                     0.0,
                     self.v.as_mut_slice(),
-                );
+                ),
             }
             // --- projection onto V_f (Eq. 35b), Huber only ---
             if let Some(bound) = clip {
                 clip_linf(self.v.as_mut_slice(), bound);
             }
         }
-        Ok(())
+    }
+
+    /// Threaded run: one SPMD region per call (threads spawn once, not per
+    /// iteration), two barriers per iteration. Worker `w` owns the agent
+    /// rows `chunk_range(n, threads, w)` for both adapt and combine, so
+    /// every `V`/`Ψ` row is produced by exactly one worker with serial-path
+    /// arithmetic — trajectories are bit-identical to `threads = 1`.
+    fn run_parallel(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+        params: DiffusionParams,
+        threads: usize,
+    ) {
+        let n = self.n;
+        let m = self.m;
+        let mu = params.mu;
+        let iters = params.iters;
+        let cf_over_n = task.conj_grad_scale() / n as f32;
+        let inv_delta = 1.0 / task.delta();
+        let clip = task.dual_clip();
+
+        // Disjoint field borrows, materialized before the SPMD closure.
+        let DiffusionEngine { v, psi, combine, theta, worker_thr, .. } = self;
+        let v_sh = SharedRows::new(v.as_mut_slice());
+        let psi_sh = SharedRows::new(psi.as_mut_slice());
+        let combine: &Combine = combine;
+        let theta: &[f32] = theta.as_slice();
+        let barrier = Barrier::new(threads);
+
+        WorkerPool::new(threads).spmd_with(&mut worker_thr[..threads], |w, thr| {
+            let rows = chunk_range(n, threads, w);
+            for _ in 0..iters {
+                // Adapt phase: this worker writes only its own Ψ rows and
+                // reads only its own V rows.
+                for k in rows.clone() {
+                    // SAFETY: row k belongs to this worker's chunk; V rows
+                    // were last written by the same worker (combine phase),
+                    // ordered by the barrier below.
+                    let nu = unsafe { v_sh.rows(k, 1, m) };
+                    let psi_k = unsafe { psi_sh.rows_mut(k, 1, m) };
+                    adapt_row(dict, task, x, theta[k], k, nu, psi_k, thr, mu, cf_over_n, inv_delta);
+                }
+                // All Ψ rows written before anyone reads them.
+                barrier.wait();
+                // Combine phase: read all of Ψ, write own V rows.
+                match combine {
+                    Combine::Uniform => {
+                        // O(N·M) total — not worth splitting; worker 0 does
+                        // it serially (bit-identical to the serial path).
+                        if w == 0 {
+                            // SAFETY: only worker 0 touches V this phase;
+                            // Ψ is read-only for everyone.
+                            let v_all = unsafe { v_sh.rows_mut(0, n, m) };
+                            let psi_all = unsafe { psi_sh.rows(0, n, m) };
+                            uniform_combine(v_all, psi_all, n, m);
+                            if let Some(bound) = clip {
+                                clip_linf(v_all, bound);
+                            }
+                        }
+                    }
+                    Combine::Sparse(at) => {
+                        if !rows.is_empty() {
+                            // SAFETY: V row windows are disjoint per worker;
+                            // Ψ is read-only until the next barrier.
+                            let psi_all = unsafe { psi_sh.rows(0, n, m) };
+                            let v_rows = unsafe { v_sh.rows_mut(rows.start, rows.len(), m) };
+                            at.spmm_rows(rows.clone(), psi_all, m, v_rows);
+                            if let Some(bound) = clip {
+                                clip_linf(v_rows, bound);
+                            }
+                        }
+                    }
+                    Combine::Dense(at) => {
+                        if !rows.is_empty() {
+                            // SAFETY: as in the sparse arm.
+                            let psi_all = unsafe { psi_sh.rows(0, n, m) };
+                            let v_rows = unsafe { v_sh.rows_mut(rows.start, rows.len(), m) };
+                            let a_rows = &at.as_slice()[rows.start * n..rows.end * n];
+                            blas::gemm(rows.len(), m, n, 1.0, a_rows, psi_all, 0.0, v_rows);
+                            if let Some(bound) = clip {
+                                clip_linf(v_rows, bound);
+                            }
+                        }
+                    }
+                }
+                // V complete and Ψ free for the next adapt phase.
+                barrier.wait();
+            }
+        });
     }
 
     /// Agent `k`'s current dual estimate `ν_{k,i}`.
@@ -230,11 +433,20 @@ impl DiffusionEngine {
     /// any single agent after convergence).
     pub fn consensus_nu(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.m];
-        for k in 0..self.n {
-            crate::math::vector::axpy(1.0, self.v.row(k), &mut out);
-        }
-        crate::math::vector::scale(1.0 / self.n as f32, &mut out);
+        self.consensus_nu_into(&mut out);
         out
+    }
+
+    /// Allocation-free variant of [`Self::consensus_nu`]: write the
+    /// network-average dual estimate into a caller-provided buffer of
+    /// length `M` (streaming loops reuse one buffer across samples).
+    pub fn consensus_nu_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.m);
+        out.fill(0.0);
+        for k in 0..self.n {
+            crate::math::vector::axpy(1.0, self.v.row(k), out);
+        }
+        crate::math::vector::scale(1.0 / self.n as f32, out);
     }
 
     /// Maximum pairwise disagreement `max_k ‖ν_k − ν̄‖` — a consensus
@@ -265,7 +477,13 @@ impl DiffusionEngine {
 
     /// Whether the fully-connected fast path is active.
     pub fn is_fully_connected(&self) -> bool {
-        self.uniform_a
+        matches!(self.combine, Combine::Uniform)
+    }
+
+    /// Which combine path is installed: `"uniform"`, `"sparse"`, or
+    /// `"dense"`.
+    pub fn combine_path(&self) -> &'static str {
+        self.combine.path()
     }
 
     /// Number of agents.
@@ -276,6 +494,79 @@ impl DiffusionEngine {
     /// Data dimension.
     pub fn dim(&self) -> usize {
         self.m
+    }
+}
+
+/// Informed-agent mask θ (Eq. 29); shared with the actor executor.
+pub(crate) fn build_theta(n: usize, informed: Option<&[usize]>) -> Result<Vec<f32>> {
+    let mut theta = vec![0.0f32; n];
+    match informed {
+        None => theta.fill(1.0 / n as f32),
+        Some(idx) => {
+            if idx.is_empty() {
+                return Err(DdlError::Config("at least one informed agent required".into()));
+            }
+            let w = 1.0 / idx.len() as f32;
+            for &k in idx {
+                if k >= n {
+                    return Err(DdlError::Config(format!("informed agent {k} out of range")));
+                }
+                theta[k] = w;
+            }
+        }
+    }
+    Ok(theta)
+}
+
+/// One agent's adapt step (Eq. 31a), shared verbatim by the serial and
+/// threaded paths so their per-row arithmetic is identical. `thr` is the
+/// `K`-length threshold scratch; only agent `k`'s block of it is read back.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn adapt_row(
+    dict: &DistributedDictionary,
+    task: &TaskSpec,
+    x: &[f32],
+    theta_k: f32,
+    k: usize,
+    nu: &[f32],
+    psi: &mut [f32],
+    thr: &mut [f32],
+    mu: f32,
+    cf_over_n: f32,
+    inv_delta: f32,
+) {
+    // s = W_kᵀ ν_k, thresholded and pre-scaled by −μ/δ.
+    dict.block_correlations(k, nu, thr);
+    let (start, len) = dict.block(k);
+    for q in start..start + len {
+        thr[q] = task.threshold(thr[q]) * (-mu * inv_delta);
+    }
+    // ψ = ν − μ(c_f/N · ν − θ_k x)
+    for (i, p) in psi.iter_mut().enumerate() {
+        *p = nu[i] - mu * (cf_over_n * nu[i] - theta_k * x[i]);
+    }
+    // ψ -= (μ/δ) Σ_q thr(s_q) w_q  — only agent k's atoms.
+    dict.block_accumulate(k, thr, psi);
+}
+
+/// Fully-connected combine: every row of `AᵀΨ` equals the column mean of
+/// `Ψ` — `O(N·M)` instead of `O(N²·M)`.
+fn uniform_combine(v: &mut [f32], psi: &[f32], n: usize, m: usize) {
+    let inv_n = 1.0 / n as f32;
+    v[..m].fill(0.0);
+    for k in 0..n {
+        let row = &psi[k * m..(k + 1) * m];
+        for i in 0..m {
+            v[i] += row[i];
+        }
+    }
+    for i in 0..m {
+        v[i] *= inv_n;
+    }
+    let (first, rest) = v.split_at_mut(m);
+    for k in 1..n {
+        rest[(k - 1) * m..k * m].copy_from_slice(first);
     }
 }
 
@@ -292,15 +583,11 @@ fn is_uniform(a: &Mat) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{metropolis_weights, uniform_weights, Graph, Topology};
+    use crate::graph::{metropolis_csr, metropolis_weights, uniform_weights, Graph, Topology};
     use crate::model::AtomConstraint;
     use crate::rng::Pcg64;
 
-    fn setup(
-        n: usize,
-        m: usize,
-        seed: u64,
-    ) -> (DistributedDictionary, Mat, Vec<f32>) {
+    fn setup(n: usize, m: usize, seed: u64) -> (DistributedDictionary, Mat, Vec<f32>) {
         let mut rng = Pcg64::new(seed);
         let dict =
             DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
@@ -317,10 +604,10 @@ mod tests {
         let (dict, a, x) = setup(8, 12, 1);
         let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
         let mut eng = DiffusionEngine::new(&a, 12, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.2, iters: 3000 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.2, 3000)).unwrap();
         let d_big = eng.disagreement();
         eng.reset();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.02, iters: 30_000 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.02, 30_000)).unwrap();
         let d_small = eng.disagreement();
         assert!(d_small < 0.05, "disagreement at small μ: {d_small}");
         assert!(
@@ -336,7 +623,7 @@ mod tests {
         let (dict, a, x) = setup(6, 10, 2);
         let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
         let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.02, iters: 30_000 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.02, 30_000)).unwrap();
         let nu = eng.consensus_nu();
         // grad = ν − x + (1/δ) Σ_q thr(w_qᵀν) w_q
         let s = dict.mat().matvec_t(&nu).unwrap();
@@ -357,7 +644,7 @@ mod tests {
         let (dict, a, x) = setup(6, 10, 3);
         let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
         let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.02, iters: 30_000 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.02, 30_000)).unwrap();
         let nu = eng.consensus_nu();
         let y = eng.recover_y(&dict, &task);
         let wy = dict.mat().matvec(&y).unwrap();
@@ -379,7 +666,7 @@ mod tests {
         let task = TaskSpec::SparseCoding { gamma: 0.3, delta: 0.5 };
         // Both configurations share the same optimum; their O(μ) biases
         // differ, so compare at a small step size.
-        let params = DiffusionParams { mu: 0.01, iters: 60_000 };
+        let params = DiffusionParams::new(0.01, 60_000);
         let mut all = DiffusionEngine::new(&a, 12, None).unwrap();
         all.run(&dict, &task, &x, params).unwrap();
         let mut one = DiffusionEngine::new(&a, 12, Some(&[0])).unwrap();
@@ -395,7 +682,7 @@ mod tests {
         crate::math::vector::scale(5.0, &mut x); // make the box active
         let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
         let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.3, iters: 500 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.3, 500)).unwrap();
         for k in 0..6 {
             assert!(crate::math::vector::norm_inf(eng.nu(k)) <= 1.0 + 1e-6);
         }
@@ -406,7 +693,7 @@ mod tests {
         let (dict, a, x) = setup(6, 10, 6);
         let task = TaskSpec::Nmf { gamma: 0.05, delta: 0.5 };
         let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.3, iters: 1000 }).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.3, 1000)).unwrap();
         let y = eng.recover_y(&dict, &task);
         assert!(y.iter().all(|&v| v >= 0.0));
     }
@@ -418,7 +705,8 @@ mod tests {
         let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
         let mut eng = DiffusionEngine::new(&a, 8, None).unwrap();
         assert!(eng.is_fully_connected());
-        eng.run(&dict, &task, &x, DiffusionParams { mu: 0.3, iters: 1 }).unwrap();
+        assert_eq!(eng.combine_path(), "uniform");
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.3, 1)).unwrap();
         // After combine with A = 11ᵀ/N every row is identical.
         assert!(eng.disagreement() < 1e-6);
     }
@@ -429,22 +717,150 @@ mod tests {
     fn fc_fast_path_matches_gemm_combine() {
         let (dict, _, x) = setup(6, 10, 9);
         let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.4 };
-        let params = DiffusionParams { mu: 0.3, iters: 37 };
+        let params = DiffusionParams::new(0.3, 37);
         let a = uniform_weights(6);
         let mut fast = DiffusionEngine::new(&a, 10, None).unwrap();
         assert!(fast.is_fully_connected());
         fast.run(&dict, &task, &x, params).unwrap();
-        // Force the slow path by perturbing A negligibly below the doubly-
+        // Force the dense path by perturbing A negligibly below the doubly-
         // stochastic tolerance but above the uniform-detection threshold.
         let mut a2 = a.clone();
         a2.set(0, 0, a2.get(0, 0) + 3e-6);
         a2.set(0, 1, a2.get(0, 1) - 3e-6);
         let mut slow = DiffusionEngine::new(&a2, 10, None).unwrap();
         assert!(!slow.is_fully_connected());
+        assert_eq!(slow.combine_path(), "dense");
         slow.run(&dict, &task, &x, params).unwrap();
         for k in 0..6 {
             crate::testutil::assert_close(fast.nu(k), slow.nu(k), 2e-4, 2e-3);
         }
+    }
+
+    /// A ring topology is sparse enough to auto-select the CSR path, and
+    /// the result must match the dense-gemm comparator.
+    #[test]
+    fn sparse_path_matches_dense_combine() {
+        let (n, m) = (24, 10);
+        let mut rng = Pcg64::new(21);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.25, 80);
+
+        let mut sparse = DiffusionEngine::new(&a, m, None).unwrap();
+        assert_eq!(sparse.combine_path(), "sparse");
+        sparse.run(&dict, &task, &x, params).unwrap();
+
+        let mut dense = DiffusionEngine::new(&a, m, None).unwrap();
+        dense.set_combination_dense(&a).unwrap();
+        assert_eq!(dense.combine_path(), "dense");
+        dense.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            crate::testutil::assert_close(sparse.nu(k), dense.nu(k), 1e-5, 1e-4);
+        }
+    }
+
+    /// `new_csr` over the direct CSR builder must agree with the dense
+    /// constructor on the same topology.
+    #[test]
+    fn csr_constructor_matches_dense_constructor() {
+        // Ring k=3 rows hold 7 entries: density 7/32 < SPARSE_DENSITY_MAX,
+        // so both constructors land on the (bit-identical) sparse path.
+        let (n, m) = (32, 8);
+        let mut rng = Pcg64::new(22);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 3 }, &mut rng);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, 60);
+
+        let mut from_dense = DiffusionEngine::new(&metropolis_weights(&g), m, None).unwrap();
+        assert_eq!(from_dense.combine_path(), "sparse");
+        from_dense.run(&dict, &task, &x, params).unwrap();
+        let mut from_csr = DiffusionEngine::new_csr(metropolis_csr(&g), m, None).unwrap();
+        assert_eq!(from_csr.combine_path(), "sparse");
+        from_csr.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            // Identical weights and identical spmm order → bit-identical.
+            assert_eq!(from_dense.nu(k), from_csr.nu(k), "agent {k}");
+        }
+    }
+
+    /// threads = 1 and threads = 4 must produce *identical* ν trajectories
+    /// on every combine path (static row partition, per-row arithmetic
+    /// unchanged).
+    #[test]
+    fn thread_count_does_not_change_trajectory() {
+        let (n, m) = (26, 9); // ring k=2 at N=26 → density 5/26 < 0.25
+        let mut rng = Pcg64::new(23);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+
+        let installs: Vec<(&str, Box<dyn Fn(&mut DiffusionEngine)>)> = vec![
+            ("sparse", Box::new(|e: &mut DiffusionEngine| e.set_combination(&a).unwrap())),
+            ("dense", Box::new(|e: &mut DiffusionEngine| e.set_combination_dense(&a).unwrap())),
+            (
+                "uniform",
+                Box::new(|e: &mut DiffusionEngine| e.set_combination(&uniform_weights(n)).unwrap()),
+            ),
+        ];
+        for (label, install) in &installs {
+            let mut serial = DiffusionEngine::new(&a, m, None).unwrap();
+            install(&mut serial);
+            serial.run(&dict, &task, &x, DiffusionParams::new(0.3, 51)).unwrap();
+            let mut threaded = DiffusionEngine::new(&a, m, None).unwrap();
+            install(&mut threaded);
+            threaded
+                .run(&dict, &task, &x, DiffusionParams::new(0.3, 51).with_threads(4))
+                .unwrap();
+            for k in 0..n {
+                assert_eq!(serial.nu(k), threaded.nu(k), "{label} path, agent {k}");
+            }
+        }
+    }
+
+    /// The Huber projection must behave identically under threading.
+    #[test]
+    fn threaded_huber_matches_serial() {
+        let (n, m) = (10, 8);
+        let mut rng = Pcg64::new(24);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let mut x = rng.normal_vec(m);
+        crate::math::vector::scale(6.0, &mut x);
+        let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
+        let mut serial = DiffusionEngine::new(&a, m, None).unwrap();
+        serial.run(&dict, &task, &x, DiffusionParams::new(0.3, 200)).unwrap();
+        let mut threaded = DiffusionEngine::new(&a, m, None).unwrap();
+        threaded.run(&dict, &task, &x, DiffusionParams::new(0.3, 200).with_threads(3)).unwrap();
+        for k in 0..n {
+            assert_eq!(serial.nu(k), threaded.nu(k));
+            assert!(crate::math::vector::norm_inf(threaded.nu(k)) <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn consensus_nu_into_matches_allocating_variant() {
+        let (dict, a, x) = setup(6, 10, 31);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
+        eng.run(&dict, &task, &x, DiffusionParams::new(0.2, 100)).unwrap();
+        let alloc = eng.consensus_nu();
+        let mut buf = vec![9.9f32; 10];
+        eng.consensus_nu_into(&mut buf);
+        assert_eq!(alloc, buf);
     }
 
     #[test]
@@ -453,7 +869,7 @@ mod tests {
         let mut eng = DiffusionEngine::new(&a, 8, None).unwrap();
         let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
         let bad_x = vec![0.0; 7];
-        assert!(eng.run(&dict, &task, &bad_x, DiffusionParams { mu: 0.1, iters: 1 }).is_err());
+        assert!(eng.run(&dict, &task, &bad_x, DiffusionParams::new(0.1, 1)).is_err());
         assert!(DiffusionEngine::new(&a, 8, Some(&[9])).is_err());
         assert!(DiffusionEngine::new(&a, 8, Some(&[])).is_err());
         let _ = x;

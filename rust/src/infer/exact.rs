@@ -219,7 +219,7 @@ mod tests {
         let g = Graph::generate(8, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
         let a = metropolis_weights(&g);
         let mut eng = crate::infer::DiffusionEngine::new(&a, 10, None).unwrap();
-        eng.run(&dict, &task, &x, crate::infer::DiffusionParams { mu: 0.02, iters: 40_000 })
+        eng.run(&dict, &task, &x, crate::infer::DiffusionParams::new(0.02, 40_000))
             .unwrap();
         // The diffusion fixed point is O(μ) from the exact optimum.
         let nu = eng.consensus_nu();

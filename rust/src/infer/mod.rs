@@ -13,6 +13,6 @@ pub mod cost;
 pub mod diffusion;
 pub mod exact;
 
-pub use cost::{dual_cost_sum, local_cost, scalar_consensus};
-pub use diffusion::{DiffusionEngine, DiffusionParams};
+pub use cost::{dual_cost_sum, local_cost, scalar_consensus, scalar_consensus_threaded};
+pub use diffusion::{DiffusionEngine, DiffusionParams, SPARSE_DENSITY_MAX};
 pub use exact::{exact_dual, ExactSolution};

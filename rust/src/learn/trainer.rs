@@ -73,6 +73,9 @@ impl OnlineTrainer {
     ) -> Result<TrainStats> {
         let mut stats = TrainStats::default();
         self.batch.clear();
+        // Size the engine scratch once so the per-sample loop below never
+        // allocates inside `run` (EXPERIMENTS.md §Perf).
+        self.engine.reserve_atoms(dict.k());
         for &x in samples {
             self.engine.reset();
             self.engine.run(dict, task, x, self.opts.infer)?;
@@ -155,7 +158,7 @@ mod tests {
         let mut dict =
             DistributedDictionary::random(m, k, n, AtomConstraint::UnitBall, &mut rng).unwrap();
         let opts = TrainerOptions {
-            infer: DiffusionParams { mu: 0.3, iters: 400 },
+            infer: DiffusionParams::new(0.3, 400),
             prox: DictProx::None,
         };
         let mut tr = OnlineTrainer::new(&a, m, None, opts).unwrap();
@@ -192,7 +195,7 @@ mod tests {
             &a,
             m,
             None,
-            TrainerOptions { infer: DiffusionParams { mu: 0.3, iters: 50 }, prox: DictProx::None },
+            TrainerOptions { infer: DiffusionParams::new(0.3, 50), prox: DictProx::None },
         )
         .unwrap();
         let x = rng.normal_vec(m);

@@ -53,7 +53,8 @@ COMMANDS:
               [--algos diffusion,diffusion_fc,mairal,admm] [--steps n]
   tune        step-size tuning SNR curves (Fig. 4)    [--mu x] [--iters n]
 
-Common: --seed n, --artifacts dir (default: artifacts)";
+Common: --seed n, --threads t (parallel adapt/combine; results identical),
+        --artifacts dir (default: artifacts)";
 
 fn run(code: impl FnOnce() -> ddl::Result<()>) -> i32 {
     match code() {
@@ -113,6 +114,9 @@ fn cmd_denoise(args: &Args) -> i32 {
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         cfg.agents = args.usize_or("agents", cfg.agents)?;
         cfg.train_samples = args.usize_or("train-samples", cfg.train_samples)?;
+        let threads = args.usize_or("threads", cfg.train_infer.threads)?;
+        cfg.train_infer.threads = threads;
+        cfg.denoise_infer.threads = threads;
         if let Some(k) = args.get("informed") {
             cfg.informed = Some(
                 k.parse()
@@ -151,6 +155,7 @@ fn cmd_novelty(args: &Args) -> i32 {
         let mut cfg = NoveltyConfig::from_toml(&doc, base);
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         cfg.time_steps = args.usize_or("steps", cfg.time_steps)?;
+        cfg.threads = args.usize_or("threads", cfg.threads)?;
         let algos: Vec<NoveltyAlgo> = args
             .str_or("algos", "diffusion,diffusion_fc")
             .split(',')

@@ -126,8 +126,19 @@ impl Mat {
 
     /// Copy column `c` into a fresh vector.
     pub fn col(&self, c: usize) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows];
+        self.col_into(c, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::col`]: write column `c` into a
+    /// caller-provided buffer of length `rows`.
+    pub fn col_into(&self, c: usize, out: &mut [f32]) {
         debug_assert!(c < self.cols);
-        (0..self.rows).map(|r| self.data[r * self.cols + c]).collect()
+        debug_assert_eq!(out.len(), self.rows);
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = self.data[r * self.cols + c];
+        }
     }
 
     /// Write `v` into column `c`.
@@ -358,6 +369,9 @@ mod tests {
     fn col_ops() {
         let mut m = Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
         assert_eq!(m.col(1), vec![1., 3., 5.]);
+        let mut buf = [0.0f32; 3];
+        m.col_into(1, &mut buf);
+        assert_eq!(buf, [1., 3., 5.]);
         m.set_col(0, &[9., 9., 9.]);
         assert_eq!(m.col(0), vec![9., 9., 9.]);
     }

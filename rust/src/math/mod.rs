@@ -8,7 +8,9 @@
 pub mod blas;
 pub mod matrix;
 pub mod solve;
+pub mod sparse;
 pub mod stats;
 pub mod vector;
 
 pub use matrix::Mat;
+pub use sparse::CsrMat;

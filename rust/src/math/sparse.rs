@@ -1,0 +1,287 @@
+//! Compressed-sparse-row matrices for neighborhood-sparse combine.
+//!
+//! A Metropolis combination matrix over a degree-`d` topology has only
+//! `N·(d+1)` structural non-zeros, yet the dense combine `V ← AᵀΨ` pays the
+//! full `O(N²·M)` gemm. Storing `Aᵀ` in CSR turns combine into the spmm
+//! `O(nnz·M) = O(|E|·M)` — the asymptotic win that makes hundreds of agents
+//! tractable (see EXPERIMENTS.md §Perf for measured speedups).
+//!
+//! Row ranges of [`CsrMat::spmm_rows`] are independent, which is what the
+//! multi-threaded combine in [`crate::infer::DiffusionEngine`] partitions
+//! across workers: each output row is accumulated in CSR index order
+//! regardless of the partition, so threaded and serial results are
+//! bit-identical.
+
+use crate::error::{DdlError, Result};
+use crate::math::Mat;
+use std::ops::Range;
+
+/// Immutable CSR matrix of `f32` with sorted column indices per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column index of each stored entry, ascending within a row.
+    indices: Vec<usize>,
+    /// Stored entry values, aligned with `indices`.
+    values: Vec<f32>,
+}
+
+impl CsrMat {
+    /// Build from raw CSR arrays, validating the invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if indptr.len() != rows + 1 {
+            return Err(DdlError::Shape(format!(
+                "csr: indptr length {} != rows + 1 = {}",
+                indptr.len(),
+                rows + 1
+            )));
+        }
+        if indices.len() != values.len() {
+            return Err(DdlError::Shape("csr: indices/values length mismatch".into()));
+        }
+        if indptr[0] != 0 || indptr[rows] != indices.len() {
+            return Err(DdlError::Shape("csr: indptr endpoints inconsistent".into()));
+        }
+        for r in 0..rows {
+            if indptr[r] > indptr[r + 1] {
+                return Err(DdlError::Shape(format!("csr: indptr not monotone at row {r}")));
+            }
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(DdlError::Shape(format!(
+                        "csr: column indices not strictly ascending in row {r}"
+                    )));
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last >= cols {
+                    return Err(DdlError::Shape(format!(
+                        "csr: column index {last} out of range in row {r}"
+                    )));
+                }
+            }
+        }
+        Ok(CsrMat { rows, cols, indptr, indices, values })
+    }
+
+    /// Compress a dense matrix, keeping entries with `|v| > tol`.
+    pub fn from_dense(a: &Mat, tol: f32) -> Self {
+        let (rows, cols) = a.shape();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for (c, &v) in a.row(r).iter().enumerate() {
+                if v.abs() > tol {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat { rows, cols, indptr, indices, values }
+    }
+
+    /// Compress the *transpose* of a dense matrix without materializing it:
+    /// row `r` of the result holds `{a[i][r] : |a[i][r]| > tol}`. This is
+    /// how combine matrices enter the engine — `V ← AᵀΨ` wants `Aᵀ` rows.
+    pub fn from_dense_transposed(a: &Mat, tol: f32) -> Self {
+        let (arows, acols) = a.shape();
+        let mut indptr = Vec::with_capacity(acols + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..acols {
+            for i in 0..arows {
+                let v = a.get(i, r);
+                if v.abs() > tol {
+                    indices.push(i);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat { rows: acols, cols: arows, indptr, indices, values }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entry count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fill fraction `nnz / (rows·cols)`.
+    pub fn density(&self) -> f32 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f32 / (self.rows * self.cols) as f32
+    }
+
+    /// Column indices and values of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f32]) {
+        let span = self.indptr[r]..self.indptr[r + 1];
+        (&self.indices[span.clone()], &self.values[span])
+    }
+
+    /// Densify (diagnostics and tests).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                m.set(r, c, v);
+            }
+        }
+        m
+    }
+
+    /// Sparse × dense: `out = self · B` where `B` is row-major
+    /// `cols × b_cols` and `out` is row-major `rows × b_cols`.
+    pub fn spmm(&self, b: &[f32], b_cols: usize, out: &mut [f32]) {
+        debug_assert_eq!(b.len(), self.cols * b_cols);
+        debug_assert_eq!(out.len(), self.rows * b_cols);
+        self.spmm_rows(0..self.rows, b, b_cols, out);
+    }
+
+    /// Row-range spmm: computes output rows `rows` into `out`, which covers
+    /// **only** that range (`out.len() == rows.len() * b_cols`). Each output
+    /// row accumulates its non-zeros in CSR index order, so any partition
+    /// of the row space produces bit-identical results.
+    pub fn spmm_rows(&self, rows: Range<usize>, b: &[f32], b_cols: usize, out: &mut [f32]) {
+        debug_assert!(rows.end <= self.rows);
+        debug_assert_eq!(b.len(), self.cols * b_cols);
+        debug_assert_eq!(out.len(), rows.len() * b_cols);
+        let base = rows.start;
+        for r in rows {
+            let out_row = &mut out[(r - base) * b_cols..(r - base + 1) * b_cols];
+            out_row.fill(0.0);
+            for p in self.indptr[r]..self.indptr[r + 1] {
+                let a = self.values[p];
+                let b_row = &b[self.indices[p] * b_cols..self.indices[p] * b_cols + b_cols];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += a * bv;
+                }
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::blas;
+    use crate::rng::Pcg64;
+
+    fn random_sparse_dense(n: usize, m: usize, p: f64, rng: &mut Pcg64) -> Mat {
+        Mat::from_fn(n, m, |_, _| if rng.next_f64() < p { rng.next_normal() } else { 0.0 })
+    }
+
+    #[test]
+    fn from_dense_round_trips() {
+        let mut rng = Pcg64::new(1);
+        let a = random_sparse_dense(13, 9, 0.3, &mut rng);
+        let csr = CsrMat::from_dense(&a, 0.0);
+        assert_eq!(csr.to_dense(), a);
+        assert!(csr.density() < 0.6);
+    }
+
+    #[test]
+    fn from_dense_transposed_matches_transpose() {
+        let mut rng = Pcg64::new(2);
+        let a = random_sparse_dense(11, 7, 0.4, &mut rng);
+        let csr = CsrMat::from_dense_transposed(&a, 0.0);
+        assert_eq!(csr.rows(), 7);
+        assert_eq!(csr.cols(), 11);
+        assert_eq!(csr.to_dense(), a.transpose());
+    }
+
+    #[test]
+    fn spmm_matches_gemm() {
+        let mut rng = Pcg64::new(3);
+        for &(n, k, m, p) in &[(5usize, 5usize, 8usize, 0.5), (17, 13, 6, 0.2), (1, 9, 4, 0.9)] {
+            let a = random_sparse_dense(n, k, p, &mut rng);
+            let b = Mat::from_fn(k, m, |_, _| rng.next_normal());
+            let csr = CsrMat::from_dense(&a, 0.0);
+            let mut out = vec![0.0f32; n * m];
+            csr.spmm(b.as_slice(), m, &mut out);
+            let mut dense = vec![0.0f32; n * m];
+            blas::gemm(n, m, k, 1.0, a.as_slice(), b.as_slice(), 0.0, &mut dense);
+            crate::testutil::assert_close(&out, &dense, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn spmm_rows_partition_is_bit_identical() {
+        let mut rng = Pcg64::new(4);
+        let a = random_sparse_dense(12, 12, 0.3, &mut rng);
+        let b = Mat::from_fn(12, 5, |_, _| rng.next_normal());
+        let csr = CsrMat::from_dense(&a, 0.0);
+        let mut full = vec![0.0f32; 12 * 5];
+        csr.spmm(b.as_slice(), 5, &mut full);
+        let mut parts = vec![0.0f32; 12 * 5];
+        for rows in [0..5, 5..9, 9..12] {
+            let span = rows.start * 5..rows.end * 5;
+            csr.spmm_rows(rows, b.as_slice(), 5, &mut parts[span]);
+        }
+        assert_eq!(full, parts);
+    }
+
+    #[test]
+    fn spmm_single_column() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]).unwrap();
+        let csr = CsrMat::from_dense(&a, 0.0);
+        assert_eq!(csr.nnz(), 3);
+        let mut y = vec![0.0f32; 2];
+        csr.spmm(&[1.0, 1.0, 1.0], 1, &mut y);
+        assert_eq!(y, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(CsrMat::from_parts(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).is_ok());
+        // Wrong indptr length.
+        assert!(CsrMat::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // Column out of range.
+        assert!(CsrMat::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // Unsorted columns.
+        assert!(CsrMat::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]).is_err());
+        // indices/values mismatch.
+        assert!(CsrMat::from_parts(1, 2, vec![0, 1], vec![0], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let a = Mat::zeros(4, 4);
+        let csr = CsrMat::from_dense(&a, 0.0);
+        assert_eq!(csr.nnz(), 0);
+        let mut out = vec![1.0f32; 8];
+        csr.spmm(&[1.0; 8], 2, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,12 +1,16 @@
-//! Threaded actor executor: one OS thread per agent, `std::sync::mpsc`
-//! channels along graph edges.
+//! Threaded actor executor: agents multiplexed onto worker threads, with
+//! `std::sync::mpsc` channels carrying ψ along graph edges.
 //!
 //! Demonstrates that the diffusion recursion runs unchanged on a genuinely
-//! concurrent substrate — each agent thread owns its atoms and dual
-//! iterate, receives neighbor ψ messages, and synchronizes per iteration
-//! only through its own channel (messages are tagged with the iteration
-//! index; BSP semantics are preserved by waiting for exactly
-//! `deg(k)` messages of the current iteration before combining).
+//! concurrent substrate. `DiffusionParams::threads` caps the number of OS
+//! threads: each worker owns a contiguous chunk of agents (their atoms and
+//! dual iterates), delivers ψ to same-worker neighbors in memory, and
+//! exchanges ψ with other workers through per-worker channels (messages are
+//! tagged with the iteration index; BSP semantics are preserved by waiting
+//! for exactly the number of cross-worker inbound edges of the current
+//! iteration before finishing a combine). With `threads ≥ N` this recovers
+//! the classic one-thread-per-agent configuration; with small `threads` it
+//! scales to hundreds of agents without hundreds of threads.
 
 use crate::error::{DdlError, Result};
 use crate::graph::Graph;
@@ -14,14 +18,15 @@ use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
 use crate::net::message::PsiMessage;
+use crate::net::pool::chunk_range;
 use crate::ops::project::clip_linf;
 use std::sync::mpsc;
-use std::thread;
 
-/// Run diffusion with one thread per agent; returns each agent's final ν.
+/// Run diffusion on `min(params.threads, N)` worker threads; returns each
+/// agent's final ν (indexed by agent).
 ///
-/// `dict` is cloned per agent but each thread only reads its own block —
-/// the clone stands in for "agent k stores W_k locally".
+/// `dict` is cloned per worker but each worker only reads its own agents'
+/// blocks — the clone stands in for "agent k stores W_k locally".
 pub fn run_threaded(
     graph: &Graph,
     weights: &Mat,
@@ -33,127 +38,169 @@ pub fn run_threaded(
 ) -> Result<Vec<Vec<f32>>> {
     let n = graph.n();
     let m = x.len();
-    let mut theta = vec![0.0f32; n];
-    match informed {
-        None => theta.fill(1.0 / n as f32),
-        Some(idx) => {
-            if idx.is_empty() {
-                return Err(DdlError::Config("need at least one informed agent".into()));
-            }
-            let w = 1.0 / idx.len() as f32;
-            for &k in idx {
-                theta[k] = w;
-            }
+    let workers = params.threads.max(1).min(n);
+    let theta = crate::infer::diffusion::build_theta(n, informed)?;
+
+    // Agent → owning worker (contiguous chunks, same partition the engine
+    // uses).
+    let mut owner = vec![0usize; n];
+    for w in 0..workers {
+        for k in chunk_range(n, workers, w) {
+            owner[k] = w;
         }
     }
 
-    // Channels: one receiver per agent; senders cloned to its neighbors.
-    let mut senders: Vec<mpsc::Sender<PsiMessage>> = Vec::with_capacity(n);
-    let mut receivers: Vec<Option<mpsc::Receiver<PsiMessage>>> = Vec::with_capacity(n);
-    for _ in 0..n {
+    // One channel per worker; messages carry the destination agent.
+    let mut senders: Vec<mpsc::Sender<(usize, PsiMessage)>> = Vec::with_capacity(workers);
+    let mut receivers: Vec<Option<mpsc::Receiver<(usize, PsiMessage)>>> =
+        Vec::with_capacity(workers);
+    for _ in 0..workers {
         let (tx, rx) = mpsc::channel();
         senders.push(tx);
         receivers.push(Some(rx));
     }
 
-    let mut handles = Vec::with_capacity(n);
-    for k in 0..n {
-        let rx = receivers[k].take().unwrap();
-        let neighbor_tx: Vec<(usize, mpsc::Sender<PsiMessage>)> = graph
-            .neighbors(k)
-            .iter()
-            .map(|&nb| (nb, senders[nb].clone()))
-            .collect();
-        let akk = weights.get(k, k);
-        let col_weights: Vec<(usize, f32)> = graph
-            .neighbors(k)
-            .iter()
-            .map(|&l| (l, weights.get(l, k)))
-            .collect();
-        let dict = dict.clone();
-        let task = *task;
-        let x = x.to_vec();
-        let theta_k = theta[k];
-        let deg = graph.degree(k);
+    let results = std::thread::scope(
+        |scope| -> Result<Vec<Vec<(usize, Vec<f32>)>>> {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let rx = receivers[w].take().unwrap();
+                let txs = senders.clone();
+                let owned = chunk_range(n, workers, w);
+                let dict = dict.clone();
+                let owner = &owner;
+                let theta = &theta;
 
-        handles.push(thread::spawn(move || -> Result<Vec<f32>> {
-            let cf_over_n = task.conj_grad_scale() / n as f32;
-            let inv_delta = 1.0 / task.delta();
-            let clip = task.dual_clip();
-            let mut nu = vec![0.0f32; m];
-            let mut psi = vec![0.0f32; m];
-            let mut thr = vec![0.0f32; dict.k()];
-            // Early-arrival buffer for messages from the next iteration.
-            let mut pending: Vec<PsiMessage> = Vec::new();
+                handles.push(scope.spawn(move || -> Result<Vec<(usize, Vec<f32>)>> {
+                    let cf_over_n = task.conj_grad_scale() / n as f32;
+                    let inv_delta = 1.0 / task.delta();
+                    let clip = task.dual_clip();
+                    let base = owned.start;
+                    let count = owned.len();
+                    let mut nu = vec![vec![0.0f32; m]; count];
+                    let mut psi = vec![vec![0.0f32; m]; count];
+                    let mut thr = vec![0.0f32; dict.k()];
+                    // Early-arrival buffer for messages of future iterations.
+                    let mut pending: Vec<(usize, PsiMessage)> = Vec::new();
+                    // Cross-worker inbound edges this worker must hear from
+                    // each iteration.
+                    let ext_needed: usize = owned
+                        .clone()
+                        .map(|k| {
+                            graph.neighbors(k).iter().filter(|&&l| owner[l] != w).count()
+                        })
+                        .sum();
 
-            for iter in 0..params.iters {
-                // Adapt.
-                dict.block_correlations(k, &nu, &mut thr);
-                let (start, len) = dict.block(k);
-                for q in start..start + len {
-                    thr[q] = task.threshold(thr[q]) * (-params.mu * inv_delta);
-                }
-                for i in 0..m {
-                    psi[i] = nu[i] - params.mu * (cf_over_n * nu[i] - theta_k * x[i]);
-                }
-                dict.block_accumulate(k, &thr, &mut psi);
-                // Send ψ to neighbors.
-                for (_, tx) in &neighbor_tx {
-                    tx.send(PsiMessage { from: k, iter, psi: psi.clone() })
-                        .map_err(|e| DdlError::Runtime(format!("send failed: {e}")))?;
-                }
-                // Combine own contribution.
-                for i in 0..m {
-                    nu[i] = akk * psi[i];
-                }
-                // Collect exactly deg messages for this iteration (messages
-                // from iteration iter+1 may arrive early; buffer them).
-                let mut got = 0usize;
-                let apply = |msg: &PsiMessage, nu: &mut [f32]| {
-                    let w = col_weights
-                        .iter()
-                        .find(|(l, _)| *l == msg.from)
-                        .map(|(_, w)| *w)
-                        .unwrap_or(0.0);
-                    for i in 0..m {
-                        nu[i] += w * msg.psi[i];
+                    for iter in 0..params.iters {
+                        // Adapt every owned agent.
+                        for (i, k) in owned.clone().enumerate() {
+                            dict.block_correlations(k, &nu[i], &mut thr);
+                            let (start, len) = dict.block(k);
+                            for q in start..start + len {
+                                thr[q] = task.threshold(thr[q]) * (-params.mu * inv_delta);
+                            }
+                            for j in 0..m {
+                                psi[i][j] = nu[i][j]
+                                    - params.mu * (cf_over_n * nu[i][j] - theta[k] * x[j]);
+                            }
+                            dict.block_accumulate(k, &thr, &mut psi[i]);
+                        }
+                        // Ship ψ to cross-worker neighbors (one message per
+                        // directed edge, as in the per-agent executor).
+                        for (i, k) in owned.clone().enumerate() {
+                            for &nb in graph.neighbors(k) {
+                                if owner[nb] != w {
+                                    txs[owner[nb]]
+                                        .send((
+                                            nb,
+                                            PsiMessage { from: k, iter, psi: psi[i].clone() },
+                                        ))
+                                        .map_err(|e| {
+                                            DdlError::Runtime(format!("send failed: {e}"))
+                                        })?;
+                                }
+                            }
+                        }
+                        // Combine: own contribution plus same-worker
+                        // neighbors, delivered in memory.
+                        for (i, k) in owned.clone().enumerate() {
+                            let akk = weights.get(k, k);
+                            for j in 0..m {
+                                nu[i][j] = akk * psi[i][j];
+                            }
+                        }
+                        for (i, k) in owned.clone().enumerate() {
+                            for &nb in graph.neighbors(k) {
+                                if owner[nb] == w {
+                                    let wgt = weights.get(nb, k);
+                                    let src = &psi[nb - base];
+                                    let dst = &mut nu[i];
+                                    for j in 0..m {
+                                        dst[j] += wgt * src[j];
+                                    }
+                                }
+                            }
+                        }
+                        // Collect the cross-worker messages of this
+                        // iteration (later-iteration arrivals are buffered).
+                        let apply = |to: usize, msg: &PsiMessage, nu: &mut Vec<Vec<f32>>| {
+                            let wgt = weights.get(msg.from, to);
+                            let dst = &mut nu[to - base];
+                            for j in 0..m {
+                                dst[j] += wgt * msg.psi[j];
+                            }
+                        };
+                        let mut got = 0usize;
+                        let mut still_pending = Vec::new();
+                        for (to, msg) in pending.drain(..) {
+                            if msg.iter == iter {
+                                apply(to, &msg, &mut nu);
+                                got += 1;
+                            } else {
+                                still_pending.push((to, msg));
+                            }
+                        }
+                        pending = still_pending;
+                        while got < ext_needed {
+                            let (to, msg) = rx
+                                .recv()
+                                .map_err(|e| DdlError::Runtime(format!("recv failed: {e}")))?;
+                            if msg.iter == iter {
+                                apply(to, &msg, &mut nu);
+                                got += 1;
+                            } else {
+                                pending.push((to, msg));
+                            }
+                        }
+                        if let Some(b) = clip {
+                            for v in &mut nu {
+                                clip_linf(v, b);
+                            }
+                        }
                     }
-                };
-                let mut still_pending = Vec::new();
-                for msg in pending.drain(..) {
-                    if msg.iter == iter {
-                        apply(&msg, &mut nu);
-                        got += 1;
-                    } else {
-                        still_pending.push(msg);
-                    }
-                }
-                pending = still_pending;
-                while got < deg {
-                    let msg = rx
-                        .recv()
-                        .map_err(|e| DdlError::Runtime(format!("recv failed: {e}")))?;
-                    if msg.iter == iter {
-                        apply(&msg, &mut nu);
-                        got += 1;
-                    } else {
-                        pending.push(msg);
-                    }
-                }
-                if let Some(b) = clip {
-                    clip_linf(&mut nu, b);
-                }
+                    Ok(owned.zip(nu).collect())
+                }));
             }
-            Ok(nu)
-        }));
-    }
-    drop(senders);
+            drop(senders);
 
-    let mut out = Vec::with_capacity(n);
-    for h in handles {
-        out.push(h.join().map_err(|_| DdlError::Runtime("agent thread panicked".into()))??);
+            let mut out = Vec::with_capacity(workers);
+            for h in handles {
+                out.push(
+                    h.join()
+                        .map_err(|_| DdlError::Runtime("agent worker panicked".into()))??,
+                );
+            }
+            Ok(out)
+        },
+    )?;
+
+    let mut nus: Vec<Vec<f32>> = vec![Vec::new(); n];
+    for chunk in results {
+        for (k, nu) in chunk {
+            nus[k] = nu;
+        }
     }
-    Ok(out)
+    Ok(nus)
 }
 
 #[cfg(test)]
@@ -174,13 +221,37 @@ mod tests {
         let a = metropolis_weights(&g);
         let x = rng.normal_vec(m);
         let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
-        let params = DiffusionParams { mu: 0.3, iters: 40 };
+        // One thread per agent — the classic actor configuration.
+        let params = DiffusionParams::new(0.3, 40).with_threads(n);
 
         let mut engine = DiffusionEngine::new(&a, m, None).unwrap();
-        engine.run(&dict, &task, &x, params).unwrap();
+        engine.run(&dict, &task, &x, DiffusionParams::new(0.3, 40)).unwrap();
         let nus = run_threaded(&g, &a, &dict, &task, &x, None, params).unwrap();
         for k in 0..n {
             crate::testutil::assert_close(&nus[k], engine.nu(k), 1e-4, 1e-3);
+        }
+    }
+
+    /// Multiplexed: more agents than worker threads.
+    #[test]
+    fn multiplexed_workers_match_engine() {
+        let (n, m) = (11, 7);
+        let mut rng = Pcg64::new(3);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+
+        let mut engine = DiffusionEngine::new(&a, m, None).unwrap();
+        engine.run(&dict, &task, &x, DiffusionParams::new(0.25, 35)).unwrap();
+        for threads in [1, 2, 3] {
+            let params = DiffusionParams::new(0.25, 35).with_threads(threads);
+            let nus = run_threaded(&g, &a, &dict, &task, &x, None, params).unwrap();
+            for k in 0..n {
+                crate::testutil::assert_close(&nus[k], engine.nu(k), 1e-4, 1e-3);
+            }
         }
     }
 
@@ -194,9 +265,9 @@ mod tests {
         let a = metropolis_weights(&g);
         let x = rng.normal_vec(m);
         let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
-        let params = DiffusionParams { mu: 0.2, iters: 30 };
+        let params = DiffusionParams::new(0.2, 30).with_threads(2);
         let mut engine = DiffusionEngine::new(&a, m, Some(&[2])).unwrap();
-        engine.run(&dict, &task, &x, params).unwrap();
+        engine.run(&dict, &task, &x, DiffusionParams::new(0.2, 30)).unwrap();
         let nus = run_threaded(&g, &a, &dict, &task, &x, Some(&[2]), params).unwrap();
         for k in 0..n {
             crate::testutil::assert_close(&nus[k], engine.nu(k), 1e-4, 1e-3);

@@ -146,7 +146,7 @@ mod tests {
         let a = metropolis_weights(&g);
         let x = rng.normal_vec(m);
         let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
-        let params = DiffusionParams { mu: 0.3, iters: 57 };
+        let params = DiffusionParams::new(0.3, 57);
 
         let mut engine = DiffusionEngine::new(&a, m, None).unwrap();
         engine.run(&dict, &task, &x, params).unwrap();
@@ -172,7 +172,7 @@ mod tests {
         let iters = 10;
         let edges = g.edge_count();
         let mut bsp = BspNetwork::new(g, a, m, None);
-        bsp.run(&dict, &task, &x, DiffusionParams { mu: 0.2, iters }).unwrap();
+        bsp.run(&dict, &task, &x, DiffusionParams::new(0.2, iters)).unwrap();
         let st = bsp.stats();
         // Each undirected edge carries 2 messages per round.
         assert_eq!(st.messages, 2 * edges * iters);
@@ -193,7 +193,7 @@ mod tests {
         crate::math::vector::scale(8.0, &mut x);
         let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
         let mut bsp = BspNetwork::new(g, a, m, None);
-        bsp.run(&dict, &task, &x, DiffusionParams { mu: 0.4, iters: 100 }).unwrap();
+        bsp.run(&dict, &task, &x, DiffusionParams::new(0.4, 100)).unwrap();
         for k in 0..n {
             assert!(crate::math::vector::norm_inf(bsp.nu(k)) <= 1.0 + 1e-6);
         }

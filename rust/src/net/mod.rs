@@ -9,12 +9,19 @@
 //! * [`bsp`] — deterministic bulk-synchronous rounds (used by tests to
 //!   prove equivalence with the gemm engine, and by the drivers when
 //!   accounting is wanted);
-//! * [`actors`] — one OS thread per agent with channels, demonstrating
-//!   that the algorithm runs on a genuinely concurrent substrate.
+//! * [`actors`] — worker threads with channels (one or more agents per
+//!   thread, capped by `DiffusionParams::threads`), demonstrating that the
+//!   algorithm runs on a genuinely concurrent substrate.
+//!
+//! The [`pool`] module provides the shared scoped-thread worker pool that
+//! both the matrix-form engine and the scalar cost-consensus use for
+//! row-partitioned parallelism.
 
 pub mod actors;
 pub mod bsp;
 pub mod message;
+pub mod pool;
 
 pub use bsp::BspNetwork;
 pub use message::{MessageStats, PsiMessage};
+pub use pool::{chunk_range, SharedRows, WorkerPool};

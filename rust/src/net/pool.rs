@@ -1,0 +1,245 @@
+//! Scoped-thread worker pool for row-partitioned SPMD loops.
+//!
+//! The diffusion hot loops are embarrassingly parallel over agents: adapt
+//! writes row `k` of `Ψ` reading only row `k` of `V`, and combine writes
+//! row `k` of `V` reading all of `Ψ`. This module provides the three
+//! pieces the engine (and `scalar_consensus`) need to exploit that without
+//! external dependencies:
+//!
+//! * [`WorkerPool`] — spawns `threads − 1` scoped workers plus the calling
+//!   thread and runs one closure per worker. Iteration loops live *inside*
+//!   the closure with a [`std::sync::Barrier`] per phase, so threads are
+//!   spawned once per `run()`, not once per iteration.
+//! * [`chunk_range`] — the deterministic row partition. Work is split by
+//!   static ranges (never work-stealing) so each row is computed by exactly
+//!   one worker with the same per-row arithmetic as the serial path —
+//!   results are bit-identical for every thread count.
+//! * [`SharedRows`] — an unsafe-but-small escape hatch that lets workers
+//!   hold disjoint mutable row windows of one buffer across barrier phases,
+//!   which safe borrows cannot express.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+
+/// Deterministic contiguous partition: range of `idx` (0-based) among
+/// `parts` near-equal chunks of `total` items. Leading chunks take the
+/// remainder, so sizes differ by at most one.
+pub fn chunk_range(total: usize, parts: usize, idx: usize) -> Range<usize> {
+    debug_assert!(parts > 0 && idx < parts);
+    let base = total / parts;
+    let rem = total % parts;
+    let start = idx * base + idx.min(rem);
+    let len = base + usize::from(idx < rem);
+    start..start + len
+}
+
+/// A reusable handle describing how many workers an SPMD region runs on.
+///
+/// Workers are scoped threads: they borrow the caller's data and are joined
+/// before the method returns, so no `'static` bounds or `Arc` plumbing leak
+/// into call sites.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker_id)` on every worker; `worker_id` ∈ `0..threads`.
+    /// Worker 0 executes on the calling thread. Returns after all workers
+    /// finish.
+    pub fn spmd<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        std::thread::scope(|scope| {
+            for w in 1..self.threads {
+                let fr = &f;
+                scope.spawn(move || fr(w));
+            }
+            f(0);
+        });
+    }
+
+    /// Like [`Self::spmd`], but hands each worker exclusive `&mut` access
+    /// to one element of `states` (per-worker scratch that outlives the
+    /// call — the engine reuses these buffers across `run()` invocations to
+    /// stay allocation-free). `states` must hold at least `threads`
+    /// elements; extras are untouched.
+    pub fn spmd_with<S, F>(&self, states: &mut [S], f: F)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        assert!(
+            states.len() >= self.threads,
+            "spmd_with: {} states for {} workers",
+            states.len(),
+            self.threads
+        );
+        if self.threads == 1 {
+            f(0, &mut states[0]);
+            return;
+        }
+        let (first, rest) = states.split_at_mut(1);
+        std::thread::scope(|scope| {
+            for (i, st) in rest.iter_mut().take(self.threads - 1).enumerate() {
+                let fr = &f;
+                scope.spawn(move || fr(i + 1, st));
+            }
+            f(0, &mut first[0]);
+        });
+    }
+
+}
+
+/// Shared mutable view of a row-major buffer for barrier-phased SPMD.
+///
+/// Safe Rust cannot express "worker `w` mutably owns rows `r_w..r_{w+1}`
+/// during phase A, then everyone reads the whole buffer during phase B"
+/// across scoped threads; this wrapper carries the raw pointer and pushes
+/// the aliasing discipline to the (two) call sites.
+///
+/// # Safety contract
+/// * [`Self::rows_mut`] windows handed to concurrent workers must be
+///   disjoint;
+/// * a phase that reads overlapping data written by another worker must be
+///   separated from the writes by a barrier (or scope join);
+/// * the view must not outlive the borrow it was created from (enforced by
+///   the lifetime parameter).
+pub struct SharedRows<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SharedRows<'_> {}
+unsafe impl Sync for SharedRows<'_> {}
+
+impl<'a> SharedRows<'a> {
+    /// Wrap a mutable buffer.
+    pub fn new(data: &'a mut [f32]) -> Self {
+        SharedRows { ptr: data.as_mut_ptr(), len: data.len(), _marker: PhantomData }
+    }
+
+    /// Immutable view of rows `start..start + nrows` (row length `cols`).
+    ///
+    /// # Safety
+    /// No worker may concurrently write any element of the window (see the
+    /// type-level contract).
+    #[inline]
+    pub unsafe fn rows(&self, start: usize, nrows: usize, cols: usize) -> &[f32] {
+        let off = start * cols;
+        let len = nrows * cols;
+        debug_assert!(off + len <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(off), len)
+    }
+
+    /// Mutable view of rows `start..start + nrows` (row length `cols`).
+    ///
+    /// # Safety
+    /// Windows handed to concurrent workers must be disjoint and unread by
+    /// others until the next barrier (see the type-level contract).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows_mut(&self, start: usize, nrows: usize, cols: usize) -> &mut [f32] {
+        let off = start * cols;
+        let len = nrows * cols;
+        debug_assert!(off + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn chunk_ranges_cover_and_partition() {
+        for &(total, parts) in &[(10usize, 3usize), (6, 4), (4, 7), (0, 2), (100, 1)] {
+            let mut covered = vec![false; total];
+            let mut prev_end = 0;
+            for w in 0..parts {
+                let r = chunk_range(total, parts, w);
+                assert_eq!(r.start, prev_end, "chunks must be contiguous");
+                prev_end = r.end;
+                for i in r {
+                    assert!(!covered[i]);
+                    covered[i] = true;
+                }
+            }
+            assert_eq!(prev_end, total);
+            assert!(covered.into_iter().all(|c| c));
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_near_equal() {
+        for w in 0..5 {
+            let len = chunk_range(23, 5, w).len();
+            assert!((4..=5).contains(&len));
+        }
+    }
+
+    #[test]
+    fn spmd_runs_every_worker() {
+        let count = AtomicUsize::new(0);
+        let seen: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        WorkerPool::new(4).spmd(|w| {
+            count.fetch_add(1, Ordering::SeqCst);
+            seen[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+        for s in &seen {
+            assert_eq!(s.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn spmd_with_gives_exclusive_state() {
+        let mut states = vec![0usize; 3];
+        WorkerPool::new(3).spmd_with(&mut states, |w, st| {
+            *st = w + 10;
+        });
+        assert_eq!(states, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn shared_rows_barrier_phases() {
+        // Phase 1: workers write disjoint rows; phase 2: everyone reads
+        // the full buffer and checks the other workers' writes landed.
+        let threads = 3;
+        let (rows, cols) = (7usize, 4usize);
+        let mut buf = vec![0.0f32; rows * cols];
+        let shared = SharedRows::new(&mut buf);
+        let barrier = Barrier::new(threads);
+        WorkerPool::new(threads).spmd(|w| {
+            let mine = chunk_range(rows, threads, w);
+            let window = unsafe { shared.rows_mut(mine.start, mine.len(), cols) };
+            for (i, v) in window.iter_mut().enumerate() {
+                *v = (mine.start * cols + i) as f32;
+            }
+            barrier.wait();
+            let all = unsafe { shared.rows(0, rows, cols) };
+            for (i, &v) in all.iter().enumerate() {
+                assert_eq!(v, i as f32);
+            }
+        });
+        assert_eq!(buf[rows * cols - 1], (rows * cols - 1) as f32);
+    }
+}

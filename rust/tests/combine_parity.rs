@@ -1,0 +1,183 @@
+//! Combine-path equivalence properties: the CSR spmm path, the dense gemm
+//! path, and the uniform fast path must compute the same diffusion, and
+//! the thread count must never change a trajectory.
+//!
+//! These are the safety net for the sparse + parallel inference substrate:
+//! every optimization the engine picks (`uniform` / `sparse` / `dense`,
+//! `threads = T`) is proven interchangeable here across random Metropolis
+//! topologies and agent counts.
+
+use ddl::graph::{metropolis_csr, metropolis_weights, Graph, Topology};
+use ddl::infer::{DiffusionEngine, DiffusionParams};
+use ddl::math::{blas, CsrMat, Mat};
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::rng::Pcg64;
+
+/// One random (topology, Ψ) combine instance: CSR spmm vs dense gemm.
+fn combine_pair(n: usize, m: usize, topo: &Topology, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
+    let g = Graph::generate(n, topo, rng);
+    let a = metropolis_weights(&g);
+    let at_csr = metropolis_csr(&g);
+    let psi = Mat::from_fn(n, m, |_, _| rng.next_normal());
+    let mut v_sparse = vec![0.0f32; n * m];
+    at_csr.spmm(psi.as_slice(), m, &mut v_sparse);
+    let at = a.transpose();
+    let mut v_dense = vec![0.0f32; n * m];
+    blas::gemm(n, m, n, 1.0, at.as_slice(), psi.as_slice(), 0.0, &mut v_dense);
+    (v_sparse, v_dense)
+}
+
+/// Property: CSR-spmm combine matches the dense gemm combine to ≤ 1e-6
+/// across random Metropolis topologies and agent counts.
+#[test]
+fn prop_csr_combine_matches_dense_combine() {
+    let mut rng = Pcg64::new(0xC5_01);
+    for case in 0..30 {
+        let n = 5 + (rng.next_below(60) as usize);
+        let m = 1 + (rng.next_below(24) as usize);
+        let topo = match rng.next_below(3) {
+            0 => Topology::Ring { k: 1 + rng.next_below(4) as usize },
+            1 => Topology::Grid,
+            _ => Topology::ErdosRenyi { p: 0.15 + 0.5 * rng.next_f64() },
+        };
+        let (sparse, dense) = combine_pair(n, m, &topo, &mut rng);
+        for (i, (&s, &d)) in sparse.iter().zip(&dense).enumerate() {
+            assert!(
+                (s - d).abs() <= 1e-6 + 1e-6 * d.abs(),
+                "case {case} ({topo:?}, n={n}, m={m}): index {i}: {s} vs {d}"
+            );
+        }
+    }
+}
+
+/// Property: compressing the dense Metropolis matrix gives the same CSR the
+/// direct builder produces (values and structure both).
+#[test]
+fn prop_direct_csr_equals_compressed_dense() {
+    let mut rng = Pcg64::new(0xC5_02);
+    for _ in 0..20 {
+        let n = 4 + (rng.next_below(40) as usize);
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.3 }, &mut rng);
+        let direct = metropolis_csr(&g);
+        let compressed = CsrMat::from_dense_transposed(&metropolis_weights(&g), 0.0);
+        // The diagonal can be an exact 0.0 in degenerate cases (and would
+        // then be dropped by compression), so compare via densification.
+        assert_eq!(direct.to_dense(), compressed.to_dense());
+    }
+}
+
+fn random_problem(
+    n: usize,
+    m: usize,
+    rng: &mut Pcg64,
+) -> (DistributedDictionary, Graph, Vec<f32>) {
+    let dict = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, rng).unwrap();
+    let g = Graph::generate(n, &Topology::Ring { k: 2 }, rng);
+    let x = rng.normal_vec(m);
+    (dict, g, x)
+}
+
+/// Property: full engine runs agree between the auto-selected sparse path
+/// and the forced dense path, across sizes.
+#[test]
+fn prop_engine_sparse_path_equals_dense_path() {
+    let mut rng = Pcg64::new(0xC5_03);
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+    // Ring k=2 rows hold 5 entries, so density 5/N ≤ 0.25 needs N ≥ 20.
+    for &(n, m) in &[(24usize, 6usize), (36, 10), (57, 17)] {
+        let (dict, g, x) = random_problem(n, m, &mut rng);
+        let a = metropolis_weights(&g);
+        let params = DiffusionParams::new(0.25, 60);
+
+        let mut sparse = DiffusionEngine::new(&a, m, None).unwrap();
+        assert_eq!(sparse.combine_path(), "sparse", "ring k=2 at n={n} must be sparse");
+        sparse.run(&dict, &task, &x, params).unwrap();
+
+        let mut dense = DiffusionEngine::new(&a, m, None).unwrap();
+        dense.set_combination_dense(&a).unwrap();
+        dense.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            for (i, (&s, &d)) in sparse.nu(k).iter().zip(dense.nu(k)).enumerate() {
+                assert!(
+                    (s - d).abs() <= 1e-5 + 1e-4 * d.abs(),
+                    "n={n}, agent {k}, dim {i}: sparse {s} vs dense {d}"
+                );
+            }
+        }
+    }
+}
+
+/// The uniform fast path must be reproduced bit-for-bit by the threaded
+/// variant (worker 0 runs the identical serial reduction).
+#[test]
+fn uniform_fast_path_threading_is_bit_identical() {
+    let mut rng = Pcg64::new(0xC5_04);
+    let (n, m) = (15, 9);
+    let dict = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let a = ddl::graph::uniform_weights(n);
+    let x = rng.normal_vec(m);
+    let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.4 };
+    let mut serial = DiffusionEngine::new(&a, m, None).unwrap();
+    assert_eq!(serial.combine_path(), "uniform");
+    serial.run(&dict, &task, &x, DiffusionParams::new(0.3, 64)).unwrap();
+    let mut threaded = DiffusionEngine::new(&a, m, None).unwrap();
+    threaded.run(&dict, &task, &x, DiffusionParams::new(0.3, 64).with_threads(4)).unwrap();
+    for k in 0..n {
+        assert_eq!(serial.nu(k), threaded.nu(k), "agent {k}");
+    }
+}
+
+/// Determinism: `threads = 1` and `threads = 4` produce identical ν
+/// trajectories — checked at several intermediate horizons, not just the
+/// final iterate, on both sparse and dense paths.
+#[test]
+fn thread_determinism_across_horizons() {
+    let mut rng = Pcg64::new(0xC5_05);
+    let (n, m) = (26, 11);
+    let (dict, g, x) = random_problem(n, m, &mut rng);
+    let a = metropolis_weights(&g);
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+
+    for force_dense in [false, true] {
+        for iters in [1usize, 7, 33] {
+            let make = |threads: usize| {
+                let mut e = DiffusionEngine::new(&a, m, None).unwrap();
+                if force_dense {
+                    e.set_combination_dense(&a).unwrap();
+                }
+                e.run(&dict, &task, &x, DiffusionParams::new(0.3, iters).with_threads(threads))
+                    .unwrap();
+                e
+            };
+            let serial = make(1);
+            let threaded = make(4);
+            for k in 0..n {
+                assert_eq!(
+                    serial.nu(k),
+                    threaded.nu(k),
+                    "force_dense={force_dense}, iters={iters}, agent {k}"
+                );
+            }
+        }
+    }
+}
+
+/// The engine built straight from a CSR (no dense materialization) matches
+/// the dense-constructed engine bit-for-bit on the same topology.
+#[test]
+fn csr_constructed_engine_is_exact() {
+    let mut rng = Pcg64::new(0xC5_06);
+    let (n, m) = (40, 8);
+    let (dict, g, x) = random_problem(n, m, &mut rng);
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+    let params = DiffusionParams::new(0.25, 50);
+    let mut from_dense = DiffusionEngine::new(&metropolis_weights(&g), m, None).unwrap();
+    assert_eq!(from_dense.combine_path(), "sparse");
+    from_dense.run(&dict, &task, &x, params).unwrap();
+    let mut from_csr = DiffusionEngine::new_csr(metropolis_csr(&g), m, None).unwrap();
+    from_csr.run(&dict, &task, &x, params).unwrap();
+    for k in 0..n {
+        assert_eq!(from_dense.nu(k), from_csr.nu(k), "agent {k}");
+    }
+}

@@ -61,7 +61,7 @@ fn quickstart_infer_matches_native() {
 
     // Native path.
     let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
-    eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+    eng.run(&dict, &task, &x, DiffusionParams::new(mu, iters)).unwrap();
 
     for k in 0..n {
         for i in 0..m {
@@ -105,7 +105,7 @@ fn novelty_huber_infer_matches_native_and_scores() {
         .unwrap();
 
     let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
-    eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+    eng.run(&dict, &task, &x, DiffusionParams::new(mu, iters)).unwrap();
 
     // Dual iterates match.
     for k in 0..n {
@@ -187,7 +187,7 @@ fn informed_subset_via_theta_matches_native() {
         .unwrap();
 
     let mut eng = DiffusionEngine::new(&a, m, Some(&[0])).unwrap();
-    eng.run(&dict, &task, &x, DiffusionParams { mu, iters }).unwrap();
+    eng.run(&dict, &task, &x, DiffusionParams::new(mu, iters)).unwrap();
     for k in 0..n {
         for i in 0..m {
             let h = out.v.get(k, i);

@@ -215,19 +215,19 @@ fn failure_injection_shape_mismatches() {
     let mut eng = ddl::infer::DiffusionEngine::new(&a, 8, None).unwrap();
     // Wrong x length.
     assert!(eng
-        .run(&dict, &task, &[0.0; 7], ddl::infer::DiffusionParams { mu: 0.1, iters: 1 })
+        .run(&dict, &task, &[0.0; 7], ddl::infer::DiffusionParams::new(0.1, 1))
         .is_err());
     // Wrong dictionary dimension.
     let dict_bad =
         DistributedDictionary::random(9, 4, 4, AtomConstraint::UnitBall, &mut rng).unwrap();
     assert!(eng
-        .run(&dict_bad, &task, &[0.0; 8], ddl::infer::DiffusionParams { mu: 0.1, iters: 1 })
+        .run(&dict_bad, &task, &[0.0; 8], ddl::infer::DiffusionParams::new(0.1, 1))
         .is_err());
     // Wrong agent count.
     let dict_n =
         DistributedDictionary::random(8, 6, 6, AtomConstraint::UnitBall, &mut rng).unwrap();
     assert!(eng
-        .run(&dict_n, &task, &[0.0; 8], ddl::infer::DiffusionParams { mu: 0.1, iters: 1 })
+        .run(&dict_n, &task, &[0.0; 8], ddl::infer::DiffusionParams::new(0.1, 1))
         .is_err());
     // Non-square combination matrix.
     assert!(ddl::infer::DiffusionEngine::new(&Mat::zeros(3, 4), 8, None).is_err());
