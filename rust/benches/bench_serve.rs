@@ -1,0 +1,151 @@
+//! Serving throughput: batched streaming path vs the sequential
+//! one-sample-per-`run()` loop the repo used before the `serve/`
+//! subsystem.
+//!
+//! Operating point (ISSUE/EXPERIMENTS §Serving): N = 100 agents on the 4-
+//! connected grid, M = 100 (10×10 patches), one atom per agent, sparse-
+//! coding task, online dictionary update after every minibatch (each
+//! sample presented once, Alg. 1). Both paths do identical end-to-end
+//! work per sample — inference, coefficient recovery, stats, Eq. 51
+//! update — and produce identical per-sample trajectories (see
+//! `tests/combine_parity.rs`); only the batching differs:
+//!
+//! * **seq**  — `OnlineTrainer::step` once per sample (`B = 1`);
+//! * **batch8** — `OnlineTrainer::step` once per 8 samples
+//!   (`DiffusionEngine::run_batch`, one combine + one worker-pool region
+//!   amortized across the minibatch).
+//!
+//! Headline figures written to `BENCH_serve.json`:
+//!
+//! * `serve_throughput_speedup_b8_vs_seq_n100_grid` — batched vs
+//!   sequential samples/s at the serving thread count (t = 2);
+//! * `serve_throughput_speedup_b8_vs_seq_n100_grid_t1` — same at t = 1
+//!   (pure adapt/combine amortization, no barrier effects).
+//!
+//! A full service-loop session (`serve::run_service`, saturated arrivals)
+//! is also timed so queueing overhead shows up in the tracked numbers.
+//! Pass `--fast` (or `BENCH_FAST=1`) for the CI smoke configuration.
+
+use ddl::bench::Bencher;
+use ddl::config::experiment::{InferenceConfig, ServeConfig};
+use ddl::graph::{metropolis_csr, Graph, Topology};
+use ddl::infer::{DiffusionEngine, DiffusionParams};
+use ddl::learn::{OnlineTrainer, TrainerOptions};
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::ops::prox::DictProx;
+use ddl::rng::Pcg64;
+use std::path::Path;
+
+const N: usize = 100;
+const M: usize = 100;
+
+fn grid_engine() -> DiffusionEngine {
+    let mut rng = Pcg64::new(7);
+    let g = Graph::generate(N, &Topology::Grid, &mut rng);
+    DiffusionEngine::new_csr(metropolis_csr(&g), M, None).unwrap()
+}
+
+/// Deterministic patch stream — the session's own workload definition
+/// (`serve::generate_stream`), saturated arrivals, so the bench measures
+/// exactly what the service serves.
+fn stream(samples: usize, seed: u64) -> Vec<Vec<f32>> {
+    let cfg =
+        ServeConfig { agents: N, dim: M, samples, rate: 0.0, seed, ..ServeConfig::default() };
+    let mut rng = Pcg64::new(seed);
+    ddl::serve::generate_stream(&cfg, &mut rng)
+        .unwrap()
+        .into_iter()
+        .map(|(_, x)| x)
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("BENCH_FAST").map(|v| v != "0").unwrap_or(false);
+    let mut b = if fast { Bencher::quick() } else { Bencher::new() };
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    let iters = if fast { 30 } else { 120 };
+    let samples = if fast { 24 } else { 64 };
+    let task = TaskSpec::SparseCoding { gamma: 0.08, delta: 0.2 };
+    let mu_w = 0.05f32;
+    let xs = stream(samples, 11);
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let mut rng = Pcg64::new(13);
+    let dict0 =
+        DistributedDictionary::random(M, N, N, AtomConstraint::UnitBall, &mut rng).unwrap();
+
+    let mut medians: Vec<(String, f64)> = Vec::new();
+    for &threads in &[1usize, 2] {
+        let params = DiffusionParams::new(0.4, iters).with_threads(threads);
+        for &(label, batch) in &[("seq", 1usize), ("batch8", 8usize)] {
+            let mut trainer = OnlineTrainer::from_engine(
+                grid_engine(),
+                TrainerOptions { infer: params, prox: DictProx::None },
+            );
+            let name = format!("serve {label} t{threads} grid N={N} ({samples} samples)");
+            let r = b.bench_work(&name, samples as f64, || {
+                // Fresh dictionary per pass so every iteration does the
+                // same work (adaptation drifts sparsity otherwise).
+                let mut dict = dict0.clone();
+                for chunk in refs.chunks(batch) {
+                    trainer.step(&mut dict, &task, chunk, mu_w).unwrap();
+                }
+                std::hint::black_box(dict.mat().as_slice()[0]);
+            });
+            medians.push((format!("{label}_t{threads}"), r.median_s()));
+        }
+    }
+    let med = |k: &str| medians.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
+    derived.push((
+        "serve_throughput_speedup_b8_vs_seq_n100_grid".to_string(),
+        med("seq_t2") / med("batch8_t2").max(1e-12),
+    ));
+    derived.push((
+        "serve_throughput_speedup_b8_vs_seq_n100_grid_t1".to_string(),
+        med("seq_t1") / med("batch8_t1").max(1e-12),
+    ));
+
+    // Full service loop (queue + session + adaptation), saturated arrivals.
+    {
+        let base = ServeConfig::default();
+        let cfg = ServeConfig {
+            seed: 21,
+            agents: N,
+            dim: M,
+            topology: "grid".into(),
+            batch: 8,
+            max_wait_us: 2_000,
+            samples,
+            rate: 0.0,
+            mu_w,
+            infer: InferenceConfig {
+                mu: 0.4,
+                iters,
+                gamma: 0.08,
+                delta: 0.2,
+                threads: 2,
+            },
+            ..base
+        };
+        let report = ddl::serve::run_service(&cfg, &mut |_| {}).unwrap();
+        println!(
+            "service loop: {:.1} samples/s, p50 {:.2} ms, p99 {:.2} ms, loss {:.4} -> {:.4}",
+            report.throughput_rps,
+            report.latency_p50_ms,
+            report.latency_p99_ms,
+            report.loss_first_quarter,
+            report.loss_last_quarter
+        );
+        derived.push(("serve_session_throughput_rps_b8_t2".to_string(), report.throughput_rps));
+        derived.push(("serve_session_p99_latency_ms_b8_t2".to_string(), report.latency_p99_ms));
+    }
+
+    println!("\nderived figures:");
+    for (k, v) in &derived {
+        println!("  {k} = {v:.2}");
+    }
+    b.write_csv(Path::new("results/bench_serve.csv")).unwrap();
+    b.write_json(Path::new("BENCH_serve.json"), &derived).unwrap();
+    println!("\nwrote results/bench_serve.csv and BENCH_serve.json");
+}

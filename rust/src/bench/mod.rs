@@ -1,8 +1,10 @@
 //! Micro-benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup + timed iterations with median / MAD / percentile
-//! reporting and a throughput helper. Used by the `rust/benches/*.rs`
-//! targets (declared with `harness = false`).
+//! reporting and a throughput helper, plus the cross-PR
+//! [`regression_gate`] that compares a freshly-measured `BENCH_*.json`
+//! against a committed baseline (`ddl bench-gate`, run by CI). Used by the
+//! `rust/benches/*.rs` targets (declared with `harness = false`).
 
 use crate::math::stats;
 use std::time::Instant;
@@ -219,6 +221,93 @@ impl Bencher {
     }
 }
 
+/// One derived-figure comparison produced by [`regression_gate`].
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+    pub ok: bool,
+}
+
+/// Whether a derived key measures something where *smaller* is better
+/// (latencies and other `_ms`/`_s`-suffixed times). Everything else —
+/// speedups, throughputs — is higher-is-better. Public so the CLI table
+/// can format the two kinds differently.
+pub fn lower_is_better(key: &str) -> bool {
+    key.contains("latency") || key.ends_with("_ms") || key.ends_with("_s")
+}
+
+/// Compare the `derived` figures (speedup ratios — machine-portable, unlike
+/// raw wall times) of a current bench JSON against a committed baseline:
+/// every baseline key must be present in the current file, at
+/// `>= min_frac · baseline` for higher-is-better figures and at
+/// `<= baseline / min_frac` for lower-is-better ones (latency keys; see
+/// [`lower_is_better`]). Returns one row per baseline key, worst offenders
+/// first; a missing key fails its row with `current = 0`.
+pub fn regression_gate(
+    current: &std::path::Path,
+    baseline: &std::path::Path,
+    min_frac: f64,
+) -> crate::Result<Vec<GateRow>> {
+    let cur = load_derived(current)?;
+    let base = load_derived(baseline)?;
+    if base.is_empty() {
+        return Err(crate::DdlError::Config(format!(
+            "bench-gate: baseline {} has no derived figures",
+            baseline.display()
+        )));
+    }
+    let mut rows: Vec<GateRow> = base
+        .iter()
+        .map(|(key, &b)| {
+            let missing = !cur.contains_key(key);
+            let c = cur.get(key).copied().unwrap_or(0.0);
+            let ok = if missing {
+                false
+            } else if lower_is_better(key) {
+                c <= b / min_frac.max(1e-12)
+            } else {
+                c >= min_frac * b
+            };
+            GateRow { key: key.clone(), baseline: b, current: c, ok }
+        })
+        .collect();
+    // Worst offenders first: sort by the goodness ratio in the key's own
+    // direction. `current == 0` only arises from a missing key (real
+    // figures are strictly positive), which must rank worst regardless of
+    // direction.
+    rows.sort_by(|x, y| {
+        let goodness = |r: &GateRow| {
+            if r.current <= 0.0 {
+                f64::NEG_INFINITY
+            } else if lower_is_better(&r.key) {
+                r.baseline / r.current
+            } else {
+                r.current / r.baseline.max(1e-12)
+            }
+        };
+        goodness(x).partial_cmp(&goodness(y)).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Ok(rows)
+}
+
+fn load_derived(
+    path: &std::path::Path,
+) -> crate::Result<std::collections::BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        crate::DdlError::Config(format!("bench-gate: cannot read {}: {e}", path.display()))
+    })?;
+    let doc = crate::config::json::JsonValue::parse(&text)?;
+    let derived = doc.get("derived").and_then(|d| d.as_object()).ok_or_else(|| {
+        crate::DdlError::Config(format!("bench-gate: {} has no 'derived' object", path.display()))
+    })?;
+    Ok(derived
+        .iter()
+        .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +352,70 @@ mod tests {
         let sp = doc.get("derived").unwrap().get("speedup_x").unwrap().as_f64().unwrap();
         assert!((sp - 5.25).abs() < 1e-9);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn regression_gate_flags_regressions_and_missing_keys() {
+        let dir = std::env::temp_dir();
+        let base_p = dir.join("ddl_gate_base.json");
+        let cur_p = dir.join("ddl_gate_cur.json");
+        let mut base = Bencher::quick();
+        base.bench("x", || {});
+        base.write_json(
+            &base_p,
+            &[
+                ("speedup_a".to_string(), 8.0),
+                ("speedup_b".to_string(), 4.0),
+                ("speedup_gone".to_string(), 2.0),
+            ],
+        )
+        .unwrap();
+        let mut cur = Bencher::quick();
+        cur.bench("x", || {});
+        // a holds (7.9 >= 0.5*8), b regressed (1.0 < 0.5*4), gone missing.
+        cur.write_json(
+            &cur_p,
+            &[("speedup_a".to_string(), 7.9), ("speedup_b".to_string(), 1.0)],
+        )
+        .unwrap();
+        let rows = regression_gate(&cur_p, &base_p, 0.5).unwrap();
+        assert_eq!(rows.len(), 3);
+        let row = |k: &str| rows.iter().find(|r| r.key == k).unwrap();
+        assert!(row("speedup_a").ok);
+        assert!(!row("speedup_b").ok);
+        assert!(!row("speedup_gone").ok);
+        assert_eq!(row("speedup_gone").current, 0.0);
+        // Worst ratio sorts first.
+        assert_eq!(rows[0].key, "speedup_gone");
+        // Gate passes when everything holds.
+        let rows = regression_gate(&cur_p, &cur_p, 0.9).unwrap();
+        assert!(rows.iter().all(|r| r.ok));
+        std::fs::remove_file(&base_p).ok();
+        std::fs::remove_file(&cur_p).ok();
+    }
+
+    /// Latency-style keys gate in the opposite direction: an improvement
+    /// (lower) must pass, a blow-up must fail.
+    #[test]
+    fn regression_gate_inverts_latency_keys() {
+        let dir = std::env::temp_dir();
+        let base_p = dir.join("ddl_gate_lat_base.json");
+        let cur_p = dir.join("ddl_gate_lat_cur.json");
+        let mut base = Bencher::quick();
+        base.bench("x", || {});
+        base.write_json(&base_p, &[("p99_latency_ms".to_string(), 40.0)]).unwrap();
+        for (value, expect_ok) in [(12.0, true), (40.0, true), (79.0, true), (81.0, false)] {
+            let mut cur = Bencher::quick();
+            cur.bench("x", || {});
+            cur.write_json(&cur_p, &[("p99_latency_ms".to_string(), value)]).unwrap();
+            let rows = regression_gate(&cur_p, &base_p, 0.5).unwrap();
+            assert_eq!(
+                rows[0].ok, expect_ok,
+                "latency {value} vs baseline 40 at min_frac 0.5"
+            );
+        }
+        std::fs::remove_file(&base_p).ok();
+        std::fs::remove_file(&cur_p).ok();
     }
 
     #[test]

@@ -117,6 +117,87 @@ impl DenoiseConfig {
     }
 }
 
+/// Streaming inference service (`ddl serve`, `serve/` subsystem).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub seed: u64,
+    /// Number of agents `N` (= atoms; one atom per agent, §IV-B).
+    pub agents: usize,
+    /// Data dimension `M` (e.g. 100 for 10×10 patches).
+    pub dim: usize,
+    /// Topology: `ring` | `grid` | `er` | `full`.
+    pub topology: String,
+    /// Neighbors per side for the ring topology.
+    pub ring_k: usize,
+    /// Edge probability for the `er` topology.
+    pub edge_prob: f64,
+    /// Micro-batch size cap `B` handed to the batched engine.
+    pub batch: usize,
+    /// Longest a queued request may wait (µs) before a partial batch is
+    /// released.
+    pub max_wait_us: u64,
+    /// Stream length (requests served per session).
+    pub samples: usize,
+    /// Arrival rate in requests/second; `0` = saturated (peak-throughput
+    /// mode: every request is available at t = 0).
+    pub rate: f64,
+    /// Dictionary step size μ_w for the online update; `0` freezes the
+    /// dictionary (inference-only serving).
+    pub mu_w: f32,
+    /// Diffusion inference settings for each served batch.
+    pub infer: InferenceConfig,
+    /// Informed agents: `None` = all informed, `Some(k)` = only first k.
+    pub informed: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            seed: 0x5E12_4E,
+            agents: 100,
+            dim: 100,
+            topology: "grid".into(),
+            ring_k: 2,
+            edge_prob: 0.1,
+            batch: 8,
+            max_wait_us: 2_000,
+            samples: 512,
+            rate: 0.0,
+            mu_w: 0.05,
+            infer: InferenceConfig { mu: 0.4, iters: 120, gamma: 0.08, delta: 0.2, threads: 1 },
+            informed: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from TOML (section `[serve]`), falling back to defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let defaults = Self::default();
+        let mut c = defaults;
+        c.seed = doc.usize_or("serve", "seed", c.seed as usize) as u64;
+        c.agents = doc.usize_or("serve", "agents", c.agents);
+        c.dim = doc.usize_or("serve", "dim", c.dim);
+        c.topology = doc.str_or("serve", "topology", &c.topology).to_string();
+        c.ring_k = doc.usize_or("serve", "ring_k", c.ring_k);
+        c.edge_prob = doc.f32_or("serve", "edge_prob", c.edge_prob as f32) as f64;
+        c.batch = doc.usize_or("serve", "batch", c.batch).max(1);
+        c.max_wait_us = doc.usize_or("serve", "max_wait_us", c.max_wait_us as usize) as u64;
+        c.samples = doc.usize_or("serve", "samples", c.samples);
+        c.rate = doc.f32_or("serve", "rate", c.rate as f32) as f64;
+        c.mu_w = doc.f32_or("serve", "mu_w", c.mu_w);
+        c.infer.mu = doc.f32_or("serve", "mu", c.infer.mu);
+        c.infer.iters = doc.usize_or("serve", "iters", c.infer.iters);
+        c.infer.gamma = doc.f32_or("serve", "gamma", c.infer.gamma);
+        c.infer.delta = doc.f32_or("serve", "delta", c.infer.delta);
+        c.infer.threads = doc.usize_or("serve", "threads", c.infer.threads);
+        if let Some(v) = doc.get("serve", "informed") {
+            c.informed = v.as_usize();
+        }
+        c
+    }
+}
+
 /// Residual loss selection for the novelty experiments (§IV-C).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ResidualKind {
@@ -275,6 +356,54 @@ mod tests {
         assert_eq!(n.vocab, 500);
         assert_eq!(n.topics, 30);
         assert_eq!(n.threads, 2);
+    }
+
+    #[test]
+    fn serve_defaults_sane() {
+        let c = ServeConfig::default();
+        assert_eq!(c.agents, 100);
+        assert_eq!(c.topology, "grid");
+        assert_eq!(c.batch, 8);
+        assert_eq!(c.rate, 0.0);
+        assert!(c.informed.is_none());
+        assert_eq!(c.infer.threads, 1);
+    }
+
+    /// Round trip for every serving knob exposed in the `[serve]` TOML
+    /// block (the `--batch` / `--max-wait-us` CLI flags override the same
+    /// fields).
+    #[test]
+    fn serve_toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[serve]\nseed = 99\nagents = 64\ndim = 36\ntopology = \"ring\"\nring_k = 3\n\
+             edge_prob = 0.25\nbatch = 16\nmax_wait_us = 750\nsamples = 128\nrate = 2000.0\n\
+             mu_w = 0.01\nmu = 0.5\niters = 80\ngamma = 0.2\ndelta = 0.3\nthreads = 2\n\
+             informed = 4\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc);
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.agents, 64);
+        assert_eq!(c.dim, 36);
+        assert_eq!(c.topology, "ring");
+        assert_eq!(c.ring_k, 3);
+        assert!((c.edge_prob - 0.25).abs() < 1e-6);
+        assert_eq!(c.batch, 16);
+        assert_eq!(c.max_wait_us, 750);
+        assert_eq!(c.samples, 128);
+        assert!((c.rate - 2000.0).abs() < 1e-3);
+        assert!((c.mu_w - 0.01).abs() < 1e-7);
+        assert!((c.infer.mu - 0.5).abs() < 1e-7);
+        assert_eq!(c.infer.iters, 80);
+        assert!((c.infer.gamma - 0.2).abs() < 1e-7);
+        assert!((c.infer.delta - 0.3).abs() < 1e-7);
+        assert_eq!(c.infer.threads, 2);
+        assert_eq!(c.informed, Some(4));
+        // Absent section leaves defaults untouched.
+        let empty = TomlDoc::parse("").unwrap();
+        let d = ServeConfig::from_toml(&empty);
+        assert_eq!(d.batch, ServeConfig::default().batch);
+        assert_eq!(d.topology, ServeConfig::default().topology);
     }
 
     #[test]

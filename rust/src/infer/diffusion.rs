@@ -27,9 +27,23 @@
 //! row is produced by the same arithmetic regardless of thread count — the
 //! `ν` trajectory is bit-identical for `threads = 1` and `threads = T`.
 //!
+//! ## Batched inference
+//!
+//! [`DiffusionEngine::run_batch`] stacks `B` samples as `V ∈ R^{N×(B·M)}`:
+//! row `k` holds agent `k`'s `B` dual iterates back to back. Samples never
+//! interact — adapt is per-(agent, sample) and combine multiplies the same
+//! `Aᵀ` against the wider `Ψ` — so one CSR traversal / gemm / row-mean and
+//! one worker-pool sweep amortize across the minibatch while each sample's
+//! trajectory stays **bit-identical** to a sequential [`DiffusionEngine::run`]
+//! per sample (each output element accumulates in the same order; see
+//! `tests/combine_parity.rs`). The batched adapt additionally amortizes the
+//! strided dictionary-column walk across samples
+//! ([`DistributedDictionary::block_correlations_batched`]).
+//!
 //! Buffers (including per-worker threshold scratch) are sized once and
-//! reused; the per-iteration hot loop performs no heap allocation (see
-//! EXPERIMENTS.md §Perf).
+//! reused; the per-iteration hot loop performs no heap allocation while the
+//! batch size is stable (changing `B` re-sizes `V`/`Ψ` once — a cold start;
+//! see EXPERIMENTS.md §Perf).
 
 use crate::error::{DdlError, Result};
 use crate::math::{blas, CsrMat, Mat};
@@ -103,13 +117,15 @@ impl Combine {
 
 /// Reusable diffusion inference engine for a fixed network size.
 pub struct DiffusionEngine {
-    /// Stacked dual iterates `V` (`N × M`), row `k` = agent `k`'s ν.
+    /// Stacked dual iterates `V` (`N × (B·M)`): row `k` holds agent `k`'s
+    /// `B` per-sample iterates back to back (`B = 1` for [`Self::run`]).
     v: Mat,
-    /// Adapt outputs `Ψ` (`N × M`).
+    /// Adapt outputs `Ψ` (`N × (B·M)`).
     psi: Mat,
     /// Combine dispatch (uniform / CSR spmm / dense gemm).
     combine: Combine,
-    /// Scratch: per-atom thresholded correlations (`K`), serial path.
+    /// Scratch: per-atom per-sample thresholded correlations (`K·B`,
+    /// layout `[q·B + s]`), serial path.
     thr: Vec<f32>,
     /// Per-worker threshold scratch for the threaded path; sized once and
     /// reused across `run` calls.
@@ -118,6 +134,8 @@ pub struct DiffusionEngine {
     theta: Vec<f32>,
     n: usize,
     m: usize,
+    /// Current batch size `B` (`V`/`Ψ` hold `batch · m` columns).
+    batch: usize,
 }
 
 impl DiffusionEngine {
@@ -139,6 +157,7 @@ impl DiffusionEngine {
             theta: build_theta(n, informed)?,
             n,
             m,
+            batch: 1,
         })
     }
 
@@ -159,6 +178,7 @@ impl DiffusionEngine {
             theta: build_theta(n, informed)?,
             n,
             m,
+            batch: 1,
         })
     }
 
@@ -193,28 +213,47 @@ impl DiffusionEngine {
     /// Pre-size the threshold scratch for a dictionary with `atoms` total
     /// atoms, so even the first `run` call allocates nothing. `run` calls
     /// this itself (a no-op once sized); streaming callers may invoke it
-    /// eagerly at setup time.
+    /// eagerly at setup time. Sizing is for the engine's *current* batch
+    /// size — call [`Self::reserve_batch`] first when pre-sizing for
+    /// batched runs.
     pub fn reserve_atoms(&mut self, atoms: usize) {
-        if self.thr.len() != atoms {
-            self.thr.resize(atoms, 0.0);
+        let want = atoms * self.batch;
+        if self.thr.len() != want {
+            self.thr.resize(want, 0.0);
+        }
+    }
+
+    /// Re-shape `V`/`Ψ` for a batch of `b` samples (`b·M` columns). A no-op
+    /// when the batch size is unchanged; otherwise the iterates are
+    /// re-allocated zeroed (a cold start — per-sample state cannot survive
+    /// a batch-shape change). Streaming callers that alternate between a
+    /// full and a partial final batch pay one re-allocation per change.
+    pub fn reserve_batch(&mut self, b: usize) {
+        let b = b.max(1);
+        if self.batch != b {
+            self.v = Mat::zeros(self.n, b * self.m);
+            self.psi = Mat::zeros(self.n, b * self.m);
+            self.batch = b;
         }
     }
 
     fn ensure_scratch(&mut self, threads: usize, atoms: usize) {
         self.reserve_atoms(atoms);
         if threads > 1 {
+            let want = atoms * self.batch;
             if self.worker_thr.len() < threads {
                 self.worker_thr.resize_with(threads, Vec::new);
             }
             for t in &mut self.worker_thr[..threads] {
-                if t.len() != atoms {
-                    t.resize(atoms, 0.0);
+                if t.len() != want {
+                    t.resize(want, 0.0);
                 }
             }
         }
     }
 
-    /// Reset all dual iterates to zero (cold start for a new sample).
+    /// Reset all dual iterates to zero (cold start for a new sample or
+    /// minibatch).
     pub fn reset(&mut self) {
         self.v.as_mut_slice().fill(0.0);
     }
@@ -226,13 +265,23 @@ impl DiffusionEngine {
     /// O(N/(μ·c_f)) magnitude build-up that dominates cold-start Huber
     /// runs. Uninformed agents stay at zero and catch up via combine.
     pub fn reset_warm(&mut self, x: &[f32], scale: f32) {
-        debug_assert_eq!(x.len(), self.m);
+        self.reset_warm_batch(&[x], scale);
+    }
+
+    /// Batched [`Self::reset_warm`]: sample `s` of the minibatch starts at
+    /// `scale · xs[s]` on informed agents, zero elsewhere.
+    pub fn reset_warm_batch(&mut self, xs: &[&[f32]], scale: f32) {
+        self.reserve_batch(xs.len());
+        let m = self.m;
         for k in 0..self.n {
             let informed = self.theta[k] > 0.0;
             let row = self.v.row_mut(k);
             if informed {
-                for (r, &xi) in row.iter_mut().zip(x) {
-                    *r = scale * xi;
+                for (s, &x) in xs.iter().enumerate() {
+                    debug_assert_eq!(x.len(), m);
+                    for (r, &xi) in row[s * m..(s + 1) * m].iter_mut().zip(x) {
+                        *r = scale * xi;
+                    }
                 }
             } else {
                 row.fill(0.0);
@@ -251,12 +300,37 @@ impl DiffusionEngine {
         x: &[f32],
         params: DiffusionParams,
     ) -> Result<()> {
-        if x.len() != self.m {
-            return Err(DdlError::Shape(format!(
-                "sample length {} != engine dimension {}",
-                x.len(),
-                self.m
-            )));
+        self.run_batch(dict, task, &[x], params)
+    }
+
+    /// Run `params.iters` diffusion iterations for a minibatch of samples,
+    /// stacked as `V ∈ R^{N×(B·M)}` so one combine and one worker-pool
+    /// sweep serve all `B` samples. Sample `s`'s trajectory is bit-identical
+    /// to a sequential [`Self::run`] on `xs[s]` at any thread count.
+    ///
+    /// Re-shapes the iterates when `B` differs from the previous call (a
+    /// cold start); otherwise the previous batch state is kept, exactly as
+    /// [`Self::run`] keeps `V` — call [`Self::reset`] for a cold start.
+    /// Read per-sample results through [`Self::nu_sample`],
+    /// [`Self::recover_y_sample`], or [`Self::consensus_nu_sample_into`].
+    pub fn run_batch(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        xs: &[&[f32]],
+        params: DiffusionParams,
+    ) -> Result<()> {
+        if xs.is_empty() {
+            return Err(DdlError::Shape("run_batch: empty minibatch".into()));
+        }
+        for x in xs {
+            if x.len() != self.m {
+                return Err(DdlError::Shape(format!(
+                    "sample length {} != engine dimension {}",
+                    x.len(),
+                    self.m
+                )));
+            }
         }
         if dict.agents() != self.n {
             return Err(DdlError::Shape(format!(
@@ -268,12 +342,13 @@ impl DiffusionEngine {
         if dict.m() != self.m {
             return Err(DdlError::Shape("dictionary row dimension mismatch".into()));
         }
+        self.reserve_batch(xs.len());
         let threads = params.threads.max(1).min(self.n.max(1));
         self.ensure_scratch(threads, dict.k());
         if threads == 1 {
-            self.run_serial(dict, task, x, params)
+            self.run_serial(dict, task, xs, params)
         } else {
-            self.run_parallel(dict, task, x, params, threads)
+            self.run_parallel(dict, task, xs, params, threads)
         }
         Ok(())
     }
@@ -282,21 +357,22 @@ impl DiffusionEngine {
         &mut self,
         dict: &DistributedDictionary,
         task: &TaskSpec,
-        x: &[f32],
+        xs: &[&[f32]],
         params: DiffusionParams,
     ) {
         let cf_over_n = task.conj_grad_scale() / self.n as f32;
         let inv_delta = 1.0 / task.delta();
         let mu = params.mu;
         let clip = task.dual_clip();
+        let bm = self.batch * self.m;
 
         for _ in 0..params.iters {
-            // --- adapt (Eq. 31a): ψ_k = ν_k − μ ∇J_k(ν_k) ---
+            // --- adapt (Eq. 31a): ψ_k = ν_k − μ ∇J_k(ν_k), per sample ---
             for k in 0..self.n {
-                adapt_row(
+                adapt_row_batch(
                     dict,
                     task,
-                    x,
+                    xs,
                     self.theta[k],
                     k,
                     self.v.row(k),
@@ -307,17 +383,17 @@ impl DiffusionEngine {
                     inv_delta,
                 );
             }
-            // --- combine (Eq. 31b): V ← Aᵀ Ψ ---
+            // --- combine (Eq. 31b): V ← Aᵀ Ψ, all samples at once ---
             match &self.combine {
                 Combine::Uniform => {
-                    uniform_combine(self.v.as_mut_slice(), self.psi.as_slice(), self.n, self.m)
+                    uniform_combine(self.v.as_mut_slice(), self.psi.as_slice(), self.n, bm)
                 }
                 Combine::Sparse(at) => {
-                    at.spmm_rows(0..self.n, self.psi.as_slice(), self.m, self.v.as_mut_slice())
+                    at.spmm_rows(0..self.n, self.psi.as_slice(), bm, self.v.as_mut_slice())
                 }
                 Combine::Dense(at) => blas::gemm(
                     self.n,
-                    self.m,
+                    bm,
                     self.n,
                     1.0,
                     at.as_slice(),
@@ -337,17 +413,19 @@ impl DiffusionEngine {
     /// iteration), two barriers per iteration. Worker `w` owns the agent
     /// rows `chunk_range(n, threads, w)` for both adapt and combine, so
     /// every `V`/`Ψ` row is produced by exactly one worker with serial-path
-    /// arithmetic — trajectories are bit-identical to `threads = 1`.
+    /// arithmetic — trajectories are bit-identical to `threads = 1`. The
+    /// batch widens each row to `B·M` columns, amortizing both barriers and
+    /// the thread spawn across the whole minibatch.
     fn run_parallel(
         &mut self,
         dict: &DistributedDictionary,
         task: &TaskSpec,
-        x: &[f32],
+        xs: &[&[f32]],
         params: DiffusionParams,
         threads: usize,
     ) {
         let n = self.n;
-        let m = self.m;
+        let bm = self.batch * self.m;
         let mu = params.mu;
         let iters = params.iters;
         let cf_over_n = task.conj_grad_scale() / n as f32;
@@ -371,23 +449,26 @@ impl DiffusionEngine {
                     // SAFETY: row k belongs to this worker's chunk; V rows
                     // were last written by the same worker (combine phase),
                     // ordered by the barrier below.
-                    let nu = unsafe { v_sh.rows(k, 1, m) };
-                    let psi_k = unsafe { psi_sh.rows_mut(k, 1, m) };
-                    adapt_row(dict, task, x, theta[k], k, nu, psi_k, thr, mu, cf_over_n, inv_delta);
+                    let nu = unsafe { v_sh.rows(k, 1, bm) };
+                    let psi_k = unsafe { psi_sh.rows_mut(k, 1, bm) };
+                    adapt_row_batch(
+                        dict, task, xs, theta[k], k, nu, psi_k, thr, mu, cf_over_n, inv_delta,
+                    );
                 }
                 // All Ψ rows written before anyone reads them.
                 barrier.wait();
                 // Combine phase: read all of Ψ, write own V rows.
                 match combine {
                     Combine::Uniform => {
-                        // O(N·M) total — not worth splitting; worker 0 does
-                        // it serially (bit-identical to the serial path).
+                        // O(N·B·M) total — not worth splitting; worker 0
+                        // does it serially (bit-identical to the serial
+                        // path).
                         if w == 0 {
                             // SAFETY: only worker 0 touches V this phase;
                             // Ψ is read-only for everyone.
-                            let v_all = unsafe { v_sh.rows_mut(0, n, m) };
-                            let psi_all = unsafe { psi_sh.rows(0, n, m) };
-                            uniform_combine(v_all, psi_all, n, m);
+                            let v_all = unsafe { v_sh.rows_mut(0, n, bm) };
+                            let psi_all = unsafe { psi_sh.rows(0, n, bm) };
+                            uniform_combine(v_all, psi_all, n, bm);
                             if let Some(bound) = clip {
                                 clip_linf(v_all, bound);
                             }
@@ -397,9 +478,9 @@ impl DiffusionEngine {
                         if !rows.is_empty() {
                             // SAFETY: V row windows are disjoint per worker;
                             // Ψ is read-only until the next barrier.
-                            let psi_all = unsafe { psi_sh.rows(0, n, m) };
-                            let v_rows = unsafe { v_sh.rows_mut(rows.start, rows.len(), m) };
-                            at.spmm_rows(rows.clone(), psi_all, m, v_rows);
+                            let psi_all = unsafe { psi_sh.rows(0, n, bm) };
+                            let v_rows = unsafe { v_sh.rows_mut(rows.start, rows.len(), bm) };
+                            at.spmm_rows(rows.clone(), psi_all, bm, v_rows);
                             if let Some(bound) = clip {
                                 clip_linf(v_rows, bound);
                             }
@@ -408,10 +489,10 @@ impl DiffusionEngine {
                     Combine::Dense(at) => {
                         if !rows.is_empty() {
                             // SAFETY: as in the sparse arm.
-                            let psi_all = unsafe { psi_sh.rows(0, n, m) };
-                            let v_rows = unsafe { v_sh.rows_mut(rows.start, rows.len(), m) };
+                            let psi_all = unsafe { psi_sh.rows(0, n, bm) };
+                            let v_rows = unsafe { v_sh.rows_mut(rows.start, rows.len(), bm) };
                             let a_rows = &at.as_slice()[rows.start * n..rows.end * n];
-                            blas::gemm(rows.len(), m, n, 1.0, a_rows, psi_all, 0.0, v_rows);
+                            blas::gemm(rows.len(), bm, n, 1.0, a_rows, psi_all, 0.0, v_rows);
                             if let Some(bound) = clip {
                                 clip_linf(v_rows, bound);
                             }
@@ -424,9 +505,21 @@ impl DiffusionEngine {
         });
     }
 
-    /// Agent `k`'s current dual estimate `ν_{k,i}`.
+    /// Agent `k`'s current dual estimate `ν_{k,i}` (first sample of a
+    /// batched run).
     pub fn nu(&self, k: usize) -> &[f32] {
-        self.v.row(k)
+        &self.v.row(k)[..self.m]
+    }
+
+    /// Agent `k`'s dual estimate for sample `s` of the current minibatch.
+    pub fn nu_sample(&self, k: usize, s: usize) -> &[f32] {
+        debug_assert!(s < self.batch);
+        &self.v.row(k)[s * self.m..(s + 1) * self.m]
+    }
+
+    /// Current batch size `B`.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Network-average dual estimate (diagnostics; a real deployment reads
@@ -441,20 +534,38 @@ impl DiffusionEngine {
     /// network-average dual estimate into a caller-provided buffer of
     /// length `M` (streaming loops reuse one buffer across samples).
     pub fn consensus_nu_into(&self, out: &mut [f32]) {
+        self.consensus_nu_sample_into(0, out);
+    }
+
+    /// Per-sample [`Self::consensus_nu_into`] for batched runs.
+    pub fn consensus_nu_sample_into(&self, s: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.m);
         out.fill(0.0);
         for k in 0..self.n {
-            crate::math::vector::axpy(1.0, self.v.row(k), out);
+            crate::math::vector::axpy(1.0, self.nu_sample(k, s), out);
         }
         crate::math::vector::scale(1.0 / self.n as f32, out);
     }
 
     /// Maximum pairwise disagreement `max_k ‖ν_k − ν̄‖` — a consensus
-    /// diagnostic.
+    /// diagnostic (first sample of a batched run).
     pub fn disagreement(&self) -> f32 {
-        let mean = self.consensus_nu();
+        self.disagreement_sample(0)
+    }
+
+    /// Per-sample [`Self::disagreement`] for batched runs.
+    pub fn disagreement_sample(&self, s: usize) -> f32 {
+        let mut mean = vec![0.0f32; self.m];
+        self.disagreement_sample_into(s, &mut mean)
+    }
+
+    /// Allocation-free [`Self::disagreement_sample`]: `mean` is a
+    /// caller-provided `M`-length scratch buffer (overwritten with the
+    /// consensus estimate).
+    pub fn disagreement_sample_into(&self, s: usize, mean: &mut [f32]) -> f32 {
+        self.consensus_nu_sample_into(s, mean);
         (0..self.n)
-            .map(|k| crate::math::vector::dist_sq(self.v.row(k), &mean).sqrt())
+            .map(|k| crate::math::vector::dist_sq(self.nu_sample(k, s), mean).sqrt())
             .fold(0.0f32, f32::max)
     }
 
@@ -462,17 +573,42 @@ impl DiffusionEngine {
     /// each agent's own atoms, using each agent's **local** dual iterate —
     /// no extra communication, exactly as in Algs. 2–4.
     pub fn recover_y(&self, dict: &DistributedDictionary, task: &TaskSpec) -> Vec<f32> {
+        self.recover_y_sample(dict, task, 0)
+    }
+
+    /// Per-sample [`Self::recover_y`] for batched runs.
+    pub fn recover_y_sample(
+        &self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        s: usize,
+    ) -> Vec<f32> {
         let mut y = vec![0.0f32; dict.k()];
+        let mut scratch = vec![0.0f32; dict.k()];
+        self.recover_y_sample_into(dict, task, s, &mut y, &mut scratch);
+        y
+    }
+
+    /// Allocation-free per-sample primal recovery: `y` and `scratch` are
+    /// caller-provided `K`-length buffers (streaming loops reuse them).
+    pub fn recover_y_sample_into(
+        &self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        s: usize,
+        y: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        debug_assert_eq!(y.len(), dict.k());
+        debug_assert_eq!(scratch.len(), dict.k());
         let inv_delta = 1.0 / task.delta();
-        let mut s = vec![0.0f32; dict.k()];
         for k in 0..self.n {
-            dict.block_correlations(k, self.v.row(k), &mut s);
+            dict.block_correlations(k, self.nu_sample(k, s), scratch);
             let (start, len) = dict.block(k);
             for q in start..start + len {
-                y[q] = task.threshold(s[q]) * inv_delta;
+                y[q] = task.threshold(scratch[q]) * inv_delta;
             }
         }
-        y
     }
 
     /// Whether the fully-connected fast path is active.
@@ -518,15 +654,19 @@ pub(crate) fn build_theta(n: usize, informed: Option<&[usize]>) -> Result<Vec<f3
     Ok(theta)
 }
 
-/// One agent's adapt step (Eq. 31a), shared verbatim by the serial and
-/// threaded paths so their per-row arithmetic is identical. `thr` is the
-/// `K`-length threshold scratch; only agent `k`'s block of it is read back.
+/// One agent's adapt step (Eq. 31a) over the whole minibatch, shared
+/// verbatim by the serial and threaded paths so their per-row arithmetic
+/// is identical. `nu`/`psi` are the agent's `B·M` row windows; `thr` is
+/// the `K·B` threshold scratch (layout `[q·B + s]`), of which only agent
+/// `k`'s block is read back. Per-sample arithmetic runs in the exact order
+/// of the single-sample step, so each sample's ψ is bit-identical to a
+/// sequential run.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn adapt_row(
+fn adapt_row_batch(
     dict: &DistributedDictionary,
     task: &TaskSpec,
-    x: &[f32],
+    xs: &[&[f32]],
     theta_k: f32,
     k: usize,
     nu: &[f32],
@@ -536,18 +676,27 @@ fn adapt_row(
     cf_over_n: f32,
     inv_delta: f32,
 ) {
-    // s = W_kᵀ ν_k, thresholded and pre-scaled by −μ/δ.
-    dict.block_correlations(k, nu, thr);
+    let b = xs.len();
+    let m = dict.m();
+    // s_{q,s} = w_qᵀ ν_{k,s}, thresholded and pre-scaled by −μ/δ. The
+    // batched correlation walks each strided W column once for all samples.
+    dict.block_correlations_batched(k, nu, b, thr);
     let (start, len) = dict.block(k);
     for q in start..start + len {
-        thr[q] = task.threshold(thr[q]) * (-mu * inv_delta);
+        for s in 0..b {
+            thr[q * b + s] = task.threshold(thr[q * b + s]) * (-mu * inv_delta);
+        }
     }
-    // ψ = ν − μ(c_f/N · ν − θ_k x)
-    for (i, p) in psi.iter_mut().enumerate() {
-        *p = nu[i] - mu * (cf_over_n * nu[i] - theta_k * x[i]);
+    // ψ_s = ν_s − μ(c_f/N · ν_s − θ_k x_s), per sample segment.
+    for (s, &x) in xs.iter().enumerate() {
+        let nu_s = &nu[s * m..(s + 1) * m];
+        let psi_s = &mut psi[s * m..(s + 1) * m];
+        for (i, p) in psi_s.iter_mut().enumerate() {
+            *p = nu_s[i] - mu * (cf_over_n * nu_s[i] - theta_k * x[i]);
+        }
     }
-    // ψ -= (μ/δ) Σ_q thr(s_q) w_q  — only agent k's atoms.
-    dict.block_accumulate(k, thr, psi);
+    // ψ_s -= (μ/δ) Σ_q thr(s_{q,s}) w_q  — only agent k's atoms.
+    dict.block_accumulate_batched(k, thr, b, psi);
 }
 
 /// Fully-connected combine: every row of `AᵀΨ` equals the column mean of
@@ -861,6 +1010,122 @@ mod tests {
         let mut buf = vec![9.9f32; 10];
         eng.consensus_nu_into(&mut buf);
         assert_eq!(alloc, buf);
+    }
+
+    /// Batched runs must reproduce each sample's sequential trajectory
+    /// bit-for-bit on every combine path.
+    #[test]
+    fn batched_run_matches_sequential_bitwise() {
+        let (n, m, b) = (24, 10, 3);
+        let mut rng = Pcg64::new(0xBA7C);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(m)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, 47);
+
+        for dense in [false, true] {
+            let mut batched = DiffusionEngine::new(&a, m, None).unwrap();
+            if dense {
+                batched.set_combination_dense(&a).unwrap();
+            }
+            batched.run_batch(&dict, &task, &refs, params).unwrap();
+            assert_eq!(batched.batch(), b);
+            for (s, x) in refs.iter().enumerate() {
+                let mut seq = DiffusionEngine::new(&a, m, None).unwrap();
+                if dense {
+                    seq.set_combination_dense(&a).unwrap();
+                }
+                seq.run(&dict, &task, x, params).unwrap();
+                for k in 0..n {
+                    assert_eq!(
+                        batched.nu_sample(k, s),
+                        seq.nu(k),
+                        "dense={dense}, sample {s}, agent {k}"
+                    );
+                }
+                assert_eq!(
+                    batched.recover_y_sample(&dict, &task, s),
+                    seq.recover_y(&dict, &task)
+                );
+            }
+        }
+
+        // Uniform fast path too (fully-connected comparator).
+        let u = uniform_weights(n);
+        let mut batched = DiffusionEngine::new(&u, m, None).unwrap();
+        assert_eq!(batched.combine_path(), "uniform");
+        batched.run_batch(&dict, &task, &refs, params).unwrap();
+        for (s, x) in refs.iter().enumerate() {
+            let mut seq = DiffusionEngine::new(&u, m, None).unwrap();
+            seq.run(&dict, &task, x, params).unwrap();
+            for k in 0..n {
+                assert_eq!(batched.nu_sample(k, s), seq.nu(k), "uniform, sample {s}, agent {k}");
+            }
+        }
+    }
+
+    /// Batched Huber runs keep every per-sample iterate inside the box.
+    #[test]
+    fn batched_huber_clipped_per_sample() {
+        let (n, m, b) = (8, 6, 4);
+        let mut rng = Pcg64::new(0xBA7D);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let xs: Vec<Vec<f32>> = (0..b)
+            .map(|_| {
+                let mut x = rng.normal_vec(m);
+                crate::math::vector::scale(6.0, &mut x);
+                x
+            })
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
+        let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+        eng.run_batch(&dict, &task, &refs, DiffusionParams::new(0.3, 150)).unwrap();
+        for k in 0..n {
+            for s in 0..b {
+                assert!(crate::math::vector::norm_inf(eng.nu_sample(k, s)) <= 1.0 + 1e-6);
+            }
+        }
+    }
+
+    /// Changing batch size re-shapes the iterates; interleaving batched and
+    /// single-sample runs keeps single-sample semantics intact.
+    #[test]
+    fn batch_reshape_roundtrip() {
+        let (dict, a, x) = setup(6, 10, 44);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, 30);
+        let mut reference = DiffusionEngine::new(&a, 10, None).unwrap();
+        reference.run(&dict, &task, &x, params).unwrap();
+
+        let mut eng = DiffusionEngine::new(&a, 10, None).unwrap();
+        let x2: Vec<f32> = x.iter().map(|v| v * 0.5).collect();
+        eng.run_batch(&dict, &task, &[&x, &x2, &x], params).unwrap();
+        // Back to a single sample: fresh zero state, same result as a
+        // dedicated engine.
+        eng.run(&dict, &task, &x, params).unwrap();
+        assert_eq!(eng.batch(), 1);
+        for k in 0..6 {
+            assert_eq!(eng.nu(k), reference.nu(k));
+        }
+    }
+
+    #[test]
+    fn empty_batch_rejected() {
+        let (dict, a, _) = setup(5, 8, 45);
+        let mut eng = DiffusionEngine::new(&a, 8, None).unwrap();
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        assert!(eng
+            .run_batch(&dict, &task, &[], DiffusionParams::new(0.1, 1))
+            .is_err());
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Online trainer: Alg. 1 of the paper.
 //!
-//! For each minibatch, run the distributed dual inference per sample,
-//! recover each agent's coefficients from its **own** dual iterate, and
-//! apply the local dictionary update with minibatch-averaged gradients
-//! (paper footnote 4). The trainer is generic over the task family.
+//! For each minibatch, run the distributed dual inference — **batched**:
+//! one [`DiffusionEngine::run_batch`] call stacks the minibatch as
+//! `V ∈ R^{N×(B·M)}` so a single combine sweep and worker-pool region
+//! serve every sample (per-sample trajectories are bit-identical to
+//! sequential runs; samples are cold-started together, exactly as the
+//! sequential loop cold-started each one). Then recover each agent's
+//! coefficients from its **own** dual iterate, and apply the local
+//! dictionary update with minibatch-averaged gradients (paper footnote 4).
+//! The trainer is generic over the task family.
 
 use crate::error::Result;
 use crate::infer::{DiffusionEngine, DiffusionParams};
-use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
 use crate::ops::prox::DictProx;
 
@@ -35,21 +39,33 @@ pub struct TrainStats {
 /// Online model-distributed dictionary trainer.
 pub struct OnlineTrainer {
     engine: DiffusionEngine,
-    /// Per-sample storage of the stacked dual iterates for the minibatch
-    /// (`(V, y)` pairs; agent `k` reads row `k` of `V`).
-    batch: Vec<(Mat, Vec<f32>)>,
+    /// Recovered coefficients for the current minibatch, flat `B·K` (the
+    /// dual iterates stay in the engine's stacked `V` — no per-sample
+    /// copies). Reused across steps, so the streaming hot loop performs no
+    /// per-sample heap allocation beyond the stats matvec.
+    ys: Vec<f32>,
+    /// `K`-length correlation scratch for primal recovery.
+    corr: Vec<f32>,
+    /// `M`-length consensus scratch for the disagreement stat.
+    mean: Vec<f32>,
     opts: TrainerOptions,
 }
 
 impl OnlineTrainer {
     /// Build a trainer over combination matrix `a` for dimension `m`.
     pub fn new(
-        a: &Mat,
+        a: &crate::math::Mat,
         m: usize,
         informed: Option<&[usize]>,
         opts: TrainerOptions,
     ) -> Result<Self> {
-        Ok(OnlineTrainer { engine: DiffusionEngine::new(a, m, informed)?, batch: Vec::new(), opts })
+        Ok(Self::from_engine(DiffusionEngine::new(a, m, informed)?, opts))
+    }
+
+    /// Build a trainer around an already-configured engine (e.g. one
+    /// constructed from a CSR topology via [`DiffusionEngine::new_csr`]).
+    pub fn from_engine(engine: DiffusionEngine, opts: TrainerOptions) -> Self {
+        OnlineTrainer { engine, ys: Vec::new(), corr: Vec::new(), mean: Vec::new(), opts }
     }
 
     /// Access the inference engine (e.g. for evaluation passes).
@@ -62,8 +78,10 @@ impl OnlineTrainer {
         self.opts.infer = p;
     }
 
-    /// Process one minibatch: inference per sample, then the Eq. 51 update
-    /// with gradients averaged over the batch; returns statistics.
+    /// Process one minibatch: one batched inference over all samples, then
+    /// the Eq. 51 update with gradients averaged over the batch; returns
+    /// statistics. Numerically identical to the historical per-sample loop
+    /// (each sample cold-starts and never interacts with its batch mates).
     pub fn step(
         &mut self,
         dict: &mut DistributedDictionary,
@@ -72,40 +90,49 @@ impl OnlineTrainer {
         mu_w: f32,
     ) -> Result<TrainStats> {
         let mut stats = TrainStats::default();
-        self.batch.clear();
-        // Size the engine scratch once so the per-sample loop below never
-        // allocates inside `run` (EXPERIMENTS.md §Perf).
+        if samples.is_empty() {
+            return Ok(stats);
+        }
+        // Shape the engine for this minibatch, then size the scratch so
+        // `run_batch` never allocates inside the loop (EXPERIMENTS.md
+        // §Perf).
+        self.engine.reserve_batch(samples.len());
         self.engine.reserve_atoms(dict.k());
-        for &x in samples {
-            self.engine.reset();
-            self.engine.run(dict, task, x, self.opts.infer)?;
-            let y = self.engine.recover_y(dict, task);
+        self.engine.reset();
+        self.engine.run_batch(dict, task, samples, self.opts.infer)?;
+
+        let b = samples.len();
+        let kk = dict.k();
+        // Reused flat buffers: `ys` holds sample s's coefficients at
+        // `[s·K..(s+1)·K]`; `corr`/`mean` are recovery/stats scratch.
+        self.ys.resize(b * kk, 0.0);
+        self.corr.resize(kk, 0.0);
+        self.mean.resize(dict.m(), 0.0);
+        for (s, &x) in samples.iter().enumerate() {
+            let y = &mut self.ys[s * kk..(s + 1) * kk];
+            self.engine.recover_y_sample_into(dict, task, s, y, &mut self.corr);
             // Stats on the consensus estimate.
-            let wy = dict.mat().matvec(&y)?;
+            let wy = dict.mat().matvec(y)?;
             let resid = crate::math::vector::sub(x, &wy);
             stats.mean_loss += task.f_loss(&resid) as f64;
             stats.mean_sparsity +=
                 y.iter().filter(|v| v.abs() > 1e-12).count() as f64 / y.len() as f64;
-            stats.mean_disagreement += self.engine.disagreement() as f64;
-            // Stash per-agent dual iterates + coefficients for the update.
-            let mut v = Mat::zeros(self.engine.agents(), self.engine.dim());
-            for k in 0..self.engine.agents() {
-                v.row_mut(k).copy_from_slice(self.engine.nu(k));
-            }
-            self.batch.push((v, y));
+            stats.mean_disagreement +=
+                self.engine.disagreement_sample_into(s, &mut self.mean) as f64;
         }
-        let b = samples.len().max(1);
         stats.samples = samples.len();
         stats.mean_loss /= b as f64;
         stats.mean_sparsity /= b as f64;
         stats.mean_disagreement /= b as f64;
 
-        // Eq. 51 with per-agent local dual estimates, averaged over batch.
+        // Eq. 51 with per-agent local dual estimates (read straight from
+        // the engine's stacked V), averaged over the batch.
         let constraint = task.atom_constraint();
         let scale = mu_w / b as f32;
         for k in 0..dict.agents() {
-            for (v, y) in &self.batch {
-                dict.block_gradient_step(k, scale, v.row(k), y);
+            for s in 0..b {
+                let y = &self.ys[s * kk..(s + 1) * kk];
+                dict.block_gradient_step(k, scale, self.engine.nu_sample(k, s), y);
             }
             if let DictProx::L1(_) = self.opts.prox {
                 let (start, len) = dict.block(k);

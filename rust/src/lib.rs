@@ -44,6 +44,7 @@ pub mod net;
 pub mod ops;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 
 pub use error::{DdlError, Result};

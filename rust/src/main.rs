@@ -7,12 +7,14 @@
 //! * `denoise`   — Fig. 5 image-denoising experiment
 //! * `novelty`   — Fig. 6/7 novel-document-detection experiment
 //! * `tune`      — §IV-A step-size tuning curves (Fig. 4 procedure)
+//! * `serve`     — streaming inference service with online adaptation
+//! * `bench-gate`— derived-speedup regression gate for BENCH_*.json
 //!
 //! Options can come from a TOML config (`--config path`) with CLI
 //! overrides; see `configs/*.toml`.
 
 use ddl::cli::Args;
-use ddl::config::experiment::{DenoiseConfig, NoveltyConfig};
+use ddl::config::experiment::{DenoiseConfig, NoveltyConfig, ServeConfig};
 use ddl::config::TomlDoc;
 use ddl::coordinator::{run_denoise, run_novelty, NoveltyAlgo};
 use std::path::Path;
@@ -31,6 +33,8 @@ fn main() {
         Some("denoise") => cmd_denoise(&args),
         Some("novelty") => cmd_novelty(&args),
         Some("tune") => cmd_tune(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             println!("{HELP}");
             0
@@ -52,6 +56,11 @@ COMMANDS:
   novelty     novel-document detection (Figs. 6-7)    [--config f] [--huber]
               [--algos diffusion,diffusion_fc,mairal,admm] [--steps n]
   tune        step-size tuning SNR curves (Fig. 4)    [--mu x] [--iters n]
+  serve       streaming batched inference service     [--config f] [--batch b]
+              [--max-wait-us t] [--samples n] [--rate r] [--agents n]
+              [--topology ring|grid|er|full] [--mu-w x] [--no-adapt]
+  bench-gate  compare derived speedups in --current json against --baseline
+              json; fail below --min-frac (default 0.5) of the baseline
 
 Common: --seed n, --threads t (parallel adapt/combine; results identical),
         --artifacts dir (default: artifacts)";
@@ -173,6 +182,79 @@ fn cmd_novelty(args: &Args) -> i32 {
         for (step, algo, auc) in report.auc_rows() {
             println!("{step:<6} {algo:<14} {auc:>6.3}");
         }
+        Ok(())
+    })
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    run(|| {
+        let doc = match args.get("config") {
+            Some(p) => TomlDoc::load(Path::new(p))?,
+            None => TomlDoc::default(),
+        };
+        let mut cfg = ServeConfig::from_toml(&doc);
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.agents = args.usize_or("agents", cfg.agents)?;
+        cfg.dim = args.usize_or("dim", cfg.dim)?;
+        cfg.topology = args.str_or("topology", &cfg.topology).to_string();
+        cfg.ring_k = args.usize_or("ring-k", cfg.ring_k)?;
+        cfg.batch = args.usize_or("batch", cfg.batch)?.max(1);
+        cfg.max_wait_us = args.u64_or("max-wait-us", cfg.max_wait_us)?;
+        cfg.samples = args.usize_or("samples", cfg.samples)?;
+        cfg.rate = args.f32_or("rate", cfg.rate as f32)? as f64;
+        cfg.mu_w = args.f32_or("mu-w", cfg.mu_w)?;
+        cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
+        cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
+        cfg.infer.threads = args.usize_or("threads", cfg.infer.threads)?;
+        if args.flag("no-adapt") {
+            cfg.mu_w = 0.0;
+        }
+        let report = ddl::serve::run_service(&cfg, &mut |s| println!("{s}"))?;
+        println!("== serve report ==");
+        println!("{}", report.summary(cfg.agents));
+        Ok(())
+    })
+}
+
+fn cmd_bench_gate(args: &Args) -> i32 {
+    run(|| {
+        let current = args
+            .get("current")
+            .ok_or_else(|| ddl::DdlError::Config("bench-gate: --current json required".into()))?;
+        let baseline = args
+            .get("baseline")
+            .ok_or_else(|| ddl::DdlError::Config("bench-gate: --baseline json required".into()))?;
+        let min_frac = args.f32_or("min-frac", 0.5)? as f64;
+        let rows =
+            ddl::bench::regression_gate(Path::new(current), Path::new(baseline), min_frac)?;
+        println!(
+            "{:<52} {:>4} {:>10} {:>10} {:>6}",
+            "derived figure", "dir", "baseline", "current", "ok"
+        );
+        let mut failed = false;
+        for r in &rows {
+            // Ratio-style figures read as multipliers; latency-style keys
+            // are raw values where lower is better.
+            let lower = ddl::bench::lower_is_better(&r.key);
+            let unit = if lower { " " } else { "x" };
+            println!(
+                "{:<52} {:>4} {:>9.2}{} {:>9.2}{} {:>6}",
+                r.key,
+                if lower { "min" } else { "max" },
+                r.baseline,
+                unit,
+                r.current,
+                unit,
+                if r.ok { "ok" } else { "FAIL" }
+            );
+            failed |= !r.ok;
+        }
+        if failed {
+            return Err(ddl::DdlError::Runtime(format!(
+                "bench-gate: derived speedups regressed below {min_frac} x baseline"
+            )));
+        }
+        println!("bench-gate: {} figures within tolerance", rows.len());
         Ok(())
     })
 }

@@ -113,6 +113,38 @@ impl DistributedDictionary {
         }
     }
 
+    /// Batched [`Self::block_correlations`]: `nus` holds `batch` contiguous
+    /// length-`M` dual iterates (one engine `V` row), and
+    /// `out[q*batch + s]` receives `w_qᵀ ν_s` for every atom `q` in agent
+    /// `k`'s block. The strided column walk over `W` is done once per atom
+    /// and amortized across the minibatch — the inner sum over `r` runs in
+    /// the same ascending order as the scalar path, so each sample's result
+    /// is bit-identical to a separate [`Self::block_correlations`] call.
+    pub fn block_correlations_batched(
+        &self,
+        k: usize,
+        nus: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        let (start, len) = self.blocks[k];
+        let m = self.m();
+        let kk = self.k();
+        debug_assert_eq!(nus.len(), batch * m);
+        debug_assert_eq!(out.len(), batch * kk);
+        let w = self.w.as_slice();
+        for q in start..start + len {
+            let o = &mut out[q * batch..(q + 1) * batch];
+            o.fill(0.0);
+            for r in 0..m {
+                let wv = w[r * kk + q];
+                for (s, ov) in o.iter_mut().enumerate() {
+                    *ov += wv * nus[s * m + r];
+                }
+            }
+        }
+    }
+
     /// Add `coeff[q] * w_q` for agent `k`'s atoms into `acc` (length M).
     pub fn block_accumulate(&self, k: usize, coeff: &[f32], acc: &mut [f32]) {
         let (start, len) = self.blocks[k];
@@ -125,6 +157,38 @@ impl DistributedDictionary {
             }
             for (r, a) in acc.iter_mut().enumerate() {
                 *a += c * w[r * kk + q];
+            }
+        }
+    }
+
+    /// Batched [`Self::block_accumulate`]: `coeff[q*batch + s]` scales atom
+    /// `q` into the `s`-th length-`M` segment of `acc`. Zero coefficients
+    /// are skipped exactly as in the scalar path (thresholded coefficients
+    /// are mostly zero), and each sample's accumulation runs atoms in the
+    /// same ascending order — per-sample results are bit-identical.
+    pub fn block_accumulate_batched(
+        &self,
+        k: usize,
+        coeff: &[f32],
+        batch: usize,
+        acc: &mut [f32],
+    ) {
+        let (start, len) = self.blocks[k];
+        let m = self.m();
+        let kk = self.k();
+        debug_assert_eq!(coeff.len(), batch * kk);
+        debug_assert_eq!(acc.len(), batch * m);
+        let w = self.w.as_slice();
+        for q in start..start + len {
+            for s in 0..batch {
+                let c = coeff[q * batch + s];
+                if c == 0.0 {
+                    continue;
+                }
+                let seg = &mut acc[s * m..(s + 1) * m];
+                for (r, a) in seg.iter_mut().enumerate() {
+                    *a += c * w[r * kk + q];
+                }
             }
         }
     }
@@ -338,6 +402,49 @@ mod tests {
         }
         let direct = d.mat().matvec(&y).unwrap();
         crate::testutil::assert_close(&acc, &direct, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn batched_block_ops_bit_match_scalar() {
+        let (m, kk, n, batch) = (12, 9, 3, 4);
+        let mut rng = Pcg64::new(41);
+        let d = DistributedDictionary::random(m, kk, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let nus: Vec<f32> = rng.normal_vec(batch * m);
+        let mut batched = vec![0.0f32; batch * kk];
+        let mut scalar = vec![0.0f32; kk];
+        for k in 0..n {
+            d.block_correlations_batched(k, &nus, batch, &mut batched);
+            for s in 0..batch {
+                d.block_correlations(k, &nus[s * m..(s + 1) * m], &mut scalar);
+                let (start, len) = d.block(k);
+                for q in start..start + len {
+                    assert_eq!(batched[q * batch + s], scalar[q], "agent {k} atom {q} sample {s}");
+                }
+            }
+        }
+        // Accumulate with a sparse coefficient pattern (zeros must be
+        // skipped identically on both paths).
+        let mut coeff = vec![0.0f32; batch * kk];
+        for (i, c) in coeff.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *c = rng.next_normal();
+            }
+        }
+        let mut acc_b: Vec<f32> = rng.normal_vec(batch * m);
+        let mut acc_s = acc_b.clone();
+        for k in 0..n {
+            d.block_accumulate_batched(k, &coeff, batch, &mut acc_b);
+        }
+        for s in 0..batch {
+            let mut c_s = vec![0.0f32; kk];
+            for q in 0..kk {
+                c_s[q] = coeff[q * batch + s];
+            }
+            for k in 0..n {
+                d.block_accumulate(k, &c_s, &mut acc_s[s * m..(s + 1) * m]);
+            }
+        }
+        assert_eq!(acc_b, acc_s);
     }
 
     #[test]

@@ -17,13 +17,24 @@ use crate::graph::Graph;
 use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
-use crate::net::message::PsiMessage;
+use crate::net::message::{MessageStats, PsiMessage};
 use crate::net::pool::chunk_range;
 use crate::ops::project::clip_linf;
 use std::sync::mpsc;
 
+/// One worker's result: its agents' final ν plus the traffic it sent.
+type WorkerOut = (Vec<(usize, Vec<f32>)>, MessageStats);
+
 /// Run diffusion on `min(params.threads, N)` worker threads; returns each
-/// agent's final ν (indexed by agent).
+/// agent's final ν (indexed by agent) plus traffic statistics.
+///
+/// Stats follow the convention of [`crate::net::message`]: `rounds` is
+/// incremented once per diffusion iteration (one network-wide exchange),
+/// exactly as the BSP executor counts it, while `messages`/`bytes` count
+/// only the ψ that actually crossed a worker boundary (same-worker
+/// neighbors are delivered in memory) — so `messages` shrinks as agents
+/// are multiplexed onto fewer workers but `rounds` stays executor-
+/// independent.
 ///
 /// `dict` is cloned per worker but each worker only reads its own agents'
 /// blocks — the clone stands in for "agent k stores W_k locally".
@@ -35,7 +46,7 @@ pub fn run_threaded(
     x: &[f32],
     informed: Option<&[usize]>,
     params: DiffusionParams,
-) -> Result<Vec<Vec<f32>>> {
+) -> Result<(Vec<Vec<f32>>, MessageStats)> {
     let n = graph.n();
     let m = x.len();
     let workers = params.threads.max(1).min(n);
@@ -61,7 +72,7 @@ pub fn run_threaded(
     }
 
     let results = std::thread::scope(
-        |scope| -> Result<Vec<Vec<(usize, Vec<f32>)>>> {
+        |scope| -> Result<Vec<WorkerOut>> {
             let mut handles = Vec::with_capacity(workers);
             for w in 0..workers {
                 let rx = receivers[w].take().unwrap();
@@ -71,7 +82,7 @@ pub fn run_threaded(
                 let owner = &owner;
                 let theta = &theta;
 
-                handles.push(scope.spawn(move || -> Result<Vec<(usize, Vec<f32>)>> {
+                handles.push(scope.spawn(move || -> Result<WorkerOut> {
                     let cf_over_n = task.conj_grad_scale() / n as f32;
                     let inv_delta = 1.0 / task.delta();
                     let clip = task.dual_clip();
@@ -80,6 +91,8 @@ pub fn run_threaded(
                     let mut nu = vec![vec![0.0f32; m]; count];
                     let mut psi = vec![vec![0.0f32; m]; count];
                     let mut thr = vec![0.0f32; dict.k()];
+                    // Cross-worker traffic this worker originates.
+                    let mut sent = MessageStats::default();
                     // Early-arrival buffer for messages of future iterations.
                     let mut pending: Vec<(usize, PsiMessage)> = Vec::new();
                     // Cross-worker inbound edges this worker must hear from
@@ -110,14 +123,12 @@ pub fn run_threaded(
                         for (i, k) in owned.clone().enumerate() {
                             for &nb in graph.neighbors(k) {
                                 if owner[nb] != w {
-                                    txs[owner[nb]]
-                                        .send((
-                                            nb,
-                                            PsiMessage { from: k, iter, psi: psi[i].clone() },
-                                        ))
-                                        .map_err(|e| {
-                                            DdlError::Runtime(format!("send failed: {e}"))
-                                        })?;
+                                    let msg =
+                                        PsiMessage { from: k, iter, psi: psi[i].clone() };
+                                    sent.record(&msg);
+                                    txs[owner[nb]].send((nb, msg)).map_err(|e| {
+                                        DdlError::Runtime(format!("send failed: {e}"))
+                                    })?;
                                 }
                             }
                         }
@@ -178,7 +189,7 @@ pub fn run_threaded(
                             }
                         }
                     }
-                    Ok(owned.zip(nu).collect())
+                    Ok((owned.zip(nu).collect(), sent))
                 }));
             }
             drop(senders);
@@ -194,13 +205,18 @@ pub fn run_threaded(
         },
     )?;
 
+    // One exchange round per diffusion iteration, regardless of worker
+    // count; per-worker traffic merges additively (net::message convention).
+    let mut stats = MessageStats::default();
+    stats.add_rounds(params.iters);
     let mut nus: Vec<Vec<f32>> = vec![Vec::new(); n];
-    for chunk in results {
+    for (chunk, sent) in results {
+        stats.merge(&sent);
         for (k, nu) in chunk {
             nus[k] = nu;
         }
     }
-    Ok(nus)
+    Ok((nus, stats))
 }
 
 #[cfg(test)]
@@ -226,10 +242,16 @@ mod tests {
 
         let mut engine = DiffusionEngine::new(&a, m, None).unwrap();
         engine.run(&dict, &task, &x, DiffusionParams::new(0.3, 40)).unwrap();
-        let nus = run_threaded(&g, &a, &dict, &task, &x, None, params).unwrap();
+        let (nus, stats) = run_threaded(&g, &a, &dict, &task, &x, None, params).unwrap();
         for k in 0..n {
             crate::testutil::assert_close(&nus[k], engine.nu(k), 1e-4, 1e-3);
         }
+        // One thread per agent: every directed edge crosses a worker
+        // boundary, so traffic matches the BSP executor exactly.
+        assert_eq!(stats.rounds, 40);
+        assert_eq!(stats.messages, 2 * g.edge_count() * 40);
+        assert_eq!(stats.bytes, stats.messages * (16 + m * 4));
+        assert!(stats.bytes_per_agent_round(n) > 0.0);
     }
 
     /// Multiplexed: more agents than worker threads.
@@ -248,9 +270,21 @@ mod tests {
         engine.run(&dict, &task, &x, DiffusionParams::new(0.25, 35)).unwrap();
         for threads in [1, 2, 3] {
             let params = DiffusionParams::new(0.25, 35).with_threads(threads);
-            let nus = run_threaded(&g, &a, &dict, &task, &x, None, params).unwrap();
+            let (nus, stats) = run_threaded(&g, &a, &dict, &task, &x, None, params).unwrap();
             for k in 0..n {
                 crate::testutil::assert_close(&nus[k], engine.nu(k), 1e-4, 1e-3);
+            }
+            // Rounds are executor-independent (one per diffusion
+            // iteration); channel traffic counts only cross-worker edges —
+            // a single worker delivers everything in memory.
+            assert_eq!(stats.rounds, 35, "threads={threads}");
+            if threads == 1 {
+                assert_eq!(stats.messages, 0);
+                assert_eq!(stats.bytes_per_agent_round(n), 0.0);
+            } else {
+                assert!(stats.messages > 0);
+                assert!(stats.messages <= 2 * g.edge_count() * 35);
+                assert_eq!(stats.bytes, stats.messages * (16 + m * 4));
             }
         }
     }
@@ -268,7 +302,7 @@ mod tests {
         let params = DiffusionParams::new(0.2, 30).with_threads(2);
         let mut engine = DiffusionEngine::new(&a, m, Some(&[2])).unwrap();
         engine.run(&dict, &task, &x, DiffusionParams::new(0.2, 30)).unwrap();
-        let nus = run_threaded(&g, &a, &dict, &task, &x, Some(&[2]), params).unwrap();
+        let (nus, _) = run_threaded(&g, &a, &dict, &task, &x, Some(&[2]), params).unwrap();
         for k in 0..n {
             crate::testutil::assert_close(&nus[k], engine.nu(k), 1e-4, 1e-3);
         }

@@ -110,7 +110,9 @@ impl BspNetwork {
                     clip_linf(&mut self.agents[k].nu, b);
                 }
             }
-            self.stats.rounds += 1;
+            // One network-wide ψ exchange completed (see the round
+            // convention in `net::message`).
+            self.stats.end_round();
         }
         Ok(())
     }

@@ -1,9 +1,23 @@
 //! Message types and traffic accounting for the simulated network.
+//!
+//! ## Round-accounting convention
+//!
+//! One **round** is one network-wide ψ exchange — i.e. one combine step of
+//! the diffusion recursion. Every executor that moves ψ between agents
+//! must bump `rounds` exactly once per diffusion iteration, regardless of
+//! how agents are multiplexed onto threads: the BSP executor
+//! ([`crate::net::BspNetwork`]) after each exchange/combine, the actor
+//! executor ([`crate::net::actors::run_threaded`]) once per iteration even
+//! though only *cross-worker* edges travel over channels, and the serving
+//! session ([`crate::serve::run_service`]) once per iteration per drained
+//! batch. This keeps [`MessageStats::bytes_per_agent_round`] comparable
+//! across executors.
 
 /// One diffusion message: agent `from`'s intermediate estimate ψ for
 /// iteration `iter`. This is the *only* payload agents ever exchange —
-/// `M` floats per neighbor per iteration; atoms `W_k` and coefficients
-/// `y_k` never leave their agent (the paper's privacy property).
+/// `M` floats per neighbor per iteration (`B·M` when a minibatch diffuses
+/// in one sweep); atoms `W_k` and coefficients `y_k` never leave their
+/// agent (the paper's privacy property).
 #[derive(Clone, Debug)]
 pub struct PsiMessage {
     pub from: usize,
@@ -11,10 +25,18 @@ pub struct PsiMessage {
     pub psi: Vec<f32>,
 }
 
+/// Wire-size of a ψ message header (`from` + `iter` as u64).
+pub const WIRE_HEADER_BYTES: usize = 2 * std::mem::size_of::<u64>();
+
+/// Wire size of a ψ payload of `floats` f32 entries, including the header.
+pub fn wire_bytes_for(floats: usize) -> usize {
+    WIRE_HEADER_BYTES + floats * std::mem::size_of::<f32>()
+}
+
 impl PsiMessage {
     /// Wire size in bytes (header + payload), for traffic accounting.
     pub fn wire_bytes(&self) -> usize {
-        2 * std::mem::size_of::<u64>() + self.psi.len() * std::mem::size_of::<f32>()
+        wire_bytes_for(self.psi.len())
     }
 }
 
@@ -30,6 +52,32 @@ impl MessageStats {
     pub fn record(&mut self, msg: &PsiMessage) {
         self.messages += 1;
         self.bytes += msg.wire_bytes();
+    }
+
+    /// Record `count` messages of `floats` f32 payload each without
+    /// materializing them (bulk accounting for the batched serving path).
+    pub fn record_exchange(&mut self, count: usize, floats: usize) {
+        self.messages += count;
+        self.bytes += count * wire_bytes_for(floats);
+    }
+
+    /// Mark one completed exchange round (see the module convention).
+    pub fn end_round(&mut self) {
+        self.rounds += 1;
+    }
+
+    /// Bulk variant of [`Self::end_round`].
+    pub fn add_rounds(&mut self, rounds: usize) {
+        self.rounds += rounds;
+    }
+
+    /// Merge another executor's counters: traffic adds up, rounds take the
+    /// maximum (workers of one executor share the same exchange rounds —
+    /// summing would double-count them).
+    pub fn merge(&mut self, other: &MessageStats) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+        self.rounds = self.rounds.max(other.rounds);
     }
 
     /// Average bytes per agent per round.
@@ -49,6 +97,7 @@ mod tests {
     fn wire_bytes_counts_payload() {
         let m = PsiMessage { from: 0, iter: 3, psi: vec![0.0; 10] };
         assert_eq!(m.wire_bytes(), 16 + 40);
+        assert_eq!(wire_bytes_for(10), m.wire_bytes());
     }
 
     #[test]
@@ -57,9 +106,40 @@ mod tests {
         let m = PsiMessage { from: 1, iter: 0, psi: vec![0.0; 4] };
         s.record(&m);
         s.record(&m);
-        s.rounds = 2;
+        s.add_rounds(2);
         assert_eq!(s.messages, 2);
         assert_eq!(s.bytes, 2 * (16 + 16));
         assert!((s.bytes_per_agent_round(1) - 32.0).abs() < 1e-12);
+    }
+
+    /// `bytes_per_agent_round` on a degree-`d` exchange must equal
+    /// `d · wire_bytes(M)` independent of how many rounds ran: every agent
+    /// receives `d` neighbor messages per round.
+    #[test]
+    fn bytes_per_agent_round_matches_degree() {
+        let (n, deg, m_dim) = (10usize, 2usize, 7usize);
+        let mut s = MessageStats::default();
+        for _ in 0..13 {
+            // One round: every agent sends ψ to each of its `deg` neighbors.
+            s.record_exchange(n * deg, m_dim);
+            s.end_round();
+        }
+        assert_eq!(s.rounds, 13);
+        assert_eq!(s.messages, 13 * n * deg);
+        let expect = (deg * wire_bytes_for(m_dim)) as f64;
+        assert!((s.bytes_per_agent_round(n) - expect).abs() < 1e-9);
+        // Zero denominators are safe.
+        assert_eq!(MessageStats::default().bytes_per_agent_round(n), 0.0);
+        assert_eq!(s.bytes_per_agent_round(0), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_traffic_but_not_rounds() {
+        let mut a = MessageStats { messages: 3, bytes: 300, rounds: 5 };
+        let b = MessageStats { messages: 2, bytes: 200, rounds: 5 };
+        a.merge(&b);
+        assert_eq!(a.messages, 5);
+        assert_eq!(a.bytes, 500);
+        assert_eq!(a.rounds, 5, "workers share rounds; merge must not double-count");
     }
 }

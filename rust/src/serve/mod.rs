@@ -1,0 +1,24 @@
+//! Streaming inference service: batched serving with online adaptation.
+//!
+//! The paper's algorithm is inherently a streaming one — "each data sample
+//! is presented to the network once" — and this module turns the batched
+//! diffusion engine into a workload layer that serves such a stream:
+//!
+//! * [`queue`] — micro-batching admission queue: requests arrive on a
+//!   microsecond clock and are released as minibatches by a
+//!   max-size/max-wait policy ([`queue::BatchPolicy`]);
+//! * [`session`] — the service loop: a discrete-event single-server
+//!   simulation whose service times are *measured* batched
+//!   inference+update steps ([`crate::learn::OnlineTrainer::step`] over
+//!   [`crate::infer::DiffusionEngine::run_batch`]), reporting throughput,
+//!   latency percentiles, and ψ-traffic [`crate::net::MessageStats`].
+//!
+//! Drive it with `ddl serve` (TOML section `[serve]`, CLI overrides) or
+//! programmatically via [`session::run_service`]; see
+//! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving.
+
+pub mod queue;
+pub mod session;
+
+pub use queue::{BatchPolicy, MicroBatchQueue, Request};
+pub use session::{generate_stream, run_service, ServeReport};

@@ -1,0 +1,202 @@
+//! Micro-batching admission queue for the streaming inference service.
+//!
+//! Requests (one data sample each) are admitted with an arrival timestamp
+//! and drained as minibatches formed by the classic two-knob policy:
+//!
+//! * **max-size** — a batch closes as soon as `max_batch` requests wait;
+//! * **max-wait** — a partial batch closes once its *oldest* request has
+//!   waited `max_wait_us`, bounding the queueing-latency a sample can pay
+//!   for the throughput of its batch mates.
+//!
+//! Time is an explicit `u64` microsecond clock supplied by the caller, so
+//! the queue is fully deterministic (the session loop feeds it either
+//! simulated arrival offsets or measured wall-clock offsets) and trivially
+//! testable. The queue is FIFO: batches preserve admission order, which
+//! keeps the per-sample ν trajectories reproducible for a given stream.
+
+use std::collections::VecDeque;
+
+/// Batch-formation policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Largest minibatch handed to the engine (`B`); clamped to ≥ 1.
+    pub max_batch: usize,
+    /// Longest time (µs) the oldest queued request may wait before a
+    /// partial batch is released. `0` releases on every poll.
+    pub max_wait_us: u64,
+}
+
+impl BatchPolicy {
+    /// Policy with the given knobs (max_batch clamped to ≥ 1).
+    pub fn new(max_batch: usize, max_wait_us: u64) -> Self {
+        BatchPolicy { max_batch: max_batch.max(1), max_wait_us }
+    }
+}
+
+/// One admitted inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Monotone admission id (also the reply correlation id).
+    pub id: u64,
+    /// Arrival time on the queue's microsecond clock.
+    pub arrival_us: u64,
+    /// The data sample `x ∈ R^M`.
+    pub x: Vec<f32>,
+}
+
+/// FIFO micro-batching queue.
+#[derive(Debug)]
+pub struct MicroBatchQueue {
+    policy: BatchPolicy,
+    pending: VecDeque<Request>,
+    next_id: u64,
+}
+
+impl MicroBatchQueue {
+    /// Empty queue under `policy`.
+    pub fn new(policy: BatchPolicy) -> Self {
+        MicroBatchQueue { policy, pending: VecDeque::new(), next_id: 0 }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Admit a sample at `now_us`; returns its request id.
+    pub fn push(&mut self, x: Vec<f32>, now_us: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push_back(Request { id, arrival_us: now_us, x });
+        id
+    }
+
+    /// Number of queued requests.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Arrival time of the oldest queued request.
+    pub fn oldest_arrival_us(&self) -> Option<u64> {
+        self.pending.front().map(|r| r.arrival_us)
+    }
+
+    /// Earliest time at which [`Self::ready`] will hold without further
+    /// admissions (the max-wait deadline of the oldest request), if any
+    /// request is queued. Full batches are ready immediately.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        let oldest = self.oldest_arrival_us()?;
+        if self.pending.len() >= self.policy.max_batch {
+            Some(oldest)
+        } else {
+            Some(oldest.saturating_add(self.policy.max_wait_us))
+        }
+    }
+
+    /// Whether a batch should be released at `now_us`: the queue holds a
+    /// full `max_batch`, or the oldest request has waited `max_wait_us`.
+    pub fn ready(&self, now_us: u64) -> bool {
+        if self.pending.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.oldest_arrival_us() {
+            Some(oldest) => now_us.saturating_sub(oldest) >= self.policy.max_wait_us,
+            None => false,
+        }
+    }
+
+    /// Release the next batch (up to `max_batch` oldest requests) if
+    /// [`Self::ready`]; `None` otherwise.
+    pub fn pop_batch(&mut self, now_us: u64) -> Option<Vec<Request>> {
+        if !self.ready(now_us) {
+            return None;
+        }
+        Some(self.drain_batch())
+    }
+
+    /// Unconditionally release the next (possibly partial) batch —
+    /// end-of-stream drain.
+    pub fn drain_batch(&mut self) -> Vec<Request> {
+        let take = self.policy.max_batch.min(self.pending.len());
+        self.pending.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(max_batch: usize, max_wait_us: u64) -> MicroBatchQueue {
+        MicroBatchQueue::new(BatchPolicy::new(max_batch, max_wait_us))
+    }
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut q = queue(3, 1_000_000);
+        for i in 0..3 {
+            q.push(vec![i as f32], 10);
+        }
+        assert!(q.ready(10));
+        let batch = q.pop_batch(10).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(q.is_empty());
+        // FIFO order and monotone ids.
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut q = queue(8, 500);
+        q.push(vec![1.0], 100);
+        q.push(vec![2.0], 300);
+        assert!(!q.ready(400));
+        assert_eq!(q.pop_batch(400).map(|b| b.len()), None);
+        // Deadline is oldest arrival + max_wait.
+        assert_eq!(q.next_deadline_us(), Some(600));
+        assert!(q.ready(600));
+        let batch = q.pop_batch(600).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].arrival_us, 100);
+    }
+
+    #[test]
+    fn oversized_backlog_releases_in_max_batch_chunks() {
+        let mut q = queue(4, 0);
+        for i in 0..10 {
+            q.push(vec![i as f32], 0);
+        }
+        assert_eq!(q.pop_batch(0).unwrap().len(), 4);
+        assert_eq!(q.pop_batch(0).unwrap().len(), 4);
+        assert_eq!(q.pop_batch(0).unwrap().len(), 2);
+        assert!(q.pop_batch(0).is_none());
+    }
+
+    #[test]
+    fn empty_queue_never_ready() {
+        let q = queue(1, 0);
+        assert!(!q.ready(u64::MAX));
+        assert_eq!(q.next_deadline_us(), None);
+    }
+
+    #[test]
+    fn drain_releases_partial_without_deadline() {
+        let mut q = queue(8, u64::MAX);
+        q.push(vec![0.5], 7);
+        assert!(!q.ready(1_000_000));
+        let batch = q.drain_batch();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].x, vec![0.5]);
+    }
+
+    #[test]
+    fn zero_max_batch_clamped_to_one() {
+        let mut q = queue(0, 0);
+        q.push(vec![1.0], 0);
+        assert_eq!(q.pop_batch(0).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,376 @@
+//! Streaming inference session: the service loop that interleaves batched
+//! dual inference with online dictionary adaptation (paper Alg. 1 — each
+//! sample is presented to the network exactly once).
+//!
+//! The loop is a single-server discrete-event simulation driven by a
+//! microsecond virtual clock: request arrivals follow the configured rate
+//! (Poisson interarrivals, or all-at-once in saturated mode for peak
+//! throughput), the [`MicroBatchQueue`] forms minibatches by the
+//! max-size/max-wait policy, and each released batch is *processed for
+//! real* — one [`crate::learn::OnlineTrainer::step`] over the batched
+//! engine, wall-clock timed — before the virtual clock advances by the
+//! measured service time. Per-request latency (queueing + service) and
+//! end-to-end throughput therefore reflect genuine compute on this
+//! machine while arrival timing stays reproducible.
+//!
+//! Traffic is accounted the way the BSP executor would ship it: one ψ
+//! message per directed edge per diffusion iteration, with the batched
+//! payload of `B·M` floats (the whole minibatch diffuses in one sweep).
+
+use crate::config::experiment::ServeConfig;
+use crate::error::{DdlError, Result};
+use crate::graph::{metropolis_csr, metropolis_weights, Graph, Topology};
+use crate::infer::{DiffusionEngine, DiffusionParams};
+use crate::learn::{OnlineTrainer, TrainerOptions};
+use crate::math::stats;
+use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use crate::net::MessageStats;
+use crate::ops::prox::DictProx;
+use crate::rng::Pcg64;
+use crate::serve::queue::{BatchPolicy, MicroBatchQueue};
+use std::time::Instant;
+
+/// Outcome of one streaming session.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests served.
+    pub samples: usize,
+    /// Minibatches drained through the engine.
+    pub batches: usize,
+    /// Mean formed batch size.
+    pub mean_batch: f64,
+    /// Virtual session duration (arrival waits + measured service time).
+    pub duration_s: f64,
+    /// Served samples per second of session time.
+    pub throughput_rps: f64,
+    /// Request latency percentiles (admission → batch completion), ms.
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_max_ms: f64,
+    /// Mean representation loss over the first / last quarter of batches
+    /// (the gap shows the dictionary adapting online while serving).
+    pub loss_first_quarter: f64,
+    pub loss_last_quarter: f64,
+    /// Simulated network traffic (ψ exchanges along graph edges).
+    pub stats: MessageStats,
+    /// Combine path the engine selected (`uniform`/`sparse`/`dense`).
+    pub combine_path: &'static str,
+}
+
+impl ServeReport {
+    /// Multi-line human-readable summary.
+    pub fn summary(&self, agents: usize) -> String {
+        format!(
+            "served {} samples in {} batches (mean B = {:.2}) over {:.3} s\n\
+             throughput: {:.1} samples/s\n\
+             latency ms: p50 {:.2}, p95 {:.2}, p99 {:.2}, max {:.2}\n\
+             loss: first quarter {:.4} -> last quarter {:.4}\n\
+             traffic: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round",
+            self.samples,
+            self.batches,
+            self.mean_batch,
+            self.duration_s,
+            self.throughput_rps,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_p99_ms,
+            self.latency_max_ms,
+            self.loss_first_quarter,
+            self.loss_last_quarter,
+            self.stats.messages,
+            self.stats.bytes as f64 / 1e6,
+            self.stats.rounds,
+            self.stats.bytes_per_agent_round(agents),
+        )
+    }
+}
+
+/// Build the service topology named by the config.
+pub fn build_topology(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<(Graph, Topology)> {
+    let topo = match cfg.topology.as_str() {
+        "ring" => Topology::Ring { k: cfg.ring_k.max(1) },
+        "grid" => Topology::Grid,
+        "er" | "erdos" => Topology::ErdosRenyi { p: cfg.edge_prob },
+        "full" => Topology::FullyConnected,
+        other => {
+            return Err(DdlError::Config(format!(
+                "serve: unknown topology '{other}' (ring|grid|er|full)"
+            )))
+        }
+    };
+    Ok((Graph::generate(cfg.agents, &topo, rng), topo))
+}
+
+/// Synthetic request stream: sparse non-negative combinations of a planted
+/// dictionary plus light noise — the service's "patches". Returns
+/// `(arrival_us, x)` pairs in arrival order (all zeros when
+/// `cfg.rate == 0`, Poisson gaps otherwise). This is the single
+/// definition of the serving workload — `benches/bench_serve.rs` and the
+/// examples draw from it too, so BENCH_serve.json always measures the
+/// stream the session serves.
+pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, Vec<f32>)>> {
+    let m = cfg.dim;
+    let planted = DistributedDictionary::random(
+        m,
+        cfg.agents,
+        cfg.agents,
+        AtomConstraint::UnitBall,
+        rng,
+    )?;
+    let mut out = Vec::with_capacity(cfg.samples);
+    let mut t_us = 0f64;
+    let mean_gap_us = if cfg.rate > 0.0 { 1e6 / cfg.rate } else { 0.0 };
+    for _ in 0..cfg.samples {
+        let mut x = vec![0.0f32; m];
+        for _ in 0..2 {
+            let q = rng.next_below(cfg.agents as u64) as usize;
+            let c = 0.5 + rng.next_f32();
+            crate::math::vector::axpy(c, &planted.atom(q), &mut x);
+        }
+        for v in x.iter_mut() {
+            *v += 0.01 * rng.next_normal();
+        }
+        if mean_gap_us > 0.0 {
+            // Poisson arrivals: exponential interarrival gaps.
+            let u = rng.next_f64().max(1e-12);
+            t_us += -u.ln() * mean_gap_us;
+        }
+        out.push((t_us as u64, x));
+    }
+    Ok(out)
+}
+
+/// Run a streaming session; `log` receives progress lines.
+pub fn run_service(cfg: &ServeConfig, log: &mut dyn FnMut(&str)) -> Result<ServeReport> {
+    let m = cfg.dim;
+    let mut rng = Pcg64::new(cfg.seed);
+    let (graph, topo) = build_topology(cfg, &mut rng)?;
+    let directed_edges = 2 * graph.edge_count();
+
+    // Engine over the CSR combine for sparse topologies; the dense
+    // constructor auto-detects the uniform fast path for "full".
+    let engine = if matches!(topo, Topology::FullyConnected) {
+        DiffusionEngine::new(&metropolis_weights(&graph), m, informed_slice(cfg).as_deref())?
+    } else {
+        DiffusionEngine::new_csr(metropolis_csr(&graph), m, informed_slice(cfg).as_deref())?
+    };
+    let combine_path = engine.combine_path();
+
+    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
+    let params =
+        DiffusionParams::new(cfg.infer.mu, cfg.infer.iters).with_threads(cfg.infer.threads);
+    let mut trainer =
+        OnlineTrainer::from_engine(engine, TrainerOptions { infer: params, prox: DictProx::None });
+    let mut dict = DistributedDictionary::random(
+        m,
+        cfg.agents,
+        cfg.agents,
+        task.atom_constraint(),
+        &mut rng,
+    )?;
+
+    let stream = generate_stream(cfg, &mut rng)?;
+    let mut queue = MicroBatchQueue::new(BatchPolicy::new(cfg.batch, cfg.max_wait_us));
+    log(&format!(
+        "serve: N={} M={} topology={} ({} directed edges, {} combine), B<={}, max_wait={}µs, \
+         {} samples at {}",
+        cfg.agents,
+        m,
+        cfg.topology,
+        directed_edges,
+        combine_path,
+        cfg.batch.max(1),
+        cfg.max_wait_us,
+        cfg.samples,
+        if cfg.rate > 0.0 { format!("{:.0} req/s", cfg.rate) } else { "saturation".into() },
+    ));
+
+    let mut stats = MessageStats::default();
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(cfg.samples);
+    let mut batch_losses: Vec<f64> = Vec::new();
+    let mut now_us: u64 = 0;
+    let mut served = 0usize;
+    let mut next = 0usize;
+
+    while next < stream.len() || !queue.is_empty() {
+        // Admit every request that has arrived by the current clock.
+        while next < stream.len() && stream[next].0 <= now_us {
+            let (t, x) = (stream[next].0, stream[next].1.clone());
+            queue.push(x, t);
+            next += 1;
+        }
+        let end_of_stream = next >= stream.len();
+        let batch = if queue.ready(now_us) {
+            queue.drain_batch()
+        } else if end_of_stream && !queue.is_empty() {
+            // Final partial batch: nothing else will arrive.
+            queue.drain_batch()
+        } else {
+            // Idle: jump the clock to the next arrival or batch deadline.
+            let mut t_next = u64::MAX;
+            if next < stream.len() {
+                t_next = t_next.min(stream[next].0);
+            }
+            if let Some(d) = queue.next_deadline_us() {
+                t_next = t_next.min(d);
+            }
+            if t_next == u64::MAX {
+                break;
+            }
+            now_us = now_us.max(t_next);
+            continue;
+        };
+
+        // Process the minibatch for real: batched inference + one online
+        // dictionary update (each sample seen exactly once).
+        let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
+        let t0 = Instant::now();
+        let step = trainer.step(&mut dict, &task, &refs, cfg.mu_w)?;
+        let service_us = (t0.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
+        now_us = now_us.saturating_add(service_us);
+
+        batch_losses.push(step.mean_loss);
+        served += batch.len();
+        for r in &batch {
+            latencies_ms.push(now_us.saturating_sub(r.arrival_us) as f64 / 1e3);
+        }
+        // ψ traffic for this batch: one message per directed edge per
+        // diffusion iteration carrying the whole minibatch (B·M floats) —
+        // payload bytes match B sequential BSP runs exactly, while the
+        // per-message headers are amortized B× (a real serving win; see
+        // EXPERIMENTS.md §Serving).
+        stats.record_exchange(directed_edges * cfg.infer.iters, batch.len() * m);
+        stats.add_rounds(cfg.infer.iters);
+
+        if batch_losses.len() % 16 == 0 {
+            log(&format!(
+                "  [{:>6.2} s] served {:>5}/{} (loss {:.4})",
+                now_us as f64 / 1e6,
+                served,
+                cfg.samples,
+                step.mean_loss
+            ));
+        }
+    }
+
+    let batches = batch_losses.len();
+    let duration_s = (now_us as f64 / 1e6).max(1e-9);
+    let quarter = (batches / 4).max(1);
+    let first: Vec<f64> = batch_losses.iter().take(quarter).cloned().collect();
+    let last: Vec<f64> = batch_losses.iter().rev().take(quarter).cloned().collect();
+    Ok(ServeReport {
+        samples: served,
+        batches,
+        mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+        duration_s,
+        throughput_rps: served as f64 / duration_s,
+        latency_p50_ms: stats::percentile(&latencies_ms, 50.0),
+        latency_p95_ms: stats::percentile(&latencies_ms, 95.0),
+        latency_p99_ms: stats::percentile(&latencies_ms, 99.0),
+        latency_max_ms: latencies_ms.iter().cloned().fold(0.0, f64::max),
+        loss_first_quarter: stats::mean(&first),
+        loss_last_quarter: stats::mean(&last),
+        stats,
+        combine_path,
+    })
+}
+
+fn informed_slice(cfg: &ServeConfig) -> Option<Vec<usize>> {
+    // `Some(0)` maps to an empty set so the engine's "at least one informed
+    // agent" validation fires instead of silently serving with one agent.
+    cfg.informed.map(|k| (0..k).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ServeConfig {
+        let base = ServeConfig::default();
+        ServeConfig {
+            agents: 12,
+            dim: 8,
+            topology: "ring".into(),
+            ring_k: 1,
+            batch: 4,
+            max_wait_us: 200,
+            samples: 24,
+            rate: 0.0,
+            infer: crate::config::experiment::InferenceConfig {
+                iters: 15,
+                threads: 1,
+                ..base.infer.clone()
+            },
+            ..base
+        }
+    }
+
+    #[test]
+    fn saturated_session_serves_every_sample() {
+        let cfg = tiny_cfg();
+        let mut lines = Vec::new();
+        let report = run_service(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert_eq!(report.samples, 24);
+        // Saturated arrivals form full batches: 24 / 4.
+        assert_eq!(report.batches, 6);
+        assert!((report.mean_batch - 4.0).abs() < 1e-9);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.latency_p50_ms <= report.latency_p99_ms + 1e-9);
+        // One round per diffusion iteration per batch.
+        assert_eq!(report.stats.rounds, 6 * cfg.infer.iters);
+        assert!(report.stats.messages > 0);
+        assert!(report.stats.bytes_per_agent_round(cfg.agents) > 0.0);
+    }
+
+    #[test]
+    fn paced_session_forms_partial_batches() {
+        let mut cfg = tiny_cfg();
+        // Arrivals far slower than the wait budget: batches close by
+        // deadline well below the size cap (gaps are exponential, so a
+        // rare cluster may still pair two samples — bound, don't pin).
+        cfg.rate = 5.0; // ~200 ms mean gap vs 200 µs max wait
+        cfg.samples = 6;
+        let report = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(report.samples, 6);
+        assert!(
+            report.batches >= 3 && report.batches <= 6,
+            "expected mostly-singleton batches, got {}",
+            report.batches
+        );
+        assert!(report.mean_batch < cfg.batch as f64);
+        // Deadline releases dominate latency: every request waited at
+        // least the max-wait budget but far less than one arrival gap.
+        assert!(report.latency_p50_ms >= cfg.max_wait_us as f64 / 1e3 * 0.5);
+    }
+
+    #[test]
+    fn adaptation_reduces_loss_on_stream() {
+        let mut cfg = tiny_cfg();
+        cfg.samples = 192;
+        cfg.infer.iters = 100;
+        cfg.infer.mu = 0.3;
+        cfg.mu_w = 0.08;
+        let report = run_service(&cfg, &mut |_| {}).unwrap();
+        assert!(
+            report.loss_last_quarter < report.loss_first_quarter,
+            "online adaptation should reduce loss: {} -> {}",
+            report.loss_first_quarter,
+            report.loss_last_quarter
+        );
+    }
+
+    #[test]
+    fn unknown_topology_rejected() {
+        let mut cfg = tiny_cfg();
+        cfg.topology = "torus".into();
+        assert!(run_service(&cfg, &mut |_| {}).is_err());
+    }
+
+    #[test]
+    fn zero_informed_agents_rejected() {
+        let mut cfg = tiny_cfg();
+        cfg.informed = Some(0);
+        assert!(run_service(&cfg, &mut |_| {}).is_err());
+    }
+}

@@ -163,6 +163,129 @@ fn thread_determinism_across_horizons() {
     }
 }
 
+/// Property: the batched path with `B ∈ {1, 2, 8}` produces per-sample ν
+/// trajectories **bit-identical** to the sequential one-sample engine, for
+/// every combine path and for any thread count — the safety net under the
+/// `serve/` streaming subsystem (`OnlineTrainer::step` and the session
+/// loop both ride `run_batch`).
+#[test]
+fn prop_batched_trajectories_match_sequential() {
+    let mut rng = Pcg64::new(0xC5_07);
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+    let (n, m) = (26, 9); // ring k=2 at N=26 → density 5/26 < 0.25 (sparse)
+    let (dict, g, _) = random_problem(n, m, &mut rng);
+    let a = metropolis_weights(&g);
+
+    for &batch in &[1usize, 2, 8] {
+        let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(m)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        // Check at several horizons so intermediate iterates are covered,
+        // not just the fixed point.
+        for &iters in &[1usize, 9, 40] {
+            for force_dense in [false, true] {
+                // Sequential references, one engine run per sample.
+                let seq: Vec<DiffusionEngine> = refs
+                    .iter()
+                    .map(|x| {
+                        let mut e = DiffusionEngine::new(&a, m, None).unwrap();
+                        if force_dense {
+                            e.set_combination_dense(&a).unwrap();
+                        }
+                        e.run(&dict, &task, x, DiffusionParams::new(0.3, iters)).unwrap();
+                        e
+                    })
+                    .collect();
+                for threads in [1usize, 4] {
+                    let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+                    if force_dense {
+                        eng.set_combination_dense(&a).unwrap();
+                    }
+                    eng.run_batch(
+                        &dict,
+                        &task,
+                        &refs,
+                        DiffusionParams::new(0.3, iters).with_threads(threads),
+                    )
+                    .unwrap();
+                    for (s, reference) in seq.iter().enumerate() {
+                        for k in 0..n {
+                            assert_eq!(
+                                eng.nu_sample(k, s),
+                                reference.nu(k),
+                                "B={batch}, iters={iters}, dense={force_dense}, \
+                                 threads={threads}, sample {s}, agent {k}"
+                            );
+                        }
+                        assert_eq!(
+                            eng.recover_y_sample(&dict, &task, s),
+                            reference.recover_y(&dict, &task),
+                            "B={batch}, iters={iters}, dense={force_dense}, \
+                             threads={threads}, sample {s}: recovered y"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The batched trainer step must leave the dictionary in exactly the state
+/// the historical per-sample-inference step produced: run the same stream
+/// through a batched trainer (B = 4) and a per-sample reference
+/// implementation, comparing dictionaries bit-for-bit.
+#[test]
+fn batched_trainer_step_matches_per_sample_reference() {
+    use ddl::learn::{OnlineTrainer, TrainerOptions};
+    use ddl::ops::prox::DictProx;
+
+    let (n, m) = (24, 8);
+    let mut rng = Pcg64::new(0xC5_08);
+    let dict0 = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+    let a = metropolis_weights(&g);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.3 };
+    let params = DiffusionParams::new(0.3, 40);
+    let mu_w = 0.05f32;
+    let xs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(m)).collect();
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+
+    // Batched trainer, two minibatches of 4.
+    let mut dict_batched = dict0.clone();
+    let mut trainer = OnlineTrainer::new(
+        &a,
+        m,
+        None,
+        TrainerOptions { infer: params, prox: DictProx::None },
+    )
+    .unwrap();
+    for chunk in refs.chunks(4) {
+        trainer.step(&mut dict_batched, &task, chunk, mu_w).unwrap();
+    }
+
+    // Reference: per-sample inference with a fresh engine per sample, then
+    // the minibatch-averaged Eq. 51 update (the pre-batching trainer).
+    let mut dict_ref = dict0.clone();
+    for chunk in refs.chunks(4) {
+        let mut batch: Vec<(Vec<Vec<f32>>, Vec<f32>)> = Vec::new();
+        for &x in chunk {
+            let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+            eng.run(&dict_ref, &task, x, params).unwrap();
+            let nus: Vec<Vec<f32>> = (0..n).map(|k| eng.nu(k).to_vec()).collect();
+            let y = eng.recover_y(&dict_ref, &task);
+            batch.push((nus, y));
+        }
+        let constraint = task.atom_constraint();
+        let scale = mu_w / chunk.len() as f32;
+        for k in 0..n {
+            for (nus, y) in &batch {
+                dict_ref.block_gradient_step(k, scale, &nus[k], y);
+            }
+            dict_ref.project_block(k, constraint);
+        }
+    }
+    assert_eq!(dict_batched.mat().as_slice(), dict_ref.mat().as_slice());
+}
+
 /// The engine built straight from a CSR (no dense materialization) matches
 /// the dense-constructed engine bit-for-bit on the same topology.
 #[test]
