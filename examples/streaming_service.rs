@@ -51,4 +51,38 @@ fn main() {
             std::process::exit(1);
         }
     }
+
+    // Pipelined vs serial at *saturation* (rate = 0 for both, so the
+    // serial session's virtual clock is pure measured compute and the
+    // comparison is apples-to-apples): the three-stage pipeline overlaps
+    // batch formation, diffusion inference (two batches in flight), and
+    // the Eq. 51 update on separate threads (`ddl serve --pipeline`).
+    let sat_cfg = ddl::config::experiment::ServeConfig { rate: 0.0, ..cfg.clone() };
+    let pipe_cfg = ddl::config::experiment::ServeConfig { pipeline: true, ..sat_cfg.clone() };
+    let serial = match ddl::serve::run_service(&sat_cfg, &mut |_| {}) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("streaming_service (saturated serial) failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    match ddl::serve::run_service(&pipe_cfg, &mut |s| println!("{s}")) {
+        Ok(pipe) => {
+            println!(
+                "\n== pipelined (depth {}, saturated) ==\n{}",
+                pipe.pipeline_depth,
+                pipe.summary(pipe_cfg.agents)
+            );
+            println!(
+                "\npipelined vs serial peak throughput: {:.1} vs {:.1} samples/s ({:.2}x)",
+                pipe.throughput_rps,
+                serial.throughput_rps,
+                pipe.throughput_rps / serial.throughput_rps.max(1e-12),
+            );
+        }
+        Err(e) => {
+            eprintln!("streaming_service (pipelined) failed: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -24,6 +24,18 @@
 //!
 //! A full service-loop session (`serve::run_service`, saturated arrivals)
 //! is also timed so queueing overhead shows up in the tracked numbers.
+//!
+//! **Pipelined serving** (PR 3): a second pair of full sessions compares
+//! the serial single-server loop against the three-stage concurrent
+//! pipeline (`--pipeline`, depth 2) at N = 100 on the ring, B = 8, t = 2 —
+//! identical per-batch arithmetic (the parity tests prove bit-equality
+//! against the reference executor), so the throughput ratio
+//! `serve_throughput_speedup_pipelined_vs_serial_n100_ring_b8_t2` isolates
+//! the overlap win: batch formation, inference, and the Eq. 51 update on
+//! separate threads, with consecutive inference sweeps overlapping at
+//! depth 2. The p99-latency ratio is tracked alongside it (direction-aware:
+//! lower is better).
+//!
 //! Pass `--fast` (or `BENCH_FAST=1`) for the CI smoke configuration.
 
 use ddl::bench::Bencher;
@@ -139,6 +151,60 @@ fn main() {
         );
         derived.push(("serve_session_throughput_rps_b8_t2".to_string(), report.throughput_rps));
         derived.push(("serve_session_p99_latency_ms_b8_t2".to_string(), report.latency_p99_ms));
+    }
+
+    // Pipelined vs serial full sessions: N = 100 ring (k = 2), B = 8,
+    // t = 2, saturated arrivals. Identical stream, dictionary, and
+    // per-batch arithmetic — only the execution schedule differs. Each
+    // session runs twice and the better throughput counts (single-shot
+    // session timing is the noisiest figure in this file).
+    {
+        let svc_samples = if fast { 48 } else { 192 };
+        let mk = |pipeline: bool, depth: usize| ServeConfig {
+            seed: 29,
+            agents: N,
+            dim: M,
+            topology: "ring".into(),
+            ring_k: 2,
+            batch: 8,
+            max_wait_us: 2_000,
+            samples: svc_samples,
+            rate: 0.0,
+            mu_w,
+            pipeline,
+            pipeline_depth: depth,
+            infer: InferenceConfig { mu: 0.4, iters, gamma: 0.08, delta: 0.2, threads: 2 },
+            ..ServeConfig::default()
+        };
+        let session = |cfg: &ServeConfig| {
+            let a = ddl::serve::run_service(cfg, &mut |_| {}).unwrap();
+            let b = ddl::serve::run_service(cfg, &mut |_| {}).unwrap();
+            if a.throughput_rps >= b.throughput_rps {
+                a
+            } else {
+                b
+            }
+        };
+        let serial = session(&mk(false, 0));
+        let pipe_d2 = session(&mk(true, 2));
+        let pipe_d1 = session(&mk(true, 1));
+        println!(
+            "pipeline sessions (ring N={N}, B=8, t=2): serial {:.1} rps, depth-1 {:.1} rps, \
+             depth-2 {:.1} rps",
+            serial.throughput_rps, pipe_d1.throughput_rps, pipe_d2.throughput_rps
+        );
+        derived.push((
+            "serve_throughput_speedup_pipelined_vs_serial_n100_ring_b8_t2".to_string(),
+            pipe_d2.throughput_rps / serial.throughput_rps.max(1e-12),
+        ));
+        derived.push((
+            "serve_throughput_speedup_pipelined_d1_vs_serial_n100_ring_b8_t2".to_string(),
+            pipe_d1.throughput_rps / serial.throughput_rps.max(1e-12),
+        ));
+        derived.push((
+            "serve_p99_latency_ratio_pipelined_vs_serial_n100_ring_b8_t2".to_string(),
+            pipe_d2.latency_p99_ms / serial.latency_p99_ms.max(1e-12),
+        ));
     }
 
     println!("\nderived figures:");

@@ -144,6 +144,14 @@ pub struct ServeConfig {
     /// Dictionary step size μ_w for the online update; `0` freezes the
     /// dictionary (inference-only serving).
     pub mu_w: f32,
+    /// Run the three-stage concurrent pipeline (`serve/pipeline.rs`):
+    /// batch formation, diffusion inference, and the Eq. 51 update overlap
+    /// on separate threads with a double-buffered dictionary.
+    pub pipeline: bool,
+    /// Batches in flight in the inference stage (pipeline mode only;
+    /// clamped to ≥ 1). Updates lag inference by exactly this depth —
+    /// the fixed swap schedule that keeps the pipeline bit-reproducible.
+    pub pipeline_depth: usize,
     /// Diffusion inference settings for each served batch.
     pub infer: InferenceConfig,
     /// Informed agents: `None` = all informed, `Some(k)` = only first k.
@@ -164,6 +172,8 @@ impl Default for ServeConfig {
             samples: 512,
             rate: 0.0,
             mu_w: 0.05,
+            pipeline: false,
+            pipeline_depth: 2,
             infer: InferenceConfig { mu: 0.4, iters: 120, gamma: 0.08, delta: 0.2, threads: 1 },
             informed: None,
         }
@@ -186,6 +196,8 @@ impl ServeConfig {
         c.samples = doc.usize_or("serve", "samples", c.samples);
         c.rate = doc.f32_or("serve", "rate", c.rate as f32) as f64;
         c.mu_w = doc.f32_or("serve", "mu_w", c.mu_w);
+        c.pipeline = doc.bool_or("serve", "pipeline", c.pipeline);
+        c.pipeline_depth = doc.usize_or("serve", "pipeline_depth", c.pipeline_depth).max(1);
         c.infer.mu = doc.f32_or("serve", "mu", c.infer.mu);
         c.infer.iters = doc.usize_or("serve", "iters", c.infer.iters);
         c.infer.gamma = doc.f32_or("serve", "gamma", c.infer.gamma);
@@ -367,6 +379,8 @@ mod tests {
         assert_eq!(c.rate, 0.0);
         assert!(c.informed.is_none());
         assert_eq!(c.infer.threads, 1);
+        assert!(!c.pipeline, "serial single-server loop stays the default");
+        assert_eq!(c.pipeline_depth, 2);
     }
 
     /// Round trip for every serving knob exposed in the `[serve]` TOML
@@ -377,8 +391,8 @@ mod tests {
         let doc = TomlDoc::parse(
             "[serve]\nseed = 99\nagents = 64\ndim = 36\ntopology = \"ring\"\nring_k = 3\n\
              edge_prob = 0.25\nbatch = 16\nmax_wait_us = 750\nsamples = 128\nrate = 2000.0\n\
-             mu_w = 0.01\nmu = 0.5\niters = 80\ngamma = 0.2\ndelta = 0.3\nthreads = 2\n\
-             informed = 4\n",
+             mu_w = 0.01\npipeline = true\npipeline_depth = 3\nmu = 0.5\niters = 80\n\
+             gamma = 0.2\ndelta = 0.3\nthreads = 2\ninformed = 4\n",
         )
         .unwrap();
         let c = ServeConfig::from_toml(&doc);
@@ -393,6 +407,8 @@ mod tests {
         assert_eq!(c.samples, 128);
         assert!((c.rate - 2000.0).abs() < 1e-3);
         assert!((c.mu_w - 0.01).abs() < 1e-7);
+        assert!(c.pipeline);
+        assert_eq!(c.pipeline_depth, 3);
         assert!((c.infer.mu - 0.5).abs() < 1e-7);
         assert_eq!(c.infer.iters, 80);
         assert!((c.infer.gamma - 0.2).abs() < 1e-7);

@@ -40,17 +40,27 @@
 //! strided dictionary-column walk across samples
 //! ([`DistributedDictionary::block_correlations_batched`]).
 //!
-//! Buffers (including per-worker threshold scratch) are sized once and
-//! reused; the per-iteration hot loop performs no heap allocation while the
-//! batch size is stable (changing `B` re-sizes `V`/`Ψ` once — a cold start;
-//! see EXPERIMENTS.md §Perf).
+//! Buffers (including per-worker threshold scratch) are grow-only and
+//! reused: the per-iteration hot loop performs no heap allocation, and a
+//! batch-size change re-shapes the active region of the already-allocated
+//! buffers (sized to the largest `B` seen) instead of re-allocating — so a
+//! stream that alternates full and final-partial batches pays only a
+//! re-zero per swap, never an allocation (see EXPERIMENTS.md §Perf /
+//! §Serving). Changing `B` is still a *cold start* for the iterates.
+//!
+//! Threaded runs either spawn scoped workers per call
+//! ([`crate::net::WorkerPool`]) or, when a long-lived
+//! [`crate::net::PersistentPool`] is installed via
+//! [`DiffusionEngine::set_pool`], dispatch to persistent threads — the
+//! serving pipeline installs one such pool per in-flight inference slot
+//! (a pool runs one SPMD region at a time; see `net/pool.rs`).
 
 use crate::error::{DdlError, Result};
 use crate::math::{blas, CsrMat, Mat};
 use crate::model::{DistributedDictionary, TaskSpec};
-use crate::net::pool::{chunk_range, SharedRows, WorkerPool};
+use crate::net::pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};
 use crate::ops::project::clip_linf;
-use std::sync::Barrier;
+use std::sync::{Arc, Barrier};
 
 /// Densest combination matrix the engine will store as CSR: below this fill
 /// fraction spmm beats the blocked gemm comfortably; above it, gemm's
@@ -115,27 +125,139 @@ impl Combine {
     }
 }
 
+/// Read-only view of a stacked dual iterate buffer `V ∈ R^{N×(B·M)}`:
+/// row `k` holds agent `k`'s `B` per-sample iterates back to back.
+///
+/// This is the engine's readout surface factored out of the engine itself,
+/// so the same per-sample arithmetic (primal recovery, consensus,
+/// disagreement) runs identically on the live engine state
+/// ([`DiffusionEngine::nu_view`]) and on a `V` clone shipped to another
+/// pipeline stage ([`NuView::to_owned_data`] → [`NuView::new`]) — the
+/// bitwise-parity backbone of the pipelined serving path.
+#[derive(Clone, Copy, Debug)]
+pub struct NuView<'a> {
+    data: &'a [f32],
+    n: usize,
+    m: usize,
+    b: usize,
+}
+
+impl<'a> NuView<'a> {
+    /// Wrap a flat `N × (B·M)` buffer.
+    pub fn new(data: &'a [f32], n: usize, m: usize, b: usize) -> Self {
+        debug_assert_eq!(data.len(), n * b * m);
+        NuView { data, n, m, b }
+    }
+
+    /// Number of agents `N`.
+    pub fn agents(&self) -> usize {
+        self.n
+    }
+
+    /// Data dimension `M`.
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Batch size `B`.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Agent `k`'s dual estimate for sample `s`.
+    pub fn nu(&self, k: usize, s: usize) -> &'a [f32] {
+        debug_assert!(k < self.n && s < self.b);
+        let data: &'a [f32] = self.data;
+        &data[k * self.b * self.m + s * self.m..][..self.m]
+    }
+
+    /// Copy the underlying buffer (to ship `V` to another pipeline stage).
+    pub fn to_owned_data(&self) -> Vec<f32> {
+        self.data.to_vec()
+    }
+
+    /// Network-average dual estimate for sample `s`, written into `out`
+    /// (length `M`).
+    pub fn consensus_into(&self, s: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.m);
+        out.fill(0.0);
+        for k in 0..self.n {
+            crate::math::vector::axpy(1.0, self.nu(k, s), out);
+        }
+        crate::math::vector::scale(1.0 / self.n as f32, out);
+    }
+
+    /// Maximum pairwise disagreement `max_k ‖ν_k − ν̄‖` for sample `s`;
+    /// `mean` is an `M`-length scratch buffer (overwritten with the
+    /// consensus estimate).
+    pub fn disagreement_into(&self, s: usize, mean: &mut [f32]) -> f32 {
+        self.consensus_into(s, mean);
+        (0..self.n)
+            .map(|k| crate::math::vector::dist_sq(self.nu(k, s), mean).sqrt())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// Primal recovery (Eq. 37 / Table II) from a dual view: `y_q =
+/// thr_γ(w_qᵀ ν_k)/δ` for each agent's own atoms, using each agent's
+/// **local** dual iterate for sample `s`. `y` and `scratch` are `K`-length
+/// buffers. Shared verbatim by [`DiffusionEngine::recover_y_sample_into`]
+/// and the pipelined updater stage, so both produce bit-identical
+/// coefficients.
+pub fn recover_y_into(
+    dict: &DistributedDictionary,
+    task: &TaskSpec,
+    nu: &NuView<'_>,
+    s: usize,
+    y: &mut [f32],
+    scratch: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), dict.k());
+    debug_assert_eq!(scratch.len(), dict.k());
+    let inv_delta = 1.0 / task.delta();
+    for k in 0..nu.agents() {
+        dict.block_correlations(k, nu.nu(k, s), scratch);
+        let (start, len) = dict.block(k);
+        for q in start..start + len {
+            y[q] = task.threshold(scratch[q]) * inv_delta;
+        }
+    }
+}
+
 /// Reusable diffusion inference engine for a fixed network size.
 pub struct DiffusionEngine {
     /// Stacked dual iterates `V` (`N × (B·M)`): row `k` holds agent `k`'s
     /// `B` per-sample iterates back to back (`B = 1` for [`Self::run`]).
-    v: Mat,
-    /// Adapt outputs `Ψ` (`N × (B·M)`).
-    psi: Mat,
+    /// Backed by a flat grow-only buffer sized for the *largest* batch seen
+    /// (`batch_cap`), of which the leading `N·B·M` elements are active at
+    /// row stride `B·M` — so alternating full and final-partial batches
+    /// re-shape without re-allocating (see [`Self::reserve_batch`]).
+    v: Vec<f32>,
+    /// Adapt outputs `Ψ`, same layout and capacity policy as `v`.
+    psi: Vec<f32>,
     /// Combine dispatch (uniform / CSR spmm / dense gemm).
     combine: Combine,
     /// Scratch: per-atom per-sample thresholded correlations (`K·B`,
-    /// layout `[q·B + s]`), serial path.
+    /// layout `[q·B + s]`), serial path. Grow-only; sliced to the active
+    /// `K·B` prefix per run.
     thr: Vec<f32>,
-    /// Per-worker threshold scratch for the threaded path; sized once and
+    /// Per-worker threshold scratch for the threaded path; grow-only and
     /// reused across `run` calls.
     worker_thr: Vec<Vec<f32>>,
     /// Informed-agent mask θ (`N`), entries 1/|N_I| or 0 (Eq. 29).
     theta: Vec<f32>,
+    /// Optional long-lived worker pool; when installed, threaded runs
+    /// dispatch to it instead of spawning scoped threads per call
+    /// (identical results — see `net/pool.rs`).
+    pool: Option<Arc<PersistentPool>>,
     n: usize,
     m: usize,
-    /// Current batch size `B` (`V`/`Ψ` hold `batch · m` columns).
+    /// Current batch size `B` (`V`/`Ψ` active regions hold `batch · m`
+    /// columns per row).
     batch: usize,
+    /// Largest batch size seen — the allocation high-water mark of `v` /
+    /// `psi`.
+    batch_cap: usize,
 }
 
 impl DiffusionEngine {
@@ -149,15 +271,17 @@ impl DiffusionEngine {
             return Err(DdlError::Shape("combination matrix must be square".into()));
         }
         Ok(DiffusionEngine {
-            v: Mat::zeros(n, m),
-            psi: Mat::zeros(n, m),
+            v: vec![0.0; n * m],
+            psi: vec![0.0; n * m],
             combine: Combine::build(a),
             thr: Vec::new(),
             worker_thr: Vec::new(),
             theta: build_theta(n, informed)?,
+            pool: None,
             n,
             m,
             batch: 1,
+            batch_cap: 1,
         })
     }
 
@@ -170,15 +294,17 @@ impl DiffusionEngine {
             return Err(DdlError::Shape("combination matrix must be square".into()));
         }
         Ok(DiffusionEngine {
-            v: Mat::zeros(n, m),
-            psi: Mat::zeros(n, m),
+            v: vec![0.0; n * m],
+            psi: vec![0.0; n * m],
             combine: Combine::Sparse(at),
             thr: Vec::new(),
             worker_thr: Vec::new(),
             theta: build_theta(n, informed)?,
+            pool: None,
             n,
             m,
             batch: 1,
+            batch_cap: 1,
         })
     }
 
@@ -210,31 +336,64 @@ impl DiffusionEngine {
         Ok(())
     }
 
+    /// Install a long-lived worker pool: threaded runs dispatch their SPMD
+    /// regions to it instead of spawning scoped threads per call. The
+    /// effective thread count is `min(params.threads, pool.threads(), N)`;
+    /// results are bit-identical to the scoped path at the same count. The
+    /// `Arc` handle is cheap to clone and shareable across pipeline stages.
+    pub fn set_pool(&mut self, pool: Arc<PersistentPool>) {
+        self.pool = Some(pool);
+    }
+
+    /// Remove the installed worker pool (back to scoped spawning).
+    pub fn clear_pool(&mut self) {
+        self.pool = None;
+    }
+
     /// Pre-size the threshold scratch for a dictionary with `atoms` total
     /// atoms, so even the first `run` call allocates nothing. `run` calls
     /// this itself (a no-op once sized); streaming callers may invoke it
     /// eagerly at setup time. Sizing is for the engine's *current* batch
     /// size — call [`Self::reserve_batch`] first when pre-sizing for
-    /// batched runs.
+    /// batched runs. Grow-only: shrinking the batch slices the existing
+    /// buffer instead of re-allocating.
     pub fn reserve_atoms(&mut self, atoms: usize) {
         let want = atoms * self.batch;
-        if self.thr.len() != want {
+        if self.thr.len() < want {
             self.thr.resize(want, 0.0);
         }
     }
 
-    /// Re-shape `V`/`Ψ` for a batch of `b` samples (`b·M` columns). A no-op
-    /// when the batch size is unchanged; otherwise the iterates are
-    /// re-allocated zeroed (a cold start — per-sample state cannot survive
-    /// a batch-shape change). Streaming callers that alternate between a
-    /// full and a partial final batch pay one re-allocation per change.
+    /// Re-shape `V`/`Ψ` for a batch of `b` samples (`b·M` active columns).
+    /// A no-op when the batch size is unchanged; otherwise the active
+    /// region is re-zeroed (a cold start — per-sample state cannot survive
+    /// a batch-shape change). The backing buffers are sized to the largest
+    /// batch ever seen and only *grow*: streaming callers that alternate
+    /// between a full and a partial final batch re-shape for free instead
+    /// of re-allocating `2·N·B·M` floats per size change.
     pub fn reserve_batch(&mut self, b: usize) {
         let b = b.max(1);
-        if self.batch != b {
-            self.v = Mat::zeros(self.n, b * self.m);
-            self.psi = Mat::zeros(self.n, b * self.m);
-            self.batch = b;
+        if self.batch == b {
+            return;
         }
+        self.batch = b;
+        if b > self.batch_cap {
+            self.batch_cap = b;
+            let cap = self.n * b * self.m;
+            self.v.resize(cap, 0.0);
+            self.psi.resize(cap, 0.0);
+        }
+        // Cold start: the row stride changed, so the active region holds
+        // stale bytes from the previous shape.
+        let active = self.n * b * self.m;
+        self.v[..active].fill(0.0);
+        self.psi[..active].fill(0.0);
+    }
+
+    /// Allocation high-water mark: the largest batch size the iterate
+    /// buffers are currently sized for.
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_cap
     }
 
     fn ensure_scratch(&mut self, threads: usize, atoms: usize) {
@@ -245,17 +404,24 @@ impl DiffusionEngine {
                 self.worker_thr.resize_with(threads, Vec::new);
             }
             for t in &mut self.worker_thr[..threads] {
-                if t.len() != want {
+                if t.len() < want {
                     t.resize(want, 0.0);
                 }
             }
         }
     }
 
+    /// Number of active elements in `V`/`Ψ` (`N·B·M`).
+    #[inline]
+    fn active_len(&self) -> usize {
+        self.n * self.batch * self.m
+    }
+
     /// Reset all dual iterates to zero (cold start for a new sample or
     /// minibatch).
     pub fn reset(&mut self) {
-        self.v.as_mut_slice().fill(0.0);
+        let active = self.active_len();
+        self.v[..active].fill(0.0);
     }
 
     /// Warm start: every *informed* agent initializes its dual iterate at
@@ -273,9 +439,10 @@ impl DiffusionEngine {
     pub fn reset_warm_batch(&mut self, xs: &[&[f32]], scale: f32) {
         self.reserve_batch(xs.len());
         let m = self.m;
+        let bm = self.batch * m;
         for k in 0..self.n {
             let informed = self.theta[k] > 0.0;
-            let row = self.v.row_mut(k);
+            let row = &mut self.v[k * bm..(k + 1) * bm];
             if informed {
                 for (s, &x) in xs.iter().enumerate() {
                     debug_assert_eq!(x.len(), m);
@@ -343,7 +510,10 @@ impl DiffusionEngine {
             return Err(DdlError::Shape("dictionary row dimension mismatch".into()));
         }
         self.reserve_batch(xs.len());
-        let threads = params.threads.max(1).min(self.n.max(1));
+        let mut threads = params.threads.max(1).min(self.n.max(1));
+        if let Some(pool) = &self.pool {
+            threads = threads.min(pool.threads());
+        }
         self.ensure_scratch(threads, dict.k());
         if threads == 1 {
             self.run_serial(dict, task, xs, params)
@@ -360,51 +530,50 @@ impl DiffusionEngine {
         xs: &[&[f32]],
         params: DiffusionParams,
     ) {
-        let cf_over_n = task.conj_grad_scale() / self.n as f32;
+        let n = self.n;
+        let cf_over_n = task.conj_grad_scale() / n as f32;
         let inv_delta = 1.0 / task.delta();
         let mu = params.mu;
         let clip = task.dual_clip();
         let bm = self.batch * self.m;
+        let active = n * bm;
+        let thr_len = dict.k() * self.batch;
+        // Disjoint field borrows for the V-shared / Ψ-mut / thr-mut adapt
+        // call (the buffers are grow-only, so only the leading prefixes are
+        // active).
+        let DiffusionEngine { v, psi, thr, theta, combine, .. } = self;
+        let v = &mut v[..active];
+        let psi = &mut psi[..active];
+        let thr = &mut thr[..thr_len];
 
         for _ in 0..params.iters {
             // --- adapt (Eq. 31a): ψ_k = ν_k − μ ∇J_k(ν_k), per sample ---
-            for k in 0..self.n {
+            for k in 0..n {
                 adapt_row_batch(
                     dict,
                     task,
                     xs,
-                    self.theta[k],
+                    theta[k],
                     k,
-                    self.v.row(k),
-                    self.psi.row_mut(k),
-                    &mut self.thr,
+                    &v[k * bm..(k + 1) * bm],
+                    &mut psi[k * bm..(k + 1) * bm],
+                    thr,
                     mu,
                     cf_over_n,
                     inv_delta,
                 );
             }
             // --- combine (Eq. 31b): V ← Aᵀ Ψ, all samples at once ---
-            match &self.combine {
-                Combine::Uniform => {
-                    uniform_combine(self.v.as_mut_slice(), self.psi.as_slice(), self.n, bm)
+            match combine {
+                Combine::Uniform => uniform_combine(v, psi, n, bm),
+                Combine::Sparse(at) => at.spmm_rows(0..n, psi, bm, v),
+                Combine::Dense(at) => {
+                    blas::gemm(n, bm, n, 1.0, at.as_slice(), psi, 0.0, v)
                 }
-                Combine::Sparse(at) => {
-                    at.spmm_rows(0..self.n, self.psi.as_slice(), bm, self.v.as_mut_slice())
-                }
-                Combine::Dense(at) => blas::gemm(
-                    self.n,
-                    bm,
-                    self.n,
-                    1.0,
-                    at.as_slice(),
-                    self.psi.as_slice(),
-                    0.0,
-                    self.v.as_mut_slice(),
-                ),
             }
             // --- projection onto V_f (Eq. 35b), Huber only ---
             if let Some(bound) = clip {
-                clip_linf(self.v.as_mut_slice(), bound);
+                clip_linf(v, bound);
             }
         }
     }
@@ -426,6 +595,8 @@ impl DiffusionEngine {
     ) {
         let n = self.n;
         let bm = self.batch * self.m;
+        let active = n * bm;
+        let thr_len = dict.k() * self.batch;
         let mu = params.mu;
         let iters = params.iters;
         let cf_over_n = task.conj_grad_scale() / n as f32;
@@ -433,14 +604,16 @@ impl DiffusionEngine {
         let clip = task.dual_clip();
 
         // Disjoint field borrows, materialized before the SPMD closure.
+        let pool = self.pool.clone();
         let DiffusionEngine { v, psi, combine, theta, worker_thr, .. } = self;
-        let v_sh = SharedRows::new(v.as_mut_slice());
-        let psi_sh = SharedRows::new(psi.as_mut_slice());
+        let v_sh = SharedRows::new(&mut v[..active]);
+        let psi_sh = SharedRows::new(&mut psi[..active]);
         let combine: &Combine = combine;
         let theta: &[f32] = theta.as_slice();
         let barrier = Barrier::new(threads);
 
-        WorkerPool::new(threads).spmd_with(&mut worker_thr[..threads], |w, thr| {
+        let body = |w: usize, thr_buf: &mut Vec<f32>| {
+            let thr = &mut thr_buf[..thr_len];
             let rows = chunk_range(n, threads, w);
             for _ in 0..iters {
                 // Adapt phase: this worker writes only its own Ψ rows and
@@ -502,19 +675,30 @@ impl DiffusionEngine {
                 // V complete and Ψ free for the next adapt phase.
                 barrier.wait();
             }
-        });
+        };
+        match &pool {
+            Some(p) => p.spmd_with_active(threads, &mut worker_thr[..threads], body),
+            None => WorkerPool::new(threads).spmd_with(&mut worker_thr[..threads], body),
+        }
+    }
+
+    /// Read-only view of the active stacked dual iterates — the engine's
+    /// whole readout surface as a value that can be cloned out and shipped
+    /// to another pipeline stage ([`NuView`]).
+    pub fn nu_view(&self) -> NuView<'_> {
+        NuView::new(&self.v[..self.active_len()], self.n, self.m, self.batch)
     }
 
     /// Agent `k`'s current dual estimate `ν_{k,i}` (first sample of a
     /// batched run).
     pub fn nu(&self, k: usize) -> &[f32] {
-        &self.v.row(k)[..self.m]
+        self.nu_sample(k, 0)
     }
 
     /// Agent `k`'s dual estimate for sample `s` of the current minibatch.
     pub fn nu_sample(&self, k: usize, s: usize) -> &[f32] {
         debug_assert!(s < self.batch);
-        &self.v.row(k)[s * self.m..(s + 1) * self.m]
+        &self.v[k * self.batch * self.m + s * self.m..][..self.m]
     }
 
     /// Current batch size `B`.
@@ -539,12 +723,7 @@ impl DiffusionEngine {
 
     /// Per-sample [`Self::consensus_nu_into`] for batched runs.
     pub fn consensus_nu_sample_into(&self, s: usize, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), self.m);
-        out.fill(0.0);
-        for k in 0..self.n {
-            crate::math::vector::axpy(1.0, self.nu_sample(k, s), out);
-        }
-        crate::math::vector::scale(1.0 / self.n as f32, out);
+        self.nu_view().consensus_into(s, out);
     }
 
     /// Maximum pairwise disagreement `max_k ‖ν_k − ν̄‖` — a consensus
@@ -563,10 +742,7 @@ impl DiffusionEngine {
     /// caller-provided `M`-length scratch buffer (overwritten with the
     /// consensus estimate).
     pub fn disagreement_sample_into(&self, s: usize, mean: &mut [f32]) -> f32 {
-        self.consensus_nu_sample_into(s, mean);
-        (0..self.n)
-            .map(|k| crate::math::vector::dist_sq(self.nu_sample(k, s), mean).sqrt())
-            .fold(0.0f32, f32::max)
+        self.nu_view().disagreement_into(s, mean)
     }
 
     /// Primal recovery (Eq. 37 / Table II): `y_q = thr_γ(w_qᵀ ν_k)/δ` for
@@ -591,6 +767,7 @@ impl DiffusionEngine {
 
     /// Allocation-free per-sample primal recovery: `y` and `scratch` are
     /// caller-provided `K`-length buffers (streaming loops reuse them).
+    /// Delegates to [`recover_y_into`] over the live [`Self::nu_view`].
     pub fn recover_y_sample_into(
         &self,
         dict: &DistributedDictionary,
@@ -599,16 +776,7 @@ impl DiffusionEngine {
         y: &mut [f32],
         scratch: &mut [f32],
     ) {
-        debug_assert_eq!(y.len(), dict.k());
-        debug_assert_eq!(scratch.len(), dict.k());
-        let inv_delta = 1.0 / task.delta();
-        for k in 0..self.n {
-            dict.block_correlations(k, self.nu_sample(k, s), scratch);
-            let (start, len) = dict.block(k);
-            for q in start..start + len {
-                y[q] = task.threshold(scratch[q]) * inv_delta;
-            }
-        }
+        recover_y_into(dict, task, &self.nu_view(), s, y, scratch);
     }
 
     /// Whether the fully-connected fast path is active.
@@ -1115,6 +1283,114 @@ mod tests {
         assert_eq!(eng.batch(), 1);
         for k in 0..6 {
             assert_eq!(eng.nu(k), reference.nu(k));
+        }
+    }
+
+    /// Alternating full and partial batches must reuse the grown buffers
+    /// (capacity pinned at the high-water mark) while every run stays
+    /// bit-identical to a fresh engine of that batch size.
+    #[test]
+    fn alternating_batch_sizes_reuse_capacity_bitwise() {
+        let (n, m) = (24, 10);
+        let mut rng = Pcg64::new(0xA17B);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, 25);
+        let xs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(m)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+
+        let mut eng = DiffusionEngine::new(&a, m, None).unwrap();
+        for &b in &[8usize, 3, 8, 1, 5, 8] {
+            eng.reserve_batch(b);
+            eng.reset();
+            eng.run_batch(&dict, &task, &refs[..b], params).unwrap();
+            assert_eq!(eng.batch(), b);
+            assert_eq!(eng.batch_capacity(), 8, "capacity must stay at the high-water mark");
+            let mut fresh = DiffusionEngine::new(&a, m, None).unwrap();
+            fresh.run_batch(&dict, &task, &refs[..b], params).unwrap();
+            for k in 0..n {
+                for s in 0..b {
+                    assert_eq!(eng.nu_sample(k, s), fresh.nu_sample(k, s), "B={b} k={k} s={s}");
+                }
+            }
+        }
+    }
+
+    /// A persistent pool must reproduce the scoped-thread path bit-for-bit
+    /// across reused regions and batch-size changes.
+    #[test]
+    fn persistent_pool_matches_scoped_threads_bitwise() {
+        use crate::net::PersistentPool;
+        let (n, m) = (26, 9);
+        let mut rng = Pcg64::new(0xA17C);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, 31).with_threads(3);
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(m)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+
+        let mut pooled = DiffusionEngine::new(&a, m, None).unwrap();
+        pooled.set_pool(Arc::new(PersistentPool::new(3)));
+        let mut scoped = DiffusionEngine::new(&a, m, None).unwrap();
+        for &b in &[4usize, 1, 4] {
+            pooled.reset();
+            scoped.reset();
+            pooled.run_batch(&dict, &task, &refs[..b], params).unwrap();
+            scoped.run_batch(&dict, &task, &refs[..b], params).unwrap();
+            for k in 0..n {
+                for s in 0..b {
+                    assert_eq!(pooled.nu_sample(k, s), scoped.nu_sample(k, s), "B={b} k={k} s={s}");
+                }
+            }
+        }
+        // A pool smaller than the requested thread count clamps but stays
+        // bit-identical (thread count never changes trajectories).
+        let mut small = DiffusionEngine::new(&a, m, None).unwrap();
+        small.set_pool(Arc::new(PersistentPool::new(2)));
+        small.run_batch(&dict, &task, &refs, params).unwrap();
+        scoped.reserve_batch(refs.len());
+        scoped.reset();
+        scoped.run_batch(&dict, &task, &refs, params).unwrap();
+        for k in 0..n {
+            assert_eq!(small.nu_sample(k, 2), scoped.nu_sample(k, 2));
+        }
+    }
+
+    /// NuView readouts must agree exactly with the engine's own accessors,
+    /// both live and after shipping the buffer to an owned clone.
+    #[test]
+    fn nu_view_matches_engine_readouts() {
+        let (dict, a, x) = setup(8, 12, 77);
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+        let mut eng = DiffusionEngine::new(&a, 12, None).unwrap();
+        let x2: Vec<f32> = x.iter().map(|v| v * 0.7).collect();
+        eng.run_batch(&dict, &task, &[&x, &x2], DiffusionParams::new(0.25, 40)).unwrap();
+
+        let shipped = eng.nu_view().to_owned_data();
+        let view = NuView::new(&shipped, 8, 12, 2);
+        assert_eq!(view.agents(), 8);
+        assert_eq!(view.batch(), 2);
+        let mut y_view = vec![0.0f32; dict.k()];
+        let mut scratch = vec![0.0f32; dict.k()];
+        let mut mean_a = vec![0.0f32; 12];
+        let mut mean_b = vec![0.0f32; 12];
+        for s in 0..2 {
+            for k in 0..8 {
+                assert_eq!(view.nu(k, s), eng.nu_sample(k, s));
+            }
+            recover_y_into(&dict, &task, &view, s, &mut y_view, &mut scratch);
+            assert_eq!(y_view, eng.recover_y_sample(&dict, &task, s));
+            assert_eq!(
+                view.disagreement_into(s, &mut mean_a),
+                eng.disagreement_sample_into(s, &mut mean_b)
+            );
+            assert_eq!(mean_a, mean_b);
         }
     }
 

@@ -14,5 +14,7 @@ pub mod diffusion;
 pub mod exact;
 
 pub use cost::{dual_cost_sum, local_cost, scalar_consensus, scalar_consensus_threaded};
-pub use diffusion::{DiffusionEngine, DiffusionParams, SPARSE_DENSITY_MAX};
+pub use diffusion::{
+    recover_y_into, DiffusionEngine, DiffusionParams, NuView, SPARSE_DENSITY_MAX,
+};
 pub use exact::{exact_dual, ExactSolution};

@@ -8,5 +8,7 @@ pub mod trainer;
 pub mod update;
 
 pub use schedule::StepSchedule;
-pub use trainer::{OnlineTrainer, TrainerOptions, TrainStats};
+pub use trainer::{
+    apply_eq51_update, recover_and_stats, OnlineTrainer, TrainerOptions, TrainStats,
+};
 pub use update::dictionary_update;

@@ -11,7 +11,7 @@
 //! The trainer is generic over the task family.
 
 use crate::error::Result;
-use crate::infer::{DiffusionEngine, DiffusionParams};
+use crate::infer::{recover_y_into, DiffusionEngine, DiffusionParams, NuView};
 use crate::model::{DistributedDictionary, TaskSpec};
 use crate::ops::prox::DictProx;
 
@@ -82,6 +82,11 @@ impl OnlineTrainer {
     /// the Eq. 51 update with gradients averaged over the batch; returns
     /// statistics. Numerically identical to the historical per-sample loop
     /// (each sample cold-starts and never interacts with its batch mates).
+    ///
+    /// Implemented as the composition of the two stage functions the
+    /// pipelined serving path runs on separate threads —
+    /// [`recover_and_stats`] and [`apply_eq51_update`] — so the serial and
+    /// pipelined schedules share every arithmetic operation bit-for-bit.
     pub fn step(
         &mut self,
         dict: &mut DistributedDictionary,
@@ -89,9 +94,8 @@ impl OnlineTrainer {
         samples: &[&[f32]],
         mu_w: f32,
     ) -> Result<TrainStats> {
-        let mut stats = TrainStats::default();
         if samples.is_empty() {
-            return Ok(stats);
+            return Ok(TrainStats::default());
         }
         // Shape the engine for this minibatch, then size the scratch so
         // `run_batch` never allocates inside the loop (EXPERIMENTS.md
@@ -100,56 +104,108 @@ impl OnlineTrainer {
         self.engine.reserve_atoms(dict.k());
         self.engine.reset();
         self.engine.run_batch(dict, task, samples, self.opts.infer)?;
+        let view = self.engine.nu_view();
+        let stats = recover_and_stats(
+            dict,
+            task,
+            samples,
+            &view,
+            &mut self.ys,
+            &mut self.corr,
+            &mut self.mean,
+        )?;
+        apply_eq51_update(dict, task, self.opts.prox, mu_w, &self.ys, &view);
+        Ok(stats)
+    }
+}
 
-        let b = samples.len();
-        let kk = dict.k();
-        // Reused flat buffers: `ys` holds sample s's coefficients at
-        // `[s·K..(s+1)·K]`; `corr`/`mean` are recovery/stats scratch.
-        self.ys.resize(b * kk, 0.0);
-        self.corr.resize(kk, 0.0);
-        self.mean.resize(dict.m(), 0.0);
-        for (s, &x) in samples.iter().enumerate() {
-            let y = &mut self.ys[s * kk..(s + 1) * kk];
-            self.engine.recover_y_sample_into(dict, task, s, y, &mut self.corr);
-            // Stats on the consensus estimate.
-            let wy = dict.mat().matvec(y)?;
-            let resid = crate::math::vector::sub(x, &wy);
-            stats.mean_loss += task.f_loss(&resid) as f64;
-            stats.mean_sparsity +=
-                y.iter().filter(|v| v.abs() > 1e-12).count() as f64 / y.len() as f64;
-            stats.mean_disagreement +=
-                self.engine.disagreement_sample_into(s, &mut self.mean) as f64;
+/// Stage-3a of a minibatch step: per-sample primal recovery plus the
+/// rolling statistics, reading the dual iterates through a [`NuView`] (live
+/// engine state or a shipped clone — identical results either way).
+///
+/// `ys` receives sample `s`'s coefficients at `[s·K..(s+1)·K]`; `corr` and
+/// `mean` are `K`- / `M`-length scratch buffers, resized (grow or shrink)
+/// as needed. All buffers are caller-owned so streaming loops allocate
+/// nothing per batch.
+#[allow(clippy::too_many_arguments)]
+pub fn recover_and_stats(
+    dict: &DistributedDictionary,
+    task: &TaskSpec,
+    samples: &[&[f32]],
+    nu: &NuView<'_>,
+    ys: &mut Vec<f32>,
+    corr: &mut Vec<f32>,
+    mean: &mut Vec<f32>,
+) -> Result<TrainStats> {
+    let mut stats = TrainStats::default();
+    let b = samples.len();
+    if b == 0 {
+        return Ok(stats);
+    }
+    debug_assert_eq!(nu.batch(), b);
+    let kk = dict.k();
+    ys.resize(b * kk, 0.0);
+    corr.resize(kk, 0.0);
+    mean.resize(dict.m(), 0.0);
+    for (s, &x) in samples.iter().enumerate() {
+        let y = &mut ys[s * kk..(s + 1) * kk];
+        recover_y_into(dict, task, nu, s, y, corr);
+        // Stats on the consensus estimate.
+        let wy = dict.mat().matvec(y)?;
+        let resid = crate::math::vector::sub(x, &wy);
+        stats.mean_loss += task.f_loss(&resid) as f64;
+        stats.mean_sparsity +=
+            y.iter().filter(|v| v.abs() > 1e-12).count() as f64 / y.len() as f64;
+        stats.mean_disagreement += nu.disagreement_into(s, mean) as f64;
+    }
+    stats.samples = b;
+    stats.mean_loss /= b as f64;
+    stats.mean_sparsity /= b as f64;
+    stats.mean_disagreement /= b as f64;
+    Ok(stats)
+}
+
+/// Stage-3b of a minibatch step: the Eq. 51 dictionary update with
+/// per-agent local dual estimates (read through `nu`), gradients averaged
+/// over the batch, optional `prox`, and the constraint projection.
+///
+/// Send-safe by construction — it writes into a **caller-owned** dictionary
+/// buffer and borrows nothing from the engine, so the pipelined session
+/// runs it on a dedicated updater thread against the write side of a
+/// [`crate::model::DictDoubleBuffer`] while the next batch's inference
+/// reads the published snapshot.
+pub fn apply_eq51_update(
+    dict: &mut DistributedDictionary,
+    task: &TaskSpec,
+    prox: DictProx,
+    mu_w: f32,
+    ys: &[f32],
+    nu: &NuView<'_>,
+) {
+    let b = nu.batch();
+    let kk = dict.k();
+    debug_assert_eq!(ys.len(), b * kk);
+    let constraint = task.atom_constraint();
+    let scale = mu_w / b as f32;
+    for k in 0..dict.agents() {
+        for s in 0..b {
+            let y = &ys[s * kk..(s + 1) * kk];
+            dict.block_gradient_step(k, scale, nu.nu(k, s), y);
         }
-        stats.samples = samples.len();
-        stats.mean_loss /= b as f64;
-        stats.mean_sparsity /= b as f64;
-        stats.mean_disagreement /= b as f64;
-
-        // Eq. 51 with per-agent local dual estimates (read straight from
-        // the engine's stacked V), averaged over the batch.
-        let constraint = task.atom_constraint();
-        let scale = mu_w / b as f32;
-        for k in 0..dict.agents() {
-            for s in 0..b {
-                let y = &self.ys[s * kk..(s + 1) * kk];
-                dict.block_gradient_step(k, scale, self.engine.nu_sample(k, s), y);
-            }
-            if let DictProx::L1(_) = self.opts.prox {
-                let (start, len) = dict.block(k);
-                let m = dict.m();
-                let kk = dict.k();
-                let w = dict.mat_mut().as_mut_slice();
-                for q in start..start + len {
-                    for r in 0..m {
-                        let mut cell = [w[r * kk + q]];
-                        self.opts.prox.apply(&mut cell, mu_w);
-                        w[r * kk + q] = cell[0];
-                    }
+        if let DictProx::L1(_) = prox {
+            let (start, len) = dict.block(k);
+            let m = dict.m();
+            let kk = dict.k();
+            let w = dict.mat_mut().as_mut_slice();
+            for q in start..start + len {
+                for r in 0..m {
+                    let mut cell = [w[r * kk + q]];
+                    prox.apply(&mut cell, mu_w);
+                    w[r * kk + q] = cell[0];
                 }
             }
-            dict.project_block(k, constraint);
         }
-        Ok(stats)
+        dict.project_block(k, constraint);
     }
 }
 
@@ -208,6 +264,54 @@ mod tests {
             last_losses < 0.7 * first_losses,
             "loss did not improve: first {first_losses}, last {last_losses}"
         );
+    }
+
+    /// The two stage functions applied to a *shipped* `V` clone (the
+    /// pipelined updater's input) must reproduce `step` bit-for-bit —
+    /// dictionary, stats, and coefficients.
+    #[test]
+    fn split_stages_on_shipped_v_match_step_bitwise() {
+        let (m, n) = (10, 8);
+        let mut rng = Pcg64::new(0x5711);
+        let dict0 =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.4 };
+        let opts = TrainerOptions {
+            infer: DiffusionParams::new(0.3, 30),
+            prox: DictProx::L1(0.01), // exercise the prox branch too
+        };
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(m)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mu_w = 0.05f32;
+
+        let mut dict_step = dict0.clone();
+        let mut tr = OnlineTrainer::new(&a, m, None, opts).unwrap();
+        let stats_step = tr.step(&mut dict_step, &task, &refs, mu_w).unwrap();
+
+        // Pipeline shape: inference-only, ship V, then stage 3 elsewhere.
+        let mut dict_pipe = dict0.clone();
+        let mut eng = crate::infer::DiffusionEngine::new(&a, m, None).unwrap();
+        eng.run_batch(&dict_pipe, &task, &refs, opts.infer).unwrap();
+        let shipped = eng.nu_view().to_owned_data();
+        drop(eng); // the updater stage has no engine access
+        let view = crate::infer::NuView::new(&shipped, n, m, refs.len());
+        let (mut ys, mut corr, mut mean) = (Vec::new(), Vec::new(), Vec::new());
+        let stats_pipe = recover_and_stats(
+            &dict_pipe, &task, &refs, &view, &mut ys, &mut corr, &mut mean,
+        )
+        .unwrap();
+        apply_eq51_update(&mut dict_pipe, &task, opts.prox, mu_w, &ys, &view);
+
+        assert_eq!(dict_step.mat().as_slice(), dict_pipe.mat().as_slice());
+        assert_eq!(stats_step.mean_loss.to_bits(), stats_pipe.mean_loss.to_bits());
+        assert_eq!(stats_step.mean_sparsity.to_bits(), stats_pipe.mean_sparsity.to_bits());
+        assert_eq!(
+            stats_step.mean_disagreement.to_bits(),
+            stats_pipe.mean_disagreement.to_bits()
+        );
+        assert_eq!(stats_step.samples, stats_pipe.samples);
     }
 
     #[test]

@@ -59,6 +59,10 @@ COMMANDS:
   serve       streaming batched inference service     [--config f] [--batch b]
               [--max-wait-us t] [--samples n] [--rate r] [--agents n]
               [--topology ring|grid|er|full] [--mu-w x] [--no-adapt]
+              [--pipeline | --no-pipeline] [--pipeline-depth d]
+              (three-stage concurrent pipeline: batch formation | diffusion
+              inference | Eq. 51 update overlap on separate threads;
+              bit-identical schedule; --no-pipeline overrides the TOML)
   bench-gate  compare derived speedups in --current json against --baseline
               json; fail below --min-frac (default 0.5) of the baseline
 
@@ -203,6 +207,13 @@ fn cmd_serve(args: &Args) -> i32 {
         cfg.samples = args.usize_or("samples", cfg.samples)?;
         cfg.rate = args.f32_or("rate", cfg.rate as f32)? as f64;
         cfg.mu_w = args.f32_or("mu-w", cfg.mu_w)?;
+        cfg.pipeline = cfg.pipeline || args.flag("pipeline");
+        if args.flag("no-pipeline") {
+            // Override a TOML `pipeline = true` for the serial comparison
+            // run without editing the config file.
+            cfg.pipeline = false;
+        }
+        cfg.pipeline_depth = args.usize_or("pipeline-depth", cfg.pipeline_depth)?.max(1);
         cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
         cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
         cfg.infer.threads = args.usize_or("threads", cfg.infer.threads)?;

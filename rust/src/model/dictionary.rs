@@ -249,6 +249,27 @@ impl DistributedDictionary {
         }
     }
 
+    /// Overwrite this dictionary's atoms with `src`'s. Both dictionaries
+    /// must have the same shape and agent partition — this is the snapshot
+    /// primitive of the serving pipeline's double-buffered dictionary
+    /// (refresh a read snapshot / recycled buffer from the write side
+    /// without allocating).
+    pub fn copy_from(&mut self, src: &Self) -> Result<()> {
+        if self.m() != src.m() || self.k() != src.k() || self.blocks != src.blocks {
+            return Err(DdlError::Shape(format!(
+                "dictionary copy_from: shape mismatch ({}×{}/{} agents vs {}×{}/{} agents)",
+                self.m(),
+                self.k(),
+                self.agents(),
+                src.m(),
+                src.k(),
+                src.agents()
+            )));
+        }
+        self.w.as_mut_slice().copy_from_slice(src.w.as_slice());
+        Ok(())
+    }
+
     /// Expand the dictionary by `extra` atoms distributed over `new_agents`
     /// additional agents (novelty time-steps, §IV-C: "the dictionary is
     /// expanded by adding nodes to the network"). Existing atoms are
@@ -290,6 +311,50 @@ impl DistributedDictionary {
             .map(|(s, l)| (s + old_k, l));
         self.blocks.extend(added);
         Ok(())
+    }
+}
+
+/// Double-buffered dictionary for concurrent serve-and-adapt (the serving
+/// pipeline's swap discipline): a stable **read** snapshot that inference
+/// consumes while the Eq. 51 update mutates the **write** buffer, with a
+/// swap-and-resync [`Self::publish`] at batch boundaries. Inference never
+/// blocks on the update, and the update never races a reader — the two
+/// sides are distinct allocations whose roles exchange at the boundary.
+#[derive(Clone, Debug)]
+pub struct DictDoubleBuffer {
+    read: DistributedDictionary,
+    write: DistributedDictionary,
+}
+
+impl DictDoubleBuffer {
+    /// Start with both sides holding `init`.
+    pub fn new(init: DistributedDictionary) -> Self {
+        DictDoubleBuffer { read: init.clone(), write: init }
+    }
+
+    /// The published snapshot (what inference reads).
+    pub fn read(&self) -> &DistributedDictionary {
+        &self.read
+    }
+
+    /// The adaptation side (what the Eq. 51 update writes).
+    pub fn write_mut(&mut self) -> &mut DistributedDictionary {
+        &mut self.write
+    }
+
+    /// Batch-boundary swap: the freshly-updated write buffer becomes the
+    /// read snapshot, and the (now stale) old snapshot is resynced to serve
+    /// as the next write buffer. One `M×K` copy, no allocation.
+    pub fn publish(&mut self) {
+        std::mem::swap(&mut self.read, &mut self.write);
+        self.write
+            .copy_from(&self.read)
+            .expect("double buffer sides always share a shape");
+    }
+
+    /// Tear down, keeping the authoritative (write) side.
+    pub fn into_write(self) -> DistributedDictionary {
+        self.write
     }
 }
 
@@ -461,6 +526,54 @@ mod tests {
         // Atom 1 untouched (owned by agent 1, and y[1] = 0 anyway).
         d.project_block(0, AtomConstraint::UnitBall);
         assert!(crate::math::vector::norm2(&d.atom(0)) <= 1.0 + 1e-5);
+    }
+
+    #[test]
+    fn copy_from_clones_atoms_and_checks_shape() {
+        let mut rng = Pcg64::new(8);
+        let src = DistributedDictionary::random(6, 4, 2, AtomConstraint::UnitBall, &mut rng)
+            .unwrap();
+        let mut dst =
+            DistributedDictionary::random(6, 4, 2, AtomConstraint::UnitBall, &mut rng).unwrap();
+        assert_ne!(dst.mat().as_slice(), src.mat().as_slice());
+        dst.copy_from(&src).unwrap();
+        assert_eq!(dst.mat().as_slice(), src.mat().as_slice());
+        // Shape and partition mismatches are rejected.
+        let other =
+            DistributedDictionary::random(6, 4, 4, AtomConstraint::UnitBall, &mut rng).unwrap();
+        assert!(dst.copy_from(&other).is_err(), "partition mismatch must fail");
+        let bigger =
+            DistributedDictionary::random(7, 4, 2, AtomConstraint::UnitBall, &mut rng).unwrap();
+        assert!(dst.copy_from(&bigger).is_err(), "dimension mismatch must fail");
+    }
+
+    /// The double buffer's swap discipline: writes are invisible to the
+    /// read snapshot until `publish`, and publish is swap + resync (the new
+    /// write side starts from the just-published state).
+    #[test]
+    fn double_buffer_publish_swaps_and_resyncs() {
+        let mut rng = Pcg64::new(9);
+        let init =
+            DistributedDictionary::random(5, 3, 3, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let mut buf = DictDoubleBuffer::new(init.clone());
+        assert_eq!(buf.read().mat().as_slice(), init.mat().as_slice());
+
+        // Mutate the write side: the read snapshot must be unaffected.
+        buf.write_mut().mat_mut().as_mut_slice()[0] = 42.0;
+        assert_eq!(buf.read().mat().as_slice(), init.mat().as_slice());
+
+        // Publish: the update becomes visible, and the next write buffer
+        // starts from the published state.
+        buf.publish();
+        assert_eq!(buf.read().mat().as_slice()[0], 42.0);
+        assert_eq!(buf.write_mut().mat().as_slice()[0], 42.0);
+
+        buf.write_mut().mat_mut().as_mut_slice()[1] = 7.0;
+        buf.publish();
+        assert_eq!(buf.read().mat().as_slice()[0], 42.0, "earlier update survives the swap");
+        assert_eq!(buf.read().mat().as_slice()[1], 7.0);
+        let last = buf.into_write();
+        assert_eq!(last.mat().as_slice()[1], 7.0);
     }
 
     #[test]

@@ -4,5 +4,5 @@
 pub mod dictionary;
 pub mod task;
 
-pub use dictionary::DistributedDictionary;
+pub use dictionary::{DictDoubleBuffer, DistributedDictionary};
 pub use task::{AtomConstraint, TaskSpec};

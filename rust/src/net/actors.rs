@@ -36,8 +36,12 @@ type WorkerOut = (Vec<(usize, Vec<f32>)>, MessageStats);
 /// are multiplexed onto fewer workers but `rounds` stays executor-
 /// independent.
 ///
-/// `dict` is cloned per worker but each worker only reads its own agents'
-/// blocks — the clone stands in for "agent k stores W_k locally".
+/// `dict` is shared read-only across workers (scoped borrow — the
+/// zero-refcount equivalent of an `Arc`): each worker only *reads* its own
+/// agents' blocks, so nothing about "agent k stores W_k locally" needs a
+/// per-worker deep copy. At hundreds of agents the former per-worker
+/// `M×K` clone dominated spawn cost; sharing makes executor startup O(1)
+/// in the dictionary size.
 pub fn run_threaded(
     graph: &Graph,
     weights: &Mat,
@@ -78,7 +82,6 @@ pub fn run_threaded(
                 let rx = receivers[w].take().unwrap();
                 let txs = senders.clone();
                 let owned = chunk_range(n, workers, w);
-                let dict = dict.clone();
                 let owner = &owner;
                 let theta = &theta;
 

@@ -24,4 +24,4 @@ pub mod pool;
 
 pub use bsp::BspNetwork;
 pub use message::{MessageStats, PsiMessage};
-pub use pool::{chunk_range, SharedRows, WorkerPool};
+pub use pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};

@@ -1,25 +1,34 @@
-//! Scoped-thread worker pool for row-partitioned SPMD loops.
+//! Worker pools for row-partitioned SPMD loops.
 //!
 //! The diffusion hot loops are embarrassingly parallel over agents: adapt
 //! writes row `k` of `Ψ` reading only row `k` of `V`, and combine writes
-//! row `k` of `V` reading all of `Ψ`. This module provides the three
-//! pieces the engine (and `scalar_consensus`) need to exploit that without
-//! external dependencies:
+//! row `k` of `V` reading all of `Ψ`. This module provides the pieces the
+//! engine (and `scalar_consensus`) need to exploit that without external
+//! dependencies:
 //!
 //! * [`WorkerPool`] — spawns `threads − 1` scoped workers plus the calling
 //!   thread and runs one closure per worker. Iteration loops live *inside*
 //!   the closure with a [`std::sync::Barrier`] per phase, so threads are
 //!   spawned once per `run()`, not once per iteration.
+//! * [`PersistentPool`] — the long-lived variant for streaming callers: OS
+//!   threads are spawned once at construction and dispatched borrowed SPMD
+//!   closures through channels, so a serving loop pays a channel round-trip
+//!   per minibatch instead of a thread spawn. The handle is `Send + Sync`
+//!   and is shared across pipeline stages behind an `Arc`
+//!   ([`crate::infer::DiffusionEngine::set_pool`]).
 //! * [`chunk_range`] — the deterministic row partition. Work is split by
 //!   static ranges (never work-stealing) so each row is computed by exactly
 //!   one worker with the same per-row arithmetic as the serial path —
-//!   results are bit-identical for every thread count.
+//!   results are bit-identical for every thread count *and* for either pool
+//!   flavor.
 //! * [`SharedRows`] — an unsafe-but-small escape hatch that lets workers
 //!   hold disjoint mutable row windows of one buffer across barrier phases,
 //!   which safe borrows cannot express.
 
 use std::marker::PhantomData;
 use std::ops::Range;
+use std::sync::{mpsc, Mutex};
+use std::thread::JoinHandle;
 
 /// Deterministic contiguous partition: range of `idx` (0-based) among
 /// `parts` near-equal chunks of `total` items. Leading chunks take the
@@ -163,6 +172,196 @@ impl<'a> SharedRows<'a> {
     }
 }
 
+/// One dispatched SPMD region for one worker: a lifetime-erased pointer to
+/// the caller's closure plus the completion channel. The pointer is only
+/// dereferenced between dispatch and the `done` signal, and the dispatching
+/// call blocks on every signal before returning — so the borrow it was
+/// erased from is still alive whenever a worker touches it.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    done: mpsc::Sender<()>,
+}
+
+// SAFETY: the raw closure pointer is dereferenced only while the submitting
+// `spmd_active` call is blocked waiting for `done` (see `Job`); the Sender
+// is Send on its own.
+unsafe impl Send for Job {}
+
+/// Long-lived worker pool: `threads − 1` OS threads parked on job channels
+/// plus the calling thread as worker 0.
+///
+/// Semantics are identical to [`WorkerPool`] (same worker ids, same
+/// [`chunk_range`] partitions, closures may contain [`std::sync::Barrier`]
+/// phases — every active worker runs on its own thread, never queued behind
+/// another worker's job). The difference is purely dispatch cost: a channel
+/// send/recv pair per worker per region instead of a thread spawn/join,
+/// which matters for streaming loops that enter an SPMD region per
+/// minibatch.
+///
+/// One SPMD region at a time: dispatch is serialized internally, but
+/// closures that synchronize workers (barriers) assume all active workers
+/// belong to the *same* region — do not call `spmd_active` concurrently
+/// from two threads with such closures.
+pub struct PersistentPool {
+    /// `txs[i]` feeds the thread running worker id `i + 1`.
+    txs: Mutex<Vec<mpsc::Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl PersistentPool {
+    /// Spawn a pool of `threads` workers (clamped to at least 1; `1` means
+    /// no background threads — everything runs on the caller).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut txs = Vec::with_capacity(threads.saturating_sub(1));
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for id in 1..threads {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("ddl-pool-{id}"))
+                .spawn(move || {
+                    for job in rx.iter() {
+                        // SAFETY: the submitter keeps the closure alive
+                        // until it has received our `done` signal.
+                        let f = unsafe { &*job.f };
+                        f(id);
+                        let _ = job.done.send(());
+                    }
+                })
+                .expect("PersistentPool: failed to spawn worker thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        PersistentPool { txs: Mutex::new(txs), handles, threads }
+    }
+
+    /// Worker count the pool was built with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker_id)` on workers `0..active` (clamped to the pool
+    /// size); worker 0 executes on the calling thread. Returns after every
+    /// active worker has finished — exactly the join semantics of
+    /// [`WorkerPool::spmd`].
+    pub fn spmd_active<F>(&self, active: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let active = active.clamp(1, self.threads);
+        if active == 1 {
+            f(0);
+            return;
+        }
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut sent = 0usize;
+        let mut dead_worker = false;
+        {
+            let f_obj: &(dyn Fn(usize) + Sync) = &f;
+            // SAFETY: lifetime erasure only — every worker drops its use of
+            // the closure before signalling `done`, and we block on every
+            // *dispatched* job (even on unwind, via `DrainOnDrop` below)
+            // before `f` can go out of scope. No code path panics between a
+            // successful send and the guard's installation.
+            let f_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(f_obj)
+            };
+            let txs = self.txs.lock().expect("PersistentPool: poisoned dispatch lock");
+            for tx in txs.iter().take(active - 1) {
+                // A failed send means that worker's thread died; defer the
+                // panic until after the join guard is armed so already-
+                // dispatched workers are waited for first.
+                if tx.send(Job { f: f_ptr, done: done_tx.clone() }).is_ok() {
+                    sent += 1;
+                } else {
+                    dead_worker = true;
+                    break;
+                }
+            }
+        }
+        // The guard's drain terminates in every case because the original
+        // sender is dropped here: each dispatched worker either sends `()`
+        // or (on panic) drops its clone, closing the channel.
+        drop(done_tx);
+        // Unwind guard: if anything below panics on the calling thread, we
+        // still wait for every dispatched worker before this frame (and the
+        // erased closure plus whatever it borrows) is torn down — matching
+        // the join-on-unwind semantics of the scoped WorkerPool.
+        let mut guard = DrainOnDrop { rx: &done_rx, left: sent };
+        assert!(!dead_worker, "PersistentPool: worker thread exited");
+        f(0);
+        while guard.left > 0 {
+            done_rx.recv().expect("PersistentPool: worker thread panicked");
+            guard.left -= 1;
+        }
+    }
+
+    /// Like [`Self::spmd_active`], but hands worker `w` exclusive `&mut`
+    /// access to `states[w]` — the persistent counterpart of
+    /// [`WorkerPool::spmd_with`]. `states` must hold at least `active`
+    /// elements (after clamping to the pool size); extras are untouched.
+    pub fn spmd_with_active<S, F>(&self, active: usize, states: &mut [S], f: F)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        let active = active.clamp(1, self.threads);
+        assert!(
+            states.len() >= active,
+            "spmd_with_active: {} states for {} workers",
+            states.len(),
+            active
+        );
+        let base = states.as_mut_ptr() as usize;
+        self.spmd_active(active, move |w| {
+            // SAFETY: worker ids are distinct, so each worker touches a
+            // distinct element; `states` outlives the (joining) dispatch.
+            let st = unsafe { &mut *(base as *mut S).add(w) };
+            f(w, st);
+        });
+    }
+}
+
+/// Blocks until every outstanding worker of one SPMD region has finished,
+/// even when the submitting closure unwinds: a worker that completes sends
+/// `()`, a worker that panics drops its `done` sender — either way `recv`
+/// returns and the drain terminates.
+struct DrainOnDrop<'a> {
+    rx: &'a mpsc::Receiver<()>,
+    left: usize,
+}
+
+impl Drop for DrainOnDrop<'_> {
+    fn drop(&mut self) {
+        while self.left > 0 {
+            if self.rx.recv().is_err() {
+                break;
+            }
+            self.left -= 1;
+        }
+    }
+}
+
+impl Drop for PersistentPool {
+    fn drop(&mut self) {
+        // Closing the channels makes every worker's `rx.iter()` finish —
+        // including when the dispatch lock was poisoned by a failed send
+        // (clearing anyway is what unblocks the surviving workers, so the
+        // subsequent joins terminate).
+        match self.txs.lock() {
+            Ok(mut txs) => txs.clear(),
+            Err(poisoned) => poisoned.into_inner().clear(),
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +416,80 @@ mod tests {
             *st = w + 10;
         });
         assert_eq!(states, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn persistent_pool_runs_every_worker() {
+        let pool = PersistentPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let count = AtomicUsize::new(0);
+        let seen: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        // Reuse across many regions — the whole point of persistence.
+        for _ in 0..10 {
+            pool.spmd_active(4, |w| {
+                count.fetch_add(1, Ordering::SeqCst);
+                seen[w].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 40);
+        for s in &seen {
+            assert_eq!(s.load(Ordering::SeqCst), 10);
+        }
+    }
+
+    #[test]
+    fn persistent_pool_active_subset_and_clamp() {
+        let pool = PersistentPool::new(3);
+        let seen: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.spmd_active(2, |w| {
+            seen[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(seen[0].load(Ordering::SeqCst), 1);
+        assert_eq!(seen[1].load(Ordering::SeqCst), 1);
+        assert_eq!(seen[2].load(Ordering::SeqCst), 0, "inactive worker untouched");
+        // Requesting more workers than the pool has clamps to the pool size.
+        pool.spmd_active(9, |w| {
+            seen[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(seen[2].load(Ordering::SeqCst), 1);
+        // active = 1 runs inline on the caller.
+        pool.spmd_active(1, |w| assert_eq!(w, 0));
+    }
+
+    #[test]
+    fn persistent_pool_spmd_with_gives_exclusive_state() {
+        let pool = PersistentPool::new(3);
+        let mut states = vec![0usize; 3];
+        pool.spmd_with_active(3, &mut states, |w, st| {
+            *st = w + 10;
+        });
+        assert_eq!(states, vec![10, 11, 12]);
+    }
+
+    /// Active workers run concurrently on distinct threads, so barrier-
+    /// phased closures (the engine's iteration loop shape) must not
+    /// deadlock and must see each other's pre-barrier writes.
+    #[test]
+    fn persistent_pool_supports_barrier_phases() {
+        let threads = 3;
+        let pool = PersistentPool::new(threads);
+        let (rows, cols) = (7usize, 4usize);
+        let mut buf = vec![0.0f32; rows * cols];
+        let shared = SharedRows::new(&mut buf);
+        let barrier = Barrier::new(threads);
+        pool.spmd_active(threads, |w| {
+            let mine = chunk_range(rows, threads, w);
+            let window = unsafe { shared.rows_mut(mine.start, mine.len(), cols) };
+            for (i, v) in window.iter_mut().enumerate() {
+                *v = (mine.start * cols + i) as f32;
+            }
+            barrier.wait();
+            let all = unsafe { shared.rows(0, rows, cols) };
+            for (i, &v) in all.iter().enumerate() {
+                assert_eq!(v, i as f32);
+            }
+        });
+        assert_eq!(buf[rows * cols - 1], (rows * cols - 1) as f32);
     }
 
     #[test]

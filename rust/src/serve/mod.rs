@@ -6,19 +6,31 @@
 //!
 //! * [`queue`] — micro-batching admission queue: requests arrive on a
 //!   microsecond clock and are released as minibatches by a
-//!   max-size/max-wait policy ([`queue::BatchPolicy`]);
-//! * [`session`] — the service loop: a discrete-event single-server
+//!   max-size/max-wait policy ([`queue::BatchPolicy`]); [`SharedQueue`] is
+//!   the thread-safe admission handle (admission never blocks while a
+//!   batch is in flight);
+//! * [`session`] — the serial service loop: a discrete-event single-server
 //!   simulation whose service times are *measured* batched
 //!   inference+update steps ([`crate::learn::OnlineTrainer::step`] over
 //!   [`crate::infer::DiffusionEngine::run_batch`]), reporting throughput,
-//!   latency percentiles, and ψ-traffic [`crate::net::MessageStats`].
+//!   latency percentiles, and ψ-traffic [`crate::net::MessageStats`];
+//! * [`pipeline`] — the three-stage concurrent executor (`--pipeline`):
+//!   batch formation, diffusion inference on persistent worker pools, and
+//!   the Eq. 51 update overlap on separate threads with a double-buffered
+//!   dictionary; a fixed bounded-staleness swap schedule makes the result
+//!   **bit-identical** to its serial reference executor
+//!   (`tests/serve_pipeline_parity.rs`).
 //!
 //! Drive it with `ddl serve` (TOML section `[serve]`, CLI overrides) or
 //! programmatically via [`session::run_service`]; see
 //! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving.
 
+pub mod pipeline;
 pub mod queue;
 pub mod session;
 
-pub use queue::{BatchPolicy, MicroBatchQueue, Request};
-pub use session::{generate_stream, run_service, ServeReport};
+pub use pipeline::{run_pipelined, BatchFormer, PipelineExec};
+pub use queue::{BatchPolicy, MicroBatchQueue, Request, SharedQueue};
+pub use session::{
+    generate_stream, run_service, run_service_with_dict, ServeReport,
+};

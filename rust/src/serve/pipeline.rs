@@ -1,0 +1,539 @@
+//! Pipelined serving: overlap batch formation, diffusion inference, and
+//! the Eq. 51 online update across threads.
+//!
+//! The serial session (`serve/session.rs`) is a single-server loop:
+//! admission, the diffusion sweep, and the dictionary update run
+//! back-to-back on one thread, so the engine's worker pool idles during
+//! queueing and adaptation. This module restructures the session into a
+//! three-stage concurrent pipeline:
+//!
+//! 1. **Formation** (main thread) — the [`BatchFormer`] replays the arrival
+//!    stream through the micro-batching policy on the virtual clock and
+//!    forms batch `i+1` while batch `i` computes. Formation never consults
+//!    service times, so batch composition is a pure function of the stream
+//!    and the policy — the determinism anchor of the whole pipeline.
+//! 2. **Inference** (worker threads + persistent pools) — up to
+//!    `pipeline_depth` batches are in flight, each a
+//!    [`DiffusionEngine::run_batch`] sweep against an immutable dictionary
+//!    *snapshot* on a long-lived [`crate::net::PersistentPool`].
+//! 3. **Update** (dedicated updater thread) — primal recovery, statistics,
+//!    and the Eq. 51 update ([`crate::learn::recover_and_stats`] /
+//!    [`crate::learn::apply_eq51_update`]) run against the **write** side of
+//!    a [`DictDoubleBuffer`] while inference reads published snapshots —
+//!    inference never blocks on the update.
+//!
+//! ## The fixed swap schedule (bounded staleness)
+//!
+//! Let `D_j` be the dictionary after the updates of batches `0..j`
+//! (`D_0` = initial). With pipeline depth `D`, batch `j` is inferred
+//! against the snapshot `S_j = D_{max(0, j − D)}`: updates lag inference by
+//! exactly the pipeline depth, never "whatever happened to be published"
+//! — the schedule is data-independent, so the final dictionary, per-batch
+//! losses, and ψ-traffic are **bit-identical** for the threaded executor
+//! and the serial reference executor ([`PipelineExec::Reference`]), at any
+//! thread count and depth. The speedup is pure overlap, not a silently
+//! different algorithm. This is the scheme D4L (Koppel et al. 2016) and
+//! Daneshmand et al. (2016) use to overlap local optimization with
+//! communication, made deterministic.
+//!
+//! Depth 1 is the classic three-stage pipeline (update of batch `i−1`
+//! overlaps inference of batch `i`); depth ≥ 2 additionally overlaps
+//! consecutive inference sweeps (batch `i+1` depends on `U_{i−1}`, not on
+//! batch `i`), which is where the throughput multiplier comes from when
+//! cores outnumber the engine's thread count.
+//!
+//! Wall-clock metrics (throughput, latency percentiles) are measured on
+//! the real clock and naturally differ between executors; the parity
+//! contract covers dictionaries, sample/batch counts, losses, and
+//! [`MessageStats`].
+
+use crate::config::experiment::ServeConfig;
+use crate::error::{DdlError, Result};
+use crate::infer::{DiffusionEngine, NuView};
+use crate::learn::{apply_eq51_update, recover_and_stats};
+use crate::math::stats;
+use crate::model::{DictDoubleBuffer, DistributedDictionary, TaskSpec};
+use crate::net::{MessageStats, PersistentPool};
+use crate::ops::prox::DictProx;
+use crate::serve::queue::{BatchPolicy, Request, SharedQueue};
+use crate::serve::session::{
+    build_engine, loss_quarters, serve_params, serve_task, setup, ServeReport, SessionSetup,
+};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Which executor runs the pipeline schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineExec {
+    /// Three-stage concurrent executor (production path).
+    Threaded,
+    /// Single-threaded reference executor of the identical schedule — the
+    /// comparator for the bitwise parity tests.
+    Reference,
+}
+
+/// Service-independent batch formation: replays the arrival stream through
+/// the micro-batching policy on the virtual clock, jumping only to arrival
+/// and deadline events. Unlike the serial session's single-server loop,
+/// the clock never advances by service time — admission and formation are
+/// decoupled from inference, so batch `i+1` forms while batch `i` is in
+/// flight and the batch sequence is a deterministic function of
+/// `(stream, policy)` alone.
+///
+/// Admission goes through a [`SharedQueue`]; [`Self::queue`] exposes the
+/// handle so external producers can inject requests concurrently in a real
+/// deployment (the replayed-stream sessions used for parity and benches
+/// are single-producer).
+pub struct BatchFormer {
+    queue: Arc<SharedQueue>,
+    stream: VecDeque<(u64, Vec<f32>)>,
+    now_us: u64,
+}
+
+impl BatchFormer {
+    /// Former over `stream` (`(arrival_us, x)` pairs in arrival order).
+    pub fn new(policy: BatchPolicy, stream: Vec<(u64, Vec<f32>)>) -> Self {
+        BatchFormer {
+            queue: Arc::new(SharedQueue::new(policy)),
+            stream: stream.into(),
+            now_us: 0,
+        }
+    }
+
+    /// The shared admission queue.
+    pub fn queue(&self) -> Arc<SharedQueue> {
+        Arc::clone(&self.queue)
+    }
+
+    /// Current virtual-clock reading (µs).
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Form the next batch, or `None` when the stream is exhausted and the
+    /// queue drained. Partial batches release at the max-wait deadline;
+    /// end-of-stream flushes the remainder immediately (nothing else will
+    /// arrive), exactly like the serial session.
+    pub fn next_batch(&mut self) -> Option<Vec<Request>> {
+        loop {
+            // Admit every request that has arrived by the current clock.
+            while self.stream.front().is_some_and(|(t, _)| *t <= self.now_us) {
+                let (t, x) = self.stream.pop_front().expect("front checked");
+                self.queue.push(x, t);
+            }
+            if self.queue.ready(self.now_us) {
+                return Some(self.queue.drain_batch());
+            }
+            match self.stream.front() {
+                None => {
+                    if self.queue.is_empty() {
+                        return None;
+                    }
+                    return Some(self.queue.drain_batch());
+                }
+                Some(&(t_arrival, _)) => {
+                    // Idle: jump to the next arrival or batch deadline.
+                    let mut t_next = t_arrival;
+                    if let Some(d) = self.queue.next_deadline_us() {
+                        t_next = t_next.min(d);
+                    }
+                    self.now_us = self.now_us.max(t_next);
+                }
+            }
+        }
+    }
+}
+
+/// Stage-3 state: the double-buffered dictionary plus every deterministic
+/// accumulator of the session (losses, traffic, served counts). Both
+/// executors drive batches through [`Self::process`] in batch order, which
+/// is what makes them bit-identical.
+struct UpdaterState {
+    dict: DictDoubleBuffer,
+    task: TaskSpec,
+    prox: DictProx,
+    mu_w: f32,
+    m: usize,
+    iters: usize,
+    directed_edges: usize,
+    ys: Vec<f32>,
+    corr: Vec<f32>,
+    mean: Vec<f32>,
+    batch_losses: Vec<f64>,
+    stats: MessageStats,
+    served: usize,
+    /// Per-request latency: wall-clock inference completion (ms since
+    /// session start — the moment the result is servable; the Eq. 51
+    /// update continues in the background) minus the request's virtual
+    /// arrival offset, clamped at 0.
+    latencies_ms: Vec<f64>,
+}
+
+impl UpdaterState {
+    fn new(cfg: &ServeConfig, dict0: DistributedDictionary, directed_edges: usize) -> Self {
+        UpdaterState {
+            dict: DictDoubleBuffer::new(dict0),
+            task: serve_task(cfg),
+            prox: DictProx::None,
+            mu_w: cfg.mu_w,
+            m: cfg.dim,
+            iters: cfg.infer.iters,
+            directed_edges,
+            ys: Vec::new(),
+            corr: Vec::new(),
+            mean: Vec::new(),
+            batch_losses: Vec::new(),
+            stats: MessageStats::default(),
+            served: 0,
+            latencies_ms: Vec::new(),
+        }
+    }
+
+    /// A fresh copy of the latest published snapshot (pipeline prefill).
+    fn fresh_snapshot(&self) -> DistributedDictionary {
+        self.dict.read().clone()
+    }
+
+    /// Process batch `j`'s inference result: recovery + stats against the
+    /// snapshot `S_j` the batch was inferred with, publish `S_{j+depth}`
+    /// (the authoritative state *before* this batch's update, recycling the
+    /// `S_j` buffer) through `emit`, then apply the Eq. 51 update to the
+    /// write buffer. `emit` fires before the update so a depth-1 pipeline
+    /// genuinely overlaps `U_j` with the next batch's inference.
+    fn process(
+        &mut self,
+        mut snap: DistributedDictionary,
+        batch: &[Request],
+        view: &NuView<'_>,
+        stamp_ms: f64,
+        emit: impl FnOnce(DistributedDictionary),
+    ) -> Result<()> {
+        let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
+        let tstats = recover_and_stats(
+            &snap,
+            &self.task,
+            &refs,
+            view,
+            &mut self.ys,
+            &mut self.corr,
+            &mut self.mean,
+        )?;
+        self.batch_losses.push(tstats.mean_loss);
+        self.served += batch.len();
+        for r in batch {
+            // Completion − arrival, like the serial executor. The pipeline
+            // replays virtual arrivals at full speed, so a request can
+            // complete before its arrival offset would have elapsed in real
+            // time — clamp to 0 (the pipeline outran the arrival process).
+            self.latencies_ms.push((stamp_ms - r.arrival_us as f64 / 1e3).max(0.0));
+        }
+        // ψ traffic, accounted exactly as the serial session does: one
+        // message per directed edge per diffusion iteration carrying the
+        // whole minibatch (see `serve/session.rs`).
+        self.stats.record_exchange(self.directed_edges * self.iters, batch.len() * self.m);
+        self.stats.add_rounds(self.iters);
+
+        // Publish S_{j+depth} = D_j: swap the double buffer (read becomes
+        // the authoritative pre-update state) and recycle the S_j buffer.
+        self.dict.publish();
+        snap.copy_from(self.dict.read())?;
+        emit(snap);
+
+        // Eq. 51 into the write buffer: D_j → D_{j+1}. Inference of later
+        // batches reads published snapshots, never this buffer.
+        apply_eq51_update(
+            self.dict.write_mut(),
+            &self.task,
+            self.prox,
+            self.mu_w,
+            &self.ys,
+            view,
+        );
+        Ok(())
+    }
+
+    fn into_parts(
+        self,
+    ) -> (DistributedDictionary, Vec<f64>, MessageStats, usize, Vec<f64>) {
+        (self.dict.into_write(), self.batch_losses, self.stats, self.served, self.latencies_ms)
+    }
+}
+
+/// Dispatch of one formed batch to an inference worker.
+struct Work {
+    j: usize,
+    snap: DistributedDictionary,
+    batch: Vec<Request>,
+}
+
+/// One completed inference: the shipped dual iterates plus everything the
+/// updater needs (the snapshot travels back for recovery and recycling).
+struct Done {
+    j: usize,
+    snap: DistributedDictionary,
+    batch: Vec<Request>,
+    v: Vec<f32>,
+    b: usize,
+    stamp_ms: f64,
+}
+
+/// Run the pipelined session. Returns the report and the final adapted
+/// dictionary (for bitwise parity checks).
+pub fn run_pipelined(
+    cfg: &ServeConfig,
+    exec: PipelineExec,
+    log: &mut dyn FnMut(&str),
+) -> Result<(ServeReport, DistributedDictionary)> {
+    let depth = cfg.pipeline_depth.max(1);
+    let SessionSetup { graph, topo, dict0, stream } = setup(cfg)?;
+    let directed_edges = 2 * graph.edge_count();
+    let policy = BatchPolicy::new(cfg.batch, cfg.max_wait_us);
+    let task_threads = cfg.infer.threads.max(1);
+
+    // One engine (and persistent pool) per in-flight batch slot. Engines
+    // are stateless between batches (cold-start reset per batch), so slot
+    // assignment j % depth cannot change results.
+    let engine_slots = if exec == PipelineExec::Threaded { depth } else { 1 };
+    let mut engines = Vec::with_capacity(engine_slots);
+    for _ in 0..engine_slots {
+        let mut engine = build_engine(cfg, &graph, &topo)?;
+        if task_threads > 1 {
+            engine.set_pool(Arc::new(PersistentPool::new(task_threads)));
+        }
+        engine.reserve_batch(cfg.batch.max(1));
+        engine.reserve_atoms(dict0.k());
+        engines.push(engine);
+    }
+    let combine_path = engines[0].combine_path();
+
+    log(&format!(
+        "serve[pipelined{}]: N={} M={} topology={} ({} directed edges, {} combine), B<={}, \
+         depth={}, t={}, {} samples at {}",
+        if exec == PipelineExec::Reference { "-reference" } else { "" },
+        cfg.agents,
+        cfg.dim,
+        cfg.topology,
+        directed_edges,
+        combine_path,
+        cfg.batch.max(1),
+        depth,
+        task_threads,
+        cfg.samples,
+        if cfg.rate > 0.0 { format!("{:.0} req/s", cfg.rate) } else { "saturation".into() },
+    ));
+
+    let mut former = BatchFormer::new(policy, stream);
+    let updater = UpdaterState::new(cfg, dict0, directed_edges);
+    let mode: &'static str = match exec {
+        PipelineExec::Threaded => "pipelined",
+        PipelineExec::Reference => "pipelined-reference",
+    };
+
+    let t0 = Instant::now();
+    let (dict, batch_losses, msg_stats, served, latencies_ms) = match exec {
+        PipelineExec::Reference => {
+            run_reference(cfg, &mut former, updater, engines, depth, t0, log)?
+        }
+        PipelineExec::Threaded => {
+            run_threaded_pipeline(cfg, &mut former, updater, engines, depth, t0, log)?
+        }
+    };
+
+    let batches = batch_losses.len();
+    let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let (loss_first_quarter, loss_last_quarter) = loss_quarters(&batch_losses);
+    let report = ServeReport {
+        mode,
+        pipeline_depth: depth,
+        samples: served,
+        batches,
+        mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+        duration_s,
+        throughput_rps: served as f64 / duration_s,
+        latency_p50_ms: stats::percentile(&latencies_ms, 50.0),
+        latency_p95_ms: stats::percentile(&latencies_ms, 95.0),
+        latency_p99_ms: stats::percentile(&latencies_ms, 99.0),
+        latency_max_ms: latencies_ms.iter().cloned().fold(0.0, f64::max),
+        loss_first_quarter,
+        loss_last_quarter,
+        stats: msg_stats,
+        combine_path,
+    };
+    log(&format!(
+        "serve[{}]: {} samples / {} batches in {:.3} s ({:.1} samples/s)",
+        mode, report.samples, report.batches, report.duration_s, report.throughput_rps
+    ));
+    Ok((report, dict))
+}
+
+type SessionOut = (DistributedDictionary, Vec<f64>, MessageStats, usize, Vec<f64>);
+
+/// Serial reference executor: the identical schedule, inline. Snapshots
+/// queue through a `VecDeque` exactly as they queue through the snapshot
+/// channel in the threaded executor.
+fn run_reference(
+    cfg: &ServeConfig,
+    former: &mut BatchFormer,
+    mut updater: UpdaterState,
+    mut engines: Vec<DiffusionEngine>,
+    depth: usize,
+    t0: Instant,
+    log: &mut dyn FnMut(&str),
+) -> Result<SessionOut> {
+    let engine = &mut engines[0];
+    let params = serve_params(cfg);
+    let task = serve_task(cfg);
+    let mut snaps: VecDeque<DistributedDictionary> =
+        (0..depth).map(|_| updater.fresh_snapshot()).collect();
+    let mut j = 0usize;
+    while let Some(batch) = former.next_batch() {
+        let snap = snaps.pop_front().expect("snapshot schedule invariant");
+        {
+            let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
+            engine.reserve_batch(refs.len());
+            engine.reserve_atoms(snap.k());
+            engine.reset();
+            engine.run_batch(&snap, &task, &refs, params)?;
+        }
+        let stamp_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let view = engine.nu_view();
+        updater.process(snap, &batch, &view, stamp_ms, |s| snaps.push_back(s))?;
+        j += 1;
+        if j % 16 == 0 {
+            log(&format!("  [reference] processed {j} batches"));
+        }
+    }
+    Ok(updater.into_parts())
+}
+
+/// Threaded executor: formation on the calling thread, `depth` inference
+/// workers, one updater thread; unbounded mpsc channels (the snapshot
+/// schedule itself bounds the number of batches in flight to `depth`).
+fn run_threaded_pipeline(
+    cfg: &ServeConfig,
+    former: &mut BatchFormer,
+    updater: UpdaterState,
+    engines: Vec<DiffusionEngine>,
+    depth: usize,
+    t0: Instant,
+    log: &mut dyn FnMut(&str),
+) -> Result<SessionOut> {
+    let params = serve_params(cfg);
+    let task = serve_task(cfg);
+    let n = cfg.agents;
+    let m = cfg.dim;
+
+    let (snap_tx, snap_rx) = mpsc::channel::<DistributedDictionary>();
+    let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
+    let mut work_txs: Vec<mpsc::Sender<Work>> = Vec::with_capacity(depth);
+    let mut work_rxs: Vec<Option<mpsc::Receiver<Work>>> = Vec::with_capacity(depth);
+    for _ in 0..depth {
+        let (tx, rx) = mpsc::channel::<Work>();
+        work_txs.push(tx);
+        work_rxs.push(Some(rx));
+    }
+
+    std::thread::scope(|scope| -> Result<SessionOut> {
+        // Stage 3: the updater consumes inference results in batch order
+        // (out-of-order arrivals are buffered) and publishes snapshots.
+        let updater_handle = scope.spawn({
+            let snap_tx = snap_tx.clone();
+            let mut st = updater;
+            move || -> Result<SessionOut> {
+                for _ in 0..depth {
+                    // Prefill: S_0..S_{depth-1} = D_0.
+                    let _ = snap_tx.send(st.fresh_snapshot());
+                }
+                let mut pending: BTreeMap<usize, Done> = BTreeMap::new();
+                let mut next = 0usize;
+                while let Ok(result) = done_rx.recv() {
+                    let done = result?;
+                    pending.insert(done.j, done);
+                    while let Some(d) = pending.remove(&next) {
+                        let Done { snap, batch, v, b, stamp_ms, .. } = d;
+                        let view = NuView::new(&v, n, m, b);
+                        st.process(snap, &batch, &view, stamp_ms, |s| {
+                            // Main may have stopped listening (teardown) —
+                            // the schedule itself stays intact.
+                            let _ = snap_tx.send(s);
+                        })?;
+                        next += 1;
+                    }
+                }
+                if !pending.is_empty() {
+                    return Err(DdlError::Runtime(
+                        "pipeline: inference results lost before completion".into(),
+                    ));
+                }
+                Ok(st.into_parts())
+            }
+        });
+
+        // Stage 2: inference workers (slot w serves batches j ≡ w mod D).
+        let mut worker_handles = Vec::with_capacity(depth);
+        for (w, mut engine) in engines.into_iter().enumerate() {
+            let work_rx = work_rxs[w].take().expect("one receiver per worker");
+            let done_tx = done_tx.clone();
+            worker_handles.push(scope.spawn(move || {
+                while let Ok(Work { j, snap, batch }) = work_rx.recv() {
+                    let res = {
+                        let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
+                        engine.reserve_batch(refs.len());
+                        engine.reserve_atoms(snap.k());
+                        engine.reset();
+                        engine.run_batch(&snap, &task, &refs, params)
+                    };
+                    let b = batch.len();
+                    let stamp_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let out = res.map(|_| Done {
+                        j,
+                        v: engine.nu_view().to_owned_data(),
+                        b,
+                        stamp_ms,
+                        snap,
+                        batch,
+                    });
+                    let failed = out.is_err();
+                    if done_tx.send(out).is_err() || failed {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(done_tx);
+        drop(snap_tx);
+
+        // Stage 1: formation + dispatch on this thread. `snap_rx.recv`
+        // blocks only when `depth` batches are already in flight — that is
+        // the pipeline's back-pressure. Admission itself (inside
+        // `next_batch`) never blocks.
+        let mut dispatched = 0usize;
+        while let Some(batch) = former.next_batch() {
+            match snap_rx.recv() {
+                Ok(snap) => {
+                    if work_txs[dispatched % depth]
+                        .send(Work { j: dispatched, snap, batch })
+                        .is_err()
+                    {
+                        break; // worker exited early; error surfaces below
+                    }
+                    dispatched += 1;
+                    if dispatched % 16 == 0 {
+                        log(&format!("  [pipeline] dispatched {dispatched} batches"));
+                    }
+                }
+                Err(_) => break, // updater exited early; error surfaces below
+            }
+        }
+        drop(work_txs);
+        drop(snap_rx);
+
+        for h in worker_handles {
+            h.join().map_err(|_| DdlError::Runtime("pipeline: inference worker panicked".into()))?;
+        }
+        updater_handle
+            .join()
+            .map_err(|_| DdlError::Runtime("pipeline: updater thread panicked".into()))?
+    })
+}

@@ -13,8 +13,15 @@
 //! simulated arrival offsets or measured wall-clock offsets) and trivially
 //! testable. The queue is FIFO: batches preserve admission order, which
 //! keeps the per-sample ν trajectories reproducible for a given stream.
+//!
+//! [`SharedQueue`] is the thread-safe admission handle for the pipelined
+//! session: every operation takes the internal lock only for the queue
+//! bookkeeping itself — a popped batch is *moved out* before inference
+//! starts — so **admission never blocks while a batch is in flight**
+//! (property-tested in `tests/serve_pipeline_parity.rs`).
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 
 /// Batch-formation policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -127,6 +134,73 @@ impl MicroBatchQueue {
     }
 }
 
+/// Concurrent admission handle over a [`MicroBatchQueue`].
+///
+/// Producers push from any thread; the pipeline's formation stage pops
+/// batches. The `Mutex` guards only O(1)/O(B) queue bookkeeping — batches
+/// are moved out under the lock and processed outside it, so admission
+/// latency is independent of inference time: a request can always be
+/// admitted while a batch is in flight.
+#[derive(Debug)]
+pub struct SharedQueue {
+    inner: Mutex<MicroBatchQueue>,
+    policy: BatchPolicy,
+}
+
+impl SharedQueue {
+    /// Empty shared queue under `policy`.
+    pub fn new(policy: BatchPolicy) -> Self {
+        SharedQueue { inner: Mutex::new(MicroBatchQueue::new(policy)), policy }
+    }
+
+    /// The active policy (copied out — no lock needed).
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MicroBatchQueue> {
+        self.inner.lock().expect("SharedQueue: poisoned lock")
+    }
+
+    /// Admit a sample at `now_us`; returns its request id.
+    pub fn push(&self, x: Vec<f32>, now_us: u64) -> u64 {
+        self.lock().push(x, now_us)
+    }
+
+    /// Number of queued requests.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Whether a batch should be released at `now_us`.
+    pub fn ready(&self, now_us: u64) -> bool {
+        self.lock().ready(now_us)
+    }
+
+    /// Earliest time at which [`Self::ready`] will hold without further
+    /// admissions.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.lock().next_deadline_us()
+    }
+
+    /// Release the next batch if ready; the batch is moved out under the
+    /// lock and owned by the caller (the lock is *not* held while the
+    /// batch computes).
+    pub fn pop_batch(&self, now_us: u64) -> Option<Vec<Request>> {
+        self.lock().pop_batch(now_us)
+    }
+
+    /// Unconditionally release the next (possibly partial) batch.
+    pub fn drain_batch(&self) -> Vec<Request> {
+        self.lock().drain_batch()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +272,50 @@ mod tests {
         let mut q = queue(0, 0);
         q.push(vec![1.0], 0);
         assert_eq!(q.pop_batch(0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn shared_queue_concurrent_producers() {
+        use std::sync::Arc;
+        let q = Arc::new(SharedQueue::new(BatchPolicy::new(4, 0)));
+        assert_eq!(q.policy().max_batch, 4);
+        let handles: Vec<_> = (0..3)
+            .map(|t| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..8 {
+                        q.push(vec![(t * 8 + i) as f32], 0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.len(), 24);
+        // Ids stayed unique and monotone under concurrency.
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(batch) = q.pop_batch(0) {
+            for r in batch {
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+        }
+        assert!(q.is_empty());
+        assert_eq!(seen.len(), 24);
+    }
+
+    #[test]
+    fn shared_queue_batch_moved_out_of_lock() {
+        let q = SharedQueue::new(BatchPolicy::new(2, 1_000));
+        q.push(vec![1.0], 0);
+        q.push(vec![2.0], 1);
+        let batch = q.pop_batch(1).unwrap();
+        assert_eq!(batch.len(), 2);
+        // The popped batch is caller-owned: the queue is free for
+        // admission and inspection while it is "in flight".
+        q.push(vec![3.0], 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.next_deadline_us(), Some(1_002));
+        drop(batch);
     }
 }

@@ -33,6 +33,12 @@ use std::time::Instant;
 /// Outcome of one streaming session.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Executor that produced the report: `"serial"`, `"pipelined"`, or
+    /// `"pipelined-reference"`.
+    pub mode: &'static str,
+    /// Batches in flight in the inference stage (`0` for the serial
+    /// single-server loop).
+    pub pipeline_depth: usize,
     /// Requests served.
     pub samples: usize,
     /// Minibatches drained through the engine.
@@ -62,11 +68,12 @@ impl ServeReport {
     /// Multi-line human-readable summary.
     pub fn summary(&self, agents: usize) -> String {
         format!(
-            "served {} samples in {} batches (mean B = {:.2}) over {:.3} s\n\
+            "[{}] served {} samples in {} batches (mean B = {:.2}) over {:.3} s\n\
              throughput: {:.1} samples/s\n\
              latency ms: p50 {:.2}, p95 {:.2}, p99 {:.2}, max {:.2}\n\
              loss: first quarter {:.4} -> last quarter {:.4}\n\
              traffic: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round",
+            self.mode,
             self.samples,
             self.batches,
             self.mean_batch,
@@ -141,36 +148,110 @@ pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, V
     Ok(out)
 }
 
-/// Run a streaming session; `log` receives progress lines.
-pub fn run_service(cfg: &ServeConfig, log: &mut dyn FnMut(&str)) -> Result<ServeReport> {
-    let m = cfg.dim;
+/// The serving task: sparse coding with the configured elastic-net knobs.
+pub(crate) fn serve_task(cfg: &ServeConfig) -> TaskSpec {
+    TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta }
+}
+
+/// Diffusion parameters for each served batch.
+pub(crate) fn serve_params(cfg: &ServeConfig) -> DiffusionParams {
+    DiffusionParams::new(cfg.infer.mu, cfg.infer.iters).with_threads(cfg.infer.threads)
+}
+
+/// Build a service engine over `graph`: CSR combine for sparse topologies;
+/// the dense constructor auto-detects the uniform fast path for "full".
+pub(crate) fn build_engine(
+    cfg: &ServeConfig,
+    graph: &Graph,
+    topo: &Topology,
+) -> Result<DiffusionEngine> {
+    if matches!(topo, Topology::FullyConnected) {
+        DiffusionEngine::new(&metropolis_weights(graph), cfg.dim, informed_slice(cfg).as_deref())
+    } else {
+        DiffusionEngine::new_csr(metropolis_csr(graph), cfg.dim, informed_slice(cfg).as_deref())
+    }
+}
+
+/// Deterministic session ingredients shared by the serial and pipelined
+/// executors. One RNG consumption order (topology → initial dictionary →
+/// request stream) means every executor serves the identical workload from
+/// the identical starting dictionary for a given config.
+pub(crate) struct SessionSetup {
+    pub graph: Graph,
+    pub topo: Topology,
+    pub dict0: DistributedDictionary,
+    pub stream: Vec<(u64, Vec<f32>)>,
+}
+
+pub(crate) fn setup(cfg: &ServeConfig) -> Result<SessionSetup> {
     let mut rng = Pcg64::new(cfg.seed);
     let (graph, topo) = build_topology(cfg, &mut rng)?;
-    let directed_edges = 2 * graph.edge_count();
-
-    // Engine over the CSR combine for sparse topologies; the dense
-    // constructor auto-detects the uniform fast path for "full".
-    let engine = if matches!(topo, Topology::FullyConnected) {
-        DiffusionEngine::new(&metropolis_weights(&graph), m, informed_slice(cfg).as_deref())?
-    } else {
-        DiffusionEngine::new_csr(metropolis_csr(&graph), m, informed_slice(cfg).as_deref())?
-    };
-    let combine_path = engine.combine_path();
-
-    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
-    let params =
-        DiffusionParams::new(cfg.infer.mu, cfg.infer.iters).with_threads(cfg.infer.threads);
-    let mut trainer =
-        OnlineTrainer::from_engine(engine, TrainerOptions { infer: params, prox: DictProx::None });
-    let mut dict = DistributedDictionary::random(
-        m,
+    let dict0 = DistributedDictionary::random(
+        cfg.dim,
         cfg.agents,
         cfg.agents,
-        task.atom_constraint(),
+        serve_task(cfg).atom_constraint(),
         &mut rng,
     )?;
-
     let stream = generate_stream(cfg, &mut rng)?;
+    Ok(SessionSetup { graph, topo, dict0, stream })
+}
+
+/// Loss of the first and last quarter of batches (the gap shows online
+/// adaptation while serving).
+pub(crate) fn loss_quarters(batch_losses: &[f64]) -> (f64, f64) {
+    let quarter = (batch_losses.len() / 4).max(1);
+    let first: Vec<f64> = batch_losses.iter().take(quarter).cloned().collect();
+    let last: Vec<f64> = batch_losses.iter().rev().take(quarter).cloned().collect();
+    (stats::mean(&first), stats::mean(&last))
+}
+
+/// Run a streaming session; `log` receives progress lines. Dispatches to
+/// the pipelined executor when `cfg.pipeline` is set, else runs the serial
+/// single-server loop.
+pub fn run_service(cfg: &ServeConfig, log: &mut dyn FnMut(&str)) -> Result<ServeReport> {
+    run_service_with_dict(cfg, log).map(|(report, _)| report)
+}
+
+/// [`run_service`] variant that also returns the final adapted dictionary
+/// (the parity tests compare it bitwise across executors).
+pub fn run_service_with_dict(
+    cfg: &ServeConfig,
+    log: &mut dyn FnMut(&str),
+) -> Result<(ServeReport, DistributedDictionary)> {
+    if cfg.pipeline {
+        crate::serve::pipeline::run_pipelined(cfg, crate::serve::PipelineExec::Threaded, log)
+    } else {
+        run_serial(cfg, log)
+    }
+}
+
+/// The serial single-server discrete-event loop (PR 2 semantics): batch
+/// formation couples to measured service times, and each batch's update
+/// completes before the next batch's inference starts (no staleness).
+fn run_serial(
+    cfg: &ServeConfig,
+    log: &mut dyn FnMut(&str),
+) -> Result<(ServeReport, DistributedDictionary)> {
+    let m = cfg.dim;
+    let SessionSetup { graph, topo, dict0: mut dict, stream } = setup(cfg)?;
+    let directed_edges = 2 * graph.edge_count();
+
+    let mut engine = build_engine(cfg, &graph, &topo)?;
+    let combine_path = engine.combine_path();
+    if cfg.infer.threads > 1 {
+        // Long-lived workers: the serving loop enters one SPMD region per
+        // batch, so per-batch thread spawns are pure overhead.
+        engine.set_pool(std::sync::Arc::new(crate::net::PersistentPool::new(
+            cfg.infer.threads,
+        )));
+    }
+
+    let task = serve_task(cfg);
+    let params = serve_params(cfg);
+    let mut trainer =
+        OnlineTrainer::from_engine(engine, TrainerOptions { infer: params, prox: DictProx::None });
+
     let mut queue = MicroBatchQueue::new(BatchPolicy::new(cfg.batch, cfg.max_wait_us));
     log(&format!(
         "serve: N={} M={} topology={} ({} directed edges, {} combine), B<={}, max_wait={}µs, \
@@ -256,10 +337,10 @@ pub fn run_service(cfg: &ServeConfig, log: &mut dyn FnMut(&str)) -> Result<Serve
 
     let batches = batch_losses.len();
     let duration_s = (now_us as f64 / 1e6).max(1e-9);
-    let quarter = (batches / 4).max(1);
-    let first: Vec<f64> = batch_losses.iter().take(quarter).cloned().collect();
-    let last: Vec<f64> = batch_losses.iter().rev().take(quarter).cloned().collect();
-    Ok(ServeReport {
+    let (loss_first_quarter, loss_last_quarter) = loss_quarters(&batch_losses);
+    let report = ServeReport {
+        mode: "serial",
+        pipeline_depth: 0,
         samples: served,
         batches,
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
@@ -269,11 +350,12 @@ pub fn run_service(cfg: &ServeConfig, log: &mut dyn FnMut(&str)) -> Result<Serve
         latency_p95_ms: stats::percentile(&latencies_ms, 95.0),
         latency_p99_ms: stats::percentile(&latencies_ms, 99.0),
         latency_max_ms: latencies_ms.iter().cloned().fold(0.0, f64::max),
-        loss_first_quarter: stats::mean(&first),
-        loss_last_quarter: stats::mean(&last),
+        loss_first_quarter,
+        loss_last_quarter,
         stats,
         combine_path,
-    })
+    };
+    Ok((report, dict))
 }
 
 fn informed_slice(cfg: &ServeConfig) -> Option<Vec<usize>> {

@@ -1,0 +1,185 @@
+//! Pipelined-serving parity: the three-stage concurrent executor must be
+//! **bit-identical** to its serial reference executor — same final
+//! dictionary, sample/batch counts, per-batch losses, and ψ-traffic
+//! `MessageStats` — for any pipeline depth and thread count, on full and
+//! partial batches, saturated and paced arrivals. Wall-clock figures
+//! (throughput, latency percentiles) are the only thing allowed to differ:
+//! the speedup is pure overlap, not a silently different algorithm.
+//!
+//! Plus the admission property the pipeline is built on: the shared
+//! micro-batching queue never blocks admission while a batch is in flight.
+
+use ddl::config::experiment::{InferenceConfig, ServeConfig};
+use ddl::serve::pipeline::{run_pipelined, PipelineExec};
+use ddl::serve::{BatchPolicy, SharedQueue};
+
+/// Ring N = 100 serving config scaled for test runtime (M and iters small;
+/// the schedule logic under test is size-independent).
+fn ring_cfg(samples: usize, threads: usize, depth: usize, rate: f64) -> ServeConfig {
+    let base = ServeConfig::default();
+    ServeConfig {
+        seed: 0x9A21,
+        agents: 100,
+        dim: 10,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 8,
+        max_wait_us: 400,
+        samples,
+        rate,
+        mu_w: 0.08,
+        pipeline: true,
+        pipeline_depth: depth,
+        infer: InferenceConfig { mu: 0.4, iters: 10, gamma: 0.08, delta: 0.2, threads },
+        ..base
+    }
+}
+
+fn assert_parity(cfg: &ServeConfig, label: &str) {
+    let (r_ref, d_ref) =
+        run_pipelined(cfg, PipelineExec::Reference, &mut |_| {}).expect("reference executor");
+    let (r_thr, d_thr) =
+        run_pipelined(cfg, PipelineExec::Threaded, &mut |_| {}).expect("threaded executor");
+
+    assert_eq!(
+        d_ref.mat().as_slice(),
+        d_thr.mat().as_slice(),
+        "{label}: final dictionaries must be bit-identical"
+    );
+    assert_eq!(r_ref.samples, r_thr.samples, "{label}: sample counts");
+    assert_eq!(r_ref.batches, r_thr.batches, "{label}: batch counts");
+    assert_eq!(r_ref.mean_batch, r_thr.mean_batch, "{label}: mean batch size");
+    assert_eq!(r_ref.stats, r_thr.stats, "{label}: ψ-traffic MessageStats");
+    assert_eq!(
+        r_ref.loss_first_quarter.to_bits(),
+        r_thr.loss_first_quarter.to_bits(),
+        "{label}: first-quarter loss"
+    );
+    assert_eq!(
+        r_ref.loss_last_quarter.to_bits(),
+        r_thr.loss_last_quarter.to_bits(),
+        "{label}: last-quarter loss"
+    );
+    assert_eq!(r_ref.combine_path, r_thr.combine_path);
+    assert_eq!(r_thr.mode, "pipelined");
+    assert_eq!(r_ref.mode, "pipelined-reference");
+    assert_eq!(r_thr.samples, cfg.samples, "{label}: every request served exactly once");
+}
+
+/// Saturated ring N = 100 stream, sweeping depth × threads, with the
+/// stream length chosen so the final batch is partial (44 = 5·8 + 4) —
+/// the engine re-shapes between full and partial batches mid-pipeline.
+#[test]
+fn pipelined_matches_reference_saturated() {
+    for &depth in &[1usize, 2] {
+        for &threads in &[1usize, 2] {
+            let cfg = ring_cfg(44, threads, depth, 0.0);
+            assert_parity(&cfg, &format!("saturated depth={depth} threads={threads}"));
+        }
+    }
+}
+
+/// Deeper pipeline than batches (depth > batch count) and exact-multiple
+/// stream lengths are schedule edge cases.
+#[test]
+fn pipelined_matches_reference_edge_depths() {
+    let cfg = ring_cfg(16, 2, 4, 0.0); // 2 batches, depth 4
+    assert_parity(&cfg, "depth exceeds batch count");
+    let cfg = ring_cfg(32, 1, 2, 0.0); // exact multiple, serial inference
+    assert_parity(&cfg, "exact-multiple stream");
+}
+
+/// Paced arrivals: formation is service-independent in pipeline mode (the
+/// virtual clock jumps only to arrival/deadline events), so the batch
+/// sequence — deadline-released partial batches included — is identical
+/// across executors, and so is everything downstream.
+#[test]
+fn pipelined_matches_reference_paced() {
+    // ~2k req/s against a 400 µs max-wait: a mix of full and
+    // deadline-released partial batches.
+    let cfg = ring_cfg(40, 2, 2, 2_000.0);
+    let (r_ref, _) =
+        run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).expect("reference executor");
+    assert!(
+        r_ref.batches > cfg.samples / cfg.batch,
+        "pacing should release some partial batches (got {} batches)",
+        r_ref.batches
+    );
+    assert_parity(&cfg, "paced arrivals");
+}
+
+/// The pipelined session still realizes the paper's online-learning
+/// property: the representation loss falls while serving (bounded
+/// staleness of `depth` batches does not break adaptation).
+#[test]
+fn pipelined_session_adapts_online() {
+    let mut cfg = ring_cfg(192, 2, 2, 0.0);
+    cfg.infer.iters = 60;
+    cfg.infer.mu = 0.3;
+    cfg.mu_w = 0.08;
+    let (report, _) =
+        run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).expect("threaded executor");
+    assert!(
+        report.loss_last_quarter < report.loss_first_quarter,
+        "online adaptation should reduce loss under the pipeline: {} -> {}",
+        report.loss_first_quarter,
+        report.loss_last_quarter
+    );
+}
+
+/// `run_service` dispatches on `cfg.pipeline` and reports the mode.
+#[test]
+fn run_service_dispatches_to_pipeline() {
+    let cfg = ring_cfg(16, 1, 2, 0.0);
+    let report = ddl::serve::run_service(&cfg, &mut |_| {}).unwrap();
+    assert_eq!(report.mode, "pipelined");
+    assert_eq!(report.pipeline_depth, 2);
+    assert_eq!(report.samples, 16);
+    let mut serial = cfg.clone();
+    serial.pipeline = false;
+    let report = ddl::serve::run_service(&serial, &mut |_| {}).unwrap();
+    assert_eq!(report.mode, "serial");
+    assert_eq!(report.pipeline_depth, 0);
+}
+
+/// Admission is never blocked while a batch is in flight: a popped batch
+/// is moved out of the queue's lock before inference starts, so concurrent
+/// producers always make immediate progress.
+#[test]
+fn admission_never_blocks_while_batch_in_flight() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let q = Arc::new(SharedQueue::new(BatchPolicy::new(4, 1_000)));
+    for i in 0..4 {
+        q.push(vec![i as f32], 0);
+    }
+    // Take a batch "into flight" — the queue lock is released the moment
+    // the batch is moved out.
+    let in_flight = q.pop_batch(0).expect("full batch ready");
+    assert_eq!(in_flight.len(), 4);
+    assert!(q.is_empty());
+
+    // While the batch is still in flight (not dropped, "processing"), a
+    // producer thread admits a burst; it must complete on its own — no
+    // dependence on batch completion.
+    let done = Arc::new(AtomicBool::new(false));
+    let producer = {
+        let q = Arc::clone(&q);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for i in 0..32 {
+                q.push(vec![i as f32], 10 + i as u64);
+            }
+            done.store(true, Ordering::SeqCst);
+        })
+    };
+    producer.join().expect("producer must finish while the batch is in flight");
+    assert!(done.load(Ordering::SeqCst));
+    assert_eq!(q.len(), 32, "all admissions landed while the batch was in flight");
+    // The in-flight batch is untouched by the new admissions.
+    assert_eq!(in_flight.len(), 4);
+    drop(in_flight);
+    // The backlog drains in policy-sized chunks afterwards.
+    assert_eq!(q.pop_batch(10).expect("backlog ready").len(), 4);
+}
