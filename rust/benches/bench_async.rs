@@ -1,0 +1,169 @@
+//! Asynchronous-diffusion figures: the acceptance scenario of ISSUE 4 and
+//! the tracked straggler numbers (methodology: EXPERIMENTS.md §Async).
+//!
+//! Scenario of record — **one 10×-slow agent on the ring, N = 100**
+//! (ring k = 2, exponential compute/link delays): the sync comparator is
+//! the async executor at τ = 0 (bit-for-bit the BSP trajectory, with the
+//! same delay model pricing its barriers), the async executor runs at
+//! τ = 4 clamped to the sync run's simulated completion time, and MSD is
+//! measured against the exact dual ν° ([`ddl::infer::exact_dual`]). The
+//! iteration count (2000; 1200 in `--fast`) is chosen so both executors
+//! are deep in the geometric tail — the cold-start magnitude build-up
+//! takes ~N/μ iterations — which is what "completes" means in the
+//! acceptance criterion.
+//!
+//! Derived figures written to `BENCH_async.json` (gated by
+//! `ddl bench-gate` against `bench/baselines/BENCH_async.json`):
+//!
+//! * `async_msd_parity_ring_n100_slow10x` — **1.0** when the async MSD at
+//!   equal simulated time sits within 1e-3 of sync (the acceptance bar),
+//!   else 0.0; the gate (min-frac 0.5) therefore fails on any violation;
+//! * `async_bsp_bitwise_parity` — 1.0 when τ = 0 under random delays
+//!   reproduces the `BspNetwork` ν trajectories bit-for-bit (redundant
+//!   with `tests/async_parity.rs`, but keeps the invariant visible in the
+//!   tracked bench artifact);
+//! * `async_time_speedup_to_equal_iters_ring_n100_slow10x` — sync
+//!   simulated completion time over async simulated completion time at
+//!   the same iteration target: the straggler stops charging the rest of
+//!   the network its round-trip, but bounded staleness still chains
+//!   long-run progress to it, so this is a modest, honest ratio;
+//! * `async_time_speedup_jitter_ring_n100` — the same ratio in the
+//!   *homogeneous jitter* scenario (no straggler, exponential compute and
+//!   link delays): here the barrier pays the max of every neighborhood's
+//!   draws each round while τ = 4 absorbs the jitter, the classic
+//!   asynchronous win.
+//!
+//! Wall-clock cost of the simulation itself (agent-iterations/s of the
+//! discrete-event core) is also timed, as `async DES ring N=100`.
+//!
+//! Pass `--fast` (or `BENCH_FAST=1`) for the CI smoke configuration.
+
+use ddl::bench::Bencher;
+use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::infer::{exact_dual, DiffusionParams};
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::net::{AsyncNetwork, AsyncParams, BspNetwork, DelayDist};
+use ddl::rng::Pcg64;
+use std::path::Path;
+
+const N: usize = 100;
+const TAU: usize = 4;
+
+fn jitter(tau: usize) -> AsyncParams {
+    AsyncParams::default()
+        .with_tau(tau)
+        .with_delays(DelayDist::Exp { mean_us: 100.0 }, DelayDist::Exp { mean_us: 20.0 })
+        .with_seed(0xA5_BE)
+}
+
+fn straggler(tau: usize) -> AsyncParams {
+    jitter(tau).with_slow_agent(0, 10.0)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("BENCH_FAST").map(|v| v != "0").unwrap_or(false);
+    let mut b = if fast { Bencher::quick() } else { Bencher::new() };
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    let m = if fast { 16 } else { 24 };
+    let iters = if fast { 1200 } else { 2000 };
+
+    // One problem instance for every figure in this file.
+    let mut rng = Pcg64::new(0xA51);
+    let dict =
+        DistributedDictionary::random(m, N, N, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let graph = Graph::generate(N, &Topology::Ring { k: 2 }, &mut rng);
+    let weights = metropolis_weights(&graph);
+    let x = rng.normal_vec(m);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+    let params = DiffusionParams::new(0.5, iters);
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000).unwrap();
+
+    // τ = 0 under the straggler's random delays must be bitwise the BSP
+    // run — the executor's correctness anchor, kept visible in the
+    // tracked artifact.
+    let mut bsp = BspNetwork::new(graph.clone(), weights.clone(), m, None);
+    bsp.run(&dict, &task, &x, params).unwrap();
+    let mut sync =
+        AsyncNetwork::new(graph.clone(), weights.clone(), m, None, straggler(0)).unwrap();
+    sync.run(&dict, &task, &x, params).unwrap();
+    let bitwise_ok = (0..N).all(|k| sync.nu(k) == bsp.nu(k)) && sync.stats() == bsp.stats();
+    derived.push(("async_bsp_bitwise_parity".to_string(), if bitwise_ok { 1.0 } else { 0.0 }));
+    let t_sync = sync.sim_time_us();
+    let msd_sync = sync.msd_vs(&exact.nu);
+    println!(
+        "straggler sync (tau=0): T = {:.4} s, MSD = {:.3e}, bitwise BSP parity: {bitwise_ok}",
+        t_sync as f64 / 1e6,
+        msd_sync,
+    );
+
+    // Async at τ = TAU, same iteration target: MSD at the sync time
+    // budget (the acceptance comparison), then completion time.
+    let mut anet =
+        AsyncNetwork::new(graph.clone(), weights.clone(), m, None, straggler(TAU)).unwrap();
+    let finished = anet.run_clamped(&dict, &task, &x, params, t_sync).unwrap();
+    let msd_async = anet.msd_vs(&exact.nu);
+    let msd_gap = (msd_async - msd_sync).abs();
+    anet.run(&dict, &task, &x, params).unwrap();
+    let t_async = anet.sim_time_us();
+    println!(
+        "straggler async (tau={TAU}): finished within T_sync: {finished}, T = {:.4} s, \
+         MSD at T_sync = {:.3e} (gap {:.3e}), max staleness {}",
+        t_async as f64 / 1e6,
+        msd_async,
+        msd_gap,
+        anet.max_staleness_observed()
+    );
+    derived.push((
+        "async_msd_parity_ring_n100_slow10x".to_string(),
+        if msd_gap <= 1e-3 { 1.0 } else { 0.0 },
+    ));
+    derived.push((
+        "async_time_speedup_to_equal_iters_ring_n100_slow10x".to_string(),
+        t_sync as f64 / (t_async as f64).max(1.0),
+    ));
+
+    // Homogeneous-jitter scenario: no straggler, the barrier pays the
+    // neighborhood max every round while τ absorbs it.
+    let mut jsync =
+        AsyncNetwork::new(graph.clone(), weights.clone(), m, None, jitter(0)).unwrap();
+    jsync.run(&dict, &task, &x, params).unwrap();
+    let mut jasync =
+        AsyncNetwork::new(graph.clone(), weights.clone(), m, None, jitter(TAU)).unwrap();
+    jasync.run(&dict, &task, &x, params).unwrap();
+    println!(
+        "jitter: sync T = {:.4} s, async T = {:.4} s ({:.2}x), traffic identical: {}",
+        jsync.sim_time_us() as f64 / 1e6,
+        jasync.sim_time_us() as f64 / 1e6,
+        jsync.sim_time_us() as f64 / (jasync.sim_time_us() as f64).max(1.0),
+        jsync.stats().messages == jasync.stats().messages,
+    );
+    derived.push((
+        "async_time_speedup_jitter_ring_n100".to_string(),
+        jsync.sim_time_us() as f64 / (jasync.sim_time_us() as f64).max(1.0),
+    ));
+
+    // Cost of the simulation machinery itself.
+    let des_iters = if fast { 200 } else { 500 };
+    let des_params = DiffusionParams::new(0.5, des_iters);
+    b.bench_work(
+        &format!("async DES ring N={N} ({des_iters} iters)"),
+        (N * des_iters) as f64,
+        || {
+            let mut net =
+                AsyncNetwork::new(graph.clone(), weights.clone(), m, None, straggler(TAU))
+                    .unwrap();
+            net.run(&dict, &task, &x, des_params).unwrap();
+            std::hint::black_box(net.nu(0)[0]);
+        },
+    );
+
+    println!("\nderived figures:");
+    for (k, v) in &derived {
+        println!("  {k} = {v:.3}");
+    }
+    b.write_csv(Path::new("results/bench_async.csv")).unwrap();
+    b.write_json(Path::new("BENCH_async.json"), &derived).unwrap();
+    println!("\nwrote results/bench_async.csv and BENCH_async.json");
+}

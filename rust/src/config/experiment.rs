@@ -210,6 +210,120 @@ impl ServeConfig {
     }
 }
 
+/// Asynchronous diffusion / straggler experiment (`ddl async`,
+/// `net/async_exec.rs`). Loaded from the TOML section `[async]`; the
+/// delay knobs feed [`crate::net::AsyncParams`] via [`Self::async_params`].
+#[derive(Clone, Debug)]
+pub struct AsyncConfig {
+    pub seed: u64,
+    /// Number of agents `N` (= atoms; one atom per agent, §IV-B).
+    pub agents: usize,
+    /// Data dimension `M`.
+    pub dim: usize,
+    /// Topology: `ring` | `grid` | `er` | `full`.
+    pub topology: String,
+    /// Neighbors per side for the ring topology.
+    pub ring_k: usize,
+    /// Edge probability for the `er` topology.
+    pub edge_prob: f64,
+    /// Staleness bound τ (`0` = barrier-synchronous, bitwise BSP).
+    pub tau: usize,
+    /// Compute-delay distribution: `zero` | `const` | `uniform` | `exp`.
+    pub compute_dist: String,
+    /// Compute-delay scale (mean / constant), µs.
+    pub compute_us: u64,
+    /// Link-delay distribution: `zero` | `const` | `uniform` | `exp`.
+    pub link_dist: String,
+    /// Link-delay scale (mean / constant), µs.
+    pub link_us: u64,
+    /// Straggler scenario: one slow agent; `None` = homogeneous network
+    /// (spell it `slow_agent = -1` in TOML, or pass `--no-straggler`).
+    pub slow_agent: Option<usize>,
+    /// Compute-delay multiplier for the slow agent.
+    pub slow_factor: f64,
+    /// Diffusion inference settings (μ, iters, elastic net; threads is
+    /// ignored — the discrete-event simulation is single-threaded). The
+    /// default horizon is past the ~`N/μ` cold-start build-up so the
+    /// reported MSD gap compares converged runs, not transients
+    /// (EXPERIMENTS.md §Async).
+    pub infer: InferenceConfig,
+    /// Sim-time checkpoints per run (MSD-vs-simulated-time table rows).
+    pub checkpoints: usize,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            seed: 0xA5_11C,
+            agents: 100,
+            dim: 64,
+            topology: "ring".into(),
+            ring_k: 2,
+            edge_prob: 0.1,
+            tau: 4,
+            compute_dist: "exp".into(),
+            compute_us: 100,
+            link_dist: "exp".into(),
+            link_us: 20,
+            slow_agent: Some(0),
+            slow_factor: 10.0,
+            infer: InferenceConfig { mu: 0.5, iters: 1500, gamma: 0.1, delta: 0.5, threads: 1 },
+            checkpoints: 4,
+        }
+    }
+}
+
+impl AsyncConfig {
+    /// Load from TOML (section `[async]`), falling back to defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let defaults = Self::default();
+        let mut c = defaults;
+        c.seed = doc.usize_or("async", "seed", c.seed as usize) as u64;
+        c.agents = doc.usize_or("async", "agents", c.agents);
+        c.dim = doc.usize_or("async", "dim", c.dim);
+        c.topology = doc.str_or("async", "topology", &c.topology).to_string();
+        c.ring_k = doc.usize_or("async", "ring_k", c.ring_k);
+        c.edge_prob = doc.f32_or("async", "edge_prob", c.edge_prob as f32) as f64;
+        c.tau = doc.usize_or("async", "tau", c.tau);
+        c.compute_dist = doc.str_or("async", "compute_dist", &c.compute_dist).to_string();
+        c.compute_us = doc.usize_or("async", "compute_us", c.compute_us as usize) as u64;
+        c.link_dist = doc.str_or("async", "link_dist", &c.link_dist).to_string();
+        c.link_us = doc.usize_or("async", "link_us", c.link_us as usize) as u64;
+        if let Some(v) = doc.get("async", "slow_agent") {
+            // `-1` is the documented "no straggler" spelling; a
+            // non-integer value keeps the default rather than silently
+            // disabling the scenario.
+            if let Some(i) = v.as_i64() {
+                c.slow_agent = if i < 0 { None } else { Some(i as usize) };
+            }
+        }
+        c.slow_factor = doc.f32_or("async", "slow_factor", c.slow_factor as f32) as f64;
+        c.infer.mu = doc.f32_or("async", "mu", c.infer.mu);
+        c.infer.iters = doc.usize_or("async", "iters", c.infer.iters);
+        c.infer.gamma = doc.f32_or("async", "gamma", c.infer.gamma);
+        c.infer.delta = doc.f32_or("async", "delta", c.infer.delta);
+        c.checkpoints = doc.usize_or("async", "checkpoints", c.checkpoints).max(1);
+        c
+    }
+
+    /// Materialize the executor-facing [`crate::net::AsyncParams`]
+    /// (delay-spec parsing can fail on an unknown distribution name).
+    pub fn async_params(&self) -> crate::Result<crate::net::AsyncParams> {
+        let mut p = crate::net::AsyncParams {
+            tau: self.tau,
+            compute: crate::net::DelayDist::parse(&self.compute_dist, self.compute_us)?,
+            link: crate::net::DelayDist::parse(&self.link_dist, self.link_us)?,
+            seed: self.seed,
+            ..crate::net::AsyncParams::default()
+        };
+        if let Some(k) = self.slow_agent {
+            p.slow_agents.push(k);
+            p.slow_factor = self.slow_factor;
+        }
+        Ok(p)
+    }
+}
+
 /// Residual loss selection for the novelty experiments (§IV-C).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ResidualKind {
@@ -420,6 +534,66 @@ mod tests {
         let d = ServeConfig::from_toml(&empty);
         assert_eq!(d.batch, ServeConfig::default().batch);
         assert_eq!(d.topology, ServeConfig::default().topology);
+    }
+
+    #[test]
+    fn async_defaults_sane() {
+        let c = AsyncConfig::default();
+        assert_eq!(c.agents, 100);
+        assert_eq!(c.topology, "ring");
+        assert_eq!(c.tau, 4);
+        assert_eq!(c.slow_agent, Some(0));
+        let p = c.async_params().unwrap();
+        assert_eq!(p.tau, 4);
+        assert_eq!(p.slow_agents, vec![0]);
+        assert!((p.slow_factor - 10.0).abs() < 1e-12);
+    }
+
+    /// Round trip for every knob exposed in the `[async]` TOML block.
+    #[test]
+    fn async_toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[async]\nseed = 42\nagents = 30\ndim = 12\ntopology = \"grid\"\nring_k = 3\n\
+             edge_prob = 0.4\ntau = 2\ncompute_dist = \"uniform\"\ncompute_us = 50\n\
+             link_dist = \"const\"\nlink_us = 9\nslow_agent = 7\nslow_factor = 6.0\n\
+             mu = 0.25\niters = 90\ngamma = 0.2\ndelta = 0.4\ncheckpoints = 8\n",
+        )
+        .unwrap();
+        let c = AsyncConfig::from_toml(&doc);
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.agents, 30);
+        assert_eq!(c.dim, 12);
+        assert_eq!(c.topology, "grid");
+        assert_eq!(c.ring_k, 3);
+        assert!((c.edge_prob - 0.4).abs() < 1e-6);
+        assert_eq!(c.tau, 2);
+        assert_eq!(c.compute_dist, "uniform");
+        assert_eq!(c.compute_us, 50);
+        assert_eq!(c.link_dist, "const");
+        assert_eq!(c.link_us, 9);
+        assert_eq!(c.slow_agent, Some(7));
+        assert!((c.slow_factor - 6.0).abs() < 1e-9);
+        assert!((c.infer.mu - 0.25).abs() < 1e-7);
+        assert_eq!(c.infer.iters, 90);
+        assert_eq!(c.checkpoints, 8);
+        let p = c.async_params().unwrap();
+        assert_eq!(p.compute, crate::net::DelayDist::Uniform { lo_us: 25, hi_us: 75 });
+        assert_eq!(p.link, crate::net::DelayDist::Constant { us: 9 });
+        // Absent section leaves defaults untouched; bad dist name errors.
+        let empty = TomlDoc::parse("").unwrap();
+        let d = AsyncConfig::from_toml(&empty);
+        assert_eq!(d.tau, AsyncConfig::default().tau);
+        // `slow_agent = -1` is the supported "no straggler" spelling; a
+        // non-integer value keeps the default instead of silently
+        // disabling the scenario.
+        let off = AsyncConfig::from_toml(&TomlDoc::parse("[async]\nslow_agent = -1\n").unwrap());
+        assert_eq!(off.slow_agent, None);
+        assert!(off.async_params().unwrap().slow_agents.is_empty());
+        let typo =
+            AsyncConfig::from_toml(&TomlDoc::parse("[async]\nslow_agent = 0.5\n").unwrap());
+        assert_eq!(typo.slow_agent, AsyncConfig::default().slow_agent);
+        let bad = AsyncConfig { compute_dist: "gauss".into(), ..AsyncConfig::default() };
+        assert!(bad.async_params().is_err());
     }
 
     #[test]

@@ -4,13 +4,17 @@
 //!   scene patches, denoise a corrupted image, compare to centralized [6];
 //! * [`novelty`] — Figs. 6–7 / Tables III–IV: streaming novel-document
 //!   detection with dictionary/network expansion per time-step;
+//! * [`straggler`] — `ddl async`: sync-vs-async diffusion under a delay
+//!   model (MSD vs simulated time, straggler scenarios);
 //! * [`csv`] — tiny CSV writer for `results/`.
 
 pub mod csv;
 pub mod denoise;
 pub mod novelty;
 pub mod quickstart;
+pub mod straggler;
 pub mod tuning;
 
 pub use denoise::{run_denoise, DenoiseReport};
 pub use novelty::{run_novelty, NoveltyAlgo, NoveltyReport, StepResult};
+pub use straggler::{run_straggler, AsyncRow, StragglerReport};

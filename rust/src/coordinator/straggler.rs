@@ -1,0 +1,280 @@
+//! Straggler experiment driver (`ddl async`): sync-vs-async diffusion on
+//! the same problem, same delay model, same simulated clock.
+//!
+//! The comparison is the one EXPERIMENTS.md §Async prescribes:
+//!
+//! 1. build one problem (topology, dictionary, sample) and one delay
+//!    scenario from [`AsyncConfig`];
+//! 2. run the **sync comparator** — the async executor at `τ = 0`, which
+//!    is bit-for-bit the BSP trajectory with the same delay model pricing
+//!    its barriers — to completion, yielding `T_sync`;
+//! 3. run the **async executor** (`τ` from the config) on fresh state,
+//!    stepping both through shared simulated-time checkpoints up to
+//!    `T_sync` and recording MSD against the exact dual ν°
+//!    ([`crate::infer::exact_dual`]) at each checkpoint.
+//!
+//! The headline numbers: the MSD gap at equal simulated time (acceptance:
+//! within 1e-3 for the one-10×-slow-agent ring), the wall-clock speedup to
+//! equal iterations, and the ψ-traffic [`MessageStats`] of both runs.
+
+use crate::config::experiment::AsyncConfig;
+use crate::error::{DdlError, Result};
+use crate::graph::{metropolis_weights, Graph, Topology};
+use crate::infer::{exact_dual, DiffusionParams};
+use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use crate::net::{AsyncNetwork, AsyncParams, MessageStats};
+use crate::rng::Pcg64;
+
+/// One simulated-time checkpoint of the sync-vs-async comparison.
+#[derive(Clone, Debug)]
+pub struct AsyncRow {
+    /// Checkpoint on the simulated clock (µs).
+    pub t_us: u64,
+    /// Sync (τ = 0) MSD vs the exact dual at this time.
+    pub msd_sync: f64,
+    /// Async (τ from config) MSD vs the exact dual at this time.
+    pub msd_async: f64,
+    /// Completed network-wide waves, sync executor.
+    pub sync_min_iters: usize,
+    /// Completed network-wide waves, async executor.
+    pub async_min_iters: usize,
+    /// Mean per-agent completed iterations, async executor.
+    pub async_mean_iters: f64,
+}
+
+/// Outcome of one straggler experiment.
+#[derive(Clone, Debug)]
+pub struct StragglerReport {
+    pub rows: Vec<AsyncRow>,
+    /// Simulated completion time of the sync comparator.
+    pub sync_time_us: u64,
+    /// Simulated completion time of the async executor (its own full run).
+    pub async_time_us: u64,
+    /// |MSD_async − MSD_sync| at `t = sync_time_us` (equal simulated time).
+    pub msd_gap: f64,
+    /// `sync_time_us / async_time_us`: wall-clock speedup to equal
+    /// iteration counts from relaxing the barrier.
+    pub time_speedup: f64,
+    pub sync_stats: MessageStats,
+    pub async_stats: MessageStats,
+    /// Largest staleness any async combine actually used (≤ τ).
+    pub max_staleness: usize,
+}
+
+impl StragglerReport {
+    /// Multi-line human-readable summary (the `ddl async` output body).
+    pub fn summary(&self, agents: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>12} {:>12} {:>12} {:>10} {:>10} {:>10}\n",
+            "sim time s", "msd sync", "msd async", "waves sync", "waves asyn", "mean iters"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:>12.4} {:>12.3e} {:>12.3e} {:>10} {:>10} {:>10.1}\n",
+                r.t_us as f64 / 1e6,
+                r.msd_sync,
+                r.msd_async,
+                r.sync_min_iters,
+                r.async_min_iters,
+                r.async_mean_iters,
+            ));
+        }
+        out.push_str(&format!(
+            "msd gap at equal simulated time: {:.3e}\n\
+             completion: sync {:.4} s, async {:.4} s (speedup {:.2}x), max staleness used {}\n\
+             traffic sync:  {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round\n\
+             traffic async: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round",
+            self.msd_gap,
+            self.sync_time_us as f64 / 1e6,
+            self.async_time_us as f64 / 1e6,
+            self.time_speedup,
+            self.max_staleness,
+            self.sync_stats.messages,
+            self.sync_stats.bytes as f64 / 1e6,
+            self.sync_stats.rounds,
+            self.sync_stats.bytes_per_agent_round(agents),
+            self.async_stats.messages,
+            self.async_stats.bytes as f64 / 1e6,
+            self.async_stats.rounds,
+            self.async_stats.bytes_per_agent_round(agents),
+        ));
+        out
+    }
+}
+
+/// Build the experiment topology named by the config.
+fn build_topology(cfg: &AsyncConfig, rng: &mut Pcg64) -> Result<Graph> {
+    let topo = match cfg.topology.as_str() {
+        "ring" => Topology::Ring { k: cfg.ring_k.max(1) },
+        "grid" => Topology::Grid,
+        "er" | "erdos" => Topology::ErdosRenyi { p: cfg.edge_prob },
+        "full" => Topology::FullyConnected,
+        other => {
+            return Err(DdlError::Config(format!(
+                "async: unknown topology '{other}' (ring|grid|er|full)"
+            )))
+        }
+    };
+    Ok(Graph::generate(cfg.agents, &topo, rng))
+}
+
+/// Run the sync-vs-async straggler comparison; `log` receives progress
+/// lines. See the module docs for the protocol.
+pub fn run_straggler(
+    cfg: &AsyncConfig,
+    log: &mut dyn FnMut(&str),
+) -> Result<StragglerReport> {
+    let mut rng = Pcg64::new(cfg.seed);
+    let graph = build_topology(cfg, &mut rng)?;
+    let weights = metropolis_weights(&graph);
+    let dict = DistributedDictionary::random(
+        cfg.dim,
+        cfg.agents,
+        cfg.agents,
+        AtomConstraint::UnitBall,
+        &mut rng,
+    )?;
+    let x = rng.normal_vec(cfg.dim);
+    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
+    let params = DiffusionParams::new(cfg.infer.mu, cfg.infer.iters);
+    let async_params = cfg.async_params()?;
+    let sync_params = AsyncParams { tau: 0, ..async_params.clone() };
+
+    log(&format!(
+        "async: N={} M={} topology={} ({} directed edges), iters={}, tau={}, \
+         compute {} ~{}us{}, link {} ~{}us",
+        cfg.agents,
+        cfg.dim,
+        cfg.topology,
+        2 * graph.edge_count(),
+        cfg.infer.iters,
+        cfg.tau,
+        cfg.compute_dist,
+        cfg.compute_us,
+        match cfg.slow_agent {
+            Some(k) => format!(", agent {k} {:.0}x slow", cfg.slow_factor),
+            None => String::new(),
+        },
+        cfg.link_dist,
+        cfg.link_us,
+    ));
+
+    // Ground truth for MSD.
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000)?;
+    log(&format!(
+        "exact dual: {} FISTA iters, grad norm {:.2e}",
+        exact.iters, exact.grad_norm
+    ));
+
+    // One full sync run pins the time axis (T_sync); the checkpointed
+    // instances below then replay/resume — same seeds, identical
+    // trajectories, so nothing is simulated twice on the async side.
+    let mut sync_full =
+        AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, sync_params.clone())?;
+    sync_full.run(&dict, &task, &x, params)?;
+    let sync_time_us = sync_full.sim_time_us();
+
+    let mut sync_net =
+        AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, sync_params)?;
+    let mut async_net = AsyncNetwork::new(graph, weights, cfg.dim, None, async_params)?;
+    let checkpoints = cfg.checkpoints.max(1);
+    let mut rows = Vec::with_capacity(checkpoints);
+    for c in 1..=checkpoints {
+        let t_us = (sync_time_us as u128 * c as u128 / checkpoints as u128) as u64;
+        sync_net.run_clamped(&dict, &task, &x, params, t_us)?;
+        async_net.run_clamped(&dict, &task, &x, params, t_us)?;
+        rows.push(AsyncRow {
+            t_us,
+            msd_sync: sync_net.msd_vs(&exact.nu),
+            msd_async: async_net.msd_vs(&exact.nu),
+            sync_min_iters: sync_net.min_iters_done(),
+            async_min_iters: async_net.min_iters_done(),
+            async_mean_iters: async_net.mean_iters_done(),
+        });
+    }
+    let last = rows.last().expect("checkpoints >= 1");
+    let msd_gap = (last.msd_async - last.msd_sync).abs();
+    // Resume the async instance to completion for its own clock/traffic
+    // figures (run_clamped resumes exactly; no second simulation needed).
+    async_net.run(&dict, &task, &x, params)?;
+    let async_time_us = async_net.sim_time_us();
+
+    Ok(StragglerReport {
+        rows,
+        sync_time_us,
+        async_time_us,
+        msd_gap,
+        time_speedup: sync_time_us as f64 / (async_time_us as f64).max(1.0),
+        sync_stats: sync_full.stats(),
+        async_stats: async_net.stats(),
+        max_staleness: async_net.max_staleness_observed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> AsyncConfig {
+        AsyncConfig {
+            agents: 12,
+            dim: 8,
+            ring_k: 1,
+            tau: 2,
+            compute_us: 50,
+            link_us: 10,
+            infer: crate::config::experiment::InferenceConfig {
+                mu: 0.3,
+                iters: 60,
+                gamma: 0.1,
+                delta: 0.5,
+                threads: 1,
+            },
+            checkpoints: 3,
+            ..AsyncConfig::default()
+        }
+    }
+
+    #[test]
+    fn straggler_report_is_consistent() {
+        let cfg = tiny_cfg();
+        let mut lines = Vec::new();
+        let r = run_straggler(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert_eq!(r.rows.len(), 3);
+        // Checkpoints are monotone in time and the last sits at T_sync.
+        assert!(r.rows.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert_eq!(r.rows.last().unwrap().t_us, r.sync_time_us);
+        // At T_sync the sync executor has finished all its waves.
+        assert_eq!(r.rows.last().unwrap().sync_min_iters, cfg.infer.iters);
+        // MSD decreases toward the exact dual over the run.
+        assert!(r.rows.last().unwrap().msd_sync < r.rows[0].msd_sync);
+        assert!(r.max_staleness <= cfg.tau);
+        assert!(r.sync_stats.messages > 0 && r.async_stats.messages > 0);
+        assert!(r.time_speedup > 0.0);
+        assert!(!r.summary(cfg.agents).is_empty());
+        assert!(!lines.is_empty());
+    }
+
+    #[test]
+    fn homogeneous_zero_delay_gap_is_zero() {
+        // With zero delays and τ = 0 both executors are the same BSP
+        // trajectory: the gap must be exactly zero.
+        let cfg = AsyncConfig {
+            tau: 0,
+            compute_dist: "zero".into(),
+            link_dist: "zero".into(),
+            slow_agent: None,
+            ..tiny_cfg()
+        };
+        let r = run_straggler(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(r.msd_gap, 0.0);
+        assert_eq!(r.sync_time_us, 0);
+    }
+
+    #[test]
+    fn unknown_topology_rejected() {
+        let cfg = AsyncConfig { topology: "torus".into(), ..tiny_cfg() };
+        assert!(run_straggler(&cfg, &mut |_| {}).is_err());
+    }
+}

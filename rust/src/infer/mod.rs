@@ -8,6 +8,12 @@
 //!   the step-size tuning procedure of §IV-A.
 //! * [`cost`] — dual-cost evaluation and the scalar cost-consensus
 //!   diffusion (Eq. 65) used for distributed novelty scoring.
+//!
+//! The matrix-form [`DiffusionEngine`] is the compute workhorse; the
+//! message-passing executors in [`crate::net`] (BSP, actors, async) run
+//! the identical recursion with explicit ψ exchange and are proven
+//! equivalent to it — the full executor matrix and the ψ-privacy
+//! dataflow diagram live in `ARCHITECTURE.md` at the repository root.
 
 pub mod cost;
 pub mod diffusion;

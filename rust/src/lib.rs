@@ -26,6 +26,11 @@
 //!
 //! The native rust implementation in [`infer`] mirrors the L1/L2 compute
 //! exactly and is cross-validated against the HLO path in integration tests.
+//!
+//! Start with `README.md` (orientation, quickstart, `ddl` subcommands) and
+//! `ARCHITECTURE.md` (executor matrix, ψ-privacy dataflow, determinism
+//! contracts) at the repository root; measurement methodology lives in
+//! `EXPERIMENTS.md`.
 
 pub mod baselines;
 pub mod bench;

@@ -8,13 +8,14 @@
 //! * `novelty`   — Fig. 6/7 novel-document-detection experiment
 //! * `tune`      — §IV-A step-size tuning curves (Fig. 4 procedure)
 //! * `serve`     — streaming inference service with online adaptation
+//! * `async`     — sync-vs-async diffusion under a straggler delay model
 //! * `bench-gate`— derived-speedup regression gate for BENCH_*.json
 //!
 //! Options can come from a TOML config (`--config path`) with CLI
 //! overrides; see `configs/*.toml`.
 
 use ddl::cli::Args;
-use ddl::config::experiment::{DenoiseConfig, NoveltyConfig, ServeConfig};
+use ddl::config::experiment::{AsyncConfig, DenoiseConfig, NoveltyConfig, ServeConfig};
 use ddl::config::TomlDoc;
 use ddl::coordinator::{run_denoise, run_novelty, NoveltyAlgo};
 use std::path::Path;
@@ -34,6 +35,7 @@ fn main() {
         Some("novelty") => cmd_novelty(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("async") => cmd_async(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             println!("{HELP}");
@@ -63,6 +65,15 @@ COMMANDS:
               (three-stage concurrent pipeline: batch formation | diffusion
               inference | Eq. 51 update overlap on separate threads;
               bit-identical schedule; --no-pipeline overrides the TOML)
+  async       sync-vs-async diffusion, straggler modeling [--config f]
+              [--tau t] [--agents n] [--dim m] [--topology ring|grid|er|full]
+              [--mu x] [--iters n] [--compute-dist zero|const|uniform|exp]
+              [--compute-us t] [--link-dist d] [--link-us t]
+              [--slow-agent k | --no-straggler] [--slow-factor x]
+              [--checkpoints c] [--ring-k k]
+              (per-edge psi exchange with bounded staleness tau on a
+              deterministic discrete-event clock; tau = 0 reproduces the
+              BSP trajectory bit-for-bit and serves as the sync baseline)
   bench-gate  compare derived speedups in --current json against --baseline
               json; fail below --min-frac (default 0.5) of the baseline
 
@@ -222,6 +233,42 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         let report = ddl::serve::run_service(&cfg, &mut |s| println!("{s}"))?;
         println!("== serve report ==");
+        println!("{}", report.summary(cfg.agents));
+        Ok(())
+    })
+}
+
+fn cmd_async(args: &Args) -> i32 {
+    run(|| {
+        let doc = match args.get("config") {
+            Some(p) => TomlDoc::load(Path::new(p))?,
+            None => TomlDoc::default(),
+        };
+        let mut cfg = AsyncConfig::from_toml(&doc);
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.agents = args.usize_or("agents", cfg.agents)?;
+        cfg.dim = args.usize_or("dim", cfg.dim)?;
+        cfg.topology = args.str_or("topology", &cfg.topology).to_string();
+        cfg.ring_k = args.usize_or("ring-k", cfg.ring_k)?;
+        cfg.tau = args.usize_or("tau", cfg.tau)?;
+        cfg.compute_dist = args.str_or("compute-dist", &cfg.compute_dist).to_string();
+        cfg.compute_us = args.u64_or("compute-us", cfg.compute_us)?;
+        cfg.link_dist = args.str_or("link-dist", &cfg.link_dist).to_string();
+        cfg.link_us = args.u64_or("link-us", cfg.link_us)?;
+        if let Some(k) = args.get("slow-agent") {
+            cfg.slow_agent = Some(k.parse().map_err(|_| {
+                ddl::DdlError::Config(format!("--slow-agent: bad value '{k}'"))
+            })?);
+        }
+        if args.flag("no-straggler") {
+            cfg.slow_agent = None;
+        }
+        cfg.slow_factor = args.f32_or("slow-factor", cfg.slow_factor as f32)? as f64;
+        cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
+        cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
+        cfg.checkpoints = args.usize_or("checkpoints", cfg.checkpoints)?.max(1);
+        let report = ddl::coordinator::run_straggler(&cfg, &mut |s| println!("{s}"))?;
+        println!("== async report (MSD vs simulated time) ==");
         println!("{}", report.summary(cfg.agents));
         Ok(())
     })

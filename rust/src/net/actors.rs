@@ -17,6 +17,7 @@ use crate::graph::Graph;
 use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
+use crate::net::bsp::adapt_step;
 use crate::net::message::{MessageStats, PsiMessage};
 use crate::net::pool::chunk_range;
 use crate::ops::project::clip_linf;
@@ -108,18 +109,22 @@ pub fn run_threaded(
                         .sum();
 
                     for iter in 0..params.iters {
-                        // Adapt every owned agent.
+                        // Adapt every owned agent (shared step, see
+                        // `bsp::adapt_step`).
                         for (i, k) in owned.clone().enumerate() {
-                            dict.block_correlations(k, &nu[i], &mut thr);
-                            let (start, len) = dict.block(k);
-                            for q in start..start + len {
-                                thr[q] = task.threshold(thr[q]) * (-params.mu * inv_delta);
-                            }
-                            for j in 0..m {
-                                psi[i][j] = nu[i][j]
-                                    - params.mu * (cf_over_n * nu[i][j] - theta[k] * x[j]);
-                            }
-                            dict.block_accumulate(k, &thr, &mut psi[i]);
+                            adapt_step(
+                                dict,
+                                task,
+                                x,
+                                theta[k],
+                                k,
+                                &nu[i],
+                                &mut psi[i],
+                                &mut thr,
+                                params.mu,
+                                cf_over_n,
+                                inv_delta,
+                            );
                         }
                         // Ship ψ to cross-worker neighbors (one message per
                         // directed edge, as in the per-agent executor).

@@ -1,0 +1,918 @@
+//! Asynchronous per-edge diffusion executor with straggler modeling.
+//!
+//! The BSP executor ([`crate::net::BspNetwork`]) and the actor executor
+//! ([`crate::net::actors::run_threaded`]) both impose a network-wide
+//! barrier: iteration `i`'s combine waits for *every* neighbor's ψ of
+//! iteration `i`. The Big-Data deployment the paper targets — hundreds of
+//! agents at different spatial locations — is exactly where that barrier
+//! hurts: one slow agent (or one slow link) throttles the whole network.
+//! The asynchronous dictionary-learning literature (Daneshmand, Scutari,
+//! Facchinei, arXiv:1612.07335; time-varying digraphs, arXiv:1808.05933)
+//! shows the recursion tolerates relaxed, time-varying connectivity.
+//!
+//! [`AsyncNetwork`] relaxes the barrier to **per-edge ψ exchange with
+//! bounded staleness**: agent `k` at local iteration `i` combines with,
+//! from each neighbor, the *freshest received* ψ of iteration `≤ i`,
+//! gated only by the staleness bound — that iteration must be
+//! `≥ i − τ` ([`AsyncParams::tau`]). Agents otherwise free-run at their
+//! own pace.
+//!
+//! ## Deterministic discrete-event clock
+//!
+//! Execution is a single-threaded discrete-event simulation on a `u64`
+//! microsecond clock (the same virtual-time substrate as
+//! [`crate::serve::queue`]). Per-agent compute delays and per-directed-edge
+//! link delays are sampled from dedicated [`Pcg64`] streams split off one
+//! root seed ([`AsyncParams::seed`]) in a fixed order, so every straggler
+//! scenario — slow agent, slow link, heterogeneous compute
+//! ([`DelayDist`]) — replays **bit-identically** for a given seed: same ν
+//! trajectories, same [`MessageStats`], same simulated completion time.
+//! Events at equal timestamps are ordered by a monotone sequence number,
+//! so ties (e.g. the all-zero-delay case) are deterministic too.
+//!
+//! ## Degeneracy to BSP — the correctness anchor
+//!
+//! With `τ = 0` the staleness gate forces every combine to use exactly
+//! iteration-`i` ψ from every neighbor, and the combine accumulates in
+//! ascending-neighbor order — the identical floating-point arithmetic of
+//! [`crate::net::BspNetwork`]. The ν trajectories are therefore
+//! **bit-for-bit equal to BSP for *any* delay configuration** (delays then
+//! shift only the clock, not the iterates), and in particular for zero
+//! delays (`tests/async_parity.rs`, enforced bitwise). `τ = 0` with
+//! nonzero delays *is* the barrier-synchronous baseline with a cost
+//! model — which is how the straggler experiments compute the sync
+//! comparator's simulated completion time.
+//!
+//! ## Accounting
+//!
+//! Traffic uses the same [`MessageStats`] the other executors return: one
+//! ψ message of `M` floats per directed edge per adapt, so at equal
+//! iteration counts `messages`/`bytes` match BSP exactly. `rounds`
+//! follows the network-wide-exchange convention of [`crate::net::message`]
+//! generalized to asynchrony: the round counter is the **minimum** number
+//! of combines completed by any agent (the number of full exchange waves
+//! the network has finished), which coincides with the BSP round count at
+//! completion.
+//!
+//! Drive it with `ddl async` (TOML `[async]`, see
+//! [`crate::config::experiment::AsyncConfig`]), benchmark it with
+//! `cargo bench --bench bench_async`, and see `ARCHITECTURE.md` (repo
+//! root) for where this executor sits in the executor matrix.
+
+use crate::error::{DdlError, Result};
+use crate::graph::Graph;
+use crate::infer::DiffusionParams;
+use crate::math::Mat;
+use crate::model::{DistributedDictionary, TaskSpec};
+use crate::net::message::MessageStats;
+use crate::ops::project::clip_linf;
+use crate::rng::Pcg64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Delay distribution for compute steps and link traversals, sampled on a
+/// microsecond clock. `Uniform` and `Exp` model heterogeneous compute and
+/// bursty links; `Zero`/`Constant` give fully predictable schedules.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayDist {
+    /// Always 0 µs.
+    Zero,
+    /// Fixed delay.
+    Constant { us: u64 },
+    /// Uniform integer delay in `[lo_us, hi_us]` (inclusive).
+    Uniform { lo_us: u64, hi_us: u64 },
+    /// Exponential delay with the given mean (rounded to whole µs).
+    Exp { mean_us: f64 },
+}
+
+impl DelayDist {
+    /// Draw one delay. `Zero`/`Constant` consume no randomness; the other
+    /// variants consume exactly one draw from `rng` — each simulated
+    /// component owns a dedicated stream, so draw counts never interleave.
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        match *self {
+            DelayDist::Zero => 0,
+            DelayDist::Constant { us } => us,
+            DelayDist::Uniform { lo_us, hi_us } => {
+                let (lo, hi) = (lo_us.min(hi_us), lo_us.max(hi_us));
+                if hi > lo {
+                    lo + rng.next_below(hi - lo + 1)
+                } else {
+                    lo
+                }
+            }
+            DelayDist::Exp { mean_us } => {
+                let u = rng.next_f64().max(1e-12);
+                (-u.ln() * mean_us.max(0.0)).round() as u64
+            }
+        }
+    }
+
+    /// Parse a TOML/CLI spec: `zero`, `const`, `uniform` (spread
+    /// `[scale/2, 3·scale/2]`), or `exp`, scaled by `scale_us`.
+    pub fn parse(kind: &str, scale_us: u64) -> Result<DelayDist> {
+        Ok(match kind {
+            "zero" => DelayDist::Zero,
+            "const" | "constant" => DelayDist::Constant { us: scale_us },
+            "uniform" => {
+                DelayDist::Uniform { lo_us: scale_us / 2, hi_us: scale_us + scale_us / 2 }
+            }
+            "exp" | "exponential" => DelayDist::Exp { mean_us: scale_us as f64 },
+            other => {
+                return Err(DdlError::Config(format!(
+                    "unknown delay distribution '{other}' (zero|const|uniform|exp)"
+                )))
+            }
+        })
+    }
+}
+
+/// Asynchrony and straggler-scenario knobs.
+#[derive(Clone, Debug)]
+pub struct AsyncParams {
+    /// Staleness bound τ: combine at local iteration `i` may use a
+    /// neighbor ψ as old as iteration `i − τ`. `0` = barrier-synchronous
+    /// (bit-for-bit the BSP trajectory).
+    pub tau: usize,
+    /// Per-iteration compute delay (adapt + combine, one draw per
+    /// iteration per agent).
+    pub compute: DelayDist,
+    /// Per-message link delay (one draw per directed edge per iteration).
+    pub link: DelayDist,
+    /// Root seed for all delay streams.
+    pub seed: u64,
+    /// Agents whose compute delay is multiplied by [`Self::slow_factor`]
+    /// (the "slow agent" straggler scenario).
+    pub slow_agents: Vec<usize>,
+    /// Compute-delay multiplier for [`Self::slow_agents`].
+    pub slow_factor: f64,
+    /// Undirected edges whose link delay (both directions) is multiplied
+    /// by [`Self::slow_link_factor`] (the "slow link" scenario).
+    pub slow_links: Vec<(usize, usize)>,
+    /// Link-delay multiplier for [`Self::slow_links`].
+    pub slow_link_factor: f64,
+}
+
+impl Default for AsyncParams {
+    /// Zero delays and `τ = 0`: the executor degenerates to the BSP
+    /// trajectory on a zero-cost clock.
+    fn default() -> Self {
+        AsyncParams {
+            tau: 0,
+            compute: DelayDist::Zero,
+            link: DelayDist::Zero,
+            seed: 0xA5_1C,
+            slow_agents: Vec::new(),
+            slow_factor: 10.0,
+            slow_links: Vec::new(),
+            slow_link_factor: 10.0,
+        }
+    }
+}
+
+impl AsyncParams {
+    /// Builder-style staleness bound.
+    pub fn with_tau(mut self, tau: usize) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    /// Builder-style delay distributions.
+    pub fn with_delays(mut self, compute: DelayDist, link: DelayDist) -> Self {
+        self.compute = compute;
+        self.link = link;
+        self
+    }
+
+    /// Builder-style slow-agent straggler.
+    pub fn with_slow_agent(mut self, agent: usize, factor: f64) -> Self {
+        self.slow_agents.push(agent);
+        self.slow_factor = factor;
+        self
+    }
+
+    /// Builder-style seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Discrete-event kinds. ψ payloads ride inside the event queue — the
+/// "network" is the queue itself.
+enum EventKind {
+    /// Agent finished computing (adapt of its next iteration).
+    AdaptDone { agent: usize },
+    /// A ψ message reaches `to`; `nb_slot` is the sender's position in
+    /// `to`'s sorted neighbor list.
+    Deliver { to: usize, nb_slot: usize, iter: usize, psi: Vec<f32> },
+}
+
+struct Event {
+    t: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(other.t, other.seq))
+    }
+}
+
+/// Per-agent simulation state.
+struct AgentState {
+    nu: Vec<f32>,
+    psi: Vec<f32>,
+    /// Combines completed; also the iteration index of the next adapt.
+    done: usize,
+    /// Adapt finished but combine gated on the staleness bound.
+    waiting: bool,
+    /// Received ψ per neighbor slot: `(iter, psi)`, pruned at combine.
+    inbox: Vec<Vec<(usize, Vec<f32>)>>,
+    /// Dedicated compute-delay stream.
+    rng: Pcg64,
+    /// Compute-delay multiplier (straggler scenarios).
+    slow: f64,
+}
+
+/// Asynchronous per-edge diffusion executor (see the module docs).
+pub struct AsyncNetwork {
+    agents: Vec<AgentState>,
+    graph: Graph,
+    /// Combination weights `a[l][k]` aligned with the graph (column = k).
+    weights: Mat,
+    theta: Vec<f32>,
+    params: AsyncParams,
+    /// Dedicated link-delay stream per directed edge `[agent][nb_slot]`.
+    link_rngs: Vec<Vec<Pcg64>>,
+    /// Link-delay multiplier per directed edge.
+    link_slow: Vec<Vec<f64>>,
+    /// `rev_slot[k][j]`: position of `k` in the neighbor list of
+    /// `graph.neighbors(k)[j]` (the receiver-side inbox slot).
+    rev_slot: Vec<Vec<usize>>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now_us: u64,
+    stats: MessageStats,
+    /// Threshold scratch (K), shared across agents — the simulation is
+    /// single-threaded.
+    thr: Vec<f32>,
+    m: usize,
+    started: bool,
+    target_iters: usize,
+    mu: f32,
+    /// Agents that completed `target_iters` combines.
+    done_count: usize,
+    /// Histogram of agents per completed-combine count (round tracking).
+    level_counts: Vec<usize>,
+    cur_min: usize,
+    max_staleness: usize,
+    last_combine_us: u64,
+}
+
+impl AsyncNetwork {
+    /// Build over a graph with its (doubly-stochastic) combination matrix;
+    /// `informed` as in [`crate::infer::DiffusionEngine::new`].
+    pub fn new(
+        graph: Graph,
+        weights: Mat,
+        m: usize,
+        informed: Option<&[usize]>,
+        params: AsyncParams,
+    ) -> Result<Self> {
+        let n = graph.n();
+        if weights.rows() != n || weights.cols() != n {
+            return Err(DdlError::Shape("combination matrix shape mismatch".into()));
+        }
+        for &k in &params.slow_agents {
+            if k >= n {
+                return Err(DdlError::Config(format!("slow agent {k} out of range")));
+            }
+        }
+        let theta = crate::infer::diffusion::build_theta(n, informed)?;
+        let mut root = Pcg64::new(params.seed);
+        let mut tag = 0u64;
+        let mut agents = Vec::with_capacity(n);
+        for k in 0..n {
+            let slow = if params.slow_agents.contains(&k) { params.slow_factor } else { 1.0 };
+            agents.push(AgentState {
+                nu: vec![0.0; m],
+                psi: vec![0.0; m],
+                done: 0,
+                waiting: false,
+                inbox: vec![Vec::new(); graph.degree(k)],
+                rng: root.split(tag),
+                slow,
+            });
+            tag += 1;
+        }
+        let mut link_rngs = Vec::with_capacity(n);
+        let mut link_slow = Vec::with_capacity(n);
+        let mut rev_slot = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut rngs = Vec::with_capacity(graph.degree(k));
+            let mut slows = Vec::with_capacity(graph.degree(k));
+            let mut revs = Vec::with_capacity(graph.degree(k));
+            for &nb in graph.neighbors(k) {
+                rngs.push(root.split(tag));
+                tag += 1;
+                let slowed = params
+                    .slow_links
+                    .iter()
+                    .any(|&(a, b)| (a == k && b == nb) || (a == nb && b == k));
+                slows.push(if slowed { params.slow_link_factor } else { 1.0 });
+                revs.push(
+                    graph
+                        .neighbors(nb)
+                        .iter()
+                        .position(|&x| x == k)
+                        .expect("graph adjacency must be symmetric"),
+                );
+            }
+            link_rngs.push(rngs);
+            link_slow.push(slows);
+            rev_slot.push(revs);
+        }
+        Ok(AsyncNetwork {
+            agents,
+            graph,
+            weights,
+            theta,
+            params,
+            link_rngs,
+            link_slow,
+            rev_slot,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now_us: 0,
+            stats: MessageStats::default(),
+            thr: Vec::new(),
+            m,
+            started: false,
+            target_iters: 0,
+            mu: 0.0,
+            done_count: 0,
+            level_counts: Vec::new(),
+            cur_min: 0,
+            max_staleness: 0,
+            last_combine_us: 0,
+        })
+    }
+
+    fn push_event(&mut self, t: u64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { t, seq, kind }));
+    }
+
+    fn sample_compute(&mut self, k: usize) -> u64 {
+        let ag = &mut self.agents[k];
+        let base = self.params.compute.sample(&mut ag.rng);
+        (base as f64 * ag.slow).round() as u64
+    }
+
+    fn sample_link(&mut self, k: usize, slot: usize) -> u64 {
+        let base = self.params.link.sample(&mut self.link_rngs[k][slot]);
+        (base as f64 * self.link_slow[k][slot]).round() as u64
+    }
+
+    fn ensure_started(&mut self, dict: &DistributedDictionary, params: DiffusionParams) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        self.target_iters = params.iters;
+        self.mu = params.mu;
+        self.thr = vec![0.0; dict.k()];
+        self.level_counts = vec![0; params.iters + 1];
+        self.level_counts[0] = self.agents.len();
+        if params.iters == 0 {
+            self.done_count = self.agents.len();
+            return;
+        }
+        for k in 0..self.agents.len() {
+            let d = self.sample_compute(k);
+            self.push_event(d, EventKind::AdaptDone { agent: k });
+        }
+    }
+
+    /// Run the full diffusion: every agent completes `params.iters`
+    /// combines. Problem inputs must not change across calls on one
+    /// executor instance (the simulation state persists).
+    pub fn run(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+        params: DiffusionParams,
+    ) -> Result<()> {
+        self.run_clamped(dict, task, x, params, u64::MAX).map(|_| ())
+    }
+
+    /// Run until every agent completes `params.iters` combines **or** the
+    /// simulated clock would pass `t_stop_us`, whichever comes first.
+    /// Returns `true` when the network finished. Calling again with a
+    /// later clamp resumes exactly where the simulation paused — the MSD-
+    /// vs-simulated-time curves in `bench_async.rs` are produced this way.
+    pub fn run_clamped(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+        params: DiffusionParams,
+        t_stop_us: u64,
+    ) -> Result<bool> {
+        let n = self.agents.len();
+        if x.len() != self.m {
+            return Err(DdlError::Shape(format!(
+                "sample length {} != executor dimension {}",
+                x.len(),
+                self.m
+            )));
+        }
+        if dict.agents() != n {
+            return Err(DdlError::Shape(format!(
+                "dictionary has {} agents, executor {n}",
+                dict.agents()
+            )));
+        }
+        if dict.m() != self.m {
+            return Err(DdlError::Shape("dictionary row dimension mismatch".into()));
+        }
+        self.ensure_started(dict, params);
+        if params.iters != self.target_iters || params.mu.to_bits() != self.mu.to_bits() {
+            return Err(DdlError::Config(
+                "async executor resumed with different DiffusionParams (mu/iters)".into(),
+            ));
+        }
+        while self.done_count < n {
+            let next_t = match self.heap.peek() {
+                Some(Reverse(ev)) => ev.t,
+                None => {
+                    return Err(DdlError::Runtime(
+                        "async executor stalled: agents pending but no events queued".into(),
+                    ))
+                }
+            };
+            if next_t > t_stop_us {
+                return Ok(false);
+            }
+            let Reverse(ev) = self.heap.pop().expect("peeked event must pop");
+            self.now_us = self.now_us.max(ev.t);
+            match ev.kind {
+                EventKind::AdaptDone { agent } => {
+                    self.on_adapt_done(agent, ev.t, dict, task, x)
+                }
+                EventKind::Deliver { to, nb_slot, iter, psi } => {
+                    self.agents[to].inbox[nb_slot].push((iter, psi));
+                    if self.agents[to].waiting {
+                        self.try_combine(to, ev.t, task);
+                    }
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Adapt (Eq. 31a) for agent `k`'s iteration `done`, then ship ψ to
+    /// every neighbor and attempt the gated combine.
+    fn on_adapt_done(
+        &mut self,
+        k: usize,
+        t: u64,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        x: &[f32],
+    ) {
+        let n = self.agents.len();
+        let m = self.m;
+        let cf_over_n = task.conj_grad_scale() / n as f32;
+        let inv_delta = 1.0 / task.delta();
+        let mu = self.mu;
+        let theta_k = self.theta[k];
+        {
+            // The arithmetic is literally the BSP executor's adapt step
+            // (one shared function, so the copies cannot drift).
+            let thr = &mut self.thr;
+            let ag = &mut self.agents[k];
+            crate::net::bsp::adapt_step(
+                dict, task, x, theta_k, k, &ag.nu, &mut ag.psi, thr, mu, cf_over_n, inv_delta,
+            );
+        }
+        // Ship ψ along every outgoing edge (one message per directed edge
+        // per iteration — same totals as BSP at equal iteration counts).
+        let iter = self.agents[k].done;
+        for j in 0..self.graph.degree(k) {
+            let delay = self.sample_link(k, j);
+            let nb = self.graph.neighbors(k)[j];
+            let slot = self.rev_slot[k][j];
+            let psi = self.agents[k].psi.clone();
+            self.stats.record_exchange(1, m);
+            self.push_event(
+                t.saturating_add(delay),
+                EventKind::Deliver { to: nb, nb_slot: slot, iter, psi },
+            );
+        }
+        self.agents[k].waiting = true;
+        self.try_combine(k, t, task);
+    }
+
+    /// Gated combine: needs, from every neighbor, a received ψ of
+    /// iteration in `[done − τ, done]`; uses the freshest such ψ.
+    fn try_combine(&mut self, k: usize, t: u64, task: &TaskSpec) {
+        let i = self.agents[k].done;
+        let tau = self.params.tau;
+        // Gate check first (no partial state changes on failure).
+        for slots in &self.agents[k].inbox {
+            let best = slots.iter().filter(|e| e.0 <= i).map(|e| e.0).max();
+            match best {
+                Some(b) if b + tau >= i => {}
+                _ => return,
+            }
+        }
+        let akk = self.weights.get(k, k);
+        let clip = task.dual_clip();
+        let m = self.m;
+        // Combine: a_{kk}ψ_k first, then neighbors in ascending order —
+        // exactly the accumulation order of `BspNetwork::run` (its inbox
+        // fills in ascending sender order).
+        let neighbors = self.graph.neighbors(k);
+        let mut staleness_max = 0usize;
+        {
+            let ag = &mut self.agents[k];
+            for idx in 0..m {
+                ag.nu[idx] = akk * ag.psi[idx];
+            }
+            for (j, &nb) in neighbors.iter().enumerate() {
+                let slots = &mut ag.inbox[j];
+                let used = slots
+                    .iter()
+                    .filter(|e| e.0 <= i)
+                    .max_by_key(|e| e.0)
+                    .map(|e| e.0)
+                    .expect("gate checked above");
+                let pos = slots.iter().position(|e| e.0 == used).expect("entry exists");
+                let w = self.weights.get(nb, k);
+                {
+                    let src = &slots[pos].1;
+                    for idx in 0..m {
+                        ag.nu[idx] += w * src[idx];
+                    }
+                }
+                staleness_max = staleness_max.max(i - used);
+                // Entries older than the one just used can never be
+                // selected again (the local iteration only increases).
+                slots.retain(|e| e.0 >= used);
+            }
+            if let Some(b) = clip {
+                clip_linf(&mut ag.nu, b);
+            }
+            ag.waiting = false;
+            ag.done = i + 1;
+        }
+        self.max_staleness = self.max_staleness.max(staleness_max);
+        self.last_combine_us = t;
+        // Round tracking: one round per completed network-wide wave.
+        self.level_counts[i] -= 1;
+        self.level_counts[i + 1] += 1;
+        if i == self.cur_min && self.level_counts[i] == 0 {
+            self.cur_min += 1;
+            self.stats.end_round();
+        }
+        if self.agents[k].done == self.target_iters {
+            self.done_count += 1;
+        } else {
+            let d = self.sample_compute(k);
+            self.push_event(t.saturating_add(d), EventKind::AdaptDone { agent: k });
+        }
+    }
+
+    /// Agent `k`'s dual estimate.
+    pub fn nu(&self, k: usize) -> &[f32] {
+        &self.agents[k].nu
+    }
+
+    /// Combines completed by agent `k`.
+    pub fn iters_done(&self, k: usize) -> usize {
+        self.agents[k].done
+    }
+
+    /// Minimum combines completed across all agents (= completed
+    /// network-wide waves = the `rounds` counter).
+    pub fn min_iters_done(&self) -> usize {
+        self.cur_min
+    }
+
+    /// Mean combines completed across all agents.
+    pub fn mean_iters_done(&self) -> f64 {
+        let total: usize = self.agents.iter().map(|a| a.done).sum();
+        total as f64 / self.agents.len().max(1) as f64
+    }
+
+    /// Simulated time of the most recent combine (µs); the completion time
+    /// of the network once [`Self::run`] returns.
+    pub fn sim_time_us(&self) -> u64 {
+        self.last_combine_us
+    }
+
+    /// Current simulated clock (µs) — the time of the last processed event.
+    pub fn clock_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Largest per-neighbor staleness `i − iter(ψ used)` observed by any
+    /// combine; never exceeds [`AsyncParams::tau`].
+    pub fn max_staleness_observed(&self) -> usize {
+        self.max_staleness
+    }
+
+    /// Traffic statistics (see the accounting note in the module docs).
+    pub fn stats(&self) -> MessageStats {
+        self.stats
+    }
+
+    /// Normalized mean-square deviation of the agents' duals from a
+    /// reference `ν` (typically [`crate::infer::exact_dual`]'s ν°):
+    /// `mean_k ‖ν_k − ν_ref‖² / ‖ν_ref‖²`.
+    pub fn msd_vs(&self, nu_ref: &[f32]) -> f64 {
+        let denom = crate::math::vector::norm2_sq(nu_ref).max(1e-30) as f64;
+        let sum: f64 = self
+            .agents
+            .iter()
+            .map(|a| crate::math::vector::dist_sq(&a.nu, nu_ref) as f64)
+            .sum();
+        sum / (self.agents.len().max(1) as f64 * denom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{metropolis_weights, Topology};
+    use crate::model::AtomConstraint;
+    use crate::net::BspNetwork;
+
+    fn problem(
+        n: usize,
+        m: usize,
+        seed: u64,
+        topo: &Topology,
+    ) -> (DistributedDictionary, Graph, Mat, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        (dict, g, a, x)
+    }
+
+    /// τ = 0 with zero delays is bit-for-bit the BSP executor, including
+    /// traffic accounting.
+    #[test]
+    fn zero_delay_tau0_is_bitwise_bsp() {
+        let (n, m, iters) = (9, 7, 37);
+        let (dict, g, a, x) = problem(n, m, 0xA5_01, &Topology::ErdosRenyi { p: 0.5 });
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+
+        let mut bsp = BspNetwork::new(g.clone(), a.clone(), m, None);
+        bsp.run(&dict, &task, &x, params).unwrap();
+
+        let mut anet = AsyncNetwork::new(g, a, m, None, AsyncParams::default()).unwrap();
+        anet.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(anet.nu(k), bsp.nu(k), "agent {k}");
+        }
+        assert_eq!(anet.stats(), bsp.stats());
+        assert_eq!(anet.sim_time_us(), 0);
+        assert_eq!(anet.max_staleness_observed(), 0);
+        assert_eq!(anet.min_iters_done(), iters);
+    }
+
+    /// τ = 0 with *random* delays still reproduces the BSP trajectory
+    /// bit-for-bit — delays move the clock, never the arithmetic.
+    #[test]
+    fn random_delay_tau0_trajectory_unchanged() {
+        let (n, m, iters) = (8, 6, 25);
+        let (dict, g, a, x) = problem(n, m, 0xA5_02, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.4 };
+        let params = DiffusionParams::new(0.25, iters);
+
+        let mut bsp = BspNetwork::new(g.clone(), a.clone(), m, None);
+        bsp.run(&dict, &task, &x, params).unwrap();
+
+        let ap = AsyncParams::default()
+            .with_delays(DelayDist::Exp { mean_us: 120.0 }, DelayDist::Uniform {
+                lo_us: 5,
+                hi_us: 60,
+            })
+            .with_seed(77);
+        let mut anet = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        anet.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(anet.nu(k), bsp.nu(k), "agent {k}");
+        }
+        assert!(anet.sim_time_us() > 0);
+        assert_eq!(anet.stats().messages, bsp.stats().messages);
+        assert_eq!(anet.stats().bytes, bsp.stats().bytes);
+        assert_eq!(anet.stats().rounds, iters);
+    }
+
+    /// Same seed ⇒ identical replay (trajectories, stats, clock); the
+    /// whole straggler scenario is reproducible.
+    #[test]
+    fn deterministic_replay_per_seed() {
+        let (n, m, iters) = (10, 5, 30);
+        let (dict, g, a, x) = problem(n, m, 0xA5_03, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+        let ap = AsyncParams::default()
+            .with_tau(3)
+            .with_delays(DelayDist::Exp { mean_us: 100.0 }, DelayDist::Exp { mean_us: 20.0 })
+            .with_slow_agent(4, 10.0)
+            .with_seed(123);
+
+        let mut a1 = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+        a1.run(&dict, &task, &x, params).unwrap();
+        let mut a2 = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        a2.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(a1.nu(k), a2.nu(k), "agent {k}");
+        }
+        assert_eq!(a1.stats(), a2.stats());
+        assert_eq!(a1.sim_time_us(), a2.sim_time_us());
+        assert_eq!(a1.max_staleness_observed(), a2.max_staleness_observed());
+    }
+
+    /// Incremental `run_clamped` stepping resumes exactly: stepping the
+    /// clock in chunks lands bit-identical to one uninterrupted run.
+    #[test]
+    fn clamped_stepping_matches_one_shot() {
+        let (n, m, iters) = (8, 6, 24);
+        let (dict, g, a, x) = problem(n, m, 0xA5_04, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Uniform { lo_us: 10, hi_us: 200 }, DelayDist::Constant {
+                us: 15,
+            })
+            .with_seed(9);
+
+        let mut oneshot = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+        oneshot.run(&dict, &task, &x, params).unwrap();
+
+        let mut stepped = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        let mut t = 100u64;
+        while !stepped.run_clamped(&dict, &task, &x, params, t).unwrap() {
+            t += 100;
+        }
+        for k in 0..n {
+            assert_eq!(oneshot.nu(k), stepped.nu(k), "agent {k}");
+        }
+        assert_eq!(oneshot.stats(), stepped.stats());
+        assert_eq!(oneshot.sim_time_us(), stepped.sim_time_us());
+    }
+
+    /// The staleness bound is a hard invariant for every τ.
+    #[test]
+    fn staleness_never_exceeds_tau() {
+        let (n, m, iters) = (12, 4, 40);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        for tau in [0usize, 1, 2, 5] {
+            let (dict, g, a, x) = problem(n, m, 0xA5_05 + tau as u64, &Topology::Ring { k: 2 });
+            let ap = AsyncParams::default()
+                .with_tau(tau)
+                .with_delays(DelayDist::Exp { mean_us: 80.0 }, DelayDist::Exp { mean_us: 40.0 })
+                .with_slow_agent(0, 6.0)
+                .with_seed(31 + tau as u64);
+            let mut anet = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+            anet.run(&dict, &task, &x, params).unwrap();
+            assert!(
+                anet.max_staleness_observed() <= tau,
+                "tau={tau}: observed {}",
+                anet.max_staleness_observed()
+            );
+            for k in 0..n {
+                assert_eq!(anet.iters_done(k), iters);
+            }
+        }
+    }
+
+    /// With τ > 0 and a clamped clock, non-straggler agents run ahead of
+    /// the slow agent — the whole point of relaxing the barrier.
+    #[test]
+    fn straggler_does_not_gate_neighbors_under_tau() {
+        let (n, m) = (10, 4);
+        let (dict, g, a, x) = problem(n, m, 0xA5_06, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, 400);
+        let ap = AsyncParams::default()
+            .with_tau(4)
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Zero)
+            .with_slow_agent(0, 10.0)
+            .with_seed(5);
+        let mut anet = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        // Budget of ~60 slow-agent iterations.
+        let done = anet.run_clamped(&dict, &task, &x, params, 60_000).unwrap();
+        assert!(!done, "400 iterations cannot finish in this budget");
+        let slow_done = anet.iters_done(0);
+        let max_done = (0..n).map(|k| anet.iters_done(k)).max().unwrap();
+        assert!(slow_done < max_done, "straggler {slow_done} vs fastest {max_done}");
+        assert!(anet.mean_iters_done() > slow_done as f64);
+        // ...but bounded staleness chains the network to the straggler:
+        // an agent at graph distance d can lead by at most d·(τ+1)
+        // (each hop adds one staleness window plus the in-flight adapt).
+        for k in 0..n {
+            let d = k.min(n - k); // ring distance to agent 0
+            assert!(
+                anet.iters_done(k) <= slow_done + d * 5,
+                "agent {k} too far ahead: {} vs straggler {slow_done}",
+                anet.iters_done(k)
+            );
+        }
+    }
+
+    /// Huber's dual-box projection applies in the async executor too.
+    #[test]
+    fn huber_clipped_async() {
+        let (n, m) = (6, 5);
+        let mut rng = Pcg64::new(0xA5_07);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::NonNegUnitBall, &mut rng)
+                .unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 1 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let mut x = rng.normal_vec(m);
+        crate::math::vector::scale(8.0, &mut x);
+        let task = TaskSpec::HuberNmf { gamma: 0.1, delta: 0.5, eta: 0.2 };
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Exp { mean_us: 50.0 }, DelayDist::Exp { mean_us: 10.0 });
+        let mut anet = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        anet.run(&dict, &task, &x, DiffusionParams::new(0.4, 120)).unwrap();
+        for k in 0..n {
+            assert!(crate::math::vector::norm_inf(anet.nu(k)) <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn delay_dist_parse_and_bounds() {
+        assert_eq!(DelayDist::parse("zero", 10).unwrap(), DelayDist::Zero);
+        assert_eq!(DelayDist::parse("const", 10).unwrap(), DelayDist::Constant { us: 10 });
+        assert_eq!(
+            DelayDist::parse("uniform", 100).unwrap(),
+            DelayDist::Uniform { lo_us: 50, hi_us: 150 }
+        );
+        assert!(matches!(DelayDist::parse("exp", 20).unwrap(), DelayDist::Exp { .. }));
+        assert!(DelayDist::parse("gauss", 1).is_err());
+        let mut rng = Pcg64::new(1);
+        for _ in 0..200 {
+            let v = DelayDist::Uniform { lo_us: 5, hi_us: 9 }.sample(&mut rng);
+            assert!((5..=9).contains(&v));
+        }
+        assert_eq!(DelayDist::Zero.sample(&mut rng), 0);
+        assert_eq!(DelayDist::Constant { us: 7 }.sample(&mut rng), 7);
+    }
+
+    #[test]
+    fn shape_and_config_errors() {
+        let (dict, g, a, x) = problem(5, 4, 0xA5_08, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        // Out-of-range straggler.
+        assert!(AsyncNetwork::new(
+            g.clone(),
+            a.clone(),
+            4,
+            None,
+            AsyncParams::default().with_slow_agent(9, 2.0)
+        )
+        .is_err());
+        // Wrong sample length.
+        let mut anet = AsyncNetwork::new(g.clone(), a.clone(), 4, None, AsyncParams::default())
+            .unwrap();
+        assert!(anet.run(&dict, &task, &x[..3], DiffusionParams::new(0.1, 2)).is_err());
+        // Resuming with a different iteration target is rejected.
+        let mut anet = AsyncNetwork::new(g, a, 4, None, AsyncParams::default()).unwrap();
+        anet.run(&dict, &task, &x, DiffusionParams::new(0.1, 3)).unwrap();
+        assert!(anet
+            .run_clamped(&dict, &task, &x, DiffusionParams::new(0.1, 4), u64::MAX)
+            .is_err());
+    }
+}

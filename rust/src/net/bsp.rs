@@ -22,6 +22,40 @@ struct AgentState {
     inbox: Vec<PsiMessage>,
 }
 
+/// One agent's adapt step (Eq. 31a) in the message-passing executors:
+/// `ψ_k = ν_k − μ(c_f/N·ν_k − θ_k x) − (μ/δ)·W_k thr_γ(W_kᵀν_k)`.
+///
+/// Shared **verbatim** by [`BspNetwork`], the actor executor, and the
+/// async executor so their per-agent arithmetic (and floating-point
+/// operation order) cannot drift apart — the τ=0 bitwise-BSP parity of
+/// [`crate::net::AsyncNetwork`] and the actor-vs-engine equivalence both
+/// rest on this. `thr` is a `K`-length scratch buffer.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn adapt_step(
+    dict: &DistributedDictionary,
+    task: &TaskSpec,
+    x: &[f32],
+    theta_k: f32,
+    k: usize,
+    nu: &[f32],
+    psi: &mut [f32],
+    thr: &mut [f32],
+    mu: f32,
+    cf_over_n: f32,
+    inv_delta: f32,
+) {
+    dict.block_correlations(k, nu, thr);
+    let (start, len) = dict.block(k);
+    for q in start..start + len {
+        thr[q] = task.threshold(thr[q]) * (-mu * inv_delta);
+    }
+    for (i, p) in psi.iter_mut().enumerate() {
+        *p = nu[i] - mu * (cf_over_n * nu[i] - theta_k * x[i]);
+    }
+    dict.block_accumulate(k, thr, psi);
+}
+
 /// Bulk-synchronous network executor.
 pub struct BspNetwork {
     agents: Vec<AgentState>,
@@ -34,19 +68,15 @@ pub struct BspNetwork {
 
 impl BspNetwork {
     /// Build over a graph with its (doubly-stochastic) combination matrix.
+    ///
+    /// Panics on an invalid `informed` set (empty, or an index ≥ `N`) —
+    /// the shared θ builder ([`crate::infer::diffusion`]'s, also used by
+    /// the engine and the async executor) validates it.
     pub fn new(graph: Graph, weights: Mat, m: usize, informed: Option<&[usize]>) -> Self {
         let n = graph.n();
         assert_eq!(weights.rows(), n);
-        let mut theta = vec![0.0f32; n];
-        match informed {
-            None => theta.fill(1.0 / n as f32),
-            Some(idx) => {
-                let w = 1.0 / idx.len() as f32;
-                for &k in idx {
-                    theta[k] = w;
-                }
-            }
-        }
+        let theta = crate::infer::diffusion::build_theta(n, informed)
+            .expect("invalid informed-agent set");
         let agents = (0..n)
             .map(|_| AgentState { nu: vec![0.0; m], psi: vec![0.0; m], inbox: Vec::new() })
             .collect();
@@ -69,19 +99,22 @@ impl BspNetwork {
         let mut thr = vec![0.0f32; dict.k()];
 
         for iter in 0..params.iters {
-            // Adapt: local-only computation.
+            // Adapt: local-only computation (shared step, see `adapt_step`).
             for k in 0..n {
                 let ag = &mut self.agents[k];
-                dict.block_correlations(k, &ag.nu, &mut thr);
-                let (start, len) = dict.block(k);
-                for q in start..start + len {
-                    thr[q] = task.threshold(thr[q]) * (-params.mu * inv_delta);
-                }
-                for i in 0..m {
-                    ag.psi[i] =
-                        ag.nu[i] - params.mu * (cf_over_n * ag.nu[i] - self.theta[k] * x[i]);
-                }
-                dict.block_accumulate(k, &thr, &mut ag.psi);
+                adapt_step(
+                    dict,
+                    task,
+                    x,
+                    self.theta[k],
+                    k,
+                    &ag.nu,
+                    &mut ag.psi,
+                    &mut thr,
+                    params.mu,
+                    cf_over_n,
+                    inv_delta,
+                );
             }
             // Exchange: ψ flows along edges only.
             for k in 0..n {

@@ -8,10 +8,52 @@
 //! how agents are multiplexed onto threads: the BSP executor
 //! ([`crate::net::BspNetwork`]) after each exchange/combine, the actor
 //! executor ([`crate::net::actors::run_threaded`]) once per iteration even
-//! though only *cross-worker* edges travel over channels, and the serving
+//! though only *cross-worker* edges travel over channels, the async
+//! executor ([`crate::net::AsyncNetwork`]) once per completed
+//! network-wide wave (minimum per-agent combine count), and the serving
 //! session ([`crate::serve::run_service`]) once per iteration per drained
 //! batch. This keeps [`MessageStats::bytes_per_agent_round`] comparable
 //! across executors.
+//!
+//! The convention is runnable: on a tiny ring where every edge crosses a
+//! worker boundary, the BSP and actor executors must agree on `rounds`
+//! and on bytes per agent per round exactly.
+//!
+//! ```
+//! use ddl::graph::{metropolis_weights, Graph, Topology};
+//! use ddl::infer::DiffusionParams;
+//! use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+//! use ddl::net::{actors, BspNetwork};
+//! use ddl::rng::Pcg64;
+//!
+//! let (n, m, iters) = (6, 5, 4);
+//! let mut rng = Pcg64::new(7);
+//! let dict = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng)?;
+//! let g = Graph::generate(n, &Topology::Ring { k: 1 }, &mut rng);
+//! let a = metropolis_weights(&g);
+//! let x = rng.normal_vec(m);
+//! let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+//!
+//! // BSP: one ψ per directed edge per round.
+//! let mut bsp = BspNetwork::new(g.clone(), a.clone(), m, None);
+//! bsp.run(&dict, &task, &x, DiffusionParams::new(0.2, iters))?;
+//!
+//! // Actors, one thread per agent: every edge crosses a worker boundary,
+//! // so channel traffic equals the BSP wire traffic.
+//! let (_, actor_stats) = actors::run_threaded(
+//!     &g, &a, &dict, &task, &x, None,
+//!     DiffusionParams::new(0.2, iters).with_threads(n),
+//! )?;
+//!
+//! assert_eq!(bsp.stats().rounds, iters);
+//! assert_eq!(actor_stats.rounds, iters);
+//! assert_eq!(bsp.stats().messages, actor_stats.messages);
+//! assert_eq!(
+//!     bsp.stats().bytes_per_agent_round(n),
+//!     actor_stats.bytes_per_agent_round(n),
+//! );
+//! # Ok::<(), ddl::DdlError>(())
+//! ```
 
 /// One diffusion message: agent `from`'s intermediate estimate ψ for
 /// iteration `iter`. This is the *only* payload agents ever exchange —

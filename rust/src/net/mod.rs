@@ -4,24 +4,38 @@
 //! combine step as one gemm — fast, but it hides the message-passing
 //! structure. This module makes the distribution *real*: agents with
 //! mailboxes exchange `ψ` vectors along graph edges only, with message
-//! and byte accounting, in two executors:
+//! and byte accounting, in three executors:
 //!
 //! * [`bsp`] — deterministic bulk-synchronous rounds (used by tests to
 //!   prove equivalence with the gemm engine, and by the drivers when
 //!   accounting is wanted);
 //! * [`actors`] — worker threads with channels (one or more agents per
 //!   thread, capped by `DiffusionParams::threads`), demonstrating that the
-//!   algorithm runs on a genuinely concurrent substrate.
+//!   algorithm runs on a genuinely concurrent substrate;
+//! * [`async_exec`] — asynchronous per-edge exchange with bounded
+//!   staleness `τ` on a deterministic discrete-event clock, modeling
+//!   stragglers (slow agents, slow links, heterogeneous compute); at
+//!   `τ = 0` it degenerates bit-for-bit to the BSP trajectory.
+//!
+//! All three bump the same [`MessageStats`] under the round-accounting
+//! convention documented (and doc-tested) in [`message`], so sync-vs-async
+//! traffic and convergence are directly comparable.
 //!
 //! The [`pool`] module provides the shared scoped-thread worker pool that
 //! both the matrix-form engine and the scalar cost-consensus use for
 //! row-partitioned parallelism.
+//!
+//! The full executor matrix — which executor to reach for, what each one
+//! proves, and the ψ-privacy dataflow they all share — is laid out in
+//! `ARCHITECTURE.md` at the repository root.
 
 pub mod actors;
+pub mod async_exec;
 pub mod bsp;
 pub mod message;
 pub mod pool;
 
+pub use async_exec::{AsyncNetwork, AsyncParams, DelayDist};
 pub use bsp::BspNetwork;
 pub use message::{MessageStats, PsiMessage};
 pub use pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};

@@ -23,7 +23,10 @@
 //!
 //! Drive it with `ddl serve` (TOML section `[serve]`, CLI overrides) or
 //! programmatically via [`session::run_service`]; see
-//! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving.
+//! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving. For how
+//! the pipelined executor relates to the other diffusion substrates (BSP,
+//! actors, async) and the bit-reproducibility contracts they share, see
+//! the executor matrix in `ARCHITECTURE.md` at the repository root.
 
 pub mod pipeline;
 pub mod queue;
