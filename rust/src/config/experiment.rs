@@ -117,6 +117,127 @@ impl DenoiseConfig {
     }
 }
 
+/// Feedback control plane (`serve/control.rs`, `net/tau_control.rs`):
+/// measurement-driven batch size, pipeline depth, and staleness τ. Loaded
+/// from the TOML section `[control]`; enabled per loop via
+/// `ddl serve --adaptive` / `ddl async --adaptive-tau` or the TOML keys.
+///
+/// Every controller decision is a pure function of (this config, seed,
+/// measured history on the virtual µs clocks), so adaptive runs replay
+/// bit-identically; with [`Self::enabled`] false (the default) the serve
+/// executors take exactly their static PR 3 code paths, and with
+/// [`Self::adaptive_tau`] false `ddl async` is untouched.
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// Master switch for the serve-side controllers (batch + depth).
+    pub enabled: bool,
+    /// p99 request-latency SLO (ms) the batch controller steers to.
+    pub slo_p99_ms: f64,
+    /// Batch-controller decision cadence on the virtual clock (µs).
+    pub tick_us: u64,
+    /// Bounds for the adaptive `max_batch` knob.
+    pub batch_min: usize,
+    pub batch_max: usize,
+    /// Bounds for the adaptive `max_wait_us` knob.
+    pub wait_min_us: u64,
+    pub wait_max_us: u64,
+    /// Sliding window of completed-request latencies feeding the p99
+    /// estimate (and of recent batch sizes feeding the fill estimate).
+    /// The batch controller clamps this up to its actionable-p99 floor
+    /// (16 samples) so a tiny window cannot silently disable SLO
+    /// steering.
+    pub window: usize,
+    /// Virtual service-time model used by adaptive sessions in place of
+    /// measured wall time (the determinism anchor): one batch of `B`
+    /// samples costs `svc_base_us + svc_per_sample_us · B` µs in the
+    /// serial loop / inference stage.
+    pub svc_base_us: u64,
+    pub svc_per_sample_us: u64,
+    /// Virtual Eq. 51 update-stage cost per sample (µs), pipeline mode.
+    pub upd_per_sample_us: u64,
+    /// Depth-controller bounds (pipeline mode) and the re-plan epoch in
+    /// batches; depth moves by at most ±1 per epoch boundary so the swap
+    /// schedule stays well-defined.
+    pub depth_min: usize,
+    pub depth_max: usize,
+    pub epoch_batches: usize,
+    /// Master switch for the τ controller (`ddl async --adaptive-tau`).
+    pub adaptive_tau: bool,
+    /// Bounds for the adaptive staleness τ.
+    pub tau_min: usize,
+    pub tau_max: usize,
+    /// τ-controller decision epoch on the simulated clock (µs).
+    pub tau_epoch_us: u64,
+    /// Widen τ (+1) when the per-epoch gate-wait fraction of simulated
+    /// time exceeds this.
+    pub gate_wait_hi: f64,
+    /// Narrow τ (−1) when the relative MSD excess versus the τ = 0 probe
+    /// exceeds this bound.
+    pub msd_drift_bound: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            enabled: false,
+            slo_p99_ms: 20.0,
+            tick_us: 2_000,
+            batch_min: 1,
+            batch_max: 64,
+            wait_min_us: 0,
+            wait_max_us: 50_000,
+            window: 512,
+            svc_base_us: 800,
+            svc_per_sample_us: 150,
+            upd_per_sample_us: 60,
+            depth_min: 1,
+            depth_max: 4,
+            epoch_batches: 16,
+            adaptive_tau: false,
+            tau_min: 0,
+            tau_max: 16,
+            tau_epoch_us: 20_000,
+            gate_wait_hi: 0.25,
+            msd_drift_bound: 0.5,
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Load from TOML (section `[control]`), falling back to defaults.
+    /// Bounds are sanitized so `min ≤ max` always holds.
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let defaults = Self::default();
+        let mut c = defaults;
+        c.enabled = doc.bool_or("control", "enabled", c.enabled);
+        c.slo_p99_ms = doc.f32_or("control", "slo_p99_ms", c.slo_p99_ms as f32) as f64;
+        c.tick_us = doc.usize_or("control", "tick_us", c.tick_us as usize) as u64;
+        c.batch_min = doc.usize_or("control", "batch_min", c.batch_min).max(1);
+        c.batch_max = doc.usize_or("control", "batch_max", c.batch_max).max(c.batch_min);
+        c.wait_min_us = doc.usize_or("control", "wait_min_us", c.wait_min_us as usize) as u64;
+        c.wait_max_us = (doc.usize_or("control", "wait_max_us", c.wait_max_us as usize) as u64)
+            .max(c.wait_min_us);
+        c.window = doc.usize_or("control", "window", c.window).max(1);
+        c.svc_base_us = doc.usize_or("control", "svc_base_us", c.svc_base_us as usize) as u64;
+        c.svc_per_sample_us =
+            doc.usize_or("control", "svc_per_sample_us", c.svc_per_sample_us as usize) as u64;
+        c.upd_per_sample_us =
+            doc.usize_or("control", "upd_per_sample_us", c.upd_per_sample_us as usize) as u64;
+        c.depth_min = doc.usize_or("control", "depth_min", c.depth_min).max(1);
+        c.depth_max = doc.usize_or("control", "depth_max", c.depth_max).max(c.depth_min);
+        c.epoch_batches = doc.usize_or("control", "epoch_batches", c.epoch_batches).max(1);
+        c.adaptive_tau = doc.bool_or("control", "adaptive_tau", c.adaptive_tau);
+        c.tau_min = doc.usize_or("control", "tau_min", c.tau_min);
+        c.tau_max = doc.usize_or("control", "tau_max", c.tau_max).max(c.tau_min);
+        c.tau_epoch_us =
+            (doc.usize_or("control", "tau_epoch_us", c.tau_epoch_us as usize) as u64).max(1);
+        c.gate_wait_hi = doc.f32_or("control", "gate_wait_hi", c.gate_wait_hi as f32) as f64;
+        c.msd_drift_bound =
+            doc.f32_or("control", "msd_drift_bound", c.msd_drift_bound as f32) as f64;
+        c
+    }
+}
+
 /// Streaming inference service (`ddl serve`, `serve/` subsystem).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -141,6 +262,11 @@ pub struct ServeConfig {
     /// Arrival rate in requests/second; `0` = saturated (peak-throughput
     /// mode: every request is available at t = 0).
     pub rate: f64,
+    /// Arrival burstiness: requests arrive in clumps of this size (one
+    /// shared timestamp per clump, exponential gaps between clumps scaled
+    /// so the mean rate is preserved). `1` (default) is the plain Poisson
+    /// stream; only meaningful when `rate > 0`.
+    pub burst: usize,
     /// Dictionary step size μ_w for the online update; `0` freezes the
     /// dictionary (inference-only serving).
     pub mu_w: f32,
@@ -156,6 +282,8 @@ pub struct ServeConfig {
     pub infer: InferenceConfig,
     /// Informed agents: `None` = all informed, `Some(k)` = only first k.
     pub informed: Option<usize>,
+    /// Feedback control plane (`[control]` TOML block, `--adaptive`).
+    pub control: ControlConfig,
 }
 
 impl Default for ServeConfig {
@@ -171,11 +299,13 @@ impl Default for ServeConfig {
             max_wait_us: 2_000,
             samples: 512,
             rate: 0.0,
+            burst: 1,
             mu_w: 0.05,
             pipeline: false,
             pipeline_depth: 2,
             infer: InferenceConfig { mu: 0.4, iters: 120, gamma: 0.08, delta: 0.2, threads: 1 },
             informed: None,
+            control: ControlConfig::default(),
         }
     }
 }
@@ -195,6 +325,7 @@ impl ServeConfig {
         c.max_wait_us = doc.usize_or("serve", "max_wait_us", c.max_wait_us as usize) as u64;
         c.samples = doc.usize_or("serve", "samples", c.samples);
         c.rate = doc.f32_or("serve", "rate", c.rate as f32) as f64;
+        c.burst = doc.usize_or("serve", "burst", c.burst).max(1);
         c.mu_w = doc.f32_or("serve", "mu_w", c.mu_w);
         c.pipeline = doc.bool_or("serve", "pipeline", c.pipeline);
         c.pipeline_depth = doc.usize_or("serve", "pipeline_depth", c.pipeline_depth).max(1);
@@ -206,6 +337,7 @@ impl ServeConfig {
         if let Some(v) = doc.get("serve", "informed") {
             c.informed = v.as_usize();
         }
+        c.control = ControlConfig::from_toml(doc);
         c
     }
 }
@@ -241,6 +373,12 @@ pub struct AsyncConfig {
     pub slow_agent: Option<usize>,
     /// Compute-delay multiplier for the slow agent.
     pub slow_factor: f64,
+    /// Drifting-straggler scenario: when > 0, the identity of the slow
+    /// agent rotates deterministically every this many simulated µs
+    /// (agent `⌊t/period⌋ mod N` is slow by [`Self::slow_factor`]),
+    /// overriding the static `slow_agent`. `0` (default) = static
+    /// scenario.
+    pub drift_period_us: u64,
     /// Diffusion inference settings (μ, iters, elastic net; threads is
     /// ignored — the discrete-event simulation is single-threaded). The
     /// default horizon is past the ~`N/μ` cold-start build-up so the
@@ -249,6 +387,8 @@ pub struct AsyncConfig {
     pub infer: InferenceConfig,
     /// Sim-time checkpoints per run (MSD-vs-simulated-time table rows).
     pub checkpoints: usize,
+    /// Feedback control plane (`[control]` TOML block, `--adaptive-tau`).
+    pub control: ControlConfig,
 }
 
 impl Default for AsyncConfig {
@@ -267,8 +407,10 @@ impl Default for AsyncConfig {
             link_us: 20,
             slow_agent: Some(0),
             slow_factor: 10.0,
+            drift_period_us: 0,
             infer: InferenceConfig { mu: 0.5, iters: 1500, gamma: 0.1, delta: 0.5, threads: 1 },
             checkpoints: 4,
+            control: ControlConfig::default(),
         }
     }
 }
@@ -298,11 +440,14 @@ impl AsyncConfig {
             }
         }
         c.slow_factor = doc.f32_or("async", "slow_factor", c.slow_factor as f32) as f64;
+        c.drift_period_us =
+            doc.usize_or("async", "drift_period_us", c.drift_period_us as usize) as u64;
         c.infer.mu = doc.f32_or("async", "mu", c.infer.mu);
         c.infer.iters = doc.usize_or("async", "iters", c.infer.iters);
         c.infer.gamma = doc.f32_or("async", "gamma", c.infer.gamma);
         c.infer.delta = doc.f32_or("async", "delta", c.infer.delta);
         c.checkpoints = doc.usize_or("async", "checkpoints", c.checkpoints).max(1);
+        c.control = ControlConfig::from_toml(doc);
         c
     }
 
@@ -314,6 +459,7 @@ impl AsyncConfig {
             compute: crate::net::DelayDist::parse(&self.compute_dist, self.compute_us)?,
             link: crate::net::DelayDist::parse(&self.link_dist, self.link_us)?,
             seed: self.seed,
+            drift_period_us: self.drift_period_us,
             ..crate::net::AsyncParams::default()
         };
         if let Some(k) = self.slow_agent {
@@ -594,6 +740,69 @@ mod tests {
         assert_eq!(typo.slow_agent, AsyncConfig::default().slow_agent);
         let bad = AsyncConfig { compute_dist: "gauss".into(), ..AsyncConfig::default() };
         assert!(bad.async_params().is_err());
+    }
+
+    #[test]
+    fn control_defaults_disabled() {
+        let c = ControlConfig::default();
+        assert!(!c.enabled);
+        assert!(!c.adaptive_tau);
+        assert!(c.batch_min <= c.batch_max);
+        assert!(c.wait_min_us <= c.wait_max_us);
+        assert!(c.depth_min <= c.depth_max);
+        assert!(c.tau_min <= c.tau_max);
+        // Disabled by default on both experiment configs.
+        assert!(!ServeConfig::default().control.enabled);
+        assert!(!AsyncConfig::default().control.adaptive_tau);
+        assert_eq!(ServeConfig::default().burst, 1);
+        assert_eq!(AsyncConfig::default().drift_period_us, 0);
+    }
+
+    /// Round trip for every knob exposed in the `[control]` TOML block,
+    /// plus the serve `burst` and async `drift_period_us` satellites.
+    #[test]
+    fn control_toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[serve]\nburst = 32\n[async]\ndrift_period_us = 5000\n[control]\nenabled = true\n\
+             slo_p99_ms = 10.0\ntick_us = 1500\nbatch_min = 2\nbatch_max = 48\n\
+             wait_min_us = 100\nwait_max_us = 9000\nwindow = 128\nsvc_base_us = 700\n\
+             svc_per_sample_us = 120\nupd_per_sample_us = 40\ndepth_min = 1\ndepth_max = 3\n\
+             epoch_batches = 8\nadaptive_tau = true\ntau_min = 1\ntau_max = 12\n\
+             tau_epoch_us = 4000\ngate_wait_hi = 0.3\nmsd_drift_bound = 0.4\n",
+        )
+        .unwrap();
+        let s = ServeConfig::from_toml(&doc);
+        assert_eq!(s.burst, 32);
+        assert!(s.control.enabled);
+        assert!((s.control.slo_p99_ms - 10.0).abs() < 1e-6);
+        assert_eq!(s.control.tick_us, 1500);
+        assert_eq!(s.control.batch_min, 2);
+        assert_eq!(s.control.batch_max, 48);
+        assert_eq!(s.control.wait_min_us, 100);
+        assert_eq!(s.control.wait_max_us, 9000);
+        assert_eq!(s.control.window, 128);
+        assert_eq!(s.control.svc_base_us, 700);
+        assert_eq!(s.control.svc_per_sample_us, 120);
+        assert_eq!(s.control.upd_per_sample_us, 40);
+        assert_eq!(s.control.depth_min, 1);
+        assert_eq!(s.control.depth_max, 3);
+        assert_eq!(s.control.epoch_batches, 8);
+        let a = AsyncConfig::from_toml(&doc);
+        assert_eq!(a.drift_period_us, 5000);
+        assert!(a.control.adaptive_tau);
+        assert_eq!(a.control.tau_min, 1);
+        assert_eq!(a.control.tau_max, 12);
+        assert_eq!(a.control.tau_epoch_us, 4000);
+        assert!((a.control.gate_wait_hi - 0.3).abs() < 1e-6);
+        assert!((a.control.msd_drift_bound - 0.4).abs() < 1e-6);
+        assert_eq!(a.async_params().unwrap().drift_period_us, 5000);
+        // Inverted bounds are sanitized to min ≤ max, not passed through.
+        let bad = ControlConfig::from_toml(
+            &TomlDoc::parse("[control]\nbatch_min = 16\nbatch_max = 4\ntau_min = 9\ntau_max = 2\n")
+                .unwrap(),
+        );
+        assert!(bad.batch_min <= bad.batch_max);
+        assert!(bad.tau_min <= bad.tau_max);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! * [`novelty`] — Figs. 6–7 / Tables III–IV: streaming novel-document
 //!   detection with dictionary/network expansion per time-step;
 //! * [`straggler`] — `ddl async`: sync-vs-async diffusion under a delay
-//!   model (MSD vs simulated time, straggler scenarios);
+//!   model (MSD vs simulated time, straggler scenarios), plus the
+//!   adaptive-τ driver (`--adaptive-tau`: the τ controller stepped
+//!   against a τ = 0 probe through shared sim-time epochs);
 //! * [`csv`] — tiny CSV writer for `results/`.
 
 pub mod csv;
@@ -17,4 +19,6 @@ pub mod tuning;
 
 pub use denoise::{run_denoise, DenoiseReport};
 pub use novelty::{run_novelty, NoveltyAlgo, NoveltyReport, StepResult};
-pub use straggler::{run_straggler, AsyncRow, StragglerReport};
+pub use straggler::{
+    run_adaptive_tau, run_straggler, AdaptiveTauReport, AsyncRow, StragglerReport, TauRow,
+};

@@ -22,7 +22,7 @@ use crate::error::{DdlError, Result};
 use crate::graph::{metropolis_weights, Graph, Topology};
 use crate::infer::{exact_dual, DiffusionParams};
 use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
-use crate::net::{AsyncNetwork, AsyncParams, MessageStats};
+use crate::net::{AsyncNetwork, AsyncParams, MessageStats, TauController, TauDecision};
 use crate::rng::Pcg64;
 
 /// One simulated-time checkpoint of the sync-vs-async comparison.
@@ -212,6 +212,197 @@ pub fn run_straggler(
     })
 }
 
+/// One control epoch of the adaptive-τ run.
+#[derive(Clone, Debug)]
+pub struct TauRow {
+    /// Epoch boundary on the simulated clock (µs).
+    pub t_us: u64,
+    /// τ in effect *during* the epoch.
+    pub tau: usize,
+    /// Gate-wait fraction of the epoch (per agent).
+    pub gate_wait_frac: f64,
+    /// Adaptive executor's MSD vs the exact dual at the boundary.
+    pub msd_adaptive: f64,
+    /// τ = 0 probe's MSD at the same boundary.
+    pub msd_probe: f64,
+    /// Completed network-wide waves of the adaptive executor.
+    pub adaptive_min_iters: usize,
+}
+
+/// Outcome of one adaptive-τ run (`ddl async --adaptive-tau`).
+#[derive(Clone, Debug)]
+pub struct AdaptiveTauReport {
+    pub rows: Vec<TauRow>,
+    /// The controller's decision trace (one entry per epoch; the
+    /// replay-determinism test compares it bitwise).
+    pub trace: Vec<TauDecision>,
+    /// Simulated completion time of the adaptive executor.
+    pub completion_us: u64,
+    /// τ in effect when the run completed.
+    pub final_tau: usize,
+    /// Largest staleness any combine used (≤ the widest τ in effect).
+    pub max_staleness: usize,
+    pub stats: MessageStats,
+}
+
+impl AdaptiveTauReport {
+    /// First epoch boundary at which the adaptive run's MSD reached
+    /// `target` (the time-to-target figure `bench_control.rs` compares
+    /// against the static-τ grid, on the same epoch granularity).
+    pub fn time_to_msd(&self, target: f64) -> Option<u64> {
+        self.rows.iter().find(|r| r.msd_adaptive <= target).map(|r| r.t_us)
+    }
+
+    /// Multi-line human-readable summary (the `ddl async --adaptive-tau`
+    /// output body).
+    pub fn summary(&self, agents: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>12} {:>5} {:>10} {:>12} {:>12} {:>10}\n",
+            "sim time s", "tau", "gate frac", "msd adapt", "msd probe", "waves"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:>12.4} {:>5} {:>10.3} {:>12.3e} {:>12.3e} {:>10}\n",
+                r.t_us as f64 / 1e6,
+                r.tau,
+                r.gate_wait_frac,
+                r.msd_adaptive,
+                r.msd_probe,
+                r.adaptive_min_iters,
+            ));
+        }
+        out.push_str(&format!(
+            "completed in {:.4} s at final tau {}, max staleness used {}\n\
+             traffic: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round",
+            self.completion_us as f64 / 1e6,
+            self.final_tau,
+            self.max_staleness,
+            self.stats.messages,
+            self.stats.bytes as f64 / 1e6,
+            self.stats.rounds,
+            self.stats.bytes_per_agent_round(agents),
+        ));
+        out
+    }
+}
+
+/// Run the adaptive-τ experiment: the τ controller steps the adaptive
+/// executor and a τ = 0 probe through shared simulated-time epochs
+/// (`[control] tau_epoch_us`), widening τ when gate-wait dominates the
+/// epoch and narrowing it when the adaptive MSD drifts behind the
+/// probe's. Problem setup consumes the RNG in the same order as
+/// [`run_straggler`], so both drivers study the identical instance.
+/// Deterministic end to end: two runs with the same config replay
+/// bit-identically (trace, rows, clocks — `tests/control_adaptive.rs`).
+pub fn run_adaptive_tau(
+    cfg: &AsyncConfig,
+    log: &mut dyn FnMut(&str),
+) -> Result<AdaptiveTauReport> {
+    let mut rng = Pcg64::new(cfg.seed);
+    let graph = build_topology(cfg, &mut rng)?;
+    let weights = metropolis_weights(&graph);
+    let dict = DistributedDictionary::random(
+        cfg.dim,
+        cfg.agents,
+        cfg.agents,
+        AtomConstraint::UnitBall,
+        &mut rng,
+    )?;
+    let x = rng.normal_vec(cfg.dim);
+    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
+    let params = DiffusionParams::new(cfg.infer.mu, cfg.infer.iters);
+    let base = cfg.async_params()?;
+
+    let mut controller = TauController::new(&cfg.control);
+    let tau0 = controller.initial_tau(cfg.tau);
+    let mut adaptive = AsyncNetwork::new(
+        graph.clone(),
+        weights.clone(),
+        cfg.dim,
+        None,
+        AsyncParams { tau: tau0, ..base.clone() },
+    )?;
+    let mut probe =
+        AsyncNetwork::new(graph, weights, cfg.dim, None, AsyncParams { tau: 0, ..base })?;
+
+    log(&format!(
+        "adaptive-tau: N={} M={} topology={}, iters={}, tau0={} in [{}, {}], epoch {} µs{}",
+        cfg.agents,
+        cfg.dim,
+        cfg.topology,
+        cfg.infer.iters,
+        tau0,
+        cfg.control.tau_min,
+        cfg.control.tau_max,
+        cfg.control.tau_epoch_us,
+        if cfg.drift_period_us > 0 {
+            format!(", drifting straggler every {} µs", cfg.drift_period_us)
+        } else {
+            String::new()
+        },
+    ));
+
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000)?;
+    let epoch_us = cfg.control.tau_epoch_us.max(1);
+    let mut rows = Vec::new();
+    let mut tau = tau0;
+    let mut t = epoch_us;
+    loop {
+        let done = adaptive.run_clamped(&dict, &task, &x, params, t)?;
+        probe.run_clamped(&dict, &task, &x, params, t)?;
+        let msd_adaptive = adaptive.msd_vs(&exact.nu);
+        let msd_probe = probe.msd_vs(&exact.nu);
+        // gate_wait_us_at includes the in-progress waits of still-gated
+        // agents, so an epoch spent entirely blocked (no combine landed)
+        // still shows its full wait to the controller.
+        let next_tau = controller.decide(
+            t,
+            cfg.agents,
+            adaptive.gate_wait_us_at(t),
+            msd_adaptive,
+            msd_probe,
+            tau,
+        );
+        let decided = controller.trace().last().expect("decide() just pushed");
+        rows.push(TauRow {
+            t_us: t,
+            tau,
+            gate_wait_frac: decided.gate_wait_frac,
+            msd_adaptive,
+            msd_probe,
+            adaptive_min_iters: adaptive.min_iters_done(),
+        });
+        if rows.len() % 16 == 0 {
+            log(&format!(
+                "  [{:>8.3} s] tau {} -> {}, msd {:.3e} (probe {:.3e})",
+                t as f64 / 1e6,
+                tau,
+                next_tau,
+                msd_adaptive,
+                msd_probe
+            ));
+        }
+        if done {
+            break;
+        }
+        if next_tau != tau {
+            adaptive.set_tau(next_tau, &task, t);
+            tau = next_tau;
+        }
+        t += epoch_us;
+    }
+
+    Ok(AdaptiveTauReport {
+        rows,
+        completion_us: adaptive.sim_time_us(),
+        final_tau: tau,
+        max_staleness: adaptive.max_staleness_observed(),
+        stats: adaptive.stats(),
+        trace: controller.into_trace(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,5 +467,79 @@ mod tests {
     fn unknown_topology_rejected() {
         let cfg = AsyncConfig { topology: "torus".into(), ..tiny_cfg() };
         assert!(run_straggler(&cfg, &mut |_| {}).is_err());
+    }
+
+    fn adaptive_cfg() -> AsyncConfig {
+        let mut cfg = tiny_cfg();
+        cfg.control.adaptive_tau = true;
+        cfg.control.tau_min = 0;
+        cfg.control.tau_max = 6;
+        cfg.control.tau_epoch_us = 2_000;
+        cfg.tau = 0; // start at the barrier; the controller must widen
+        cfg
+    }
+
+    #[test]
+    fn adaptive_tau_report_is_consistent() {
+        let cfg = adaptive_cfg();
+        let mut lines = Vec::new();
+        let r = run_adaptive_tau(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert!(!r.rows.is_empty());
+        assert_eq!(r.rows.len(), r.trace.len());
+        // Epoch boundaries are monotone; τ stays inside the bounds and
+        // moves by at most 1 per epoch.
+        assert!(r.rows.windows(2).all(|w| w[0].t_us < w[1].t_us));
+        for w in r.rows.windows(2) {
+            let (a, b) = (w[0].tau as i64, w[1].tau as i64);
+            assert!((a - b).abs() <= 1, "tau moved by more than 1: {a} -> {b}");
+        }
+        assert!(r.rows.iter().all(|row| row.tau <= cfg.control.tau_max));
+        assert!(r.final_tau <= cfg.control.tau_max);
+        assert!(r.max_staleness <= cfg.control.tau_max);
+        // The 10x straggler at τ = 0 forces gate waits: the controller
+        // must have widened off the barrier at some point.
+        assert!(r.rows.iter().any(|row| row.tau > 0), "controller never widened");
+        assert!(r.completion_us > 0);
+        assert!(r.stats.messages > 0);
+        // time_to_msd is monotone-consistent with the rows.
+        let loose = r.time_to_msd(f64::MAX).unwrap();
+        assert_eq!(loose, r.rows[0].t_us);
+        assert_eq!(r.time_to_msd(-1.0), None);
+        assert!(!r.summary(cfg.agents).is_empty());
+        assert!(!lines.is_empty());
+    }
+
+    /// Two adaptive-τ runs with one config replay bit-identically:
+    /// decision traces, epoch rows, and clocks.
+    #[test]
+    fn adaptive_tau_replays_bitwise() {
+        let cfg = adaptive_cfg();
+        let a = run_adaptive_tau(&cfg, &mut |_| {}).unwrap();
+        let b = run_adaptive_tau(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.completion_us, b.completion_us);
+        assert_eq!(a.final_tau, b.final_tau);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.t_us, rb.t_us);
+            assert_eq!(ra.tau, rb.tau);
+            assert_eq!(ra.msd_adaptive.to_bits(), rb.msd_adaptive.to_bits());
+            assert_eq!(ra.msd_probe.to_bits(), rb.msd_probe.to_bits());
+        }
+    }
+
+    /// Pinned bounds (`tau_min == tau_max`) reduce the adaptive driver to
+    /// a static-τ run on the same epoch grid — the comparator
+    /// `bench_control.rs` sweeps.
+    #[test]
+    fn pinned_bounds_hold_tau_static() {
+        let mut cfg = adaptive_cfg();
+        cfg.control.tau_min = 2;
+        cfg.control.tau_max = 2;
+        cfg.tau = 0; // clamped up to 2 by initial_tau
+        let r = run_adaptive_tau(&cfg, &mut |_| {}).unwrap();
+        assert!(r.rows.iter().all(|row| row.tau == 2));
+        assert_eq!(r.final_tau, 2);
     }
 }

@@ -59,21 +59,31 @@ COMMANDS:
               [--algos diffusion,diffusion_fc,mairal,admm] [--steps n]
   tune        step-size tuning SNR curves (Fig. 4)    [--mu x] [--iters n]
   serve       streaming batched inference service     [--config f] [--batch b]
-              [--max-wait-us t] [--samples n] [--rate r] [--agents n]
-              [--topology ring|grid|er|full] [--mu-w x] [--no-adapt]
-              [--pipeline | --no-pipeline] [--pipeline-depth d]
+              [--max-wait-us t] [--samples n] [--rate r] [--burst n]
+              [--agents n] [--topology ring|grid|er|full] [--mu-w x]
+              [--no-adapt] [--pipeline | --no-pipeline] [--pipeline-depth d]
+              [--adaptive] [--slo-ms x]
               (three-stage concurrent pipeline: batch formation | diffusion
               inference | Eq. 51 update overlap on separate threads;
-              bit-identical schedule; --no-pipeline overrides the TOML)
+              bit-identical schedule; --no-pipeline overrides the TOML;
+              --adaptive turns on the control plane: max_batch/max_wait
+              re-decided each tick against the p99 SLO, pipeline depth
+              re-planned at epoch boundaries, all on a deterministic
+              virtual clock so adaptive runs replay bit-identically;
+              TOML [control])
   async       sync-vs-async diffusion, straggler modeling [--config f]
               [--tau t] [--agents n] [--dim m] [--topology ring|grid|er|full]
               [--mu x] [--iters n] [--compute-dist zero|const|uniform|exp]
               [--compute-us t] [--link-dist d] [--link-us t]
               [--slow-agent k | --no-straggler] [--slow-factor x]
-              [--checkpoints c] [--ring-k k]
+              [--drift-period-us t] [--checkpoints c] [--ring-k k]
+              [--adaptive-tau]
               (per-edge psi exchange with bounded staleness tau on a
               deterministic discrete-event clock; tau = 0 reproduces the
-              BSP trajectory bit-for-bit and serves as the sync baseline)
+              BSP trajectory bit-for-bit and serves as the sync baseline;
+              --adaptive-tau runs the tau controller against a tau = 0
+              probe, widening on gate-wait, narrowing on MSD drift;
+              --drift-period-us rotates the slow agent; TOML [control])
   bench-gate  compare derived speedups in --current json against --baseline
               json; fail below --min-frac (default 0.5) of the baseline
 
@@ -217,6 +227,7 @@ fn cmd_serve(args: &Args) -> i32 {
         cfg.max_wait_us = args.u64_or("max-wait-us", cfg.max_wait_us)?;
         cfg.samples = args.usize_or("samples", cfg.samples)?;
         cfg.rate = args.f32_or("rate", cfg.rate as f32)? as f64;
+        cfg.burst = args.usize_or("burst", cfg.burst)?.max(1);
         cfg.mu_w = args.f32_or("mu-w", cfg.mu_w)?;
         cfg.pipeline = cfg.pipeline || args.flag("pipeline");
         if args.flag("no-pipeline") {
@@ -231,6 +242,8 @@ fn cmd_serve(args: &Args) -> i32 {
         if args.flag("no-adapt") {
             cfg.mu_w = 0.0;
         }
+        cfg.control.enabled = cfg.control.enabled || args.flag("adaptive");
+        cfg.control.slo_p99_ms = args.f32_or("slo-ms", cfg.control.slo_p99_ms as f32)? as f64;
         let report = ddl::serve::run_service(&cfg, &mut |s| println!("{s}"))?;
         println!("== serve report ==");
         println!("{}", report.summary(cfg.agents));
@@ -264,12 +277,20 @@ fn cmd_async(args: &Args) -> i32 {
             cfg.slow_agent = None;
         }
         cfg.slow_factor = args.f32_or("slow-factor", cfg.slow_factor as f32)? as f64;
+        cfg.drift_period_us = args.u64_or("drift-period-us", cfg.drift_period_us)?;
         cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
         cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
         cfg.checkpoints = args.usize_or("checkpoints", cfg.checkpoints)?.max(1);
-        let report = ddl::coordinator::run_straggler(&cfg, &mut |s| println!("{s}"))?;
-        println!("== async report (MSD vs simulated time) ==");
-        println!("{}", report.summary(cfg.agents));
+        cfg.control.adaptive_tau = cfg.control.adaptive_tau || args.flag("adaptive-tau");
+        if cfg.control.adaptive_tau {
+            let report = ddl::coordinator::run_adaptive_tau(&cfg, &mut |s| println!("{s}"))?;
+            println!("== adaptive-tau report (per control epoch) ==");
+            println!("{}", report.summary(cfg.agents));
+        } else {
+            let report = ddl::coordinator::run_straggler(&cfg, &mut |s| println!("{s}"))?;
+            println!("== async report (MSD vs simulated time) ==");
+            println!("{}", report.summary(cfg.agents));
+        }
         Ok(())
     })
 }

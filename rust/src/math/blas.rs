@@ -70,8 +70,19 @@ fn gemm_block(
             let nr = NR.min(nb - j);
             if mr == MR && nr == NR {
                 micro_4x8(ic + i, jc + j, pc, kb, n, k, alpha, a, b, c);
+            } else if nr == NR {
+                // Row remainder with a full 8-column tile: the 1x8
+                // microkernel walks B row-contiguously (one load of 8
+                // B values per k step shared across the 8 accumulators)
+                // instead of the strided per-output B walk below. Each
+                // output keeps its own accumulator summed over p in
+                // ascending order, so results are bit-identical to the
+                // scalar edge loop.
+                for ii in 0..mr {
+                    micro_1x8(ic + i + ii, jc + j, pc, kb, n, k, alpha, a, b, c);
+                }
             } else {
-                // Edge tile: simple loop.
+                // Edge tile (column remainder): simple loop.
                 for ii in 0..mr {
                     let arow = (ic + i + ii) * k + pc;
                     let crow = (ic + i + ii) * n + jc + j;
@@ -126,6 +137,39 @@ fn micro_4x8(
         for (jj, &v) in accrow.iter().enumerate() {
             cv[jj] += alpha * v;
         }
+    }
+}
+
+/// 1x8 register-tiled microkernel for the row-remainder edge (m % 4 rows
+/// against a full 8-column tile).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_1x8(
+    row: usize,
+    col: usize,
+    pc: usize,
+    kb: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    let mut acc = [0.0f32; 8];
+    let a0 = row * k + pc;
+    for p in 0..kb {
+        let brow = (pc + p) * n + col;
+        let bvals = &b[brow..brow + 8];
+        let av = a[a0 + p];
+        for (accv, &bv) in acc.iter_mut().zip(bvals) {
+            *accv += av * bv;
+        }
+    }
+    let crow = row * n + col;
+    let cv = &mut c[crow..crow + 8];
+    for (cvv, &v) in cv.iter_mut().zip(acc.iter()) {
+        *cvv += alpha * v;
     }
 }
 
@@ -227,7 +271,26 @@ mod tests {
 
     #[test]
     fn gemm_matches_reference_various_shapes() {
-        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (4, 8, 16), (17, 23, 9), (64, 64, 64), (65, 70, 33)] {
+        // Shapes chosen to exercise every remainder combination of the
+        // 4x8 tile: full tiles only, row remainders against full 8-col
+        // tiles (the 1x8 microkernel: 5x9x13 hits mr in {1}, nr in
+        // {8, 1}; 4x7x8 is column-remainder only; 7x8x5 is row-remainder
+        // only; 3x16x4 is all-rows-remainder with two full column
+        // tiles; 2x9x3 hits both remainders in one block).
+        for &(m, n, k) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 8, 16),
+            (17, 23, 9),
+            (64, 64, 64),
+            (65, 70, 33),
+            (5, 9, 13),
+            (4, 7, 8),
+            (7, 8, 5),
+            (3, 16, 4),
+            (2, 9, 3),
+            (6, 24, 11),
+        ] {
             let a = pseudo(m as u64, m * k);
             let b = pseudo(n as u64 + 100, k * n);
             let mut c = vec![0.0; m * n];
@@ -235,6 +298,31 @@ mod tests {
             let cref = gemm_ref(m, n, k, &a, &b);
             for (x, y) in c.iter().zip(&cref) {
                 assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{m}x{n}x{k}: {x} vs {y}");
+            }
+        }
+    }
+
+    /// The 1x8 remainder microkernel preserves the scalar edge loop's
+    /// accumulation order (per-output accumulator, k ascending), so
+    /// remainder rows are bit-identical to the naive per-element sum.
+    #[test]
+    fn gemm_row_remainder_bit_identical_to_scalar_order() {
+        let (m, n, k) = (5, 8, 20); // row 4 takes the 1x8 path, one k-block
+        let a = pseudo(31, m * k);
+        let b = pseudo(32, k * n);
+        let mut c = vec![0.0; m * n];
+        gemm(m, n, k, 1.0, &a, &b, 0.0, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                assert_eq!(
+                    c[i * n + j].to_bits(),
+                    acc.to_bits(),
+                    "({i},{j}) drifted from the scalar accumulation order"
+                );
             }
         }
     }

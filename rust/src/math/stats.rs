@@ -47,21 +47,68 @@ pub fn mad(x: &[f64]) -> f64 {
     median(&dev)
 }
 
-/// Percentile in [0, 100] with linear interpolation.
-pub fn percentile(x: &[f64], p: f64) -> f64 {
-    if x.is_empty() {
+/// Percentile in [0, 100] with linear interpolation over an
+/// already-sorted slice. The slice must be ascending (as produced by
+/// [`Percentiles`]); an empty slice reads 0.0.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut v = x.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
     }
+}
+
+/// Sort-once percentile reader: pay the `O(n log n)` sort a single time
+/// and answer any number of percentile queries against it. The serving
+/// reports (p50/p95/p99/max over one latency vector) and the batch
+/// controller's latency window both use this instead of re-sorting per
+/// call via [`percentile`].
+#[derive(Clone, Debug)]
+pub struct Percentiles {
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    /// Copy and sort `x` (NaNs are not supported, as in [`median`]).
+    pub fn new(x: &[f64]) -> Self {
+        let mut sorted = x.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles { sorted }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Whether the sample set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Percentile `p` in [0, 100] with linear interpolation (0.0 when
+    /// empty, matching [`percentile`]).
+    pub fn get(&self, p: f64) -> f64 {
+        percentile_sorted(&self.sorted, p)
+    }
+
+    /// Largest sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Percentile in [0, 100] with linear interpolation. Thin wrapper over
+/// [`Percentiles`]; when querying several percentiles of one vector,
+/// build the `Percentiles` once instead.
+pub fn percentile(x: &[f64], p: f64) -> f64 {
+    Percentiles::new(x).get(p)
 }
 
 #[cfg(test)]
@@ -95,5 +142,30 @@ mod tests {
         assert_eq!(percentile(&x, 0.0), 0.0);
         assert_eq!(percentile(&x, 100.0), 10.0);
         assert_eq!(percentile(&x, 50.0), 5.0);
+    }
+
+    /// The sort-once reader agrees bitwise with the per-call wrapper at
+    /// every queried percentile, including the empty-input convention.
+    #[test]
+    fn percentiles_match_percentile() {
+        let x = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.0];
+        let pct = Percentiles::new(&x);
+        assert_eq!(pct.len(), 7);
+        assert!(!pct.is_empty());
+        for p in [0.0, 12.5, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(pct.get(p).to_bits(), percentile(&x, p).to_bits(), "p = {p}");
+        }
+        assert_eq!(pct.max(), 9.0);
+        let empty = Percentiles::new(&[]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.get(50.0), 0.0);
+        assert_eq!(empty.max(), 0.0);
+    }
+
+    #[test]
+    fn percentile_sorted_requires_no_resort() {
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&sorted, 50.0), 2.5);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 }

@@ -151,6 +151,13 @@ pub struct AsyncParams {
     pub slow_links: Vec<(usize, usize)>,
     /// Link-delay multiplier for [`Self::slow_links`].
     pub slow_link_factor: f64,
+    /// Drifting-straggler scenario: when > 0, the slow-agent identity
+    /// rotates deterministically with simulated time — agent
+    /// `⌊t/period⌋ mod N` computes [`Self::slow_factor`]× slower —
+    /// overriding the static [`Self::slow_agents`] list. The rotation is
+    /// a pure function of the event clock, so replay determinism is
+    /// untouched. `0` (default) = static scenario.
+    pub drift_period_us: u64,
 }
 
 impl Default for AsyncParams {
@@ -166,6 +173,7 @@ impl Default for AsyncParams {
             slow_factor: 10.0,
             slow_links: Vec::new(),
             slow_link_factor: 10.0,
+            drift_period_us: 0,
         }
     }
 }
@@ -194,6 +202,14 @@ impl AsyncParams {
     /// Builder-style seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Builder-style drifting straggler: the slow-agent identity rotates
+    /// every `period_us` of simulated time, slowed by `factor`.
+    pub fn with_drift(mut self, period_us: u64, factor: f64) -> Self {
+        self.drift_period_us = period_us;
+        self.slow_factor = factor;
         self
     }
 }
@@ -239,11 +255,14 @@ struct AgentState {
     done: usize,
     /// Adapt finished but combine gated on the staleness bound.
     waiting: bool,
+    /// Event time at which [`Self::waiting`] was last set (gate-wait
+    /// accounting).
+    wait_since: u64,
     /// Received ψ per neighbor slot: `(iter, psi)`, pruned at combine.
     inbox: Vec<Vec<(usize, Vec<f32>)>>,
     /// Dedicated compute-delay stream.
     rng: Pcg64,
-    /// Compute-delay multiplier (straggler scenarios).
+    /// Compute-delay multiplier (static straggler scenarios).
     slow: f64,
 }
 
@@ -280,6 +299,10 @@ pub struct AsyncNetwork {
     cur_min: usize,
     max_staleness: usize,
     last_combine_us: u64,
+    /// Total simulated time agents spent with an adapt finished but the
+    /// combine gated on the staleness bound (summed over agents; the τ
+    /// controller's widen signal).
+    gate_wait_us: u64,
 }
 
 impl AsyncNetwork {
@@ -312,6 +335,7 @@ impl AsyncNetwork {
                 psi: vec![0.0; m],
                 done: 0,
                 waiting: false,
+                wait_since: 0,
                 inbox: vec![Vec::new(); graph.degree(k)],
                 rng: root.split(tag),
                 slow,
@@ -368,6 +392,7 @@ impl AsyncNetwork {
             cur_min: 0,
             max_staleness: 0,
             last_combine_us: 0,
+            gate_wait_us: 0,
         })
     }
 
@@ -377,10 +402,28 @@ impl AsyncNetwork {
         self.heap.push(Reverse(Event { t, seq, kind }));
     }
 
-    fn sample_compute(&mut self, k: usize) -> u64 {
+    /// Compute-delay multiplier of agent `k` at simulated time `t`: the
+    /// static per-agent factor, or — in the drifting scenario — the
+    /// rotating slow-agent schedule (a pure function of `t`, so replays
+    /// are untouched).
+    fn slow_mult(&self, k: usize, t: u64) -> f64 {
+        let period = self.params.drift_period_us;
+        if period > 0 {
+            if k == ((t / period) as usize) % self.agents.len() {
+                self.params.slow_factor
+            } else {
+                1.0
+            }
+        } else {
+            self.agents[k].slow
+        }
+    }
+
+    fn sample_compute(&mut self, k: usize, t: u64) -> u64 {
+        let mult = self.slow_mult(k, t);
         let ag = &mut self.agents[k];
         let base = self.params.compute.sample(&mut ag.rng);
-        (base as f64 * ag.slow).round() as u64
+        (base as f64 * mult).round() as u64
     }
 
     fn sample_link(&mut self, k: usize, slot: usize) -> u64 {
@@ -403,7 +446,7 @@ impl AsyncNetwork {
             return;
         }
         for k in 0..self.agents.len() {
-            let d = self.sample_compute(k);
+            let d = self.sample_compute(k, 0);
             self.push_event(d, EventKind::AdaptDone { agent: k });
         }
     }
@@ -526,6 +569,7 @@ impl AsyncNetwork {
             );
         }
         self.agents[k].waiting = true;
+        self.agents[k].wait_since = t;
         self.try_combine(k, t, task);
     }
 
@@ -550,8 +594,13 @@ impl AsyncNetwork {
         // fills in ascending sender order).
         let neighbors = self.graph.neighbors(k);
         let mut staleness_max = 0usize;
+        let waited_us;
         {
             let ag = &mut self.agents[k];
+            // Gate-wait accounting: time between the adapt finishing and
+            // this combine passing the staleness gate (0 when the gate
+            // passed immediately).
+            waited_us = t.saturating_sub(ag.wait_since);
             for idx in 0..m {
                 ag.nu[idx] = akk * ag.psi[idx];
             }
@@ -583,6 +632,7 @@ impl AsyncNetwork {
             ag.done = i + 1;
         }
         self.max_staleness = self.max_staleness.max(staleness_max);
+        self.gate_wait_us += waited_us;
         self.last_combine_us = t;
         // Round tracking: one round per completed network-wide wave.
         self.level_counts[i] -= 1;
@@ -594,8 +644,27 @@ impl AsyncNetwork {
         if self.agents[k].done == self.target_iters {
             self.done_count += 1;
         } else {
-            let d = self.sample_compute(k);
+            let d = self.sample_compute(k, t);
             self.push_event(t.saturating_add(d), EventKind::AdaptDone { agent: k });
+        }
+    }
+
+    /// Swap the staleness bound mid-run (the τ controller's actuator,
+    /// `ddl async --adaptive-tau`). Call between [`Self::run_clamped`]
+    /// segments at a simulated time `t_us` at or past the last processed
+    /// event. Widening re-attempts the gated combine of every waiting
+    /// agent (in ascending agent order — deterministic); narrowing simply
+    /// tightens the gate for future combines. Waiting agents' staleness
+    /// never exceeds the widest bound in effect while they waited.
+    pub fn set_tau(&mut self, tau: usize, task: &TaskSpec, t_us: u64) {
+        let widened = tau > self.params.tau;
+        self.params.tau = tau;
+        if widened {
+            for k in 0..self.agents.len() {
+                if self.agents[k].waiting {
+                    self.try_combine(k, t_us, task);
+                }
+            }
         }
     }
 
@@ -633,9 +702,42 @@ impl AsyncNetwork {
     }
 
     /// Largest per-neighbor staleness `i − iter(ψ used)` observed by any
-    /// combine; never exceeds [`AsyncParams::tau`].
+    /// combine; never exceeds [`AsyncParams::tau`] (the widest bound in
+    /// effect, under [`Self::set_tau`]).
     pub fn max_staleness_observed(&self) -> usize {
         self.max_staleness
+    }
+
+    /// Staleness bound currently in effect.
+    pub fn tau(&self) -> usize {
+        self.params.tau
+    }
+
+    /// Total simulated µs agents spent with an adapt finished but the
+    /// combine gated on the staleness bound, summed over agents and
+    /// accounted at each *completed* combine. Dominating the simulated
+    /// time budget (`gate_wait_us / (N · elapsed)` large) is the τ
+    /// controller's signal to widen the bound.
+    pub fn gate_wait_us(&self) -> u64 {
+        self.gate_wait_us
+    }
+
+    /// [`Self::gate_wait_us`] plus the in-progress waits of agents still
+    /// gated at simulated time `t_us` (which must be at or past the last
+    /// processed event). Controllers difference *this* per epoch: an
+    /// epoch in which agents sat blocked the whole time — no combine
+    /// landed to charge [`Self::gate_wait_us`] — still registers its full
+    /// wait immediately, and because a wait's in-progress prefix is
+    /// exactly what the completed charge later includes, per-epoch
+    /// differences telescope with no double counting.
+    pub fn gate_wait_us_at(&self, t_us: u64) -> u64 {
+        let in_progress: u64 = self
+            .agents
+            .iter()
+            .filter(|a| a.waiting)
+            .map(|a| t_us.saturating_sub(a.wait_since))
+            .sum();
+        self.gate_wait_us.saturating_add(in_progress)
     }
 
     /// Traffic statistics (see the accounting note in the module docs).
@@ -870,6 +972,140 @@ mod tests {
         for k in 0..n {
             assert!(crate::math::vector::norm_inf(anet.nu(k)) <= 1.0 + 1e-6);
         }
+    }
+
+    /// Gate-wait accounting: the barrier (τ = 0) under iid compute jitter
+    /// charges every agent the neighborhood max each iteration, while a
+    /// wide τ absorbs the jitter — the wait *fraction* of simulated time
+    /// collapses. (A permanent straggler is deliberately not used here:
+    /// with one, both executors rate-match to the slow agent in steady
+    /// state and the fractions converge.)
+    #[test]
+    fn gate_wait_fraction_collapses_with_wide_tau() {
+        let (n, m, iters) = (10, 4, 80);
+        let (dict, g, a, x) = problem(n, m, 0xA5_10, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        let mk = |tau| {
+            AsyncParams::default()
+                .with_tau(tau)
+                .with_delays(DelayDist::Exp { mean_us: 100.0 }, DelayDist::Exp { mean_us: 10.0 })
+                .with_seed(44)
+        };
+        let mut sync = AsyncNetwork::new(g.clone(), a.clone(), m, None, mk(0)).unwrap();
+        sync.run(&dict, &task, &x, params).unwrap();
+        let mut wide = AsyncNetwork::new(g, a, m, None, mk(8)).unwrap();
+        wide.run(&dict, &task, &x, params).unwrap();
+        assert!(sync.gate_wait_us() > 0, "the barrier must charge gate-wait time");
+        let frac = |net: &AsyncNetwork| {
+            net.gate_wait_us() as f64 / (net.sim_time_us().max(1) as f64 * n as f64)
+        };
+        assert!(
+            frac(&wide) < frac(&sync),
+            "τ=8 wait fraction {} should undercut τ=0 fraction {}",
+            frac(&wide),
+            frac(&sync)
+        );
+    }
+
+    /// `gate_wait_us_at` surfaces in-progress waits mid-run (agents
+    /// blocked on a straggler that has not yet produced its ψ), and
+    /// collapses back to the completed-combine total once the run ends.
+    #[test]
+    fn gate_wait_at_includes_in_progress_waits() {
+        let (n, m, iters) = (8, 4, 12);
+        let (dict, g, a, x) = problem(n, m, 0xA5_13, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        let ap = AsyncParams::default()
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Zero)
+            .with_slow_agent(0, 100.0) // 10 ms per straggler iteration
+            .with_seed(3);
+        let mut net = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        // Clamp mid-way through the straggler's first iteration: its
+        // neighbors sit gated with no combine landed to charge the
+        // completed counter.
+        let done = net.run_clamped(&dict, &task, &x, params, 5_000).unwrap();
+        assert!(!done);
+        assert!(
+            net.gate_wait_us_at(5_000) > net.gate_wait_us(),
+            "in-progress waits must be visible mid-run"
+        );
+        net.run(&dict, &task, &x, params).unwrap();
+        // Everyone finished: nobody is waiting, the two views agree.
+        assert_eq!(net.gate_wait_us_at(net.sim_time_us()), net.gate_wait_us());
+    }
+
+    /// Widening τ mid-run releases gated agents deterministically and the
+    /// staleness invariant holds against the widest bound used; two
+    /// identically-scheduled runs replay bit-identically.
+    #[test]
+    fn set_tau_mid_run_is_deterministic() {
+        let (n, m, iters) = (8, 5, 80);
+        let (dict, g, a, x) = problem(n, m, 0xA5_11, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.25, iters);
+        let ap = AsyncParams::default()
+            .with_tau(0)
+            .with_delays(DelayDist::Exp { mean_us: 80.0 }, DelayDist::Exp { mean_us: 15.0 })
+            .with_slow_agent(2, 8.0)
+            .with_seed(91);
+        let run_schedule = |taus: &[usize]| {
+            let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            let mut t = 0u64;
+            for &tau in taus {
+                t += 3_000;
+                if net.run_clamped(&dict, &task, &x, params, t).unwrap() {
+                    break;
+                }
+                net.set_tau(tau, &task, t);
+            }
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let n1 = run_schedule(&[1, 2, 3, 2, 4]);
+        let n2 = run_schedule(&[1, 2, 3, 2, 4]);
+        for k in 0..n {
+            assert_eq!(n1.nu(k), n2.nu(k), "agent {k}");
+        }
+        assert_eq!(n1.stats(), n2.stats());
+        assert_eq!(n1.sim_time_us(), n2.sim_time_us());
+        assert_eq!(n1.gate_wait_us(), n2.gate_wait_us());
+        assert_eq!(n1.tau(), 4);
+        assert!(n1.max_staleness_observed() <= 4, "staleness bounded by the widest τ");
+        for k in 0..n {
+            assert_eq!(n1.iters_done(k), iters);
+        }
+    }
+
+    /// The drifting straggler rotates the slow identity on schedule and
+    /// stays seed-reproducible.
+    #[test]
+    fn drifting_straggler_rotates_and_replays() {
+        let (n, m, iters) = (6, 4, 120);
+        let (dict, g, a, x) = problem(n, m, 0xA5_12, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        let ap = AsyncParams::default()
+            .with_tau(3)
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Zero)
+            .with_drift(5_000, 10.0)
+            .with_seed(7);
+        let mut n1 = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+        n1.run(&dict, &task, &x, params).unwrap();
+        let mut n2 = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        n2.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(n1.nu(k), n2.nu(k), "agent {k}");
+        }
+        assert_eq!(n1.sim_time_us(), n2.sim_time_us());
+        // With constant 100 µs compute and a 10x drifting slowdown the
+        // run must outlast the all-fast schedule (the rotating straggler
+        // really slows someone) but stay well under the everyone-
+        // always-slow bound plus chaining transients (rotation lets the
+        // network burn the new straggler's accumulated lead each window).
+        assert!(n1.sim_time_us() > iters as u64 * 100);
+        assert!(n1.sim_time_us() < iters as u64 * 1_500);
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //!
 //! The [`pool`] module provides the shared scoped-thread worker pool that
 //! both the matrix-form engine and the scalar cost-consensus use for
-//! row-partitioned parallelism.
+//! row-partitioned parallelism, and [`tau_control`] the staleness-τ
+//! feedback controller (`ddl async --adaptive-tau`) that widens τ when
+//! gate-wait time dominates and narrows it when MSD drifts from a τ = 0
+//! probe.
 //!
 //! The full executor matrix — which executor to reach for, what each one
 //! proves, and the ψ-privacy dataflow they all share — is laid out in
@@ -34,8 +37,10 @@ pub mod async_exec;
 pub mod bsp;
 pub mod message;
 pub mod pool;
+pub mod tau_control;
 
 pub use async_exec::{AsyncNetwork, AsyncParams, DelayDist};
 pub use bsp::BspNetwork;
 pub use message::{MessageStats, PsiMessage};
 pub use pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};
+pub use tau_control::{TauController, TauDecision};

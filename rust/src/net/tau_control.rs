@@ -1,0 +1,191 @@
+//! Staleness-adaptive τ: the feedback controller that closes the loop the
+//! async executor already measures.
+//!
+//! [`crate::net::AsyncNetwork`] exposes two opposing signals:
+//!
+//! * **gate-wait time** ([`crate::net::AsyncNetwork::gate_wait_us`]) —
+//!   when it dominates simulated time, agents sit at the staleness gate
+//!   and a wider τ would convert waiting into progress;
+//! * **MSD drift versus a τ = 0 probe** — a second executor instance run
+//!   at τ = 0 under the identical delay model (free to build: the sync
+//!   comparator of every straggler experiment). When the adaptive run's
+//!   MSD at equal simulated time falls *behind* the probe's by more than
+//!   a bound, staleness is hurting accuracy faster than asynchrony is
+//!   buying time, and τ must narrow.
+//!
+//! [`TauController::decide`] turns those two signals into a ±1 move per
+//! control epoch, clamped to `[tau_min, tau_max]` — narrow wins over
+//! widen when both fire (accuracy first). Every decision is a pure
+//! function of (config, the executor's deterministic measurements), so an
+//! adaptive run replays bit-identically for a given seed; the decision
+//! trace is recorded for the replay test
+//! (`tests/control_adaptive.rs`). The driver loop that steps the
+//! adaptive and probe executors through shared sim-time epochs lives in
+//! [`crate::coordinator::run_adaptive_tau`] (`ddl async --adaptive-tau`);
+//! the serve-side controllers it mirrors live in
+//! [`crate::serve::control`].
+
+use crate::config::experiment::ControlConfig;
+
+/// One τ-controller decision, recorded per control epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TauDecision {
+    /// Simulated time of the decision (µs, the epoch boundary).
+    pub t_us: u64,
+    /// τ in effect after the decision.
+    pub tau: usize,
+    /// Gate-wait fraction of the epoch's simulated time (per agent).
+    pub gate_wait_frac: f64,
+    /// Relative MSD excess of the adaptive run over the τ = 0 probe
+    /// (0 when the adaptive run is at least as converged).
+    pub msd_drift: f64,
+}
+
+/// The ±1-per-epoch staleness controller (see the module docs).
+pub struct TauController {
+    tau_min: usize,
+    tau_max: usize,
+    gate_wait_hi: f64,
+    msd_drift_bound: f64,
+    last_t_us: u64,
+    last_gate_wait_us: u64,
+    trace: Vec<TauDecision>,
+}
+
+impl TauController {
+    /// Controller from the `[control]` block.
+    pub fn new(cfg: &ControlConfig) -> Self {
+        TauController {
+            tau_min: cfg.tau_min,
+            tau_max: cfg.tau_max.max(cfg.tau_min),
+            gate_wait_hi: cfg.gate_wait_hi,
+            msd_drift_bound: cfg.msd_drift_bound,
+            last_t_us: 0,
+            last_gate_wait_us: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// A starting τ clamped into the controller's bounds.
+    pub fn initial_tau(&self, tau: usize) -> usize {
+        tau.clamp(self.tau_min, self.tau_max)
+    }
+
+    /// One control-epoch decision at simulated time `t_us`:
+    /// `gate_wait_total_us` is the executor's cumulative
+    /// [`crate::net::AsyncNetwork::gate_wait_us_at`] snapshot at `t_us`
+    /// (in-progress waits included, so fully-starved epochs register
+    /// immediately; the controller differences it against the previous
+    /// epoch itself), `msd_adaptive` / `msd_probe` the two executors'
+    /// MSD at this epoch boundary. Returns the τ to run the next epoch
+    /// at (possibly unchanged) and records the decision.
+    pub fn decide(
+        &mut self,
+        t_us: u64,
+        agents: usize,
+        gate_wait_total_us: u64,
+        msd_adaptive: f64,
+        msd_probe: f64,
+        cur_tau: usize,
+    ) -> usize {
+        let span_us = t_us.saturating_sub(self.last_t_us).max(1) * agents.max(1) as u64;
+        let waited = gate_wait_total_us.saturating_sub(self.last_gate_wait_us);
+        let gate_wait_frac = waited as f64 / span_us as f64;
+        self.last_t_us = t_us;
+        self.last_gate_wait_us = gate_wait_total_us;
+        let msd_drift = if msd_probe > 0.0 {
+            ((msd_adaptive - msd_probe) / msd_probe).max(0.0)
+        } else {
+            0.0
+        };
+        let tau = if msd_drift > self.msd_drift_bound {
+            // Accuracy first: staleness is visibly hurting convergence.
+            cur_tau.saturating_sub(1).max(self.tau_min)
+        } else if gate_wait_frac > self.gate_wait_hi {
+            (cur_tau + 1).min(self.tau_max)
+        } else {
+            cur_tau
+        };
+        self.trace.push(TauDecision { t_us, tau, gate_wait_frac, msd_drift });
+        tau
+    }
+
+    /// The decision trace so far.
+    pub fn trace(&self) -> &[TauDecision] {
+        &self.trace
+    }
+
+    /// Tear down, keeping the decision trace.
+    pub fn into_trace(self) -> Vec<TauDecision> {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControlConfig {
+        ControlConfig {
+            tau_min: 0,
+            tau_max: 8,
+            gate_wait_hi: 0.25,
+            msd_drift_bound: 0.5,
+            ..ControlConfig::default()
+        }
+    }
+
+    #[test]
+    fn widens_on_gate_wait_and_narrows_on_drift() {
+        let mut ctl = TauController::new(&cfg());
+        // Epoch 1: heavy gate wait (50% of 10 agents x 1000 µs), no drift.
+        let tau = ctl.decide(1_000, 10, 5_000, 1e-3, 1e-3, 2);
+        assert_eq!(tau, 3);
+        // Epoch 2: light wait -> hold.
+        let tau = ctl.decide(2_000, 10, 5_500, 1e-3, 1e-3, tau);
+        assert_eq!(tau, 3);
+        // Epoch 3: adaptive MSD 2x the probe -> narrow, even though the
+        // wait signal also fires (accuracy first).
+        let tau = ctl.decide(3_000, 10, 15_000, 2e-3, 1e-3, tau);
+        assert_eq!(tau, 2);
+        let tr = ctl.trace();
+        assert_eq!(tr.len(), 3);
+        assert!((tr[0].gate_wait_frac - 0.5).abs() < 1e-12);
+        assert!((tr[2].msd_drift - 1.0).abs() < 1e-12);
+        assert_eq!(tr[2].tau, 2);
+    }
+
+    #[test]
+    fn clamps_to_bounds_and_clamps_initial() {
+        let c = ControlConfig { tau_min: 1, tau_max: 3, ..cfg() };
+        let mut ctl = TauController::new(&c);
+        assert_eq!(ctl.initial_tau(9), 3);
+        assert_eq!(ctl.initial_tau(0), 1);
+        // Widen at the ceiling holds.
+        assert_eq!(ctl.decide(1_000, 4, 4_000, 1e-3, 1e-3, 3), 3);
+        // Narrow at the floor holds.
+        assert_eq!(ctl.decide(2_000, 4, 4_000, 9.0, 1e-3, 1), 1);
+    }
+
+    #[test]
+    fn drift_is_one_sided_and_probe_zero_safe() {
+        let mut ctl = TauController::new(&cfg());
+        // Adaptive ahead of the probe: drift clamps to 0, no narrow.
+        let tau = ctl.decide(1_000, 10, 0, 1e-4, 1e-3, 4);
+        assert_eq!(tau, 4);
+        assert_eq!(ctl.trace()[0].msd_drift, 0.0);
+        // Zero-probe MSD (degenerate) never divides by zero.
+        let tau = ctl.decide(2_000, 10, 0, 1.0, 0.0, tau);
+        assert_eq!(tau, 4);
+    }
+
+    #[test]
+    fn gate_wait_is_differenced_per_epoch() {
+        let mut ctl = TauController::new(&cfg());
+        // Cumulative 3000 over epoch of 10 x 1000 -> 0.3 > 0.25: widen.
+        assert_eq!(ctl.decide(1_000, 10, 3_000, 1e-3, 1e-3, 0), 1);
+        // No *new* wait in epoch 2: fraction 0, hold (not re-counted).
+        assert_eq!(ctl.decide(2_000, 10, 3_000, 1e-3, 1e-3, 1), 1);
+        assert_eq!(ctl.trace()[1].gate_wait_frac, 0.0);
+    }
+}

@@ -1,0 +1,604 @@
+//! Feedback control plane for the serving layers: measurement-driven
+//! batch size and pipeline depth.
+//!
+//! PR 2/PR 3 gave the service a micro-batching queue and a concurrent
+//! pipeline, both running on hand-tuned static knobs (`batch`,
+//! `max_wait_us`, `pipeline_depth`). The sessions already *measure*
+//! everything a controller needs — per-request latency, formed batch
+//! sizes, per-stage timing — but never feed it back. This module closes
+//! those loops:
+//!
+//! * [`BatchController`] — tracks a sliding window of request latencies
+//!   and batch fills and re-decides the [`BatchPolicy`] each control tick
+//!   to hit a configured p99-latency SLO while maximizing throughput:
+//!   AIMD on `max_wait_us` (halve on SLO violation, gently widen on
+//!   comfort — waiting trades latency for batching efficiency) and
+//!   fill-driven doubling/halving of `max_batch` (full batches mean
+//!   backlog to drain, persistently empty ones mean the cap is slack).
+//! * [`DepthController`] — counts, per epoch of batches, how often the
+//!   virtual pipeline was *token-starved* (a formed batch had to wait for
+//!   a dictionary snapshot, i.e. the swap schedule was the bottleneck)
+//!   and re-plans the pipeline depth by at most ±1 at epoch boundaries,
+//!   keeping the swap schedule `S_j` deterministic per session.
+//! * [`ServiceModel`] + [`PipeSim`] — the virtual µs clocks adaptive
+//!   sessions run on. Instead of measured wall time, one batch of `B`
+//!   samples costs `svc_base_us + svc_per_sample_us·B` (serial loop /
+//!   inference stage) and `upd_per_sample_us·B` (update stage), so every
+//!   controller input — and therefore every decision — is a pure function
+//!   of (config, seed, arrival stream). Two adaptive runs replay
+//!   **bit-identically**: same decision traces, same batch sequence, same
+//!   final dictionary (`tests/control_adaptive.rs`).
+//!
+//! The controllers never see wall-clock time; with the control plane
+//! disabled (`[control] enabled = false`, the default) the serve
+//! executors take exactly their static PR 3 code paths. The τ controller
+//! for the async executor lives in [`crate::net::tau_control`] — same
+//! design rules, different substrate.
+
+use crate::config::experiment::ControlConfig;
+use crate::math::stats;
+use crate::serve::queue::BatchPolicy;
+use std::collections::VecDeque;
+
+/// One batch-controller decision, recorded at every control tick so
+/// adaptive runs can be audited and replay-checked.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlDecision {
+    /// Virtual time of the decision (µs).
+    pub t_us: u64,
+    /// `max_batch` in effect after the decision.
+    pub max_batch: usize,
+    /// `max_wait_us` in effect after the decision.
+    pub max_wait_us: u64,
+    /// Window p99 at decision time (ms); −1 when the window was too
+    /// small to act on.
+    pub p99_ms: f64,
+    /// Mean recent batch fill relative to the cap each batch was formed
+    /// under, in [0, 1]; −1 when no batch completed yet.
+    pub fill: f64,
+}
+
+/// One depth-controller re-plan, recorded at epoch boundaries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DepthDecision {
+    /// Index of the first batch the new depth applies to.
+    pub batch: usize,
+    /// Pipeline depth in effect from that batch on.
+    pub depth: usize,
+    /// Token-starved batches observed in the epoch that triggered the
+    /// decision.
+    pub starved: usize,
+}
+
+/// Deterministic virtual service-time model (see the module docs). The
+/// constants come from `[control]`; they stand in for measured wall time
+/// whenever a controller is active, which is what makes adaptive runs
+/// replay bit-identically.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceModel {
+    /// Fixed per-batch overhead (µs): thread wake-ups, combine setup.
+    pub base_us: u64,
+    /// Marginal inference cost per sample in the batch (µs).
+    pub per_sample_us: u64,
+    /// Eq. 51 update-stage cost per sample (µs), pipeline mode.
+    pub upd_per_sample_us: u64,
+}
+
+impl ServiceModel {
+    /// Model from the `[control]` block.
+    pub fn from_config(cfg: &ControlConfig) -> Self {
+        ServiceModel {
+            base_us: cfg.svc_base_us,
+            per_sample_us: cfg.svc_per_sample_us,
+            upd_per_sample_us: cfg.upd_per_sample_us,
+        }
+    }
+
+    /// Virtual cost of one serial service step / one inference sweep over
+    /// a batch of `b` samples (µs).
+    pub fn service_us(&self, b: usize) -> u64 {
+        self.base_us + self.per_sample_us * b as u64
+    }
+
+    /// Virtual cost of the Eq. 51 update stage over `b` samples (µs).
+    pub fn update_us(&self, b: usize) -> u64 {
+        self.upd_per_sample_us * b as u64
+    }
+}
+
+/// Clamp a static `(max_batch, max_wait_us)` pair into the controller's
+/// bounds — the initial policy of an adaptive session (and the whole
+/// policy, when the bounds are pinned to a single point). Inverted
+/// bounds are repaired to `min ≤ max` (matching the TOML sanitization)
+/// rather than panicking.
+pub fn clamped_policy(cfg: &ControlConfig, max_batch: usize, max_wait_us: u64) -> BatchPolicy {
+    let b_lo = cfg.batch_min.max(1);
+    let w_lo = cfg.wait_min_us;
+    BatchPolicy::new(
+        max_batch.clamp(b_lo, cfg.batch_max.max(b_lo)),
+        max_wait_us.clamp(w_lo, cfg.wait_max_us.max(w_lo)),
+    )
+}
+
+/// Measurement-driven batch-formation controller (see the module docs
+/// for the law). Decisions are taken at most once per `tick_us` of
+/// virtual time and recorded in the decision trace.
+pub struct BatchController {
+    slo_p99_ms: f64,
+    tick_us: u64,
+    batch_min: usize,
+    batch_max: usize,
+    wait_min_us: u64,
+    wait_max_us: u64,
+    window: usize,
+    policy: BatchPolicy,
+    /// Completed-request latencies (ms), newest last, trimmed to
+    /// `window`.
+    latencies_ms: VecDeque<f64>,
+    /// Recent batch fills `b / max_batch` (relative to the cap in effect
+    /// when observed), trimmed to 8.
+    fills: VecDeque<f64>,
+    next_tick_us: u64,
+    decisions: Vec<ControlDecision>,
+}
+
+/// Minimum window occupancy before the p99 estimate is acted on.
+const MIN_P99_SAMPLES: usize = 16;
+/// Fills at or above this fraction of the cap read as backlog pressure.
+const FILL_HI: f64 = 0.9;
+/// Fills below this fraction read as a slack cap.
+const FILL_LO: f64 = 0.25;
+
+impl BatchController {
+    /// Controller starting from `(max_batch, max_wait_us)` clamped into
+    /// the configured bounds.
+    pub fn new(cfg: &ControlConfig, max_batch: usize, max_wait_us: u64) -> Self {
+        BatchController {
+            slo_p99_ms: cfg.slo_p99_ms,
+            tick_us: cfg.tick_us.max(1),
+            batch_min: cfg.batch_min.max(1),
+            batch_max: cfg.batch_max.max(cfg.batch_min.max(1)),
+            wait_min_us: cfg.wait_min_us,
+            wait_max_us: cfg.wait_max_us.max(cfg.wait_min_us),
+            // A window below the actionable-p99 floor would silently
+            // disable the SLO law (the estimate would never be acted
+            // on) — clamp it up instead.
+            window: cfg.window.max(MIN_P99_SAMPLES),
+            policy: clamped_policy(cfg, max_batch, max_wait_us),
+            latencies_ms: VecDeque::new(),
+            fills: VecDeque::new(),
+            next_tick_us: cfg.tick_us.max(1),
+            decisions: Vec::new(),
+        }
+    }
+
+    /// The policy currently in effect.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Feed one completed batch: its size, the `max_batch` cap the batch
+    /// was actually *formed under* (in the pipeline a fresh decision only
+    /// reaches the queue when its token is consumed, so in-flight batches
+    /// may predate the current policy), and its requests' latencies (ms,
+    /// on the virtual clock).
+    pub fn observe_batch(&mut self, batch_size: usize, formed_cap: usize, latencies_ms: &[f64]) {
+        self.fills.push_back(batch_size as f64 / formed_cap.max(1) as f64);
+        while self.fills.len() > 8 {
+            self.fills.pop_front();
+        }
+        for &l in latencies_ms {
+            self.latencies_ms.push_back(l);
+        }
+        while self.latencies_ms.len() > self.window {
+            self.latencies_ms.pop_front();
+        }
+    }
+
+    /// Re-decide the policy if a control tick has elapsed by `now_us`;
+    /// returns the (possibly unchanged) policy to install when a decision
+    /// was taken. Pure function of the observations fed so far.
+    pub fn maybe_decide(&mut self, now_us: u64) -> Option<BatchPolicy> {
+        if now_us < self.next_tick_us {
+            return None;
+        }
+        while self.next_tick_us <= now_us {
+            self.next_tick_us += self.tick_us;
+        }
+        let p99 = if self.latencies_ms.len() >= MIN_P99_SAMPLES {
+            // One copy out of the ring, sorted in place — no second
+            // allocation (the point of the sort-once helpers).
+            let mut v: Vec<f64> = self.latencies_ms.iter().copied().collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Some(stats::percentile_sorted(&v, 99.0))
+        } else {
+            None
+        };
+        let fill = if self.fills.is_empty() {
+            None
+        } else {
+            Some(self.fills.iter().sum::<f64>() / self.fills.len() as f64)
+        };
+        let mut b = self.policy.max_batch;
+        let mut w = self.policy.max_wait_us;
+        if let Some(f) = fill {
+            if f >= FILL_HI {
+                // Backlog pressure: bigger batches amortize the per-batch
+                // overhead and drain bursts faster (throughput *and*
+                // tail latency improve together under backlog).
+                b = (b * 2).min(self.batch_max);
+            } else if f < FILL_LO && b > self.batch_min {
+                // Cap far above realized batches: decay it so a later
+                // burst starts from a cap that tracks the load.
+                b = (b / 2).max(self.batch_min);
+            }
+        }
+        if let Some(p) = p99 {
+            if p > self.slo_p99_ms {
+                // SLO violated and batches are not full: the wait budget
+                // is the latency we are paying — cut it multiplicatively.
+                w = (w / 2).max(self.wait_min_us);
+            } else if p <= 0.5 * self.slo_p99_ms {
+                // Comfortable margin: widen the wait budget gently to buy
+                // batching efficiency (additive floor so 0 can recover).
+                w = (w + w / 2 + 64).min(self.wait_max_us);
+            }
+        }
+        self.policy = BatchPolicy::new(b, w);
+        self.decisions.push(ControlDecision {
+            t_us: now_us,
+            max_batch: self.policy.max_batch,
+            max_wait_us: self.policy.max_wait_us,
+            p99_ms: p99.unwrap_or(-1.0),
+            fill: fill.unwrap_or(-1.0),
+        });
+        Some(self.policy)
+    }
+
+    /// The decision trace so far.
+    pub fn decisions(&self) -> &[ControlDecision] {
+        &self.decisions
+    }
+
+    /// Tear down, keeping the decision trace.
+    pub fn into_decisions(self) -> Vec<ControlDecision> {
+        self.decisions
+    }
+}
+
+/// Epoch-boundary pipeline-depth controller. `observe` is fed one flag
+/// per batch (was the virtual pipeline token-starved for it?);
+/// `maybe_replan` is consulted after every batch and moves the depth by
+/// at most ±1 when a batch epoch completes.
+pub struct DepthController {
+    depth_min: usize,
+    depth_max: usize,
+    epoch_batches: usize,
+    depth: usize,
+    starved_in_epoch: usize,
+    seen_in_epoch: usize,
+    decisions: Vec<DepthDecision>,
+}
+
+impl DepthController {
+    /// Controller starting from `initial` clamped into the configured
+    /// bounds.
+    pub fn new(cfg: &ControlConfig, initial: usize) -> Self {
+        let depth_min = cfg.depth_min.max(1);
+        let depth_max = cfg.depth_max.max(depth_min);
+        DepthController {
+            depth_min,
+            depth_max,
+            epoch_batches: cfg.epoch_batches.max(1),
+            depth: initial.clamp(depth_min, depth_max),
+            starved_in_epoch: 0,
+            seen_in_epoch: 0,
+            decisions: Vec::new(),
+        }
+    }
+
+    /// Depth currently in effect.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Feed one processed batch's starvation flag.
+    pub fn observe(&mut self, token_starved: bool) {
+        self.seen_in_epoch += 1;
+        if token_starved {
+            self.starved_in_epoch += 1;
+        }
+    }
+
+    /// Re-plan at the epoch boundary following batch `batch_idx`
+    /// (0-based). Returns the depth delta to apply (−1, 0, +1); the
+    /// caller realizes it by injecting or withholding one snapshot token.
+    pub fn maybe_replan(&mut self, batch_idx: usize) -> i32 {
+        if (batch_idx + 1) % self.epoch_batches != 0 || self.seen_in_epoch == 0 {
+            return 0;
+        }
+        let starved = self.starved_in_epoch;
+        let seen = self.seen_in_epoch;
+        self.starved_in_epoch = 0;
+        self.seen_in_epoch = 0;
+        let delta = if starved * 2 >= seen && self.depth < self.depth_max {
+            // The swap schedule throttled at least half the epoch:
+            // trade one more batch of staleness for overlap.
+            1
+        } else if starved == 0 && self.depth > self.depth_min {
+            // Tokens never bound: the extra staleness buys nothing.
+            -1
+        } else {
+            0
+        };
+        if delta != 0 {
+            self.depth = (self.depth as i64 + delta as i64) as usize;
+            self.decisions.push(DepthDecision { batch: batch_idx + 1, depth: self.depth, starved });
+        }
+        delta
+    }
+
+    /// The re-plan trace so far.
+    pub fn decisions(&self) -> &[DepthDecision] {
+        &self.decisions
+    }
+
+    /// Tear down, keeping the re-plan trace.
+    pub fn into_decisions(self) -> Vec<DepthDecision> {
+        self.decisions
+    }
+}
+
+/// Virtual timing of the three-stage pipeline (formation | inference |
+/// update) under the [`ServiceModel`]: a deterministic recurrence the
+/// updater advances in batch order. Tokens mirror the snapshot tokens of
+/// the real executors — `tokens[i]` is the virtual time the `i`-th
+/// outstanding snapshot became available — so "token-starved" below means
+/// the swap schedule, not compute, throttled a batch.
+pub struct PipeSim {
+    model: ServiceModel,
+    /// Inference-slot free times (slot = batch index mod slots).
+    slot_free_us: Vec<u64>,
+    /// Update-stage free time (the updater is a single serial stage).
+    upd_free_us: u64,
+    /// Publish time of the batch most recently fed to [`Self::batch`]:
+    /// when the updater picks the batch up and swaps the double buffer —
+    /// *before* paying the Eq. 51 update cost, mirroring the real
+    /// executors' publish-before-update order (a depth-1 pipeline
+    /// genuinely overlaps `U_j` with the next batch's inference).
+    publish_us: u64,
+    /// Availability times of outstanding snapshot tokens, FIFO.
+    tokens: VecDeque<u64>,
+}
+
+impl PipeSim {
+    /// Simulator with `slots` inference slots and `prefill` snapshot
+    /// tokens available at t = 0 (the initial pipeline depth).
+    pub fn new(model: ServiceModel, slots: usize, prefill: usize) -> Self {
+        PipeSim {
+            model,
+            slot_free_us: vec![0; slots.max(1)],
+            upd_free_us: 0,
+            publish_us: 0,
+            tokens: (0..prefill).map(|_| 0).collect(),
+        }
+    }
+
+    /// Advance the recurrence for batch `j` of size `b`, formed at
+    /// `formed_us` on the formation clock. Returns `(completion_us,
+    /// token_starved)`: the virtual inference-completion time (requests
+    /// are servable then; latency is measured against it) and whether the
+    /// snapshot token was the binding constraint on the batch's start.
+    pub fn batch(&mut self, j: usize, formed_us: u64, b: usize) -> (u64, bool) {
+        let avail = self.tokens.pop_front().expect("pipe sim: token schedule invariant");
+        let slot = j % self.slot_free_us.len();
+        let free = self.slot_free_us[slot];
+        let start = formed_us.max(avail).max(free);
+        let starved = avail > formed_us && avail > free;
+        let done = start + self.model.service_us(b);
+        self.slot_free_us[slot] = done;
+        // The updater publishes (token-ready point) when it picks the
+        // batch up, then pays the update cost.
+        self.publish_us = done.max(self.upd_free_us);
+        self.upd_free_us = self.publish_us + self.model.update_us(b);
+        (done, starved)
+    }
+
+    /// Record `count` snapshot tokens emitted at the current batch's
+    /// publish point (before its Eq. 51 update cost — see
+    /// [`Self::batch`]).
+    pub fn emit_tokens(&mut self, count: usize) {
+        for _ in 0..count {
+            self.tokens.push_back(self.publish_us);
+        }
+    }
+
+    /// Virtual session clock: everything processed so far (inference and
+    /// updates) has finished by this time.
+    pub fn now_us(&self) -> u64 {
+        self.upd_free_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControlConfig {
+        ControlConfig {
+            enabled: true,
+            slo_p99_ms: 10.0,
+            tick_us: 1_000,
+            batch_min: 1,
+            batch_max: 32,
+            wait_min_us: 0,
+            wait_max_us: 8_000,
+            window: 64,
+            ..ControlConfig::default()
+        }
+    }
+
+    #[test]
+    fn initial_policy_clamped_into_bounds() {
+        let c = ControlConfig { batch_min: 4, batch_max: 16, wait_min_us: 100, ..cfg() };
+        let ctl = BatchController::new(&c, 64, 0);
+        assert_eq!(ctl.policy().max_batch, 16);
+        assert_eq!(ctl.policy().max_wait_us, 100);
+        assert_eq!(clamped_policy(&c, 1, 1_000_000).max_batch, 4);
+        assert_eq!(clamped_policy(&c, 1, 1_000_000).max_wait_us, c.wait_max_us);
+    }
+
+    #[test]
+    fn violation_halves_wait_and_comfort_widens_it() {
+        let mut ctl = BatchController::new(&cfg(), 8, 4_000);
+        // p99 well above the 10 ms SLO.
+        ctl.observe_batch(2, 8, &[15.0; 32]);
+        let p = ctl.maybe_decide(1_000).expect("tick due");
+        assert_eq!(p.max_wait_us, 2_000);
+        // Comfortable latencies: wait creeps back up.
+        ctl.observe_batch(2, 8, &[1.0; 64]);
+        let p = ctl.maybe_decide(2_000).expect("tick due");
+        assert!(p.max_wait_us > 2_000, "comfort should widen the wait budget");
+        assert_eq!(ctl.decisions().len(), 2);
+        assert!(ctl.decisions()[0].p99_ms > 10.0);
+    }
+
+    #[test]
+    fn backlog_doubles_batch_and_slack_decays_it() {
+        let mut ctl = BatchController::new(&cfg(), 8, 1_000);
+        // Full batches, healthy latency: cap doubles.
+        ctl.observe_batch(8, 8, &[1.0; 32]);
+        assert_eq!(ctl.maybe_decide(1_000).unwrap().max_batch, 16);
+        // Tiny batches (formed under the new cap) for a while: cap decays.
+        for _ in 0..8 {
+            ctl.observe_batch(1, 16, &[1.0; 4]);
+        }
+        assert_eq!(ctl.maybe_decide(2_000).unwrap().max_batch, 8);
+    }
+
+    #[test]
+    fn decisions_only_on_ticks() {
+        let mut ctl = BatchController::new(&cfg(), 8, 1_000);
+        assert!(ctl.maybe_decide(999).is_none());
+        assert!(ctl.maybe_decide(1_000).is_some());
+        // The tick was consumed; the next decision waits for the next one.
+        assert!(ctl.maybe_decide(1_500).is_none());
+        assert!(ctl.maybe_decide(2_400).is_some());
+        assert_eq!(ctl.decisions().len(), 2);
+    }
+
+    /// A `window` below the actionable-p99 floor is clamped up — it must
+    /// not silently disable the SLO law.
+    #[test]
+    fn tiny_window_cannot_disable_slo_steering() {
+        let c = ControlConfig { window: 4, ..cfg() };
+        let mut ctl = BatchController::new(&c, 8, 4_000);
+        ctl.observe_batch(2, 8, &[15.0; 16]);
+        let p = ctl.maybe_decide(1_000).expect("tick due");
+        assert_eq!(p.max_wait_us, 2_000, "p99 steering must stay live with window = 4");
+    }
+
+    #[test]
+    fn too_small_window_does_not_touch_wait() {
+        let mut ctl = BatchController::new(&cfg(), 8, 1_000);
+        ctl.observe_batch(1, 8, &[100.0; 4]); // 4 < MIN_P99_SAMPLES
+        let p = ctl.maybe_decide(1_000).unwrap();
+        assert_eq!(p.max_wait_us, 1_000);
+        assert_eq!(ctl.decisions()[0].p99_ms, -1.0);
+    }
+
+    #[test]
+    fn depth_replans_by_at_most_one_at_epoch_boundaries() {
+        let c = ControlConfig { depth_min: 1, depth_max: 4, epoch_batches: 4, ..cfg() };
+        let mut d = DepthController::new(&c, 2);
+        assert_eq!(d.depth(), 2);
+        // Epoch 0: all starved -> +1.
+        for i in 0..4 {
+            d.observe(true);
+            let delta = d.maybe_replan(i);
+            if i < 3 {
+                assert_eq!(delta, 0, "no mid-epoch re-plan");
+            } else {
+                assert_eq!(delta, 1);
+            }
+        }
+        assert_eq!(d.depth(), 3);
+        // Epoch 1: never starved -> -1.
+        for i in 4..8 {
+            d.observe(false);
+            d.maybe_replan(i);
+        }
+        assert_eq!(d.depth(), 2);
+        // Epoch 2: half starved -> +1 again (majority rule is >= half).
+        for i in 8..12 {
+            d.observe(i % 2 == 0);
+            d.maybe_replan(i);
+        }
+        assert_eq!(d.depth(), 3);
+        assert_eq!(d.decisions().len(), 3);
+        assert_eq!(d.decisions()[0], DepthDecision { batch: 4, depth: 3, starved: 4 });
+    }
+
+    #[test]
+    fn depth_respects_bounds() {
+        let c = ControlConfig { depth_min: 1, depth_max: 2, epoch_batches: 1, ..cfg() };
+        let mut d = DepthController::new(&c, 9);
+        assert_eq!(d.depth(), 2, "initial depth clamped");
+        d.observe(true);
+        assert_eq!(d.maybe_replan(0), 0, "already at depth_max");
+        let mut d = DepthController::new(&c, 1);
+        d.observe(false);
+        assert_eq!(d.maybe_replan(0), 0, "already at depth_min");
+    }
+
+    #[test]
+    fn pipe_sim_depth_bounds_overlap() {
+        let model = ServiceModel { base_us: 100, per_sample_us: 0, upd_per_sample_us: 0 };
+        // Depth 1, everything formed at t = 0: batches serialize on the
+        // single outstanding token (inference j waits for update j-1).
+        let mut sim = PipeSim::new(model, 4, 1);
+        let (c0, s0) = sim.batch(0, 0, 4);
+        sim.emit_tokens(1);
+        let (c1, s1) = sim.batch(1, 0, 4);
+        sim.emit_tokens(1);
+        assert_eq!((c0, s0), (100, false));
+        assert_eq!((c1, s1), (200, true), "token must gate batch 1 at depth 1");
+        // Depth 2: batch 1 overlaps batch 0 on its own slot.
+        let mut sim = PipeSim::new(model, 4, 2);
+        let (c0, _) = sim.batch(0, 0, 4);
+        sim.emit_tokens(1);
+        let (c1, starved) = sim.batch(1, 0, 4);
+        assert_eq!(c0, 100);
+        assert_eq!(c1, 100, "depth 2 runs batches 0 and 1 concurrently");
+        assert!(!starved);
+    }
+
+    #[test]
+    fn pipe_sim_update_stage_serializes() {
+        let model = ServiceModel { base_us: 10, per_sample_us: 0, upd_per_sample_us: 25 };
+        let mut sim = PipeSim::new(model, 2, 2);
+        sim.batch(0, 0, 4); // infer done 10, update 10..110
+        sim.emit_tokens(1);
+        sim.batch(1, 0, 4); // infer done 10, update 110..210
+        sim.emit_tokens(1);
+        assert_eq!(sim.now_us(), 210, "updates are one serial stage");
+    }
+
+    /// Tokens become available at the *publish* point (before the Eq. 51
+    /// update cost), mirroring the real executors' publish-before-update
+    /// order: a depth-1 pipeline overlaps update `j` with inference
+    /// `j+1` instead of serializing behind it.
+    #[test]
+    fn pipe_sim_tokens_ready_at_publish_not_after_update() {
+        let model = ServiceModel { base_us: 10, per_sample_us: 0, upd_per_sample_us: 25 };
+        let mut sim = PipeSim::new(model, 2, 1); // depth 1
+        let (c0, _) = sim.batch(0, 0, 4); // done 10, publish 10, update 10..110
+        sim.emit_tokens(1);
+        let (c1, starved) = sim.batch(1, 0, 4);
+        assert_eq!(c0, 10);
+        assert_eq!(c1, 20, "batch 1 starts at the publish point (10), not after the update");
+        assert!(starved, "depth 1 still gates on the token itself");
+        // Batch 1's update serializes behind batch 0's: 110..210.
+        assert_eq!(sim.now_us(), 210);
+    }
+}

@@ -21,17 +21,30 @@
 //!   **bit-identical** to its serial reference executor
 //!   (`tests/serve_pipeline_parity.rs`).
 //!
-//! Drive it with `ddl serve` (TOML section `[serve]`, CLI overrides) or
-//! programmatically via [`session::run_service`]; see
-//! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving. For how
-//! the pipelined executor relates to the other diffusion substrates (BSP,
-//! actors, async) and the bit-reproducibility contracts they share, see
-//! the executor matrix in `ARCHITECTURE.md` at the repository root.
+//! * [`control`] — the feedback control plane (`--adaptive`): a batch
+//!   controller steering `(max_batch, max_wait_us)` to a p99-latency SLO
+//!   on a sliding measurement window, a depth controller re-planning the
+//!   pipeline depth at epoch boundaries, and the deterministic virtual
+//!   service clock that makes every adaptive run replay bit-identically
+//!   (`tests/control_adaptive.rs`).
+//!
+//! Drive it with `ddl serve` (TOML sections `[serve]`/`[control]`, CLI
+//! overrides) or programmatically via [`session::run_service`]; see
+//! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving/§Control.
+//! For how the pipelined executor relates to the other diffusion
+//! substrates (BSP, actors, async) and the bit-reproducibility contracts
+//! they share, see the executor matrix in `ARCHITECTURE.md` at the
+//! repository root.
 
+pub mod control;
 pub mod pipeline;
 pub mod queue;
 pub mod session;
 
+pub use control::{
+    clamped_policy, BatchController, ControlDecision, DepthController, DepthDecision, PipeSim,
+    ServiceModel,
+};
 pub use pipeline::{run_pipelined, BatchFormer, PipelineExec};
 pub use queue::{BatchPolicy, MicroBatchQueue, Request, SharedQueue};
 pub use session::{

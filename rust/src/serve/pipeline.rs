@@ -46,6 +46,24 @@
 //! the real clock and naturally differ between executors; the parity
 //! contract covers dictionaries, sample/batch counts, losses, and
 //! [`MessageStats`].
+//!
+//! ## Adaptive mode (`--adaptive`, `[control] enabled = true`)
+//!
+//! The control plane ([`crate::serve::control`]) rides on the snapshot
+//! schedule itself: every dictionary snapshot travels as a `Token` that
+//! may also carry a fresh [`BatchPolicy`] decided by the
+//! [`BatchController`], applied by the formation stage *before* forming
+//! the batch that consumes the token — so policy swaps land at
+//! deterministic points of the batch sequence in both executors. The
+//! [`DepthController`] re-plans the depth by ±1 at batch-epoch
+//! boundaries, realized by the updater emitting two tokens (deepen) or
+//! withholding one (shallow) — the schedule generalizes to
+//! `S_j = D_{max(0, j − d_j)}` with `d_j` the token count in flight, and
+//! stays bit-identical between the threaded and reference executors.
+//! Latency/throughput figures come from the deterministic virtual stage
+//! clock ([`PipeSim`]) instead of wall time, so adaptive runs replay
+//! bit-identically; with the control plane disabled this module takes
+//! exactly its static PR 3 code paths.
 
 use crate::config::experiment::ServeConfig;
 use crate::error::{DdlError, Result};
@@ -55,9 +73,14 @@ use crate::math::stats;
 use crate::model::{DictDoubleBuffer, DistributedDictionary, TaskSpec};
 use crate::net::{MessageStats, PersistentPool};
 use crate::ops::prox::DictProx;
+use crate::serve::control::{
+    clamped_policy, BatchController, ControlDecision, DepthController, DepthDecision, PipeSim,
+    ServiceModel,
+};
 use crate::serve::queue::{BatchPolicy, Request, SharedQueue};
 use crate::serve::session::{
-    build_engine, loss_quarters, serve_params, serve_task, setup, ServeReport, SessionSetup,
+    build_engine, loss_quarters, serve_params, serve_task, setup, slo_violation_frac,
+    ServeReport, SessionSetup,
 };
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{mpsc, Arc};
@@ -145,6 +168,27 @@ impl BatchFormer {
     }
 }
 
+/// One circulating pipeline permit: the dictionary snapshot the consuming
+/// batch infers against, optionally piggybacking a fresh batch policy
+/// from the controller (applied by the formation stage before the
+/// consuming batch is formed — the deterministic policy-swap point).
+pub(crate) struct Token {
+    snap: DistributedDictionary,
+    policy: Option<BatchPolicy>,
+}
+
+/// Adaptive-mode controller bundle owned by the updater (stage 3 sees
+/// every completed batch in order, so it is the one deterministic place
+/// feedback can close).
+struct PipeCtl {
+    batch: BatchController,
+    depth: DepthController,
+    sim: PipeSim,
+    /// A decision not yet shipped on a token (made while a token was
+    /// withheld); attached to the next emission.
+    pending_policy: Option<BatchPolicy>,
+}
+
 /// Stage-3 state: the double-buffered dictionary plus every deterministic
 /// accumulator of the session (losses, traffic, served counts). Both
 /// executors drive batches through [`Self::process`] in batch order, which
@@ -163,15 +207,43 @@ struct UpdaterState {
     batch_losses: Vec<f64>,
     stats: MessageStats,
     served: usize,
-    /// Per-request latency: wall-clock inference completion (ms since
-    /// session start — the moment the result is servable; the Eq. 51
-    /// update continues in the background) minus the request's virtual
-    /// arrival offset, clamped at 0.
+    /// Per-request latency: inference completion (the moment the result
+    /// is servable; the Eq. 51 update continues in the background) minus
+    /// the request's virtual arrival offset, clamped at 0. Static mode
+    /// stamps completion on the wall clock (ms since session start);
+    /// adaptive mode uses the deterministic virtual stage clock.
     latencies_ms: Vec<f64>,
+    /// Control plane (adaptive mode only).
+    ctl: Option<PipeCtl>,
+}
+
+/// Everything a finished session hands back to [`run_pipelined`].
+struct SessionAccum {
+    dict: DistributedDictionary,
+    batch_losses: Vec<f64>,
+    stats: MessageStats,
+    served: usize,
+    latencies_ms: Vec<f64>,
+    decisions: Vec<ControlDecision>,
+    depth_trace: Vec<DepthDecision>,
+    /// Virtual session duration (adaptive mode; `None` = use wall clock).
+    virtual_duration_us: Option<u64>,
 }
 
 impl UpdaterState {
-    fn new(cfg: &ServeConfig, dict0: DistributedDictionary, directed_edges: usize) -> Self {
+    fn new(
+        cfg: &ServeConfig,
+        dict0: DistributedDictionary,
+        directed_edges: usize,
+        init_depth: usize,
+        slots: usize,
+    ) -> Self {
+        let ctl = cfg.control.enabled.then(|| PipeCtl {
+            batch: BatchController::new(&cfg.control, cfg.batch, cfg.max_wait_us),
+            depth: DepthController::new(&cfg.control, init_depth),
+            sim: PipeSim::new(ServiceModel::from_config(&cfg.control), slots, init_depth),
+            pending_policy: None,
+        });
         UpdaterState {
             dict: DictDoubleBuffer::new(dict0),
             task: serve_task(cfg),
@@ -187,6 +259,7 @@ impl UpdaterState {
             stats: MessageStats::default(),
             served: 0,
             latencies_ms: Vec::new(),
+            ctl,
         }
     }
 
@@ -196,19 +269,27 @@ impl UpdaterState {
     }
 
     /// Process batch `j`'s inference result: recovery + stats against the
-    /// snapshot `S_j` the batch was inferred with, publish `S_{j+depth}`
-    /// (the authoritative state *before* this batch's update, recycling the
-    /// `S_j` buffer) through `emit`, then apply the Eq. 51 update to the
-    /// write buffer. `emit` fires before the update so a depth-1 pipeline
-    /// genuinely overlaps `U_j` with the next batch's inference.
+    /// snapshot `S_j` the batch was inferred with, publish the
+    /// authoritative pre-update state (recycling the `S_j` buffer)
+    /// through `emit`, then apply the Eq. 51 update to the write buffer.
+    /// `emit` fires before the update so a depth-1 pipeline genuinely
+    /// overlaps `U_j` with the next batch's inference.
+    ///
+    /// In adaptive mode this is also where the whole control plane turns:
+    /// the virtual stage clock advances, latencies are stamped against
+    /// it, the batch controller may mint a policy (shipped on the emitted
+    /// token), and the depth controller may emit two tokens or none at an
+    /// epoch boundary (depth ±1).
     fn process(
         &mut self,
         mut snap: DistributedDictionary,
         batch: &[Request],
         view: &NuView<'_>,
         stamp_ms: f64,
-        emit: impl FnOnce(DistributedDictionary),
+        formed: Formed,
+        mut emit: impl FnMut(Token),
     ) -> Result<()> {
+        let j = self.batch_losses.len();
         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
         let tstats = recover_and_stats(
             &snap,
@@ -221,12 +302,33 @@ impl UpdaterState {
         )?;
         self.batch_losses.push(tstats.mean_loss);
         self.served += batch.len();
-        for r in batch {
-            // Completion − arrival, like the serial executor. The pipeline
-            // replays virtual arrivals at full speed, so a request can
-            // complete before its arrival offset would have elapsed in real
-            // time — clamp to 0 (the pipeline outran the arrival process).
-            self.latencies_ms.push((stamp_ms - r.arrival_us as f64 / 1e3).max(0.0));
+        let mut emit_count = 1usize;
+        if let Some(ctl) = self.ctl.as_mut() {
+            // Virtual stage clock: inference completion on the model,
+            // never the wall clock (the replay anchor).
+            let (done_us, starved) = ctl.sim.batch(j, formed.at_us, batch.len());
+            let from = self.latencies_ms.len();
+            for r in batch {
+                self.latencies_ms
+                    .push(done_us.saturating_sub(r.arrival_us) as f64 / 1e3);
+            }
+            ctl.batch.observe_batch(batch.len(), formed.cap, &self.latencies_ms[from..]);
+            if let Some(policy) = ctl.batch.maybe_decide(done_us) {
+                ctl.pending_policy = Some(policy);
+            }
+            ctl.depth.observe(starved);
+            let delta = ctl.depth.maybe_replan(j);
+            emit_count = (1i32 + delta) as usize;
+            ctl.sim.emit_tokens(emit_count);
+        } else {
+            for r in batch {
+                // Completion − arrival, like the serial executor. The
+                // pipeline replays virtual arrivals at full speed, so a
+                // request can complete before its arrival offset would
+                // have elapsed in real time — clamp to 0 (the pipeline
+                // outran the arrival process).
+                self.latencies_ms.push((stamp_ms - r.arrival_us as f64 / 1e3).max(0.0));
+            }
         }
         // ψ traffic, accounted exactly as the serial session does: one
         // message per directed edge per diffusion iteration carrying the
@@ -234,11 +336,29 @@ impl UpdaterState {
         self.stats.record_exchange(self.directed_edges * self.iters, batch.len() * self.m);
         self.stats.add_rounds(self.iters);
 
-        // Publish S_{j+depth} = D_j: swap the double buffer (read becomes
-        // the authoritative pre-update state) and recycle the S_j buffer.
+        // Publish the authoritative pre-update state D_j: swap the double
+        // buffer and recycle the S_j buffer into the next token. An
+        // epoch-boundary depth change emits two tokens (both D_j — the
+        // second is a fresh clone) or none (the S_j buffer is dropped).
         self.dict.publish();
-        snap.copy_from(self.dict.read())?;
-        emit(snap);
+        let policy = if emit_count > 0 {
+            self.ctl.as_mut().and_then(|c| c.pending_policy.take())
+        } else {
+            None
+        };
+        match emit_count {
+            0 => {}
+            1 => {
+                snap.copy_from(self.dict.read())?;
+                emit(Token { snap, policy });
+            }
+            2 => {
+                snap.copy_from(self.dict.read())?;
+                emit(Token { snap, policy });
+                emit(Token { snap: self.fresh_snapshot(), policy: None });
+            }
+            _ => unreachable!("depth moves by at most one per epoch"),
+        }
 
         // Eq. 51 into the write buffer: D_j → D_{j+1}. Inference of later
         // batches reads published snapshots, never this buffer.
@@ -253,11 +373,36 @@ impl UpdaterState {
         Ok(())
     }
 
-    fn into_parts(
-        self,
-    ) -> (DistributedDictionary, Vec<f64>, MessageStats, usize, Vec<f64>) {
-        (self.dict.into_write(), self.batch_losses, self.stats, self.served, self.latencies_ms)
+    fn into_parts(self) -> SessionAccum {
+        let (decisions, depth_trace, virtual_duration_us) = match self.ctl {
+            Some(ctl) => (
+                ctl.batch.into_decisions(),
+                ctl.depth.into_decisions(),
+                Some(ctl.sim.now_us()),
+            ),
+            None => (Vec::new(), Vec::new(), None),
+        };
+        SessionAccum {
+            dict: self.dict.into_write(),
+            batch_losses: self.batch_losses,
+            stats: self.stats,
+            served: self.served,
+            latencies_ms: self.latencies_ms,
+            decisions,
+            depth_trace,
+            virtual_duration_us,
+        }
     }
+}
+
+/// Formation-side facts that travel with a batch to the updater: the
+/// virtual formation-clock reading and the `max_batch` cap the batch was
+/// formed under (a fresh policy only reaches the queue when its token is
+/// consumed, so in-flight batches may predate the current policy).
+#[derive(Clone, Copy)]
+struct Formed {
+    at_us: u64,
+    cap: usize,
 }
 
 /// Dispatch of one formed batch to an inference worker.
@@ -265,6 +410,7 @@ struct Work {
     j: usize,
     snap: DistributedDictionary,
     batch: Vec<Request>,
+    formed: Formed,
 }
 
 /// One completed inference: the shipped dual iterates plus everything the
@@ -276,6 +422,7 @@ struct Done {
     v: Vec<f32>,
     b: usize,
     stamp_ms: f64,
+    formed: Formed,
 }
 
 /// Run the pipelined session. Returns the report and the final adapted
@@ -285,38 +432,54 @@ pub fn run_pipelined(
     exec: PipelineExec,
     log: &mut dyn FnMut(&str),
 ) -> Result<(ServeReport, DistributedDictionary)> {
-    let depth = cfg.pipeline_depth.max(1);
+    let adaptive = cfg.control.enabled;
+    // Initial depth: static value, clamped into the controller's bounds
+    // when it is in charge (DepthController::new applies the identical
+    // clamp — the prefilled token count and the controller must agree).
+    let depth = if adaptive {
+        let lo = cfg.control.depth_min.max(1);
+        cfg.pipeline_depth.max(1).clamp(lo, cfg.control.depth_max.max(lo))
+    } else {
+        cfg.pipeline_depth.max(1)
+    };
     let SessionSetup { graph, topo, dict0, stream } = setup(cfg)?;
     let directed_edges = 2 * graph.edge_count();
-    let policy = BatchPolicy::new(cfg.batch, cfg.max_wait_us);
+    let policy = if adaptive {
+        clamped_policy(&cfg.control, cfg.batch, cfg.max_wait_us)
+    } else {
+        BatchPolicy::new(cfg.batch, cfg.max_wait_us)
+    };
     let task_threads = cfg.infer.threads.max(1);
 
-    // One engine (and persistent pool) per in-flight batch slot. Engines
-    // are stateless between batches (cold-start reset per batch), so slot
-    // assignment j % depth cannot change results.
-    let engine_slots = if exec == PipelineExec::Threaded { depth } else { 1 };
+    // One engine (and persistent pool) per in-flight batch slot; adaptive
+    // sessions provision for the deepest depth the controller may reach.
+    // Engines are stateless between batches (cold-start reset per batch),
+    // so slot assignment j % slots cannot change results.
+    let slots = if adaptive { cfg.control.depth_max.max(depth) } else { depth };
+    let engine_slots = if exec == PipelineExec::Threaded { slots } else { 1 };
     let mut engines = Vec::with_capacity(engine_slots);
     for _ in 0..engine_slots {
         let mut engine = build_engine(cfg, &graph, &topo)?;
         if task_threads > 1 {
             engine.set_pool(Arc::new(PersistentPool::new(task_threads)));
         }
-        engine.reserve_batch(cfg.batch.max(1));
+        engine.reserve_batch(policy.max_batch);
         engine.reserve_atoms(dict0.k());
         engines.push(engine);
     }
     let combine_path = engines[0].combine_path();
 
     log(&format!(
-        "serve[pipelined{}]: N={} M={} topology={} ({} directed edges, {} combine), B<={}, \
+        "serve[pipelined{}{}]: N={} M={} topology={} ({} directed edges, {} combine), B<={}, \
          depth={}, t={}, {} samples at {}",
+        if adaptive { "-adaptive" } else { "" },
         if exec == PipelineExec::Reference { "-reference" } else { "" },
         cfg.agents,
         cfg.dim,
         cfg.topology,
         directed_edges,
         combine_path,
-        cfg.batch.max(1),
+        policy.max_batch,
         depth,
         task_threads,
         cfg.samples,
@@ -324,14 +487,16 @@ pub fn run_pipelined(
     ));
 
     let mut former = BatchFormer::new(policy, stream);
-    let updater = UpdaterState::new(cfg, dict0, directed_edges);
-    let mode: &'static str = match exec {
-        PipelineExec::Threaded => "pipelined",
-        PipelineExec::Reference => "pipelined-reference",
+    let updater = UpdaterState::new(cfg, dict0, directed_edges, depth, slots);
+    let mode: &'static str = match (exec, adaptive) {
+        (PipelineExec::Threaded, false) => "pipelined",
+        (PipelineExec::Reference, false) => "pipelined-reference",
+        (PipelineExec::Threaded, true) => "pipelined-adaptive",
+        (PipelineExec::Reference, true) => "pipelined-adaptive-reference",
     };
 
     let t0 = Instant::now();
-    let (dict, batch_losses, msg_stats, served, latencies_ms) = match exec {
+    let accum = match exec {
         PipelineExec::Reference => {
             run_reference(cfg, &mut former, updater, engines, depth, t0, log)?
         }
@@ -340,9 +505,16 @@ pub fn run_pipelined(
         }
     };
 
-    let batches = batch_losses.len();
-    let duration_s = t0.elapsed().as_secs_f64().max(1e-9);
-    let (loss_first_quarter, loss_last_quarter) = loss_quarters(&batch_losses);
+    let batches = accum.batch_losses.len();
+    // Adaptive sessions report on the deterministic virtual clock (bit-
+    // reproducible figures); static ones keep the measured wall clock.
+    let duration_s = match accum.virtual_duration_us {
+        Some(us) => (us as f64 / 1e6).max(1e-9),
+        None => t0.elapsed().as_secs_f64().max(1e-9),
+    };
+    let (loss_first_quarter, loss_last_quarter) = loss_quarters(&accum.batch_losses);
+    let pct = stats::Percentiles::new(&accum.latencies_ms);
+    let served = accum.served;
     let report = ServeReport {
         mode,
         pipeline_depth: depth,
@@ -351,27 +523,32 @@ pub fn run_pipelined(
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         duration_s,
         throughput_rps: served as f64 / duration_s,
-        latency_p50_ms: stats::percentile(&latencies_ms, 50.0),
-        latency_p95_ms: stats::percentile(&latencies_ms, 95.0),
-        latency_p99_ms: stats::percentile(&latencies_ms, 99.0),
-        latency_max_ms: latencies_ms.iter().cloned().fold(0.0, f64::max),
+        latency_p50_ms: pct.get(50.0),
+        latency_p95_ms: pct.get(95.0),
+        latency_p99_ms: pct.get(99.0),
+        latency_max_ms: pct.max(),
         loss_first_quarter,
         loss_last_quarter,
-        stats: msg_stats,
+        stats: accum.stats,
         combine_path,
+        adaptive,
+        slo_p99_ms: cfg.control.slo_p99_ms,
+        slo_violation_frac: slo_violation_frac(&accum.latencies_ms, cfg.control.slo_p99_ms),
+        decisions: accum.decisions,
+        depth_trace: accum.depth_trace,
     };
     log(&format!(
         "serve[{}]: {} samples / {} batches in {:.3} s ({:.1} samples/s)",
         mode, report.samples, report.batches, report.duration_s, report.throughput_rps
     ));
-    Ok((report, dict))
+    Ok((report, accum.dict))
 }
 
-type SessionOut = (DistributedDictionary, Vec<f64>, MessageStats, usize, Vec<f64>);
-
-/// Serial reference executor: the identical schedule, inline. Snapshots
+/// Serial reference executor: the identical schedule, inline. Tokens
 /// queue through a `VecDeque` exactly as they queue through the snapshot
-/// channel in the threaded executor.
+/// channel in the threaded executor — one token popped per batch, policy
+/// applied before the batch is formed, tokens re-emitted by the updater
+/// (0, 1, or 2 per batch in adaptive mode).
 fn run_reference(
     cfg: &ServeConfig,
     former: &mut BatchFormer,
@@ -380,15 +557,26 @@ fn run_reference(
     depth: usize,
     t0: Instant,
     log: &mut dyn FnMut(&str),
-) -> Result<SessionOut> {
+) -> Result<SessionAccum> {
     let engine = &mut engines[0];
     let params = serve_params(cfg);
     let task = serve_task(cfg);
-    let mut snaps: VecDeque<DistributedDictionary> =
-        (0..depth).map(|_| updater.fresh_snapshot()).collect();
+    let queue = former.queue();
+    let mut snaps: VecDeque<Token> = (0..depth)
+        .map(|_| Token { snap: updater.fresh_snapshot(), policy: None })
+        .collect();
     let mut j = 0usize;
-    while let Some(batch) = former.next_batch() {
-        let snap = snaps.pop_front().expect("snapshot schedule invariant");
+    loop {
+        let token = snaps.pop_front().expect("snapshot schedule invariant");
+        if let Some(policy) = token.policy {
+            queue.set_policy(policy);
+        }
+        let batch = match former.next_batch() {
+            Some(b) => b,
+            None => break,
+        };
+        let formed = Formed { at_us: former.now_us(), cap: queue.policy().max_batch };
+        let snap = token.snap;
         {
             let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
             engine.reserve_batch(refs.len());
@@ -398,7 +586,7 @@ fn run_reference(
         }
         let stamp_ms = t0.elapsed().as_secs_f64() * 1e3;
         let view = engine.nu_view();
-        updater.process(snap, &batch, &view, stamp_ms, |s| snaps.push_back(s))?;
+        updater.process(snap, &batch, &view, stamp_ms, formed, |t| snaps.push_back(t))?;
         j += 1;
         if j % 16 == 0 {
             log(&format!("  [reference] processed {j} batches"));
@@ -407,9 +595,10 @@ fn run_reference(
     Ok(updater.into_parts())
 }
 
-/// Threaded executor: formation on the calling thread, `depth` inference
-/// workers, one updater thread; unbounded mpsc channels (the snapshot
-/// schedule itself bounds the number of batches in flight to `depth`).
+/// Threaded executor: formation on the calling thread, one inference
+/// worker per engine slot, one updater thread; unbounded mpsc channels
+/// (the circulating tokens themselves bound the number of batches in
+/// flight to the current depth).
 fn run_threaded_pipeline(
     cfg: &ServeConfig,
     former: &mut BatchFormer,
@@ -418,32 +607,33 @@ fn run_threaded_pipeline(
     depth: usize,
     t0: Instant,
     log: &mut dyn FnMut(&str),
-) -> Result<SessionOut> {
+) -> Result<SessionAccum> {
     let params = serve_params(cfg);
     let task = serve_task(cfg);
     let n = cfg.agents;
     let m = cfg.dim;
+    let slots = engines.len();
 
-    let (snap_tx, snap_rx) = mpsc::channel::<DistributedDictionary>();
+    let (snap_tx, snap_rx) = mpsc::channel::<Token>();
     let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
-    let mut work_txs: Vec<mpsc::Sender<Work>> = Vec::with_capacity(depth);
-    let mut work_rxs: Vec<Option<mpsc::Receiver<Work>>> = Vec::with_capacity(depth);
-    for _ in 0..depth {
+    let mut work_txs: Vec<mpsc::Sender<Work>> = Vec::with_capacity(slots);
+    let mut work_rxs: Vec<Option<mpsc::Receiver<Work>>> = Vec::with_capacity(slots);
+    for _ in 0..slots {
         let (tx, rx) = mpsc::channel::<Work>();
         work_txs.push(tx);
         work_rxs.push(Some(rx));
     }
 
-    std::thread::scope(|scope| -> Result<SessionOut> {
+    std::thread::scope(|scope| -> Result<SessionAccum> {
         // Stage 3: the updater consumes inference results in batch order
-        // (out-of-order arrivals are buffered) and publishes snapshots.
+        // (out-of-order arrivals are buffered) and publishes tokens.
         let updater_handle = scope.spawn({
             let snap_tx = snap_tx.clone();
             let mut st = updater;
-            move || -> Result<SessionOut> {
+            move || -> Result<SessionAccum> {
                 for _ in 0..depth {
                     // Prefill: S_0..S_{depth-1} = D_0.
-                    let _ = snap_tx.send(st.fresh_snapshot());
+                    let _ = snap_tx.send(Token { snap: st.fresh_snapshot(), policy: None });
                 }
                 let mut pending: BTreeMap<usize, Done> = BTreeMap::new();
                 let mut next = 0usize;
@@ -451,12 +641,12 @@ fn run_threaded_pipeline(
                     let done = result?;
                     pending.insert(done.j, done);
                     while let Some(d) = pending.remove(&next) {
-                        let Done { snap, batch, v, b, stamp_ms, .. } = d;
+                        let Done { snap, batch, v, b, stamp_ms, formed, .. } = d;
                         let view = NuView::new(&v, n, m, b);
-                        st.process(snap, &batch, &view, stamp_ms, |s| {
+                        st.process(snap, &batch, &view, stamp_ms, formed, |t| {
                             // Main may have stopped listening (teardown) —
                             // the schedule itself stays intact.
-                            let _ = snap_tx.send(s);
+                            let _ = snap_tx.send(t);
                         })?;
                         next += 1;
                     }
@@ -470,13 +660,14 @@ fn run_threaded_pipeline(
             }
         });
 
-        // Stage 2: inference workers (slot w serves batches j ≡ w mod D).
-        let mut worker_handles = Vec::with_capacity(depth);
+        // Stage 2: inference workers (slot w serves batches j ≡ w mod
+        // slots).
+        let mut worker_handles = Vec::with_capacity(slots);
         for (w, mut engine) in engines.into_iter().enumerate() {
             let work_rx = work_rxs[w].take().expect("one receiver per worker");
             let done_tx = done_tx.clone();
             worker_handles.push(scope.spawn(move || {
-                while let Ok(Work { j, snap, batch }) = work_rx.recv() {
+                while let Ok(Work { j, snap, batch, formed }) = work_rx.recv() {
                     let res = {
                         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
                         engine.reserve_batch(refs.len());
@@ -491,6 +682,7 @@ fn run_threaded_pipeline(
                         v: engine.nu_view().to_owned_data(),
                         b,
                         stamp_ms,
+                        formed,
                         snap,
                         batch,
                     });
@@ -504,26 +696,37 @@ fn run_threaded_pipeline(
         drop(done_tx);
         drop(snap_tx);
 
-        // Stage 1: formation + dispatch on this thread. `snap_rx.recv`
-        // blocks only when `depth` batches are already in flight — that is
-        // the pipeline's back-pressure. Admission itself (inside
+        // Stage 1: token wait + formation + dispatch on this thread.
+        // `snap_rx.recv` blocks only when every circulating token is
+        // attached to an in-flight batch — that is the pipeline's
+        // back-pressure. A token is consumed *before* its batch is formed
+        // so a piggybacked policy decision applies at a deterministic
+        // point of the batch sequence. Admission itself (inside
         // `next_batch`) never blocks.
+        let queue = former.queue();
         let mut dispatched = 0usize;
-        while let Some(batch) = former.next_batch() {
-            match snap_rx.recv() {
-                Ok(snap) => {
-                    if work_txs[dispatched % depth]
-                        .send(Work { j: dispatched, snap, batch })
-                        .is_err()
-                    {
-                        break; // worker exited early; error surfaces below
-                    }
-                    dispatched += 1;
-                    if dispatched % 16 == 0 {
-                        log(&format!("  [pipeline] dispatched {dispatched} batches"));
-                    }
-                }
+        loop {
+            let token = match snap_rx.recv() {
+                Ok(t) => t,
                 Err(_) => break, // updater exited early; error surfaces below
+            };
+            if let Some(policy) = token.policy {
+                queue.set_policy(policy);
+            }
+            let batch = match former.next_batch() {
+                Some(b) => b,
+                None => break,
+            };
+            let formed = Formed { at_us: former.now_us(), cap: queue.policy().max_batch };
+            if work_txs[dispatched % slots]
+                .send(Work { j: dispatched, snap: token.snap, batch, formed })
+                .is_err()
+            {
+                break; // worker exited early; error surfaces below
+            }
+            dispatched += 1;
+            if dispatched % 16 == 0 {
+                log(&format!("  [pipeline] dispatched {dispatched} batches"));
             }
         }
         drop(work_txs);

@@ -70,6 +70,15 @@ impl MicroBatchQueue {
         self.policy
     }
 
+    /// Swap the batch-formation policy in place (the adaptive batch
+    /// controller re-decides the knobs each control tick). Already-queued
+    /// requests are re-judged under the new policy on the next
+    /// [`Self::ready`]/[`Self::pop_batch`] call; admission order is
+    /// untouched.
+    pub fn set_policy(&mut self, policy: BatchPolicy) {
+        self.policy = BatchPolicy::new(policy.max_batch, policy.max_wait_us);
+    }
+
     /// Admit a sample at `now_us`; returns its request id.
     pub fn push(&mut self, x: Vec<f32>, now_us: u64) -> u64 {
         let id = self.next_id;
@@ -144,18 +153,24 @@ impl MicroBatchQueue {
 #[derive(Debug)]
 pub struct SharedQueue {
     inner: Mutex<MicroBatchQueue>,
-    policy: BatchPolicy,
 }
 
 impl SharedQueue {
     /// Empty shared queue under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
-        SharedQueue { inner: Mutex::new(MicroBatchQueue::new(policy)), policy }
+        SharedQueue { inner: Mutex::new(MicroBatchQueue::new(policy)) }
     }
 
-    /// The active policy (copied out — no lock needed).
+    /// The active policy (copied out under the lock; the policy is
+    /// swappable at runtime via [`Self::set_policy`]).
     pub fn policy(&self) -> BatchPolicy {
-        self.policy
+        self.lock().policy()
+    }
+
+    /// Swap the batch-formation policy (see
+    /// [`MicroBatchQueue::set_policy`]).
+    pub fn set_policy(&self, policy: BatchPolicy) {
+        self.lock().set_policy(policy);
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, MicroBatchQueue> {
@@ -272,6 +287,37 @@ mod tests {
         let mut q = queue(0, 0);
         q.push(vec![1.0], 0);
         assert_eq!(q.pop_batch(0).unwrap().len(), 1);
+    }
+
+    /// Policy swaps re-judge already-queued requests: a backlog held by a
+    /// long max-wait releases immediately once the policy tightens, and a
+    /// shrunk max_batch caps subsequent releases.
+    #[test]
+    fn set_policy_applies_to_queued_requests() {
+        let mut q = queue(8, u64::MAX);
+        for i in 0..6 {
+            q.push(vec![i as f32], 0);
+        }
+        assert!(!q.ready(1_000_000));
+        q.set_policy(BatchPolicy::new(4, 0));
+        assert_eq!(q.policy().max_batch, 4);
+        assert!(q.ready(0));
+        assert_eq!(q.pop_batch(0).unwrap().len(), 4);
+        // Two requests remain, below the cap: a tightened finite wait
+        // re-judges the partial batch against the new deadline.
+        q.set_policy(BatchPolicy::new(4, 500));
+        assert_eq!(q.next_deadline_us(), Some(500));
+        assert!(!q.ready(100));
+        assert_eq!(q.pop_batch(500).unwrap().len(), 2);
+        // The setter re-clamps max_batch to >= 1 like the constructor.
+        q.set_policy(BatchPolicy::new(0, 0));
+        assert_eq!(q.policy().max_batch, 1);
+
+        let sq = SharedQueue::new(BatchPolicy::new(8, 1_000));
+        sq.push(vec![1.0], 0);
+        sq.set_policy(BatchPolicy::new(1, 0));
+        assert_eq!(sq.policy().max_batch, 1);
+        assert_eq!(sq.pop_batch(0).unwrap().len(), 1);
     }
 
     #[test]

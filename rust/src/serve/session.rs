@@ -27,6 +27,7 @@ use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use crate::net::MessageStats;
 use crate::ops::prox::DictProx;
 use crate::rng::Pcg64;
+use crate::serve::control::{BatchController, ControlDecision, DepthDecision, ServiceModel};
 use crate::serve::queue::{BatchPolicy, MicroBatchQueue};
 use std::time::Instant;
 
@@ -34,7 +35,9 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     /// Executor that produced the report: `"serial"`, `"pipelined"`, or
-    /// `"pipelined-reference"`.
+    /// `"pipelined-reference"`, with an `-adaptive` infix/suffix when the
+    /// control plane drove the session (`"serial-adaptive"`,
+    /// `"pipelined-adaptive"`, `"pipelined-adaptive-reference"`).
     pub mode: &'static str,
     /// Batches in flight in the inference stage (`0` for the serial
     /// single-server loop).
@@ -62,11 +65,40 @@ pub struct ServeReport {
     pub stats: MessageStats,
     /// Combine path the engine selected (`uniform`/`sparse`/`dense`).
     pub combine_path: &'static str,
+    /// Whether the control plane drove this session (`--adaptive`).
+    pub adaptive: bool,
+    /// p99-latency SLO the batch controller steered to (ms; the
+    /// configured value, reported even for static sessions).
+    pub slo_p99_ms: f64,
+    /// Fraction of requests whose latency exceeded the SLO.
+    pub slo_violation_frac: f64,
+    /// Batch-controller decision trace (empty for static sessions).
+    pub decisions: Vec<ControlDecision>,
+    /// Depth-controller re-plan trace (empty unless adaptive pipeline).
+    pub depth_trace: Vec<DepthDecision>,
 }
 
 impl ServeReport {
     /// Multi-line human-readable summary.
     pub fn summary(&self, agents: usize) -> String {
+        let mut out = self.summary_base(agents);
+        if self.adaptive {
+            let last = self.decisions.last();
+            out.push_str(&format!(
+                "\ncontrol: {} decisions, final policy B<={} wait {}µs, {} depth re-plans, \
+                 SLO p99 {:.1} ms violated by {:.2}% of requests",
+                self.decisions.len(),
+                last.map(|d| d.max_batch).unwrap_or(0),
+                last.map(|d| d.max_wait_us).unwrap_or(0),
+                self.depth_trace.len(),
+                self.slo_p99_ms,
+                100.0 * self.slo_violation_frac,
+            ));
+        }
+        out
+    }
+
+    fn summary_base(&self, agents: usize) -> String {
         format!(
             "[{}] served {} samples in {} batches (mean B = {:.2}) over {:.3} s\n\
              throughput: {:.1} samples/s\n\
@@ -112,10 +144,15 @@ pub fn build_topology(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<(Graph, Topo
 /// Synthetic request stream: sparse non-negative combinations of a planted
 /// dictionary plus light noise — the service's "patches". Returns
 /// `(arrival_us, x)` pairs in arrival order (all zeros when
-/// `cfg.rate == 0`, Poisson gaps otherwise). This is the single
-/// definition of the serving workload — `benches/bench_serve.rs` and the
-/// examples draw from it too, so BENCH_serve.json always measures the
-/// stream the session serves.
+/// `cfg.rate == 0`, Poisson gaps otherwise). With `cfg.burst > 1` the
+/// requests arrive in clumps of `burst` sharing one timestamp, with
+/// exponential inter-clump gaps of mean `burst/rate` so the long-run rate
+/// is unchanged — the bursty workload the adaptive batch controller is
+/// benchmarked on (`benches/bench_control.rs`). `burst = 1` draws exactly
+/// the gap sequence of the plain Poisson stream, bit-for-bit. This is the
+/// single definition of the serving workload — `benches/bench_serve.rs`
+/// and the examples draw from it too, so BENCH_serve.json always measures
+/// the stream the session serves.
 pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, Vec<f32>)>> {
     let m = cfg.dim;
     let planted = DistributedDictionary::random(
@@ -128,7 +165,8 @@ pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, V
     let mut out = Vec::with_capacity(cfg.samples);
     let mut t_us = 0f64;
     let mean_gap_us = if cfg.rate > 0.0 { 1e6 / cfg.rate } else { 0.0 };
-    for _ in 0..cfg.samples {
+    let burst = cfg.burst.max(1);
+    for i in 0..cfg.samples {
         let mut x = vec![0.0f32; m];
         for _ in 0..2 {
             let q = rng.next_below(cfg.agents as u64) as usize;
@@ -138,10 +176,12 @@ pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, V
         for v in x.iter_mut() {
             *v += 0.01 * rng.next_normal();
         }
-        if mean_gap_us > 0.0 {
-            // Poisson arrivals: exponential interarrival gaps.
+        if mean_gap_us > 0.0 && i % burst == 0 {
+            // Poisson clump arrivals: one exponential gap per clump of
+            // `burst` requests, mean scaled so the long-run rate is the
+            // configured one (burst = 1 is the plain Poisson stream).
             let u = rng.next_f64().max(1e-12);
-            t_us += -u.ln() * mean_gap_us;
+            t_us += -u.ln() * mean_gap_us * burst as f64;
         }
         out.push((t_us as u64, x));
     }
@@ -229,6 +269,14 @@ pub fn run_service_with_dict(
 /// The serial single-server discrete-event loop (PR 2 semantics): batch
 /// formation couples to measured service times, and each batch's update
 /// completes before the next batch's inference starts (no staleness).
+///
+/// With `[control] enabled` (the `--adaptive` mode) the loop runs on the
+/// deterministic [`ServiceModel`] clock instead of measured wall time, and
+/// a [`BatchController`] re-decides the queue policy each control tick —
+/// every decision a pure function of (config, seed, stream), so adaptive
+/// runs replay bit-identically (`tests/control_adaptive.rs`). The batches
+/// are still *processed for real* (the dictionary adapts with genuine
+/// arithmetic); only the clock is modeled.
 fn run_serial(
     cfg: &ServeConfig,
     log: &mut dyn FnMut(&str),
@@ -252,17 +300,26 @@ fn run_serial(
     let mut trainer =
         OnlineTrainer::from_engine(engine, TrainerOptions { infer: params, prox: DictProx::None });
 
-    let mut queue = MicroBatchQueue::new(BatchPolicy::new(cfg.batch, cfg.max_wait_us));
+    let adaptive = cfg.control.enabled;
+    let model = ServiceModel::from_config(&cfg.control);
+    let mut controller =
+        if adaptive { Some(BatchController::new(&cfg.control, cfg.batch, cfg.max_wait_us)) } else { None };
+    let init_policy = match &controller {
+        Some(c) => c.policy(),
+        None => BatchPolicy::new(cfg.batch, cfg.max_wait_us),
+    };
+    let mut queue = MicroBatchQueue::new(init_policy);
     log(&format!(
-        "serve: N={} M={} topology={} ({} directed edges, {} combine), B<={}, max_wait={}µs, \
+        "serve{}: N={} M={} topology={} ({} directed edges, {} combine), B<={}, max_wait={}µs, \
          {} samples at {}",
+        if adaptive { "[adaptive]" } else { "" },
         cfg.agents,
         m,
         cfg.topology,
         directed_edges,
         combine_path,
-        cfg.batch.max(1),
-        cfg.max_wait_us,
+        init_policy.max_batch,
+        init_policy.max_wait_us,
         cfg.samples,
         if cfg.rate > 0.0 { format!("{:.0} req/s", cfg.rate) } else { "saturation".into() },
     ));
@@ -304,17 +361,32 @@ fn run_serial(
         };
 
         // Process the minibatch for real: batched inference + one online
-        // dictionary update (each sample seen exactly once).
+        // dictionary update (each sample seen exactly once). Adaptive
+        // sessions advance the clock by the deterministic service model
+        // instead of the measured wall time (the replay anchor).
         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
         let t0 = Instant::now();
         let step = trainer.step(&mut dict, &task, &refs, cfg.mu_w)?;
-        let service_us = (t0.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
+        let service_us = if adaptive {
+            model.service_us(batch.len())
+        } else {
+            (t0.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64
+        };
         now_us = now_us.saturating_add(service_us);
 
         batch_losses.push(step.mean_loss);
         served += batch.len();
         for r in &batch {
             latencies_ms.push(now_us.saturating_sub(r.arrival_us) as f64 / 1e3);
+        }
+        if let Some(ctl) = controller.as_mut() {
+            let from = latencies_ms.len() - batch.len();
+            // The serial loop applies decisions synchronously, so the
+            // queue's current cap is the cap this batch was formed under.
+            ctl.observe_batch(batch.len(), queue.policy().max_batch, &latencies_ms[from..]);
+            if let Some(policy) = ctl.maybe_decide(now_us) {
+                queue.set_policy(policy);
+            }
         }
         // ψ traffic for this batch: one message per directed edge per
         // diffusion iteration carrying the whole minibatch (B·M floats) —
@@ -338,24 +410,39 @@ fn run_serial(
     let batches = batch_losses.len();
     let duration_s = (now_us as f64 / 1e6).max(1e-9);
     let (loss_first_quarter, loss_last_quarter) = loss_quarters(&batch_losses);
+    // Sort the latency vector once for every percentile the report needs.
+    let pct = stats::Percentiles::new(&latencies_ms);
     let report = ServeReport {
-        mode: "serial",
+        mode: if adaptive { "serial-adaptive" } else { "serial" },
         pipeline_depth: 0,
         samples: served,
         batches,
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         duration_s,
         throughput_rps: served as f64 / duration_s,
-        latency_p50_ms: stats::percentile(&latencies_ms, 50.0),
-        latency_p95_ms: stats::percentile(&latencies_ms, 95.0),
-        latency_p99_ms: stats::percentile(&latencies_ms, 99.0),
-        latency_max_ms: latencies_ms.iter().cloned().fold(0.0, f64::max),
+        latency_p50_ms: pct.get(50.0),
+        latency_p95_ms: pct.get(95.0),
+        latency_p99_ms: pct.get(99.0),
+        latency_max_ms: pct.max(),
         loss_first_quarter,
         loss_last_quarter,
         stats,
         combine_path,
+        adaptive,
+        slo_p99_ms: cfg.control.slo_p99_ms,
+        slo_violation_frac: slo_violation_frac(&latencies_ms, cfg.control.slo_p99_ms),
+        decisions: controller.map(|c| c.into_decisions()).unwrap_or_default(),
+        depth_trace: Vec::new(),
     };
     Ok((report, dict))
+}
+
+/// Fraction of request latencies exceeding the SLO (0.0 on an empty run).
+pub(crate) fn slo_violation_frac(latencies_ms: &[f64], slo_ms: f64) -> f64 {
+    if latencies_ms.is_empty() {
+        return 0.0;
+    }
+    latencies_ms.iter().filter(|&&l| l > slo_ms).count() as f64 / latencies_ms.len() as f64
 }
 
 fn informed_slice(cfg: &ServeConfig) -> Option<Vec<usize>> {
@@ -440,6 +527,36 @@ mod tests {
             report.loss_first_quarter,
             report.loss_last_quarter
         );
+    }
+
+    /// The adaptive serial loop serves every sample on the virtual model
+    /// clock, reports its mode, and records controller decisions.
+    #[test]
+    fn adaptive_serial_session_runs_on_model_clock() {
+        let mut cfg = tiny_cfg();
+        cfg.control.enabled = true;
+        let report = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(report.mode, "serial-adaptive");
+        assert!(report.adaptive);
+        assert_eq!(report.samples, 24);
+        assert!(!report.decisions.is_empty(), "ticks must have fired");
+        // The clock is the virtual model, not wall time: 24 samples at
+        // 150 µs/sample plus at most 6 batch overheads of 800 µs — the
+        // duration is bounded by the model arithmetic and bit-stable
+        // across runs regardless of machine speed.
+        assert!(report.duration_s >= 24.0 * 150e-6, "got {}", report.duration_s);
+        assert!(report.duration_s <= 24.0 * 150e-6 + 6.0 * 800e-6, "got {}", report.duration_s);
+        let replay = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(report.duration_s.to_bits(), replay.duration_s.to_bits());
+        assert_eq!(report.decisions, replay.decisions);
+        assert_eq!(report.slo_p99_ms, cfg.control.slo_p99_ms);
+        assert!(report.slo_violation_frac >= 0.0 && report.slo_violation_frac <= 1.0);
+    }
+
+    #[test]
+    fn slo_violation_frac_counts_exceedances() {
+        assert_eq!(slo_violation_frac(&[], 10.0), 0.0);
+        assert_eq!(slo_violation_frac(&[1.0, 11.0, 9.0, 30.0], 10.0), 0.5);
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! Control-plane invariants (ISSUE 5):
+//!
+//! 1. **Queue edge semantics** — property tests over random push/pop
+//!    interleavings: `max_wait_us = 0` releases on every poll, FIFO order
+//!    is preserved, `next_deadline_us` is exactly the earliest time
+//!    `ready` holds, and `SharedQueue` mirrors `MicroBatchQueue` op for
+//!    op.
+//! 2. **Adaptive replay determinism** — two runs of an adaptive session
+//!    (serial and pipelined) or an adaptive-τ experiment with the same
+//!    config produce bit-identical dictionaries, reports, and controller
+//!    decision traces: every decision is a pure function of (config,
+//!    seed, stream) on the virtual clocks.
+//! 3. **Adaptive pipeline parity** — the threaded executor under the
+//!    control plane stays bit-identical to the serial reference executor
+//!    of the same token schedule (policy swaps and depth re-plans
+//!    included), extending `serve_pipeline_parity.rs` to adaptive mode.
+
+use ddl::config::experiment::{ControlConfig, InferenceConfig, ServeConfig};
+use ddl::rng::Pcg64;
+use ddl::serve::pipeline::{run_pipelined, PipelineExec};
+use ddl::serve::{run_service_with_dict, BatchPolicy, MicroBatchQueue, ServeReport, SharedQueue};
+use ddl::testutil::{check, Gen};
+
+// ---------------------------------------------------------------------
+// 1. Queue property tests
+// ---------------------------------------------------------------------
+
+/// One randomized queue scenario: policy knobs plus an interleaved
+/// push/pop script with clock increments.
+#[derive(Clone, Debug)]
+struct Scenario {
+    max_batch: usize,
+    max_wait_us: u64,
+    /// `(is_push, clock_increment_us)` per step.
+    ops: Vec<(bool, u64)>,
+}
+
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Value = Scenario;
+    fn gen(&self, rng: &mut Pcg64) -> Scenario {
+        let max_batch = 1 + rng.next_below(8) as usize;
+        let max_wait_us = rng.next_below(4) * 200; // 0, 200, 400, 600
+        let n = 1 + rng.next_below(48) as usize;
+        let ops = (0..n)
+            .map(|_| (rng.next_below(3) > 0, rng.next_below(250)))
+            .collect();
+        Scenario { max_batch, max_wait_us, ops }
+    }
+    fn shrink(&self, v: &Scenario) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        if v.ops.len() > 1 {
+            out.push(Scenario { ops: v.ops[..v.ops.len() / 2].to_vec(), ..v.clone() });
+            out.push(Scenario { ops: v.ops[1..].to_vec(), ..v.clone() });
+        }
+        if v.max_wait_us > 0 {
+            out.push(Scenario { max_wait_us: 0, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// Replay a scenario against both queue flavors, checking every invariant
+/// at every step.
+fn run_scenario(s: &Scenario) -> Result<(), String> {
+    let policy = BatchPolicy::new(s.max_batch, s.max_wait_us);
+    let mut q = MicroBatchQueue::new(policy);
+    let shared = SharedQueue::new(policy);
+    let mut now = 0u64;
+    let mut next_expected_id = 0u64;
+    for &(is_push, dt) in &s.ops {
+        now += dt;
+        if is_push {
+            let a = q.push(vec![now as f32], now);
+            let b = shared.push(vec![now as f32], now);
+            if a != b {
+                return Err(format!("id divergence: {a} vs {b}"));
+            }
+        } else {
+            let popped = q.pop_batch(now);
+            let popped_shared = shared.pop_batch(now);
+            match (&popped, &popped_shared) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    if x.len() != y.len() {
+                        return Err("shared/plain batch size divergence".into());
+                    }
+                    if x.len() > s.max_batch.max(1) {
+                        return Err(format!("batch of {} exceeds cap", x.len()));
+                    }
+                    // FIFO: ids are globally consecutive across batches.
+                    for r in x {
+                        if r.id != next_expected_id {
+                            return Err(format!(
+                                "FIFO violated: got id {}, expected {next_expected_id}",
+                                r.id
+                            ));
+                        }
+                        next_expected_id += 1;
+                    }
+                }
+                _ => return Err("shared/plain pop divergence".into()),
+            }
+        }
+        // next_deadline_us is exactly the earliest time ready() holds.
+        let deadline = q.next_deadline_us();
+        let ready_now = q.ready(now);
+        let expect_ready = deadline.map(|d| d <= now).unwrap_or(false);
+        if ready_now != expect_ready {
+            return Err(format!(
+                "ready({now}) = {ready_now} inconsistent with deadline {deadline:?}"
+            ));
+        }
+        if let Some(d) = deadline {
+            if d > now && q.ready(d.saturating_sub(1)) && d.saturating_sub(1) >= now {
+                return Err(format!("queue ready before its own deadline {d}"));
+            }
+            if !q.ready(d) {
+                return Err(format!("queue not ready at its own deadline {d}"));
+            }
+        }
+        // max_wait = 0 releases on every poll with anything queued.
+        if s.max_wait_us == 0 && !q.is_empty() && !q.ready(now) {
+            return Err("max_wait 0 must release on every poll".into());
+        }
+        if q.len() != shared.len() {
+            return Err("shared/plain length divergence".into());
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_queue_edge_semantics() {
+    check(0xC0_57, 200, &ScenarioGen, run_scenario);
+}
+
+#[test]
+fn prop_zero_wait_releases_every_poll() {
+    // Focused corner: max_wait 0, pushes only, then drain.
+    check(0xC0_58, 100, &ScenarioGen, |s| {
+        let mut q = MicroBatchQueue::new(BatchPolicy::new(s.max_batch, 0));
+        for (i, &(_, dt)) in s.ops.iter().enumerate() {
+            q.push(vec![i as f32], dt);
+            if !q.ready(dt) {
+                return Err("non-empty zero-wait queue not ready".into());
+            }
+        }
+        let mut total = 0;
+        while let Some(b) = q.pop_batch(u64::MAX) {
+            total += b.len();
+        }
+        if total != s.ops.len() {
+            return Err(format!("drained {total} of {}", s.ops.len()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2 + 3. Adaptive sessions: determinism and pipeline parity
+// ---------------------------------------------------------------------
+
+/// Small adaptive serving config on the virtual service clock. Paced,
+/// bursty arrivals so the batch controller has something to chase.
+fn adaptive_cfg(pipeline: bool, threads: usize) -> ServeConfig {
+    ServeConfig {
+        seed: 0xAD_47,
+        agents: 24,
+        dim: 8,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 4,
+        max_wait_us: 2_000,
+        samples: 96,
+        rate: 4_000.0,
+        burst: 8,
+        mu_w: 0.08,
+        pipeline,
+        pipeline_depth: 1,
+        infer: InferenceConfig { mu: 0.4, iters: 10, gamma: 0.08, delta: 0.2, threads },
+        control: ControlConfig {
+            enabled: true,
+            slo_p99_ms: 5.0,
+            tick_us: 1_000,
+            batch_min: 1,
+            batch_max: 16,
+            wait_min_us: 0,
+            wait_max_us: 4_000,
+            window: 64,
+            svc_base_us: 200,
+            svc_per_sample_us: 50,
+            upd_per_sample_us: 30,
+            depth_min: 1,
+            depth_max: 3,
+            epoch_batches: 4,
+            ..ControlConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+fn assert_reports_bitwise_equal(a: &ServeReport, b: &ServeReport, label: &str) {
+    assert_eq!(a.samples, b.samples, "{label}: samples");
+    assert_eq!(a.batches, b.batches, "{label}: batches");
+    assert_eq!(a.mean_batch.to_bits(), b.mean_batch.to_bits(), "{label}: mean batch");
+    assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits(), "{label}: virtual duration");
+    assert_eq!(
+        a.throughput_rps.to_bits(),
+        b.throughput_rps.to_bits(),
+        "{label}: virtual throughput"
+    );
+    assert_eq!(a.latency_p50_ms.to_bits(), b.latency_p50_ms.to_bits(), "{label}: p50");
+    assert_eq!(a.latency_p99_ms.to_bits(), b.latency_p99_ms.to_bits(), "{label}: p99");
+    assert_eq!(a.latency_max_ms.to_bits(), b.latency_max_ms.to_bits(), "{label}: max");
+    assert_eq!(
+        a.slo_violation_frac.to_bits(),
+        b.slo_violation_frac.to_bits(),
+        "{label}: SLO violations"
+    );
+    assert_eq!(a.stats, b.stats, "{label}: MessageStats");
+    assert_eq!(a.decisions, b.decisions, "{label}: batch-controller trace");
+    assert_eq!(a.depth_trace, b.depth_trace, "{label}: depth-controller trace");
+    assert_eq!(
+        a.loss_first_quarter.to_bits(),
+        b.loss_first_quarter.to_bits(),
+        "{label}: first-quarter loss"
+    );
+    assert_eq!(
+        a.loss_last_quarter.to_bits(),
+        b.loss_last_quarter.to_bits(),
+        "{label}: last-quarter loss"
+    );
+}
+
+/// Two adaptive *serial* runs replay bit-identically: dictionary, report
+/// figures, and the controller decision trace.
+#[test]
+fn adaptive_serial_replays_bitwise() {
+    let cfg = adaptive_cfg(false, 1);
+    let (r1, d1) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    let (r2, d2) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    assert_eq!(r1.mode, "serial-adaptive");
+    assert!(r1.adaptive);
+    assert_eq!(r1.samples, cfg.samples);
+    assert!(!r1.decisions.is_empty(), "the controller must have ticked");
+    assert_reports_bitwise_equal(&r1, &r2, "serial adaptive replay");
+    assert_eq!(d1.mat().as_slice(), d2.mat().as_slice(), "final dictionaries");
+}
+
+/// Two adaptive *pipelined* runs replay bit-identically, and the threaded
+/// executor matches the serial reference executor of the same token
+/// schedule — policy swaps and depth re-plans included.
+#[test]
+fn adaptive_pipeline_parity_and_replay() {
+    for &threads in &[1usize, 2] {
+        let cfg = adaptive_cfg(true, threads);
+        let (r_ref, d_ref) = run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).unwrap();
+        let (r_thr, d_thr) = run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).unwrap();
+        let (r_thr2, d_thr2) = run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).unwrap();
+        assert_eq!(r_thr.mode, "pipelined-adaptive");
+        assert_eq!(r_ref.mode, "pipelined-adaptive-reference");
+        assert_eq!(r_thr.samples, cfg.samples, "every request served exactly once");
+        let label = format!("threaded-vs-reference t{threads}");
+        assert_eq!(
+            d_ref.mat().as_slice(),
+            d_thr.mat().as_slice(),
+            "{label}: final dictionaries must be bit-identical"
+        );
+        assert_reports_bitwise_equal(&r_ref, &r_thr, &label);
+        assert_reports_bitwise_equal(&r_thr, &r_thr2, "threaded replay");
+        assert_eq!(d_thr.mat().as_slice(), d_thr2.mat().as_slice());
+    }
+}
+
+/// The depth controller actually re-plans under saturation: starting at
+/// depth 1 with cheap updates, tokens bind and the depth climbs — and the
+/// threaded executor still matches the reference bitwise (the re-plans
+/// are part of the shared schedule).
+#[test]
+fn adaptive_depth_replans_under_saturation() {
+    let mut cfg = adaptive_cfg(true, 1);
+    cfg.rate = 0.0; // saturated: formation is instant, tokens always bind
+    cfg.samples = 128;
+    let (r_ref, d_ref) = run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).unwrap();
+    let (r_thr, d_thr) = run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).unwrap();
+    assert!(
+        !r_ref.depth_trace.is_empty(),
+        "saturated token-bound pipeline must deepen at some epoch boundary"
+    );
+    assert!(r_ref.depth_trace.iter().all(|d| d.depth <= cfg.control.depth_max));
+    assert_eq!(r_ref.depth_trace, r_thr.depth_trace);
+    assert_eq!(d_ref.mat().as_slice(), d_thr.mat().as_slice());
+}
+
+/// With the control plane *disabled*, the pipeline produces the same
+/// result as an adaptive run whose controllers are pinned to the static
+/// knobs by degenerate bounds — the "pinning" escape hatch the bench's
+/// static grid uses.
+#[test]
+fn pinned_bounds_match_static_schedule() {
+    // Static run (control disabled): PR 3 code path, wall-clock timing.
+    let mut static_cfg = adaptive_cfg(true, 1);
+    static_cfg.control.enabled = false;
+    let (r_static, d_static) =
+        run_pipelined(&static_cfg, PipelineExec::Reference, &mut |_| {}).unwrap();
+    assert_eq!(r_static.mode, "pipelined-reference");
+    assert!(r_static.decisions.is_empty());
+
+    // Adaptive run pinned to the same knobs: identical batch sequence and
+    // schedule, so identical dictionary and losses (timing figures differ
+    // by design: virtual vs wall clock).
+    let mut pinned = adaptive_cfg(true, 1);
+    pinned.control.batch_min = pinned.batch;
+    pinned.control.batch_max = pinned.batch;
+    pinned.control.wait_min_us = pinned.max_wait_us;
+    pinned.control.wait_max_us = pinned.max_wait_us;
+    pinned.control.depth_min = pinned.pipeline_depth;
+    pinned.control.depth_max = pinned.pipeline_depth;
+    let (r_pin, d_pin) = run_pipelined(&pinned, PipelineExec::Reference, &mut |_| {}).unwrap();
+    assert_eq!(r_pin.batches, r_static.batches, "pinned bounds must not change formation");
+    assert_eq!(r_pin.mean_batch.to_bits(), r_static.mean_batch.to_bits());
+    assert_eq!(
+        r_pin.loss_first_quarter.to_bits(),
+        r_static.loss_first_quarter.to_bits(),
+        "pinned controller must not perturb the schedule"
+    );
+    assert_eq!(
+        r_pin.loss_last_quarter.to_bits(),
+        r_static.loss_last_quarter.to_bits()
+    );
+    assert_eq!(r_pin.stats, r_static.stats);
+    assert_eq!(d_pin.mat().as_slice(), d_static.mat().as_slice());
+    assert!(r_pin.depth_trace.is_empty(), "pinned depth bounds cannot re-plan");
+}
