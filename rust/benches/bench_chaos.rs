@@ -1,0 +1,134 @@
+//! Chaos-harness figures: the acceptance scenario of ISSUE 6 and the
+//! tracked robustness numbers (methodology: EXPERIMENTS.md §Chaos).
+//!
+//! Scenario of record — **healing partition on the ring, N = 100**
+//! (ring k = 2, exponential compute/link delays, no straggler): a
+//! partition cutting 20% of the agents opens at 40% of the fault-free
+//! horizon and heals after 20% of it. The chaos driver
+//! ([`ddl::coordinator::run_chaos`]) runs the fault-free baseline, the
+//! chaos run, a bitwise replay check, and an empty-schedule parity check
+//! in one call; this bench re-exports its contract booleans as gated
+//! indicators so the invariants stay visible in the tracked artifact.
+//!
+//! Derived figures written to `BENCH_chaos.json` (gated by
+//! `ddl bench-gate` against `bench/baselines/BENCH_chaos.json`):
+//!
+//! * `chaos_empty_schedule_bitwise_parity` — **1.0** when a run with an
+//!   empty-but-seeded `FaultSchedule` reproduces the fault-free
+//!   trajectory bit-for-bit (clock, traffic, ν), else 0.0;
+//! * `chaos_replay_bitwise` — **1.0** when a second run under the
+//!   identical schedule reproduces the chaos run bit-for-bit;
+//! * `chaos_partition_recovery_gap_ok` — **1.0** when
+//!   `|MSD_chaos − MSD_clean|` at equal simulated time `t = T` (after
+//!   the partition healed) is below 1e-3, the ISSUE 6 acceptance bar;
+//! * `chaos_pushsum_vs_metropolis_bias_ratio` — converged-MSD ratio
+//!   Metropolis/push-sum under a persistent directed outage
+//!   (`run_pushsum_bias`): > 1 means the push-sum correction removes
+//!   bias Metropolis keeps. Tracked as a ratio with the default gate
+//!   slack (min-frac 0.5), not pinned — the exact magnitude depends on
+//!   scenario scale.
+//!
+//! Wall-clock cost of the fault-injected discrete-event core is timed as
+//! `chaos DES ring (churn)` — agent-iterations/s with an 8-window churn
+//! schedule active, comparable to the `async DES` row of
+//! `BENCH_async.json` (the fault layer should cost ~nothing).
+//!
+//! Pass `--fast` (or `BENCH_FAST=1`) for the CI smoke configuration.
+
+use ddl::bench::Bencher;
+use ddl::config::experiment::AsyncConfig;
+use ddl::coordinator::{run_chaos, run_pushsum_bias};
+use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::infer::DiffusionParams;
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::net::{AsyncNetwork, AsyncParams, DelayDist, FaultSchedule};
+use ddl::rng::Pcg64;
+use std::path::Path;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("BENCH_FAST").map(|v| v != "0").unwrap_or(false);
+    let mut b = if fast { Bencher::quick() } else { Bencher::new() };
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    // Scenario of record. The `[chaos]` defaults already encode the
+    // acceptance partition (20% of agents, open at 40% of T for 20% of
+    // T); `--fast` shrinks the network, not the scenario shape.
+    let mut cfg = AsyncConfig {
+        agents: if fast { 40 } else { 100 },
+        dim: if fast { 16 } else { 24 },
+        slow_agent: None, // isolate faults from the straggler study
+        checkpoints: 6,
+        ..AsyncConfig::default()
+    };
+    cfg.infer.iters = if fast { 800 } else { 1500 };
+    cfg.chaos.enabled = true;
+    let report = run_chaos(&cfg, &mut |s| println!("{s}")).unwrap();
+    println!("{}", report.summary(cfg.agents));
+    derived.push((
+        "chaos_empty_schedule_bitwise_parity".to_string(),
+        if report.empty_parity { 1.0 } else { 0.0 },
+    ));
+    derived.push((
+        "chaos_replay_bitwise".to_string(),
+        if report.replay_bitwise { 1.0 } else { 0.0 },
+    ));
+    derived.push((
+        "chaos_partition_recovery_gap_ok".to_string(),
+        if report.recovery_gap < 1e-3 { 1.0 } else { 0.0 },
+    ));
+
+    // Push-sum bias probe: persistent directed outage, converged MSD
+    // under forced Metropolis vs forced push-sum on one scenario.
+    let mut bias_cfg = cfg.clone();
+    bias_cfg.agents = if fast { 30 } else { 60 };
+    bias_cfg.infer.iters = if fast { 600 } else { 1200 };
+    let probe = run_pushsum_bias(&bias_cfg, &mut |s| println!("{s}")).unwrap();
+    println!(
+        "bias probe: outage from {} µs cut {} links, metropolis {:.3e} vs push-sum {:.3e} \
+         ({:.2}x)",
+        probe.outage_from_us,
+        probe.links_cut,
+        probe.msd_metropolis,
+        probe.msd_pushsum,
+        probe.bias_ratio(),
+    );
+    derived.push(("chaos_pushsum_vs_metropolis_bias_ratio".to_string(), probe.bias_ratio()));
+
+    // Cost of the fault-injected DES machinery itself: same shape as the
+    // `async DES` row of bench_async, with a churn schedule active.
+    let n = if fast { 40 } else { 100 };
+    let m = if fast { 16 } else { 24 };
+    let des_iters = if fast { 200 } else { 500 };
+    let mut rng = Pcg64::new(0xC4A0);
+    let dict = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let graph = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+    let weights = metropolis_weights(&graph);
+    let x = rng.normal_vec(m);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+    let des_params = DiffusionParams::new(0.5, des_iters);
+    let schedule = FaultSchedule::new(0xC4A0_55ED).with_edge_churn(&graph, 8, 2_000, 40_000, 7);
+    let ap = AsyncParams::default()
+        .with_tau(4)
+        .with_delays(DelayDist::Exp { mean_us: 100.0 }, DelayDist::Exp { mean_us: 20.0 })
+        .with_seed(0xC4_BE)
+        .with_chaos(schedule);
+    b.bench_work(
+        &format!("chaos DES ring N={n} churn ({des_iters} iters)"),
+        (n * des_iters) as f64,
+        || {
+            let mut net =
+                AsyncNetwork::new(graph.clone(), weights.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, des_params).unwrap();
+            std::hint::black_box(net.nu(0)[0]);
+        },
+    );
+
+    println!("\nderived figures:");
+    for (k, v) in &derived {
+        println!("  {k} = {v:.3}");
+    }
+    b.write_csv(Path::new("results/bench_chaos.csv")).unwrap();
+    b.write_json(Path::new("BENCH_chaos.json"), &derived).unwrap();
+    println!("\nwrote results/bench_chaos.csv and BENCH_chaos.json");
+}

@@ -22,7 +22,9 @@ use ddl::math::Mat;
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::net::BspNetwork;
 use ddl::rng::Pcg64;
+#[cfg(feature = "xla")]
 use ddl::runtime::exec::ParamPack;
+#[cfg(feature = "xla")]
 use ddl::runtime::Runtime;
 use std::path::Path;
 
@@ -204,7 +206,8 @@ fn main() {
         });
     }
 
-    // --- HLO/PJRT path at artifact shapes ---
+    // --- HLO/PJRT path at artifact shapes (feature `xla` only) ---
+    #[cfg(feature = "xla")]
     match Runtime::new(Path::new("artifacts")) {
         Err(e) => println!("(skipping HLO benches: {e})"),
         Ok(rt) => {

@@ -155,6 +155,17 @@ pub struct ControlConfig {
     pub svc_per_sample_us: u64,
     /// Virtual Eq. 51 update-stage cost per sample (µs), pipeline mode.
     pub upd_per_sample_us: u64,
+    /// Calibrate the service model from the first [`Self::calib_batches`]
+    /// measured (batch size, wall service µs) pairs of the session, then
+    /// freeze the fitted model for the rest of the run. The fit itself is a
+    /// pure function of the observed samples (`serve/control.rs`,
+    /// `ServiceCalibrator`), but the samples are wall-clock measurements —
+    /// so a calibrated session tracks this machine's real service law at
+    /// the price of cross-machine bit-replay. Default false: adaptive
+    /// sessions stay on the configured model and replay bit-identically.
+    pub calibrate: bool,
+    /// Leading batches fed to the calibrator before it freezes.
+    pub calib_batches: usize,
     /// Depth-controller bounds (pipeline mode) and the re-plan epoch in
     /// batches; depth moves by at most ±1 per epoch boundary so the swap
     /// schedule stays well-defined.
@@ -190,6 +201,8 @@ impl Default for ControlConfig {
             svc_base_us: 800,
             svc_per_sample_us: 150,
             upd_per_sample_us: 60,
+            calibrate: false,
+            calib_batches: 12,
             depth_min: 1,
             depth_max: 4,
             epoch_batches: 16,
@@ -223,6 +236,8 @@ impl ControlConfig {
             doc.usize_or("control", "svc_per_sample_us", c.svc_per_sample_us as usize) as u64;
         c.upd_per_sample_us =
             doc.usize_or("control", "upd_per_sample_us", c.upd_per_sample_us as usize) as u64;
+        c.calibrate = doc.bool_or("control", "calibrate", c.calibrate);
+        c.calib_batches = doc.usize_or("control", "calib_batches", c.calib_batches).max(2);
         c.depth_min = doc.usize_or("control", "depth_min", c.depth_min).max(1);
         c.depth_max = doc.usize_or("control", "depth_max", c.depth_max).max(c.depth_min);
         c.epoch_batches = doc.usize_or("control", "epoch_batches", c.epoch_batches).max(1);
@@ -342,6 +357,97 @@ impl ServeConfig {
     }
 }
 
+/// Deterministic fault-injection layer over the async executor
+/// (`ddl chaos`, `net/chaos.rs`). Loaded from the TOML section `[chaos]`.
+///
+/// The window knobs are *fractions of the fault-free baseline horizon* T
+/// (the simulated time the unfaulted run needs for its full iteration
+/// budget): the chaos driver first runs the clean baseline to pin T, then
+/// scales the schedule to it, so one config stresses any network size.
+/// Every fault event is a pure function of ([`Self::seed`], sim-time) —
+/// chaos runs replay bit-identically, and with [`Self::enabled`] false
+/// (the default) the schedule is empty and `ddl async` is bit-for-bit
+/// untouched.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Master switch; the `ddl chaos` subcommand forces it on.
+    pub enabled: bool,
+    /// Chaos seed: drop coins and churn windows derive from it,
+    /// independently of the executor's delay/ordering streams.
+    pub seed: u64,
+    /// Fraction of agents on the cut side of the healing partition
+    /// (`0` disables the partition; clamped so both sides are non-empty).
+    pub partition_frac: f64,
+    /// Partition onset as a fraction of the baseline horizon T.
+    pub partition_start_frac: f64,
+    /// Partition duration as a fraction of T (the reference experiment
+    /// heals after 20% of the horizon).
+    pub partition_len_frac: f64,
+    /// Message-drop probability over the whole run (`0` disables).
+    pub drop_prob: f64,
+    /// Crash/recover this agent across the partition window
+    /// (`None` = nobody crashes; spell it `crash_agent = -1` in TOML).
+    pub crash_agent: Option<usize>,
+    /// Random directed-outage windows generated from the seed
+    /// (`0` disables edge churn).
+    pub churn_windows: usize,
+    /// Combine selection: `auto` (push-sum iff the live topology loses
+    /// symmetry) | `on` (force push-sum) | `off` (force Metropolis).
+    pub pushsum: String,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            enabled: false,
+            seed: 0xC4A05,
+            partition_frac: 0.2,
+            partition_start_frac: 0.4,
+            partition_len_frac: 0.2,
+            drop_prob: 0.0,
+            crash_agent: None,
+            churn_windows: 0,
+            pushsum: "auto".into(),
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Load from TOML (section `[chaos]`), falling back to defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let mut c = Self::default();
+        c.enabled = doc.bool_or("chaos", "enabled", c.enabled);
+        c.seed = doc.usize_or("chaos", "seed", c.seed as usize) as u64;
+        c.partition_frac =
+            doc.f32_or("chaos", "partition_frac", c.partition_frac as f32) as f64;
+        c.partition_start_frac =
+            doc.f32_or("chaos", "partition_start_frac", c.partition_start_frac as f32) as f64;
+        c.partition_len_frac =
+            doc.f32_or("chaos", "partition_len_frac", c.partition_len_frac as f32) as f64;
+        c.drop_prob = doc.f32_or("chaos", "drop_prob", c.drop_prob as f32) as f64;
+        if let Some(v) = doc.get("chaos", "crash_agent") {
+            if let Some(i) = v.as_i64() {
+                c.crash_agent = if i < 0 { None } else { Some(i as usize) };
+            }
+        }
+        c.churn_windows = doc.usize_or("chaos", "churn_windows", c.churn_windows);
+        c.pushsum = doc.str_or("chaos", "pushsum", &c.pushsum).to_string();
+        c
+    }
+
+    /// Parse [`Self::pushsum`] into the executor's combine selector.
+    pub fn combine_mode(&self) -> crate::Result<crate::net::CombineMode> {
+        match self.pushsum.as_str() {
+            "auto" => Ok(crate::net::CombineMode::Auto),
+            "on" => Ok(crate::net::CombineMode::PushSum),
+            "off" => Ok(crate::net::CombineMode::Metropolis),
+            other => Err(crate::DdlError::Config(format!(
+                "chaos.pushsum: expected auto|on|off, got '{other}'"
+            ))),
+        }
+    }
+}
+
 /// Asynchronous diffusion / straggler experiment (`ddl async`,
 /// `net/async_exec.rs`). Loaded from the TOML section `[async]`; the
 /// delay knobs feed [`crate::net::AsyncParams`] via [`Self::async_params`].
@@ -389,6 +495,8 @@ pub struct AsyncConfig {
     pub checkpoints: usize,
     /// Feedback control plane (`[control]` TOML block, `--adaptive-tau`).
     pub control: ControlConfig,
+    /// Deterministic fault injection (`[chaos]` TOML block, `ddl chaos`).
+    pub chaos: ChaosConfig,
 }
 
 impl Default for AsyncConfig {
@@ -411,6 +519,7 @@ impl Default for AsyncConfig {
             infer: InferenceConfig { mu: 0.5, iters: 1500, gamma: 0.1, delta: 0.5, threads: 1 },
             checkpoints: 4,
             control: ControlConfig::default(),
+            chaos: ChaosConfig::default(),
         }
     }
 }
@@ -448,6 +557,7 @@ impl AsyncConfig {
         c.infer.delta = doc.f32_or("async", "delta", c.infer.delta);
         c.checkpoints = doc.usize_or("async", "checkpoints", c.checkpoints).max(1);
         c.control = ControlConfig::from_toml(doc);
+        c.chaos = ChaosConfig::from_toml(doc);
         c
     }
 
@@ -766,7 +876,8 @@ mod tests {
             "[serve]\nburst = 32\n[async]\ndrift_period_us = 5000\n[control]\nenabled = true\n\
              slo_p99_ms = 10.0\ntick_us = 1500\nbatch_min = 2\nbatch_max = 48\n\
              wait_min_us = 100\nwait_max_us = 9000\nwindow = 128\nsvc_base_us = 700\n\
-             svc_per_sample_us = 120\nupd_per_sample_us = 40\ndepth_min = 1\ndepth_max = 3\n\
+             svc_per_sample_us = 120\nupd_per_sample_us = 40\ncalibrate = true\n\
+             calib_batches = 6\ndepth_min = 1\ndepth_max = 3\n\
              epoch_batches = 8\nadaptive_tau = true\ntau_min = 1\ntau_max = 12\n\
              tau_epoch_us = 4000\ngate_wait_hi = 0.3\nmsd_drift_bound = 0.4\n",
         )
@@ -784,6 +895,9 @@ mod tests {
         assert_eq!(s.control.svc_base_us, 700);
         assert_eq!(s.control.svc_per_sample_us, 120);
         assert_eq!(s.control.upd_per_sample_us, 40);
+        assert!(s.control.calibrate);
+        assert_eq!(s.control.calib_batches, 6);
+        assert!(!ControlConfig::default().calibrate, "calibration must be opt-in");
         assert_eq!(s.control.depth_min, 1);
         assert_eq!(s.control.depth_max, 3);
         assert_eq!(s.control.epoch_batches, 8);
@@ -803,6 +917,52 @@ mod tests {
         );
         assert!(bad.batch_min <= bad.batch_max);
         assert!(bad.tau_min <= bad.tau_max);
+    }
+
+    #[test]
+    fn chaos_defaults_disabled_and_auto() {
+        let c = ChaosConfig::default();
+        assert!(!c.enabled, "chaos must be opt-in");
+        assert!(c.crash_agent.is_none());
+        assert_eq!(c.churn_windows, 0);
+        assert_eq!(c.drop_prob, 0.0);
+        assert_eq!(c.pushsum, "auto");
+        assert_eq!(c.combine_mode().unwrap(), crate::net::CombineMode::Auto);
+        assert!(!AsyncConfig::default().chaos.enabled);
+    }
+
+    /// Round trip for every knob exposed in the `[chaos]` TOML block.
+    #[test]
+    fn chaos_toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[chaos]\nenabled = true\nseed = 77\npartition_frac = 0.3\n\
+             partition_start_frac = 0.25\npartition_len_frac = 0.1\ndrop_prob = 0.05\n\
+             crash_agent = 4\nchurn_windows = 6\npushsum = \"on\"\n",
+        )
+        .unwrap();
+        let c = ChaosConfig::from_toml(&doc);
+        assert!(c.enabled);
+        assert_eq!(c.seed, 77);
+        assert!((c.partition_frac - 0.3).abs() < 1e-6);
+        assert!((c.partition_start_frac - 0.25).abs() < 1e-6);
+        assert!((c.partition_len_frac - 0.1).abs() < 1e-6);
+        assert!((c.drop_prob - 0.05).abs() < 1e-6);
+        assert_eq!(c.crash_agent, Some(4));
+        assert_eq!(c.churn_windows, 6);
+        assert_eq!(c.combine_mode().unwrap(), crate::net::CombineMode::PushSum);
+        // The `[chaos]` block rides on AsyncConfig.
+        let a = AsyncConfig::from_toml(&doc);
+        assert!(a.chaos.enabled);
+        assert_eq!(a.chaos.seed, 77);
+        // `-1` = nobody crashes; `off` forces Metropolis; a typo'd
+        // pushsum string is a config error, not a silent fallback.
+        let off = ChaosConfig::from_toml(
+            &TomlDoc::parse("[chaos]\ncrash_agent = -1\npushsum = \"off\"\n").unwrap(),
+        );
+        assert_eq!(off.crash_agent, None);
+        assert_eq!(off.combine_mode().unwrap(), crate::net::CombineMode::Metropolis);
+        let bad = ChaosConfig { pushsum: "maybe".into(), ..ChaosConfig::default() };
+        assert!(bad.combine_mode().is_err());
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! Chaos experiment driver (`ddl chaos`): the async executor under a
+//! deterministic [`FaultSchedule`], compared against its own fault-free
+//! trajectory on the same problem, same delay model, same simulated clock.
+//!
+//! Protocol (EXPERIMENTS.md §Chaos):
+//!
+//! 1. build one problem instance from [`AsyncConfig`] — RNG consumption
+//!    order matches [`super::straggler::run_straggler`], so `ddl async`
+//!    and `ddl chaos` study the identical dictionary/topology/sample;
+//! 2. run the **fault-free baseline** to completion, pinning the horizon
+//!    `T` that the `[chaos]` window fractions scale to;
+//! 3. build the [`FaultSchedule`] from [`ChaosConfig`] and run the
+//!    **chaos executor**, stepping a fresh fault-free comparator through
+//!    shared simulated-time checkpoints and recording MSD against the
+//!    exact dual ν° at each (the MSD-vs-sim-time sensitivity curve);
+//! 4. verify the two contracts that make this a *testing* harness rather
+//!    than a demo: the chaos run **replays bit-identically** (same
+//!    schedule → same trajectory, clocks, stats), and an **empty schedule
+//!    is bitwise fault-free** (same final state as the baseline).
+//!
+//! The headline number is the **recovery gap**: `|MSD_chaos − MSD_clean|`
+//! at `t = T`, i.e. at equal simulated time after every configured fault
+//! window has healed (acceptance: within 1e-3 for the healing-partition
+//! ring). [`run_pushsum_bias`] isolates the combine-correction story:
+//! under a persistent *directed* outage the Metropolis combine loses
+//! double stochasticity and converges off-target, while the push-sum
+//! combine ([`crate::graph::pushsum`]) stays unbiased.
+//!
+//! With `[control] adaptive_tau = true` the τ controller rides along,
+//! fed by the chaos run's gate waits and the clean comparator as its
+//! probe, with [`TauController::observe_partition`] suppressing the
+//! narrow branch while the graph is cut.
+
+use crate::config::experiment::{AsyncConfig, ChaosConfig};
+use crate::error::{DdlError, Result};
+use crate::graph::{metropolis_weights, Graph};
+use crate::infer::{exact_dual, DiffusionParams};
+use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use crate::net::{
+    AsyncNetwork, AsyncParams, ChaosStats, CombineMode, Fault, FaultSchedule, MessageStats,
+    TauController, TauDecision,
+};
+use crate::rng::Pcg64;
+
+use super::straggler::build_topology;
+
+/// One simulated-time checkpoint of the chaos-vs-clean comparison.
+#[derive(Clone, Debug)]
+pub struct ChaosRow {
+    /// Checkpoint on the simulated clock (µs).
+    pub t_us: u64,
+    /// Chaos run's MSD vs the exact dual at this time.
+    pub msd_faulty: f64,
+    /// Fault-free comparator's MSD at the same time.
+    pub msd_clean: f64,
+    /// Whether a partition window overlapped this checkpoint interval.
+    pub partition: bool,
+    /// Staleness bound τ in effect during the interval (moves only when
+    /// the adaptive-τ controller is enabled).
+    pub tau: usize,
+    /// Completed network-wide waves of the chaos executor.
+    pub min_iters: usize,
+}
+
+/// Outcome of one chaos experiment (`ddl chaos`).
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub rows: Vec<ChaosRow>,
+    /// Simulated completion time of the fault-free baseline (= the
+    /// horizon `T` the schedule windows were scaled to).
+    pub clean_time_us: u64,
+    /// Simulated completion time of the chaos run (its own full run).
+    pub chaos_time_us: u64,
+    /// `|MSD_chaos − MSD_clean|` at `t = T`: equal simulated time, after
+    /// every window-scaled fault has healed.
+    pub recovery_gap: f64,
+    /// Did a second run under the identical schedule reproduce the chaos
+    /// trajectory bit-for-bit (clocks, traffic, fault stats, final MSD)?
+    pub replay_bitwise: bool,
+    /// Did an empty-but-seeded schedule reproduce the fault-free baseline
+    /// bit-for-bit?
+    pub empty_parity: bool,
+    /// Combine actually used by the chaos run.
+    pub combine: CombineMode,
+    /// Whether `auto` selected push-sum because of directed faults.
+    pub auto_pushsum: bool,
+    /// Number of fault windows in the scaled schedule.
+    pub schedule_faults: usize,
+    /// Degradation counters of the chaos run.
+    pub chaos_stats: ChaosStats,
+    /// ψ-traffic of the chaos run.
+    pub stats: MessageStats,
+    /// Largest *gated* staleness any combine used (≤ τ; stale-fallback
+    /// staleness is accounted separately in [`Self::chaos_stats`]).
+    pub max_staleness: usize,
+    /// τ-controller decision trace when `[control] adaptive_tau` rode
+    /// along (`None` otherwise).
+    pub tau_trace: Option<Vec<TauDecision>>,
+}
+
+impl ChaosReport {
+    /// Multi-line human-readable summary (the `ddl chaos` output body).
+    pub fn summary(&self, agents: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>12} {:>12} {:>12} {:>5} {:>5} {:>10}\n",
+            "sim time s", "msd faulty", "msd clean", "part", "tau", "waves"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:>12.4} {:>12.3e} {:>12.3e} {:>5} {:>5} {:>10}\n",
+                r.t_us as f64 / 1e6,
+                r.msd_faulty,
+                r.msd_clean,
+                if r.partition { "cut" } else { "-" },
+                r.tau,
+                r.min_iters,
+            ));
+        }
+        out.push_str(&format!(
+            "recovery gap at equal simulated time: {:.3e}\n\
+             completion: clean {:.4} s, chaos {:.4} s; combine {:?}{}; {} fault windows\n\
+             degradation: {} dropped, {} retries, {} abandoned, {} crash deferrals, \
+             {} forced combines, {} stale fallbacks, {} exclusions\n\
+             replay bit-identical: {}; empty schedule bitwise fault-free: {}\n\
+             traffic: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round, max staleness {}",
+            self.recovery_gap,
+            self.clean_time_us as f64 / 1e6,
+            self.chaos_time_us as f64 / 1e6,
+            self.combine,
+            if self.auto_pushsum { " (auto: directed faults)" } else { "" },
+            self.schedule_faults,
+            self.chaos_stats.dropped,
+            self.chaos_stats.retries,
+            self.chaos_stats.abandoned,
+            self.chaos_stats.crash_deferrals,
+            self.chaos_stats.forced_combines,
+            self.chaos_stats.stale_fallbacks,
+            self.chaos_stats.excluded_neighbors,
+            self.replay_bitwise,
+            self.empty_parity,
+            self.stats.messages,
+            self.stats.bytes as f64 / 1e6,
+            self.stats.rounds,
+            self.stats.bytes_per_agent_round(agents),
+            self.max_staleness,
+        ));
+        out
+    }
+}
+
+/// Scale the `[chaos]` window fractions to a concrete horizon and emit
+/// the executor-facing schedule. Pure: same (config, graph, horizon) →
+/// same schedule.
+fn build_schedule(c: &ChaosConfig, graph: &Graph, horizon_us: u64) -> Result<FaultSchedule> {
+    let n = graph.n();
+    let t = horizon_us.max(1);
+    let at = |f: f64| (f.max(0.0) * t as f64).round() as u64;
+    let mut s = FaultSchedule::new(c.seed);
+    let (p_from, p_until) =
+        (at(c.partition_start_frac), at(c.partition_start_frac + c.partition_len_frac));
+    if c.partition_frac > 0.0 && c.partition_len_frac > 0.0 && p_until > p_from && n >= 2 {
+        s = s.with_partition(FaultSchedule::split_side(n, c.partition_frac), p_from, p_until);
+    }
+    if let Some(k) = c.crash_agent {
+        if k >= n {
+            return Err(DdlError::Config(format!(
+                "chaos.crash_agent = {k} out of range for N = {n}"
+            )));
+        }
+        // The crash rides the same window fractions as the partition, so
+        // one pair of knobs positions every "big" fault.
+        if p_until > p_from {
+            s = s.with_crash(k, p_from, p_until);
+        }
+    }
+    if c.churn_windows > 0 {
+        s = s.with_edge_churn(graph, c.churn_windows, (t / 20).max(1), t, c.seed);
+    }
+    if c.drop_prob > 0.0 {
+        s = s.with_drops(c.drop_prob, 0, t);
+    }
+    s.validate(n)?;
+    Ok(s)
+}
+
+/// Does any partition window overlap the half-open interval `(a, b]`?
+fn partition_overlaps(s: &FaultSchedule, a: u64, b: u64) -> bool {
+    s.faults().iter().any(|f| match f {
+        Fault::Partition { from_us, until_us, .. } => *from_us <= b && *until_us > a,
+        _ => false,
+    })
+}
+
+/// Run the chaos experiment; `log` receives progress lines. See the
+/// module docs for the protocol.
+pub fn run_chaos(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<ChaosReport> {
+    let mut rng = Pcg64::new(cfg.seed);
+    let graph = build_topology(cfg, &mut rng)?;
+    let weights = metropolis_weights(&graph);
+    let dict = DistributedDictionary::random(
+        cfg.dim,
+        cfg.agents,
+        cfg.agents,
+        AtomConstraint::UnitBall,
+        &mut rng,
+    )?;
+    let x = rng.normal_vec(cfg.dim);
+    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
+    let params = DiffusionParams::new(cfg.infer.mu, cfg.infer.iters);
+    let base = cfg.async_params()?;
+    let mode = cfg.chaos.combine_mode()?;
+
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000)?;
+
+    // 1. Fault-free baseline pins the horizon T the windows scale to.
+    let mut clean_full =
+        AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, base.clone())?;
+    clean_full.run(&dict, &task, &x, params)?;
+    let clean_time_us = clean_full.sim_time_us();
+    log(&format!(
+        "chaos: N={} M={} topology={}, iters={}, tau={}; fault-free horizon T = {:.4} s",
+        cfg.agents,
+        cfg.dim,
+        cfg.topology,
+        cfg.infer.iters,
+        cfg.tau,
+        clean_time_us as f64 / 1e6,
+    ));
+
+    // 2. Schedule scaled to T.
+    let schedule = build_schedule(&cfg.chaos, &graph, clean_time_us)?;
+    log(&format!(
+        "chaos schedule (seed {}): {} fault windows{}",
+        cfg.chaos.seed,
+        schedule.faults().len(),
+        if schedule.has_directed_faults() { ", directed" } else { "" },
+    ));
+
+    // 3. Chaos run vs a fresh fault-free comparator through shared
+    // checkpoints. With adaptive τ the controller rides along, the
+    // comparator doubling as its MSD probe.
+    let adaptive = cfg.control.adaptive_tau;
+    let mut controller = adaptive.then(|| TauController::new(&cfg.control));
+    let tau0 = controller.as_ref().map_or(cfg.tau, |c| c.initial_tau(cfg.tau));
+    let chaos_params = AsyncParams {
+        tau: tau0,
+        chaos: schedule.clone(),
+        combine: mode,
+        ..base.clone()
+    };
+    let mut chaos_net =
+        AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, chaos_params.clone())?;
+    let mut clean_net =
+        AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, base.clone())?;
+
+    let checkpoints = cfg.checkpoints.max(1);
+    let mut rows = Vec::with_capacity(checkpoints);
+    // τ applied for the segment *after* each checkpoint, replayed in
+    // step 4 (decisions are pure functions of replayed measurements, so
+    // re-applying the recorded moves reproduces the adaptive run too).
+    let mut taus_after = Vec::with_capacity(checkpoints);
+    let mut tau = tau0;
+    let mut prev_t = 0u64;
+    for c in 1..=checkpoints {
+        let t_us = (clean_time_us as u128 * c as u128 / checkpoints as u128) as u64;
+        let done = chaos_net.run_clamped(&dict, &task, &x, params, t_us)?;
+        clean_net.run_clamped(&dict, &task, &x, params, t_us)?;
+        let msd_faulty = chaos_net.msd_vs(&exact.nu);
+        let msd_clean = clean_net.msd_vs(&exact.nu);
+        let cut = partition_overlaps(&schedule, prev_t, t_us);
+        rows.push(ChaosRow {
+            t_us,
+            msd_faulty,
+            msd_clean,
+            partition: cut,
+            tau,
+            min_iters: chaos_net.min_iters_done(),
+        });
+        if let Some(ctl) = controller.as_mut() {
+            ctl.observe_partition(cut);
+            let next = ctl.decide(
+                t_us,
+                cfg.agents,
+                chaos_net.gate_wait_us_at(t_us),
+                msd_faulty,
+                msd_clean,
+                tau,
+            );
+            if next != tau && !done {
+                chaos_net.set_tau(next, &task, t_us);
+                tau = next;
+            }
+        }
+        taus_after.push(tau);
+        prev_t = t_us;
+    }
+    let last = rows.last().expect("checkpoints >= 1");
+    let recovery_gap = (last.msd_faulty - last.msd_clean).abs();
+    let final_msd = last.msd_faulty;
+    chaos_net.run(&dict, &task, &x, params)?;
+    let chaos_time_us = chaos_net.sim_time_us();
+    log(&format!(
+        "chaos run complete at {:.4} s (clean {:.4} s), recovery gap {:.3e}",
+        chaos_time_us as f64 / 1e6,
+        clean_time_us as f64 / 1e6,
+        recovery_gap,
+    ));
+
+    // 4. Replay contract: the identical schedule (and τ moves) must
+    // reproduce the trajectory bit-for-bit.
+    let mut replay =
+        AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, chaos_params)?;
+    let mut replay_msd = f64::NAN;
+    let mut rtau = tau0;
+    for c in 1..=checkpoints {
+        let t_us = (clean_time_us as u128 * c as u128 / checkpoints as u128) as u64;
+        let done = replay.run_clamped(&dict, &task, &x, params, t_us)?;
+        if c == checkpoints {
+            replay_msd = replay.msd_vs(&exact.nu);
+        }
+        let next = taus_after[c - 1];
+        if next != rtau && !done {
+            replay.set_tau(next, &task, t_us);
+            rtau = next;
+        }
+    }
+    replay.run(&dict, &task, &x, params)?;
+    let replay_bitwise = replay.sim_time_us() == chaos_time_us
+        && replay.stats() == chaos_net.stats()
+        && replay.chaos_stats() == chaos_net.chaos_stats()
+        && replay_msd.to_bits() == final_msd.to_bits();
+
+    // 5. Empty-schedule parity: a seeded-but-empty schedule must be
+    // bitwise the fault-free baseline (the chaos layer's no-op proof).
+    let mut empty_net = AsyncNetwork::new(
+        graph,
+        weights,
+        cfg.dim,
+        None,
+        AsyncParams { chaos: FaultSchedule::new(cfg.chaos.seed), ..base },
+    )?;
+    empty_net.run(&dict, &task, &x, params)?;
+    let empty_parity = empty_net.sim_time_us() == clean_time_us
+        && empty_net.stats() == clean_full.stats()
+        && empty_net.msd_vs(&exact.nu).to_bits() == clean_full.msd_vs(&exact.nu).to_bits();
+
+    Ok(ChaosReport {
+        rows,
+        clean_time_us,
+        chaos_time_us,
+        recovery_gap,
+        replay_bitwise,
+        empty_parity,
+        combine: chaos_net.combine_mode(),
+        auto_pushsum: chaos_net.auto_pushsum(),
+        schedule_faults: schedule.faults().len(),
+        chaos_stats: chaos_net.chaos_stats(),
+        stats: chaos_net.stats(),
+        max_staleness: chaos_net.max_staleness_observed(),
+        tau_trace: controller.map(TauController::into_trace),
+    })
+}
+
+/// Outcome of the combine-correction probe ([`run_pushsum_bias`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PushSumBias {
+    /// Onset of the persistent directed outage (µs).
+    pub outage_from_us: u64,
+    /// Directed links cut for the rest of the run.
+    pub links_cut: usize,
+    /// Converged MSD of the Metropolis combine under the outage.
+    pub msd_metropolis: f64,
+    /// Converged MSD of the push-sum combine under the same outage.
+    pub msd_pushsum: f64,
+}
+
+impl PushSumBias {
+    /// `msd_metropolis / msd_pushsum` — how much of the Metropolis error
+    /// the push-sum correction removes (> 1 when the correction helps).
+    pub fn bias_ratio(&self) -> f64 {
+        self.msd_metropolis / self.msd_pushsum.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Isolate the push-sum correction: one persistent *directed* outage
+/// (every third agent loses its first outgoing link from `0.25·T`
+/// onward), run once with the Metropolis combine forced and once with
+/// push-sum forced, and compare converged MSD against the exact dual.
+/// Row-stochastic-only averaging converges to a Perron-weighted (biased)
+/// objective on the live digraph; the ratio-of-sums correction does not
+/// — the `bench_chaos.rs` regression indicator.
+pub fn run_pushsum_bias(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<PushSumBias> {
+    let mut rng = Pcg64::new(cfg.seed);
+    let graph = build_topology(cfg, &mut rng)?;
+    let weights = metropolis_weights(&graph);
+    let dict = DistributedDictionary::random(
+        cfg.dim,
+        cfg.agents,
+        cfg.agents,
+        AtomConstraint::UnitBall,
+        &mut rng,
+    )?;
+    let x = rng.normal_vec(cfg.dim);
+    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
+    let params = DiffusionParams::new(cfg.infer.mu, cfg.infer.iters);
+    let base = cfg.async_params()?;
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000)?;
+
+    let mut clean = AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, base.clone())?;
+    clean.run(&dict, &task, &x, params)?;
+    let from = clean.sim_time_us() / 4;
+
+    let mut schedule = FaultSchedule::new(cfg.chaos.seed);
+    let mut links_cut = 0usize;
+    for k in (0..graph.n()).step_by(3) {
+        if let Some(&nb) = graph.neighbors(k).first() {
+            schedule = schedule.with_link_down(k, nb, from, u64::MAX);
+            links_cut += 1;
+        }
+    }
+    log(&format!(
+        "pushsum-bias probe: {links_cut} directed links down from {:.4} s onward",
+        from as f64 / 1e6
+    ));
+
+    let mut run = |combine: CombineMode| -> Result<f64> {
+        let mut net = AsyncNetwork::new(
+            graph.clone(),
+            weights.clone(),
+            cfg.dim,
+            None,
+            AsyncParams { chaos: schedule.clone(), combine, ..base.clone() },
+        )?;
+        net.run(&dict, &task, &x, params)?;
+        Ok(net.msd_vs(&exact.nu))
+    };
+    let msd_metropolis = run(CombineMode::Metropolis)?;
+    let msd_pushsum = run(CombineMode::PushSum)?;
+    log(&format!(
+        "pushsum-bias probe: metropolis {msd_metropolis:.3e}, push-sum {msd_pushsum:.3e}"
+    ));
+    Ok(PushSumBias { outage_from_us: from, links_cut, msd_metropolis, msd_pushsum })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::InferenceConfig;
+
+    fn tiny_cfg() -> AsyncConfig {
+        let mut cfg = AsyncConfig {
+            agents: 12,
+            dim: 8,
+            ring_k: 1,
+            tau: 2,
+            compute_us: 50,
+            link_us: 10,
+            slow_agent: None,
+            infer: InferenceConfig { mu: 0.3, iters: 200, gamma: 0.1, delta: 0.5, threads: 1 },
+            checkpoints: 5,
+            ..AsyncConfig::default()
+        };
+        cfg.chaos.enabled = true;
+        // Heal early (0.2T–0.4T) so well over half the horizon remains
+        // for recovery — the acceptance geometry.
+        cfg.chaos.partition_frac = 0.25;
+        cfg.chaos.partition_start_frac = 0.2;
+        cfg.chaos.partition_len_frac = 0.2;
+        cfg
+    }
+
+    #[test]
+    fn chaos_report_is_consistent_and_contracts_hold() {
+        let cfg = tiny_cfg();
+        let mut lines = Vec::new();
+        let r = run_chaos(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert_eq!(r.rows.len(), 5);
+        assert!(r.rows.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert_eq!(r.rows.last().unwrap().t_us, r.clean_time_us);
+        assert!(r.schedule_faults > 0, "schedule must actually contain the partition");
+        assert!(r.rows.iter().any(|row| row.partition), "partition window never spanned a row");
+        assert!(!r.rows.last().unwrap().partition, "partition must heal before T");
+        // The harness contracts.
+        assert!(r.replay_bitwise, "chaos run must replay bit-identically");
+        assert!(r.empty_parity, "empty schedule must be bitwise fault-free");
+        // Degradation machinery actually engaged across the cut...
+        let cs = r.chaos_stats;
+        assert!(
+            cs.forced_combines > 0 || cs.stale_fallbacks > 0,
+            "partition never tripped the degradation path: {cs:?}"
+        );
+        // ...and the run recovered: equal-sim-time MSD within the
+        // acceptance band of the unpartitioned trajectory.
+        assert!(
+            r.recovery_gap < 1e-3,
+            "recovery gap {:.3e} after healed partition",
+            r.recovery_gap
+        );
+        assert!(r.chaos_time_us >= r.clean_time_us);
+        assert_eq!(r.combine, CombineMode::Metropolis, "undirected faults keep metropolis");
+        assert!(!r.auto_pushsum);
+        assert!(r.tau_trace.is_none());
+        assert!(r.max_staleness <= cfg.tau);
+        assert!(!r.summary(cfg.agents).is_empty());
+        assert!(!lines.is_empty());
+    }
+
+    #[test]
+    fn adaptive_tau_rides_along_with_partition_hook() {
+        let mut cfg = tiny_cfg();
+        cfg.control.adaptive_tau = true;
+        cfg.control.tau_min = 0;
+        cfg.control.tau_max = 6;
+        cfg.checkpoints = 8;
+        let r = run_chaos(&cfg, &mut |_| {}).unwrap();
+        let trace = r.tau_trace.expect("adaptive run records its trace");
+        assert_eq!(trace.len(), 8);
+        // The hook marked the cut epochs, matching the rows.
+        assert!(trace.iter().any(|d| d.partition));
+        for (d, row) in trace.iter().zip(&r.rows) {
+            assert_eq!(d.partition, row.partition);
+        }
+        // Replay covers the adaptive path too.
+        assert!(r.replay_bitwise);
+        assert!(r.rows.iter().all(|row| row.tau <= cfg.control.tau_max));
+    }
+
+    #[test]
+    fn crash_agent_out_of_range_rejected() {
+        let mut cfg = tiny_cfg();
+        cfg.chaos.crash_agent = Some(99);
+        assert!(run_chaos(&cfg, &mut |_| {}).is_err());
+    }
+
+    #[test]
+    fn pushsum_bias_probe_shows_the_correction() {
+        let mut cfg = tiny_cfg();
+        cfg.infer.iters = 300;
+        let mut lines = Vec::new();
+        let p = run_pushsum_bias(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert!(p.links_cut > 0);
+        assert!(p.msd_metropolis.is_finite() && p.msd_pushsum.is_finite());
+        // Push-sum must still converge under the persistent directed
+        // outage — that is the claim the combine correction makes.
+        assert!(p.msd_pushsum < 5e-2, "push-sum diverged: {:.3e}", p.msd_pushsum);
+        assert!(p.bias_ratio().is_finite());
+        assert!(!lines.is_empty());
+    }
+}

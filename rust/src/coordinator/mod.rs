@@ -8,15 +8,21 @@
 //!   model (MSD vs simulated time, straggler scenarios), plus the
 //!   adaptive-τ driver (`--adaptive-tau`: the τ controller stepped
 //!   against a τ = 0 probe through shared sim-time epochs);
+//! * [`chaos`] — `ddl chaos`: deterministic fault injection over the async
+//!   executor (healing partitions, edge churn, crashes, drops) with
+//!   MSD-vs-sim-time sensitivity curves and replay/parity checks;
 //! * [`csv`] — tiny CSV writer for `results/`.
 
+pub mod chaos;
 pub mod csv;
 pub mod denoise;
 pub mod novelty;
+#[cfg(feature = "xla")]
 pub mod quickstart;
 pub mod straggler;
 pub mod tuning;
 
+pub use chaos::{run_chaos, run_pushsum_bias, ChaosReport, ChaosRow, PushSumBias};
 pub use denoise::{run_denoise, DenoiseReport};
 pub use novelty::{run_novelty, NoveltyAlgo, NoveltyReport, StepResult};
 pub use straggler::{

@@ -103,8 +103,9 @@ impl StragglerReport {
     }
 }
 
-/// Build the experiment topology named by the config.
-fn build_topology(cfg: &AsyncConfig, rng: &mut Pcg64) -> Result<Graph> {
+/// Build the experiment topology named by the config (shared with the
+/// chaos driver, which studies the identical problem instance).
+pub(crate) fn build_topology(cfg: &AsyncConfig, rng: &mut Pcg64) -> Result<Graph> {
     let topo = match cfg.topology.as_str() {
         "ring" => Topology::Ring { k: cfg.ring_k.max(1) },
         "grid" => Topology::Grid,

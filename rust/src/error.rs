@@ -1,28 +1,85 @@
 //! Crate-wide error type.
-use thiserror::Error;
+//!
+//! Hand-implemented (no `thiserror`): the crate is fully offline and
+//! carries zero external dependencies. The `Xla` variant exists even
+//! without the optional `xla` feature so error-matching code is
+//! feature-independent; the `From<xla::Error>` conversion is only
+//! compiled when the PJRT bridge is.
+
+use std::fmt;
 
 /// Errors surfaced by the ddl library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DdlError {
-    #[error("shape mismatch: {0}")]
+    /// Dimension / shape mismatch between tensors, graphs, or configs.
     Shape(String),
-    #[error("config error: {0}")]
+    /// Invalid or inconsistent configuration.
     Config(String),
-    #[error("runtime error: {0}")]
+    /// Failure while executing (I/O-free) library code: executor stalls,
+    /// poisoned channels, violated scheduling invariants.
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Error from the PJRT/XLA bridge (feature `xla`).
     Xla(String),
-    #[error("{0}")]
+    /// Anything else.
     Other(String),
+}
+
+impl fmt::Display for DdlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DdlError::Shape(s) => write!(f, "shape mismatch: {s}"),
+            DdlError::Config(s) => write!(f, "config error: {s}"),
+            DdlError::Runtime(s) => write!(f, "runtime error: {s}"),
+            DdlError::Io(e) => write!(f, "io error: {e}"),
+            DdlError::Xla(s) => write!(f, "xla error: {s}"),
+            DdlError::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for DdlError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DdlError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DdlError {
+    fn from(e: std::io::Error) -> Self {
+        DdlError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for DdlError {
+    fn from(e: xla::Error) -> Self {
+        DdlError::Xla(e.to_string())
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, DdlError>;
 
-impl From<xla::Error> for DdlError {
-    fn from(e: xla::Error) -> Self {
-        DdlError::Xla(e.to_string())
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_variant() {
+        assert_eq!(DdlError::Shape("a".into()).to_string(), "shape mismatch: a");
+        assert_eq!(DdlError::Config("b".into()).to_string(), "config error: b");
+        assert_eq!(DdlError::Runtime("c".into()).to_string(), "runtime error: c");
+        assert_eq!(DdlError::Other("d".into()).to_string(), "d");
+    }
+
+    #[test]
+    fn io_conversion_and_source() {
+        let e: DdlError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -4,10 +4,14 @@
 //! probability 0.5, regenerated until connected (checked through the
 //! algebraic connectivity of the graph Laplacian), with the Metropolis
 //! rule supplying a doubly-stochastic combination matrix (Eq. 32 and §IV-B).
+//! The [`pushsum`] module supplies the column-stochastic weights used when
+//! the live topology loses symmetry (directed faults, `ddl chaos`).
 
 pub mod laplacian;
 pub mod metropolis;
+pub mod pushsum;
 pub mod topology;
 
 pub use metropolis::{is_doubly_stochastic, metropolis_csr, metropolis_weights, uniform_weights};
+pub use pushsum::{is_column_stochastic, pushsum_weights, pushsum_weights_live};
 pub use topology::{Graph, Topology};

@@ -1,0 +1,141 @@
+//! Push-sum (ratio-of-sums) combination weights for directed or
+//! time-varying live topologies.
+//!
+//! The Metropolis rule ([`super::metropolis`]) is doubly stochastic, which
+//! is what makes plain diffusion average unbiasedly — but double
+//! stochasticity needs *symmetric* connectivity. When the chaos layer
+//! takes down one direction of an edge ([`crate::net::chaos`]), the live
+//! graph is a digraph and no doubly-stochastic weight assignment may
+//! exist. Push-sum (Nedić–Olshevsky subgradient-push; arXiv:1808.05933,
+//! arXiv:1612.07335) only needs **column** stochasticity, which each
+//! sender can guarantee locally: it splits its mass uniformly over its
+//! live out-edges plus itself, `a_{ℓk} = 1/(d_k⁺ + 1)`. A parallel scalar
+//! weight `w` runs through the same recursion and the unbiased estimate
+//! is read off as the ratio `s/w`.
+
+use super::Graph;
+use crate::math::Mat;
+
+/// Uniform push-sum weight matrix over the full graph:
+/// `a_{ℓk} = 1/(d_k + 1)` for `ℓ ∈ N_k ∪ {k}`, zero otherwise
+/// (column `k` = how agent `k` splits its mass). Column-stochastic by
+/// construction; row sums differ on irregular graphs — this is *not* a
+/// doubly-stochastic matrix and is not meant to be.
+pub fn pushsum_weights(g: &Graph) -> Mat {
+    pushsum_weights_live(g, |_, _| true)
+}
+
+/// Push-sum weights over the **live** out-edges only: `alive(k, l)` says
+/// whether the directed link `k → l` currently transmits. Each column
+/// stays exactly stochastic whatever the mask — the sender redistributes
+/// over whatever is up (plus itself), which is the push-sum correction
+/// the chaos executor applies at every send.
+pub fn pushsum_weights_live(g: &Graph, alive: impl Fn(usize, usize) -> bool) -> Mat {
+    let n = g.n();
+    let mut a = Mat::zeros(n, n);
+    for k in 0..n {
+        let live: Vec<usize> =
+            g.neighbors(k).iter().copied().filter(|&l| alive(k, l)).collect();
+        let w = 1.0 / (live.len() + 1) as f32;
+        for l in live {
+            a.set(l, k, w);
+        }
+        a.set(k, k, w);
+    }
+    a
+}
+
+/// Check column stochasticity (`Aᵀ1 = 1`) and non-negativity — the whole
+/// contract push-sum needs from its weights.
+pub fn is_column_stochastic(a: &Mat, tol: f32) -> bool {
+    let n = a.rows();
+    if a.cols() != n {
+        return false;
+    }
+    for k in 0..n {
+        let mut col = 0.0;
+        for l in 0..n {
+            let v = a.get(l, k);
+            if v < -tol {
+                return false;
+            }
+            col += v;
+        }
+        if (col - 1.0).abs() > tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::metropolis::respects_topology;
+    use crate::graph::{is_doubly_stochastic, Topology};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn pushsum_is_column_stochastic_on_random_graphs() {
+        for seed in 0..5 {
+            let g = Graph::generate(20, &Topology::ErdosRenyi { p: 0.4 }, &mut Pcg64::new(seed));
+            let a = pushsum_weights(&g);
+            assert!(is_column_stochastic(&a, 1e-5), "seed {seed}");
+            assert!(respects_topology(&a, &g, 1e-9), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pushsum_is_not_doubly_stochastic_on_irregular_graphs() {
+        // A star-ish ER graph has irregular degrees: rows cannot all sum
+        // to one when columns do with uniform splits.
+        let g = Graph::generate(15, &Topology::ErdosRenyi { p: 0.3 }, &mut Pcg64::new(3));
+        let irregular =
+            (0..15).any(|k| g.degree(k) != g.degree(0));
+        assert!(irregular, "test graph should be irregular");
+        let a = pushsum_weights(&g);
+        assert!(!is_doubly_stochastic(&a, 1e-5));
+    }
+
+    #[test]
+    fn live_mask_keeps_columns_stochastic() {
+        let g = Graph::generate(12, &Topology::Ring { k: 2 }, &mut Pcg64::new(1));
+        // Take down the directed links 0→1 and 3→5 (if present): the
+        // senders redistribute, columns stay exactly stochastic.
+        let a = pushsum_weights_live(&g, |k, l| !((k == 0 && l == 1) || (k == 3 && l == 5)));
+        assert!(is_column_stochastic(&a, 1e-5));
+        assert_eq!(a.get(1, 0), 0.0, "masked link carries no weight");
+        // Column 0 split over one fewer recipient than column 2's.
+        assert!(a.get(0, 0) > a.get(2, 2));
+    }
+
+    #[test]
+    fn ratio_of_sums_consensus_is_exact_under_directed_mask() {
+        // The defining property: iterating s ← As, w ← Aw from s = values,
+        // w = 1 drives every ratio s_k/w_k to the true average, even with
+        // a directed mask where plain row-normalized averaging is biased.
+        let g = Graph::generate(10, &Topology::Ring { k: 2 }, &mut Pcg64::new(4));
+        let a = pushsum_weights_live(&g, |k, l| !(k == 2 && l == 3));
+        let n = 10usize;
+        let values: Vec<f32> = (0..n).map(|k| k as f32).collect();
+        let mean: f32 = values.iter().sum::<f32>() / n as f32;
+        let mut s = values;
+        let mut w = vec![1.0f32; n];
+        for _ in 0..400 {
+            let mut s2 = vec![0.0f32; n];
+            let mut w2 = vec![0.0f32; n];
+            for k in 0..n {
+                for l in 0..n {
+                    s2[l] += a.get(l, k) * s[k];
+                    w2[l] += a.get(l, k) * w[k];
+                }
+            }
+            s = s2;
+            w = w2;
+        }
+        for k in 0..n {
+            let z = s[k] / w[k];
+            assert!((z - mean).abs() < 1e-3, "agent {k}: {z} vs {mean}");
+        }
+    }
+}

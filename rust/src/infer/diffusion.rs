@@ -822,6 +822,51 @@ pub(crate) fn build_theta(n: usize, informed: Option<&[usize]>) -> Result<Vec<f3
     Ok(theta)
 }
 
+/// Push-sum (ratio-of-sums) consensus over a **column-stochastic** weight
+/// matrix `a` (e.g. [`crate::graph::pushsum_weights_live`]): iterate
+/// `s ← A s`, `w ← A w` from `s = values`, `w = 1`, and return each
+/// agent's estimate `s_k / w_k` after `iters` steps. `values` is row-major
+/// `n × m`. This is the matrix-form reference for the per-edge push-sum
+/// combine in [`crate::net::async_exec`]: on a connected live digraph the
+/// ratios converge to the true network average even where plain
+/// row-normalized averaging is biased (`ddl chaos`, directed outages).
+pub fn pushsum_ratio_consensus(a: &Mat, values: &[f32], n: usize, m: usize, iters: usize) -> Vec<f32> {
+    assert_eq!(a.rows(), n);
+    assert_eq!(a.cols(), n);
+    assert_eq!(values.len(), n * m);
+    let mut s = values.to_vec();
+    let mut w = vec![1.0f32; n];
+    let mut s2 = vec![0.0f32; n * m];
+    let mut w2 = vec![0.0f32; n];
+    for _ in 0..iters {
+        s2.fill(0.0);
+        w2.fill(0.0);
+        for k in 0..n {
+            for l in 0..n {
+                let alk = a.get(l, k);
+                if alk == 0.0 {
+                    continue;
+                }
+                let src = &s[k * m..(k + 1) * m];
+                let dst = &mut s2[l * m..(l + 1) * m];
+                for i in 0..m {
+                    dst[i] += alk * src[i];
+                }
+                w2[l] += alk * w[k];
+            }
+        }
+        std::mem::swap(&mut s, &mut s2);
+        std::mem::swap(&mut w, &mut w2);
+    }
+    for k in 0..n {
+        let inv = 1.0 / w[k].max(1e-12);
+        for i in 0..m {
+            s[k * m + i] *= inv;
+        }
+    }
+    s
+}
+
 /// One agent's adapt step (Eq. 31a) over the whole minibatch, shared
 /// verbatim by the serial and threaded paths so their per-row arithmetic
 /// is identical. `nu`/`psi` are the agent's `B·M` row windows; `thr` is
@@ -912,6 +957,34 @@ mod tests {
         let a = metropolis_weights(&g);
         let x: Vec<f32> = rng.normal_vec(m);
         (dict, a, x)
+    }
+
+    /// Push-sum ratio consensus recovers the exact average under a
+    /// directed live mask, where row-normalized averaging over the same
+    /// digraph is biased — the correction `ddl chaos` relies on.
+    #[test]
+    fn pushsum_ratio_consensus_unbiased_on_digraph() {
+        let n = 12usize;
+        let m = 3usize;
+        let mut rng = Pcg64::new(17);
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        // Directed mask: three one-way outages.
+        let alive = |k: usize, l: usize| {
+            !((k == 0 && l == 1) || (k == 4 && l == 6) || (k == 9 && l == 8))
+        };
+        let a = crate::graph::pushsum_weights_live(&g, alive);
+        let values: Vec<f32> = (0..n * m).map(|_| rng.next_normal()).collect();
+        let z = pushsum_ratio_consensus(&a, &values, n, m, 600);
+        for i in 0..m {
+            let mean: f32 = (0..n).map(|k| values[k * m + i]).sum::<f32>() / n as f32;
+            for k in 0..n {
+                assert!(
+                    (z[k * m + i] - mean).abs() < 1e-3,
+                    "agent {k} dim {i}: {} vs {mean}",
+                    z[k * m + i]
+                );
+            }
+        }
     }
 
     /// Consensus disagreement is O(μ): it must shrink proportionally as μ

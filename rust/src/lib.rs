@@ -48,6 +48,7 @@ pub mod model;
 pub mod net;
 pub mod ops;
 pub mod rng;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod serve;
 pub mod testutil;

@@ -9,6 +9,7 @@
 //! * `tune`      — §IV-A step-size tuning curves (Fig. 4 procedure)
 //! * `serve`     — streaming inference service with online adaptation
 //! * `async`     — sync-vs-async diffusion under a straggler delay model
+//! * `chaos`     — deterministic fault injection over the async executor
 //! * `bench-gate`— derived-speedup regression gate for BENCH_*.json
 //!
 //! Options can come from a TOML config (`--config path`) with CLI
@@ -36,6 +37,7 @@ fn main() {
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some("async") => cmd_async(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             println!("{HELP}");
@@ -84,6 +86,20 @@ COMMANDS:
               --adaptive-tau runs the tau controller against a tau = 0
               probe, widening on gate-wait, narrowing on MSD drift;
               --drift-period-us rotates the slow agent; TOML [control])
+  chaos       deterministic fault injection over the async executor
+              [--config f] [--agents n] [--dim m] [--topology ring|grid|er|full]
+              [--tau t] [--mu x] [--iters n] [--checkpoints c] [--seed n]
+              [--chaos-seed n] [--partition-frac x] [--partition-start-frac x]
+              [--partition-len-frac x] [--drop-prob p] [--crash-agent k]
+              [--churn-windows w] [--pushsum auto|on|off] [--adaptive-tau]
+              [--bias-probe]
+              (FaultSchedule of healing partitions, edge churn, message
+              drops, and agent crash/recovery windows — every event a pure
+              function of (seed, sim-time), so chaos runs replay
+              bit-identically and an empty schedule reproduces the
+              fault-free trajectory bit-for-bit; push-sum combine is
+              selected automatically when faults make the live topology
+              directed; TOML [chaos])
   bench-gate  compare derived speedups in --current json against --baseline
               json; fail below --min-frac (default 0.5) of the baseline
 
@@ -100,19 +116,29 @@ fn run(code: impl FnOnce() -> ddl::Result<()>) -> i32 {
     }
 }
 
+#[cfg(feature = "xla")]
+fn show_runtime(dir: &Path) {
+    match ddl::runtime::Runtime::new(dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts:");
+            for name in rt.names() {
+                println!("  {name}");
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn show_runtime(_dir: &Path) {
+    println!("runtime unavailable: built without the `xla` feature (pure-rust build)");
+}
+
 fn cmd_info(args: &Args) -> i32 {
     let dir = args.str_or("artifacts", "artifacts").to_string();
     run(move || {
-        match ddl::runtime::Runtime::new(Path::new(&dir)) {
-            Ok(rt) => {
-                println!("PJRT platform: {}", rt.platform());
-                println!("artifacts:");
-                for name in rt.names() {
-                    println!("  {name}");
-                }
-            }
-            Err(e) => println!("runtime unavailable: {e}"),
-        }
+        show_runtime(Path::new(&dir));
         // Topology diagnostics at the denoise default scale.
         let mut rng = ddl::rng::Pcg64::new(1);
         let g = ddl::graph::Graph::generate(
@@ -131,11 +157,18 @@ fn cmd_info(args: &Args) -> i32 {
     })
 }
 
+#[cfg(feature = "xla")]
 fn cmd_quickstart(args: &Args) -> i32 {
     let dir = args.str_or("artifacts", "artifacts").to_string();
     run(move || {
         ddl::coordinator::quickstart::run_quickstart(Path::new(&dir), &mut |s| println!("{s}"))
     })
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_quickstart(_args: &Args) -> i32 {
+    eprintln!("quickstart needs the PJRT bridge: rebuild with `--features xla`");
+    2
 }
 
 fn cmd_denoise(args: &Args) -> i32 {
@@ -291,6 +324,64 @@ fn cmd_async(args: &Args) -> i32 {
             println!("== async report (MSD vs simulated time) ==");
             println!("{}", report.summary(cfg.agents));
         }
+        Ok(())
+    })
+}
+
+fn cmd_chaos(args: &Args) -> i32 {
+    run(|| {
+        let doc = match args.get("config") {
+            Some(p) => TomlDoc::load(Path::new(p))?,
+            None => TomlDoc::default(),
+        };
+        let mut cfg = AsyncConfig::from_toml(&doc);
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        cfg.agents = args.usize_or("agents", cfg.agents)?;
+        cfg.dim = args.usize_or("dim", cfg.dim)?;
+        cfg.topology = args.str_or("topology", &cfg.topology).to_string();
+        cfg.ring_k = args.usize_or("ring-k", cfg.ring_k)?;
+        cfg.tau = args.usize_or("tau", cfg.tau)?;
+        cfg.compute_dist = args.str_or("compute-dist", &cfg.compute_dist).to_string();
+        cfg.compute_us = args.u64_or("compute-us", cfg.compute_us)?;
+        cfg.link_dist = args.str_or("link-dist", &cfg.link_dist).to_string();
+        cfg.link_us = args.u64_or("link-us", cfg.link_us)?;
+        cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
+        cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
+        cfg.checkpoints = args.usize_or("checkpoints", cfg.checkpoints)?.max(1);
+        cfg.chaos.enabled = true;
+        cfg.chaos.seed = args.u64_or("chaos-seed", cfg.chaos.seed)?;
+        cfg.chaos.partition_frac =
+            args.f32_or("partition-frac", cfg.chaos.partition_frac as f32)? as f64;
+        cfg.chaos.partition_start_frac =
+            args.f32_or("partition-start-frac", cfg.chaos.partition_start_frac as f32)? as f64;
+        cfg.chaos.partition_len_frac =
+            args.f32_or("partition-len-frac", cfg.chaos.partition_len_frac as f32)? as f64;
+        cfg.chaos.drop_prob = args.f32_or("drop-prob", cfg.chaos.drop_prob as f32)? as f64;
+        if let Some(k) = args.get("crash-agent") {
+            cfg.chaos.crash_agent = Some(k.parse().map_err(|_| {
+                ddl::DdlError::Config(format!("--crash-agent: bad value '{k}'"))
+            })?);
+        }
+        cfg.chaos.churn_windows = args.usize_or("churn-windows", cfg.chaos.churn_windows)?;
+        cfg.chaos.pushsum = args.str_or("pushsum", &cfg.chaos.pushsum).to_string();
+        cfg.control.adaptive_tau = cfg.control.adaptive_tau || args.flag("adaptive-tau");
+        if args.flag("bias-probe") {
+            let probe = ddl::coordinator::run_pushsum_bias(&cfg, &mut |s| println!("{s}"))?;
+            println!("== push-sum bias probe (persistent directed outage) ==");
+            println!(
+                "outage from t = {} µs cutting {} directed links\n\
+                 metropolis MSD {:.3e} | push-sum MSD {:.3e} (bias ratio {:.2}x)",
+                probe.outage_from_us,
+                probe.links_cut,
+                probe.msd_metropolis,
+                probe.msd_pushsum,
+                probe.bias_ratio(),
+            );
+            return Ok(());
+        }
+        let report = ddl::coordinator::run_chaos(&cfg, &mut |s| println!("{s}"))?;
+        println!("== chaos report (MSD vs simulated time) ==");
+        println!("{}", report.summary(cfg.agents));
         Ok(())
     })
 }

@@ -80,7 +80,9 @@ pub fn run_threaded(
         |scope| -> Result<Vec<WorkerOut>> {
             let mut handles = Vec::with_capacity(workers);
             for w in 0..workers {
-                let rx = receivers[w].take().unwrap();
+                let rx = receivers[w].take().ok_or_else(|| {
+                    DdlError::Runtime(format!("actor worker {w} receiver already taken"))
+                })?;
                 let txs = senders.clone();
                 let owned = chunk_range(n, workers, w);
                 let owner = &owner;

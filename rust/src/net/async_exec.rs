@@ -54,16 +54,42 @@
 //! the network has finished), which coincides with the BSP round count at
 //! completion.
 //!
-//! Drive it with `ddl async` (TOML `[async]`, see
-//! [`crate::config::experiment::AsyncConfig`]), benchmark it with
-//! `cargo bench --bench bench_async`, and see `ARCHITECTURE.md` (repo
-//! root) for where this executor sits in the executor matrix.
+//! ## Chaos layer — deterministic fault injection
+//!
+//! A [`FaultSchedule`] ([`AsyncParams::chaos`]) injects edge churn,
+//! healing partitions, directed link outages, message drops, and agent
+//! crash/recovery windows, every one a pure function of (schedule,
+//! sim-time) — see [`crate::net::chaos`]. Degradation is graceful, never
+//! a stall: a send that finds its link down retries with bounded backoff
+//! ([`ChaosPolicy`]), a combine gated past the receive timeout proceeds
+//! with a stale-ψ fallback (or excludes the never-heard-from neighbor and
+//! renormalizes), and a crashed agent's adapt is re-run at recovery and
+//! its ψ rebroadcast (the re-join resync). Fallback staleness is
+//! accounted in [`ChaosStats`], never in
+//! [`Self::max_staleness_observed`][AsyncNetwork::max_staleness_observed],
+//! so the τ invariant stays honest. Drop coins come from a dedicated
+//! chaos stream: the **empty schedule is bit-for-bit the fault-free
+//! executor** — no chaos branches, events, or randomness
+//! (`tests/async_parity.rs`, enforced bitwise).
+//!
+//! When a schedule contains *directed* faults the live topology loses
+//! symmetry and the Metropolis combine loses double stochasticity — the
+//! executor then auto-selects the push-sum–corrected combine
+//! ([`CombineMode`]): mass shares split over the live out-edges, summed
+//! on receipt, estimate read as the ratio `s/w` (arXiv:1808.05933).
+//!
+//! Drive it with `ddl async` / `ddl chaos` (TOML `[async]` / `[chaos]`,
+//! see [`crate::config::experiment::AsyncConfig`]), benchmark it with
+//! `cargo bench --bench bench_async` and `--bench bench_chaos`, and see
+//! `ARCHITECTURE.md` (repo root) for where this executor sits in the
+//! executor matrix.
 
 use crate::error::{DdlError, Result};
 use crate::graph::Graph;
 use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
+use crate::net::chaos::{ChaosPolicy, ChaosStats, CombineMode, FaultSchedule};
 use crate::net::message::MessageStats;
 use crate::ops::project::clip_linf;
 use crate::rng::Pcg64;
@@ -158,6 +184,16 @@ pub struct AsyncParams {
     /// a pure function of the event clock, so replay determinism is
     /// untouched. `0` (default) = static scenario.
     pub drift_period_us: u64,
+    /// Fault-injection schedule (chaos layer). The default **empty**
+    /// schedule keeps the executor bit-for-bit on the fault-free path:
+    /// no chaos branches, no chaos events, no chaos randomness.
+    pub chaos: FaultSchedule,
+    /// Graceful-degradation knobs (receive timeout, retry/backoff);
+    /// consulted only when [`Self::chaos`] is non-empty.
+    pub chaos_policy: ChaosPolicy,
+    /// Combine rule; `Auto` (default) resolves at construction to
+    /// push-sum iff the schedule contains directed faults.
+    pub combine: CombineMode,
 }
 
 impl Default for AsyncParams {
@@ -174,6 +210,9 @@ impl Default for AsyncParams {
             slow_links: Vec::new(),
             slow_link_factor: 10.0,
             drift_period_us: 0,
+            chaos: FaultSchedule::default(),
+            chaos_policy: ChaosPolicy::default(),
+            combine: CombineMode::Auto,
         }
     }
 }
@@ -212,6 +251,24 @@ impl AsyncParams {
         self.slow_factor = factor;
         self
     }
+
+    /// Builder-style fault schedule (chaos layer).
+    pub fn with_chaos(mut self, schedule: FaultSchedule) -> Self {
+        self.chaos = schedule;
+        self
+    }
+
+    /// Builder-style degradation policy (receive timeout, retry/backoff).
+    pub fn with_chaos_policy(mut self, policy: ChaosPolicy) -> Self {
+        self.chaos_policy = policy;
+        self
+    }
+
+    /// Builder-style combine rule.
+    pub fn with_combine(mut self, mode: CombineMode) -> Self {
+        self.combine = mode;
+        self
+    }
 }
 
 /// Discrete-event kinds. ψ payloads ride inside the event queue — the
@@ -220,8 +277,16 @@ enum EventKind {
     /// Agent finished computing (adapt of its next iteration).
     AdaptDone { agent: usize },
     /// A ψ message reaches `to`; `nb_slot` is the sender's position in
-    /// `to`'s sorted neighbor list.
-    Deliver { to: usize, nb_slot: usize, iter: usize, psi: Vec<f32> },
+    /// `to`'s sorted neighbor list. `wshare` is the push-sum weight share
+    /// riding with the ψ share (0 and never read under Metropolis).
+    Deliver { to: usize, nb_slot: usize, iter: usize, psi: Vec<f32>, wshare: f32 },
+    /// Chaos: re-attempt a send that found its link down (`edge` indexes
+    /// the sender's neighbor list). Never scheduled on a fault-free run.
+    Retry { from: usize, edge: usize, iter: usize, psi: Vec<f32>, wshare: f32, attempt: u32 },
+    /// Chaos: receive timeout — if the agent is still gated on `iter`,
+    /// combine anyway with stale-ψ fallback / neighbor exclusion. Never
+    /// scheduled on a fault-free run.
+    GateTimeout { agent: usize, iter: usize },
 }
 
 struct Event {
@@ -258,8 +323,15 @@ struct AgentState {
     /// Event time at which [`Self::waiting`] was last set (gate-wait
     /// accounting).
     wait_since: u64,
-    /// Received ψ per neighbor slot: `(iter, psi)`, pruned at combine.
-    inbox: Vec<Vec<(usize, Vec<f32>)>>,
+    /// Received ψ per neighbor slot: `(iter, psi, wshare)`, pruned at
+    /// combine (Metropolis keeps the freshest; push-sum drains the mass).
+    inbox: Vec<Vec<(usize, Vec<f32>, f32)>>,
+    /// Freshest iteration ever delivered per neighbor slot (monotone,
+    /// survives draining — the push-sum gate reads this, since pending
+    /// mass alone cannot express freshness).
+    seen: Vec<Option<usize>>,
+    /// Push-sum scalar weight (stays 1 under Metropolis).
+    w: f32,
     /// Dedicated compute-delay stream.
     rng: Pcg64,
     /// Compute-delay multiplier (static straggler scenarios).
@@ -303,6 +375,17 @@ pub struct AsyncNetwork {
     /// combine gated on the staleness bound (summed over agents; the τ
     /// controller's widen signal).
     gate_wait_us: u64,
+    /// Dedicated chaos coin stream (message drops) — never interleaves
+    /// with the delay streams, so an empty schedule leaves them untouched.
+    chaos_rng: Pcg64,
+    /// Cached `!params.chaos.is_empty()`: false ⇒ the fault-free fast
+    /// path, bit-for-bit the pre-chaos executor.
+    chaos_active: bool,
+    /// Resolved combine rule (`Auto` collapses at construction).
+    pushsum: bool,
+    /// True when `Auto` upgraded Metropolis → push-sum (directed faults).
+    auto_pushsum: bool,
+    chaos_stats: ChaosStats,
 }
 
 impl AsyncNetwork {
@@ -324,6 +407,15 @@ impl AsyncNetwork {
                 return Err(DdlError::Config(format!("slow agent {k} out of range")));
             }
         }
+        params.chaos.validate(n)?;
+        let (pushsum, auto_pushsum) = match params.combine {
+            CombineMode::PushSum => (true, false),
+            CombineMode::Metropolis => (false, false),
+            CombineMode::Auto => {
+                let up = params.chaos.has_directed_faults();
+                (up, up)
+            }
+        };
         let theta = crate::infer::diffusion::build_theta(n, informed)?;
         let mut root = Pcg64::new(params.seed);
         let mut tag = 0u64;
@@ -337,6 +429,8 @@ impl AsyncNetwork {
                 waiting: false,
                 wait_since: 0,
                 inbox: vec![Vec::new(); graph.degree(k)],
+                seen: vec![None; graph.degree(k)],
+                w: 1.0,
                 rng: root.split(tag),
                 slow,
             });
@@ -357,18 +451,17 @@ impl AsyncNetwork {
                     .iter()
                     .any(|&(a, b)| (a == k && b == nb) || (a == nb && b == k));
                 slows.push(if slowed { params.slow_link_factor } else { 1.0 });
-                revs.push(
-                    graph
-                        .neighbors(nb)
-                        .iter()
-                        .position(|&x| x == k)
-                        .expect("graph adjacency must be symmetric"),
-                );
+                let rev = graph.neighbors(nb).iter().position(|&x| x == k).ok_or_else(|| {
+                    DdlError::Shape(format!("graph adjacency must be symmetric ({k} ↔ {nb})"))
+                })?;
+                revs.push(rev);
             }
             link_rngs.push(rngs);
             link_slow.push(slows);
             rev_slot.push(revs);
         }
+        let chaos_rng = Pcg64::new(params.chaos.seed ^ 0xC4A0_55ED);
+        let chaos_active = !params.chaos.is_empty();
         Ok(AsyncNetwork {
             agents,
             graph,
@@ -393,6 +486,11 @@ impl AsyncNetwork {
             max_staleness: 0,
             last_combine_us: 0,
             gate_wait_us: 0,
+            chaos_rng,
+            chaos_active,
+            pushsum,
+            auto_pushsum,
+            chaos_stats: ChaosStats::default(),
         })
     }
 
@@ -512,17 +610,29 @@ impl AsyncNetwork {
             if next_t > t_stop_us {
                 return Ok(false);
             }
-            let Reverse(ev) = self.heap.pop().expect("peeked event must pop");
+            let Some(Reverse(ev)) = self.heap.pop() else {
+                return Err(DdlError::Runtime(
+                    "async executor event heap drained between peek and pop".into(),
+                ));
+            };
             self.now_us = self.now_us.max(ev.t);
             match ev.kind {
                 EventKind::AdaptDone { agent } => {
                     self.on_adapt_done(agent, ev.t, dict, task, x)
                 }
-                EventKind::Deliver { to, nb_slot, iter, psi } => {
-                    self.agents[to].inbox[nb_slot].push((iter, psi));
+                EventKind::Deliver { to, nb_slot, iter, psi, wshare } => {
+                    let ag = &mut self.agents[to];
+                    ag.seen[nb_slot] = Some(ag.seen[nb_slot].map_or(iter, |s| s.max(iter)));
+                    ag.inbox[nb_slot].push((iter, psi, wshare));
                     if self.agents[to].waiting {
-                        self.try_combine(to, ev.t, task);
+                        self.try_combine(to, ev.t, task, false);
                     }
+                }
+                EventKind::Retry { from, edge, iter, psi, wshare, attempt } => {
+                    self.send_psi(from, edge, iter, psi, wshare, ev.t, attempt);
+                }
+                EventKind::GateTimeout { agent, iter } => {
+                    self.on_gate_timeout(agent, iter, ev.t, task);
                 }
             }
         }
@@ -530,7 +640,10 @@ impl AsyncNetwork {
     }
 
     /// Adapt (Eq. 31a) for agent `k`'s iteration `done`, then ship ψ to
-    /// every neighbor and attempt the gated combine.
+    /// every neighbor and attempt the gated combine. Under chaos: a
+    /// crashed agent defers the whole step to recovery (the lost compute
+    /// is re-run and ψ rebroadcast — the re-join resync), and push-sum
+    /// splits the re-massed ψ over the *live* out-edges only.
     fn on_adapt_done(
         &mut self,
         k: usize,
@@ -539,8 +652,13 @@ impl AsyncNetwork {
         task: &TaskSpec,
         x: &[f32],
     ) {
+        if self.chaos_active && !self.params.chaos.agent_alive(k, t) {
+            let rec = self.params.chaos.agent_recover_us(k, t);
+            self.chaos_stats.crash_deferrals += 1;
+            self.push_event(rec.max(t.saturating_add(1)), EventKind::AdaptDone { agent: k });
+            return;
+        }
         let n = self.agents.len();
-        let m = self.m;
         let cf_over_n = task.conj_grad_scale() / n as f32;
         let inv_delta = 1.0 / task.delta();
         let mu = self.mu;
@@ -557,82 +675,166 @@ impl AsyncNetwork {
         // Ship ψ along every outgoing edge (one message per directed edge
         // per iteration — same totals as BSP at equal iteration counts).
         let iter = self.agents[k].done;
-        for j in 0..self.graph.degree(k) {
-            let delay = self.sample_link(k, j);
-            let nb = self.graph.neighbors(k)[j];
-            let slot = self.rev_slot[k][j];
-            let psi = self.agents[k].psi.clone();
-            self.stats.record_exchange(1, m);
-            self.push_event(
-                t.saturating_add(delay),
-                EventKind::Deliver { to: nb, nb_slot: slot, iter, psi },
-            );
+        if self.pushsum {
+            // Push-sum: re-mass the adapt output (s = value·w), then split
+            // s and w uniformly over the live out-edges plus self —
+            // column-stochastic over whatever is currently up.
+            let w = self.agents[k].w;
+            for p in self.agents[k].psi.iter_mut() {
+                *p *= w;
+            }
+            let live: Vec<usize> = (0..self.graph.degree(k))
+                .filter(|&j| {
+                    !self.chaos_active
+                        || self.params.chaos.link_up(k, self.graph.neighbors(k)[j], t)
+                })
+                .collect();
+            let c = 1.0 / (live.len() + 1) as f32;
+            for j in live {
+                let share: Vec<f32> = self.agents[k].psi.iter().map(|v| c * v).collect();
+                self.send_psi(k, j, iter, share, c * w, t, 0);
+            }
+            let ag = &mut self.agents[k];
+            for p in ag.psi.iter_mut() {
+                *p *= c;
+            }
+            ag.w = c * w;
+        } else {
+            for j in 0..self.graph.degree(k) {
+                let psi = self.agents[k].psi.clone();
+                self.send_psi(k, j, iter, psi, 0.0, t, 0);
+            }
         }
         self.agents[k].waiting = true;
         self.agents[k].wait_since = t;
-        self.try_combine(k, t, task);
+        if self.chaos_active {
+            // Backstop liveness: under faults a gated combine never waits
+            // past the receive timeout, so the event loop cannot stall.
+            self.push_event(
+                t.saturating_add(self.params.chaos_policy.gate_timeout_us.max(1)),
+                EventKind::GateTimeout { agent: k, iter },
+            );
+        }
+        self.try_combine(k, t, task, false);
     }
 
-    /// Gated combine: needs, from every neighbor, a received ψ of
-    /// iteration in `[done − τ, done]`; uses the freshest such ψ.
-    fn try_combine(&mut self, k: usize, t: u64, task: &TaskSpec) {
+    /// Transmit one ψ (or push-sum share) along edge `edge` of `from`,
+    /// honoring the chaos layer: a down link schedules a bounded-backoff
+    /// retry (push-sum shares retry indefinitely — abandoning one would
+    /// leak mass), an active drop window may lose the transmission (coin
+    /// from the dedicated chaos stream). The fault-free path is exactly
+    /// the pre-chaos send: one link-delay draw, one stats record, one
+    /// `Deliver`.
+    fn send_psi(
+        &mut self,
+        from: usize,
+        edge: usize,
+        iter: usize,
+        psi: Vec<f32>,
+        wshare: f32,
+        t: u64,
+        attempt: u32,
+    ) {
+        let nb = self.graph.neighbors(from)[edge];
+        if self.chaos_active {
+            if !self.params.chaos.link_up(from, nb, t) {
+                if attempt < self.params.chaos_policy.max_retries || self.pushsum {
+                    let backoff = self
+                        .params
+                        .chaos_policy
+                        .retry_backoff_us
+                        .max(1)
+                        .saturating_mul(1u64 << attempt.min(20));
+                    self.chaos_stats.retries += 1;
+                    self.push_event(
+                        t.saturating_add(backoff),
+                        EventKind::Retry { from, edge, iter, psi, wshare, attempt: attempt + 1 },
+                    );
+                } else {
+                    self.chaos_stats.abandoned += 1;
+                }
+                return;
+            }
+            let p = self.params.chaos.drop_prob(t);
+            if p > 0.0 && self.chaos_rng.next_f64() < p {
+                // Transmitted but lost: the wire carried it (accounted),
+                // the receiver never sees it, the sender never knows.
+                self.stats.record_exchange(1, self.m);
+                self.chaos_stats.dropped += 1;
+                return;
+            }
+        }
+        let delay = self.sample_link(from, edge);
+        let slot = self.rev_slot[from][edge];
+        self.stats.record_exchange(1, self.m);
+        self.push_event(
+            t.saturating_add(delay),
+            EventKind::Deliver { to: nb, nb_slot: slot, iter, psi, wshare },
+        );
+    }
+
+    /// Chaos receive timeout: an agent still gated on iteration `iter`
+    /// stops waiting and combines with whatever it has. Stale timeouts
+    /// (the combine already happened) are ignored; a timeout landing in a
+    /// crash window re-arms at recovery.
+    fn on_gate_timeout(&mut self, k: usize, iter: usize, t: u64, task: &TaskSpec) {
+        if !self.agents[k].waiting || self.agents[k].done != iter {
+            return;
+        }
+        if !self.params.chaos.agent_alive(k, t) {
+            let rec = self.params.chaos.agent_recover_us(k, t);
+            self.push_event(
+                rec.max(t.saturating_add(1)),
+                EventKind::GateTimeout { agent: k, iter },
+            );
+            return;
+        }
+        self.chaos_stats.forced_combines += 1;
+        self.try_combine(k, t, task, true);
+    }
+
+    /// Gated combine: needs, from every *reachable* neighbor, a ψ fresh
+    /// under the staleness bound; unreachable neighbors (link down or
+    /// crashed, chaos only) are waived up-front — their slots are served
+    /// by the stale-ψ fallback or excluded. `force` (the chaos receive
+    /// timeout) waives the gate entirely. Fault-free, this is exactly the
+    /// pre-chaos gate.
+    fn try_combine(&mut self, k: usize, t: u64, task: &TaskSpec, force: bool) {
         let i = self.agents[k].done;
         let tau = self.params.tau;
-        // Gate check first (no partial state changes on failure).
-        for slots in &self.agents[k].inbox {
-            let best = slots.iter().filter(|e| e.0 <= i).map(|e| e.0).max();
-            match best {
-                Some(b) if b + tau >= i => {}
-                _ => return,
-            }
-        }
-        let akk = self.weights.get(k, k);
-        let clip = task.dual_clip();
-        let m = self.m;
-        // Combine: a_{kk}ψ_k first, then neighbors in ascending order —
-        // exactly the accumulation order of `BspNetwork::run` (its inbox
-        // fills in ascending sender order).
-        let neighbors = self.graph.neighbors(k);
-        let mut staleness_max = 0usize;
-        let waited_us;
-        {
-            let ag = &mut self.agents[k];
-            // Gate-wait accounting: time between the adapt finishing and
-            // this combine passing the staleness gate (0 when the gate
-            // passed immediately).
-            waited_us = t.saturating_sub(ag.wait_since);
-            for idx in 0..m {
-                ag.nu[idx] = akk * ag.psi[idx];
-            }
-            for (j, &nb) in neighbors.iter().enumerate() {
-                let slots = &mut ag.inbox[j];
-                let used = slots
-                    .iter()
-                    .filter(|e| e.0 <= i)
-                    .max_by_key(|e| e.0)
-                    .map(|e| e.0)
-                    .expect("gate checked above");
-                let pos = slots.iter().position(|e| e.0 == used).expect("entry exists");
-                let w = self.weights.get(nb, k);
-                {
-                    let src = &slots[pos].1;
-                    for idx in 0..m {
-                        ag.nu[idx] += w * src[idx];
+        if !force {
+            // Gate check first (no partial state changes on failure).
+            let neighbors = self.graph.neighbors(k);
+            for (j, slots) in self.agents[k].inbox.iter().enumerate() {
+                if self.chaos_active {
+                    let nb = neighbors[j];
+                    if !(self.params.chaos.link_up(nb, k, t)
+                        && self.params.chaos.agent_alive(nb, t))
+                    {
+                        continue; // unreachable: waived, degraded below
                     }
                 }
-                staleness_max = staleness_max.max(i - used);
-                // Entries older than the one just used can never be
-                // selected again (the local iteration only increases).
-                slots.retain(|e| e.0 >= used);
+                let fresh = if self.pushsum {
+                    // Push-sum gates on the freshest iteration ever seen
+                    // from this neighbor: shares are drained at combine,
+                    // so pending mass alone cannot express freshness.
+                    self.agents[k].seen[j].is_some_and(|s| s + tau >= i)
+                } else {
+                    matches!(
+                        slots.iter().filter(|e| e.0 <= i).map(|e| e.0).max(),
+                        Some(b) if b + tau >= i
+                    )
+                };
+                if !fresh {
+                    return;
+                }
             }
-            if let Some(b) = clip {
-                clip_linf(&mut ag.nu, b);
-            }
-            ag.waiting = false;
-            ag.done = i + 1;
         }
-        self.max_staleness = self.max_staleness.max(staleness_max);
-        self.gate_wait_us += waited_us;
+        if self.pushsum {
+            self.combine_pushsum(k, i, t, task);
+        } else {
+            self.combine_metropolis(k, i, t, task);
+        }
         self.last_combine_us = t;
         // Round tracking: one round per completed network-wide wave.
         self.level_counts[i] -= 1;
@@ -649,6 +851,152 @@ impl AsyncNetwork {
         }
     }
 
+    /// Metropolis combine for agent `k`'s iteration `i`: freshest ψ per
+    /// neighbor. Slots whose freshest ψ is staler than τ fall back to it
+    /// anyway (accounted as fallback, not in the τ invariant); slots that
+    /// never delivered are excluded and the weights renormalized. On the
+    /// fault-free path neither case can occur — the arithmetic is the
+    /// pre-chaos combine bit-for-bit.
+    fn combine_metropolis(&mut self, k: usize, i: usize, t: u64, task: &TaskSpec) {
+        let akk = self.weights.get(k, k);
+        let clip = task.dual_clip();
+        let m = self.m;
+        // Combine: a_{kk}ψ_k first, then neighbors in ascending order —
+        // exactly the accumulation order of `BspNetwork::run` (its inbox
+        // fills in ascending sender order).
+        let neighbors = self.graph.neighbors(k);
+        let mut staleness_max = 0usize;
+        let mut fallbacks = 0usize;
+        let mut fallback_stale = 0usize;
+        let mut excluded = 0usize;
+        let waited_us;
+        {
+            let ag = &mut self.agents[k];
+            // Gate-wait accounting: time between the adapt finishing and
+            // this combine passing the staleness gate (0 when the gate
+            // passed immediately).
+            waited_us = t.saturating_sub(ag.wait_since);
+            let mut wsum = akk;
+            for idx in 0..m {
+                ag.nu[idx] = akk * ag.psi[idx];
+            }
+            for (j, &nb) in neighbors.iter().enumerate() {
+                let slots = &mut ag.inbox[j];
+                let mut best = None;
+                for e in slots.iter() {
+                    if e.0 <= i && best.map_or(true, |b| e.0 > b) {
+                        best = Some(e.0);
+                    }
+                }
+                let used = match best {
+                    Some(u) if u + self.params.tau >= i => {
+                        staleness_max = staleness_max.max(i - u);
+                        u
+                    }
+                    Some(u) => {
+                        // Stale-ψ fallback: reachable data is too old for
+                        // the gate, but beats stalling or dropping the
+                        // neighbor's contribution.
+                        fallbacks += 1;
+                        fallback_stale = fallback_stale.max(i - u);
+                        u
+                    }
+                    None => {
+                        // Never heard from this neighbor: exclude it and
+                        // renormalize the combine below.
+                        excluded += 1;
+                        continue;
+                    }
+                };
+                let w = self.weights.get(nb, k);
+                wsum += w;
+                if let Some(e) = slots.iter().find(|e| e.0 == used) {
+                    let src = &e.1;
+                    for idx in 0..m {
+                        ag.nu[idx] += w * src[idx];
+                    }
+                }
+                // Entries older than the one just used can never be
+                // selected again (the local iteration only increases).
+                slots.retain(|e| e.0 >= used);
+            }
+            if excluded > 0 && wsum > 0.0 {
+                let inv = 1.0 / wsum;
+                for idx in 0..m {
+                    ag.nu[idx] *= inv;
+                }
+            }
+            if let Some(b) = clip {
+                clip_linf(&mut ag.nu, b);
+            }
+            ag.waiting = false;
+            ag.done = i + 1;
+        }
+        self.max_staleness = self.max_staleness.max(staleness_max);
+        self.chaos_stats.stale_fallbacks += fallbacks;
+        self.chaos_stats.excluded_neighbors += excluded;
+        self.chaos_stats.max_fallback_staleness =
+            self.chaos_stats.max_fallback_staleness.max(fallback_stale);
+        self.gate_wait_us += waited_us;
+    }
+
+    /// Push-sum combine for agent `k`'s iteration `i`: sum the retained
+    /// self-share with **every** pending share (mass conservation — shares
+    /// are drained, not sampled), then read the estimate as the ratio
+    /// `s / w`. Freshness bookkeeping runs off the `seen` watermarks.
+    fn combine_pushsum(&mut self, k: usize, i: usize, t: u64, task: &TaskSpec) {
+        let clip = task.dual_clip();
+        let m = self.m;
+        let mut staleness_max = 0usize;
+        let mut fallbacks = 0usize;
+        let mut fallback_stale = 0usize;
+        let waited_us;
+        {
+            let ag = &mut self.agents[k];
+            waited_us = t.saturating_sub(ag.wait_since);
+            let mut w_acc = ag.w;
+            for idx in 0..m {
+                ag.nu[idx] = ag.psi[idx];
+            }
+            for (j, slots) in ag.inbox.iter_mut().enumerate() {
+                match ag.seen[j] {
+                    Some(s) if s + self.params.tau >= i => {
+                        staleness_max = staleness_max.max(i.saturating_sub(s));
+                    }
+                    Some(s) => {
+                        fallbacks += 1;
+                        fallback_stale = fallback_stale.max(i - s);
+                    }
+                    None => {}
+                }
+                for e in slots.iter() {
+                    for idx in 0..m {
+                        ag.nu[idx] += e.1[idx];
+                    }
+                    w_acc += e.2;
+                }
+                slots.clear();
+            }
+            // The estimate is the ratio; the mass scalar carries over to
+            // the next adapt's re-massing.
+            let inv = 1.0 / w_acc.max(1e-12);
+            for idx in 0..m {
+                ag.nu[idx] *= inv;
+            }
+            ag.w = w_acc;
+            if let Some(b) = clip {
+                clip_linf(&mut ag.nu, b);
+            }
+            ag.waiting = false;
+            ag.done = i + 1;
+        }
+        self.max_staleness = self.max_staleness.max(staleness_max);
+        self.chaos_stats.stale_fallbacks += fallbacks;
+        self.chaos_stats.max_fallback_staleness =
+            self.chaos_stats.max_fallback_staleness.max(fallback_stale);
+        self.gate_wait_us += waited_us;
+    }
+
     /// Swap the staleness bound mid-run (the τ controller's actuator,
     /// `ddl async --adaptive-tau`). Call between [`Self::run_clamped`]
     /// segments at a simulated time `t_us` at or past the last processed
@@ -662,7 +1010,7 @@ impl AsyncNetwork {
         if widened {
             for k in 0..self.agents.len() {
                 if self.agents[k].waiting {
-                    self.try_combine(k, t_us, task);
+                    self.try_combine(k, t_us, task, false);
                 }
             }
         }
@@ -743,6 +1091,32 @@ impl AsyncNetwork {
     /// Traffic statistics (see the accounting note in the module docs).
     pub fn stats(&self) -> MessageStats {
         self.stats
+    }
+
+    /// Chaos-layer counters (all zero on a fault-free run).
+    pub fn chaos_stats(&self) -> ChaosStats {
+        self.chaos_stats
+    }
+
+    /// Resolved combine rule (`Auto` collapses at construction; never
+    /// returns `Auto`).
+    pub fn combine_mode(&self) -> CombineMode {
+        if self.pushsum {
+            CombineMode::PushSum
+        } else {
+            CombineMode::Metropolis
+        }
+    }
+
+    /// True when `Auto` upgraded the combine to push-sum because the
+    /// schedule contains directed faults.
+    pub fn auto_pushsum(&self) -> bool {
+        self.auto_pushsum
+    }
+
+    /// The installed fault schedule.
+    pub fn fault_schedule(&self) -> &FaultSchedule {
+        &self.params.chaos
     }
 
     /// Normalized mean-square deviation of the agents' duals from a
@@ -1125,6 +1499,196 @@ mod tests {
         }
         assert_eq!(DelayDist::Zero.sample(&mut rng), 0);
         assert_eq!(DelayDist::Constant { us: 7 }.sample(&mut rng), 7);
+    }
+
+    /// An **empty** fault schedule (even with a nonzero chaos seed) is
+    /// bit-for-bit the fault-free executor: trajectories, stats, clock,
+    /// and zero chaos counters.
+    #[test]
+    fn empty_fault_schedule_is_bitwise_fault_free() {
+        let (n, m, iters) = (9, 6, 35);
+        let (dict, g, a, x) = problem(n, m, 0xC4_01, &Topology::ErdosRenyi { p: 0.5 });
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Exp { mean_us: 90.0 }, DelayDist::Exp { mean_us: 25.0 })
+            .with_seed(55);
+        let mut plain = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+        plain.run(&dict, &task, &x, params).unwrap();
+        let mut chaos = AsyncNetwork::new(
+            g,
+            a,
+            m,
+            None,
+            ap.with_chaos(FaultSchedule::new(0xDEAD_BEEF)),
+        )
+        .unwrap();
+        chaos.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(plain.nu(k), chaos.nu(k), "agent {k}");
+        }
+        assert_eq!(plain.stats(), chaos.stats());
+        assert_eq!(plain.sim_time_us(), chaos.sim_time_us());
+        assert_eq!(chaos.chaos_stats(), ChaosStats::default());
+        assert_eq!(chaos.combine_mode(), CombineMode::Metropolis);
+    }
+
+    /// A healing partition: the run completes (no stall), replays
+    /// bit-identically, and the degradation counters light up.
+    #[test]
+    fn healing_partition_completes_and_replays() {
+        let (n, m, iters) = (10, 5, 60);
+        let (dict, g, a, x) = problem(n, m, 0xC4_02, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+        let params = DiffusionParams::new(0.25, iters);
+        let side = FaultSchedule::split_side(n, 0.4);
+        let schedule = FaultSchedule::new(3).with_partition(side, 2_000, 12_000);
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Constant { us: 20 })
+            .with_seed(8)
+            .with_chaos(schedule);
+        let run = || {
+            let mut net =
+                AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let n1 = run();
+        let n2 = run();
+        for k in 0..n {
+            assert_eq!(n1.nu(k), n2.nu(k), "agent {k}");
+            assert_eq!(n1.iters_done(k), iters);
+        }
+        assert_eq!(n1.stats(), n2.stats());
+        assert_eq!(n1.sim_time_us(), n2.sim_time_us());
+        assert_eq!(n1.chaos_stats(), n2.chaos_stats());
+        let cs = n1.chaos_stats();
+        assert!(
+            cs.forced_combines > 0 || cs.stale_fallbacks > 0,
+            "a 10 ms partition at 100 µs compute must trip the degradation path: {cs:?}"
+        );
+        assert!(n1.max_staleness_observed() <= 2, "τ invariant must survive chaos");
+    }
+
+    /// Crash/recovery: the agent re-joins, everyone finishes, and the
+    /// crash deferral is visible.
+    #[test]
+    fn crash_recovery_rejoins() {
+        let (n, m, iters) = (8, 4, 50);
+        let (dict, g, a, x) = problem(n, m, 0xC4_03, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        let schedule = FaultSchedule::new(1).with_crash(3, 500, 6_000);
+        let ap = AsyncParams::default()
+            .with_tau(3)
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Constant { us: 10 })
+            .with_chaos(schedule);
+        let mut net = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        net.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(net.iters_done(k), iters, "agent {k} must finish despite the crash");
+        }
+        assert!(net.chaos_stats().crash_deferrals > 0);
+        assert!(net.sim_time_us() >= 6_000, "the crashed agent's re-join gates completion");
+    }
+
+    /// Message drops degrade but never wedge the run, and the drop coins
+    /// come from a dedicated stream (replays stay bit-identical).
+    #[test]
+    fn drop_window_degrades_gracefully() {
+        let (n, m, iters) = (8, 4, 40);
+        let (dict, g, a, x) = problem(n, m, 0xC4_04, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        let schedule = FaultSchedule::new(77).with_drops(0.4, 0, u64::MAX);
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Constant { us: 10 })
+            .with_chaos(schedule);
+        let run = || {
+            let mut net =
+                AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let n1 = run();
+        let n2 = run();
+        assert!(n1.chaos_stats().dropped > 0, "40% drops must lose messages");
+        for k in 0..n {
+            assert_eq!(n1.nu(k), n2.nu(k), "agent {k}");
+            assert_eq!(n1.iters_done(k), iters);
+        }
+        assert_eq!(n1.chaos_stats(), n2.chaos_stats());
+    }
+
+    /// Directed outage auto-upgrades `Auto` → push-sum; a forced
+    /// Metropolis run under the same schedule stays Metropolis. On a
+    /// *symmetric* fault-free problem, forced push-sum still converges to
+    /// the same dual (sanity for the corrected combine).
+    #[test]
+    fn pushsum_auto_select_and_fault_free_convergence() {
+        let (n, m, iters) = (10, 5, 400);
+        let (dict, g, a, x) = problem(n, m, 0xC4_05, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+
+        // Auto + directed fault → push-sum; forced Metropolis respected.
+        let directed = FaultSchedule::new(0).with_link_down(0, 1, 0, 1_000);
+        let ap_auto = AsyncParams::default().with_chaos(directed.clone()).with_tau(2);
+        let net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap_auto).unwrap();
+        assert_eq!(net.combine_mode(), CombineMode::PushSum);
+        assert!(net.auto_pushsum());
+        let ap_forced = AsyncParams::default()
+            .with_chaos(directed)
+            .with_combine(CombineMode::Metropolis);
+        let net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap_forced).unwrap();
+        assert_eq!(net.combine_mode(), CombineMode::Metropolis);
+        assert!(!net.auto_pushsum());
+
+        // Fault-free forced push-sum reaches the same fixed point the
+        // Metropolis combine does (not bitwise — different weights — but
+        // the same dual optimum).
+        let exact = crate::infer::exact_dual(&dict, &task, &x, 1e-6, 20_000).unwrap();
+        let mut ps = AsyncNetwork::new(
+            g,
+            a,
+            m,
+            None,
+            AsyncParams::default().with_tau(1).with_combine(CombineMode::PushSum),
+        )
+        .unwrap();
+        ps.run(&dict, &task, &x, params).unwrap();
+        let msd = ps.msd_vs(&exact.nu);
+        assert!(msd < 1e-3, "fault-free push-sum should converge: msd {msd}");
+    }
+
+    /// Under edge churn the τ invariant holds for gated combines —
+    /// fallback staleness is accounted separately.
+    #[test]
+    fn churn_respects_tau_invariant() {
+        let (n, m, iters) = (12, 4, 80);
+        let (dict, g, a, x) = problem(n, m, 0xC4_06, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.2, iters);
+        let schedule =
+            FaultSchedule::new(5).with_edge_churn(&g, 12, 3_000, 30_000, 0xC4_06);
+        let ap = AsyncParams::default()
+            .with_tau(3)
+            .with_delays(DelayDist::Exp { mean_us: 80.0 }, DelayDist::Exp { mean_us: 15.0 })
+            .with_seed(21)
+            .with_chaos(schedule);
+        let mut net = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        net.run(&dict, &task, &x, params).unwrap();
+        assert!(
+            net.max_staleness_observed() <= 3,
+            "gated staleness {} exceeded τ",
+            net.max_staleness_observed()
+        );
+        for k in 0..n {
+            assert_eq!(net.iters_done(k), iters);
+        }
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Deterministic fault injection for the async executor: the chaos layer.
+//!
+//! A [`FaultSchedule`] is a declarative list of fault windows — edge
+//! up/down churn, network partitions that heal, directed link outages,
+//! message-drop windows, and agent crash/recovery windows. Every query is
+//! a **pure function of (schedule, sim-time)**: the schedule is built
+//! up-front (optionally from a seeded generator, itself a pure function of
+//! its arguments), so a chaos run replays bit-identically for a given
+//! (seed, schedule) and an **empty schedule degenerates bit-for-bit to the
+//! fault-free trajectory** — the executor takes no chaos branch, draws no
+//! chaos randomness, and schedules no chaos events
+//! (`tests/async_parity.rs`).
+//!
+//! ## Fault model
+//!
+//! * [`Fault::EdgeDown`] — an undirected edge is down for a window; both
+//!   directions fail. Models flaky links (churn).
+//! * [`Fault::LinkDown`] — **one direction** of an edge is down. This is
+//!   the time-varying *digraph* setting of arXiv:1808.05933 /
+//!   arXiv:1612.07335: effective connectivity loses symmetry, Metropolis
+//!   weights are no longer doubly stochastic over the live topology, and
+//!   plain diffusion acquires a consensus bias. The executor auto-selects
+//!   the push-sum–corrected combine ([`CombineMode::PushSum`]) when a
+//!   schedule contains directed faults.
+//! * [`Fault::Partition`] — a bipartition of the agents; every edge
+//!   crossing the cut is down for the window, then **heals**.
+//! * [`Fault::Crash`] — an agent stops computing for a window, then
+//!   recovers and **re-joins**: its interrupted adapt is re-run from its
+//!   retained state and its ψ re-broadcast (the resync). Its mailbox
+//!   keeps accepting ψ while it is down (state survives the crash; this
+//!   models a process stall/restart, not disk loss).
+//! * [`Fault::Drop`] — each physically transmitted message in the window
+//!   is lost i.i.d. with probability `p` (coins come from the schedule's
+//!   dedicated chaos stream, never from the executor's delay streams).
+//!
+//! ## Degradation policy
+//!
+//! [`ChaosPolicy`] holds the executor's graceful-degradation knobs: a
+//! per-receive gate timeout (after which a gated combine proceeds with a
+//! stale-ψ fallback or excludes the unreachable neighbor), and bounded
+//! retry/backoff for sends that hit a down link.
+
+use crate::error::{DdlError, Result};
+use crate::graph::Graph;
+use crate::rng::Pcg64;
+
+/// One fault window. All windows are half-open `[from_us, until_us)` on
+/// the simulated microsecond clock.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Undirected edge `{u, v}` is down (both directions).
+    EdgeDown { u: usize, v: usize, from_us: u64, until_us: u64 },
+    /// Directed link `from → to` is down (the reverse stays up) — the
+    /// asymmetric outage that motivates push-sum.
+    LinkDown { from: usize, to: usize, from_us: u64, until_us: u64 },
+    /// Every edge crossing the bipartition given by `side` is down;
+    /// heals at `until_us`. `side.len()` must equal the agent count.
+    Partition { side: Vec<bool>, from_us: u64, until_us: u64 },
+    /// Agent stops computing; recovers (re-joins) at `until_us`.
+    Crash { agent: usize, from_us: u64, until_us: u64 },
+    /// Transmitted messages are dropped i.i.d. with probability `p`.
+    Drop { p: f64, from_us: u64, until_us: u64 },
+}
+
+#[inline]
+fn covers(from_us: u64, until_us: u64, t: u64) -> bool {
+    from_us <= t && t < until_us
+}
+
+/// Deterministic fault schedule (see the module docs). The default value
+/// is the **empty** schedule: no faults, no chaos branches, bit-for-bit
+/// the fault-free executor.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSchedule {
+    /// Seed of the chaos coin stream (message-drop decisions). Dedicated:
+    /// the executor's delay streams are never touched by fault handling.
+    pub seed: u64,
+    faults: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    /// Empty schedule with a chaos-stream seed.
+    pub fn new(seed: u64) -> Self {
+        FaultSchedule { seed, faults: Vec::new() }
+    }
+
+    /// True when no fault window exists — the executor takes the
+    /// fault-free path bit-for-bit.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The fault windows, in insertion order.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Add an undirected edge-down window.
+    pub fn with_edge_down(mut self, u: usize, v: usize, from_us: u64, until_us: u64) -> Self {
+        self.faults.push(Fault::EdgeDown { u, v, from_us, until_us });
+        self
+    }
+
+    /// Add a directed link-down window (`from → to` only).
+    pub fn with_link_down(mut self, from: usize, to: usize, from_us: u64, until_us: u64) -> Self {
+        self.faults.push(Fault::LinkDown { from, to, from_us, until_us });
+        self
+    }
+
+    /// Add a healing partition given the cut side.
+    pub fn with_partition(mut self, side: Vec<bool>, from_us: u64, until_us: u64) -> Self {
+        self.faults.push(Fault::Partition { side, from_us, until_us });
+        self
+    }
+
+    /// Add an agent crash/recovery window.
+    pub fn with_crash(mut self, agent: usize, from_us: u64, until_us: u64) -> Self {
+        self.faults.push(Fault::Crash { agent, from_us, until_us });
+        self
+    }
+
+    /// Add a message-drop window.
+    pub fn with_drops(mut self, p: f64, from_us: u64, until_us: u64) -> Self {
+        self.faults.push(Fault::Drop { p: p.clamp(0.0, 1.0), from_us, until_us });
+        self
+    }
+
+    /// Convenience: a bipartition putting the first `⌈frac·n⌉` agents
+    /// (clamped to `[1, n−1]` so both sides are non-empty) on one side.
+    pub fn split_side(n: usize, frac: f64) -> Vec<bool> {
+        let cut = ((n as f64 * frac).ceil() as usize).clamp(1, n.saturating_sub(1).max(1));
+        (0..n).map(|k| k < cut).collect()
+    }
+
+    /// Seeded edge-churn generator: `windows` down-windows on random
+    /// edges of `graph`, start uniform in `[0, horizon_us)`, length
+    /// exponential with mean `mean_down_us`. A pure function of its
+    /// arguments — the same call always yields the same schedule.
+    pub fn with_edge_churn(
+        mut self,
+        graph: &Graph,
+        windows: usize,
+        mean_down_us: u64,
+        horizon_us: u64,
+        seed: u64,
+    ) -> Self {
+        let edges: Vec<(usize, usize)> = (0..graph.n())
+            .flat_map(|u| {
+                graph.neighbors(u).iter().filter(move |&&v| v > u).map(move |&v| (u, v))
+            })
+            .collect();
+        if edges.is_empty() || horizon_us == 0 {
+            return self;
+        }
+        let mut rng = Pcg64::new(seed);
+        for _ in 0..windows {
+            let (u, v) = edges[rng.next_below(edges.len() as u64) as usize];
+            let from = rng.next_below(horizon_us);
+            let len =
+                (-rng.next_f64().max(1e-12).ln() * mean_down_us.max(1) as f64).round() as u64;
+            self.faults.push(Fault::EdgeDown { u, v, from_us: from, until_us: from + len.max(1) });
+        }
+        self
+    }
+
+    /// Validate agent indices and window shapes against a network size.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        for f in &self.faults {
+            let ok = match f {
+                Fault::EdgeDown { u, v, from_us, until_us } => {
+                    *u < n && *v < n && u != v && from_us < until_us
+                }
+                Fault::LinkDown { from, to, from_us, until_us } => {
+                    *from < n && *to < n && from != to && from_us < until_us
+                }
+                Fault::Partition { side, from_us, until_us } => {
+                    side.len() == n
+                        && side.iter().any(|&s| s)
+                        && side.iter().any(|&s| !s)
+                        && from_us < until_us
+                }
+                Fault::Crash { agent, from_us, until_us } => *agent < n && from_us < until_us,
+                Fault::Drop { p, from_us, until_us } => {
+                    (0.0..=1.0).contains(p) && from_us < until_us
+                }
+            };
+            if !ok {
+                return Err(DdlError::Config(format!("invalid fault window: {f:?}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Is agent `k` computing at time `t` (not inside a crash window)?
+    pub fn agent_alive(&self, k: usize, t: u64) -> bool {
+        !self.faults.iter().any(|f| {
+            matches!(f, Fault::Crash { agent, from_us, until_us }
+                if *agent == k && covers(*from_us, *until_us, t))
+        })
+    }
+
+    /// Earliest time `≥ t` at which agent `k` is out of every crash
+    /// window covering `t` (recovery may chain across overlapping
+    /// windows; one extra pass per overlap resolves the chain).
+    pub fn agent_recover_us(&self, k: usize, t: u64) -> u64 {
+        let mut rec = t;
+        loop {
+            let mut advanced = false;
+            for f in &self.faults {
+                if let Fault::Crash { agent, from_us, until_us } = f {
+                    if *agent == k && covers(*from_us, *until_us, rec) && *until_us > rec {
+                        rec = *until_us;
+                        advanced = true;
+                    }
+                }
+            }
+            if !advanced {
+                return rec;
+            }
+        }
+    }
+
+    /// Is the directed link `from → to` transmitting at time `t`?
+    /// (Crash windows do not close links: a crashed agent's mailbox
+    /// still accepts ψ — see the module docs.)
+    pub fn link_up(&self, from: usize, to: usize, t: u64) -> bool {
+        !self.faults.iter().any(|f| match f {
+            Fault::EdgeDown { u, v, from_us, until_us } => {
+                covers(*from_us, *until_us, t)
+                    && ((*u == from && *v == to) || (*u == to && *v == from))
+            }
+            Fault::LinkDown { from: a, to: b, from_us, until_us } => {
+                covers(*from_us, *until_us, t) && *a == from && *b == to
+            }
+            Fault::Partition { side, from_us, until_us } => {
+                covers(*from_us, *until_us, t) && side[from] != side[to]
+            }
+            _ => false,
+        })
+    }
+
+    /// Message-drop probability in effect at time `t` (max over active
+    /// drop windows).
+    pub fn drop_prob(&self, t: u64) -> f64 {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::Drop { p, from_us, until_us } if covers(*from_us, *until_us, t) => Some(*p),
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Does the schedule contain *directed* faults (the live topology can
+    /// lose symmetry)? When true, Metropolis weights are no longer doubly
+    /// stochastic over the live graph and the executor auto-selects the
+    /// push-sum combine.
+    pub fn has_directed_faults(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::LinkDown { .. }))
+    }
+
+    /// Is any partition window active at time `t`? (The τ controller's
+    /// partition hook observes this.)
+    pub fn partition_active(&self, t: u64) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(f, Fault::Partition { from_us, until_us, .. }
+                if covers(*from_us, *until_us, t))
+        })
+    }
+
+    /// Number of live outgoing links of agent `k` at time `t`.
+    pub fn live_out_degree(&self, graph: &Graph, k: usize, t: u64) -> usize {
+        graph.neighbors(k).iter().filter(|&&nb| self.link_up(k, nb, t)).count()
+    }
+}
+
+/// Combine rule of the async executor.
+///
+/// `Metropolis` is the paper's symmetric doubly-stochastic combine.
+/// `PushSum` is the ratio-of-sums correction for directed / time-varying
+/// live topologies (Nedić–Olshevsky subgradient-push; arXiv:1808.05933):
+/// each agent carries a mass vector `s` and a scalar weight `w`, splits
+/// both uniformly over its **live** out-edges plus itself
+/// (column-stochastic by construction, whatever is currently up), sums
+/// every share that arrives, and reads its estimate as `s / w` — mass
+/// conservation keeps the consensus unbiased when connectivity loses
+/// symmetry, where Metropolis acquires a bias.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CombineMode {
+    /// Resolve at construction: push-sum when the schedule contains
+    /// directed faults, Metropolis otherwise (the default).
+    #[default]
+    Auto,
+    /// Force the symmetric Metropolis combine (even under directed
+    /// faults — the biased baseline the chaos report compares against).
+    Metropolis,
+    /// Force the push-sum–corrected combine.
+    PushSum,
+}
+
+/// Graceful-degradation knobs (all only consulted when a non-empty
+/// [`FaultSchedule`] is installed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosPolicy {
+    /// Receive timeout: a combine gated longer than this proceeds with
+    /// stale-ψ fallback / neighbor exclusion instead of waiting forever.
+    pub gate_timeout_us: u64,
+    /// Base backoff before re-attempting a send that hit a down link
+    /// (doubles per attempt).
+    pub retry_backoff_us: u64,
+    /// Send attempts beyond the first before the message is abandoned.
+    pub max_retries: u32,
+}
+
+impl Default for ChaosPolicy {
+    fn default() -> Self {
+        ChaosPolicy { gate_timeout_us: 50_000, retry_backoff_us: 500, max_retries: 3 }
+    }
+}
+
+/// Fault-handling counters (all zero on a fault-free run).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Messages transmitted but lost in a drop window.
+    pub dropped: usize,
+    /// Send retries scheduled after hitting a down link.
+    pub retries: usize,
+    /// Messages abandoned after exhausting retries.
+    pub abandoned: usize,
+    /// Adapt steps deferred because the agent was crashed.
+    pub crash_deferrals: usize,
+    /// Combines forced by the gate timeout.
+    pub forced_combines: usize,
+    /// Neighbor slots served by the stale-ψ fallback in forced combines.
+    pub stale_fallbacks: usize,
+    /// Neighbor slots excluded entirely (no ψ ever received) in forced
+    /// combines.
+    pub excluded_neighbors: usize,
+    /// Largest staleness used by a fallback (the τ invariant tracks
+    /// gated combines only; fallbacks are accounted here).
+    pub max_fallback_staleness: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+
+    #[test]
+    fn empty_schedule_is_empty_and_valid() {
+        let s = FaultSchedule::default();
+        assert!(s.is_empty());
+        assert!(s.validate(10).is_ok());
+        assert!(s.agent_alive(3, 500));
+        assert!(s.link_up(0, 1, 500));
+        assert_eq!(s.drop_prob(500), 0.0);
+        assert!(!s.has_directed_faults());
+        assert!(!s.partition_active(0));
+    }
+
+    #[test]
+    fn windows_are_half_open_and_pure() {
+        let s = FaultSchedule::new(1)
+            .with_edge_down(0, 1, 100, 200)
+            .with_crash(2, 50, 150)
+            .with_drops(0.5, 10, 20);
+        assert!(s.link_up(0, 1, 99));
+        assert!(!s.link_up(0, 1, 100));
+        assert!(!s.link_up(1, 0, 199), "EdgeDown cuts both directions");
+        assert!(s.link_up(0, 1, 200), "half-open: healed at until");
+        assert!(!s.agent_alive(2, 149));
+        assert!(s.agent_alive(2, 150));
+        assert_eq!(s.agent_recover_us(2, 60), 150);
+        assert_eq!(s.agent_recover_us(2, 150), 150);
+        assert_eq!(s.drop_prob(15), 0.5);
+        assert_eq!(s.drop_prob(25), 0.0);
+    }
+
+    #[test]
+    fn link_down_is_directed() {
+        let s = FaultSchedule::new(0).with_link_down(3, 4, 0, 1000);
+        assert!(!s.link_up(3, 4, 10));
+        assert!(s.link_up(4, 3, 10), "reverse direction stays up");
+        assert!(s.has_directed_faults());
+    }
+
+    #[test]
+    fn partition_cuts_cross_edges_only_and_heals() {
+        let side = FaultSchedule::split_side(6, 0.5);
+        assert_eq!(side, vec![true, true, true, false, false, false]);
+        let s = FaultSchedule::new(0).with_partition(side, 100, 300);
+        assert!(!s.link_up(0, 4, 150));
+        assert!(!s.link_up(4, 0, 150));
+        assert!(s.link_up(0, 1, 150), "within-side edges stay up");
+        assert!(s.link_up(0, 4, 300), "healed");
+        assert!(s.partition_active(150));
+        assert!(!s.partition_active(300));
+    }
+
+    #[test]
+    fn overlapping_crashes_chain_recovery() {
+        let s = FaultSchedule::new(0).with_crash(0, 100, 200).with_crash(0, 150, 400);
+        assert_eq!(s.agent_recover_us(0, 120), 400);
+    }
+
+    #[test]
+    fn churn_generator_is_deterministic() {
+        let mut rng = Pcg64::new(9);
+        let g = Graph::generate(12, &Topology::Ring { k: 2 }, &mut rng);
+        let a = FaultSchedule::new(0).with_edge_churn(&g, 5, 1_000, 50_000, 7);
+        let b = FaultSchedule::new(0).with_edge_churn(&g, 5, 1_000, 50_000, 7);
+        let c = FaultSchedule::new(0).with_edge_churn(&g, 5, 1_000, 50_000, 8);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, c, "seed moves the schedule");
+        assert_eq!(a.faults().len(), 5);
+        assert!(a.validate(12).is_ok());
+    }
+
+    #[test]
+    fn live_out_degree_counts_up_links() {
+        let mut rng = Pcg64::new(2);
+        let g = Graph::generate(6, &Topology::Ring { k: 1 }, &mut rng);
+        let s = FaultSchedule::new(0).with_link_down(0, 1, 0, 100);
+        assert_eq!(s.live_out_degree(&g, 0, 50), 1, "one of two ring links is down");
+        assert_eq!(s.live_out_degree(&g, 0, 100), 2);
+        assert_eq!(s.live_out_degree(&g, 1, 50), 2, "reverse direction unaffected");
+    }
+
+    #[test]
+    fn validation_rejects_bad_windows() {
+        assert!(FaultSchedule::new(0).with_crash(9, 0, 10).validate(5).is_err());
+        assert!(FaultSchedule::new(0).with_edge_down(0, 0, 0, 10).validate(5).is_err());
+        assert!(FaultSchedule::new(0).with_edge_down(0, 1, 10, 10).validate(5).is_err());
+        assert!(FaultSchedule::new(0)
+            .with_partition(vec![true; 5], 0, 10)
+            .validate(5)
+            .is_err());
+        assert!(FaultSchedule::new(0).with_partition(vec![true, false], 0, 10).validate(5).is_err());
+    }
+}

@@ -21,6 +21,13 @@
 //! convention documented (and doc-tested) in [`message`], so sync-vs-async
 //! traffic and convergence are directly comparable.
 //!
+//! The [`chaos`] module is the deterministic fault-injection layer over
+//! [`async_exec`]: edge churn, healing partitions, directed outages,
+//! message drops, and agent crash/recovery, every event a pure function
+//! of (seed, sim-time) — an empty schedule degenerates bit-for-bit to
+//! the fault-free trajectory, and directed faults auto-select the
+//! push-sum–corrected combine (`ddl chaos`).
+//!
 //! The [`pool`] module provides the shared scoped-thread worker pool that
 //! both the matrix-form engine and the scalar cost-consensus use for
 //! row-partitioned parallelism, and [`tau_control`] the staleness-τ
@@ -35,12 +42,14 @@
 pub mod actors;
 pub mod async_exec;
 pub mod bsp;
+pub mod chaos;
 pub mod message;
 pub mod pool;
 pub mod tau_control;
 
 pub use async_exec::{AsyncNetwork, AsyncParams, DelayDist};
 pub use bsp::BspNetwork;
+pub use chaos::{ChaosPolicy, ChaosStats, CombineMode, Fault, FaultSchedule};
 pub use message::{MessageStats, PsiMessage};
 pub use pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};
 pub use tau_control::{TauController, TauDecision};

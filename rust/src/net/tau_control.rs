@@ -39,6 +39,9 @@ pub struct TauDecision {
     /// Relative MSD excess of the adaptive run over the τ = 0 probe
     /// (0 when the adaptive run is at least as converged).
     pub msd_drift: f64,
+    /// Whether a network partition was reported active for this epoch
+    /// (see [`TauController::observe_partition`]).
+    pub partition: bool,
 }
 
 /// The ±1-per-epoch staleness controller (see the module docs).
@@ -49,6 +52,7 @@ pub struct TauController {
     msd_drift_bound: f64,
     last_t_us: u64,
     last_gate_wait_us: u64,
+    partition_active: bool,
     trace: Vec<TauDecision>,
 }
 
@@ -62,6 +66,7 @@ impl TauController {
             msd_drift_bound: cfg.msd_drift_bound,
             last_t_us: 0,
             last_gate_wait_us: 0,
+            partition_active: false,
             trace: Vec::new(),
         }
     }
@@ -69,6 +74,19 @@ impl TauController {
     /// A starting τ clamped into the controller's bounds.
     pub fn initial_tau(&self, tau: usize) -> usize {
         tau.clamp(self.tau_min, self.tau_max)
+    }
+
+    /// Partition-event hook from the chaos layer
+    /// ([`crate::net::chaos::FaultSchedule::partition_active`]): while a
+    /// partition is reported active, MSD drift against the fault-free
+    /// probe measures the *fault*, not staleness, so the narrow branch of
+    /// [`TauController::decide`] is suppressed — narrowing τ cannot
+    /// reconnect a cut graph, it only stalls the survivors harder. The
+    /// flag is sticky until the next call reports the heal. Calling it is
+    /// optional; drivers without a chaos layer never do and the
+    /// controller behaves exactly as before.
+    pub fn observe_partition(&mut self, active: bool) {
+        self.partition_active = active;
     }
 
     /// One control-epoch decision at simulated time `t_us`:
@@ -98,7 +116,7 @@ impl TauController {
         } else {
             0.0
         };
-        let tau = if msd_drift > self.msd_drift_bound {
+        let tau = if msd_drift > self.msd_drift_bound && !self.partition_active {
             // Accuracy first: staleness is visibly hurting convergence.
             cur_tau.saturating_sub(1).max(self.tau_min)
         } else if gate_wait_frac > self.gate_wait_hi {
@@ -106,7 +124,13 @@ impl TauController {
         } else {
             cur_tau
         };
-        self.trace.push(TauDecision { t_us, tau, gate_wait_frac, msd_drift });
+        self.trace.push(TauDecision {
+            t_us,
+            tau,
+            gate_wait_frac,
+            msd_drift,
+            partition: self.partition_active,
+        });
         tau
     }
 
@@ -177,6 +201,24 @@ mod tests {
         // Zero-probe MSD (degenerate) never divides by zero.
         let tau = ctl.decide(2_000, 10, 0, 1.0, 0.0, tau);
         assert_eq!(tau, 4);
+    }
+
+    #[test]
+    fn partition_hook_suppresses_narrow_until_heal() {
+        let mut ctl = TauController::new(&cfg());
+        // Partition reported: heavy drift would normally narrow, but the
+        // drift is the fault's doing — hold (and still widen on wait).
+        ctl.observe_partition(true);
+        let tau = ctl.decide(1_000, 10, 0, 9.0, 1e-3, 4);
+        assert_eq!(tau, 4, "narrow suppressed during partition");
+        assert!(ctl.trace()[0].partition);
+        let tau = ctl.decide(2_000, 10, 5_000, 9.0, 1e-3, tau);
+        assert_eq!(tau, 5, "gate-wait widening still active during partition");
+        // Healed: the same drift now narrows again.
+        ctl.observe_partition(false);
+        let tau = ctl.decide(3_000, 10, 5_000, 9.0, 1e-3, tau);
+        assert_eq!(tau, 4, "narrow resumes after heal");
+        assert!(!ctl.trace()[2].partition);
     }
 
     #[test]

@@ -106,6 +106,98 @@ impl ServiceModel {
     }
 }
 
+/// Fits the affine service law `base_us + per_sample_us · B` from the
+/// first `target` measured `(batch size, wall service µs)` pairs of a
+/// session, then freezes ([`ControlConfig::calibrate`]).
+///
+/// The replay contract: the fit is an exact least-squares solve over the
+/// recorded samples with one deterministic integer rounding at the end —
+/// a pure function of the sample sequence. Two sessions that observe the
+/// same `(B, µs)` pairs therefore drive the identical frozen model and
+/// take the identical control decisions thereafter; what calibration
+/// trades away is only *cross-machine* bit-replay, because the samples
+/// themselves come from this machine's wall clock. Until the freeze the
+/// configured model stays in force, so the virtual clock never consumes a
+/// raw wall measurement directly.
+#[derive(Clone, Debug)]
+pub struct ServiceCalibrator {
+    /// Configured model: drives the clock pre-freeze, donates
+    /// `upd_per_sample_us` (not observable from serial service times) and
+    /// the slope fallback for degenerate (constant-B) sample sets.
+    configured: ServiceModel,
+    samples: Vec<(usize, u64)>,
+    target: usize,
+    fitted: Option<ServiceModel>,
+}
+
+impl ServiceCalibrator {
+    /// Calibrator that freezes after `cfg.calib_batches` observations.
+    pub fn from_config(cfg: &ControlConfig) -> Self {
+        ServiceCalibrator {
+            configured: ServiceModel::from_config(cfg),
+            samples: Vec::with_capacity(cfg.calib_batches),
+            target: cfg.calib_batches.max(2),
+            fitted: None,
+        }
+    }
+
+    /// Record one measured batch. Returns `true` exactly once, on the
+    /// observation that completes the sample set and freezes the fit;
+    /// observations after the freeze are ignored.
+    pub fn observe(&mut self, batch: usize, measured_us: u64) -> bool {
+        if self.fitted.is_some() {
+            return false;
+        }
+        self.samples.push((batch, measured_us));
+        if self.samples.len() < self.target {
+            return false;
+        }
+        self.fitted = Some(self.fit());
+        true
+    }
+
+    /// The model currently in force: configured until the freeze, fitted
+    /// after.
+    pub fn model(&self) -> ServiceModel {
+        self.fitted.unwrap_or(self.configured)
+    }
+
+    /// Whether the fit has frozen.
+    pub fn is_frozen(&self) -> bool {
+        self.fitted.is_some()
+    }
+
+    /// Exact least squares of `µs ~ base + slope · B` over the recorded
+    /// samples; slope and intercept are clamped non-negative and rounded
+    /// half-up to whole µs so the frozen model is integer-for-integer
+    /// reproducible from the sample sequence.
+    fn fit(&self) -> ServiceModel {
+        let n = self.samples.len() as f64;
+        let mean_b = self.samples.iter().map(|&(b, _)| b as f64).sum::<f64>() / n;
+        let mean_y = self.samples.iter().map(|&(_, y)| y as f64).sum::<f64>() / n;
+        let mut var = 0.0;
+        let mut cov = 0.0;
+        for &(b, y) in &self.samples {
+            let db = b as f64 - mean_b;
+            var += db * db;
+            cov += db * (y as f64 - mean_y);
+        }
+        let slope = if var > f64::EPSILON {
+            (cov / var).max(0.0)
+        } else {
+            // Every batch had the same size: the slope is unidentifiable,
+            // keep the configured marginal cost and fit the offset only.
+            self.configured.per_sample_us as f64
+        };
+        let base = (mean_y - slope * mean_b).max(0.0);
+        ServiceModel {
+            base_us: (base + 0.5).floor() as u64,
+            per_sample_us: (slope + 0.5).floor() as u64,
+            upd_per_sample_us: self.configured.upd_per_sample_us,
+        }
+    }
+}
+
 /// Clamp a static `(max_batch, max_wait_us)` pair into the controller's
 /// bounds — the initial policy of an adaptive session (and the whole
 /// policy, when the bounds are pinned to a single point). Inverted
@@ -436,6 +528,70 @@ mod tests {
             window: 64,
             ..ControlConfig::default()
         }
+    }
+
+    /// Samples drawn from an exact affine law are recovered exactly, and
+    /// the same sample sequence always freezes the identical model — the
+    /// replay contract of `[control] calibrate`.
+    #[test]
+    fn calibrator_recovers_affine_law_and_replays() {
+        let c = ControlConfig { calib_batches: 6, upd_per_sample_us: 60, ..cfg() };
+        let feed = |cal: &mut ServiceCalibrator| {
+            let mut frozen_at = None;
+            for (i, b) in [1usize, 4, 2, 8, 3, 6].iter().enumerate() {
+                if cal.observe(*b, 120 + 35 * *b as u64) {
+                    frozen_at = Some(i);
+                }
+            }
+            frozen_at
+        };
+        let mut cal = ServiceCalibrator::from_config(&c);
+        assert!(!cal.is_frozen());
+        assert_eq!(feed(&mut cal), Some(5), "freeze fires exactly on the K-th sample");
+        let m = cal.model();
+        assert_eq!((m.base_us, m.per_sample_us), (120, 35));
+        assert_eq!(m.upd_per_sample_us, 60, "update cost carries over from the config");
+        // Replay: an independent calibrator over the same samples lands on
+        // the integer-identical model.
+        let mut replay = ServiceCalibrator::from_config(&c);
+        feed(&mut replay);
+        let r = replay.model();
+        assert_eq!((r.base_us, r.per_sample_us, r.upd_per_sample_us), (120, 35, 60));
+        // Post-freeze observations are ignored: the model never re-fits.
+        assert!(!cal.observe(64, 1_000_000));
+        let after = cal.model();
+        assert_eq!((after.base_us, after.per_sample_us), (120, 35));
+    }
+
+    /// Constant batch sizes leave the slope unidentifiable: the configured
+    /// marginal cost is kept and only the offset is fitted.
+    #[test]
+    fn calibrator_constant_batches_fit_offset_only() {
+        let c = ControlConfig {
+            calib_batches: 4,
+            svc_per_sample_us: 150,
+            ..cfg()
+        };
+        let mut cal = ServiceCalibrator::from_config(&c);
+        for _ in 0..4 {
+            cal.observe(4, 1_000);
+        }
+        let m = cal.model();
+        assert_eq!(m.per_sample_us, 150);
+        // base = mean(1000) − 150·4 = 400.
+        assert_eq!(m.base_us, 400);
+    }
+
+    /// Pre-freeze the configured model stays in force, so the virtual
+    /// clock never consumes a raw wall measurement.
+    #[test]
+    fn calibrator_serves_configured_model_until_frozen() {
+        let c = ControlConfig { calib_batches: 3, ..cfg() };
+        let mut cal = ServiceCalibrator::from_config(&c);
+        let configured = ServiceModel::from_config(&c);
+        cal.observe(2, 999_999);
+        assert!(!cal.is_frozen());
+        assert_eq!(cal.model().service_us(5), configured.service_us(5));
     }
 
     #[test]

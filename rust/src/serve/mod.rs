@@ -43,7 +43,7 @@ pub mod session;
 
 pub use control::{
     clamped_policy, BatchController, ControlDecision, DepthController, DepthDecision, PipeSim,
-    ServiceModel,
+    ServiceCalibrator, ServiceModel,
 };
 pub use pipeline::{run_pipelined, BatchFormer, PipelineExec};
 pub use queue::{BatchPolicy, MicroBatchQueue, Request, SharedQueue};

@@ -142,8 +142,9 @@ impl BatchFormer {
         loop {
             // Admit every request that has arrived by the current clock.
             while self.stream.front().is_some_and(|(t, _)| *t <= self.now_us) {
-                let (t, x) = self.stream.pop_front().expect("front checked");
-                self.queue.push(x, t);
+                if let Some((t, x)) = self.stream.pop_front() {
+                    self.queue.push(x, t);
+                }
             }
             if self.queue.ready(self.now_us) {
                 return Some(self.queue.drain_batch());
@@ -567,7 +568,11 @@ fn run_reference(
         .collect();
     let mut j = 0usize;
     loop {
-        let token = snaps.pop_front().expect("snapshot schedule invariant");
+        let Some(token) = snaps.pop_front() else {
+            return Err(DdlError::Runtime(
+                "pipeline: snapshot token schedule broke (no token for the next batch)".into(),
+            ));
+        };
         if let Some(policy) = token.policy {
             queue.set_policy(policy);
         }
@@ -664,7 +669,9 @@ fn run_threaded_pipeline(
         // slots).
         let mut worker_handles = Vec::with_capacity(slots);
         for (w, mut engine) in engines.into_iter().enumerate() {
-            let work_rx = work_rxs[w].take().expect("one receiver per worker");
+            let work_rx = work_rxs[w].take().ok_or_else(|| {
+                DdlError::Runtime(format!("pipeline worker {w} receiver already taken"))
+            })?;
             let done_tx = done_tx.clone();
             worker_handles.push(scope.spawn(move || {
                 while let Ok(Work { j, snap, batch, formed }) = work_rx.recv() {

@@ -27,7 +27,9 @@ use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use crate::net::MessageStats;
 use crate::ops::prox::DictProx;
 use crate::rng::Pcg64;
-use crate::serve::control::{BatchController, ControlDecision, DepthDecision, ServiceModel};
+use crate::serve::control::{
+    BatchController, ControlDecision, DepthDecision, ServiceCalibrator, ServiceModel,
+};
 use crate::serve::queue::{BatchPolicy, MicroBatchQueue};
 use std::time::Instant;
 
@@ -302,6 +304,11 @@ fn run_serial(
 
     let adaptive = cfg.control.enabled;
     let model = ServiceModel::from_config(&cfg.control);
+    // Optional service-model calibration: measure the first K batches on
+    // the wall clock, least-squares fit the affine law, freeze it for the
+    // rest of the session (`[control] calibrate`, default off).
+    let mut calibrator =
+        (adaptive && cfg.control.calibrate).then(|| ServiceCalibrator::from_config(&cfg.control));
     let mut controller =
         if adaptive { Some(BatchController::new(&cfg.control, cfg.batch, cfg.max_wait_us)) } else { None };
     let init_policy = match &controller {
@@ -367,10 +374,25 @@ fn run_serial(
         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
         let t0 = Instant::now();
         let step = trainer.step(&mut dict, &task, &refs, cfg.mu_w)?;
+        let wall_us = (t0.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
         let service_us = if adaptive {
-            model.service_us(batch.len())
+            if let Some(cal) = calibrator.as_mut() {
+                // Pre-freeze the configured model drives the clock while
+                // the calibrator records wall measurements on the side;
+                // from the freeze on the fitted model takes over.
+                if cal.observe(batch.len(), wall_us) {
+                    let fitted = cal.model();
+                    log(&format!(
+                        "  calibrated service model from {} batches: {} + {}µs/sample",
+                        cfg.control.calib_batches, fitted.base_us, fitted.per_sample_us
+                    ));
+                }
+                cal.model().service_us(batch.len())
+            } else {
+                model.service_us(batch.len())
+            }
         } else {
-            (t0.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64
+            wall_us
         };
         now_us = now_us.saturating_add(service_us);
 

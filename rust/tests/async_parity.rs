@@ -15,7 +15,9 @@
 use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::infer::{exact_dual, DiffusionParams};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
-use ddl::net::{AsyncNetwork, AsyncParams, BspNetwork, DelayDist};
+use ddl::net::{
+    AsyncNetwork, AsyncParams, BspNetwork, ChaosStats, CombineMode, DelayDist, FaultSchedule,
+};
 use ddl::rng::Pcg64;
 
 fn random_topology(rng: &mut Pcg64) -> Topology {
@@ -191,4 +193,195 @@ fn replay_is_bit_identical_per_seed() {
     assert_eq!(r1.sim_time_us(), r2.sim_time_us());
     assert_eq!(r1.max_staleness_observed(), r2.max_staleness_observed());
     assert_ne!(r1.sim_time_us(), r3.sim_time_us(), "seed must move the clock");
+}
+
+/// Property: attaching an **empty** (but seeded) `FaultSchedule` is a
+/// bitwise no-op across random topologies, delay models, and stragglers —
+/// the chaos layer's degeneracy contract, beyond the single fixed case
+/// covered in the unit tests.
+#[test]
+fn prop_empty_fault_schedule_bitwise_parity() {
+    let mut rng = Pcg64::new(0xC4_A0);
+    let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+    for case in 0..8 {
+        let n = 5 + rng.next_below(18) as usize;
+        let m = 2 + rng.next_below(8) as usize;
+        let iters = 5 + rng.next_below(30) as usize;
+        let topo = random_topology(&mut rng);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let params = DiffusionParams::new(0.3, iters);
+        let (compute, link) = random_delays(&mut rng);
+        let mut ap = AsyncParams::default()
+            .with_tau(rng.next_below(5) as usize)
+            .with_delays(compute, link)
+            .with_seed(2000 + case);
+        if rng.next_below(2) == 1 {
+            ap = ap.with_slow_agent(rng.next_below(n as u64) as usize, 6.0);
+        }
+        let chaos_seed = rng.next_u64();
+
+        let mut plain = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+        plain.run(&dict, &task, &x, params).unwrap();
+        let mut with_layer = AsyncNetwork::new(
+            g,
+            a,
+            m,
+            None,
+            ap.with_chaos(FaultSchedule::new(chaos_seed)),
+        )
+        .unwrap();
+        with_layer.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(plain.nu(k), with_layer.nu(k), "case {case} ({topo:?}): agent {k}");
+        }
+        assert_eq!(plain.stats(), with_layer.stats(), "case {case}: traffic");
+        assert_eq!(plain.sim_time_us(), with_layer.sim_time_us(), "case {case}: clock");
+        assert_eq!(with_layer.chaos_stats(), ChaosStats::default(), "case {case}: counters");
+        assert_eq!(with_layer.combine_mode(), CombineMode::Metropolis, "case {case}: auto");
+    }
+}
+
+/// Build a randomized-but-deterministic fault schedule: any subset of
+/// {healing partition, crash/recovery, directed outage, edge churn,
+/// drop window}, windows inside `[0, horizon]`.
+fn random_schedule(g: &Graph, n: usize, horizon: u64, rng: &mut Pcg64) -> FaultSchedule {
+    let mut s = FaultSchedule::new(rng.next_u64());
+    if rng.next_below(2) == 1 {
+        let from = rng.next_below(horizon / 2);
+        let len = 1 + rng.next_below(horizon / 2);
+        s = s.with_partition(
+            FaultSchedule::split_side(n, 0.2 + 0.5 * rng.next_f64()),
+            from,
+            from + len,
+        );
+    }
+    if rng.next_below(2) == 1 {
+        let from = rng.next_below(horizon);
+        s = s.with_crash(rng.next_below(n as u64) as usize, from, from + 1 + rng.next_below(horizon));
+    }
+    if rng.next_below(2) == 1 {
+        let k = rng.next_below(n as u64) as usize;
+        if let Some(&nb) = g.neighbors(k).first() {
+            let from = rng.next_below(horizon);
+            s = s.with_link_down(k, nb, from, from + 1 + rng.next_below(horizon));
+        }
+    }
+    s = s.with_edge_churn(g, rng.next_below(5) as usize, horizon / 10, horizon, rng.next_u64());
+    if rng.next_below(2) == 1 {
+        s = s.with_drops(0.3 * rng.next_f64(), 0, horizon);
+    }
+    s
+}
+
+/// Property (graceful degradation): under randomized fault schedules —
+/// partitions, crashes, directed outages, churn, drops, in any
+/// combination, under any combine mode — the executor never panics and
+/// never stalls: every agent completes its full iteration target, the
+/// gated-staleness invariant holds, and same-schedule replays are
+/// bit-identical.
+#[test]
+fn prop_randomized_fault_schedules_never_panic_or_stall() {
+    let mut rng = Pcg64::new(0xC4_A1);
+    let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+    for case in 0..10 {
+        let n = 6 + rng.next_below(12) as usize;
+        let m = 3 + rng.next_below(6) as usize;
+        let iters = 15 + rng.next_below(30) as usize;
+        let tau = rng.next_below(5) as usize;
+        let topo = random_topology(&mut rng);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let params = DiffusionParams::new(0.25, iters);
+        let schedule = random_schedule(&g, n, 20_000, &mut rng);
+        let combine = match rng.next_below(3) {
+            0 => CombineMode::Auto,
+            1 => CombineMode::Metropolis,
+            _ => CombineMode::PushSum,
+        };
+        let ap = AsyncParams::default()
+            .with_tau(tau)
+            .with_delays(DelayDist::Constant { us: 100 }, DelayDist::Constant { us: 15 })
+            .with_seed(3000 + case)
+            .with_chaos(schedule)
+            .with_combine(combine);
+
+        let run = || {
+            let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let net = run();
+        for k in 0..n {
+            assert_eq!(
+                net.iters_done(k),
+                iters,
+                "case {case} ({topo:?}, {combine:?}): agent {k} stalled"
+            );
+        }
+        assert!(
+            net.max_staleness_observed() <= tau,
+            "case {case}: gated staleness {} > tau {tau}",
+            net.max_staleness_observed()
+        );
+        if case % 3 == 0 {
+            let again = run();
+            assert_eq!(net.stats(), again.stats(), "case {case}: replay traffic");
+            assert_eq!(net.sim_time_us(), again.sim_time_us(), "case {case}: replay clock");
+            assert_eq!(net.chaos_stats(), again.chaos_stats(), "case {case}: replay stats");
+            for k in 0..n {
+                assert_eq!(net.nu(k), again.nu(k), "case {case}: replay agent {k}");
+            }
+        }
+    }
+}
+
+/// Property (satellite of the τ-invariant): edge churn — links flapping
+/// up and down mid-iteration — never lets a *gated* combine use
+/// information older than τ.
+#[test]
+fn prop_staleness_bound_survives_edge_churn() {
+    let mut rng = Pcg64::new(0xC4_A2);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+    for case in 0..6 {
+        let n = 6 + rng.next_below(12) as usize;
+        let m = 3 + rng.next_below(5) as usize;
+        let iters = 20 + rng.next_below(30) as usize;
+        let tau = rng.next_below(4) as usize;
+        let topo = random_topology(&mut rng);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let schedule = FaultSchedule::new(rng.next_u64()).with_edge_churn(
+            &g,
+            4 + rng.next_below(8) as usize,
+            2_000,
+            30_000,
+            rng.next_u64(),
+        );
+        let ap = AsyncParams::default()
+            .with_tau(tau)
+            .with_delays(DelayDist::Constant { us: 80 }, DelayDist::Constant { us: 10 })
+            .with_seed(4000 + case)
+            .with_chaos(schedule);
+        let mut net = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        net.run(&dict, &task, &x, DiffusionParams::new(0.25, iters)).unwrap();
+        assert!(
+            net.max_staleness_observed() <= tau,
+            "case {case}: churn broke the τ invariant ({} > {tau})",
+            net.max_staleness_observed()
+        );
+        for k in 0..n {
+            assert_eq!(net.iters_done(k), iters, "case {case}: agent {k} incomplete");
+        }
+    }
 }

@@ -4,6 +4,9 @@
 //! * HLO-driven training: a short online training loop where *inference
 //!   runs through the PJRT executable* and the dictionary update runs
 //!   through the update artifact — Python never appears on this path.
+//!
+//! Compiled only with the `xla` feature (the PJRT bridge is optional).
+#![cfg(feature = "xla")]
 
 use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};

@@ -5,7 +5,9 @@
 //! compared against the pure-rust `DiffusionEngine` on identical inputs.
 //!
 //! Requires `make artifacts` (skips with a message when absent, so plain
-//! `cargo test` works before the python step).
+//! `cargo test` works before the python step) and the `xla` feature (the
+//! PJRT bridge is optional; the default build is pure rust).
+#![cfg(feature = "xla")]
 
 use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::infer::{DiffusionEngine, DiffusionParams};
