@@ -44,7 +44,6 @@ use ddl::infer::{exact_dual, DiffusionParams};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::net::{AsyncNetwork, AsyncParams, BspNetwork, DelayDist};
 use ddl::rng::Pcg64;
-use std::path::Path;
 
 const N: usize = 100;
 const TAU: usize = 4;
@@ -159,11 +158,5 @@ fn main() {
         },
     );
 
-    println!("\nderived figures:");
-    for (k, v) in &derived {
-        println!("  {k} = {v:.3}");
-    }
-    b.write_csv(Path::new("results/bench_async.csv")).unwrap();
-    b.write_json(Path::new("BENCH_async.json"), &derived).unwrap();
-    println!("\nwrote results/bench_async.csv and BENCH_async.json");
+    ddl::bench::write_report(&b, "async", &derived);
 }

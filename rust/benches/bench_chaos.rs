@@ -43,7 +43,6 @@ use ddl::infer::DiffusionParams;
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::net::{AsyncNetwork, AsyncParams, DelayDist, FaultSchedule};
 use ddl::rng::Pcg64;
-use std::path::Path;
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast")
@@ -124,11 +123,5 @@ fn main() {
         },
     );
 
-    println!("\nderived figures:");
-    for (k, v) in &derived {
-        println!("  {k} = {v:.3}");
-    }
-    b.write_csv(Path::new("results/bench_chaos.csv")).unwrap();
-    b.write_json(Path::new("BENCH_chaos.json"), &derived).unwrap();
-    println!("\nwrote results/bench_chaos.csv and BENCH_chaos.json");
+    ddl::bench::write_report(&b, "chaos", &derived);
 }

@@ -42,7 +42,6 @@ use ddl::bench::Bencher;
 use ddl::config::experiment::{AsyncConfig, ControlConfig, InferenceConfig, ServeConfig};
 use ddl::coordinator::run_adaptive_tau;
 use ddl::serve::run_service_with_dict;
-use std::path::Path;
 
 /// Bursty serving scenario: clumps of 8 requests at 1500 req/s mean rate
 /// against a B = 1 virtual capacity of ~1052 req/s — batching is
@@ -262,11 +261,5 @@ fn main() {
         std::hint::black_box(r.throughput_rps);
     });
 
-    println!("\nderived figures:");
-    for (k, v) in &derived {
-        println!("  {k} = {v:.3}");
-    }
-    b.write_csv(Path::new("results/bench_control.csv")).unwrap();
-    b.write_json(Path::new("BENCH_control.json"), &derived).unwrap();
-    println!("\nwrote results/bench_control.csv and BENCH_control.json");
+    ddl::bench::write_report(&b, "control", &derived);
 }

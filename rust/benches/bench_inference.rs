@@ -26,6 +26,7 @@ use ddl::rng::Pcg64;
 use ddl::runtime::exec::ParamPack;
 #[cfg(feature = "xla")]
 use ddl::runtime::Runtime;
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 fn main() {
@@ -234,11 +235,5 @@ fn main() {
         }
     }
 
-    println!("\nderived figures:");
-    for (k, v) in &derived {
-        println!("  {k} = {v:.2}x");
-    }
-    b.write_csv(Path::new("results/bench_inference.csv")).unwrap();
-    b.write_json(Path::new("BENCH_inference.json"), &derived).unwrap();
-    println!("\nwrote results/bench_inference.csv and BENCH_inference.json");
+    ddl::bench::write_report(&b, "inference", &derived);
 }

@@ -46,7 +46,6 @@ use ddl::learn::{OnlineTrainer, TrainerOptions};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::ops::prox::DictProx;
 use ddl::rng::Pcg64;
-use std::path::Path;
 
 const N: usize = 100;
 const M: usize = 100;
@@ -207,11 +206,5 @@ fn main() {
         ));
     }
 
-    println!("\nderived figures:");
-    for (k, v) in &derived {
-        println!("  {k} = {v:.2}");
-    }
-    b.write_csv(Path::new("results/bench_serve.csv")).unwrap();
-    b.write_json(Path::new("BENCH_serve.json"), &derived).unwrap();
-    println!("\nwrote results/bench_serve.csv and BENCH_serve.json");
+    ddl::bench::write_report(&b, "serve", &derived);
 }

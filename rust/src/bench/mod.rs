@@ -221,6 +221,21 @@ impl Bencher {
     }
 }
 
+/// Shared tail of every bench binary: print the derived figures, write
+/// `results/bench_<name>.csv` and `BENCH_<name>.json`, and announce the
+/// paths. Panics on IO failure, as the bench targets always did inline.
+pub fn write_report(b: &Bencher, name: &str, derived: &[(String, f64)]) {
+    println!("\nderived figures:");
+    for (k, v) in derived {
+        println!("  {k} = {v:.3}");
+    }
+    let csv = format!("results/bench_{name}.csv");
+    let json = format!("BENCH_{name}.json");
+    b.write_csv(std::path::Path::new(&csv)).unwrap();
+    b.write_json(std::path::Path::new(&json), derived).unwrap();
+    println!("\nwrote {csv} and {json}");
+}
+
 /// One derived-figure comparison produced by [`regression_gate`].
 #[derive(Clone, Debug)]
 pub struct GateRow {

@@ -299,6 +299,8 @@ pub struct ServeConfig {
     pub informed: Option<usize>,
     /// Feedback control plane (`[control]` TOML block, `--adaptive`).
     pub control: ControlConfig,
+    /// Observability layer (`[obs]` TOML block, `--trace`).
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeConfig {
@@ -321,6 +323,7 @@ impl Default for ServeConfig {
             infer: InferenceConfig { mu: 0.4, iters: 120, gamma: 0.08, delta: 0.2, threads: 1 },
             informed: None,
             control: ControlConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -353,6 +356,7 @@ impl ServeConfig {
             c.informed = v.as_usize();
         }
         c.control = ControlConfig::from_toml(doc);
+        c.obs = ObsConfig::from_toml(doc);
         c
     }
 }
@@ -448,6 +452,55 @@ impl ChaosConfig {
     }
 }
 
+/// Observability layer (`obs/`): virtual-clock tracing + trace export.
+/// Loaded from the TOML section `[obs]`; the `--trace <path>` /
+/// `--trace-format <fmt>` CLI flags override [`Self::trace_path`] and
+/// [`Self::format`]. Tracing never perturbs a run (no RNG draws, no
+/// clock advancement — `tests/obs_parity.rs`), so flipping these knobs
+/// is always replay-safe.
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Record events even without an export path (in-memory only; useful
+    /// for programmatic [`crate::obs::ObsHandle::snapshot`] consumers).
+    pub enabled: bool,
+    /// Export destination; `None` disables export. Setting a path
+    /// implies recording.
+    pub trace_path: Option<String>,
+    /// Export format: `auto` (by extension: `.jsonl` → JSONL, else
+    /// Chrome) | `jsonl` | `chrome`.
+    pub format: String,
+    /// Ring-buffer capacity of the in-memory recorder; the oldest events
+    /// are evicted (and counted) beyond this.
+    pub ring_cap: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: false, trace_path: None, format: "auto".into(), ring_cap: 262_144 }
+    }
+}
+
+impl ObsConfig {
+    /// Whether events should be recorded at all.
+    pub fn active(&self) -> bool {
+        self.enabled || self.trace_path.is_some()
+    }
+
+    /// Load from TOML (section `[obs]`), falling back to defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let mut c = Self::default();
+        c.enabled = doc.bool_or("obs", "enabled", c.enabled);
+        if let Some(v) = doc.get("obs", "trace") {
+            if let Some(s) = v.as_str() {
+                c.trace_path = Some(s.to_string());
+            }
+        }
+        c.format = doc.str_or("obs", "format", &c.format).to_string();
+        c.ring_cap = doc.usize_or("obs", "ring_cap", c.ring_cap).max(1);
+        c
+    }
+}
+
 /// Asynchronous diffusion / straggler experiment (`ddl async`,
 /// `net/async_exec.rs`). Loaded from the TOML section `[async]`; the
 /// delay knobs feed [`crate::net::AsyncParams`] via [`Self::async_params`].
@@ -497,6 +550,8 @@ pub struct AsyncConfig {
     pub control: ControlConfig,
     /// Deterministic fault injection (`[chaos]` TOML block, `ddl chaos`).
     pub chaos: ChaosConfig,
+    /// Observability layer (`[obs]` TOML block, `--trace`).
+    pub obs: ObsConfig,
 }
 
 impl Default for AsyncConfig {
@@ -520,6 +575,7 @@ impl Default for AsyncConfig {
             checkpoints: 4,
             control: ControlConfig::default(),
             chaos: ChaosConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -558,6 +614,7 @@ impl AsyncConfig {
         c.checkpoints = doc.usize_or("async", "checkpoints", c.checkpoints).max(1);
         c.control = ControlConfig::from_toml(doc);
         c.chaos = ChaosConfig::from_toml(doc);
+        c.obs = ObsConfig::from_toml(doc);
         c
     }
 
@@ -963,6 +1020,44 @@ mod tests {
         assert_eq!(off.combine_mode().unwrap(), crate::net::CombineMode::Metropolis);
         let bad = ChaosConfig { pushsum: "maybe".into(), ..ChaosConfig::default() };
         assert!(bad.combine_mode().is_err());
+    }
+
+    #[test]
+    fn obs_defaults_off() {
+        let c = ObsConfig::default();
+        assert!(!c.enabled);
+        assert!(c.trace_path.is_none());
+        assert!(!c.active(), "no recording unless asked");
+        assert_eq!(c.format, "auto");
+        assert!(c.ring_cap >= 1);
+        assert!(!ServeConfig::default().obs.active());
+        assert!(!AsyncConfig::default().obs.active());
+    }
+
+    /// Round trip for every knob exposed in the `[obs]` TOML block, which
+    /// rides on both ServeConfig and AsyncConfig.
+    #[test]
+    fn obs_toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[obs]\nenabled = true\ntrace = \"out/run.jsonl\"\nformat = \"jsonl\"\n\
+             ring_cap = 1024\n",
+        )
+        .unwrap();
+        let o = ObsConfig::from_toml(&doc);
+        assert!(o.enabled);
+        assert_eq!(o.trace_path.as_deref(), Some("out/run.jsonl"));
+        assert_eq!(o.format, "jsonl");
+        assert_eq!(o.ring_cap, 1024);
+        assert!(o.active());
+        assert!(ServeConfig::from_toml(&doc).obs.active());
+        assert!(AsyncConfig::from_toml(&doc).obs.active());
+        // A path alone implies recording; ring_cap is clamped to ≥ 1.
+        let path_only = ObsConfig::from_toml(
+            &TomlDoc::parse("[obs]\ntrace = \"t.json\"\nring_cap = 0\n").unwrap(),
+        );
+        assert!(!path_only.enabled);
+        assert!(path_only.active());
+        assert_eq!(path_only.ring_cap, 1);
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::net::{
     AsyncNetwork, AsyncParams, ChaosStats, CombineMode, Fault, FaultSchedule, MessageStats,
     TauController, TauDecision,
 };
+use crate::obs::{ArgValue, Track};
 use crate::rng::Pcg64;
 
 use super::straggler::build_topology;
@@ -95,6 +96,11 @@ pub struct ChaosReport {
     pub max_staleness: usize,
     /// τ-controller decision trace when `[control] adaptive_tau` rode
     /// along (`None` otherwise).
+    ///
+    /// Deprecated alias: the same decisions now also flow into the trace
+    /// subsystem as `tau_decision` instants on the `tau` controller lane
+    /// (`ddl chaos --trace`, see [`crate::obs`]). The field stays for one
+    /// release; prefer the trace events.
     pub tau_trace: Option<Vec<TauDecision>>,
 }
 
@@ -253,6 +259,11 @@ pub fn run_chaos(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<ChaosRe
         AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, chaos_params.clone())?;
     let mut clean_net =
         AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, base.clone())?;
+    // Trace the chaos instance only — never the replay or empty-schedule
+    // instances, whose job is proving bitwise contracts that must hold
+    // with or without a recorder attached.
+    let obs = crate::obs::handle_for(&cfg.obs);
+    chaos_net.attach_obs(obs.clone());
 
     let checkpoints = cfg.checkpoints.max(1);
     let mut rows = Vec::with_capacity(checkpoints);
@@ -287,6 +298,21 @@ pub fn run_chaos(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<ChaosRe
                 msd_clean,
                 tau,
             );
+            if obs.enabled() {
+                let decided = ctl.trace().last().expect("decide() just pushed");
+                obs.instant(
+                    t_us,
+                    "tau_decision",
+                    Track::Controller("tau"),
+                    vec![
+                        ("tau", ArgValue::U(next as u64)),
+                        ("prev", ArgValue::U(tau as u64)),
+                        ("gate_wait_frac", ArgValue::F(decided.gate_wait_frac)),
+                        ("msd_drift", ArgValue::F(decided.msd_drift)),
+                        ("partition", ArgValue::B(decided.partition)),
+                    ],
+                );
+            }
             if next != tau && !done {
                 chaos_net.set_tau(next, &task, t_us);
                 tau = next;
@@ -344,6 +370,13 @@ pub fn run_chaos(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<ChaosRe
     let empty_parity = empty_net.sim_time_us() == clean_time_us
         && empty_net.stats() == clean_full.stats()
         && empty_net.msd_vs(&exact.nu).to_bits() == clean_full.msd_vs(&exact.nu).to_bits();
+
+    if let Some(n) = crate::obs::export(&cfg.obs, &obs)? {
+        log(&format!(
+            "trace: wrote {n} events to {}",
+            cfg.obs.trace_path.as_deref().unwrap_or("?")
+        ));
+    }
 
     Ok(ChaosReport {
         rows,

@@ -23,6 +23,7 @@ use crate::graph::{metropolis_weights, Graph, Topology};
 use crate::infer::{exact_dual, DiffusionParams};
 use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use crate::net::{AsyncNetwork, AsyncParams, MessageStats, TauController, TauDecision};
+use crate::obs::{ArgValue, Track};
 use crate::rng::Pcg64;
 
 /// One simulated-time checkpoint of the sync-vs-async comparison.
@@ -179,6 +180,12 @@ pub fn run_straggler(
     let mut sync_net =
         AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, sync_params)?;
     let mut async_net = AsyncNetwork::new(graph, weights, cfg.dim, None, async_params)?;
+    // Trace only the async instance (the figure of interest); the sync
+    // comparator and the time-pinning run stay untraced. The parity test
+    // holds the traced ≡ untraced contract, so attaching here cannot
+    // change any number in the report.
+    let obs = crate::obs::handle_for(&cfg.obs);
+    async_net.attach_obs(obs.clone());
     let checkpoints = cfg.checkpoints.max(1);
     let mut rows = Vec::with_capacity(checkpoints);
     for c in 1..=checkpoints {
@@ -200,6 +207,12 @@ pub fn run_straggler(
     // figures (run_clamped resumes exactly; no second simulation needed).
     async_net.run(&dict, &task, &x, params)?;
     let async_time_us = async_net.sim_time_us();
+    if let Some(n) = crate::obs::export(&cfg.obs, &obs)? {
+        log(&format!(
+            "trace: wrote {n} events to {}",
+            cfg.obs.trace_path.as_deref().unwrap_or("?")
+        ));
+    }
 
     Ok(StragglerReport {
         rows,
@@ -236,6 +249,11 @@ pub struct AdaptiveTauReport {
     pub rows: Vec<TauRow>,
     /// The controller's decision trace (one entry per epoch; the
     /// replay-determinism test compares it bitwise).
+    ///
+    /// Deprecated alias: the same decisions now also flow into the trace
+    /// subsystem as `tau_decision` instants on the `tau` controller lane
+    /// (`ddl async --adaptive-tau --trace`, see [`crate::obs`]). The
+    /// field stays for one release; prefer the trace events.
     pub trace: Vec<TauDecision>,
     /// Simulated completion time of the adaptive executor.
     pub completion_us: u64,
@@ -326,6 +344,9 @@ pub fn run_adaptive_tau(
     )?;
     let mut probe =
         AsyncNetwork::new(graph, weights, cfg.dim, None, AsyncParams { tau: 0, ..base })?;
+    // Trace the adaptive executor only (the probe is a comparator).
+    let obs = crate::obs::handle_for(&cfg.obs);
+    adaptive.attach_obs(obs.clone());
 
     log(&format!(
         "adaptive-tau: N={} M={} topology={}, iters={}, tau0={} in [{}, {}], epoch {} µs{}",
@@ -366,6 +387,22 @@ pub fn run_adaptive_tau(
             tau,
         );
         let decided = controller.trace().last().expect("decide() just pushed");
+        if obs.enabled() {
+            // The controller's epoch decision as a trace instant — the
+            // same payload [`TauDecision`] carries.
+            obs.instant(
+                t,
+                "tau_decision",
+                Track::Controller("tau"),
+                vec![
+                    ("tau", ArgValue::U(next_tau as u64)),
+                    ("prev", ArgValue::U(tau as u64)),
+                    ("gate_wait_frac", ArgValue::F(decided.gate_wait_frac)),
+                    ("msd_drift", ArgValue::F(decided.msd_drift)),
+                    ("partition", ArgValue::B(decided.partition)),
+                ],
+            );
+        }
         rows.push(TauRow {
             t_us: t,
             tau,
@@ -392,6 +429,12 @@ pub fn run_adaptive_tau(
             tau = next_tau;
         }
         t += epoch_us;
+    }
+    if let Some(n) = crate::obs::export(&cfg.obs, &obs)? {
+        log(&format!(
+            "trace: wrote {n} events to {}",
+            cfg.obs.trace_path.as_deref().unwrap_or("?")
+        ));
     }
 
     Ok(AdaptiveTauReport {

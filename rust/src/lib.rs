@@ -46,6 +46,7 @@ pub mod math;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod ops;
 pub mod rng;
 #[cfg(feature = "xla")]

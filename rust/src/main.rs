@@ -10,6 +10,7 @@
 //! * `serve`     — streaming inference service with online adaptation
 //! * `async`     — sync-vs-async diffusion under a straggler delay model
 //! * `chaos`     — deterministic fault injection over the async executor
+//! * `trace-check`— validate a JSONL trace produced by `--trace`
 //! * `bench-gate`— derived-speedup regression gate for BENCH_*.json
 //!
 //! Options can come from a TOML config (`--config path`) with CLI
@@ -38,6 +39,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("async") => cmd_async(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("trace-check") => cmd_trace_check(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             println!("{HELP}");
@@ -64,7 +66,7 @@ COMMANDS:
               [--max-wait-us t] [--samples n] [--rate r] [--burst n]
               [--agents n] [--topology ring|grid|er|full] [--mu-w x]
               [--no-adapt] [--pipeline | --no-pipeline] [--pipeline-depth d]
-              [--adaptive] [--slo-ms x]
+              [--adaptive] [--slo-ms x] [--trace path] [--trace-format f]
               (three-stage concurrent pipeline: batch formation | diffusion
               inference | Eq. 51 update overlap on separate threads;
               bit-identical schedule; --no-pipeline overrides the TOML;
@@ -79,7 +81,7 @@ COMMANDS:
               [--compute-us t] [--link-dist d] [--link-us t]
               [--slow-agent k | --no-straggler] [--slow-factor x]
               [--drift-period-us t] [--checkpoints c] [--ring-k k]
-              [--adaptive-tau]
+              [--adaptive-tau] [--trace path] [--trace-format f]
               (per-edge psi exchange with bounded staleness tau on a
               deterministic discrete-event clock; tau = 0 reproduces the
               BSP trajectory bit-for-bit and serves as the sync baseline;
@@ -92,7 +94,7 @@ COMMANDS:
               [--chaos-seed n] [--partition-frac x] [--partition-start-frac x]
               [--partition-len-frac x] [--drop-prob p] [--crash-agent k]
               [--churn-windows w] [--pushsum auto|on|off] [--adaptive-tau]
-              [--bias-probe]
+              [--bias-probe] [--trace path] [--trace-format f]
               (FaultSchedule of healing partitions, edge churn, message
               drops, and agent crash/recovery windows — every event a pure
               function of (seed, sim-time), so chaos runs replay
@@ -100,11 +102,27 @@ COMMANDS:
               fault-free trajectory bit-for-bit; push-sum combine is
               selected automatically when faults make the live topology
               directed; TOML [chaos])
+  trace-check validate a JSONL trace written by --trace: --trace path
+              (parses every line, checks the Chrome trace_event fields)
   bench-gate  compare derived speedups in --current json against --baseline
               json; fail below --min-frac (default 0.5) of the baseline
 
 Common: --seed n, --threads t (parallel adapt/combine; results identical),
-        --artifacts dir (default: artifacts)";
+        --artifacts dir (default: artifacts)
+Tracing: --trace path writes a virtual-clock event trace (serve/async/chaos);
+        --trace-format auto|jsonl|chrome (auto: .jsonl => JSONL, else a
+        Chrome trace_event document loadable at https://ui.perfetto.dev);
+        TOML [obs]. Tracing never perturbs a run: traced and untraced
+        executions are bit-identical (tests/obs_parity.rs)";
+
+/// Apply the shared `--trace` / `--trace-format` overrides to a config's
+/// `[obs]` block (serve, async, and chaos all take them identically).
+fn apply_trace_args(obs: &mut ddl::config::experiment::ObsConfig, args: &Args) {
+    if let Some(p) = args.get("trace") {
+        obs.trace_path = Some(p.to_string());
+    }
+    obs.format = args.str_or("trace-format", &obs.format).to_string();
+}
 
 fn run(code: impl FnOnce() -> ddl::Result<()>) -> i32 {
     match code() {
@@ -277,6 +295,7 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         cfg.control.enabled = cfg.control.enabled || args.flag("adaptive");
         cfg.control.slo_p99_ms = args.f32_or("slo-ms", cfg.control.slo_p99_ms as f32)? as f64;
+        apply_trace_args(&mut cfg.obs, args);
         let report = ddl::serve::run_service(&cfg, &mut |s| println!("{s}"))?;
         println!("== serve report ==");
         println!("{}", report.summary(cfg.agents));
@@ -315,6 +334,7 @@ fn cmd_async(args: &Args) -> i32 {
         cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
         cfg.checkpoints = args.usize_or("checkpoints", cfg.checkpoints)?.max(1);
         cfg.control.adaptive_tau = cfg.control.adaptive_tau || args.flag("adaptive-tau");
+        apply_trace_args(&mut cfg.obs, args);
         if cfg.control.adaptive_tau {
             let report = ddl::coordinator::run_adaptive_tau(&cfg, &mut |s| println!("{s}"))?;
             println!("== adaptive-tau report (per control epoch) ==");
@@ -365,6 +385,7 @@ fn cmd_chaos(args: &Args) -> i32 {
         cfg.chaos.churn_windows = args.usize_or("churn-windows", cfg.chaos.churn_windows)?;
         cfg.chaos.pushsum = args.str_or("pushsum", &cfg.chaos.pushsum).to_string();
         cfg.control.adaptive_tau = cfg.control.adaptive_tau || args.flag("adaptive-tau");
+        apply_trace_args(&mut cfg.obs, args);
         if args.flag("bias-probe") {
             let probe = ddl::coordinator::run_pushsum_bias(&cfg, &mut |s| println!("{s}"))?;
             println!("== push-sum bias probe (persistent directed outage) ==");
@@ -382,6 +403,21 @@ fn cmd_chaos(args: &Args) -> i32 {
         let report = ddl::coordinator::run_chaos(&cfg, &mut |s| println!("{s}"))?;
         println!("== chaos report (MSD vs simulated time) ==");
         println!("{}", report.summary(cfg.agents));
+        Ok(())
+    })
+}
+
+fn cmd_trace_check(args: &Args) -> i32 {
+    run(|| {
+        let path = args
+            .get("trace")
+            .ok_or_else(|| ddl::DdlError::Config("trace-check: --trace path required".into()))?;
+        let c = ddl::obs::check_jsonl(Path::new(path))?;
+        println!(
+            "trace-check: {path} ok — {} events ({} span begins, {} span ends, {} instants, \
+             {} counters)",
+            c.events, c.span_begins, c.span_ends, c.instants, c.counters
+        );
         Ok(())
     })
 }

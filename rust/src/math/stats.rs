@@ -49,12 +49,14 @@ pub fn mad(x: &[f64]) -> f64 {
 
 /// Percentile in [0, 100] with linear interpolation over an
 /// already-sorted slice. The slice must be ascending (as produced by
-/// [`Percentiles`]); an empty slice reads 0.0.
+/// [`Percentiles`]); an empty slice reads 0.0, and `p` outside [0, 100]
+/// clamps to the extremes instead of indexing out of bounds.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let max_rank = (sorted.len() - 1) as f64;
+    let rank = ((p / 100.0) * max_rank).clamp(0.0, max_rank);
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -167,5 +169,37 @@ mod tests {
         let sorted = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile_sorted(&sorted, 50.0), 2.5);
         assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+
+    /// Exact-rank contract at the boundaries: a 1-element vector answers
+    /// every percentile with that element, a 2-element vector hits its
+    /// endpoints exactly at p = 0/100, and out-of-range p clamps instead
+    /// of indexing past the end (the off-by-one this test pinned down:
+    /// `rank.ceil()` used to exceed `len − 1` for p > 100 and panic).
+    #[test]
+    fn percentile_boundaries_exact_rank() {
+        let one = Percentiles::new(&[7.5]);
+        for p in [-10.0, 0.0, 37.0, 50.0, 100.0, 150.0] {
+            assert_eq!(one.get(p), 7.5, "1-element, p = {p}");
+        }
+        assert_eq!(one.max(), 7.5);
+
+        let two = Percentiles::new(&[10.0, 2.0]);
+        assert_eq!(two.get(0.0), 2.0, "p = 0 is the minimum, exactly");
+        assert_eq!(two.get(100.0), 10.0, "p = 100 is the maximum, exactly");
+        assert_eq!(two.get(50.0), 6.0);
+        assert_eq!(two.get(-5.0), 2.0, "below-range clamps to min");
+        assert_eq!(two.get(120.0), 10.0, "above-range clamps to max");
+
+        let flat = Percentiles::new(&[4.0; 5]);
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(flat.get(p), 4.0, "all-equal, p = {p}");
+        }
+
+        // Exact ranks land on samples, no interpolation residue: for
+        // n = 5, p = 25 is rank 1 exactly.
+        let five = Percentiles::new(&[50.0, 10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(five.get(25.0), 20.0);
+        assert_eq!(five.get(75.0), 40.0);
     }
 }

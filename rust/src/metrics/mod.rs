@@ -1,5 +1,9 @@
 //! Evaluation metrics: PSNR (Fig. 5), ROC/AUC (Figs. 6–7, Tables III–IV),
 //! and SNR learning curves (Fig. 4).
+//!
+//! These are *quality* metrics over experiment outputs. Runtime
+//! observability — named counters/gauges/histograms and virtual-clock
+//! trace events — lives in [`crate::obs`] ([`crate::obs::MetricsRegistry`]).
 
 pub mod psnr;
 pub mod roc;

@@ -89,8 +89,9 @@ use crate::graph::Graph;
 use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
-use crate::net::chaos::{ChaosPolicy, ChaosStats, CombineMode, FaultSchedule};
+use crate::net::chaos::{ChaosPolicy, ChaosStats, CombineMode, Fault, FaultSchedule};
 use crate::net::message::MessageStats;
+use crate::obs::{ArgValue, MetricsRegistry, ObsHandle, Track};
 use crate::ops::project::clip_linf;
 use crate::rng::Pcg64;
 use std::cmp::Reverse;
@@ -386,6 +387,10 @@ pub struct AsyncNetwork {
     /// True when `Auto` upgraded Metropolis → push-sum (directed faults).
     auto_pushsum: bool,
     chaos_stats: ChaosStats,
+    /// Trace sink (default: disabled). Emitting never consumes
+    /// randomness or advances the clock — traced runs replay untraced
+    /// runs bit-for-bit (`tests/obs_parity.rs`).
+    obs: ObsHandle,
 }
 
 impl AsyncNetwork {
@@ -491,7 +496,81 @@ impl AsyncNetwork {
             pushsum,
             auto_pushsum,
             chaos_stats: ChaosStats::default(),
+            obs: ObsHandle::null(),
         })
+    }
+
+    /// Install a trace sink. Call before [`Self::run`] /
+    /// [`Self::run_clamped`] so the fault-window spans (emitted once at
+    /// start) are captured too.
+    pub fn attach_obs(&mut self, obs: ObsHandle) {
+        self.obs = obs;
+    }
+
+    /// Publish this executor's accounting into the unified
+    /// [`MetricsRegistry`] ([`Self::stats`] / [`Self::chaos_stats`] stay
+    /// available as typed views; the registry reconstructs them
+    /// bit-for-bit).
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.absorb_message_stats("net", &self.stats);
+        r.absorb_chaos_stats(&self.chaos_stats);
+        r.set_gauge("async.gate_wait_us", self.gate_wait_us as f64);
+        r.set_gauge("async.max_staleness", self.max_staleness as f64);
+        r.set_gauge("async.tau", self.params.tau as f64);
+        r.set_gauge("async.sim_time_us", self.last_combine_us as f64);
+        r
+    }
+
+    /// Emit the fault schedule as span pairs on `fault:*` stage lanes —
+    /// the windows are pure schedule data, so they are traced up-front
+    /// (with future timestamps) rather than re-derived event by event.
+    fn trace_fault_windows(&self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        for f in self.params.chaos.faults() {
+            let (name, a, b, args): (_, u64, u64, Vec<(&'static str, ArgValue)>) = match f {
+                Fault::EdgeDown { u, v, from_us, until_us } => (
+                    "fault:edge_down",
+                    *from_us,
+                    *until_us,
+                    vec![("u", ArgValue::U(*u as u64)), ("v", ArgValue::U(*v as u64))],
+                ),
+                Fault::LinkDown { from, to, from_us, until_us } => (
+                    "fault:link_down",
+                    *from_us,
+                    *until_us,
+                    vec![("from", ArgValue::U(*from as u64)), ("to", ArgValue::U(*to as u64))],
+                ),
+                Fault::Partition { side, from_us, until_us } => (
+                    "fault:partition",
+                    *from_us,
+                    *until_us,
+                    vec![(
+                        "cut_side",
+                        ArgValue::U(side.iter().filter(|&&s| s).count() as u64),
+                    )],
+                ),
+                Fault::Crash { agent, from_us, until_us } => (
+                    "fault:crash",
+                    *from_us,
+                    *until_us,
+                    vec![("agent", ArgValue::U(*agent as u64))],
+                ),
+                Fault::Drop { p, from_us, until_us } => {
+                    ("fault:drop", *from_us, *until_us, vec![("p", ArgValue::F(*p))])
+                }
+            };
+            self.obs.emit(crate::obs::TraceEvent {
+                t_us: a,
+                kind: crate::obs::EventKind::SpanBegin,
+                name,
+                track: Track::Stage(name),
+                args,
+            });
+            self.obs.span_end(b, name, Track::Stage(name));
+        }
     }
 
     fn push_event(&mut self, t: u64, kind: EventKind) {
@@ -539,12 +618,14 @@ impl AsyncNetwork {
         self.thr = vec![0.0; dict.k()];
         self.level_counts = vec![0; params.iters + 1];
         self.level_counts[0] = self.agents.len();
+        self.trace_fault_windows();
         if params.iters == 0 {
             self.done_count = self.agents.len();
             return;
         }
         for k in 0..self.agents.len() {
             let d = self.sample_compute(k, 0);
+            self.obs.span_begin(0, "adapt", Track::Agent(k));
             self.push_event(d, EventKind::AdaptDone { agent: k });
         }
     }
@@ -621,6 +702,15 @@ impl AsyncNetwork {
                     self.on_adapt_done(agent, ev.t, dict, task, x)
                 }
                 EventKind::Deliver { to, nb_slot, iter, psi, wshare } => {
+                    if self.obs.enabled() {
+                        let from = self.graph.neighbors(to)[nb_slot];
+                        self.obs.instant(
+                            ev.t,
+                            "psi_deliver",
+                            Track::Edge { from, to },
+                            vec![("iter", ArgValue::U(iter as u64))],
+                        );
+                    }
                     let ag = &mut self.agents[to];
                     ag.seen[nb_slot] = Some(ag.seen[nb_slot].map_or(iter, |s| s.max(iter)));
                     ag.inbox[nb_slot].push((iter, psi, wshare));
@@ -655,9 +745,20 @@ impl AsyncNetwork {
         if self.chaos_active && !self.params.chaos.agent_alive(k, t) {
             let rec = self.params.chaos.agent_recover_us(k, t);
             self.chaos_stats.crash_deferrals += 1;
+            // The open "adapt" span keeps running across the deferral —
+            // that is the per-agent stall the trace makes visible.
+            if self.obs.enabled() {
+                self.obs.instant(
+                    t,
+                    "crash_defer",
+                    Track::Agent(k),
+                    vec![("recover_us", ArgValue::U(rec))],
+                );
+            }
             self.push_event(rec.max(t.saturating_add(1)), EventKind::AdaptDone { agent: k });
             return;
         }
+        self.obs.span_end(t, "adapt", Track::Agent(k));
         let n = self.agents.len();
         let cf_over_n = task.conj_grad_scale() / n as f32;
         let inv_delta = 1.0 / task.delta();
@@ -707,6 +808,7 @@ impl AsyncNetwork {
         }
         self.agents[k].waiting = true;
         self.agents[k].wait_since = t;
+        self.obs.span_begin(t, "gate_wait", Track::Agent(k));
         if self.chaos_active {
             // Backstop liveness: under faults a gated combine never waits
             // past the receive timeout, so the event loop cannot stall.
@@ -746,12 +848,31 @@ impl AsyncNetwork {
                         .max(1)
                         .saturating_mul(1u64 << attempt.min(20));
                     self.chaos_stats.retries += 1;
+                    if self.obs.enabled() {
+                        self.obs.instant(
+                            t,
+                            "psi_retry",
+                            Track::Edge { from, to: nb },
+                            vec![
+                                ("iter", ArgValue::U(iter as u64)),
+                                ("attempt", ArgValue::U(attempt as u64 + 1)),
+                            ],
+                        );
+                    }
                     self.push_event(
                         t.saturating_add(backoff),
                         EventKind::Retry { from, edge, iter, psi, wshare, attempt: attempt + 1 },
                     );
                 } else {
                     self.chaos_stats.abandoned += 1;
+                    if self.obs.enabled() {
+                        self.obs.instant(
+                            t,
+                            "psi_abandon",
+                            Track::Edge { from, to: nb },
+                            vec![("iter", ArgValue::U(iter as u64))],
+                        );
+                    }
                 }
                 return;
             }
@@ -761,12 +882,28 @@ impl AsyncNetwork {
                 // the receiver never sees it, the sender never knows.
                 self.stats.record_exchange(1, self.m);
                 self.chaos_stats.dropped += 1;
+                if self.obs.enabled() {
+                    self.obs.instant(
+                        t,
+                        "psi_drop",
+                        Track::Edge { from, to: nb },
+                        vec![("iter", ArgValue::U(iter as u64))],
+                    );
+                }
                 return;
             }
         }
         let delay = self.sample_link(from, edge);
         let slot = self.rev_slot[from][edge];
         self.stats.record_exchange(1, self.m);
+        if self.obs.enabled() {
+            self.obs.instant(
+                t,
+                "psi_send",
+                Track::Edge { from, to: nb },
+                vec![("iter", ArgValue::U(iter as u64))],
+            );
+        }
         self.push_event(
             t.saturating_add(delay),
             EventKind::Deliver { to: nb, nb_slot: slot, iter, psi, wshare },
@@ -790,6 +927,14 @@ impl AsyncNetwork {
             return;
         }
         self.chaos_stats.forced_combines += 1;
+        if self.obs.enabled() {
+            self.obs.instant(
+                t,
+                "forced_combine",
+                Track::Agent(k),
+                vec![("iter", ArgValue::U(iter as u64))],
+            );
+        }
         self.try_combine(k, t, task, true);
     }
 
@@ -835,6 +980,15 @@ impl AsyncNetwork {
         } else {
             self.combine_metropolis(k, i, t, task);
         }
+        if self.obs.enabled() {
+            self.obs.span_end(t, "gate_wait", Track::Agent(k));
+            self.obs.instant(
+                t,
+                "combine",
+                Track::Agent(k),
+                vec![("iter", ArgValue::U(i as u64)), ("forced", ArgValue::B(force))],
+            );
+        }
         self.last_combine_us = t;
         // Round tracking: one round per completed network-wide wave.
         self.level_counts[i] -= 1;
@@ -847,6 +1001,7 @@ impl AsyncNetwork {
             self.done_count += 1;
         } else {
             let d = self.sample_compute(k, t);
+            self.obs.span_begin(t, "adapt", Track::Agent(k));
             self.push_event(t.saturating_add(d), EventKind::AdaptDone { agent: k });
         }
     }
@@ -1006,6 +1161,17 @@ impl AsyncNetwork {
     /// never exceeds the widest bound in effect while they waited.
     pub fn set_tau(&mut self, tau: usize, task: &TaskSpec, t_us: u64) {
         let widened = tau > self.params.tau;
+        if self.obs.enabled() && tau != self.params.tau {
+            self.obs.instant(
+                t_us,
+                "tau_set",
+                Track::Controller("tau"),
+                vec![
+                    ("tau", ArgValue::U(tau as u64)),
+                    ("prev", ArgValue::U(self.params.tau as u64)),
+                ],
+            );
+        }
         self.params.tau = tau;
         if widened {
             for k in 0..self.agents.len() {

@@ -13,6 +13,7 @@ use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
 use crate::net::message::{MessageStats, PsiMessage};
+use crate::obs::{ArgValue, MetricsRegistry, ObsHandle, Track};
 use crate::ops::project::clip_linf;
 
 /// Per-agent state in the message-passing simulation.
@@ -64,6 +65,10 @@ pub struct BspNetwork {
     graph: Graph,
     theta: Vec<f32>,
     stats: MessageStats,
+    /// Trace sink (default: disabled). BSP has no time axis, so events
+    /// are stamped with the **iteration index** (`tests/obs_parity.rs`
+    /// holds the traced ≡ untraced contract here too).
+    obs: ObsHandle,
 }
 
 impl BspNetwork {
@@ -80,7 +85,27 @@ impl BspNetwork {
         let agents = (0..n)
             .map(|_| AgentState { nu: vec![0.0; m], psi: vec![0.0; m], inbox: Vec::new() })
             .collect();
-        BspNetwork { agents, weights, graph, theta, stats: MessageStats::default() }
+        BspNetwork {
+            agents,
+            weights,
+            graph,
+            theta,
+            stats: MessageStats::default(),
+            obs: ObsHandle::null(),
+        }
+    }
+
+    /// Install a trace sink (events are stamped with the iteration index).
+    pub fn attach_obs(&mut self, obs: ObsHandle) {
+        self.obs = obs;
+    }
+
+    /// Publish this executor's accounting into the unified
+    /// [`MetricsRegistry`] ([`Self::stats`] stays the typed view).
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.absorb_message_stats("net", &self.stats);
+        r
     }
 
     /// Run diffusion; agents communicate only along graph edges.
@@ -146,6 +171,14 @@ impl BspNetwork {
             // One network-wide ψ exchange completed (see the round
             // convention in `net::message`).
             self.stats.end_round();
+            if self.obs.enabled() {
+                self.obs.instant(
+                    iter as u64,
+                    "bsp_round",
+                    Track::Run,
+                    vec![("messages", ArgValue::U(self.stats.messages as u64))],
+                );
+            }
         }
         Ok(())
     }

@@ -1,0 +1,93 @@
+//! Typed trace events stamped with each executor's *virtual* clock.
+//!
+//! Every event carries a `t_us` stamp read from the clock the emitting
+//! executor already maintains — the discrete-event sim clock in the
+//! async/chaos executors, the [`crate::serve::control::ServiceModel`] /
+//! [`crate::serve::control::PipeSim`] stage clocks in adaptive serving,
+//! and the **iteration index** in the BSP executor (which has no time
+//! axis at all). Tracing never advances any of these clocks and never
+//! consumes randomness; it only *reads* state the run already computed
+//! (the observer-effect contract, `tests/obs_parity.rs`).
+
+/// Identity of the lane an event belongs to. The Chrome exporter maps
+/// each variant to a (pid, tid) pair so Perfetto renders one row per
+/// agent / edge / stage / controller.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Track {
+    /// Per-agent lane (async/chaos executors).
+    Agent(usize),
+    /// Directed edge `from → to` (ψ send/delivery instants).
+    Edge { from: usize, to: usize },
+    /// Named lane: pipeline stages (`"form"`, `"infer"`, `"update"`) and
+    /// fault windows (`"fault:partition"`, `"fault:crash"`, ...).
+    Stage(&'static str),
+    /// Named controller (`"batch"`, `"depth"`, `"tau"`).
+    Controller(&'static str),
+    /// Whole-run lane (round marks, run-level counters).
+    Run,
+}
+
+/// One event argument value (the decision payload, staleness used, ...).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArgValue {
+    U(u64),
+    I(i64),
+    F(f64),
+    B(bool),
+    S(&'static str),
+}
+
+/// Event kind, mirroring the Chrome `trace_event` phases the exporters
+/// emit: span begin (`B`), span end (`E`), instant (`i`), counter (`C`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    SpanBegin,
+    SpanEnd,
+    Instant,
+    Counter(f64),
+}
+
+/// One trace event. `&'static str` names keep the hot emit path free of
+/// allocation (args allocate only when a site actually passes some, and
+/// instrumentation sites guard on [`crate::obs::ObsHandle::enabled`]
+/// before building them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual-clock stamp: sim-µs (async/chaos/serve) or iteration
+    /// index (BSP). Per-executor semantics are in EXPERIMENTS.md
+    /// §Observability.
+    pub t_us: u64,
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub track: Track,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl TraceEvent {
+    /// Event with no arguments.
+    pub fn new(t_us: u64, kind: EventKind, name: &'static str, track: Track) -> Self {
+        TraceEvent { t_us, kind, name, track, args: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_event_has_no_args() {
+        let ev = TraceEvent::new(5, EventKind::Instant, "x", Track::Agent(3));
+        assert_eq!(ev.t_us, 5);
+        assert!(ev.args.is_empty());
+        assert_eq!(ev.track, Track::Agent(3));
+    }
+
+    #[test]
+    fn counter_carries_its_value() {
+        let ev = TraceEvent::new(0, EventKind::Counter(2.5), "queue_depth", Track::Run);
+        match ev.kind {
+            EventKind::Counter(v) => assert_eq!(v, 2.5),
+            _ => panic!("expected counter"),
+        }
+    }
+}

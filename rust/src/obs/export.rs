@@ -1,0 +1,329 @@
+//! Trace exporters and the `ddl trace-check` validator.
+//!
+//! Both exporters serialize [`TraceEvent`]s in the Chrome `trace_event`
+//! object shape (`name`/`ph`/`ts`/`pid`/`tid`/`args`):
+//!
+//! * **JSONL** — one event object per line; grep-able, streamable, and
+//!   what [`check_jsonl`] validates in CI.
+//! * **Chrome** — a `{"traceEvents": [...]}` document that loads
+//!   directly in Perfetto (<https://ui.perfetto.dev>) or
+//!   `chrome://tracing`, with `thread_name` metadata so agent / edge /
+//!   stage / controller lanes are labeled.
+//!
+//! Track → (pid, tid) mapping: `Run` = (0, 0), `Agent(k)` = (1, k),
+//! `Edge{from, ..}` = (2, from) with the destination in `args.to`,
+//! `Stage(..)` = pid 3, `Controller(..)` = pid 4, with tids assigned by
+//! first appearance (stable for a deterministic event stream).
+//!
+//! The `ts` stamps are the executors' *virtual* clocks; `trace-check`
+//! deliberately does **not** require monotone `ts` — fault-window spans
+//! are emitted up-front at schedule-build time with future stamps.
+
+use crate::error::{DdlError, Result};
+use crate::obs::event::{ArgValue, EventKind, Track, TraceEvent};
+use std::fmt::Write as _;
+use std::path::Path;
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        // JSON has no NaN/Inf literals; clamp to null-ish zero.
+        "0".to_string()
+    }
+}
+
+fn arg_json(v: &ArgValue) -> String {
+    match v {
+        ArgValue::U(u) => format!("{u}"),
+        ArgValue::I(i) => format!("{i}"),
+        ArgValue::F(f) => json_f64(*f),
+        ArgValue::B(b) => format!("{b}"),
+        ArgValue::S(s) => format!("\"{}\"", json_escape(s)),
+    }
+}
+
+/// Lane-name bookkeeping: named tracks (stage / controller) get tids by
+/// first appearance; the Chrome exporter also emits `thread_name`
+/// metadata from the collected names.
+#[derive(Default)]
+struct Lanes {
+    names: Vec<(&'static str, u64, u64)>, // (name, pid, tid)
+}
+
+impl Lanes {
+    fn resolve(&mut self, track: &Track) -> (u64, u64) {
+        match track {
+            Track::Run => (0, 0),
+            Track::Agent(k) => (1, *k as u64),
+            Track::Edge { from, .. } => (2, *from as u64),
+            Track::Stage(name) => self.named(3, name),
+            Track::Controller(name) => self.named(4, name),
+        }
+    }
+
+    fn named(&mut self, pid: u64, name: &'static str) -> (u64, u64) {
+        if let Some((_, p, t)) = self.names.iter().find(|(n, p, _)| *n == name && *p == pid) {
+            return (*p, *t);
+        }
+        let tid = self.names.iter().filter(|(_, p, _)| *p == pid).count() as u64;
+        self.names.push((name, pid, tid));
+        (pid, tid)
+    }
+}
+
+/// One event as a Chrome `trace_event` JSON object (shared by both
+/// exporters — one schema, two containers).
+fn event_json(ev: &TraceEvent, lanes: &mut Lanes) -> String {
+    let (pid, tid) = lanes.resolve(&ev.track);
+    let (ph, extra) = match ev.kind {
+        EventKind::SpanBegin => ("B", String::new()),
+        EventKind::SpanEnd => ("E", String::new()),
+        EventKind::Instant => ("i", ",\"s\":\"t\"".to_string()),
+        EventKind::Counter(_) => ("C", String::new()),
+    };
+    let mut args = String::new();
+    if let EventKind::Counter(v) = ev.kind {
+        let _ = write!(args, "\"value\":{}", json_f64(v));
+    }
+    if let Track::Edge { to, .. } = ev.track {
+        if !args.is_empty() {
+            args.push(',');
+        }
+        let _ = write!(args, "\"to\":{to}");
+    }
+    for (k, v) in &ev.args {
+        if !args.is_empty() {
+            args.push(',');
+        }
+        let _ = write!(args, "\"{}\":{}", json_escape(k), arg_json(v));
+    }
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"{}\",\"ts\":{},\"pid\":{},\"tid\":{}{},\"args\":{{{}}}}}",
+        json_escape(ev.name),
+        ph,
+        ev.t_us,
+        pid,
+        tid,
+        extra,
+        args,
+    )
+}
+
+fn write_file(path: &Path, contents: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| DdlError::Runtime(format!("trace: mkdir {parent:?}: {e}")))?;
+        }
+    }
+    std::fs::write(path, contents)
+        .map_err(|e| DdlError::Runtime(format!("trace: write {path:?}: {e}")))
+}
+
+/// Write one event object per line (the `trace-check`-validated format).
+pub fn write_jsonl(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let mut lanes = Lanes::default();
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&event_json(ev, &mut lanes));
+        out.push('\n');
+    }
+    write_file(path, &out)
+}
+
+/// Write a Perfetto-loadable Chrome `trace_event` document, including
+/// `process_name`/`thread_name` metadata for labeled lanes.
+pub fn write_chrome(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let mut lanes = Lanes::default();
+    let mut body: Vec<String> = Vec::with_capacity(events.len() + 16);
+    for ev in events {
+        body.push(event_json(ev, &mut lanes));
+    }
+    for (pid, pname) in
+        [(0u64, "run"), (1, "agents"), (2, "edges"), (3, "stages"), (4, "controllers")]
+    {
+        body.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{pname}\"}}}}"
+        ));
+    }
+    for (name, pid, tid) in &lanes.names {
+        body.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(name)
+        ));
+    }
+    let doc = format!("{{\"traceEvents\":[\n{}\n]}}\n", body.join(",\n"));
+    write_file(path, &doc)
+}
+
+/// Summary returned by [`check_jsonl`] (the `ddl trace-check` payload).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub span_begins: usize,
+    pub span_ends: usize,
+    pub instants: usize,
+    pub counters: usize,
+}
+
+/// Validate a JSONL event log against the event schema: every non-empty
+/// line must parse as a JSON object with a string `name`, a `ph` in
+/// `{B, E, i, C, M}`, and (for non-metadata events) numeric `ts`, `pid`,
+/// `tid`, plus an `args` object. `ts` monotonicity is *not* required —
+/// see the module docs.
+pub fn check_jsonl(path: &Path) -> Result<TraceCheck> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| DdlError::Runtime(format!("trace-check: read {path:?}: {e}")))?;
+    let mut sum = TraceCheck::default();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = idx + 1;
+        let bad = |what: &str| {
+            DdlError::Runtime(format!("trace-check: line {lineno}: {what}"))
+        };
+        let v = crate::config::json::JsonValue::parse(line)
+            .map_err(|e| bad(&format!("not valid JSON ({e})")))?;
+        v.get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| bad("missing string field 'name'"))?;
+        let ph = v
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| bad("missing string field 'ph'"))?;
+        match ph {
+            "B" => sum.span_begins += 1,
+            "E" => sum.span_ends += 1,
+            "i" => sum.instants += 1,
+            "C" => sum.counters += 1,
+            "M" => {}
+            other => return Err(bad(&format!("unknown phase '{other}'"))),
+        }
+        if ph != "M" {
+            v.get("ts")
+                .and_then(|t| t.as_f64())
+                .ok_or_else(|| bad("missing numeric field 'ts'"))?;
+            v.get("args")
+                .and_then(|a| a.as_object())
+                .ok_or_else(|| bad("missing object field 'args'"))?;
+        }
+        v.get("pid")
+            .and_then(|p| p.as_f64())
+            .ok_or_else(|| bad("missing numeric field 'pid'"))?;
+        v.get("tid")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| bad("missing numeric field 'tid'"))?;
+        sum.events += 1;
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::new(10, EventKind::SpanBegin, "adapt", Track::Agent(3)),
+            TraceEvent::new(25, EventKind::SpanEnd, "adapt", Track::Agent(3)),
+            TraceEvent {
+                t_us: 25,
+                kind: EventKind::Instant,
+                name: "psi_send",
+                track: Track::Edge { from: 3, to: 4 },
+                args: vec![("iter", ArgValue::U(7)), ("dropped", ArgValue::B(false))],
+            },
+            TraceEvent::new(30, EventKind::Counter(5.0), "queue_depth", Track::Stage("form")),
+            TraceEvent {
+                t_us: 40,
+                kind: EventKind::Instant,
+                name: "tau_set",
+                track: Track::Controller("tau"),
+                args: vec![("tau", ArgValue::I(3)), ("drift", ArgValue::F(0.25))],
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_check() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("ddl_obs_export_test.jsonl");
+        write_jsonl(&path, &sample_events()).unwrap();
+        let sum = check_jsonl(&path).unwrap();
+        assert_eq!(sum.events, 5);
+        assert_eq!(sum.span_begins, 1);
+        assert_eq!(sum.span_ends, 1);
+        assert_eq!(sum.instants, 2);
+        assert_eq!(sum.counters, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn chrome_document_parses_and_carries_metadata() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("ddl_obs_export_test.json");
+        write_chrome(&path, &sample_events()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::config::json::JsonValue::parse(&text).unwrap();
+        let evs = doc.get("traceEvents").and_then(|e| e.as_array()).unwrap();
+        // 5 events + 5 process_name + 2 thread_name (form, tau).
+        assert_eq!(evs.len(), 12);
+        let named: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        assert!(named.contains(&"thread_name"));
+        assert!(named.contains(&"psi_send"));
+        // Edge destination travels in args.
+        let psi = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("psi_send"))
+            .unwrap();
+        let args = psi.get("args").unwrap();
+        assert_eq!(args.get("to").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(args.get("iter").and_then(|v| v.as_usize()), Some(7));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_rejects_malformed_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("ddl_obs_export_bad.jsonl");
+        std::fs::write(&path, "{\"name\":\"x\",\"ph\":\"Z\",\"ts\":0,\"pid\":0,\"tid\":0,\"args\":{}}\n")
+            .unwrap();
+        assert!(check_jsonl(&path).is_err(), "unknown phase must fail");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(check_jsonl(&path).is_err(), "non-JSON must fail");
+        std::fs::write(&path, "{\"ph\":\"i\",\"ts\":0,\"pid\":0,\"tid\":0,\"args\":{}}\n").unwrap();
+        assert!(check_jsonl(&path).is_err(), "missing name must fail");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn escaping_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_f64(f64::NAN), "0");
+        assert_eq!(arg_json(&ArgValue::S("q\"q")), "\"q\\\"q\"");
+    }
+}

@@ -1,0 +1,118 @@
+//! Deterministic observability layer: virtual-clock tracing, a unified
+//! metrics registry, and trace export shared by every executor.
+//!
+//! The layer has three pieces:
+//!
+//! * **Events + sinks** ([`event`], [`sink`]) — executors hold an
+//!   [`ObsHandle`] (default: disabled) and emit typed span / instant /
+//!   counter events stamped with the *virtual* clock they already
+//!   maintain. The non-negotiable contract: tracing never perturbs the
+//!   run — no RNG consumption, no clock advancement. A traced run is
+//!   bit-identical to an untraced one on every executor
+//!   (`tests/obs_parity.rs`).
+//! * **Metrics** ([`registry`]) — [`MetricsRegistry`] is the single
+//!   named store for counters/gauges/histograms; the legacy
+//!   [`crate::net::MessageStats`] / [`crate::net::ChaosStats`] structs
+//!   are round-trip views over it.
+//! * **Export** ([`export`]) — JSONL and Perfetto-loadable Chrome
+//!   `trace_event` writers plus the `ddl trace-check` validator, wired
+//!   through `ddl <subcmd> --trace <path>` and the TOML `[obs]` block
+//!   ([`crate::config::experiment::ObsConfig`]).
+//!
+//! Event-schema and per-executor clock semantics are documented in
+//! EXPERIMENTS.md §Observability.
+
+pub mod event;
+pub mod export;
+pub mod registry;
+pub mod sink;
+
+pub use event::{ArgValue, EventKind, Track, TraceEvent};
+pub use export::{check_jsonl, write_chrome, write_jsonl, TraceCheck};
+pub use registry::MetricsRegistry;
+pub use sink::{NullSink, ObsHandle, Recorder, TraceSink};
+
+use crate::config::experiment::ObsConfig;
+use crate::error::{DdlError, Result};
+use std::path::Path;
+
+/// Build the handle an executor should record into: a ring-buffered
+/// recorder when the config asks for tracing, the zero-cost null handle
+/// otherwise.
+pub fn handle_for(cfg: &ObsConfig) -> ObsHandle {
+    if cfg.active() {
+        ObsHandle::recording(cfg.ring_cap)
+    } else {
+        ObsHandle::null()
+    }
+}
+
+/// Export the handle's events per the config. Returns `Ok(None)` when no
+/// trace path is configured, `Ok(Some(n))` with the event count written
+/// otherwise. Format `auto` picks JSONL for `.jsonl` paths and Chrome
+/// for everything else.
+pub fn export(cfg: &ObsConfig, handle: &ObsHandle) -> Result<Option<usize>> {
+    let Some(path) = &cfg.trace_path else {
+        return Ok(None);
+    };
+    let path = Path::new(path);
+    let jsonl = match cfg.format.as_str() {
+        "jsonl" => true,
+        "chrome" => false,
+        "auto" => path.extension().and_then(|e| e.to_str()) == Some("jsonl"),
+        other => {
+            return Err(DdlError::Config(format!(
+                "obs.format: expected auto|jsonl|chrome, got '{other}'"
+            )))
+        }
+    };
+    let events = handle.snapshot();
+    if jsonl {
+        write_jsonl(path, &events)?;
+    } else {
+        write_chrome(path, &events)?;
+    }
+    Ok(Some(events.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_for_follows_config() {
+        let mut cfg = ObsConfig::default();
+        assert!(!handle_for(&cfg).enabled());
+        cfg.enabled = true;
+        assert!(handle_for(&cfg).enabled());
+        cfg.enabled = false;
+        cfg.trace_path = Some("x.jsonl".into());
+        assert!(handle_for(&cfg).enabled(), "a trace path implies recording");
+    }
+
+    #[test]
+    fn export_routes_by_format_and_extension() {
+        let h = ObsHandle::recording(8);
+        h.instant(1, "x", Track::Run, Vec::new());
+        let dir = std::env::temp_dir();
+
+        let mut cfg = ObsConfig::default();
+        assert_eq!(export(&cfg, &h).unwrap(), None, "no path → no export");
+
+        let jl = dir.join("ddl_obs_mod_test.jsonl");
+        cfg.trace_path = Some(jl.to_string_lossy().into_owned());
+        assert_eq!(export(&cfg, &h).unwrap(), Some(1));
+        assert_eq!(check_jsonl(&jl).unwrap().events, 1);
+
+        let ch = dir.join("ddl_obs_mod_test.json");
+        cfg.trace_path = Some(ch.to_string_lossy().into_owned());
+        assert_eq!(export(&cfg, &h).unwrap(), Some(1));
+        let text = std::fs::read_to_string(&ch).unwrap();
+        assert!(text.starts_with("{\"traceEvents\":["), "auto + .json → Chrome");
+
+        cfg.format = "bogus".into();
+        assert!(export(&cfg, &h).is_err(), "unknown format is a config error");
+        std::fs::remove_file(&jl).ok();
+        std::fs::remove_file(&ch).ok();
+    }
+}

@@ -1,0 +1,172 @@
+//! Unified metrics registry: one named store for every counter, gauge,
+//! and histogram the executors used to scatter across ad-hoc structs.
+//!
+//! [`crate::net::MessageStats`], [`crate::net::ChaosStats`], and the
+//! async executor's gate-wait accounting remain the public, typed APIs —
+//! they are now documented **views** over this registry: an executor's
+//! [`crate::net::AsyncNetwork::metrics`] publishes its counters here
+//! under stable names, and [`MetricsRegistry::message_stats`] /
+//! [`MetricsRegistry::chaos_stats`] reconstruct the legacy structs
+//! bit-for-bit (round-trip tested below), so downstream consumers can
+//! migrate to names without a flag day.
+
+use crate::math::stats;
+use crate::net::{ChaosStats, MessageStats};
+use std::collections::BTreeMap;
+
+/// Named counters / gauges / histograms (BTreeMap-backed so iteration
+/// and export order are deterministic).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Vec<f64>>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to the named counter (created at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current counter value (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set the named gauge to its latest reading.
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Latest gauge reading, if any.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Append one observation to the named histogram.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms.entry(name.to_string()).or_default().push(value);
+    }
+
+    /// Raw observations of the named histogram (empty when absent).
+    pub fn histogram(&self, name: &str) -> &[f64] {
+        self.histograms.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Percentile `p` of the named histogram via the shared exact-rank
+    /// reader ([`crate::math::stats::percentile`]; 0.0 when absent).
+    pub fn histogram_percentile(&self, name: &str, p: f64) -> f64 {
+        stats::percentile(self.histogram(name), p)
+    }
+
+    /// Counter names in deterministic (lexicographic) order.
+    pub fn counter_names(&self) -> impl Iterator<Item = &str> {
+        self.counters.keys().map(String::as_str)
+    }
+
+    /// Gauge names in deterministic (lexicographic) order.
+    pub fn gauge_names(&self) -> impl Iterator<Item = &str> {
+        self.gauges.keys().map(String::as_str)
+    }
+
+    /// Absorb a [`MessageStats`] under `prefix` (`{prefix}.messages`,
+    /// `{prefix}.bytes`, `{prefix}.rounds`).
+    pub fn absorb_message_stats(&mut self, prefix: &str, s: &MessageStats) {
+        self.inc(&format!("{prefix}.messages"), s.messages as u64);
+        self.inc(&format!("{prefix}.bytes"), s.bytes as u64);
+        self.inc(&format!("{prefix}.rounds"), s.rounds as u64);
+    }
+
+    /// Reconstruct the [`MessageStats`] view absorbed under `prefix`.
+    pub fn message_stats(&self, prefix: &str) -> MessageStats {
+        MessageStats {
+            messages: self.counter(&format!("{prefix}.messages")) as usize,
+            bytes: self.counter(&format!("{prefix}.bytes")) as usize,
+            rounds: self.counter(&format!("{prefix}.rounds")) as usize,
+        }
+    }
+
+    /// Absorb the chaos-layer degradation counters under `chaos.*`.
+    pub fn absorb_chaos_stats(&mut self, s: &ChaosStats) {
+        self.inc("chaos.dropped", s.dropped as u64);
+        self.inc("chaos.retries", s.retries as u64);
+        self.inc("chaos.abandoned", s.abandoned as u64);
+        self.inc("chaos.crash_deferrals", s.crash_deferrals as u64);
+        self.inc("chaos.forced_combines", s.forced_combines as u64);
+        self.inc("chaos.stale_fallbacks", s.stale_fallbacks as u64);
+        self.inc("chaos.excluded_neighbors", s.excluded_neighbors as u64);
+        self.inc("chaos.max_fallback_staleness", s.max_fallback_staleness as u64);
+    }
+
+    /// Reconstruct the [`ChaosStats`] view absorbed by
+    /// [`Self::absorb_chaos_stats`].
+    pub fn chaos_stats(&self) -> ChaosStats {
+        ChaosStats {
+            dropped: self.counter("chaos.dropped") as usize,
+            retries: self.counter("chaos.retries") as usize,
+            abandoned: self.counter("chaos.abandoned") as usize,
+            crash_deferrals: self.counter("chaos.crash_deferrals") as usize,
+            forced_combines: self.counter("chaos.forced_combines") as usize,
+            stale_fallbacks: self.counter("chaos.stale_fallbacks") as usize,
+            excluded_neighbors: self.counter("chaos.excluded_neighbors") as usize,
+            max_fallback_staleness: self.counter("chaos.max_fallback_staleness") as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms() {
+        let mut r = MetricsRegistry::new();
+        r.inc("a", 2);
+        r.inc("a", 3);
+        assert_eq!(r.counter("a"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        r.set_gauge("g", 1.5);
+        r.set_gauge("g", 2.5);
+        assert_eq!(r.gauge("g"), Some(2.5));
+        assert_eq!(r.gauge("none"), None);
+        for v in [3.0, 1.0, 2.0] {
+            r.observe("h", v);
+        }
+        assert_eq!(r.histogram("h"), &[3.0, 1.0, 2.0]);
+        assert_eq!(r.histogram_percentile("h", 50.0), 2.0);
+        assert_eq!(r.histogram_percentile("nope", 50.0), 0.0);
+        let names: Vec<&str> = r.counter_names().collect();
+        assert_eq!(names, vec!["a"], "deterministic order");
+        assert_eq!(r.gauge_names().count(), 1);
+    }
+
+    /// The legacy structs round-trip through the registry bit-for-bit —
+    /// they are views, not a second source of truth.
+    #[test]
+    fn message_and_chaos_stats_round_trip() {
+        let ms = MessageStats { messages: 7, bytes: 4096, rounds: 3 };
+        let cs = ChaosStats {
+            dropped: 1,
+            retries: 2,
+            abandoned: 3,
+            crash_deferrals: 4,
+            forced_combines: 5,
+            stale_fallbacks: 6,
+            excluded_neighbors: 7,
+            max_fallback_staleness: 8,
+        };
+        let mut r = MetricsRegistry::new();
+        r.absorb_message_stats("net", &ms);
+        r.absorb_chaos_stats(&cs);
+        assert_eq!(r.message_stats("net"), ms);
+        assert_eq!(r.chaos_stats(), cs);
+        // An un-absorbed prefix reads as the zero struct.
+        assert_eq!(r.message_stats("other"), MessageStats::default());
+    }
+}

@@ -1,0 +1,228 @@
+//! Trace sinks: where emitted events go.
+//!
+//! The default is [`NullSink`] — via [`ObsHandle::null`] the entire
+//! instrumentation layer reduces to one `Option::is_none` branch per
+//! site, no allocation, no locking, no RNG, no clock access — so an
+//! untraced run is bit-identical to a pre-observability build
+//! (`tests/obs_parity.rs`). A recording run holds a ring-buffered
+//! [`Recorder`] behind an `Arc<Mutex<..>>` so the threaded serve
+//! pipeline's stages can share one sink.
+
+use crate::obs::event::{ArgValue, EventKind, Track, TraceEvent};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// A destination for trace events. Implementations must not consume
+/// randomness or touch any executor clock — the observer-effect
+/// contract rests on sinks being pure accumulators.
+pub trait TraceSink {
+    /// Accept one event.
+    fn record(&mut self, ev: TraceEvent);
+    /// Whether this sink actually stores events (lets call sites skip
+    /// argument construction entirely).
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The zero-cost default sink: drops everything, reports disabled.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    #[inline]
+    fn record(&mut self, _ev: TraceEvent) {}
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Ring-buffered recorder: keeps the most recent `cap` events and counts
+/// what fell off the front, so a long run degrades to "latest window"
+/// instead of unbounded memory.
+#[derive(Debug)]
+pub struct Recorder {
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: usize,
+}
+
+impl Recorder {
+    /// Recorder keeping at most `cap` events (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Recorder { buf: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    /// Events currently held, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf.iter()
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been recorded (or everything fell out).
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events evicted by the ring bound.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+}
+
+impl TraceSink for Recorder {
+    fn record(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+/// Cloneable, thread-shareable handle the executors hold. `None` is the
+/// null path: every emit helper is `#[inline]` and returns after one
+/// branch, so the uninstrumented run pays a predictable-not-taken test
+/// per site and nothing else.
+#[derive(Clone, Default)]
+pub struct ObsHandle(Option<Arc<Mutex<Recorder>>>);
+
+impl ObsHandle {
+    /// The disabled handle (the default for every executor).
+    pub fn null() -> Self {
+        ObsHandle(None)
+    }
+
+    /// A handle recording into a fresh ring buffer of `cap` events.
+    pub fn recording(cap: usize) -> Self {
+        ObsHandle(Some(Arc::new(Mutex::new(Recorder::new(cap)))))
+    }
+
+    /// Whether events are being kept. Sites with non-trivial arguments
+    /// should guard on this before building them.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Record one event (no-op when disabled).
+    #[inline]
+    pub fn emit(&self, ev: TraceEvent) {
+        if let Some(rec) = &self.0 {
+            if let Ok(mut g) = rec.lock() {
+                g.record(ev);
+            }
+        }
+    }
+
+    /// Span-begin shorthand.
+    #[inline]
+    pub fn span_begin(&self, t_us: u64, name: &'static str, track: Track) {
+        if self.0.is_some() {
+            self.emit(TraceEvent::new(t_us, EventKind::SpanBegin, name, track));
+        }
+    }
+
+    /// Span-end shorthand.
+    #[inline]
+    pub fn span_end(&self, t_us: u64, name: &'static str, track: Track) {
+        if self.0.is_some() {
+            self.emit(TraceEvent::new(t_us, EventKind::SpanEnd, name, track));
+        }
+    }
+
+    /// Instant shorthand (pass `Vec::new()` for no arguments).
+    #[inline]
+    pub fn instant(
+        &self,
+        t_us: u64,
+        name: &'static str,
+        track: Track,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        if self.0.is_some() {
+            self.emit(TraceEvent { t_us, kind: EventKind::Instant, name, track, args });
+        }
+    }
+
+    /// Counter-sample shorthand.
+    #[inline]
+    pub fn counter(&self, t_us: u64, name: &'static str, track: Track, value: f64) {
+        if self.0.is_some() {
+            self.emit(TraceEvent::new(t_us, EventKind::Counter(value), name, track));
+        }
+    }
+
+    /// Copy of every event currently held (empty for the null handle).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        match &self.0 {
+            Some(rec) => match rec.lock() {
+                Ok(g) => g.events().cloned().collect(),
+                Err(_) => Vec::new(),
+            },
+            None => Vec::new(),
+        }
+    }
+
+    /// Events evicted by the ring bound (0 for the null handle).
+    pub fn dropped(&self) -> usize {
+        match &self.0 {
+            Some(rec) => rec.lock().map(|g| g.dropped()).unwrap_or(0),
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_and_drops() {
+        let mut s = NullSink;
+        assert!(!TraceSink::enabled(&s));
+        s.record(TraceEvent::new(0, EventKind::Instant, "x", Track::Run));
+        let h = ObsHandle::null();
+        assert!(!h.enabled());
+        h.instant(1, "x", Track::Run, Vec::new());
+        h.counter(2, "c", Track::Run, 1.0);
+        assert!(h.snapshot().is_empty());
+        assert_eq!(h.dropped(), 0);
+    }
+
+    #[test]
+    fn recorder_ring_evicts_oldest() {
+        let mut r = Recorder::new(3);
+        for i in 0..5u64 {
+            r.record(TraceEvent::new(i, EventKind::Instant, "x", Track::Run));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ts: Vec<u64> = r.events().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![2, 3, 4]);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn handle_records_and_snapshots_in_order() {
+        let h = ObsHandle::recording(16);
+        assert!(h.enabled());
+        h.span_begin(10, "adapt", Track::Agent(2));
+        h.span_end(20, "adapt", Track::Agent(2));
+        h.instant(20, "combine", Track::Agent(2), vec![("iter", ArgValue::U(1))]);
+        let snap = h.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].kind, EventKind::SpanBegin);
+        assert_eq!(snap[1].kind, EventKind::SpanEnd);
+        assert_eq!(snap[2].args, vec![("iter", ArgValue::U(1))]);
+        // Clones share the same buffer (the threaded-pipeline pattern).
+        let h2 = h.clone();
+        h2.counter(30, "depth", Track::Run, 2.0);
+        assert_eq!(h.snapshot().len(), 4);
+    }
+}

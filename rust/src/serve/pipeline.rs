@@ -72,6 +72,7 @@ use crate::learn::{apply_eq51_update, recover_and_stats};
 use crate::math::stats;
 use crate::model::{DictDoubleBuffer, DistributedDictionary, TaskSpec};
 use crate::net::{MessageStats, PersistentPool};
+use crate::obs::{ArgValue, ObsHandle, Track};
 use crate::ops::prox::DictProx;
 use crate::serve::control::{
     clamped_policy, BatchController, ControlDecision, DepthController, DepthDecision, PipeSim,
@@ -216,6 +217,13 @@ struct UpdaterState {
     latencies_ms: Vec<f64>,
     /// Control plane (adaptive mode only).
     ctl: Option<PipeCtl>,
+    /// Trace sink (clones share one ring buffer, so the threaded
+    /// executor's updater thread and the formation thread write into the
+    /// same recorder). Stage spans are stamped on the virtual stage clock
+    /// ([`PipeSim`]) in adaptive mode and on the formation clock
+    /// otherwise — never the wall clock, so tracing cannot perturb the
+    /// run.
+    obs: ObsHandle,
 }
 
 /// Everything a finished session hands back to [`run_pipelined`].
@@ -261,6 +269,7 @@ impl UpdaterState {
             served: 0,
             latencies_ms: Vec::new(),
             ctl,
+            obs: ObsHandle::null(),
         }
     }
 
@@ -308,6 +317,25 @@ impl UpdaterState {
             // Virtual stage clock: inference completion on the model,
             // never the wall clock (the replay anchor).
             let (done_us, starved) = ctl.sim.batch(j, formed.at_us, batch.len());
+            if self.obs.enabled() {
+                self.obs.instant(
+                    formed.at_us,
+                    "batch_form",
+                    Track::Stage("form"),
+                    vec![
+                        ("j", ArgValue::U(j as u64)),
+                        ("size", ArgValue::U(batch.len() as u64)),
+                    ],
+                );
+                self.obs.span_begin(formed.at_us, "infer", Track::Stage("infer"));
+                self.obs.span_end(done_us, "infer", Track::Stage("infer"));
+                self.obs.instant(
+                    done_us,
+                    "update",
+                    Track::Stage("update"),
+                    vec![("j", ArgValue::U(j as u64)), ("starved", ArgValue::B(starved))],
+                );
+            }
             let from = self.latencies_ms.len();
             for r in batch {
                 self.latencies_ms
@@ -315,13 +343,48 @@ impl UpdaterState {
             }
             ctl.batch.observe_batch(batch.len(), formed.cap, &self.latencies_ms[from..]);
             if let Some(policy) = ctl.batch.maybe_decide(done_us) {
+                // PR 5's `ServeReport::decisions` row, as a trace instant.
+                if self.obs.enabled() {
+                    self.obs.instant(
+                        done_us,
+                        "batch_policy",
+                        Track::Controller("batch"),
+                        vec![
+                            ("max_batch", ArgValue::U(policy.max_batch as u64)),
+                            ("max_wait_us", ArgValue::U(policy.max_wait_us)),
+                        ],
+                    );
+                }
                 ctl.pending_policy = Some(policy);
             }
             ctl.depth.observe(starved);
             let delta = ctl.depth.maybe_replan(j);
+            if delta != 0 && self.obs.enabled() {
+                // PR 5's `ServeReport::depth_trace` row, as a trace instant.
+                self.obs.instant(
+                    done_us,
+                    "depth_replan",
+                    Track::Controller("depth"),
+                    vec![("j", ArgValue::U(j as u64)), ("delta", ArgValue::I(delta as i64))],
+                );
+            }
             emit_count = (1i32 + delta) as usize;
             ctl.sim.emit_tokens(emit_count);
         } else {
+            if self.obs.enabled() {
+                // Static mode has no virtual service clock; only the
+                // formation-clock instant is traced (wall-clock stage
+                // timings would not replay).
+                self.obs.instant(
+                    formed.at_us,
+                    "batch_form",
+                    Track::Stage("form"),
+                    vec![
+                        ("j", ArgValue::U(j as u64)),
+                        ("size", ArgValue::U(batch.len() as u64)),
+                    ],
+                );
+            }
             for r in batch {
                 // Completion − arrival, like the serial executor. The
                 // pipeline replays virtual arrivals at full speed, so a
@@ -487,8 +550,10 @@ pub fn run_pipelined(
         if cfg.rate > 0.0 { format!("{:.0} req/s", cfg.rate) } else { "saturation".into() },
     ));
 
+    let obs = crate::obs::handle_for(&cfg.obs);
     let mut former = BatchFormer::new(policy, stream);
-    let updater = UpdaterState::new(cfg, dict0, directed_edges, depth, slots);
+    let mut updater = UpdaterState::new(cfg, dict0, directed_edges, depth, slots);
+    updater.obs = obs.clone();
     let mode: &'static str = match (exec, adaptive) {
         (PipelineExec::Threaded, false) => "pipelined",
         (PipelineExec::Reference, false) => "pipelined-reference",
@@ -499,10 +564,10 @@ pub fn run_pipelined(
     let t0 = Instant::now();
     let accum = match exec {
         PipelineExec::Reference => {
-            run_reference(cfg, &mut former, updater, engines, depth, t0, log)?
+            run_reference(cfg, &mut former, updater, engines, depth, t0, &obs, log)?
         }
         PipelineExec::Threaded => {
-            run_threaded_pipeline(cfg, &mut former, updater, engines, depth, t0, log)?
+            run_threaded_pipeline(cfg, &mut former, updater, engines, depth, t0, &obs, log)?
         }
     };
 
@@ -542,6 +607,12 @@ pub fn run_pipelined(
         "serve[{}]: {} samples / {} batches in {:.3} s ({:.1} samples/s)",
         mode, report.samples, report.batches, report.duration_s, report.throughput_rps
     ));
+    if let Some(n) = crate::obs::export(&cfg.obs, &obs)? {
+        log(&format!(
+            "trace: wrote {n} events to {}",
+            cfg.obs.trace_path.as_deref().unwrap_or("?")
+        ));
+    }
     Ok((report, accum.dict))
 }
 
@@ -550,6 +621,7 @@ pub fn run_pipelined(
 /// channel in the threaded executor — one token popped per batch, policy
 /// applied before the batch is formed, tokens re-emitted by the updater
 /// (0, 1, or 2 per batch in adaptive mode).
+#[allow(clippy::too_many_arguments)]
 fn run_reference(
     cfg: &ServeConfig,
     former: &mut BatchFormer,
@@ -557,6 +629,7 @@ fn run_reference(
     mut engines: Vec<DiffusionEngine>,
     depth: usize,
     t0: Instant,
+    obs: &ObsHandle,
     log: &mut dyn FnMut(&str),
 ) -> Result<SessionAccum> {
     let engine = &mut engines[0];
@@ -581,6 +654,9 @@ fn run_reference(
             None => break,
         };
         let formed = Formed { at_us: former.now_us(), cap: queue.policy().max_batch };
+        // Residual admission-queue depth after the drain, on the
+        // formation clock.
+        obs.counter(formed.at_us, "queue_depth", Track::Stage("form"), queue.len() as f64);
         let snap = token.snap;
         {
             let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
@@ -604,6 +680,7 @@ fn run_reference(
 /// worker per engine slot, one updater thread; unbounded mpsc channels
 /// (the circulating tokens themselves bound the number of batches in
 /// flight to the current depth).
+#[allow(clippy::too_many_arguments)]
 fn run_threaded_pipeline(
     cfg: &ServeConfig,
     former: &mut BatchFormer,
@@ -611,6 +688,7 @@ fn run_threaded_pipeline(
     engines: Vec<DiffusionEngine>,
     depth: usize,
     t0: Instant,
+    obs: &ObsHandle,
     log: &mut dyn FnMut(&str),
 ) -> Result<SessionAccum> {
     let params = serve_params(cfg);
@@ -725,6 +803,11 @@ fn run_threaded_pipeline(
                 None => break,
             };
             let formed = Formed { at_us: former.now_us(), cap: queue.policy().max_batch };
+            // Formation-side gauge; in the threaded executor this
+            // interleaves with the updater's events in recorder order
+            // (timestamps, not order, are the deterministic part — see
+            // the module docs in `crate::obs`).
+            obs.counter(formed.at_us, "queue_depth", Track::Stage("form"), queue.len() as f64);
             if work_txs[dispatched % slots]
                 .send(Work { j: dispatched, snap: token.snap, batch, formed })
                 .is_err()

@@ -75,8 +75,17 @@ pub struct ServeReport {
     /// Fraction of requests whose latency exceeded the SLO.
     pub slo_violation_frac: f64,
     /// Batch-controller decision trace (empty for static sessions).
+    ///
+    /// **Deprecated alias** (kept for one release): the same decisions
+    /// are emitted as `batch_policy` instants on the `batch` controller
+    /// lane of the trace (`--trace` / `[obs]`), which is the supported
+    /// way to capture them going forward.
     pub decisions: Vec<ControlDecision>,
     /// Depth-controller re-plan trace (empty unless adaptive pipeline).
+    ///
+    /// **Deprecated alias** (kept for one release): re-plans are emitted
+    /// as `depth_replan` instants on the `depth` controller lane of the
+    /// trace (`--trace` / `[obs]`).
     pub depth_trace: Vec<DepthDecision>,
 }
 
@@ -331,6 +340,9 @@ fn run_serial(
         if cfg.rate > 0.0 { format!("{:.0} req/s", cfg.rate) } else { "saturation".into() },
     ));
 
+    // Trace sink: events are stamped with the loop's virtual clock
+    // (`now_us`), which tracing never advances (`tests/obs_parity.rs`).
+    let obs = crate::obs::handle_for(&cfg.obs);
     let mut stats = MessageStats::default();
     let mut latencies_ms: Vec<f64> = Vec::with_capacity(cfg.samples);
     let mut batch_losses: Vec<f64> = Vec::new();
@@ -367,6 +379,20 @@ fn run_serial(
             continue;
         };
 
+        if obs.enabled() {
+            obs.instant(
+                now_us,
+                "batch_form",
+                crate::obs::Track::Stage("form"),
+                vec![(
+                    "size",
+                    crate::obs::ArgValue::U(batch.len() as u64),
+                )],
+            );
+            obs.counter(now_us, "queue_depth", crate::obs::Track::Stage("form"), queue.len() as f64);
+        }
+        let formed_us = now_us;
+
         // Process the minibatch for real: batched inference + one online
         // dictionary update (each sample seen exactly once). Adaptive
         // sessions advance the clock by the deterministic service model
@@ -395,6 +421,12 @@ fn run_serial(
             wall_us
         };
         now_us = now_us.saturating_add(service_us);
+        if obs.enabled() {
+            // One span covering inference + update (the serial loop has
+            // no stage overlap): formed → clock after the service charge.
+            obs.span_begin(formed_us, "service", crate::obs::Track::Stage("infer"));
+            obs.span_end(now_us, "service", crate::obs::Track::Stage("infer"));
+        }
 
         batch_losses.push(step.mean_loss);
         served += batch.len();
@@ -407,6 +439,17 @@ fn run_serial(
             // queue's current cap is the cap this batch was formed under.
             ctl.observe_batch(batch.len(), queue.policy().max_batch, &latencies_ms[from..]);
             if let Some(policy) = ctl.maybe_decide(now_us) {
+                if obs.enabled() {
+                    obs.instant(
+                        now_us,
+                        "batch_policy",
+                        crate::obs::Track::Controller("batch"),
+                        vec![
+                            ("max_batch", crate::obs::ArgValue::U(policy.max_batch as u64)),
+                            ("max_wait_us", crate::obs::ArgValue::U(policy.max_wait_us)),
+                        ],
+                    );
+                }
                 queue.set_policy(policy);
             }
         }
@@ -456,6 +499,12 @@ fn run_serial(
         decisions: controller.map(|c| c.into_decisions()).unwrap_or_default(),
         depth_trace: Vec::new(),
     };
+    if let Some(n) = crate::obs::export(&cfg.obs, &obs)? {
+        log(&format!(
+            "trace: wrote {n} events to {}",
+            cfg.obs.trace_path.as_deref().unwrap_or("?")
+        ));
+    }
     Ok((report, dict))
 }
 

@@ -1,0 +1,280 @@
+//! Observer-effect parity: tracing must not perturb the run. For every
+//! instrumented executor — BSP, async discrete-event, chaos
+//! (fault-injected async), and the serve sessions (serial and pipelined,
+//! static and adaptive) — a run with a recording [`ObsHandle`] attached
+//! must be **bit-identical** to the same run untraced: same ν dual
+//! trajectories, same `MessageStats` / `ChaosStats`, same simulated
+//! clocks, same final dictionary, same controller decisions.
+//!
+//! The contract this proves is the one `obs/` is built on: emitting an
+//! event consumes no RNG draws and advances no clock. The null path is a
+//! single `Option::is_some` branch, and the recording path only copies
+//! values the executor already computed. Since the executors are
+//! deterministic functions of (problem, seed, schedule), bitwise equality
+//! of traced vs untraced output is exactly the statement that the
+//! recorder had zero observable effect — including zero RNG consumption
+//! (one stolen draw would shift every delay sample after it).
+//!
+//! Cases are randomized over topology, delay distributions, and fault
+//! schedules, following the `tests/async_parity.rs` idiom.
+
+use ddl::config::experiment::{ControlConfig, InferenceConfig, ServeConfig};
+use ddl::graph::{metropolis_weights, Graph, Topology};
+use ddl::infer::DiffusionParams;
+use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
+use ddl::net::{AsyncNetwork, AsyncParams, BspNetwork, DelayDist, FaultSchedule};
+use ddl::obs::ObsHandle;
+use ddl::rng::Pcg64;
+use ddl::serve::run_service_with_dict;
+
+const M: usize = 12;
+const RING_CAP: usize = 1 << 14;
+
+fn random_topology(rng: &mut Pcg64) -> Topology {
+    match rng.next_below(3) {
+        0 => Topology::Ring { k: 1 + rng.next_below(3) as usize },
+        1 => Topology::Grid,
+        _ => Topology::ErdosRenyi { p: 0.2 + 0.5 * rng.next_f64() },
+    }
+}
+
+fn random_delays(rng: &mut Pcg64) -> (DelayDist, DelayDist) {
+    let pick = |rng: &mut Pcg64| match rng.next_below(4) {
+        0 => DelayDist::Zero,
+        1 => DelayDist::Constant { us: 50 + rng.next_below(200) },
+        2 => {
+            let lo = 20 + rng.next_below(100);
+            DelayDist::Uniform { lo_us: lo, hi_us: lo + 1 + rng.next_below(300) }
+        }
+        _ => DelayDist::Exp { mean_us: 30.0 + 120.0 * rng.next_f64() },
+    };
+    (pick(rng), pick(rng))
+}
+
+fn problem(
+    n: usize,
+    seed: u64,
+) -> (Graph, ddl::math::Mat, DistributedDictionary, Vec<f32>, TaskSpec) {
+    let mut rng = Pcg64::new(seed);
+    let topo = random_topology(&mut rng);
+    let graph = Graph::generate(n, &topo, &mut rng);
+    let weights = metropolis_weights(&graph);
+    let dict =
+        DistributedDictionary::random(M, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let x = rng.normal_vec(M);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+    (graph, weights, dict, x, task)
+}
+
+/// BSP: traced ≡ untraced, and the registry view round-trips the stats.
+#[test]
+fn bsp_traced_matches_untraced() {
+    for case in 0u64..4 {
+        let n = 20 + 5 * case as usize;
+        let (graph, weights, dict, x, task) = problem(n, 0x0B5_0000 + case);
+        let params = DiffusionParams::new(0.5, 60);
+
+        let mut plain = BspNetwork::new(graph.clone(), weights.clone(), M, None);
+        plain.run(&dict, &task, &x, params).unwrap();
+
+        let mut traced = BspNetwork::new(graph, weights, M, None);
+        let obs = ObsHandle::recording(RING_CAP);
+        traced.attach_obs(obs.clone());
+        traced.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(traced.nu(k), plain.nu(k), "case {case}: ν[{k}] must be bit-identical");
+        }
+        assert_eq!(traced.stats(), plain.stats(), "case {case}: MessageStats");
+        assert!(!obs.snapshot().is_empty(), "case {case}: traced run recorded events");
+        assert_eq!(
+            traced.metrics().message_stats("net"),
+            traced.stats(),
+            "case {case}: registry round-trips MessageStats"
+        );
+    }
+}
+
+/// Async DES under random delays, bounded staleness, and a straggler:
+/// traced ≡ untraced on ν, traffic, clock, and staleness accounting.
+#[test]
+fn async_traced_matches_untraced() {
+    for case in 0u64..4 {
+        let n = 24;
+        let (graph, weights, dict, x, task) = problem(n, 0xA5_0000 + case);
+        let mut seeder = Pcg64::new(0xA5_1000 + case);
+        let (compute, link) = random_delays(&mut seeder);
+        let mut ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(compute, link)
+            .with_seed(0xA5_2000 + case);
+        if case % 2 == 0 {
+            ap = ap.with_slow_agent(seeder.next_below(n as u64) as usize, 8.0);
+        }
+        let params = DiffusionParams::new(0.5, 80);
+
+        let mut plain =
+            AsyncNetwork::new(graph.clone(), weights.clone(), M, None, ap.clone()).unwrap();
+        plain.run(&dict, &task, &x, params).unwrap();
+
+        let mut traced = AsyncNetwork::new(graph, weights, M, None, ap).unwrap();
+        let obs = ObsHandle::recording(RING_CAP);
+        traced.attach_obs(obs.clone());
+        traced.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(traced.nu(k), plain.nu(k), "case {case}: ν[{k}] must be bit-identical");
+        }
+        assert_eq!(traced.stats(), plain.stats(), "case {case}: MessageStats");
+        assert_eq!(traced.sim_time_us(), plain.sim_time_us(), "case {case}: simulated clock");
+        assert_eq!(
+            traced.max_staleness_observed(),
+            plain.max_staleness_observed(),
+            "case {case}: staleness accounting"
+        );
+        assert!(!obs.snapshot().is_empty(), "case {case}: traced run recorded events");
+        assert_eq!(
+            traced.metrics().message_stats("net"),
+            traced.stats(),
+            "case {case}: registry round-trips MessageStats"
+        );
+    }
+}
+
+/// Chaos: partitions, crashes, and random drops — the executor branches
+/// on fault state constantly, so this exercises every instrumented seam
+/// (fault windows, crash deferral, forced combines, drop instants).
+#[test]
+fn chaos_traced_matches_untraced() {
+    for case in 0u64..3 {
+        let n = 24;
+        let (graph, weights, dict, x, task) = problem(n, 0xC4A0_0000 + case);
+        let mut seeder = Pcg64::new(0xC4A0_1000 + case);
+        let crash_k = seeder.next_below(n as u64) as usize;
+        let schedule = FaultSchedule::new(0xC4A0_2000 + case)
+            .with_partition(FaultSchedule::split_side(n, 0.25), 4_000, 12_000)
+            .with_crash(crash_k, 2_000, 6_000)
+            .with_drops(0.1, 8_000, 16_000);
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(
+                DelayDist::Exp { mean_us: 100.0 },
+                DelayDist::Exp { mean_us: 20.0 },
+            )
+            .with_seed(0xC4A0_3000 + case)
+            .with_chaos(schedule);
+        let params = DiffusionParams::new(0.5, 80);
+
+        let mut plain =
+            AsyncNetwork::new(graph.clone(), weights.clone(), M, None, ap.clone()).unwrap();
+        plain.run(&dict, &task, &x, params).unwrap();
+
+        let mut traced = AsyncNetwork::new(graph, weights, M, None, ap).unwrap();
+        let obs = ObsHandle::recording(RING_CAP);
+        traced.attach_obs(obs.clone());
+        traced.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(traced.nu(k), plain.nu(k), "case {case}: ν[{k}] must be bit-identical");
+        }
+        assert_eq!(traced.stats(), plain.stats(), "case {case}: MessageStats");
+        assert_eq!(traced.chaos_stats(), plain.chaos_stats(), "case {case}: ChaosStats");
+        assert_eq!(traced.sim_time_us(), plain.sim_time_us(), "case {case}: simulated clock");
+        assert!(!obs.snapshot().is_empty(), "case {case}: traced run recorded events");
+        assert_eq!(
+            traced.metrics().chaos_stats(),
+            traced.chaos_stats(),
+            "case {case}: registry round-trips ChaosStats"
+        );
+    }
+}
+
+/// Serve sessions: `cfg.obs.enabled = true` (recorder attached, nothing
+/// written — no trace path) vs the default. Covers the serial loop, the
+/// static pipeline, and the adaptive pipeline with the batch/depth
+/// controllers making live decisions.
+#[test]
+fn serve_traced_matches_untraced() {
+    let base = |pipeline: bool, adaptive: bool| ServeConfig {
+        seed: 0x0B5E,
+        agents: 30,
+        dim: 10,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 4,
+        max_wait_us: 500,
+        samples: 36,
+        rate: if adaptive { 1_500.0 } else { 0.0 },
+        burst: if adaptive { 4 } else { 1 },
+        mu_w: 0.05,
+        pipeline,
+        pipeline_depth: 2,
+        infer: InferenceConfig { mu: 0.4, iters: 8, gamma: 0.08, delta: 0.2, threads: 1 },
+        control: if adaptive {
+            ControlConfig {
+                enabled: true,
+                slo_p99_ms: 10.0,
+                tick_us: 2_000,
+                batch_min: 1,
+                batch_max: 8,
+                wait_min_us: 0,
+                wait_max_us: 5_000,
+                window: 64,
+                svc_base_us: 800,
+                svc_per_sample_us: 150,
+                ..ControlConfig::default()
+            }
+        } else {
+            ControlConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+
+    for (label, pipeline, adaptive) in
+        [("serial", false, false), ("pipelined", true, false), ("adaptive", true, true)]
+    {
+        let cfg = base(pipeline, adaptive);
+        let (r_plain, d_plain) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+
+        let mut traced_cfg = cfg.clone();
+        traced_cfg.obs.enabled = true; // recorder on, no trace path → no IO
+        let (r_obs, d_obs) = run_service_with_dict(&traced_cfg, &mut |_| {}).unwrap();
+
+        assert_eq!(
+            d_plain.mat().as_slice(),
+            d_obs.mat().as_slice(),
+            "{label}: final dictionary must be bit-identical"
+        );
+        assert_eq!(r_plain.samples, r_obs.samples, "{label}: samples");
+        assert_eq!(r_plain.batches, r_obs.batches, "{label}: batches");
+        assert_eq!(r_plain.stats, r_obs.stats, "{label}: ψ-traffic MessageStats");
+        assert_eq!(
+            r_plain.loss_first_quarter.to_bits(),
+            r_obs.loss_first_quarter.to_bits(),
+            "{label}: first-quarter loss"
+        );
+        assert_eq!(
+            r_plain.loss_last_quarter.to_bits(),
+            r_obs.loss_last_quarter.to_bits(),
+            "{label}: last-quarter loss"
+        );
+        assert_eq!(r_plain.decisions, r_obs.decisions, "{label}: controller decision trace");
+        assert_eq!(r_plain.depth_trace, r_obs.depth_trace, "{label}: depth replans");
+        if adaptive {
+            // Adaptive sessions run on the deterministic virtual clock, so
+            // even the latency/throughput figures must match bitwise.
+            // (Static sessions report measured wall time there — the one
+            // thing allowed to differ between any two runs.)
+            assert_eq!(
+                r_plain.latency_p99_ms.to_bits(),
+                r_obs.latency_p99_ms.to_bits(),
+                "{label}: virtual p99 latency"
+            );
+            assert_eq!(
+                r_plain.throughput_rps.to_bits(),
+                r_obs.throughput_rps.to_bits(),
+                "{label}: virtual throughput"
+            );
+        }
+    }
+}
