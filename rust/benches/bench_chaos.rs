@@ -27,6 +27,13 @@
 //!   bias Metropolis keeps. Tracked as a ratio with the default gate
 //!   slack (min-frac 0.5), not pinned — the exact magnitude depends on
 //!   scenario scale.
+//! * `chaos_byzantine_defense_recovers` — **1.0** when, under an f = 1
+//!   sign-flip attacker on the ring, the `TrimmedMean(1)` defense lands
+//!   within 1e-3 MSD of its own attack-free run while undefended
+//!   Metropolis is biased > 10× (or diverges) — the ISSUE 8 acceptance
+//!   bar ([`ddl::coordinator::run_byzantine`]);
+//! * `chaos_byzantine_replay_bitwise` — **1.0** when both attacked runs
+//!   replay bit-identically under the identical Byzantine schedule.
 //!
 //! Wall-clock cost of the fault-injected discrete-event core is timed as
 //! `chaos DES ring (churn)` — agent-iterations/s with an 8-window churn
@@ -37,7 +44,7 @@
 
 use ddl::bench::Bencher;
 use ddl::config::experiment::AsyncConfig;
-use ddl::coordinator::{run_chaos, run_pushsum_bias};
+use ddl::coordinator::{run_byzantine, run_chaos, run_pushsum_bias};
 use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::infer::DiffusionParams;
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
@@ -93,6 +100,24 @@ fn main() {
         probe.bias_ratio(),
     );
     derived.push(("chaos_pushsum_vs_metropolis_bias_ratio".to_string(), probe.bias_ratio()));
+
+    // Byzantine probe: f = 1 sign-flip attacker on the ring, undefended
+    // Metropolis vs the TrimmedMean(1) defense (defaults of `[chaos]`
+    // byzantine_agent/byzantine_policy once an attacker is named).
+    let mut byz_cfg = cfg.clone();
+    byz_cfg.infer.iters = if fast { 500 } else { 1000 };
+    byz_cfg.chaos.byzantine_agent = Some(0);
+    byz_cfg.chaos.byzantine_policy = "sign-flip".to_string();
+    let byz = run_byzantine(&byz_cfg, &mut |s| println!("{s}")).unwrap();
+    println!("{}", byz.summary());
+    derived.push((
+        "chaos_byzantine_defense_recovers".to_string(),
+        if byz.undefended_diverged() && byz.defense_gap <= 1e-3 { 1.0 } else { 0.0 },
+    ));
+    derived.push((
+        "chaos_byzantine_replay_bitwise".to_string(),
+        if byz.replay_bitwise { 1.0 } else { 0.0 },
+    ));
 
     // Cost of the fault-injected DES machinery itself: same shape as the
     // `async DES` row of bench_async, with a churn schedule active.

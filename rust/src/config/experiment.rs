@@ -293,6 +293,19 @@ pub struct ServeConfig {
     /// clamped to ≥ 1). Updates lag inference by exactly this depth —
     /// the fixed swap schedule that keeps the pipeline bit-reproducible.
     pub pipeline_depth: usize,
+    /// Admission-queue capacity bound: arrivals beyond this many pending
+    /// requests are load-shed with a typed
+    /// [`crate::DdlError::QueueFull`] and counted. `0` (default) =
+    /// unbounded (the pre-capacity behavior).
+    pub queue_capacity: usize,
+    /// Fault injection: the inference worker owning this pipeline slot
+    /// dies when it receives batch [`Self::kill_at_batch`] (`None` =
+    /// nobody dies; spell it `kill_slot = -1` in TOML). The victim's
+    /// batch and all later work re-dispatch deterministically to the
+    /// surviving slots. Pipeline mode only.
+    pub kill_slot: Option<usize>,
+    /// Global batch index at which [`Self::kill_slot`] dies.
+    pub kill_at_batch: usize,
     /// Diffusion inference settings for each served batch.
     pub infer: InferenceConfig,
     /// Informed agents: `None` = all informed, `Some(k)` = only first k.
@@ -320,6 +333,9 @@ impl Default for ServeConfig {
             mu_w: 0.05,
             pipeline: false,
             pipeline_depth: 2,
+            queue_capacity: 0,
+            kill_slot: None,
+            kill_at_batch: 0,
             infer: InferenceConfig { mu: 0.4, iters: 120, gamma: 0.08, delta: 0.2, threads: 1 },
             informed: None,
             control: ControlConfig::default(),
@@ -347,6 +363,13 @@ impl ServeConfig {
         c.mu_w = doc.f32_or("serve", "mu_w", c.mu_w);
         c.pipeline = doc.bool_or("serve", "pipeline", c.pipeline);
         c.pipeline_depth = doc.usize_or("serve", "pipeline_depth", c.pipeline_depth).max(1);
+        c.queue_capacity = doc.usize_or("serve", "queue_capacity", c.queue_capacity);
+        if let Some(v) = doc.get("serve", "kill_slot") {
+            if let Some(i) = v.as_i64() {
+                c.kill_slot = if i < 0 { None } else { Some(i as usize) };
+            }
+        }
+        c.kill_at_batch = doc.usize_or("serve", "kill_at_batch", c.kill_at_batch);
         c.infer.mu = doc.f32_or("serve", "mu", c.infer.mu);
         c.infer.iters = doc.usize_or("serve", "iters", c.infer.iters);
         c.infer.gamma = doc.f32_or("serve", "gamma", c.infer.gamma);
@@ -392,12 +415,21 @@ pub struct ChaosConfig {
     /// Crash/recover this agent across the partition window
     /// (`None` = nobody crashes; spell it `crash_agent = -1` in TOML).
     pub crash_agent: Option<usize>,
-    /// Random directed-outage windows generated from the seed
-    /// (`0` disables edge churn).
+    /// Number of links running the Gilbert–Elliott bursty up/down process
+    /// generated from the seed (`0` disables link churn).
     pub churn_windows: usize,
     /// Combine selection: `auto` (push-sum iff the live topology loses
-    /// symmetry) | `on` (force push-sum) | `off` (force Metropolis).
+    /// symmetry) | `on` (force push-sum) | `off` (force Metropolis) |
+    /// `median` | `trimmed:<f>` (Byzantine-resilient aggregation).
     pub pushsum: String,
+    /// Byzantine attacker: this agent transmits corrupted ψ for the whole
+    /// run (`None` = everyone honest; spell it `byzantine_agent = -1` in
+    /// TOML).
+    pub byzantine_agent: Option<usize>,
+    /// Corruption policy of the attacker: `sign-flip` | `scaled-noise` |
+    /// `constant` | `colluding-offset` (unit parameters; see
+    /// [`crate::net::CorruptPolicy`]).
+    pub byzantine_policy: String,
 }
 
 impl Default for ChaosConfig {
@@ -412,6 +444,8 @@ impl Default for ChaosConfig {
             crash_agent: None,
             churn_windows: 0,
             pushsum: "auto".into(),
+            byzantine_agent: None,
+            byzantine_policy: "sign-flip".into(),
         }
     }
 }
@@ -436,17 +470,50 @@ impl ChaosConfig {
         }
         c.churn_windows = doc.usize_or("chaos", "churn_windows", c.churn_windows);
         c.pushsum = doc.str_or("chaos", "pushsum", &c.pushsum).to_string();
+        if let Some(v) = doc.get("chaos", "byzantine_agent") {
+            if let Some(i) = v.as_i64() {
+                c.byzantine_agent = if i < 0 { None } else { Some(i as usize) };
+            }
+        }
+        c.byzantine_policy =
+            doc.str_or("chaos", "byzantine_policy", &c.byzantine_policy).to_string();
         c
     }
 
     /// Parse [`Self::pushsum`] into the executor's combine selector.
     pub fn combine_mode(&self) -> crate::Result<crate::net::CombineMode> {
+        if let Some(f) = self.pushsum.strip_prefix("trimmed:") {
+            let f: usize = f.parse().map_err(|_| {
+                crate::DdlError::Config(format!(
+                    "chaos.pushsum: bad trim parameter in '{}' (expected trimmed:<f>)",
+                    self.pushsum
+                ))
+            })?;
+            return Ok(crate::net::CombineMode::TrimmedMean(f));
+        }
         match self.pushsum.as_str() {
             "auto" => Ok(crate::net::CombineMode::Auto),
             "on" => Ok(crate::net::CombineMode::PushSum),
             "off" => Ok(crate::net::CombineMode::Metropolis),
+            "median" => Ok(crate::net::CombineMode::Median),
             other => Err(crate::DdlError::Config(format!(
-                "chaos.pushsum: expected auto|on|off, got '{other}'"
+                "chaos.pushsum: expected auto|on|off|median|trimmed:<f>, got '{other}'"
+            ))),
+        }
+    }
+
+    /// Parse [`Self::byzantine_policy`] into the executor's corruption
+    /// policy (unit parameters: σ = 1, value = 1, magnitude = 1).
+    pub fn corrupt_policy(&self) -> crate::Result<crate::net::CorruptPolicy> {
+        use crate::net::CorruptPolicy;
+        match self.byzantine_policy.as_str() {
+            "sign-flip" => Ok(CorruptPolicy::SignFlip),
+            "scaled-noise" => Ok(CorruptPolicy::ScaledNoise { sigma: 1.0 }),
+            "constant" => Ok(CorruptPolicy::ConstantPsi { value: 1.0 }),
+            "colluding-offset" => Ok(CorruptPolicy::ColludingOffset { magnitude: 1.0 }),
+            other => Err(crate::DdlError::Config(format!(
+                "chaos.byzantine_policy: expected \
+                 sign-flip|scaled-noise|constant|colluding-offset, got '{other}'"
             ))),
         }
     }
@@ -819,7 +886,8 @@ mod tests {
             "[serve]\nseed = 99\nagents = 64\ndim = 36\ntopology = \"ring\"\nring_k = 3\n\
              edge_prob = 0.25\nbatch = 16\nmax_wait_us = 750\nsamples = 128\nrate = 2000.0\n\
              mu_w = 0.01\npipeline = true\npipeline_depth = 3\nmu = 0.5\niters = 80\n\
-             gamma = 0.2\ndelta = 0.3\nthreads = 2\ninformed = 4\n",
+             gamma = 0.2\ndelta = 0.3\nthreads = 2\ninformed = 4\nqueue_capacity = 48\n\
+             kill_slot = 1\nkill_at_batch = 3\n",
         )
         .unwrap();
         let c = ServeConfig::from_toml(&doc);
@@ -842,11 +910,20 @@ mod tests {
         assert!((c.infer.delta - 0.3).abs() < 1e-7);
         assert_eq!(c.infer.threads, 2);
         assert_eq!(c.informed, Some(4));
+        assert_eq!(c.queue_capacity, 48);
+        assert_eq!(c.kill_slot, Some(1));
+        assert_eq!(c.kill_at_batch, 3);
         // Absent section leaves defaults untouched.
         let empty = TomlDoc::parse("").unwrap();
         let d = ServeConfig::from_toml(&empty);
         assert_eq!(d.batch, ServeConfig::default().batch);
         assert_eq!(d.topology, ServeConfig::default().topology);
+        assert_eq!(d.queue_capacity, 0, "unbounded admission by default");
+        assert_eq!(d.kill_slot, None, "no worker death by default");
+        // `kill_slot = -1` is the explicit "nobody dies" spelling.
+        let alive =
+            ServeConfig::from_toml(&TomlDoc::parse("[serve]\nkill_slot = -1\n").unwrap());
+        assert_eq!(alive.kill_slot, None);
     }
 
     #[test]
@@ -994,7 +1071,8 @@ mod tests {
         let doc = TomlDoc::parse(
             "[chaos]\nenabled = true\nseed = 77\npartition_frac = 0.3\n\
              partition_start_frac = 0.25\npartition_len_frac = 0.1\ndrop_prob = 0.05\n\
-             crash_agent = 4\nchurn_windows = 6\npushsum = \"on\"\n",
+             crash_agent = 4\nchurn_windows = 6\npushsum = \"on\"\nbyzantine_agent = 2\n\
+             byzantine_policy = \"scaled-noise\"\n",
         )
         .unwrap();
         let c = ChaosConfig::from_toml(&doc);
@@ -1020,6 +1098,29 @@ mod tests {
         assert_eq!(off.combine_mode().unwrap(), crate::net::CombineMode::Metropolis);
         let bad = ChaosConfig { pushsum: "maybe".into(), ..ChaosConfig::default() };
         assert!(bad.combine_mode().is_err());
+        // Byzantine knobs round-trip; `-1` means "no attacker".
+        assert_eq!(c.byzantine_agent, Some(2));
+        assert_eq!(c.byzantine_policy, "scaled-noise");
+        assert!(matches!(
+            c.corrupt_policy().unwrap(),
+            crate::net::CorruptPolicy::ScaledNoise { .. }
+        ));
+        let none = ChaosConfig::from_toml(
+            &TomlDoc::parse("[chaos]\nbyzantine_agent = -1\n").unwrap(),
+        );
+        assert_eq!(none.byzantine_agent, None);
+        assert_eq!(none.byzantine_policy, "sign-flip");
+        assert_eq!(none.corrupt_policy().unwrap(), crate::net::CorruptPolicy::SignFlip);
+        let bad_pol =
+            ChaosConfig { byzantine_policy: "gremlin".into(), ..ChaosConfig::default() };
+        assert!(bad_pol.corrupt_policy().is_err());
+        // Resilient combine modes parse; a malformed trim count errors.
+        let med = ChaosConfig { pushsum: "median".into(), ..ChaosConfig::default() };
+        assert_eq!(med.combine_mode().unwrap(), crate::net::CombineMode::Median);
+        let trim = ChaosConfig { pushsum: "trimmed:2".into(), ..ChaosConfig::default() };
+        assert_eq!(trim.combine_mode().unwrap(), crate::net::CombineMode::TrimmedMean(2));
+        let bad_trim = ChaosConfig { pushsum: "trimmed:x".into(), ..ChaosConfig::default() };
+        assert!(bad_trim.combine_mode().is_err());
     }
 
     #[test]

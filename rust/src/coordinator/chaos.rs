@@ -24,7 +24,12 @@
 //! ring). [`run_pushsum_bias`] isolates the combine-correction story:
 //! under a persistent *directed* outage the Metropolis combine loses
 //! double stochasticity and converges off-target, while the push-sum
-//! combine ([`crate::graph::pushsum`]) stays unbiased.
+//! combine ([`crate::graph::pushsum`]) stays unbiased. [`run_byzantine`]
+//! (`ddl chaos --byzantine`) is the corrupted-ψ analogue: one persistent
+//! Byzantine attacker biases (or diverges) the undefended Metropolis
+//! combine, while the trimmed-mean defense recovers to within the
+//! defense gap of its own clean trajectory — both attacked runs
+//! replaying bit-identically per seed.
 //!
 //! With `[control] adaptive_tau = true` the τ controller rides along,
 //! fed by the chaos run's gate waits and the clean comparator as its
@@ -37,8 +42,8 @@ use crate::graph::{metropolis_weights, Graph};
 use crate::infer::{exact_dual, DiffusionParams};
 use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use crate::net::{
-    AsyncNetwork, AsyncParams, ChaosStats, CombineMode, Fault, FaultSchedule, MessageStats,
-    TauController, TauDecision,
+    AsyncNetwork, AsyncParams, ChaosStats, CombineMode, CorruptPolicy, Fault, FaultSchedule,
+    MessageStats, TauController, TauDecision,
 };
 use crate::obs::{ArgValue, Track};
 use crate::rng::Pcg64;
@@ -127,7 +132,7 @@ impl ChaosReport {
             "recovery gap at equal simulated time: {:.3e}\n\
              completion: clean {:.4} s, chaos {:.4} s; combine {:?}{}; {} fault windows\n\
              degradation: {} dropped, {} retries, {} abandoned, {} crash deferrals, \
-             {} forced combines, {} stale fallbacks, {} exclusions\n\
+             {} forced combines, {} stale fallbacks, {} exclusions, {} corrupted\n\
              replay bit-identical: {}; empty schedule bitwise fault-free: {}\n\
              traffic: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round, max staleness {}",
             self.recovery_gap,
@@ -143,6 +148,7 @@ impl ChaosReport {
             self.chaos_stats.forced_combines,
             self.chaos_stats.stale_fallbacks,
             self.chaos_stats.excluded_neighbors,
+            self.chaos_stats.corrupted,
             self.replay_bitwise,
             self.empty_parity,
             self.stats.messages,
@@ -181,10 +187,21 @@ fn build_schedule(c: &ChaosConfig, graph: &Graph, horizon_us: u64) -> Result<Fau
         }
     }
     if c.churn_windows > 0 {
-        s = s.with_edge_churn(graph, c.churn_windows, (t / 20).max(1), t, c.seed);
+        // Bursty Gilbert–Elliott links: long good states (mean T/5)
+        // punctuated by short correlated bad bursts (mean T/20), replacing
+        // the independent up/down windows of the first churn model.
+        s = s.with_bursty_links(graph, c.churn_windows, (t / 5).max(1), (t / 20).max(1), t, c.seed);
     }
     if c.drop_prob > 0.0 {
         s = s.with_drops(c.drop_prob, 0, t);
+    }
+    if let Some(k) = c.byzantine_agent {
+        if k >= n {
+            return Err(DdlError::Config(format!(
+                "chaos.byzantine_agent = {k} out of range for N = {n}"
+            )));
+        }
+        s = s.with_byzantine(k, c.corrupt_policy()?, 0, t);
     }
     s.validate(n)?;
     Ok(s)
@@ -476,6 +493,182 @@ pub fn run_pushsum_bias(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<
     Ok(PushSumBias { outage_from_us: from, links_cut, msd_metropolis, msd_pushsum })
 }
 
+/// Outcome of the Byzantine attack/defense probe ([`run_byzantine`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ByzantineReport {
+    /// Agent whose *outbound* ψ messages are corrupted.
+    pub attacker: usize,
+    /// Corruption policy the attacker applies.
+    pub policy: CorruptPolicy,
+    /// Resilient combine used by the defended runs.
+    pub defense: CombineMode,
+    /// Converged MSD of the fault-free Metropolis run (the clean anchor
+    /// for the bias ratio).
+    pub msd_clean: f64,
+    /// Converged MSD of the fault-free run under the *defense* combine
+    /// (the clean anchor for the defense gap — same combine, no attack,
+    /// so trimming-rate artifacts cancel).
+    pub msd_clean_defended: f64,
+    /// Converged MSD of the undefended Metropolis run under attack.
+    pub msd_undefended: f64,
+    /// Converged MSD of the defended run under the same attack.
+    pub msd_defended: f64,
+    /// `|msd_defended − msd_clean_defended|` — how far the attack moves
+    /// the defended trajectory from its own clean fixed point.
+    pub defense_gap: f64,
+    /// Did both attacked runs replay bit-identically (MSD bits, clocks,
+    /// fault stats, traffic) under the identical schedule?
+    pub replay_bitwise: bool,
+    /// Corrupted ψ messages the defended run absorbed.
+    pub corrupted: usize,
+}
+
+impl ByzantineReport {
+    /// `msd_undefended / msd_clean` — how much the attack inflates the
+    /// undefended combine's error (≫ 1 when the attack lands).
+    pub fn bias_ratio(&self) -> f64 {
+        self.msd_undefended / self.msd_clean.max(f64::MIN_POSITIVE)
+    }
+
+    /// The acceptance notion of "undefended failure": the Metropolis run
+    /// diverged outright, or its error is > 10× the clean baseline.
+    pub fn undefended_diverged(&self) -> bool {
+        !self.msd_undefended.is_finite() || self.bias_ratio() > 10.0
+    }
+
+    /// Multi-line human-readable summary (the `ddl chaos --byzantine`
+    /// output body).
+    pub fn summary(&self) -> String {
+        format!(
+            "byzantine probe: attacker {} ({}), defense {:?}\n\
+             clean: metropolis {:.3e}, defended {:.3e}\n\
+             under attack: metropolis {:.3e} ({}), defended {:.3e}\n\
+             defense gap vs clean defended: {:.3e}; {} corrupted messages\n\
+             replay bit-identical: {}",
+            self.attacker,
+            self.policy.name(),
+            self.defense,
+            self.msd_clean,
+            self.msd_clean_defended,
+            self.msd_undefended,
+            if self.undefended_diverged() {
+                "diverged/biased > 10x"
+            } else {
+                "within 10x of clean"
+            },
+            self.msd_defended,
+            self.defense_gap,
+            self.corrupted,
+            self.replay_bitwise,
+        )
+    }
+}
+
+/// Isolate the corrupted-ψ defense (`ddl chaos --byzantine`): one
+/// persistent Byzantine attacker (from `[chaos] byzantine_agent` /
+/// `byzantine_policy`, defaulting to a sign-flip attacker at agent 0)
+/// corrupts every outbound ψ clone, and the same problem is run four
+/// ways — clean and attacked, each with the undefended Metropolis
+/// combine and with the resilient defense. The defense combine comes
+/// from `[chaos] pushsum = "median" | "trimmed:<f>"` when set, else
+/// defaults to `TrimmedMean(1)` (one attacker ⇒ trim one each side).
+/// Both attacked runs are then re-run to prove bitwise replay.
+pub fn run_byzantine(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<ByzantineReport> {
+    let mut rng = Pcg64::new(cfg.seed);
+    let graph = build_topology(cfg, &mut rng)?;
+    let weights = metropolis_weights(&graph);
+    let dict = DistributedDictionary::random(
+        cfg.dim,
+        cfg.agents,
+        cfg.agents,
+        AtomConstraint::UnitBall,
+        &mut rng,
+    )?;
+    let x = rng.normal_vec(cfg.dim);
+    let task = TaskSpec::SparseCoding { gamma: cfg.infer.gamma, delta: cfg.infer.delta };
+    let params = DiffusionParams::new(cfg.infer.mu, cfg.infer.iters);
+    let base = cfg.async_params()?;
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000)?;
+
+    let n = graph.n();
+    let attacker = cfg.chaos.byzantine_agent.unwrap_or(0);
+    if attacker >= n {
+        return Err(DdlError::Config(format!(
+            "chaos.byzantine_agent = {attacker} out of range for N = {n}"
+        )));
+    }
+    let policy = cfg.chaos.corrupt_policy()?;
+    let defense = match cfg.chaos.combine_mode()? {
+        m @ (CombineMode::Median | CombineMode::TrimmedMean(_)) => m,
+        _ => CombineMode::TrimmedMean(1),
+    };
+    let schedule =
+        FaultSchedule::new(cfg.chaos.seed).with_byzantine(attacker, policy, 0, u64::MAX);
+    log(&format!(
+        "byzantine probe: attacker {attacker} applies {} for the whole run; defense {defense:?}",
+        policy.name(),
+    ));
+
+    // Trace only the defended attacked run — the instance whose
+    // psi_corrupt / combine_trimmed events tell the story. Replay
+    // instances stay untraced (traced ≡ untraced is proven elsewhere).
+    let obs = crate::obs::handle_for(&cfg.obs);
+    let mut run = |combine: CombineMode,
+                   chaos: FaultSchedule,
+                   trace: bool|
+     -> Result<(f64, u64, ChaosStats, MessageStats)> {
+        let mut net = AsyncNetwork::new(
+            graph.clone(),
+            weights.clone(),
+            cfg.dim,
+            None,
+            AsyncParams { chaos, combine, ..base.clone() },
+        )?;
+        if trace {
+            net.attach_obs(obs.clone());
+        }
+        net.run(&dict, &task, &x, params)?;
+        Ok((net.msd_vs(&exact.nu), net.sim_time_us(), net.chaos_stats(), net.stats()))
+    };
+    let empty = || FaultSchedule::new(cfg.chaos.seed);
+    let (msd_clean, ..) = run(CombineMode::Metropolis, empty(), false)?;
+    let (msd_clean_defended, ..) = run(defense, empty(), false)?;
+    let attacked_u = run(CombineMode::Metropolis, schedule.clone(), false)?;
+    let attacked_d = run(defense, schedule.clone(), true)?;
+    log(&format!(
+        "byzantine probe: undefended {:.3e}, defended {:.3e} (clean {:.3e} / {:.3e})",
+        attacked_u.0, attacked_d.0, msd_clean, msd_clean_defended,
+    ));
+
+    // Replay contract: both attacked runs reproduce bit-for-bit.
+    let replay_u = run(CombineMode::Metropolis, schedule.clone(), false)?;
+    let replay_d = run(defense, schedule, false)?;
+    let eq = |a: &(f64, u64, ChaosStats, MessageStats), b: &(f64, u64, ChaosStats, MessageStats)| {
+        a.0.to_bits() == b.0.to_bits() && a.1 == b.1 && a.2 == b.2 && a.3 == b.3
+    };
+    let replay_bitwise = eq(&attacked_u, &replay_u) && eq(&attacked_d, &replay_d);
+
+    if let Some(events) = crate::obs::export(&cfg.obs, &obs)? {
+        log(&format!(
+            "trace: wrote {events} events to {}",
+            cfg.obs.trace_path.as_deref().unwrap_or("?")
+        ));
+    }
+
+    Ok(ByzantineReport {
+        attacker,
+        policy,
+        defense,
+        msd_clean,
+        msd_clean_defended,
+        msd_undefended: attacked_u.0,
+        msd_defended: attacked_d.0,
+        defense_gap: (attacked_d.0 - msd_clean_defended).abs(),
+        replay_bitwise,
+        corrupted: attacked_d.2.corrupted,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,6 +757,72 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.chaos.crash_agent = Some(99);
         assert!(run_chaos(&cfg, &mut |_| {}).is_err());
+    }
+
+    #[test]
+    fn byzantine_probe_defense_recovers_and_replays() {
+        let mut cfg = tiny_cfg();
+        cfg.infer.iters = 800;
+        cfg.chaos.byzantine_agent = Some(3);
+        let mut lines = Vec::new();
+        let r = run_byzantine(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert_eq!(r.attacker, 3);
+        assert_eq!(r.policy, CorruptPolicy::SignFlip, "default policy is sign-flip");
+        assert_eq!(r.defense, CombineMode::TrimmedMean(1), "default defense trims one");
+        assert!(r.corrupted > 0, "attack never fired");
+        assert!(r.replay_bitwise, "attacked runs must replay bit-identically");
+        assert!(
+            r.undefended_diverged(),
+            "sign-flip should bias metropolis > 10x: undefended {:.3e}, clean {:.3e}",
+            r.msd_undefended,
+            r.msd_clean
+        );
+        assert!(
+            r.defense_gap < 1e-2,
+            "trimmed mean should recover: gap {:.3e}",
+            r.defense_gap
+        );
+        assert!(r.msd_clean_defended.is_finite() && r.msd_defended.is_finite());
+        assert!(!r.summary().is_empty());
+        assert!(!lines.is_empty());
+    }
+
+    #[test]
+    fn byzantine_probe_respects_configured_defense_and_bounds() {
+        let mut cfg = tiny_cfg();
+        cfg.chaos.byzantine_agent = Some(99);
+        assert!(run_byzantine(&cfg, &mut |_| {}).is_err(), "attacker out of range");
+        let mut cfg = tiny_cfg();
+        cfg.infer.iters = 150;
+        cfg.chaos.byzantine_agent = Some(1);
+        cfg.chaos.byzantine_policy = "constant".into();
+        cfg.chaos.pushsum = "median".into();
+        let r = run_byzantine(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(r.policy, CorruptPolicy::ConstantPsi { value: 1.0 });
+        assert_eq!(r.defense, CombineMode::Median);
+        assert!(r.replay_bitwise);
+    }
+
+    #[test]
+    fn byzantine_schedule_rides_run_chaos_and_bursty_generator_scales() {
+        // A Byzantine window in the [chaos] config flows through
+        // build_schedule into the main `ddl chaos` loop without breaking
+        // the replay contract (empty-parity compares *fault-free* runs,
+        // so it holds regardless of the attack).
+        let mut cfg = tiny_cfg();
+        cfg.chaos.byzantine_agent = Some(2);
+        cfg.chaos.pushsum = "trimmed:1".into();
+        let r = run_chaos(&cfg, &mut |_| {}).unwrap();
+        assert!(r.replay_bitwise);
+        assert!(r.empty_parity);
+        assert_eq!(r.combine, CombineMode::TrimmedMean(1));
+        assert!(r.chaos_stats.corrupted > 0, "attack never fired inside run_chaos");
+        // Bursty churn windows come from the Gilbert–Elliott generator.
+        let mut cfg = tiny_cfg();
+        cfg.chaos.churn_windows = 3;
+        let r = run_chaos(&cfg, &mut |_| {}).unwrap();
+        assert!(r.replay_bitwise);
+        assert!(r.empty_parity);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!   adaptive-τ driver (`--adaptive-tau`: the τ controller stepped
 //!   against a τ = 0 probe through shared sim-time epochs);
 //! * [`chaos`] — `ddl chaos`: deterministic fault injection over the async
-//!   executor (healing partitions, edge churn, crashes, drops) with
-//!   MSD-vs-sim-time sensitivity curves and replay/parity checks;
+//!   executor (healing partitions, Gilbert–Elliott bursty links, crashes,
+//!   drops, Byzantine corruption) with MSD-vs-sim-time sensitivity
+//!   curves, replay/parity checks, and the `--byzantine` attack/defense
+//!   probe;
 //! * [`csv`] — tiny CSV writer for `results/`.
 
 pub mod chaos;
@@ -22,7 +24,10 @@ pub mod quickstart;
 pub mod straggler;
 pub mod tuning;
 
-pub use chaos::{run_chaos, run_pushsum_bias, ChaosReport, ChaosRow, PushSumBias};
+pub use chaos::{
+    run_byzantine, run_chaos, run_pushsum_bias, ByzantineReport, ChaosReport, ChaosRow,
+    PushSumBias,
+};
 pub use denoise::{run_denoise, DenoiseReport};
 pub use novelty::{run_novelty, NoveltyAlgo, NoveltyReport, StepResult};
 pub use straggler::{

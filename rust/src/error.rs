@@ -18,6 +18,13 @@ pub enum DdlError {
     /// Failure while executing (I/O-free) library code: executor stalls,
     /// poisoned channels, violated scheduling invariants.
     Runtime(String),
+    /// Bounded admission queue rejected a sample: load must be shed.
+    /// Typed (rather than a `Runtime` string) so the serving layer and
+    /// the batch controller can match on it and count sheds.
+    QueueFull {
+        /// Capacity the queue was bounded to when it rejected.
+        capacity: usize,
+    },
     /// Underlying I/O failure.
     Io(std::io::Error),
     /// Error from the PJRT/XLA bridge (feature `xla`).
@@ -32,6 +39,9 @@ impl fmt::Display for DdlError {
             DdlError::Shape(s) => write!(f, "shape mismatch: {s}"),
             DdlError::Config(s) => write!(f, "config error: {s}"),
             DdlError::Runtime(s) => write!(f, "runtime error: {s}"),
+            DdlError::QueueFull { capacity } => {
+                write!(f, "queue full: admission rejected at capacity {capacity}")
+            }
             DdlError::Io(e) => write!(f, "io error: {e}"),
             DdlError::Xla(s) => write!(f, "xla error: {s}"),
             DdlError::Other(s) => write!(f, "{s}"),
@@ -74,6 +84,11 @@ mod tests {
         assert_eq!(DdlError::Config("b".into()).to_string(), "config error: b");
         assert_eq!(DdlError::Runtime("c".into()).to_string(), "runtime error: c");
         assert_eq!(DdlError::Other("d".into()).to_string(), "d");
+        assert_eq!(
+            DdlError::QueueFull { capacity: 8 }.to_string(),
+            "queue full: admission rejected at capacity 8"
+        );
+        assert!(matches!(DdlError::QueueFull { capacity: 8 }, DdlError::QueueFull { .. }));
     }
 
     #[test]

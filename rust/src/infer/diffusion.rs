@@ -867,6 +867,77 @@ pub fn pushsum_ratio_consensus(a: &Mat, values: &[f32], n: usize, m: usize, iter
     s
 }
 
+/// Trimmed weighted mean of one coordinate's `(value, weight)` entries —
+/// the aggregation primitive of the Byzantine-resilient combine
+/// ([`crate::net::CombineMode::Median`] / `TrimmedMean(f)`).
+///
+/// Entries are sorted by value with [`f32::total_cmp`] (a total order, so
+/// ties — including `±0.0` — break deterministically and every replay
+/// sorts identically); the `g` smallest and `g` largest are discarded,
+/// where `g = min(f, ⌊(len−1)/2⌋)` for `TrimmedMean(f)` (`trim =
+/// Some(f)`) and `g = ⌊(len−1)/2⌋` for `Median` (`trim = None` — at most
+/// two middle entries survive); the survivors' weighted mean is returned
+/// with weights renormalized to sum to one. A single survivor is
+/// returned exactly (no `w·v/w` round-trip), so the weighted median of
+/// an odd count is bit-exact. The slice is reordered in place (it is
+/// scratch).
+pub fn trimmed_weighted_mean(entries: &mut [(f32, f32)], trim: Option<usize>) -> f32 {
+    if entries.is_empty() {
+        return 0.0;
+    }
+    entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let cap = (entries.len() - 1) / 2;
+    let g = trim.map_or(cap, |f| f.min(cap));
+    let kept = &entries[g..entries.len() - g];
+    if kept.len() == 1 {
+        return kept[0].0;
+    }
+    let wsum: f32 = kept.iter().map(|e| e.1).sum();
+    let inv = 1.0 / wsum.max(1e-12);
+    kept.iter().map(|e| e.1 * inv * e.0).sum()
+}
+
+/// Matrix-form reference for the resilient combine: one synchronous round
+/// of the coordinate-wise trimmed weighted mean over `a`'s columns, the
+/// robust counterpart of one `ν = Aᵀψ` Metropolis round. For each agent
+/// `k` the participants are itself plus every in-neighbor `l` with
+/// `a[l][k] > 0`, each carrying its combination weight; per coordinate
+/// the estimate is [`trimmed_weighted_mean`] with `trim` as above.
+/// `values` is row-major `n × m`. Mirrors [`pushsum_ratio_consensus`]'s
+/// role for the push-sum combine: the async executor's per-edge
+/// arithmetic, restated without the event machinery.
+pub fn resilient_combine(
+    a: &Mat,
+    values: &[f32],
+    n: usize,
+    m: usize,
+    trim: Option<usize>,
+) -> Vec<f32> {
+    assert_eq!(a.rows(), n);
+    assert_eq!(a.cols(), n);
+    assert_eq!(values.len(), n * m);
+    let mut out = vec![0.0f32; n * m];
+    let mut scratch: Vec<(f32, f32)> = Vec::with_capacity(n);
+    for k in 0..n {
+        let parts: Vec<(usize, f32)> = (0..n)
+            .filter_map(|l| {
+                let w = a.get(l, k);
+                if l == k || w > 0.0 {
+                    Some((l, w))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for i in 0..m {
+            scratch.clear();
+            scratch.extend(parts.iter().map(|&(l, w)| (values[l * m + i], w)));
+            out[k * m + i] = trimmed_weighted_mean(&mut scratch, trim);
+        }
+    }
+    out
+}
+
 /// One agent's adapt step (Eq. 31a) over the whole minibatch, shared
 /// verbatim by the serial and threaded paths so their per-row arithmetic
 /// is identical. `nu`/`psi` are the agent's `B·M` row windows; `thr` is
@@ -984,6 +1055,79 @@ mod tests {
                     z[k * m + i]
                 );
             }
+        }
+    }
+
+    /// The trimmed weighted mean: median semantics, trim clamping,
+    /// renormalization, and deterministic behavior on ties.
+    #[test]
+    fn trimmed_weighted_mean_semantics() {
+        // Median (trim = None) of an odd count returns the middle value
+        // bit-exactly, whatever its weight.
+        let mut e = [(5.0f32, 0.1f32), (1.0, 0.5), (3.0, 0.4)];
+        assert_eq!(trimmed_weighted_mean(&mut e, None), 3.0);
+        // trim = 0 is the plain weighted mean (weights renormalized).
+        let mut e = [(1.0f32, 0.25f32), (3.0, 0.25)];
+        assert!((trimmed_weighted_mean(&mut e, Some(0)) - 2.0).abs() < 1e-6);
+        // trim = 1 discards the extremes: the outlier cannot move the
+        // aggregate outside the honest range.
+        let mut e = [(0.0f32, 0.3f32), (1.0, 0.3), (1_000.0, 0.4)];
+        let v = trimmed_weighted_mean(&mut e, Some(1));
+        assert_eq!(v, 1.0, "single survivor returned exactly");
+        // trim larger than the population clamps to the median.
+        let mut e = [(0.0f32, 0.5f32), (2.0, 0.5), (4.0, 0.5)];
+        assert_eq!(trimmed_weighted_mean(&mut e, Some(10)), 2.0);
+        // Ties sort deterministically (total_cmp is a total order), so
+        // repeated calls agree bitwise.
+        let mut a = [(1.0f32, 0.2f32), (1.0, 0.8), (2.0, 0.5)];
+        let mut b = a;
+        assert_eq!(
+            trimmed_weighted_mean(&mut a, Some(1)).to_bits(),
+            trimmed_weighted_mean(&mut b, Some(1)).to_bits()
+        );
+        // Empty input is defined (0.0) rather than a panic.
+        assert_eq!(trimmed_weighted_mean(&mut [], None), 0.0);
+    }
+
+    /// The matrix-form resilient combine resists a single outlier agent
+    /// where the plain Metropolis round is dragged by it, and with
+    /// trim = 0 every surviving estimate stays inside the value range
+    /// (it is a convex combination).
+    #[test]
+    fn resilient_combine_resists_outlier() {
+        let n = 8usize;
+        let m = 2usize;
+        let mut rng = Pcg64::new(23);
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        // Honest values in [0, 1]; agent 3 reports a huge constant.
+        let mut values: Vec<f32> = (0..n * m).map(|_| rng.next_f32()).collect();
+        for i in 0..m {
+            values[3 * m + i] = 1e6;
+        }
+        let robust = resilient_combine(&a, &values, n, m, Some(1));
+        for k in 0..n {
+            if k == 3 {
+                continue; // the liar's own estimate is its own problem
+            }
+            for i in 0..m {
+                assert!(
+                    (0.0..=1.0).contains(&robust[k * m + i]),
+                    "agent {k} dim {i}: trimmed estimate {} left the honest range",
+                    robust[k * m + i]
+                );
+            }
+        }
+        // trim = 0 on honest values: convex combination stays in range
+        // and a repeat call replays bitwise.
+        let honest: Vec<f32> = (0..n * m).map(|_| rng.next_f32()).collect();
+        let z1 = resilient_combine(&a, &honest, n, m, Some(0));
+        let z2 = resilient_combine(&a, &honest, n, m, Some(0));
+        for (v1, v2) in z1.iter().zip(&z2) {
+            assert_eq!(v1.to_bits(), v2.to_bits());
+        }
+        for v in &z1 {
+            assert!((0.0..=1.0).contains(v));
         }
     }
 

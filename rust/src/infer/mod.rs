@@ -21,7 +21,7 @@ pub mod exact;
 
 pub use cost::{dual_cost_sum, local_cost, scalar_consensus, scalar_consensus_threaded};
 pub use diffusion::{
-    pushsum_ratio_consensus, recover_y_into, DiffusionEngine, DiffusionParams, NuView,
-    SPARSE_DENSITY_MAX,
+    pushsum_ratio_consensus, recover_y_into, resilient_combine, trimmed_weighted_mean,
+    DiffusionEngine, DiffusionParams, NuView, SPARSE_DENSITY_MAX,
 };
 pub use exact::{exact_dual, ExactSolution};

@@ -66,7 +66,9 @@ COMMANDS:
               [--max-wait-us t] [--samples n] [--rate r] [--burst n]
               [--agents n] [--topology ring|grid|er|full] [--mu-w x]
               [--no-adapt] [--pipeline | --no-pipeline] [--pipeline-depth d]
-              [--adaptive] [--slo-ms x] [--trace path] [--trace-format f]
+              [--adaptive] [--slo-ms x] [--queue-capacity n]
+              [--kill-slot s] [--kill-at-batch j]
+              [--trace path] [--trace-format f]
               (three-stage concurrent pipeline: batch formation | diffusion
               inference | Eq. 51 update overlap on separate threads;
               bit-identical schedule; --no-pipeline overrides the TOML;
@@ -74,7 +76,12 @@ COMMANDS:
               re-decided each tick against the p99 SLO, pipeline depth
               re-planned at epoch boundaries, all on a deterministic
               virtual clock so adaptive runs replay bit-identically;
-              TOML [control])
+              --queue-capacity bounds admission: overflow is shed with a
+              typed QueueFull error and fed back to the controller;
+              --kill-slot/--kill-at-batch kill an inference worker
+              mid-stream — the dispatcher re-dispatches the lost batch
+              deterministically, bit-identical results; TOML [control],
+              [serve])
   async       sync-vs-async diffusion, straggler modeling [--config f]
               [--tau t] [--agents n] [--dim m] [--topology ring|grid|er|full]
               [--mu x] [--iters n] [--compute-dist zero|const|uniform|exp]
@@ -93,15 +100,21 @@ COMMANDS:
               [--tau t] [--mu x] [--iters n] [--checkpoints c] [--seed n]
               [--chaos-seed n] [--partition-frac x] [--partition-start-frac x]
               [--partition-len-frac x] [--drop-prob p] [--crash-agent k]
-              [--churn-windows w] [--pushsum auto|on|off] [--adaptive-tau]
-              [--bias-probe] [--trace path] [--trace-format f]
-              (FaultSchedule of healing partitions, edge churn, message
-              drops, and agent crash/recovery windows — every event a pure
+              [--churn-windows w] [--pushsum auto|on|off|median|trimmed:f]
+              [--byzantine] [--byzantine-agent k]
+              [--byzantine-policy sign-flip|scaled-noise|constant|colluding-offset]
+              [--adaptive-tau] [--bias-probe] [--trace path] [--trace-format f]
+              (FaultSchedule of healing partitions, Gilbert-Elliott bursty
+              links, message drops, agent crash/recovery windows, and
+              Byzantine corrupted-psi windows — every event a pure
               function of (seed, sim-time), so chaos runs replay
               bit-identically and an empty schedule reproduces the
               fault-free trajectory bit-for-bit; push-sum combine is
               selected automatically when faults make the live topology
-              directed; TOML [chaos])
+              directed; median / trimmed:f select coordinate-wise
+              resilient combine; --byzantine runs the attack-vs-defense
+              probe: MSD under a corrupted-psi attacker with Metropolis
+              vs trimmed-mean combine, plus bitwise replay; TOML [chaos])
   trace-check validate a JSONL trace written by --trace: --trace path
               (parses every line, checks the Chrome trace_event fields)
   bench-gate  compare derived speedups in --current json against --baseline
@@ -287,6 +300,13 @@ fn cmd_serve(args: &Args) -> i32 {
             cfg.pipeline = false;
         }
         cfg.pipeline_depth = args.usize_or("pipeline-depth", cfg.pipeline_depth)?.max(1);
+        cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
+        if let Some(s) = args.get("kill-slot") {
+            cfg.kill_slot = Some(s.parse().map_err(|_| {
+                ddl::DdlError::Config(format!("--kill-slot: bad value '{s}'"))
+            })?);
+        }
+        cfg.kill_at_batch = args.usize_or("kill-at-batch", cfg.kill_at_batch)?;
         cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
         cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
         cfg.infer.threads = args.usize_or("threads", cfg.infer.threads)?;
@@ -384,8 +404,21 @@ fn cmd_chaos(args: &Args) -> i32 {
         }
         cfg.chaos.churn_windows = args.usize_or("churn-windows", cfg.chaos.churn_windows)?;
         cfg.chaos.pushsum = args.str_or("pushsum", &cfg.chaos.pushsum).to_string();
+        if let Some(k) = args.get("byzantine-agent") {
+            cfg.chaos.byzantine_agent = Some(k.parse().map_err(|_| {
+                ddl::DdlError::Config(format!("--byzantine-agent: bad value '{k}'"))
+            })?);
+        }
+        cfg.chaos.byzantine_policy =
+            args.str_or("byzantine-policy", &cfg.chaos.byzantine_policy).to_string();
         cfg.control.adaptive_tau = cfg.control.adaptive_tau || args.flag("adaptive-tau");
         apply_trace_args(&mut cfg.obs, args);
+        if args.flag("byzantine") {
+            let report = ddl::coordinator::run_byzantine(&cfg, &mut |s| println!("{s}"))?;
+            println!("== Byzantine probe (attack vs resilient combine) ==");
+            println!("{}", report.summary());
+            return Ok(());
+        }
         if args.flag("bias-probe") {
             let probe = ddl::coordinator::run_pushsum_bias(&cfg, &mut |s| println!("{s}"))?;
             println!("== push-sum bias probe (persistent directed outage) ==");

@@ -78,6 +78,18 @@
 //! ([`CombineMode`]): mass shares split over the live out-edges, summed
 //! on receipt, estimate read as the ratio `s/w` (arXiv:1808.05933).
 //!
+//! Byzantine windows ([`Fault::Byzantine`]) make an agent *lie*: every ψ
+//! it transmits while the window is active is corrupted by its
+//! [`CorruptPolicy`] (sign-flip, scaled noise, constant, colluding
+//! offset) before it leaves the agent; the attacker's own state stays
+//! honest. The receiver-side defense is the opt-in resilient combine
+//! ([`CombineMode::Median`] / [`CombineMode::TrimmedMean`]): the
+//! coordinate-wise trimmed weighted mean over {self} ∪ neighborhood,
+//! which discards the extremes an attacker must occupy to move the
+//! aggregate. Corruption noise rides the same dedicated chaos stream as
+//! drop coins, so attacked runs replay bit-identically per seed and
+//! Byzantine-free schedules consume no extra randomness.
+//!
 //! Drive it with `ddl async` / `ddl chaos` (TOML `[async]` / `[chaos]`,
 //! see [`crate::config::experiment::AsyncConfig`]), benchmark it with
 //! `cargo bench --bench bench_async` and `--bench bench_chaos`, and see
@@ -89,7 +101,7 @@ use crate::graph::Graph;
 use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
-use crate::net::chaos::{ChaosPolicy, ChaosStats, CombineMode, Fault, FaultSchedule};
+use crate::net::chaos::{ChaosPolicy, ChaosStats, CombineMode, CorruptPolicy, Fault, FaultSchedule};
 use crate::net::message::MessageStats;
 use crate::obs::{ArgValue, MetricsRegistry, ObsHandle, Track};
 use crate::ops::project::clip_linf;
@@ -382,7 +394,11 @@ pub struct AsyncNetwork {
     /// Cached `!params.chaos.is_empty()`: false ⇒ the fault-free fast
     /// path, bit-for-bit the pre-chaos executor.
     chaos_active: bool,
-    /// Resolved combine rule (`Auto` collapses at construction).
+    /// Resolved combine rule (`Auto` collapses at construction; never
+    /// `Auto` here). `Median`/`TrimmedMean` share the Metropolis-family
+    /// send/gate machinery and swap only the aggregation arithmetic.
+    mode: CombineMode,
+    /// Cached `mode == PushSum` (hot-path branches).
     pushsum: bool,
     /// True when `Auto` upgraded Metropolis → push-sum (directed faults).
     auto_pushsum: bool,
@@ -413,14 +429,17 @@ impl AsyncNetwork {
             }
         }
         params.chaos.validate(n)?;
-        let (pushsum, auto_pushsum) = match params.combine {
-            CombineMode::PushSum => (true, false),
-            CombineMode::Metropolis => (false, false),
+        let (mode, auto_pushsum) = match params.combine {
             CombineMode::Auto => {
-                let up = params.chaos.has_directed_faults();
-                (up, up)
+                if params.chaos.has_directed_faults() {
+                    (CombineMode::PushSum, true)
+                } else {
+                    (CombineMode::Metropolis, false)
+                }
             }
+            other => (other, false),
         };
+        let pushsum = mode == CombineMode::PushSum;
         let theta = crate::infer::diffusion::build_theta(n, informed)?;
         let mut root = Pcg64::new(params.seed);
         let mut tag = 0u64;
@@ -493,6 +512,7 @@ impl AsyncNetwork {
             gate_wait_us: 0,
             chaos_rng,
             chaos_active,
+            mode,
             pushsum,
             auto_pushsum,
             chaos_stats: ChaosStats::default(),
@@ -561,6 +581,15 @@ impl AsyncNetwork {
                 Fault::Drop { p, from_us, until_us } => {
                     ("fault:drop", *from_us, *until_us, vec![("p", ArgValue::F(*p))])
                 }
+                Fault::Byzantine { agent, policy, from_us, until_us } => (
+                    "fault:byzantine",
+                    *from_us,
+                    *until_us,
+                    vec![
+                        ("agent", ArgValue::U(*agent as u64)),
+                        ("policy", ArgValue::U(policy.tag())),
+                    ],
+                ),
             };
             self.obs.emit(crate::obs::TraceEvent {
                 t_us: a,
@@ -801,8 +830,33 @@ impl AsyncNetwork {
             }
             ag.w = c * w;
         } else {
+            // Byzantine window: corrupt each outgoing ψ copy independently
+            // (the retained state stays honest — the attacker deceives its
+            // neighbors, not itself). Consulted only under chaos, so the
+            // fault-free path takes no extra branch and draws nothing.
+            let policy =
+                if self.chaos_active { self.params.chaos.byzantine_policy(k, t) } else { None };
+            if let Some(p) = policy {
+                let fanout = self.graph.degree(k);
+                self.chaos_stats.corrupted += fanout;
+                if self.obs.enabled() {
+                    self.obs.instant(
+                        t,
+                        "psi_corrupt",
+                        Track::Agent(k),
+                        vec![
+                            ("iter", ArgValue::U(iter as u64)),
+                            ("policy", ArgValue::U(p.tag())),
+                            ("fanout", ArgValue::U(fanout as u64)),
+                        ],
+                    );
+                }
+            }
             for j in 0..self.graph.degree(k) {
-                let psi = self.agents[k].psi.clone();
+                let mut psi = self.agents[k].psi.clone();
+                if let Some(p) = policy {
+                    corrupt_psi(&mut psi, p, &mut self.chaos_rng);
+                }
                 self.send_psi(k, j, iter, psi, 0.0, t, 0);
             }
         }
@@ -978,7 +1032,11 @@ impl AsyncNetwork {
         if self.pushsum {
             self.combine_pushsum(k, i, t, task);
         } else {
-            self.combine_metropolis(k, i, t, task);
+            match self.mode {
+                CombineMode::Median => self.combine_resilient(k, i, t, task, None),
+                CombineMode::TrimmedMean(f) => self.combine_resilient(k, i, t, task, Some(f)),
+                _ => self.combine_metropolis(k, i, t, task),
+            }
         }
         if self.obs.enabled() {
             self.obs.span_end(t, "gate_wait", Track::Agent(k));
@@ -1086,6 +1144,115 @@ impl AsyncNetwork {
             }
             ag.waiting = false;
             ag.done = i + 1;
+        }
+        self.max_staleness = self.max_staleness.max(staleness_max);
+        self.chaos_stats.stale_fallbacks += fallbacks;
+        self.chaos_stats.excluded_neighbors += excluded;
+        self.chaos_stats.max_fallback_staleness =
+            self.chaos_stats.max_fallback_staleness.max(fallback_stale);
+        self.gate_wait_us += waited_us;
+    }
+
+    /// Resilient combine (`CombineMode::Median` / `TrimmedMean(f)`) for
+    /// agent `k`'s iteration `i`: the neighbor selection, staleness,
+    /// fallback, and exclusion bookkeeping of
+    /// [`Self::combine_metropolis`], with the weighted sum replaced per
+    /// coordinate by the trimmed weighted mean
+    /// ([`crate::infer::diffusion::trimmed_weighted_mean`]): participants
+    /// {self} ∪ {freshest ψ per delivered neighbor} sorted by value with
+    /// deterministic `total_cmp` tie-breaking, the `f` smallest and `f`
+    /// largest discarded (`Median`: all but the middle), survivor weights
+    /// renormalized to sum to one. Tolerates up to `f` corrupted
+    /// neighbors per neighborhood at the cost of a consensus estimate
+    /// that is no longer a fixed linear map — so this mode is opt-in,
+    /// never `Auto`-selected.
+    fn combine_resilient(
+        &mut self,
+        k: usize,
+        i: usize,
+        t: u64,
+        task: &TaskSpec,
+        trim: Option<usize>,
+    ) {
+        let akk = self.weights.get(k, k);
+        let clip = task.dual_clip();
+        let m = self.m;
+        let neighbors = self.graph.neighbors(k);
+        let mut staleness_max = 0usize;
+        let mut fallbacks = 0usize;
+        let mut fallback_stale = 0usize;
+        let mut excluded = 0usize;
+        let waited_us;
+        let participants;
+        {
+            let ag = &mut self.agents[k];
+            waited_us = t.saturating_sub(ag.wait_since);
+            // Participants: (weight, ψ) — self first, then neighbors in
+            // ascending order (the Metropolis accumulation order; the sort
+            // inside the aggregate makes the order immaterial, but keeping
+            // it fixed keeps the trace readable).
+            let mut parts: Vec<(f32, Vec<f32>)> = Vec::with_capacity(neighbors.len() + 1);
+            parts.push((akk, ag.psi.clone()));
+            for (j, &nb) in neighbors.iter().enumerate() {
+                let slots = &mut ag.inbox[j];
+                let mut best = None;
+                for e in slots.iter() {
+                    if e.0 <= i && best.map_or(true, |b| e.0 > b) {
+                        best = Some(e.0);
+                    }
+                }
+                let used = match best {
+                    Some(u) if u + self.params.tau >= i => {
+                        staleness_max = staleness_max.max(i - u);
+                        u
+                    }
+                    Some(u) => {
+                        fallbacks += 1;
+                        fallback_stale = fallback_stale.max(i - u);
+                        u
+                    }
+                    None => {
+                        excluded += 1;
+                        continue;
+                    }
+                };
+                let w = self.weights.get(nb, k);
+                if let Some(e) = slots.iter().find(|e| e.0 == used) {
+                    parts.push((w, e.1.clone()));
+                }
+                slots.retain(|e| e.0 >= used);
+            }
+            participants = parts.len();
+            // Coordinate-wise trimmed weighted mean (renormalization is
+            // inside the aggregate, so exclusions need no extra pass).
+            let mut scratch: Vec<(f32, f32)> = Vec::with_capacity(participants);
+            for idx in 0..m {
+                scratch.clear();
+                scratch.extend(parts.iter().map(|(w, v)| (v[idx], *w)));
+                ag.nu[idx] =
+                    crate::infer::diffusion::trimmed_weighted_mean(&mut scratch, trim);
+            }
+            if let Some(b) = clip {
+                clip_linf(&mut ag.nu, b);
+            }
+            ag.waiting = false;
+            ag.done = i + 1;
+        }
+        if self.obs.enabled() {
+            let g = match trim {
+                None => participants.saturating_sub(1) / 2,
+                Some(f) => f.min(participants.saturating_sub(1) / 2),
+            };
+            self.obs.instant(
+                t,
+                "combine_trimmed",
+                Track::Agent(k),
+                vec![
+                    ("iter", ArgValue::U(i as u64)),
+                    ("participants", ArgValue::U(participants as u64)),
+                    ("trimmed_each_side", ArgValue::U(g as u64)),
+                ],
+            );
         }
         self.max_staleness = self.max_staleness.max(staleness_max);
         self.chaos_stats.stale_fallbacks += fallbacks;
@@ -1267,11 +1434,7 @@ impl AsyncNetwork {
     /// Resolved combine rule (`Auto` collapses at construction; never
     /// returns `Auto`).
     pub fn combine_mode(&self) -> CombineMode {
-        if self.pushsum {
-            CombineMode::PushSum
-        } else {
-            CombineMode::Metropolis
-        }
+        self.mode
     }
 
     /// True when `Auto` upgraded the combine to push-sum because the
@@ -1296,6 +1459,35 @@ impl AsyncNetwork {
             .map(|a| crate::math::vector::dist_sq(&a.nu, nu_ref) as f64)
             .sum();
         sum / (self.agents.len().max(1) as f64 * denom)
+    }
+}
+
+/// Apply a [`CorruptPolicy`] to one outgoing ψ copy. Scaled-noise draws
+/// come from the dedicated chaos stream (passed in) — exactly `m` draws
+/// per corrupted message, zero otherwise — so attacks replay
+/// bit-identically and honest windows consume no randomness.
+fn corrupt_psi(psi: &mut [f32], policy: CorruptPolicy, chaos_rng: &mut Pcg64) {
+    match policy {
+        CorruptPolicy::SignFlip => {
+            for v in psi.iter_mut() {
+                *v = -*v;
+            }
+        }
+        CorruptPolicy::ScaledNoise { sigma } => {
+            for v in psi.iter_mut() {
+                *v += sigma * chaos_rng.next_normal();
+            }
+        }
+        CorruptPolicy::ConstantPsi { value } => {
+            for v in psi.iter_mut() {
+                *v = value;
+            }
+        }
+        CorruptPolicy::ColludingOffset { magnitude } => {
+            for v in psi.iter_mut() {
+                *v += magnitude;
+            }
+        }
     }
 }
 
@@ -1880,5 +2072,154 @@ mod tests {
         assert!(anet
             .run_clamped(&dict, &task, &x, DiffusionParams::new(0.1, 4), u64::MAX)
             .is_err());
+    }
+
+    /// With zero Byzantine agents the resilient modes are deterministic:
+    /// same seed ⇒ bitwise replay (trajectories, stats, clock), and the
+    /// resolved mode is reported as requested.
+    #[test]
+    fn resilient_modes_fault_free_replay_bitwise() {
+        let (n, m, iters) = (10, 5, 40);
+        let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+        let params = DiffusionParams::new(0.25, iters);
+        for mode in [CombineMode::Median, CombineMode::TrimmedMean(1)] {
+            let (dict, g, a, x) = problem(n, m, 0xB1_2A, &Topology::Ring { k: 2 });
+            let ap = AsyncParams::default()
+                .with_tau(2)
+                .with_delays(DelayDist::Exp { mean_us: 70.0 }, DelayDist::Exp { mean_us: 20.0 })
+                .with_seed(77)
+                .with_combine(mode);
+            let mut a1 = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            a1.run(&dict, &task, &x, params).unwrap();
+            assert_eq!(a1.combine_mode(), mode);
+            let mut a2 = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+            a2.run(&dict, &task, &x, params).unwrap();
+            for k in 0..n {
+                assert_eq!(a1.nu(k), a2.nu(k), "{mode:?}: agent {k}");
+            }
+            assert_eq!(a1.stats(), a2.stats(), "{mode:?}");
+            assert_eq!(a1.sim_time_us(), a2.sim_time_us(), "{mode:?}");
+            assert_eq!(a1.chaos_stats(), ChaosStats::default(), "{mode:?}: no chaos");
+        }
+    }
+
+    /// Fault-free, the trimmed mean still reaches the dual optimum: the
+    /// aggregate stays a convex combination summing to one, so the
+    /// consensus fixed point is unchanged (not bitwise vs Metropolis —
+    /// different arithmetic — but the same ν°).
+    #[test]
+    fn trimmed_mean_fault_free_converges() {
+        let (n, m, iters) = (12, 5, 1500);
+        let (dict, g, a, x) = problem(n, m, 0xB1_2B, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.4, iters);
+        let exact = crate::infer::exact_dual(&dict, &task, &x, 1e-6, 20_000).unwrap();
+        let mut net = AsyncNetwork::new(
+            g,
+            a,
+            m,
+            None,
+            AsyncParams::default().with_combine(CombineMode::TrimmedMean(1)),
+        )
+        .unwrap();
+        net.run(&dict, &task, &x, params).unwrap();
+        let msd = net.msd_vs(&exact.nu);
+        assert!(msd < 1e-3, "fault-free trimmed mean should converge: msd {msd}");
+    }
+
+    /// The acceptance scenario in miniature: a sign-flip attacker biases
+    /// the undefended Metropolis combine by orders of magnitude, while
+    /// `TrimmedMean(1)` recovers to the clean fixed point; the attacked
+    /// runs replay bitwise and the corruption counter lights up.
+    #[test]
+    fn sign_flip_attacker_defended_by_trimmed_mean() {
+        let (n, m, iters) = (12, 5, 1500);
+        let (dict, g, a, x) = problem(n, m, 0xB1_2C, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.4, iters);
+        let exact = crate::infer::exact_dual(&dict, &task, &x, 1e-6, 20_000).unwrap();
+        let schedule = FaultSchedule::new(0xB1_2C)
+            .with_byzantine(3, CorruptPolicy::SignFlip, 0, u64::MAX);
+        let mk = |mode: CombineMode| {
+            AsyncParams::default()
+                .with_tau(1)
+                .with_delays(DelayDist::Constant { us: 40 }, DelayDist::Constant { us: 10 })
+                .with_seed(11)
+                .with_chaos(schedule.clone())
+                .with_combine(mode)
+        };
+
+        let mut undefended =
+            AsyncNetwork::new(g.clone(), a.clone(), m, None, mk(CombineMode::Metropolis))
+                .unwrap();
+        undefended.run(&dict, &task, &x, params).unwrap();
+        let msd_undefended = undefended.msd_vs(&exact.nu);
+        assert!(undefended.chaos_stats().corrupted > 0, "attacker transmitted lies");
+
+        let mut defended =
+            AsyncNetwork::new(g.clone(), a.clone(), m, None, mk(CombineMode::TrimmedMean(1)))
+                .unwrap();
+        defended.run(&dict, &task, &x, params).unwrap();
+        let msd_defended = defended.msd_vs(&exact.nu);
+
+        assert!(
+            !msd_undefended.is_finite() || msd_undefended > 10.0 * msd_defended.max(1e-12),
+            "attack must bias the undefended run: undefended {msd_undefended:.3e} vs \
+             defended {msd_defended:.3e}"
+        );
+        assert!(
+            msd_defended < 1e-2,
+            "trimmed mean must hold near the clean optimum: {msd_defended:.3e}"
+        );
+
+        // Replay: the attacked run is a pure function of its seed.
+        let mut replay =
+            AsyncNetwork::new(g, a, m, None, mk(CombineMode::TrimmedMean(1))).unwrap();
+        replay.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(defended.nu(k), replay.nu(k), "agent {k}");
+        }
+        assert_eq!(defended.chaos_stats(), replay.chaos_stats());
+        assert_eq!(defended.sim_time_us(), replay.sim_time_us());
+    }
+
+    /// Scaled-noise corruption draws from the dedicated chaos stream
+    /// only: a schedule whose Byzantine window has expired leaves the
+    /// trajectory identical to a schedule with no Byzantine fault at all
+    /// past the window (same delay-stream consumption).
+    #[test]
+    fn expired_byzantine_window_consumes_no_randomness() {
+        let (n, m, iters) = (8, 4, 40);
+        let (dict, g, a, x) = problem(n, m, 0xB1_2D, &Topology::Ring { k: 1 });
+        let task = TaskSpec::SparseCoding { gamma: 0.2, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+        // Window [0, 1): closed before the first adapt completes under
+        // nonzero compute delays — no message is ever corrupted.
+        let sched_expired = FaultSchedule::new(7).with_byzantine(
+            2,
+            CorruptPolicy::ScaledNoise { sigma: 2.0 },
+            0,
+            1,
+        );
+        // A crash window far past completion: same chaos_active=true
+        // footprint (gate timeouts scheduled), different fault list.
+        let sched_inert = FaultSchedule::new(7).with_crash(2, u64::MAX - 2, u64::MAX - 1);
+        let mk = |s: FaultSchedule| {
+            AsyncParams::default()
+                .with_tau(1)
+                .with_delays(DelayDist::Constant { us: 50 }, DelayDist::Constant { us: 10 })
+                .with_seed(13)
+                .with_chaos(s)
+        };
+        let mut a1 = AsyncNetwork::new(g.clone(), a.clone(), m, None, mk(sched_expired)).unwrap();
+        a1.run(&dict, &task, &x, params).unwrap();
+        assert_eq!(a1.chaos_stats().corrupted, 0, "window closed before any send");
+        let mut a2 = AsyncNetwork::new(g, a, m, None, mk(sched_inert)).unwrap();
+        a2.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(a1.nu(k), a2.nu(k), "agent {k}");
+        }
+        assert_eq!(a1.stats(), a2.stats());
+        assert_eq!(a1.sim_time_us(), a2.sim_time_us());
     }
 }

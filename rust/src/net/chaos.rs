@@ -32,6 +32,23 @@
 //! * [`Fault::Drop`] — each physically transmitted message in the window
 //!   is lost i.i.d. with probability `p` (coins come from the schedule's
 //!   dedicated chaos stream, never from the executor's delay streams).
+//! * [`Fault::Byzantine`] — an agent **lies**: every ψ it transmits while
+//!   the window is active is corrupted by a [`CorruptPolicy`] before it
+//!   leaves the agent (the agent's own state stays honest — it deceives
+//!   its neighbors, not itself). Scaled-noise draws come from the same
+//!   dedicated chaos stream as drop coins, so attacks replay
+//!   bit-identically and a schedule without Byzantine windows consumes no
+//!   extra randomness. The receiver-side defense is the resilient
+//!   combine ([`CombineMode::Median`] / [`CombineMode::TrimmedMean`]).
+//!
+//! ## Correlated failures (Gilbert–Elliott)
+//!
+//! [`FaultSchedule::with_bursty_links`] generates *correlated* link
+//! failures: each affected edge runs a two-state Gilbert–Elliott Markov
+//! process (good/bad with exponential holding times), so down-windows
+//! arrive in bursts instead of the independent up/down windows of
+//! [`FaultSchedule::with_edge_churn`]. Like every generator here it is a
+//! pure function of its arguments.
 //!
 //! ## Degradation policy
 //!
@@ -43,6 +60,48 @@
 use crate::error::{DdlError, Result};
 use crate::graph::Graph;
 use crate::rng::Pcg64;
+
+/// How a Byzantine agent corrupts the ψ copies it transmits. Applied to
+/// each outgoing message independently, after the honest adapt — the
+/// attacker's own retained state is never touched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CorruptPolicy {
+    /// Transmit `−ψ` (the classic direction-reversing attacker).
+    SignFlip,
+    /// Transmit `ψ + σ·g`, `g` i.i.d. standard normal per coordinate.
+    /// Draws come from the executor's dedicated chaos stream, so the
+    /// attack replays bit-identically per seed.
+    ScaledNoise { sigma: f32 },
+    /// Transmit a constant vector (every coordinate = `value`),
+    /// regardless of the honest iterate.
+    ConstantPsi { value: f32 },
+    /// Transmit `ψ + magnitude·1`. Colluding attackers sharing one
+    /// `magnitude` push every neighborhood toward the same offset — the
+    /// coordinated-bias attack trimmed aggregation is sized against.
+    ColludingOffset { magnitude: f32 },
+}
+
+impl CorruptPolicy {
+    /// Stable numeric tag for trace events (`fault:byzantine` spans).
+    pub fn tag(&self) -> u64 {
+        match self {
+            CorruptPolicy::SignFlip => 0,
+            CorruptPolicy::ScaledNoise { .. } => 1,
+            CorruptPolicy::ConstantPsi { .. } => 2,
+            CorruptPolicy::ColludingOffset { .. } => 3,
+        }
+    }
+
+    /// Short human-readable name (report summaries).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorruptPolicy::SignFlip => "sign-flip",
+            CorruptPolicy::ScaledNoise { .. } => "scaled-noise",
+            CorruptPolicy::ConstantPsi { .. } => "constant",
+            CorruptPolicy::ColludingOffset { .. } => "colluding-offset",
+        }
+    }
+}
 
 /// One fault window. All windows are half-open `[from_us, until_us)` on
 /// the simulated microsecond clock.
@@ -60,6 +119,9 @@ pub enum Fault {
     Crash { agent: usize, from_us: u64, until_us: u64 },
     /// Transmitted messages are dropped i.i.d. with probability `p`.
     Drop { p: f64, from_us: u64, until_us: u64 },
+    /// Agent transmits corrupted ψ for the window (its own state stays
+    /// honest; see [`CorruptPolicy`]).
+    Byzantine { agent: usize, policy: CorruptPolicy, from_us: u64, until_us: u64 },
 }
 
 #[inline]
@@ -125,6 +187,19 @@ impl FaultSchedule {
         self
     }
 
+    /// Add a Byzantine window: `agent` transmits ψ corrupted by `policy`
+    /// for the window's duration.
+    pub fn with_byzantine(
+        mut self,
+        agent: usize,
+        policy: CorruptPolicy,
+        from_us: u64,
+        until_us: u64,
+    ) -> Self {
+        self.faults.push(Fault::Byzantine { agent, policy, from_us, until_us });
+        self
+    }
+
     /// Convenience: a bipartition putting the first `⌈frac·n⌉` agents
     /// (clamped to `[1, n−1]` so both sides are non-empty) on one side.
     pub fn split_side(n: usize, frac: f64) -> Vec<bool> {
@@ -163,6 +238,60 @@ impl FaultSchedule {
         self
     }
 
+    /// Seeded Gilbert–Elliott bursty-link generator: `links` randomly
+    /// chosen edges of `graph` each run an independent two-state Markov
+    /// process over `[0, horizon_us)` — *good* (up) with exponential
+    /// holding time of mean `mean_up_us`, then *bad* (down, one
+    /// [`Fault::EdgeDown`] window) with exponential holding time of mean
+    /// `mean_down_us`, and so on until the horizon. Down-windows on one
+    /// edge therefore arrive in temporally correlated bursts, unlike the
+    /// independent windows of [`Self::with_edge_churn`]. A pure function
+    /// of its arguments — the same call always yields the same schedule.
+    pub fn with_bursty_links(
+        mut self,
+        graph: &Graph,
+        links: usize,
+        mean_up_us: u64,
+        mean_down_us: u64,
+        horizon_us: u64,
+        seed: u64,
+    ) -> Self {
+        let edges: Vec<(usize, usize)> = (0..graph.n())
+            .flat_map(|u| {
+                graph.neighbors(u).iter().filter(move |&&v| v > u).map(move |&v| (u, v))
+            })
+            .collect();
+        if edges.is_empty() || horizon_us == 0 {
+            return self;
+        }
+        let mut rng = Pcg64::new(seed);
+        let exp = |rng: &mut Pcg64, mean: u64| -> u64 {
+            (-rng.next_f64().max(1e-12).ln() * mean.max(1) as f64).round().max(1.0) as u64
+        };
+        for _ in 0..links {
+            let (u, v) = edges[rng.next_below(edges.len() as u64) as usize];
+            let mut t = 0u64;
+            loop {
+                t = t.saturating_add(exp(&mut rng, mean_up_us));
+                if t >= horizon_us {
+                    break;
+                }
+                let down = exp(&mut rng, mean_down_us);
+                self.faults.push(Fault::EdgeDown {
+                    u,
+                    v,
+                    from_us: t,
+                    until_us: t.saturating_add(down),
+                });
+                t = t.saturating_add(down);
+                if t >= horizon_us {
+                    break;
+                }
+            }
+        }
+        self
+    }
+
     /// Validate agent indices and window shapes against a network size.
     pub fn validate(&self, n: usize) -> Result<()> {
         for f in &self.faults {
@@ -182,6 +311,17 @@ impl FaultSchedule {
                 Fault::Crash { agent, from_us, until_us } => *agent < n && from_us < until_us,
                 Fault::Drop { p, from_us, until_us } => {
                     (0.0..=1.0).contains(p) && from_us < until_us
+                }
+                Fault::Byzantine { agent, policy, from_us, until_us } => {
+                    let sane = match policy {
+                        CorruptPolicy::ScaledNoise { sigma } => {
+                            sigma.is_finite() && *sigma >= 0.0
+                        }
+                        CorruptPolicy::ConstantPsi { value } => value.is_finite(),
+                        CorruptPolicy::ColludingOffset { magnitude } => magnitude.is_finite(),
+                        CorruptPolicy::SignFlip => true,
+                    };
+                    *agent < n && from_us < until_us && sane
                 }
             };
             if !ok {
@@ -272,6 +412,26 @@ impl FaultSchedule {
     pub fn live_out_degree(&self, graph: &Graph, k: usize, t: u64) -> usize {
         graph.neighbors(k).iter().filter(|&&nb| self.link_up(k, nb, t)).count()
     }
+
+    /// Corruption policy in effect for agent `k` at time `t` (`None` when
+    /// the agent transmits honestly). First matching window wins, in
+    /// insertion order.
+    pub fn byzantine_policy(&self, k: usize, t: u64) -> Option<CorruptPolicy> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Byzantine { agent, policy, from_us, until_us }
+                if *agent == k && covers(*from_us, *until_us, t) =>
+            {
+                Some(*policy)
+            }
+            _ => None,
+        })
+    }
+
+    /// Does the schedule contain any Byzantine window? (Report summaries
+    /// and the `--byzantine` probe key off this.)
+    pub fn has_byzantine(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::Byzantine { .. }))
+    }
 }
 
 /// Combine rule of the async executor.
@@ -296,6 +456,18 @@ pub enum CombineMode {
     Metropolis,
     /// Force the push-sum–corrected combine.
     PushSum,
+    /// Resilient combine: coordinate-wise weighted **median** over
+    /// {self} ∪ in-neighborhood. The maximally robust member of the
+    /// trimmed family — tolerates up to ⌊(d−1)/2⌋ corrupted neighbors at
+    /// the cost of discarding the most information per combine.
+    Median,
+    /// Resilient combine: coordinate-wise **trimmed weighted mean** —
+    /// sort participant values per coordinate (deterministic
+    /// `total_cmp` tie-breaking), discard the `f` smallest and `f`
+    /// largest, and take the Metropolis-weighted mean of the survivors
+    /// with weights renormalized to sum to one. Tolerates up to `f`
+    /// corrupted neighbors per neighborhood.
+    TrimmedMean(usize),
 }
 
 /// Graceful-degradation knobs (all only consulted when a non-empty
@@ -339,6 +511,9 @@ pub struct ChaosStats {
     /// Largest staleness used by a fallback (the τ invariant tracks
     /// gated combines only; fallbacks are accounted here).
     pub max_fallback_staleness: usize,
+    /// ψ copies corrupted before transmission by a Byzantine window
+    /// (one per outgoing message of a corrupted adapt).
+    pub corrupted: usize,
 }
 
 #[cfg(test)]
@@ -436,5 +611,84 @@ mod tests {
             .validate(5)
             .is_err());
         assert!(FaultSchedule::new(0).with_partition(vec![true, false], 0, 10).validate(5).is_err());
+        assert!(FaultSchedule::new(0)
+            .with_byzantine(7, CorruptPolicy::SignFlip, 0, 10)
+            .validate(5)
+            .is_err());
+        assert!(FaultSchedule::new(0)
+            .with_byzantine(1, CorruptPolicy::SignFlip, 10, 10)
+            .validate(5)
+            .is_err());
+        assert!(FaultSchedule::new(0)
+            .with_byzantine(1, CorruptPolicy::ScaledNoise { sigma: -1.0 }, 0, 10)
+            .validate(5)
+            .is_err());
+        assert!(FaultSchedule::new(0)
+            .with_byzantine(1, CorruptPolicy::ConstantPsi { value: f32::NAN }, 0, 10)
+            .validate(5)
+            .is_err());
+    }
+
+    #[test]
+    fn byzantine_windows_query_and_validate() {
+        let s = FaultSchedule::new(0)
+            .with_byzantine(2, CorruptPolicy::SignFlip, 100, 200)
+            .with_byzantine(4, CorruptPolicy::ScaledNoise { sigma: 0.5 }, 0, 50);
+        assert!(s.validate(6).is_ok());
+        assert!(s.has_byzantine());
+        assert_eq!(s.byzantine_policy(2, 150), Some(CorruptPolicy::SignFlip));
+        assert_eq!(s.byzantine_policy(2, 99), None, "before the window");
+        assert_eq!(s.byzantine_policy(2, 200), None, "half-open: honest at until");
+        assert_eq!(s.byzantine_policy(3, 150), None, "other agents honest");
+        assert_eq!(
+            s.byzantine_policy(4, 10),
+            Some(CorruptPolicy::ScaledNoise { sigma: 0.5 })
+        );
+        assert!(!FaultSchedule::new(0).with_drops(0.1, 0, 10).has_byzantine());
+    }
+
+    #[test]
+    fn corrupt_policy_tags_and_names_are_stable() {
+        let all = [
+            CorruptPolicy::SignFlip,
+            CorruptPolicy::ScaledNoise { sigma: 1.0 },
+            CorruptPolicy::ConstantPsi { value: 1.0 },
+            CorruptPolicy::ColludingOffset { magnitude: 1.0 },
+        ];
+        assert_eq!(all.map(|p| p.tag()), [0, 1, 2, 3]);
+        assert_eq!(
+            all.map(|p| p.name()),
+            ["sign-flip", "scaled-noise", "constant", "colluding-offset"]
+        );
+    }
+
+    #[test]
+    fn bursty_generator_is_deterministic_and_bursty() {
+        let mut rng = Pcg64::new(9);
+        let g = Graph::generate(12, &Topology::Ring { k: 2 }, &mut rng);
+        let a = FaultSchedule::new(0).with_bursty_links(&g, 3, 5_000, 1_000, 200_000, 7);
+        let b = FaultSchedule::new(0).with_bursty_links(&g, 3, 5_000, 1_000, 200_000, 7);
+        let c = FaultSchedule::new(0).with_bursty_links(&g, 3, 5_000, 1_000, 200_000, 8);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, c, "seed moves the schedule");
+        assert!(a.validate(12).is_ok());
+        // A single link alternates good/bad to the horizon, so its
+        // windows form a *burst*: consecutive, ordered, non-overlapping
+        // down-windows on one edge — unlike independent churn.
+        let single = FaultSchedule::new(0).with_bursty_links(&g, 1, 5_000, 1_000, 200_000, 7);
+        let windows: Vec<(usize, usize, u64, u64)> = single
+            .faults()
+            .iter()
+            .map(|f| match f {
+                Fault::EdgeDown { u, v, from_us, until_us } => (*u, *v, *from_us, *until_us),
+                other => panic!("bursty generator only emits EdgeDown, got {other:?}"),
+            })
+            .collect();
+        assert!(windows.len() >= 2, "200ms horizon / 5ms mean up-time yields a burst");
+        let (u0, v0) = (windows[0].0, windows[0].1);
+        for w in windows.windows(2) {
+            assert_eq!((w[1].0, w[1].1), (u0, v0), "one link, one burst");
+            assert!(w[0].3 <= w[1].2, "windows ordered, non-overlapping");
+        }
     }
 }

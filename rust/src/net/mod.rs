@@ -22,11 +22,14 @@
 //! traffic and convergence are directly comparable.
 //!
 //! The [`chaos`] module is the deterministic fault-injection layer over
-//! [`async_exec`]: edge churn, healing partitions, directed outages,
-//! message drops, and agent crash/recovery, every event a pure function
-//! of (seed, sim-time) — an empty schedule degenerates bit-for-bit to
-//! the fault-free trajectory, and directed faults auto-select the
-//! push-sum–corrected combine (`ddl chaos`).
+//! [`async_exec`]: edge churn (independent or Gilbert–Elliott bursty),
+//! healing partitions, directed outages, message drops, agent
+//! crash/recovery, and Byzantine corruption windows, every event a pure
+//! function of (seed, sim-time) — an empty schedule degenerates
+//! bit-for-bit to the fault-free trajectory, directed faults auto-select
+//! the push-sum–corrected combine, and corrupted-ψ attacks are defended
+//! by the opt-in resilient combine (`CombineMode::Median` /
+//! `TrimmedMean`, `ddl chaos --byzantine`).
 //!
 //! The [`pool`] module provides the shared scoped-thread worker pool that
 //! both the matrix-form engine and the scalar cost-consensus use for
@@ -49,7 +52,7 @@ pub mod tau_control;
 
 pub use async_exec::{AsyncNetwork, AsyncParams, DelayDist};
 pub use bsp::BspNetwork;
-pub use chaos::{ChaosPolicy, ChaosStats, CombineMode, Fault, FaultSchedule};
+pub use chaos::{ChaosPolicy, ChaosStats, CombineMode, CorruptPolicy, Fault, FaultSchedule};
 pub use message::{MessageStats, PsiMessage};
 pub use pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};
 pub use tau_control::{TauController, TauDecision};

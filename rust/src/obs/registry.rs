@@ -102,6 +102,7 @@ impl MetricsRegistry {
         self.inc("chaos.stale_fallbacks", s.stale_fallbacks as u64);
         self.inc("chaos.excluded_neighbors", s.excluded_neighbors as u64);
         self.inc("chaos.max_fallback_staleness", s.max_fallback_staleness as u64);
+        self.inc("chaos.corrupted", s.corrupted as u64);
     }
 
     /// Reconstruct the [`ChaosStats`] view absorbed by
@@ -116,6 +117,7 @@ impl MetricsRegistry {
             stale_fallbacks: self.counter("chaos.stale_fallbacks") as usize,
             excluded_neighbors: self.counter("chaos.excluded_neighbors") as usize,
             max_fallback_staleness: self.counter("chaos.max_fallback_staleness") as usize,
+            corrupted: self.counter("chaos.corrupted") as usize,
         }
     }
 }
@@ -160,6 +162,7 @@ mod tests {
             stale_fallbacks: 6,
             excluded_neighbors: 7,
             max_fallback_staleness: 8,
+            corrupted: 9,
         };
         let mut r = MetricsRegistry::new();
         r.absorb_message_stats("net", &ms);

@@ -56,6 +56,9 @@ pub struct ControlDecision {
     /// Mean recent batch fill relative to the cap each batch was formed
     /// under, in [0, 1]; −1 when no batch completed yet.
     pub fill: f64,
+    /// Requests the bounded admission queue shed since the previous
+    /// decision (0 for unbounded queues).
+    pub shed: usize,
 }
 
 /// One depth-controller re-plan, recorded at epoch boundaries.
@@ -231,6 +234,8 @@ pub struct BatchController {
     /// when observed), trimmed to 8.
     fills: VecDeque<f64>,
     next_tick_us: u64,
+    /// Load shed by the bounded admission queue since the last decision.
+    shed_since_tick: usize,
     decisions: Vec<ControlDecision>,
 }
 
@@ -260,6 +265,7 @@ impl BatchController {
             latencies_ms: VecDeque::new(),
             fills: VecDeque::new(),
             next_tick_us: cfg.tick_us.max(1),
+            shed_since_tick: 0,
             decisions: Vec::new(),
         }
     }
@@ -285,6 +291,14 @@ impl BatchController {
         while self.latencies_ms.len() > self.window {
             self.latencies_ms.pop_front();
         }
+    }
+
+    /// Report `n` requests shed by the bounded admission queue
+    /// ([`crate::error::DdlError::QueueFull`]). Sheds are the strongest
+    /// overload signal the controller sees — demand the queue could not
+    /// even hold — and they override the fill/SLO laws at the next tick.
+    pub fn observe_shed(&mut self, n: usize) {
+        self.shed_since_tick += n;
     }
 
     /// Re-decide the policy if a control tick has elapsed by `now_us`;
@@ -336,6 +350,16 @@ impl BatchController {
                 w = (w + w / 2 + 64).min(self.wait_max_us);
             }
         }
+        let shed = self.shed_since_tick;
+        self.shed_since_tick = 0;
+        if shed > 0 {
+            // Overflow storm: the queue rejected demand outright. Drain
+            // harder than either steady-state law would — widen the cap
+            // for throughput and cut the wait budget so formed batches
+            // release immediately.
+            b = (self.policy.max_batch * 2).min(self.batch_max);
+            w = (self.policy.max_wait_us / 2).max(self.wait_min_us);
+        }
         self.policy = BatchPolicy::new(b, w);
         self.decisions.push(ControlDecision {
             t_us: now_us,
@@ -343,6 +367,7 @@ impl BatchController {
             max_wait_us: self.policy.max_wait_us,
             p99_ms: p99.unwrap_or(-1.0),
             fill: fill.unwrap_or(-1.0),
+            shed,
         });
         Some(self.policy)
     }
@@ -630,6 +655,31 @@ mod tests {
             ctl.observe_batch(1, 16, &[1.0; 4]);
         }
         assert_eq!(ctl.maybe_decide(2_000).unwrap().max_batch, 8);
+    }
+
+    /// Sheds override the steady-state laws at the next tick: the cap
+    /// doubles and the wait halves, then the counter resets so a calm
+    /// tick returns to the normal laws.
+    #[test]
+    fn shed_overrides_fill_and_slo_laws() {
+        let mut ctl = BatchController::new(&cfg(), 8, 4_000);
+        // Slack fill would normally decay the cap; the shed wins.
+        for _ in 0..8 {
+            ctl.observe_batch(1, 8, &[1.0; 4]);
+        }
+        ctl.observe_shed(3);
+        let p = ctl.maybe_decide(1_000).expect("tick due");
+        assert_eq!(p.max_batch, 16, "shed must widen the cap despite slack fill");
+        assert_eq!(p.max_wait_us, 2_000, "shed must cut the wait budget");
+        assert_eq!(ctl.decisions()[0].shed, 3);
+        // Next tick with no sheds: back to the steady-state laws (slack
+        // fill decays the cap again).
+        for _ in 0..8 {
+            ctl.observe_batch(1, 16, &[1.0; 4]);
+        }
+        let p = ctl.maybe_decide(2_000).expect("tick due");
+        assert_eq!(p.max_batch, 8);
+        assert_eq!(ctl.decisions()[1].shed, 0);
     }
 
     #[test]

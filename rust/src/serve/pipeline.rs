@@ -64,6 +64,20 @@
 //! clock ([`PipeSim`]) instead of wall time, so adaptive runs replay
 //! bit-identically; with the control plane disabled this module takes
 //! exactly its static PR 3 code paths.
+//!
+//! ## Fault injection (`[serve] kill_slot` / `kill_at_batch` / `queue_capacity`)
+//!
+//! Two deterministic serving faults ride the same machinery the chaos
+//! layer uses for the async executor: **worker death mid-batch** — the
+//! victim slot discards the first Work with batch index ≥ `kill_at_batch`
+//! and exits; the dispatcher, which knows the same config, clones the
+//! batch before the fatal send and re-dispatches it to the next live slot
+//! (traced as `worker_death` / `batch_redispatch`), so the updater sees
+//! every batch exactly once and the final dictionary stays bit-identical
+//! to the no-fault reference executor — and **bounded admission** —
+//! `queue_capacity` > 0 sheds overflow arrivals with the typed
+//! [`DdlError::QueueFull`] rejection (traced as `queue_shed`, surfaced to
+//! the batch controller as overload pressure).
 
 use crate::config::experiment::ServeConfig;
 use crate::error::{DdlError, Result};
@@ -113,16 +127,42 @@ pub struct BatchFormer {
     queue: Arc<SharedQueue>,
     stream: VecDeque<(u64, Vec<f32>)>,
     now_us: u64,
+    /// Queue sheds already handed out via [`Self::take_shed`].
+    reported_shed: u64,
 }
 
 impl BatchFormer {
-    /// Former over `stream` (`(arrival_us, x)` pairs in arrival order).
+    /// Former over `stream` (`(arrival_us, x)` pairs in arrival order)
+    /// with unbounded admission.
     pub fn new(policy: BatchPolicy, stream: Vec<(u64, Vec<f32>)>) -> Self {
+        Self::with_capacity(policy, 0, stream)
+    }
+
+    /// Former with a bounded admission queue (`capacity` requests, `0` =
+    /// unbounded): arrivals that find the queue full are shed — counted
+    /// by the queue and surfaced batch-by-batch via [`Self::take_shed`].
+    pub fn with_capacity(
+        policy: BatchPolicy,
+        capacity: usize,
+        stream: Vec<(u64, Vec<f32>)>,
+    ) -> Self {
         BatchFormer {
-            queue: Arc::new(SharedQueue::new(policy)),
+            queue: Arc::new(SharedQueue::with_capacity(policy, capacity)),
             stream: stream.into(),
             now_us: 0,
+            reported_shed: 0,
         }
+    }
+
+    /// Sheds recorded by the bounded queue since the last call (always 0
+    /// for unbounded queues). Travels with the next formed batch so the
+    /// updater-side controller sees overflow at a deterministic point of
+    /// the batch sequence.
+    pub fn take_shed(&mut self) -> usize {
+        let total = self.queue.shed_count();
+        let delta = total - self.reported_shed;
+        self.reported_shed = total;
+        delta as usize
     }
 
     /// The shared admission queue.
@@ -142,9 +182,11 @@ impl BatchFormer {
     pub fn next_batch(&mut self) -> Option<Vec<Request>> {
         loop {
             // Admit every request that has arrived by the current clock.
+            // A bounded queue sheds the overflow (the queue counts it;
+            // `take_shed` reports it with the next formed batch).
             while self.stream.front().is_some_and(|(t, _)| *t <= self.now_us) {
                 if let Some((t, x)) = self.stream.pop_front() {
-                    self.queue.push(x, t);
+                    let _ = self.queue.try_push(x, t);
                 }
             }
             if self.queue.ready(self.now_us) {
@@ -300,6 +342,14 @@ impl UpdaterState {
         mut emit: impl FnMut(Token),
     ) -> Result<()> {
         let j = self.batch_losses.len();
+        if formed.shed > 0 && self.obs.enabled() {
+            self.obs.instant(
+                formed.at_us,
+                "queue_shed",
+                Track::Stage("form"),
+                vec![("j", ArgValue::U(j as u64)), ("count", ArgValue::U(formed.shed as u64))],
+            );
+        }
         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
         let tstats = recover_and_stats(
             &snap,
@@ -341,6 +391,9 @@ impl UpdaterState {
                 self.latencies_ms
                     .push(done_us.saturating_sub(r.arrival_us) as f64 / 1e3);
             }
+            // Load the bounded queue shed before this batch formed is
+            // the controller's overload signal ([`BatchController::observe_shed`]).
+            ctl.batch.observe_shed(formed.shed);
             ctl.batch.observe_batch(batch.len(), formed.cap, &self.latencies_ms[from..]);
             if let Some(policy) = ctl.batch.maybe_decide(done_us) {
                 // PR 5's `ServeReport::decisions` row, as a trace instant.
@@ -467,6 +520,9 @@ impl UpdaterState {
 struct Formed {
     at_us: u64,
     cap: usize,
+    /// Requests the bounded admission queue shed since the previous
+    /// batch formed (0 for unbounded queues).
+    shed: usize,
 }
 
 /// Dispatch of one formed batch to an inference worker.
@@ -551,7 +607,7 @@ pub fn run_pipelined(
     ));
 
     let obs = crate::obs::handle_for(&cfg.obs);
-    let mut former = BatchFormer::new(policy, stream);
+    let mut former = BatchFormer::with_capacity(policy, cfg.queue_capacity, stream);
     let mut updater = UpdaterState::new(cfg, dict0, directed_edges, depth, slots);
     updater.obs = obs.clone();
     let mode: &'static str = match (exec, adaptive) {
@@ -572,6 +628,7 @@ pub fn run_pipelined(
     };
 
     let batches = accum.batch_losses.len();
+    let shed = former.queue().shed_count() as usize;
     // Adaptive sessions report on the deterministic virtual clock (bit-
     // reproducible figures); static ones keep the measured wall clock.
     let duration_s = match accum.virtual_duration_us {
@@ -586,6 +643,7 @@ pub fn run_pipelined(
         pipeline_depth: depth,
         samples: served,
         batches,
+        shed,
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         duration_s,
         throughput_rps: served as f64 / duration_s,
@@ -621,6 +679,12 @@ pub fn run_pipelined(
 /// channel in the threaded executor — one token popped per batch, policy
 /// applied before the batch is formed, tokens re-emitted by the updater
 /// (0, 1, or 2 per batch in adaptive mode).
+///
+/// Worker-death injection (`[serve] kill_slot`) is a no-op here: the
+/// reference has no workers to kill, and because engines are stateless
+/// between batches the threaded executor's re-dispatch reproduces this
+/// executor's results bit-for-bit anyway — which is exactly the parity
+/// check that proves a death loses no batch.
 #[allow(clippy::too_many_arguments)]
 fn run_reference(
     cfg: &ServeConfig,
@@ -653,7 +717,8 @@ fn run_reference(
             Some(b) => b,
             None => break,
         };
-        let formed = Formed { at_us: former.now_us(), cap: queue.policy().max_batch };
+        let formed =
+            Formed { at_us: former.now_us(), cap: queue.policy().max_batch, shed: former.take_shed() };
         // Residual admission-queue depth after the drain, on the
         // formation clock.
         obs.counter(formed.at_us, "queue_depth", Track::Stage("form"), queue.len() as f64);
@@ -744,15 +809,27 @@ fn run_threaded_pipeline(
         });
 
         // Stage 2: inference workers (slot w serves batches j ≡ w mod
-        // slots).
+        // slots). `[serve] kill_slot` marks one slot as a deterministic
+        // fault-injection victim: on the first batch with index ≥
+        // `kill_at_batch` it discards the received Work and exits —
+        // death mid-batch, the batch lost with the worker. The
+        // dispatcher (which knows the same config) re-dispatches.
+        let kill_slot = cfg.kill_slot.filter(|&s| s < slots);
         let mut worker_handles = Vec::with_capacity(slots);
         for (w, mut engine) in engines.into_iter().enumerate() {
             let work_rx = work_rxs[w].take().ok_or_else(|| {
                 DdlError::Runtime(format!("pipeline worker {w} receiver already taken"))
             })?;
+            let die_at = (kill_slot == Some(w)).then_some(cfg.kill_at_batch);
             let done_tx = done_tx.clone();
             worker_handles.push(scope.spawn(move || {
                 while let Ok(Work { j, snap, batch, formed }) = work_rx.recv() {
+                    if die_at.is_some_and(|at| j >= at) {
+                        // Worker death mid-batch: the Work is dropped
+                        // unreported and the thread exits (its done_tx
+                        // closes with it).
+                        break;
+                    }
                     let res = {
                         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
                         engine.reserve_batch(refs.len());
@@ -790,6 +867,11 @@ fn run_threaded_pipeline(
         // `next_batch`) never blocks.
         let queue = former.queue();
         let mut dispatched = 0usize;
+        // Live-slot set for deterministic batch re-dispatch after the
+        // injected worker death (slot choice cannot change results:
+        // engines are stateless between batches).
+        let mut live: Vec<usize> = (0..slots).collect();
+        let mut dead: Option<usize> = None;
         loop {
             let token = match snap_rx.recv() {
                 Ok(t) => t,
@@ -802,17 +884,74 @@ fn run_threaded_pipeline(
                 Some(b) => b,
                 None => break,
             };
-            let formed = Formed { at_us: former.now_us(), cap: queue.policy().max_batch };
+            let formed = Formed {
+                at_us: former.now_us(),
+                cap: queue.policy().max_batch,
+                shed: former.take_shed(),
+            };
             // Formation-side gauge; in the threaded executor this
             // interleaves with the updater's events in recorder order
             // (timestamps, not order, are the deterministic part — see
             // the module docs in `crate::obs`).
             obs.counter(formed.at_us, "queue_depth", Track::Stage("form"), queue.len() as f64);
-            if work_txs[dispatched % slots]
-                .send(Work { j: dispatched, snap: token.snap, batch, formed })
-                .is_err()
+            let target = dispatched % slots;
+            let work = Work { j: dispatched, snap: token.snap, batch, formed };
+            if dead != Some(target) && kill_slot == Some(target) && dispatched >= cfg.kill_at_batch
             {
-                break; // worker exited early; error surfaces below
+                // This dispatch kills the victim mid-batch. The batch is
+                // cloned *before* the fatal send, the victim's copy dies
+                // with it, and the clone goes to the next live slot — so
+                // the updater still sees every batch exactly once, in
+                // order, and the token count is conserved (the clone's
+                // snapshot is the one recycled).
+                if live.len() <= 1 {
+                    return Err(DdlError::Runtime(
+                        "pipeline: kill_slot would kill the last inference worker \
+                         (need pipeline depth >= 2 to survive a death)"
+                            .into(),
+                    ));
+                }
+                let clone = Work {
+                    j: work.j,
+                    snap: work.snap.clone(),
+                    batch: work.batch.clone(),
+                    formed,
+                };
+                let _ = work_txs[target].send(work);
+                live.retain(|&s| s != target);
+                dead = Some(target);
+                let to = live[dispatched % live.len()];
+                if obs.enabled() {
+                    obs.instant(
+                        formed.at_us,
+                        "worker_death",
+                        Track::Stage("infer"),
+                        vec![
+                            ("slot", ArgValue::U(target as u64)),
+                            ("j", ArgValue::U(dispatched as u64)),
+                        ],
+                    );
+                    obs.instant(
+                        formed.at_us,
+                        "batch_redispatch",
+                        Track::Stage("infer"),
+                        vec![
+                            ("j", ArgValue::U(dispatched as u64)),
+                            ("from", ArgValue::U(target as u64)),
+                            ("to", ArgValue::U(to as u64)),
+                        ],
+                    );
+                }
+                if work_txs[to].send(clone).is_err() {
+                    break; // worker exited early; error surfaces below
+                }
+            } else {
+                // Batches whose modulo slot is dead re-route to a live
+                // slot by the same deterministic rule.
+                let to = if dead == Some(target) { live[dispatched % live.len()] } else { target };
+                if work_txs[to].send(work).is_err() {
+                    break; // worker exited early; error surfaces below
+                }
             }
             dispatched += 1;
             if dispatched % 16 == 0 {

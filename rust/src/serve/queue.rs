@@ -19,9 +19,19 @@
 //! bookkeeping itself — a popped batch is *moved out* before inference
 //! starts — so **admission never blocks while a batch is in flight**
 //! (property-tested in `tests/serve_pipeline_parity.rs`).
+//!
+//! Admission can be **bounded** ([`MicroBatchQueue::with_capacity`],
+//! `[serve] queue_capacity`): [`MicroBatchQueue::try_push`] rejects with
+//! the typed [`DdlError::QueueFull`] once `capacity` requests wait, and
+//! the queue counts sheds so the session loop and the adaptive batch
+//! controller can observe overflow storms instead of queueing without
+//! limit. Capacity `0` (the default) keeps the historical unbounded
+//! behavior, and the infallible [`MicroBatchQueue::push`] always admits.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
+
+use crate::error::{DdlError, Result};
 
 /// Batch-formation policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -57,12 +67,32 @@ pub struct MicroBatchQueue {
     policy: BatchPolicy,
     pending: VecDeque<Request>,
     next_id: u64,
+    /// Admission bound for [`Self::try_push`]; `0` = unbounded.
+    capacity: usize,
+    /// Requests rejected by [`Self::try_push`] since construction.
+    shed: u64,
 }
 
 impl MicroBatchQueue {
-    /// Empty queue under `policy`.
+    /// Empty unbounded queue under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
-        MicroBatchQueue { policy, pending: VecDeque::new(), next_id: 0 }
+        Self::with_capacity(policy, 0)
+    }
+
+    /// Empty queue under `policy` with a bounded admission capacity
+    /// (`0` = unbounded, identical to [`Self::new`]).
+    pub fn with_capacity(policy: BatchPolicy, capacity: usize) -> Self {
+        MicroBatchQueue { policy, pending: VecDeque::new(), next_id: 0, capacity, shed: 0 }
+    }
+
+    /// The admission bound (`0` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests rejected by [`Self::try_push`] so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed
     }
 
     /// The active policy.
@@ -79,12 +109,26 @@ impl MicroBatchQueue {
         self.policy = BatchPolicy::new(policy.max_batch, policy.max_wait_us);
     }
 
-    /// Admit a sample at `now_us`; returns its request id.
+    /// Admit a sample at `now_us` unconditionally (ignores the capacity
+    /// bound); returns its request id.
     pub fn push(&mut self, x: Vec<f32>, now_us: u64) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.pending.push_back(Request { id, arrival_us: now_us, x });
         id
+    }
+
+    /// Admit a sample at `now_us` respecting the capacity bound. A full
+    /// queue sheds the sample: the shed counter bumps and the typed
+    /// [`DdlError::QueueFull`] comes back (the sample is dropped, *not*
+    /// queued; ids are only consumed by admitted requests, so a shed
+    /// leaves the id sequence — and hence replay — untouched).
+    pub fn try_push(&mut self, x: Vec<f32>, now_us: u64) -> Result<u64> {
+        if self.capacity > 0 && self.pending.len() >= self.capacity {
+            self.shed += 1;
+            return Err(DdlError::QueueFull { capacity: self.capacity });
+        }
+        Ok(self.push(x, now_us))
     }
 
     /// Number of queued requests.
@@ -156,9 +200,25 @@ pub struct SharedQueue {
 }
 
 impl SharedQueue {
-    /// Empty shared queue under `policy`.
+    /// Empty unbounded shared queue under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
-        SharedQueue { inner: Mutex::new(MicroBatchQueue::new(policy)) }
+        Self::with_capacity(policy, 0)
+    }
+
+    /// Empty shared queue under `policy` with a bounded admission
+    /// capacity (`0` = unbounded).
+    pub fn with_capacity(policy: BatchPolicy, capacity: usize) -> Self {
+        SharedQueue { inner: Mutex::new(MicroBatchQueue::with_capacity(policy, capacity)) }
+    }
+
+    /// The admission bound (`0` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.lock().capacity()
+    }
+
+    /// Requests rejected by [`Self::try_push`] so far.
+    pub fn shed_count(&self) -> u64 {
+        self.lock().shed_count()
     }
 
     /// The active policy (copied out under the lock; the policy is
@@ -177,9 +237,15 @@ impl SharedQueue {
         self.inner.lock().expect("SharedQueue: poisoned lock")
     }
 
-    /// Admit a sample at `now_us`; returns its request id.
+    /// Admit a sample at `now_us` unconditionally; returns its request id.
     pub fn push(&self, x: Vec<f32>, now_us: u64) -> u64 {
         self.lock().push(x, now_us)
+    }
+
+    /// Admit a sample at `now_us` respecting the capacity bound (see
+    /// [`MicroBatchQueue::try_push`]).
+    pub fn try_push(&self, x: Vec<f32>, now_us: u64) -> Result<u64> {
+        self.lock().try_push(x, now_us)
     }
 
     /// Number of queued requests.
@@ -318,6 +384,53 @@ mod tests {
         sq.set_policy(BatchPolicy::new(1, 0));
         assert_eq!(sq.policy().max_batch, 1);
         assert_eq!(sq.pop_batch(0).unwrap().len(), 1);
+    }
+
+    /// Bounded admission: try_push sheds exactly above capacity with the
+    /// typed error, ids are only consumed by admitted requests, popping
+    /// frees capacity, and capacity 0 never sheds.
+    #[test]
+    fn bounded_queue_sheds_with_typed_error() {
+        let mut q = MicroBatchQueue::with_capacity(BatchPolicy::new(2, 0), 3);
+        assert_eq!(q.capacity(), 3);
+        for i in 0..3 {
+            assert_eq!(q.try_push(vec![i as f32], 0).unwrap(), i as u64);
+        }
+        let err = q.try_push(vec![9.0], 0).unwrap_err();
+        assert!(matches!(err, DdlError::QueueFull { capacity: 3 }), "got {err}");
+        assert_eq!(q.shed_count(), 1);
+        assert_eq!(q.len(), 3, "shed sample must not be queued");
+        // A shed consumes no id: the next admitted request continues the
+        // sequence, keeping batches replayable.
+        assert_eq!(q.pop_batch(0).unwrap().len(), 2);
+        assert_eq!(q.try_push(vec![4.0], 1).unwrap(), 3);
+        assert_eq!(q.shed_count(), 1);
+        // The infallible push ignores the bound (legacy admit).
+        q.push(vec![5.0], 2);
+        q.push(vec![6.0], 2);
+        assert_eq!(q.len(), 4);
+        // Capacity 0 = unbounded: try_push never sheds.
+        let mut un = MicroBatchQueue::new(BatchPolicy::new(1, 0));
+        assert_eq!(un.capacity(), 0);
+        for i in 0..100 {
+            un.try_push(vec![0.0], i).unwrap();
+        }
+        assert_eq!(un.shed_count(), 0);
+    }
+
+    #[test]
+    fn shared_queue_mirrors_bounded_admission() {
+        let q = SharedQueue::with_capacity(BatchPolicy::new(4, 0), 2);
+        assert_eq!(q.capacity(), 2);
+        q.try_push(vec![1.0], 0).unwrap();
+        q.try_push(vec![2.0], 0).unwrap();
+        assert!(matches!(
+            q.try_push(vec![3.0], 0).unwrap_err(),
+            DdlError::QueueFull { capacity: 2 }
+        ));
+        assert_eq!(q.shed_count(), 1);
+        assert_eq!(q.len(), 2);
+        assert_eq!(SharedQueue::new(BatchPolicy::new(1, 0)).capacity(), 0);
     }
 
     #[test]

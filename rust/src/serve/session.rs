@@ -48,6 +48,9 @@ pub struct ServeReport {
     pub samples: usize,
     /// Minibatches drained through the engine.
     pub batches: usize,
+    /// Requests shed by the bounded admission queue (`[serve]
+    /// queue_capacity`; always 0 when the queue is unbounded).
+    pub shed: usize,
     /// Mean formed batch size.
     pub mean_batch: f64,
     /// Virtual session duration (arrival waits + measured service time).
@@ -111,7 +114,7 @@ impl ServeReport {
 
     fn summary_base(&self, agents: usize) -> String {
         format!(
-            "[{}] served {} samples in {} batches (mean B = {:.2}) over {:.3} s\n\
+            "[{}] served {} samples in {} batches (mean B = {:.2}, {} shed) over {:.3} s\n\
              throughput: {:.1} samples/s\n\
              latency ms: p50 {:.2}, p95 {:.2}, p99 {:.2}, max {:.2}\n\
              loss: first quarter {:.4} -> last quarter {:.4}\n\
@@ -120,6 +123,7 @@ impl ServeReport {
             self.samples,
             self.batches,
             self.mean_batch,
+            self.shed,
             self.duration_s,
             self.throughput_rps,
             self.latency_p50_ms,
@@ -324,7 +328,7 @@ fn run_serial(
         Some(c) => c.policy(),
         None => BatchPolicy::new(cfg.batch, cfg.max_wait_us),
     };
-    let mut queue = MicroBatchQueue::new(init_policy);
+    let mut queue = MicroBatchQueue::with_capacity(init_policy, cfg.queue_capacity);
     log(&format!(
         "serve{}: N={} M={} topology={} ({} directed edges, {} combine), B<={}, max_wait={}µs, \
          {} samples at {}",
@@ -351,10 +355,31 @@ fn run_serial(
     let mut next = 0usize;
 
     while next < stream.len() || !queue.is_empty() {
-        // Admit every request that has arrived by the current clock.
+        // Admit every request that has arrived by the current clock. A
+        // bounded queue sheds the overflow (typed rejection, counted,
+        // traced) instead of queueing without limit.
         while next < stream.len() && stream[next].0 <= now_us {
             let (t, x) = (stream[next].0, stream[next].1.clone());
-            queue.push(x, t);
+            match queue.try_push(x, t) {
+                Ok(_) => {}
+                Err(DdlError::QueueFull { capacity }) => {
+                    if obs.enabled() {
+                        obs.instant(
+                            now_us,
+                            "queue_shed",
+                            crate::obs::Track::Stage("form"),
+                            vec![
+                                ("capacity", crate::obs::ArgValue::U(capacity as u64)),
+                                ("arrival_us", crate::obs::ArgValue::U(t)),
+                            ],
+                        );
+                    }
+                    if let Some(ctl) = controller.as_mut() {
+                        ctl.observe_shed(1);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
             next += 1;
         }
         let end_of_stream = next >= stream.len();
@@ -482,6 +507,7 @@ fn run_serial(
         pipeline_depth: 0,
         samples: served,
         batches,
+        shed: queue.shed_count() as usize,
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         duration_s,
         throughput_rps: served as f64 / duration_s,
@@ -622,6 +648,23 @@ mod tests {
         assert_eq!(report.decisions, replay.decisions);
         assert_eq!(report.slo_p99_ms, cfg.control.slo_p99_ms);
         assert!(report.slo_violation_frac >= 0.0 && report.slo_violation_frac <= 1.0);
+    }
+
+    /// A bounded admission queue sheds the saturated-arrival overflow
+    /// deterministically: all 24 samples land at t = 0, capacity 10
+    /// admits exactly 10 and sheds the rest, and replay is bit-stable.
+    #[test]
+    fn bounded_queue_sheds_overflow_storm() {
+        let mut cfg = tiny_cfg();
+        cfg.queue_capacity = 10;
+        let report = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(report.shed, 14);
+        assert_eq!(report.samples, 10);
+        let replay = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(replay.shed, 14);
+        assert_eq!(replay.samples, 10);
+        // The default unbounded queue never sheds.
+        assert_eq!(run_service(&tiny_cfg(), &mut |_| {}).unwrap().shed, 0);
     }
 
     #[test]

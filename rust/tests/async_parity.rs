@@ -16,7 +16,8 @@ use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::infer::{exact_dual, DiffusionParams};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::net::{
-    AsyncNetwork, AsyncParams, BspNetwork, ChaosStats, CombineMode, DelayDist, FaultSchedule,
+    AsyncNetwork, AsyncParams, BspNetwork, ChaosStats, CombineMode, CorruptPolicy, DelayDist,
+    FaultSchedule,
 };
 use ddl::rng::Pcg64;
 
@@ -339,6 +340,120 @@ fn prop_randomized_fault_schedules_never_panic_or_stall() {
             for k in 0..n {
                 assert_eq!(net.nu(k), again.nu(k), "case {case}: replay agent {k}");
             }
+        }
+    }
+}
+
+/// Property (resilient-combine degeneracy): with **zero** Byzantine
+/// agents, `Median` and `TrimmedMean(f)` are plain deterministic combine
+/// rules — every agent finishes, the τ invariant holds, the chaos
+/// corruption counter stays zero, and same-seed replays are bitwise.
+#[test]
+fn prop_resilient_combine_deterministic_without_attackers() {
+    let mut rng = Pcg64::new(0xC4_A3);
+    let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+    for case in 0..8 {
+        let n = 6 + rng.next_below(12) as usize;
+        let m = 3 + rng.next_below(6) as usize;
+        let iters = 10 + rng.next_below(30) as usize;
+        let tau = rng.next_below(4) as usize;
+        let topo = random_topology(&mut rng);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let params = DiffusionParams::new(0.25, iters);
+        let combine =
+            if case % 2 == 0 { CombineMode::Median } else { CombineMode::TrimmedMean(1 + case % 3) };
+        // Empty-but-seeded schedule: the Byzantine machinery is armed but
+        // nobody attacks, so the resilient combine is the only change.
+        let ap = AsyncParams::default()
+            .with_tau(tau)
+            .with_delays(DelayDist::Constant { us: 60 }, DelayDist::Constant { us: 10 })
+            .with_seed(5000 + case as u64)
+            .with_chaos(FaultSchedule::new(rng.next_u64()))
+            .with_combine(combine);
+        let run = || {
+            let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let net = run();
+        let again = run();
+        for k in 0..n {
+            assert_eq!(net.iters_done(k), iters, "case {case} ({combine:?}): agent {k} stalled");
+            assert_eq!(net.nu(k), again.nu(k), "case {case} ({combine:?}): replay agent {k}");
+            assert!(net.nu(k).iter().all(|v| v.is_finite()), "case {case}: non-finite ν");
+        }
+        assert!(net.max_staleness_observed() <= tau, "case {case}: τ invariant");
+        assert_eq!(net.chaos_stats().corrupted, 0, "case {case}: nobody attacked");
+        assert_eq!(net.stats(), again.stats(), "case {case}: replay traffic");
+        assert_eq!(net.sim_time_us(), again.sim_time_us(), "case {case}: replay clock");
+    }
+}
+
+/// Property (defended attack): one corrupted agent per case (each policy
+/// in rotation) against `TrimmedMean(f ≥ 1)` — the executor never panics
+/// or stalls, the gated-staleness invariant survives the attack, every ν
+/// stays finite, corruption is actually happening (counter > 0), and the
+/// attacked run replays bit-identically.
+#[test]
+fn prop_trimmed_defense_survives_corrupted_neighbor() {
+    let mut rng = Pcg64::new(0xC4_A4);
+    let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+    let policies = [
+        CorruptPolicy::SignFlip,
+        CorruptPolicy::ScaledNoise { sigma: 5.0 },
+        CorruptPolicy::ConstantPsi { value: 3.0 },
+        CorruptPolicy::ColludingOffset { magnitude: 2.0 },
+    ];
+    for case in 0..8 {
+        let n = 8 + rng.next_below(12) as usize;
+        let m = 3 + rng.next_below(6) as usize;
+        let iters = 15 + rng.next_below(30) as usize;
+        let tau = rng.next_below(4) as usize;
+        let topo = random_topology(&mut rng);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let params = DiffusionParams::new(0.25, iters);
+        let attacker = rng.next_below(n as u64) as usize;
+        let policy = policies[case % policies.len()];
+        let schedule =
+            FaultSchedule::new(rng.next_u64()).with_byzantine(attacker, policy, 0, u64::MAX);
+        let ap = AsyncParams::default()
+            .with_tau(tau)
+            .with_delays(DelayDist::Constant { us: 60 }, DelayDist::Constant { us: 10 })
+            .with_seed(6000 + case as u64)
+            .with_chaos(schedule)
+            .with_combine(CombineMode::TrimmedMean(1));
+        let run = || {
+            let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let net = run();
+        for k in 0..n {
+            assert_eq!(net.iters_done(k), iters, "case {case} ({policy:?}): agent {k} stalled");
+            assert!(
+                net.nu(k).iter().all(|v| v.is_finite()),
+                "case {case} ({policy:?}): agent {k} blew up under attack"
+            );
+        }
+        assert!(
+            net.max_staleness_observed() <= tau,
+            "case {case}: attack broke the τ invariant ({} > {tau})",
+            net.max_staleness_observed()
+        );
+        assert!(net.chaos_stats().corrupted > 0, "case {case}: attack never fired");
+        let again = run();
+        assert_eq!(net.chaos_stats(), again.chaos_stats(), "case {case}: replay counters");
+        assert_eq!(net.sim_time_us(), again.sim_time_us(), "case {case}: replay clock");
+        for k in 0..n {
+            assert_eq!(net.nu(k), again.nu(k), "case {case}: replay agent {k}");
         }
     }
 }

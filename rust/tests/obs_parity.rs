@@ -189,6 +189,66 @@ fn chaos_traced_matches_untraced() {
     }
 }
 
+/// Byzantine chaos: a corrupted-ψ attacker under the trimmed-mean
+/// defense — the corruption hook and the resilient combine are both
+/// instrumented, so this pins the observer-effect contract on the two
+/// new seams (`psi_corrupt`, `combine_trimmed`) and on the corruption
+/// counter.
+#[test]
+fn byzantine_traced_matches_untraced() {
+    use ddl::net::{CombineMode, CorruptPolicy};
+    let policies = [
+        CorruptPolicy::SignFlip,
+        CorruptPolicy::ScaledNoise { sigma: 4.0 },
+        CorruptPolicy::ColludingOffset { magnitude: 2.0 },
+    ];
+    for case in 0u64..3 {
+        let n = 24;
+        let (graph, weights, dict, x, task) = problem(n, 0xB12A_0000 + case);
+        let mut seeder = Pcg64::new(0xB12A_1000 + case);
+        let attacker = seeder.next_below(n as u64) as usize;
+        let schedule = FaultSchedule::new(0xB12A_2000 + case).with_byzantine(
+            attacker,
+            policies[case as usize % policies.len()],
+            0,
+            u64::MAX,
+        );
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Exp { mean_us: 80.0 }, DelayDist::Exp { mean_us: 15.0 })
+            .with_seed(0xB12A_3000 + case)
+            .with_chaos(schedule)
+            .with_combine(CombineMode::TrimmedMean(1));
+        let params = DiffusionParams::new(0.5, 80);
+
+        let mut plain =
+            AsyncNetwork::new(graph.clone(), weights.clone(), M, None, ap.clone()).unwrap();
+        plain.run(&dict, &task, &x, params).unwrap();
+
+        let mut traced = AsyncNetwork::new(graph, weights, M, None, ap).unwrap();
+        let obs = ObsHandle::recording(RING_CAP);
+        traced.attach_obs(obs.clone());
+        traced.run(&dict, &task, &x, params).unwrap();
+
+        for k in 0..n {
+            assert_eq!(traced.nu(k), plain.nu(k), "case {case}: ν[{k}] must be bit-identical");
+        }
+        assert_eq!(traced.stats(), plain.stats(), "case {case}: MessageStats");
+        assert_eq!(traced.chaos_stats(), plain.chaos_stats(), "case {case}: ChaosStats");
+        assert!(traced.chaos_stats().corrupted > 0, "case {case}: attack never fired");
+        assert_eq!(traced.sim_time_us(), plain.sim_time_us(), "case {case}: simulated clock");
+        let events = obs.snapshot();
+        assert!(
+            events.iter().any(|e| e.name == "psi_corrupt"),
+            "case {case}: corruption instants recorded"
+        );
+        assert!(
+            events.iter().any(|e| e.name == "combine_trimmed"),
+            "case {case}: resilient-combine instants recorded"
+        );
+    }
+}
+
 /// Serve sessions: `cfg.obs.enabled = true` (recorder attached, nothing
 /// written — no trace path) vs the default. Covers the serial loop, the
 /// static pipeline, and the adaptive pipeline with the batch/depth
@@ -275,6 +335,58 @@ fn serve_traced_matches_untraced() {
                 r_obs.throughput_rps.to_bits(),
                 "{label}: virtual throughput"
             );
+        }
+    }
+}
+
+/// Serve fault paths: bounded admission (overflow sheds, `queue_shed`
+/// instants) and a mid-stream worker death (`worker_death` /
+/// `batch_redispatch` instants) — tracing must not perturb the shed
+/// accounting, the re-dispatch schedule, or any downstream bit.
+#[test]
+fn serve_faults_traced_match_untraced() {
+    let base = || ServeConfig {
+        seed: 0x0B5F,
+        agents: 30,
+        dim: 10,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 4,
+        max_wait_us: 500,
+        samples: 36,
+        rate: 0.0,
+        mu_w: 0.05,
+        pipeline: true,
+        pipeline_depth: 2,
+        infer: InferenceConfig { mu: 0.4, iters: 8, gamma: 0.08, delta: 0.2, threads: 1 },
+        ..ServeConfig::default()
+    };
+    let shedding = || ServeConfig { queue_capacity: 16, ..base() };
+    let killing =
+        || ServeConfig { kill_slot: Some(1), kill_at_batch: 2, ..base() };
+    for (label, cfg) in [("shedding", shedding()), ("worker-death", killing())] {
+        let (r_plain, d_plain) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+
+        let mut traced_cfg = cfg.clone();
+        traced_cfg.obs.enabled = true; // recorder on, no trace path → no IO
+        let (r_obs, d_obs) = run_service_with_dict(&traced_cfg, &mut |_| {}).unwrap();
+
+        assert_eq!(
+            d_plain.mat().as_slice(),
+            d_obs.mat().as_slice(),
+            "{label}: final dictionary must be bit-identical"
+        );
+        assert_eq!(r_plain.samples, r_obs.samples, "{label}: samples");
+        assert_eq!(r_plain.batches, r_obs.batches, "{label}: batches");
+        assert_eq!(r_plain.shed, r_obs.shed, "{label}: shed accounting");
+        assert_eq!(r_plain.stats, r_obs.stats, "{label}: ψ-traffic MessageStats");
+        assert_eq!(
+            r_plain.loss_last_quarter.to_bits(),
+            r_obs.loss_last_quarter.to_bits(),
+            "{label}: last-quarter loss"
+        );
+        if label == "shedding" {
+            assert!(r_plain.shed > 0, "{label}: capacity 16 under 36 saturated arrivals sheds");
         }
     }
 }

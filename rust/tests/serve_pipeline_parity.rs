@@ -60,6 +60,7 @@ fn assert_parity(cfg: &ServeConfig, label: &str) {
         r_thr.loss_last_quarter.to_bits(),
         "{label}: last-quarter loss"
     );
+    assert_eq!(r_ref.shed, r_thr.shed, "{label}: shed counts");
     assert_eq!(r_ref.combine_path, r_thr.combine_path);
     assert_eq!(r_thr.mode, "pipelined");
     assert_eq!(r_ref.mode, "pipelined-reference");
@@ -125,6 +126,69 @@ fn pipelined_session_adapts_online() {
         report.loss_first_quarter,
         report.loss_last_quarter
     );
+}
+
+/// Worker death mid-batch (`[serve] kill_slot`): the victim slot dies on
+/// its first batch with index ≥ `kill_at_batch`, the dispatcher
+/// re-dispatches the lost batch to the surviving slot, and the session
+/// stays bit-identical to the (kill-ignoring) reference executor AND to
+/// a no-kill threaded run — a death loses no batch and changes no bit.
+#[test]
+fn worker_death_redispatch_preserves_parity() {
+    let mut cfg = ring_cfg(44, 1, 2, 0.0);
+    cfg.kill_slot = Some(1);
+    cfg.kill_at_batch = 2;
+    assert_parity(&cfg, "worker death at batch >= 2");
+    let (r_kill, d_kill) =
+        run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).expect("killed run");
+    let mut calm = cfg.clone();
+    calm.kill_slot = None;
+    let (r_calm, d_calm) =
+        run_pipelined(&calm, PipelineExec::Threaded, &mut |_| {}).expect("calm run");
+    assert_eq!(
+        d_kill.mat().as_slice(),
+        d_calm.mat().as_slice(),
+        "worker death must not change the final dictionary"
+    );
+    assert_eq!(r_kill.stats, r_calm.stats, "worker death must not change ψ-traffic");
+    assert_eq!(r_kill.batches, r_calm.batches);
+    // A kill_slot beyond the slot count is inert.
+    let mut inert = cfg.clone();
+    inert.kill_slot = Some(99);
+    let (r_inert, d_inert) =
+        run_pipelined(&inert, PipelineExec::Threaded, &mut |_| {}).expect("inert kill");
+    assert_eq!(d_inert.mat().as_slice(), d_calm.mat().as_slice());
+    assert_eq!(r_inert.samples, cfg.samples);
+}
+
+/// Killing the only inference worker is unrecoverable and must surface a
+/// typed runtime error, not a hang; the reference executor (no workers)
+/// treats the knob as inert.
+#[test]
+fn killing_the_last_worker_errors() {
+    let mut cfg = ring_cfg(16, 1, 1, 0.0);
+    cfg.kill_slot = Some(0);
+    cfg.kill_at_batch = 0;
+    assert!(run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).is_err());
+    assert!(run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).is_ok());
+}
+
+/// Bounded admission (`[serve] queue_capacity`) sheds the saturated
+/// overflow identically in both executors: same shed count, same served
+/// samples, same final dictionary.
+#[test]
+fn bounded_admission_sheds_identically_across_executors() {
+    let mut cfg = ring_cfg(44, 1, 2, 0.0);
+    cfg.queue_capacity = 16;
+    let (r_ref, d_ref) =
+        run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).expect("reference executor");
+    let (r_thr, d_thr) =
+        run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).expect("threaded executor");
+    assert!(r_ref.shed > 0, "saturated arrivals over capacity 16 must shed");
+    assert_eq!(r_ref.shed, r_thr.shed, "shed counts must match across executors");
+    assert_eq!(r_ref.samples, r_thr.samples);
+    assert_eq!(r_ref.samples + r_ref.shed, cfg.samples, "every request served or shed");
+    assert_eq!(d_ref.mat().as_slice(), d_thr.mat().as_slice());
 }
 
 /// `run_service` dispatches on `cfg.pipeline` and reports the mode.
