@@ -1,0 +1,154 @@
+//! Workload suite: convergence-aware freeze/thaw and the diversified
+//! streams (distribution shift, sensor-network field).
+//!
+//! Unlike the wall-clock benches, the headline figures here come off the
+//! **deterministic virtual service clock** (adaptive mode), so they are
+//! bit-reproducible across machines and can be gated tightly:
+//!
+//! * `workloads_frozen_throughput_ratio` — virtual throughput of an
+//!   adaptive session whose detector freezes early (update slots released
+//!   to pure inference) over the same session with the detector off.
+//!   Must exceed 1.0: a frozen batch charges `service − update` µs;
+//! * `workloads_freeze_replay_bitwise` — 1.0 iff two frozen sessions
+//!   replay bit-identically (conv events, dictionary, virtual duration);
+//! * `workloads_tol0_matches_baseline` — 1.0 iff a `tol = 0` session is
+//!   bit-identical to the pre-detector behavior (inert by construction);
+//! * `workloads_shift_thaws` — 1.0 iff the piecewise-stationary shift
+//!   stream freezes before its boundary and thaws after it;
+//! * `workloads_field_adaptation_gain` — first/last-quarter loss ratio on
+//!   the spatially-correlated field stream (> 1: the dictionary learned
+//!   the field's smooth modes while serving).
+//!
+//! Pass `--fast` (or `BENCH_FAST=1`) for the CI smoke configuration.
+
+use ddl::bench::Bencher;
+use ddl::config::experiment::{ControlConfig, InferenceConfig, ServeConfig};
+use ddl::learn::ConvEvent;
+use ddl::serve::run_service_with_dict;
+
+const N: usize = 50;
+const M: usize = 16;
+
+fn adaptive_cfg(samples: usize, iters: usize) -> ServeConfig {
+    ServeConfig {
+        seed: 0x0BE7,
+        agents: N,
+        dim: M,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 8,
+        max_wait_us: 2_000,
+        samples,
+        rate: 0.0,
+        mu_w: 0.08,
+        pipeline: false,
+        infer: InferenceConfig { mu: 0.4, iters, gamma: 0.08, delta: 0.2, threads: 1 },
+        control: ControlConfig {
+            enabled: true,
+            slo_p99_ms: 5.0,
+            tick_us: 1_000,
+            batch_min: 8,
+            batch_max: 8,
+            wait_min_us: 2_000,
+            wait_max_us: 2_000,
+            window: 64,
+            svc_base_us: 200,
+            svc_per_sample_us: 50,
+            upd_per_sample_us: 30,
+            ..ControlConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+fn freeze_fast(cfg: &mut ServeConfig) {
+    cfg.convergence.tol = 10.0;
+    cfg.convergence.window = 2;
+    cfg.convergence.max_no_improvement = 1;
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("BENCH_FAST").map(|v| v != "0").unwrap_or(false);
+    let b = if fast { Bencher::quick() } else { Bencher::new() };
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    let samples = if fast { 96 } else { 256 };
+    let iters = if fast { 10 } else { 30 };
+
+    // Frozen-phase throughput: virtual clock, so the ratio is exact.
+    {
+        let mut frozen_cfg = adaptive_cfg(samples, iters);
+        freeze_fast(&mut frozen_cfg);
+        let (frozen, d1) = run_service_with_dict(&frozen_cfg, &mut |_| {}).unwrap();
+        let (frozen2, d2) = run_service_with_dict(&frozen_cfg, &mut |_| {}).unwrap();
+        let baseline_cfg = adaptive_cfg(samples, iters); // tol = 0: detector off
+        let (baseline, _) = run_service_with_dict(&baseline_cfg, &mut |_| {}).unwrap();
+        println!(
+            "frozen session: {} of {} batches frozen, {:.1} rps (virtual) vs baseline {:.1}",
+            frozen.frozen_batches, frozen.batches, frozen.throughput_rps, baseline.throughput_rps
+        );
+        assert!(frozen.frozen_batches > 0, "detector must freeze under tol = 10");
+        derived.push((
+            "workloads_frozen_throughput_ratio".to_string(),
+            frozen.throughput_rps / baseline.throughput_rps.max(1e-12),
+        ));
+        let replay_ok = frozen.conv_events == frozen2.conv_events
+            && frozen.frozen_batches == frozen2.frozen_batches
+            && frozen.duration_s.to_bits() == frozen2.duration_s.to_bits()
+            && d1.mat().as_slice() == d2.mat().as_slice();
+        derived.push((
+            "workloads_freeze_replay_bitwise".to_string(),
+            if replay_ok { 1.0 } else { 0.0 },
+        ));
+        derived.push((
+            "workloads_tol0_matches_baseline".to_string(),
+            if baseline.conv_events.is_empty() && baseline.frozen_batches == 0 {
+                1.0
+            } else {
+                0.0
+            },
+        ));
+    }
+
+    // Distribution-shift stream: freeze on the first segment, thaw on the
+    // post-shift loss jump.
+    {
+        let mut cfg = adaptive_cfg(samples.max(256), iters);
+        cfg.stream = "shift".into();
+        cfg.shift_count = 1;
+        cfg.mu_w = 0.25;
+        cfg.convergence.tol = 10.0;
+        cfg.convergence.window = 4;
+        cfg.convergence.max_no_improvement = 2;
+        cfg.convergence.loss_window = 4;
+        cfg.convergence.thaw_ratio = 1.25;
+        let (report, _) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+        let froze = report.conv_events.iter().any(|e| matches!(e, ConvEvent::Freeze { .. }));
+        let thawed = report.conv_events.iter().any(|e| matches!(e, ConvEvent::Thaw { .. }));
+        println!(
+            "shift session: froze = {froze}, thawed = {thawed}, {} frozen batches",
+            report.frozen_batches
+        );
+        derived.push((
+            "workloads_shift_thaws".to_string(),
+            if froze && thawed { 1.0 } else { 0.0 },
+        ));
+    }
+
+    // Field workload: spatially-correlated sensor snapshots; adaptation
+    // gain is the first/last-quarter loss ratio.
+    {
+        let mut cfg = adaptive_cfg(samples, iters);
+        cfg.stream = "field".into();
+        let (report, _) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+        let gain = report.loss_first_quarter / report.loss_last_quarter.max(1e-12);
+        println!(
+            "field session: loss {:.4} -> {:.4} (gain {gain:.2}x)",
+            report.loss_first_quarter, report.loss_last_quarter
+        );
+        derived.push(("workloads_field_adaptation_gain".to_string(), gain));
+    }
+
+    ddl::bench::write_report(&b, "workloads", &derived);
+}

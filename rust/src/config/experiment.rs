@@ -253,6 +253,70 @@ impl ControlConfig {
     }
 }
 
+/// Convergence-aware online adaptation (`learn/convergence.rs`): freeze
+/// the Eq. 51 update when the dictionary stops drifting, thaw it when the
+/// stream shifts. Loaded from the TOML section `[convergence]`.
+///
+/// Disabled by default (`tol = 0`): the serve executors then take exactly
+/// their pre-detector code paths, bit-for-bit. When enabled, every
+/// freeze/thaw decision is a pure function of (this config, the observed
+/// dictionary bytes, the observed batch losses) — no RNG draws, no clock
+/// reads — so freeze/thaw points replay bit-identically
+/// (`tests/convergence_freeze.rs`).
+#[derive(Clone, Debug)]
+pub struct ConvergenceConfig {
+    /// Relative dictionary-drift tolerance: adaptation freezes once
+    /// `‖D_j − D_{j−w}‖_F / ‖D_{j−w}‖_F` has stayed below this for
+    /// [`Self::max_no_improvement`] consecutive windows. `0` (default)
+    /// disables the detector entirely.
+    pub tol: f64,
+    /// Window length `w` in batches between drift measurements.
+    pub window: usize,
+    /// Consecutive below-`tol` windows before the freeze fires
+    /// (sklearn's `max_no_improvement` semantics).
+    pub max_no_improvement: usize,
+    /// Thaw when the sliding mean batch loss while frozen exceeds this
+    /// multiple of the freeze-time mean loss (the drift norm is zero by
+    /// construction while the dictionary is frozen, so thaw monitors the
+    /// loss the frozen dictionary achieves on the live stream — a
+    /// distribution shift elevates it).
+    pub thaw_ratio: f64,
+    /// Sliding window of batch losses feeding both the freeze-time
+    /// reference loss and the frozen-mode thaw monitor.
+    pub loss_window: usize,
+}
+
+impl Default for ConvergenceConfig {
+    fn default() -> Self {
+        ConvergenceConfig {
+            tol: 0.0,
+            window: 8,
+            max_no_improvement: 2,
+            thaw_ratio: 1.5,
+            loss_window: 8,
+        }
+    }
+}
+
+impl ConvergenceConfig {
+    /// Whether the detector is active at all.
+    pub fn enabled(&self) -> bool {
+        self.tol > 0.0
+    }
+
+    /// Load from TOML (section `[convergence]`), falling back to defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let mut c = Self::default();
+        c.tol = doc.f32_or("convergence", "tol", c.tol as f32) as f64;
+        c.window = doc.usize_or("convergence", "window", c.window).max(1);
+        c.max_no_improvement =
+            doc.usize_or("convergence", "max_no_improvement", c.max_no_improvement).max(1);
+        c.thaw_ratio = doc.f32_or("convergence", "thaw_ratio", c.thaw_ratio as f32) as f64;
+        c.loss_window = doc.usize_or("convergence", "loss_window", c.loss_window).max(1);
+        c
+    }
+}
+
 /// Streaming inference service (`ddl serve`, `serve/` subsystem).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -310,6 +374,24 @@ pub struct ServeConfig {
     pub infer: InferenceConfig,
     /// Informed agents: `None` = all informed, `Some(k)` = only first k.
     pub informed: Option<usize>,
+    /// Workload generator for the request stream:
+    /// `planted` (default; 2-sparse codes over a planted dictionary) |
+    /// `shift` (piecewise-stationary: the planted dictionary is redrawn at
+    /// seed-derived boundaries — the thaw/controller test bed) |
+    /// `field` (spatially-correlated sensor-network field snapshots,
+    /// `data/field.rs`).
+    pub stream: String,
+    /// Number of distribution shifts for the `shift` stream (the stream
+    /// has `shift_count + 1` stationary segments).
+    pub shift_count: usize,
+    /// Gaussian bumps per field snapshot (`field` stream).
+    pub field_sources: usize,
+    /// Bump width (std-dev) in unit-square coordinates (`field` stream).
+    pub field_width: f32,
+    /// Per-sensor observation noise σ (`field` stream).
+    pub field_noise: f32,
+    /// Convergence detector (`[convergence]` TOML block, `--conv-tol`).
+    pub convergence: ConvergenceConfig,
     /// Feedback control plane (`[control]` TOML block, `--adaptive`).
     pub control: ControlConfig,
     /// Observability layer (`[obs]` TOML block, `--trace`).
@@ -338,6 +420,12 @@ impl Default for ServeConfig {
             kill_at_batch: 0,
             infer: InferenceConfig { mu: 0.4, iters: 120, gamma: 0.08, delta: 0.2, threads: 1 },
             informed: None,
+            stream: "planted".into(),
+            shift_count: 2,
+            field_sources: 3,
+            field_width: 0.15,
+            field_noise: 0.02,
+            convergence: ConvergenceConfig::default(),
             control: ControlConfig::default(),
             obs: ObsConfig::default(),
         }
@@ -378,6 +466,12 @@ impl ServeConfig {
         if let Some(v) = doc.get("serve", "informed") {
             c.informed = v.as_usize();
         }
+        c.stream = doc.str_or("serve", "stream", &c.stream).to_string();
+        c.shift_count = doc.usize_or("serve", "shift_count", c.shift_count);
+        c.field_sources = doc.usize_or("serve", "field_sources", c.field_sources).max(1);
+        c.field_width = doc.f32_or("serve", "field_width", c.field_width);
+        c.field_noise = doc.f32_or("serve", "field_noise", c.field_noise);
+        c.convergence = ConvergenceConfig::from_toml(doc);
         c.control = ControlConfig::from_toml(doc);
         c.obs = ObsConfig::from_toml(doc);
         c
@@ -924,6 +1018,56 @@ mod tests {
         let alive =
             ServeConfig::from_toml(&TomlDoc::parse("[serve]\nkill_slot = -1\n").unwrap());
         assert_eq!(alive.kill_slot, None);
+        // Workload-stream knobs ride in the same `[serve]` section.
+        let w = ServeConfig::from_toml(
+            &TomlDoc::parse(
+                "[serve]\nstream = \"field\"\nshift_count = 5\nfield_sources = 4\n\
+                 field_width = 0.2\nfield_noise = 0.05\n",
+            )
+            .unwrap(),
+        );
+        assert_eq!(w.stream, "field");
+        assert_eq!(w.shift_count, 5);
+        assert_eq!(w.field_sources, 4);
+        assert!((w.field_width - 0.2).abs() < 1e-7);
+        assert!((w.field_noise - 0.05).abs() < 1e-7);
+        assert_eq!(d.stream, "planted", "planted stream by default");
+    }
+
+    /// Round trip for the `[convergence]` block; the detector must default
+    /// to disabled (`tol = 0`) so existing serve configs are bit-for-bit
+    /// untouched.
+    #[test]
+    fn convergence_toml_round_trip() {
+        let c = ConvergenceConfig::default();
+        assert!(!c.enabled(), "detector disabled by default");
+        assert_eq!(c.window, 8);
+        assert_eq!(c.max_no_improvement, 2);
+        assert!((c.thaw_ratio - 1.5).abs() < 1e-9);
+        assert_eq!(c.loss_window, 8);
+        let doc = TomlDoc::parse(
+            "[convergence]\ntol = 0.01\nwindow = 4\nmax_no_improvement = 3\n\
+             thaw_ratio = 2.0\nloss_window = 6\n",
+        )
+        .unwrap();
+        let c = ConvergenceConfig::from_toml(&doc);
+        assert!(c.enabled());
+        assert!((c.tol - 0.01).abs() < 1e-7);
+        assert_eq!(c.window, 4);
+        assert_eq!(c.max_no_improvement, 3);
+        assert!((c.thaw_ratio - 2.0).abs() < 1e-9);
+        assert_eq!(c.loss_window, 6);
+        // Degenerate values clamp rather than divide by zero later.
+        let z = ConvergenceConfig::from_toml(
+            &TomlDoc::parse("[convergence]\nwindow = 0\nmax_no_improvement = 0\nloss_window = 0\n")
+                .unwrap(),
+        );
+        assert_eq!(z.window, 1);
+        assert_eq!(z.max_no_improvement, 1);
+        assert_eq!(z.loss_window, 1);
+        // Nested on ServeConfig via the same document.
+        let s = ServeConfig::from_toml(&TomlDoc::parse("[convergence]\ntol = 0.5\n").unwrap());
+        assert!(s.convergence.enabled());
     }
 
     #[test]

@@ -13,11 +13,16 @@
 //!   drops, Byzantine corruption) with MSD-vs-sim-time sensitivity
 //!   curves, replay/parity checks, and the `--byzantine` attack/defense
 //!   probe;
+//! * [`field`] — `ddl field`: sensor-network field-monitoring scenario —
+//!   the streaming service over a spatially-correlated field workload,
+//!   reporting spatial structure and adaptation gain (and, with
+//!   `[convergence]` enabled, the frozen-mode share of the stream);
 //! * [`csv`] — tiny CSV writer for `results/`.
 
 pub mod chaos;
 pub mod csv;
 pub mod denoise;
+pub mod field;
 pub mod novelty;
 #[cfg(feature = "xla")]
 pub mod quickstart;
@@ -29,6 +34,7 @@ pub use chaos::{
     PushSumBias,
 };
 pub use denoise::{run_denoise, DenoiseReport};
+pub use field::{run_field, FieldReport};
 pub use novelty::{run_novelty, NoveltyAlgo, NoveltyReport, StepResult};
 pub use straggler::{
     run_adaptive_tau, run_straggler, AdaptiveTauReport, AsyncRow, StragglerReport, TauRow,

@@ -6,11 +6,13 @@
 //! DESIGN.md §4 for the substitution arguments.
 
 pub mod corpus;
+pub mod field;
 pub mod images;
 pub mod noise;
 pub mod patches;
 
 pub use corpus::{CorpusConfig, CorpusStream, Document};
+pub use field::FieldModel;
 pub use images::{synth_scene, Image};
 pub use noise::add_awgn;
 pub use patches::{extract_patch, PatchSampler, Reconstructor};

@@ -1,0 +1,402 @@
+//! Convergence-aware online adaptation: deterministic freeze/thaw detection.
+//!
+//! The paper's learning strategy is online — each sample is presented once —
+//! but a long-running serve session keeps paying for the Eq. 51 dictionary
+//! update forever, even after the dictionary has converged. This module adds
+//! the production pattern from sklearn's `dict_learning_online` (`tol` /
+//! `max_no_improvement` early stopping), adapted to the streaming setting:
+//!
+//! * **Freeze** — while adapting, every [`ConvergenceConfig::window`] batches
+//!   the detector measures the relative dictionary drift
+//!   `‖D_j − D_{j−w}‖_F / ‖D_{j−w}‖_F`. After
+//!   [`ConvergenceConfig::max_no_improvement`] consecutive windows below
+//!   [`ConvergenceConfig::tol`], adaptation freezes: the serve executors skip
+//!   the Eq. 51 update and release the update stage's virtual-clock budget to
+//!   pure inference (`PipeSim::set_frozen`, the serial loop's update
+//!   discount).
+//! * **Thaw** — a frozen dictionary has zero drift by construction, so the
+//!   detector instead monitors the sliding mean batch loss the frozen
+//!   dictionary achieves on the live stream. When that mean exceeds
+//!   [`ConvergenceConfig::thaw_ratio`] × the freeze-time reference loss
+//!   (e.g. after a distribution shift in the stream), adaptation resumes at
+//!   the next batch boundary.
+//!
+//! **Determinism contract.** Every decision is a pure function of (config,
+//! batch index, observed dictionary bytes, observed loss bits): the detector
+//! draws no randomness, reads no wall clock, and accumulates drift in a fixed
+//! index order — so freeze/thaw points replay bit-identically
+//! (`tests/convergence_freeze.rs`), and a disabled detector
+//! ([`ConvergenceConfig::tol`]` = 0`, the default) observes nothing and
+//! leaves the executors bit-for-bit on their pre-detector paths.
+
+use crate::config::experiment::ConvergenceConfig;
+use crate::model::DistributedDictionary;
+
+/// Smallest reference norm / loss the relative measures divide by.
+const EPS: f64 = 1e-30;
+
+/// One detector decision or measurement, in batch order. Recorded on
+/// [`crate::serve::ServeReport::conv_events`] and mirrored as
+/// `drift_norm` / `freeze` / `thaw` obs instants on the serve virtual
+/// clocks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConvEvent {
+    /// Relative dictionary drift measured at an adapting window boundary.
+    Drift { batch: usize, norm: f64 },
+    /// Adaptation froze after this batch; the next batch runs inference-only.
+    Freeze { batch: usize },
+    /// Frozen-mode thaw monitor sample: sliding mean loss over the freeze-time
+    /// reference loss.
+    LossRatio { batch: usize, ratio: f64 },
+    /// Adaptation resumed after this batch (the stream drifted away from the
+    /// frozen dictionary).
+    Thaw { batch: usize },
+}
+
+impl ConvEvent {
+    /// Batch index the event was observed at.
+    pub fn batch(&self) -> usize {
+        match *self {
+            ConvEvent::Drift { batch, .. }
+            | ConvEvent::Freeze { batch }
+            | ConvEvent::LossRatio { batch, .. }
+            | ConvEvent::Thaw { batch } => batch,
+        }
+    }
+}
+
+/// Deterministic freeze/thaw state machine over the observed dictionary
+/// trajectory. One instance per serve session; both the serial loop and the
+/// pipelined updater stage feed it the same `(batch index, dictionary after
+/// the batch, mean batch loss)` sequence, so a given executor's decisions
+/// replay bit-identically.
+#[derive(Clone, Debug)]
+pub struct ConvergenceDetector {
+    cfg: ConvergenceConfig,
+    /// Flat snapshot of `D_{j−w}` (the window reference), lazily sized.
+    reference: Vec<f32>,
+    have_reference: bool,
+    batches_since_ref: usize,
+    below_tol_windows: usize,
+    frozen: bool,
+    /// Mean batch loss over `loss_window` at freeze time (thaw baseline).
+    freeze_loss: f64,
+    batches_since_freeze: usize,
+    /// Sliding window of recent batch losses (newest last).
+    recent_losses: Vec<f64>,
+    frozen_batches: usize,
+    events: Vec<ConvEvent>,
+    /// Events appended by the most recent [`Self::observe`] call.
+    fresh_from: usize,
+}
+
+impl ConvergenceDetector {
+    pub fn new(cfg: ConvergenceConfig) -> Self {
+        ConvergenceDetector {
+            cfg,
+            reference: Vec::new(),
+            have_reference: false,
+            batches_since_ref: 0,
+            below_tol_windows: 0,
+            frozen: false,
+            freeze_loss: 0.0,
+            batches_since_freeze: 0,
+            recent_losses: Vec::new(),
+            frozen_batches: 0,
+            events: Vec::new(),
+            fresh_from: 0,
+        }
+    }
+
+    /// Whether the detector participates at all (`tol > 0`). When false,
+    /// [`Self::observe`] returns immediately without touching any state, so
+    /// the executors' behavior is bit-for-bit the always-adapt run.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Whether the *next* batch should skip the Eq. 51 update. Executors
+    /// consult this before processing a batch; decisions made by
+    /// [`Self::observe`] on batch `j` therefore take effect at the `j + 1`
+    /// batch boundary — the "deterministic batch boundary" of the contract.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Batches that ran inference-only under a freeze.
+    pub fn frozen_batches(&self) -> usize {
+        self.frozen_batches
+    }
+
+    /// Full decision/measurement trace, in batch order.
+    pub fn events(&self) -> &[ConvEvent] {
+        &self.events
+    }
+
+    /// Consume the detector, yielding the trace for the session report.
+    pub fn into_events(self) -> Vec<ConvEvent> {
+        self.events
+    }
+
+    /// Feed the detector one completed batch: `j` is the batch index, `dict`
+    /// the dictionary *after* the batch (post-update while adapting,
+    /// unchanged while frozen), `mean_loss` the batch's mean residual loss.
+    /// Returns the events this observation generated (also appended to
+    /// [`Self::events`]); the caller mirrors them as obs instants.
+    pub fn observe(
+        &mut self,
+        j: usize,
+        dict: &DistributedDictionary,
+        mean_loss: f64,
+    ) -> &[ConvEvent] {
+        self.fresh_from = self.events.len();
+        if !self.enabled() {
+            return &[];
+        }
+        self.push_loss(mean_loss);
+        if self.frozen {
+            self.frozen_batches += 1;
+            self.observe_frozen(j, dict);
+        } else {
+            self.observe_adapting(j, dict);
+        }
+        &self.events[self.fresh_from..]
+    }
+
+    fn observe_adapting(&mut self, j: usize, dict: &DistributedDictionary) {
+        if !self.have_reference {
+            self.snapshot(dict);
+            return;
+        }
+        self.batches_since_ref += 1;
+        if self.batches_since_ref < self.cfg.window {
+            return;
+        }
+        let norm = rel_drift(dict.mat().as_slice(), &self.reference);
+        self.events.push(ConvEvent::Drift { batch: j, norm });
+        if norm < self.cfg.tol {
+            self.below_tol_windows += 1;
+        } else {
+            self.below_tol_windows = 0;
+        }
+        self.snapshot(dict);
+        if self.below_tol_windows >= self.cfg.max_no_improvement {
+            self.frozen = true;
+            self.freeze_loss = mean(&self.recent_losses);
+            self.batches_since_freeze = 0;
+            self.below_tol_windows = 0;
+            self.events.push(ConvEvent::Freeze { batch: j });
+        }
+    }
+
+    fn observe_frozen(&mut self, j: usize, dict: &DistributedDictionary) {
+        self.batches_since_freeze += 1;
+        if self.batches_since_freeze < self.cfg.loss_window {
+            return;
+        }
+        self.batches_since_freeze = 0;
+        let ratio = mean(&self.recent_losses) / self.freeze_loss.max(EPS);
+        self.events.push(ConvEvent::LossRatio { batch: j, ratio });
+        if ratio > self.cfg.thaw_ratio {
+            self.frozen = false;
+            self.events.push(ConvEvent::Thaw { batch: j });
+            // Re-arm the drift machinery from the frozen dictionary so the
+            // next freeze needs fresh evidence of convergence.
+            self.snapshot(dict);
+        }
+    }
+
+    fn snapshot(&mut self, dict: &DistributedDictionary) {
+        let flat = dict.mat().as_slice();
+        self.reference.clear();
+        self.reference.extend_from_slice(flat);
+        self.have_reference = true;
+        self.batches_since_ref = 0;
+    }
+
+    fn push_loss(&mut self, loss: f64) {
+        self.recent_losses.push(loss);
+        if self.recent_losses.len() > self.cfg.loss_window {
+            self.recent_losses.remove(0);
+        }
+    }
+}
+
+/// Relative Frobenius drift `‖cur − ref‖_F / ‖ref‖_F`, accumulated in f64 in
+/// a fixed index order so replays are bit-identical on any platform.
+fn rel_drift(cur: &[f32], reference: &[f32]) -> f64 {
+    debug_assert_eq!(cur.len(), reference.len());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (a, b) in cur.iter().zip(reference.iter()) {
+        let d = f64::from(*a) - f64::from(*b);
+        num += d * d;
+        den += f64::from(*b) * f64::from(*b);
+    }
+    (num / den.max(EPS)).sqrt()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AtomConstraint, DistributedDictionary};
+    use crate::rng::Pcg64;
+
+    fn dict(seed: u64) -> DistributedDictionary {
+        let mut rng = Pcg64::new(seed);
+        DistributedDictionary::random(6, 4, 4, AtomConstraint::UnitBall, &mut rng).unwrap()
+    }
+
+    fn cfg(tol: f64) -> ConvergenceConfig {
+        ConvergenceConfig { tol, window: 2, max_no_improvement: 2, thaw_ratio: 1.5, loss_window: 2 }
+    }
+
+    #[test]
+    fn disabled_detector_observes_nothing() {
+        let mut det = ConvergenceDetector::new(cfg(0.0));
+        assert!(!det.enabled());
+        let d = dict(1);
+        for j in 0..32 {
+            assert!(det.observe(j, &d, 1.0).is_empty());
+            assert!(!det.is_frozen());
+        }
+        assert!(det.events().is_empty());
+        assert_eq!(det.frozen_batches(), 0);
+    }
+
+    /// A stationary (here: literally constant) dictionary freezes after
+    /// exactly `window × max_no_improvement` post-reference batches, and a
+    /// stationary loss never thaws it.
+    #[test]
+    fn freezes_after_patience_and_stays_frozen_when_stationary() {
+        let mut det = ConvergenceDetector::new(cfg(1e-3));
+        let d = dict(2);
+        let mut froze_at = None;
+        for j in 0..64 {
+            det.observe(j, &d, 0.5);
+            if froze_at.is_none() && det.is_frozen() {
+                froze_at = Some(j);
+            }
+        }
+        // Batch 0 plants the reference; windows complete at batches 2 and 4.
+        assert_eq!(froze_at, Some(4));
+        assert!(det.is_frozen(), "stationary loss must not thaw");
+        assert!(det.events().iter().all(|e| !matches!(e, ConvEvent::Thaw { .. })));
+        assert_eq!(det.frozen_batches(), 64 - 5);
+        let drifts: Vec<_> = det
+            .events()
+            .iter()
+            .filter(|e| matches!(e, ConvEvent::Drift { .. }))
+            .collect();
+        assert_eq!(drifts.len(), 2, "no drift measurements once frozen");
+    }
+
+    /// A drifting dictionary (norm above tol) never freezes.
+    #[test]
+    fn drifting_dictionary_never_freezes() {
+        let mut det = ConvergenceDetector::new(cfg(1e-6));
+        for j in 0..32 {
+            // A fresh random dictionary every batch: huge relative drift.
+            det.observe(j, &dict(100 + j as u64), 0.5);
+        }
+        assert!(!det.is_frozen());
+        assert!(det.events().iter().all(|e| !matches!(e, ConvEvent::Freeze { .. })));
+    }
+
+    /// An elevated loss while frozen (a distribution shift) thaws at a
+    /// deterministic loss-window boundary, and drift tracking re-arms.
+    #[test]
+    fn loss_jump_thaws_then_refreezes() {
+        let mut det = ConvergenceDetector::new(cfg(1e-3));
+        let d = dict(3);
+        for j in 0..8 {
+            det.observe(j, &d, 0.5);
+        }
+        assert!(det.is_frozen());
+        // Shift: frozen dictionary now sees 4× the loss.
+        let mut thawed_at = None;
+        for j in 8..16 {
+            det.observe(j, &d, 2.0);
+            if thawed_at.is_none() && !det.is_frozen() {
+                thawed_at = Some(j);
+            }
+        }
+        let thawed_at = thawed_at.expect("loss jump must thaw");
+        assert!(det.events().iter().any(|e| matches!(e, ConvEvent::Thaw { .. })));
+        // Still stationary after the thaw → freezes again.
+        for j in 16..32 {
+            det.observe(j, &d, 2.0);
+        }
+        assert!(det.is_frozen(), "re-freezes once the drift window clears again");
+        let freezes =
+            det.events().iter().filter(|e| matches!(e, ConvEvent::Freeze { .. })).count();
+        assert_eq!(freezes, 2);
+        assert!(thawed_at >= 8);
+    }
+
+    /// Bitwise replay: identical observation sequences yield identical event
+    /// traces, including the f64 drift/ratio bit patterns.
+    #[test]
+    fn replay_is_bitwise_identical() {
+        let run = |seed: u64| {
+            let mut det = ConvergenceDetector::new(cfg(0.05));
+            let mut d = dict(seed);
+            let mut rng = Pcg64::new(seed ^ 0xD1F7);
+            for j in 0..48 {
+                // Small random perturbation, then decaying magnitude so the
+                // trajectory converges and freezes.
+                let scale = 0.1 / (1.0 + j as f32);
+                let mat = d.mat_mut();
+                let flat = mat.as_mut_slice();
+                for v in flat.iter_mut() {
+                    *v += scale * rng.next_normal();
+                }
+                det.observe(j, &d, f64::from(1.0 / (1.0 + j as f32)));
+            }
+            det.into_events()
+        };
+        for seed in [7u64, 11, 13] {
+            let a = run(seed);
+            let b = run(seed);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                match (x, y) {
+                    (
+                        ConvEvent::Drift { batch: b1, norm: n1 },
+                        ConvEvent::Drift { batch: b2, norm: n2 },
+                    ) => {
+                        assert_eq!(b1, b2);
+                        assert_eq!(n1.to_bits(), n2.to_bits());
+                    }
+                    (
+                        ConvEvent::LossRatio { batch: b1, ratio: r1 },
+                        ConvEvent::LossRatio { batch: b2, ratio: r2 },
+                    ) => {
+                        assert_eq!(b1, b2);
+                        assert_eq!(r1.to_bits(), r2.to_bits());
+                    }
+                    _ => assert_eq!(x, y),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rel_drift_matches_hand_computation() {
+        let a = [1.0f32, 0.0, 0.0];
+        let b = [0.0f32, 1.0, 0.0];
+        // ‖a − b‖ = √2, ‖b‖ = 1.
+        assert!((rel_drift(&a, &b) - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(rel_drift(&b, &b), 0.0);
+        // Zero reference guards the divide.
+        let z = [0.0f32; 3];
+        assert!(rel_drift(&a, &z).is_finite());
+    }
+}

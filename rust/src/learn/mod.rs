@@ -1,12 +1,15 @@
 //! Dictionary learning: the fully-local update (Eq. 51), minibatch
-//! averaging (paper footnote 4), step-size schedules, and the online
+//! averaging (paper footnote 4), step-size schedules, the online
 //! trainer that alternates distributed inference with local updates
-//! (Alg. 1).
+//! (Alg. 1), and the convergence detector that freezes/thaws the
+//! online update during serving.
 
+pub mod convergence;
 pub mod schedule;
 pub mod trainer;
 pub mod update;
 
+pub use convergence::{ConvEvent, ConvergenceDetector};
 pub use schedule::StepSchedule;
 pub use trainer::{
     apply_eq51_update, recover_and_stats, OnlineTrainer, TrainerOptions, TrainStats,

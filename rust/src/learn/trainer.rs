@@ -117,6 +117,30 @@ impl OnlineTrainer {
         apply_eq51_update(dict, task, self.opts.prox, mu_w, &self.ys, &view);
         Ok(stats)
     }
+
+    /// Inference-only minibatch step for a **frozen** dictionary
+    /// ([`crate::learn::ConvergenceDetector`]): identical to [`Self::step`]
+    /// minus [`apply_eq51_update`], so the served coefficients, losses, and
+    /// ψ traffic are exactly those of an adapting step at the same
+    /// dictionary state — only the Eq. 51 write is skipped. Takes the
+    /// dictionary by shared reference: the type system enforces that a
+    /// frozen step cannot mutate the model.
+    pub fn step_frozen(
+        &mut self,
+        dict: &DistributedDictionary,
+        task: &TaskSpec,
+        samples: &[&[f32]],
+    ) -> Result<TrainStats> {
+        if samples.is_empty() {
+            return Ok(TrainStats::default());
+        }
+        self.engine.reserve_batch(samples.len());
+        self.engine.reserve_atoms(dict.k());
+        self.engine.reset();
+        self.engine.run_batch(dict, task, samples, self.opts.infer)?;
+        let view = self.engine.nu_view();
+        recover_and_stats(dict, task, samples, &view, &mut self.ys, &mut self.corr, &mut self.mean)
+    }
 }
 
 /// Stage-3a of a minibatch step: per-sample primal recovery plus the
@@ -312,6 +336,43 @@ mod tests {
             stats_pipe.mean_disagreement.to_bits()
         );
         assert_eq!(stats_step.samples, stats_pipe.samples);
+    }
+
+    /// A frozen step must be pure inference: repeating it on the same
+    /// dictionary and batch reproduces every stat bit-for-bit (an adapting
+    /// step would move the dictionary between calls), and it matches the
+    /// recover-only half of an adapting step at the same state.
+    #[test]
+    fn frozen_step_is_pure_inference() {
+        let (m, n) = (10, 6);
+        let mut rng = Pcg64::new(0xF607E);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let a = crate::graph::uniform_weights(n);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.4 };
+        let opts =
+            TrainerOptions { infer: DiffusionParams::new(0.3, 40), prox: DictProx::None };
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(m)).collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+
+        let mut tr = OnlineTrainer::new(&a, m, None, opts).unwrap();
+        let s1 = tr.step_frozen(&dict, &task, &refs).unwrap();
+        let s2 = tr.step_frozen(&dict, &task, &refs).unwrap();
+        assert_eq!(s1.mean_loss.to_bits(), s2.mean_loss.to_bits());
+        assert_eq!(s1.mean_sparsity.to_bits(), s2.mean_sparsity.to_bits());
+        assert_eq!(s1.mean_disagreement.to_bits(), s2.mean_disagreement.to_bits());
+        assert_eq!(s1.samples, refs.len());
+
+        // Same stats as the recover-only half of an adapting step.
+        let mut dict_adapt = dict.clone();
+        let mut tr2 = OnlineTrainer::new(&a, m, None, opts).unwrap();
+        let s3 = tr2.step(&mut dict_adapt, &task, &refs, 0.05).unwrap();
+        assert_eq!(s1.mean_loss.to_bits(), s3.mean_loss.to_bits());
+        assert_ne!(
+            dict.mat().as_slice(),
+            dict_adapt.mat().as_slice(),
+            "adapting step moves the dictionary; frozen step cannot"
+        );
     }
 
     #[test]

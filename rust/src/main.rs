@@ -8,6 +8,7 @@
 //! * `novelty`   — Fig. 6/7 novel-document-detection experiment
 //! * `tune`      — §IV-A step-size tuning curves (Fig. 4 procedure)
 //! * `serve`     — streaming inference service with online adaptation
+//! * `field`     — sensor-network field-monitoring serve scenario
 //! * `async`     — sync-vs-async diffusion under a straggler delay model
 //! * `chaos`     — deterministic fault injection over the async executor
 //! * `trace-check`— validate a JSONL trace produced by `--trace`
@@ -37,6 +38,7 @@ fn main() {
         Some("novelty") => cmd_novelty(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("field") => cmd_field(&args),
         Some("async") => cmd_async(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("trace-check") => cmd_trace_check(&args),
@@ -68,6 +70,9 @@ COMMANDS:
               [--no-adapt] [--pipeline | --no-pipeline] [--pipeline-depth d]
               [--adaptive] [--slo-ms x] [--queue-capacity n]
               [--kill-slot s] [--kill-at-batch j]
+              [--stream planted|shift|field] [--shift-count n]
+              [--conv-tol x] [--conv-window w] [--conv-patience p]
+              [--thaw-ratio x]
               [--trace path] [--trace-format f]
               (three-stage concurrent pipeline: batch formation | diffusion
               inference | Eq. 51 update overlap on separate threads;
@@ -80,8 +85,25 @@ COMMANDS:
               typed QueueFull error and fed back to the controller;
               --kill-slot/--kill-at-batch kill an inference worker
               mid-stream — the dispatcher re-dispatches the lost batch
-              deterministically, bit-identical results; TOML [control],
-              [serve])
+              deterministically, bit-identical results;
+              --stream selects the workload: planted dictionary (default),
+              piecewise-stationary distribution shift (--shift-count
+              segments beyond the first, boundaries a pure function of
+              the seed), or the sensor-network field model;
+              --conv-tol > 0 enables convergence-aware freeze/thaw:
+              when relative dictionary drift per --conv-window batches
+              stays below tol for --conv-patience windows, Eq. 51
+              adaptation freezes and the update slot is released to pure
+              inference; a sustained mean-loss jump above --thaw-ratio x
+              the freeze-time loss thaws it at a deterministic batch
+              boundary; TOML [control], [serve], [convergence])
+  field       sensor-network field-monitoring scenario: `serve` over the
+              spatially-correlated field stream  [same options as serve;
+              --field-sources n] [--field-width x] [--field-noise x]
+              (reports near/far sensor-pair correlation and adaptation
+              gain on top of the serve report; pairs naturally with
+              --conv-tol: the field is stationary, so adaptation freezes
+              once the dictionary captures the spatial modes)
   async       sync-vs-async diffusion, straggler modeling [--config f]
               [--tau t] [--agents n] [--dim m] [--topology ring|grid|er|full]
               [--mu x] [--iters n] [--compute-dist zero|const|uniform|exp]
@@ -275,49 +297,79 @@ fn cmd_novelty(args: &Args) -> i32 {
     })
 }
 
+/// Build a [`ServeConfig`] from `--config` TOML plus CLI overrides; shared
+/// by `ddl serve` and `ddl field` (which forces the field stream on top).
+fn serve_cfg_from_args(args: &Args) -> ddl::Result<ServeConfig> {
+    let doc = match args.get("config") {
+        Some(p) => TomlDoc::load(Path::new(p))?,
+        None => TomlDoc::default(),
+    };
+    let mut cfg = ServeConfig::from_toml(&doc);
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.agents = args.usize_or("agents", cfg.agents)?;
+    cfg.dim = args.usize_or("dim", cfg.dim)?;
+    cfg.topology = args.str_or("topology", &cfg.topology).to_string();
+    cfg.ring_k = args.usize_or("ring-k", cfg.ring_k)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?.max(1);
+    cfg.max_wait_us = args.u64_or("max-wait-us", cfg.max_wait_us)?;
+    cfg.samples = args.usize_or("samples", cfg.samples)?;
+    cfg.rate = args.f32_or("rate", cfg.rate as f32)? as f64;
+    cfg.burst = args.usize_or("burst", cfg.burst)?.max(1);
+    cfg.mu_w = args.f32_or("mu-w", cfg.mu_w)?;
+    cfg.pipeline = cfg.pipeline || args.flag("pipeline");
+    if args.flag("no-pipeline") {
+        // Override a TOML `pipeline = true` for the serial comparison
+        // run without editing the config file.
+        cfg.pipeline = false;
+    }
+    cfg.pipeline_depth = args.usize_or("pipeline-depth", cfg.pipeline_depth)?.max(1);
+    cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
+    if let Some(s) = args.get("kill-slot") {
+        cfg.kill_slot = Some(s.parse().map_err(|_| {
+            ddl::DdlError::Config(format!("--kill-slot: bad value '{s}'"))
+        })?);
+    }
+    cfg.kill_at_batch = args.usize_or("kill-at-batch", cfg.kill_at_batch)?;
+    cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
+    cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
+    cfg.infer.threads = args.usize_or("threads", cfg.infer.threads)?;
+    if args.flag("no-adapt") {
+        cfg.mu_w = 0.0;
+    }
+    cfg.control.enabled = cfg.control.enabled || args.flag("adaptive");
+    cfg.control.slo_p99_ms = args.f32_or("slo-ms", cfg.control.slo_p99_ms as f32)? as f64;
+    // Workload stream + distribution-shift knobs.
+    cfg.stream = args.str_or("stream", &cfg.stream).to_string();
+    cfg.shift_count = args.usize_or("shift-count", cfg.shift_count)?;
+    cfg.field_sources = args.usize_or("field-sources", cfg.field_sources)?.max(1);
+    cfg.field_width = args.f32_or("field-width", cfg.field_width)?;
+    cfg.field_noise = args.f32_or("field-noise", cfg.field_noise)?;
+    // Convergence-aware freeze/thaw (tol = 0 leaves the detector off).
+    cfg.convergence.tol = args.f32_or("conv-tol", cfg.convergence.tol as f32)? as f64;
+    cfg.convergence.window = args.usize_or("conv-window", cfg.convergence.window)?.max(1);
+    cfg.convergence.max_no_improvement =
+        args.usize_or("conv-patience", cfg.convergence.max_no_improvement)?.max(1);
+    cfg.convergence.thaw_ratio =
+        args.f32_or("thaw-ratio", cfg.convergence.thaw_ratio as f32)? as f64;
+    apply_trace_args(&mut cfg.obs, args);
+    Ok(cfg)
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     run(|| {
-        let doc = match args.get("config") {
-            Some(p) => TomlDoc::load(Path::new(p))?,
-            None => TomlDoc::default(),
-        };
-        let mut cfg = ServeConfig::from_toml(&doc);
-        cfg.seed = args.u64_or("seed", cfg.seed)?;
-        cfg.agents = args.usize_or("agents", cfg.agents)?;
-        cfg.dim = args.usize_or("dim", cfg.dim)?;
-        cfg.topology = args.str_or("topology", &cfg.topology).to_string();
-        cfg.ring_k = args.usize_or("ring-k", cfg.ring_k)?;
-        cfg.batch = args.usize_or("batch", cfg.batch)?.max(1);
-        cfg.max_wait_us = args.u64_or("max-wait-us", cfg.max_wait_us)?;
-        cfg.samples = args.usize_or("samples", cfg.samples)?;
-        cfg.rate = args.f32_or("rate", cfg.rate as f32)? as f64;
-        cfg.burst = args.usize_or("burst", cfg.burst)?.max(1);
-        cfg.mu_w = args.f32_or("mu-w", cfg.mu_w)?;
-        cfg.pipeline = cfg.pipeline || args.flag("pipeline");
-        if args.flag("no-pipeline") {
-            // Override a TOML `pipeline = true` for the serial comparison
-            // run without editing the config file.
-            cfg.pipeline = false;
-        }
-        cfg.pipeline_depth = args.usize_or("pipeline-depth", cfg.pipeline_depth)?.max(1);
-        cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
-        if let Some(s) = args.get("kill-slot") {
-            cfg.kill_slot = Some(s.parse().map_err(|_| {
-                ddl::DdlError::Config(format!("--kill-slot: bad value '{s}'"))
-            })?);
-        }
-        cfg.kill_at_batch = args.usize_or("kill-at-batch", cfg.kill_at_batch)?;
-        cfg.infer.mu = args.f32_or("mu", cfg.infer.mu)?;
-        cfg.infer.iters = args.usize_or("iters", cfg.infer.iters)?;
-        cfg.infer.threads = args.usize_or("threads", cfg.infer.threads)?;
-        if args.flag("no-adapt") {
-            cfg.mu_w = 0.0;
-        }
-        cfg.control.enabled = cfg.control.enabled || args.flag("adaptive");
-        cfg.control.slo_p99_ms = args.f32_or("slo-ms", cfg.control.slo_p99_ms as f32)? as f64;
-        apply_trace_args(&mut cfg.obs, args);
+        let cfg = serve_cfg_from_args(args)?;
         let report = ddl::serve::run_service(&cfg, &mut |s| println!("{s}"))?;
         println!("== serve report ==");
+        println!("{}", report.summary(cfg.agents));
+        Ok(())
+    })
+}
+
+fn cmd_field(args: &Args) -> i32 {
+    run(|| {
+        let cfg = serve_cfg_from_args(args)?;
+        let report = ddl::coordinator::run_field(&cfg, &mut |s| println!("{s}"))?;
+        println!("== field report (sensor-network monitoring) ==");
         println!("{}", report.summary(cfg.agents));
         Ok(())
     })

@@ -486,6 +486,11 @@ pub struct PipeSim {
     publish_us: u64,
     /// Availability times of outstanding snapshot tokens, FIFO.
     tokens: VecDeque<u64>,
+    /// Convergence freeze ([`crate::learn::ConvergenceDetector`]): while
+    /// set, batches skip the Eq. 51 update, so the update stage charges
+    /// nothing — the virtual-clock form of "the updater slot is released
+    /// to pure inference".
+    frozen: bool,
 }
 
 impl PipeSim {
@@ -498,7 +503,16 @@ impl PipeSim {
             upd_free_us: 0,
             publish_us: 0,
             tokens: (0..prefill).map(|_| 0).collect(),
+            frozen: false,
         }
+    }
+
+    /// Set the convergence-freeze state for subsequent batches. The updater
+    /// calls this with the detector's verdict before charging each batch,
+    /// so freeze/thaw boundaries land exactly on batch boundaries in the
+    /// virtual timeline too.
+    pub fn set_frozen(&mut self, frozen: bool) {
+        self.frozen = frozen;
     }
 
     /// Advance the recurrence for batch `j` of size `b`, formed at
@@ -515,9 +529,11 @@ impl PipeSim {
         let done = start + self.model.service_us(b);
         self.slot_free_us[slot] = done;
         // The updater publishes (token-ready point) when it picks the
-        // batch up, then pays the update cost.
+        // batch up, then pays the update cost — zero while a convergence
+        // freeze is in effect (the Eq. 51 update is skipped).
         self.publish_us = done.max(self.upd_free_us);
-        self.upd_free_us = self.publish_us + self.model.update_us(b);
+        let upd = if self.frozen { 0 } else { self.model.update_us(b) };
+        self.upd_free_us = self.publish_us + upd;
         (done, starved)
     }
 
@@ -806,5 +822,35 @@ mod tests {
         assert!(starved, "depth 1 still gates on the token itself");
         // Batch 1's update serializes behind batch 0's: 110..210.
         assert_eq!(sim.now_us(), 210);
+    }
+
+    /// A convergence freeze zeroes the update-stage charge: the virtual
+    /// session clock stops paying `upd_per_sample_us` while frozen and
+    /// resumes charging after a thaw — the timing half of "the updater slot
+    /// is released to pure inference".
+    #[test]
+    fn pipe_sim_frozen_batches_skip_update_charge() {
+        let model = ServiceModel { base_us: 10, per_sample_us: 0, upd_per_sample_us: 25 };
+        let mut sim = PipeSim::new(model, 2, 2);
+        sim.batch(0, 0, 4); // adapting: update 10..110
+        sim.emit_tokens(1);
+        sim.set_frozen(true);
+        let (c1, _) = sim.batch(1, 0, 4); // frozen: publish at 110, no update cost
+        sim.emit_tokens(1);
+        assert_eq!(c1, 20, "inference timing is untouched by the freeze");
+        assert_eq!(sim.now_us(), 110, "frozen batch adds zero update time");
+        // Thaw: charging resumes at the next batch boundary.
+        sim.set_frozen(false);
+        sim.batch(2, 0, 4); // done 30, publish 110, update 110..210
+        sim.emit_tokens(1);
+        assert_eq!(sim.now_us(), 210);
+        // An identical always-adapting run pays 3 updates (ends at 310), so
+        // the frozen session's virtual clock is strictly ahead.
+        let mut always = PipeSim::new(model, 2, 2);
+        for j in 0..3 {
+            always.batch(j, 0, 4);
+            always.emit_tokens(1);
+        }
+        assert_eq!(always.now_us(), 310);
     }
 }

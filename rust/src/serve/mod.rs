@@ -28,6 +28,17 @@
 //!   service clock that makes every adaptive run replay bit-identically
 //!   (`tests/control_adaptive.rs`).
 //!
+//! All three executors (serial, pipelined threaded, pipelined reference)
+//! share a convergence-aware freeze/thaw loop
+//! ([`crate::learn::ConvergenceDetector`], `[convergence]` / `--conv-*`):
+//! once the dictionary drift stays below `tol` long enough the Eq. 51
+//! update is frozen and its pipeline slot is released to pure inference;
+//! a sustained loss jump (e.g. a distribution shift in a `--stream shift`
+//! workload) thaws adaptation at a deterministic batch boundary. Every
+//! freeze/thaw decision is a pure function of (config, batch index,
+//! observed dictionaries), so sessions replay bit-identically
+//! (`tests/convergence_freeze.rs`).
+//!
 //! Drive it with `ddl serve` (TOML sections `[serve]`/`[control]`, CLI
 //! overrides) or programmatically via [`session::run_service`]; see
 //! `examples/streaming_service.rs` and EXPERIMENTS.md §Serving/§Control.
@@ -48,5 +59,5 @@ pub use control::{
 pub use pipeline::{run_pipelined, BatchFormer, PipelineExec};
 pub use queue::{BatchPolicy, MicroBatchQueue, Request, SharedQueue};
 pub use session::{
-    generate_stream, run_service, run_service_with_dict, ServeReport,
+    generate_stream, run_service, run_service_with_dict, shift_boundaries, ServeReport,
 };

@@ -82,7 +82,7 @@
 use crate::config::experiment::ServeConfig;
 use crate::error::{DdlError, Result};
 use crate::infer::{DiffusionEngine, NuView};
-use crate::learn::{apply_eq51_update, recover_and_stats};
+use crate::learn::{apply_eq51_update, recover_and_stats, ConvEvent, ConvergenceDetector};
 use crate::math::stats;
 use crate::model::{DictDoubleBuffer, DistributedDictionary, TaskSpec};
 use crate::net::{MessageStats, PersistentPool};
@@ -94,8 +94,8 @@ use crate::serve::control::{
 };
 use crate::serve::queue::{BatchPolicy, Request, SharedQueue};
 use crate::serve::session::{
-    build_engine, loss_quarters, serve_params, serve_task, setup, slo_violation_frac,
-    ServeReport, SessionSetup,
+    build_engine, emit_conv_events, loss_quarters, serve_params, serve_task, setup,
+    slo_violation_frac, ServeReport, SessionSetup,
 };
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{mpsc, Arc};
@@ -259,6 +259,12 @@ struct UpdaterState {
     latencies_ms: Vec<f64>,
     /// Control plane (adaptive mode only).
     ctl: Option<PipeCtl>,
+    /// Convergence detector ([`crate::learn::convergence`]): decides at
+    /// each batch boundary whether the *next* batch skips the Eq. 51
+    /// update. Stage 3 sees every batch in order in both executors, so
+    /// freeze/thaw points are identical for the threaded and reference
+    /// schedules. Inert (`tol = 0`) by default.
+    detector: ConvergenceDetector,
     /// Trace sink (clones share one ring buffer, so the threaded
     /// executor's updater thread and the formation thread write into the
     /// same recorder). Stage spans are stamped on the virtual stage clock
@@ -277,6 +283,8 @@ struct SessionAccum {
     latencies_ms: Vec<f64>,
     decisions: Vec<ControlDecision>,
     depth_trace: Vec<DepthDecision>,
+    conv_events: Vec<ConvEvent>,
+    frozen_batches: usize,
     /// Virtual session duration (adaptive mode; `None` = use wall clock).
     virtual_duration_us: Option<u64>,
 }
@@ -311,6 +319,7 @@ impl UpdaterState {
             served: 0,
             latencies_ms: Vec::new(),
             ctl,
+            detector: ConvergenceDetector::new(cfg.convergence.clone()),
             obs: ObsHandle::null(),
         }
     }
@@ -342,6 +351,10 @@ impl UpdaterState {
         mut emit: impl FnMut(Token),
     ) -> Result<()> {
         let j = self.batch_losses.len();
+        // Convergence freeze: decided at the previous batch boundary, so
+        // the verdict is already fixed when this batch's work begins —
+        // identical in the threaded and reference executors.
+        let frozen = self.detector.is_frozen();
         if formed.shed > 0 && self.obs.enabled() {
             self.obs.instant(
                 formed.at_us,
@@ -363,10 +376,17 @@ impl UpdaterState {
         self.batch_losses.push(tstats.mean_loss);
         self.served += batch.len();
         let mut emit_count = 1usize;
+        // Stamp for convergence instants: the batch's virtual completion
+        // in adaptive mode, the formation clock otherwise.
+        let mut conv_stamp_us = formed.at_us;
         if let Some(ctl) = self.ctl.as_mut() {
             // Virtual stage clock: inference completion on the model,
-            // never the wall clock (the replay anchor).
+            // never the wall clock (the replay anchor). A frozen batch
+            // charges no update time — the update stage is released to
+            // pure inference.
+            ctl.sim.set_frozen(frozen);
             let (done_us, starved) = ctl.sim.batch(j, formed.at_us, batch.len());
+            conv_stamp_us = done_us;
             if self.obs.enabled() {
                 self.obs.instant(
                     formed.at_us,
@@ -478,15 +498,24 @@ impl UpdaterState {
         }
 
         // Eq. 51 into the write buffer: D_j → D_{j+1}. Inference of later
-        // batches reads published snapshots, never this buffer.
-        apply_eq51_update(
-            self.dict.write_mut(),
-            &self.task,
-            self.prox,
-            self.mu_w,
-            &self.ys,
-            view,
-        );
+        // batches reads published snapshots, never this buffer. A frozen
+        // batch skips exactly this write (D_{j+1} = D_j); the publish and
+        // token traffic above are untouched, so the swap schedule — and
+        // with it threaded ≡ reference parity — is identical either way.
+        if !frozen {
+            apply_eq51_update(
+                self.dict.write_mut(),
+                &self.task,
+                self.prox,
+                self.mu_w,
+                &self.ys,
+                view,
+            );
+        }
+        // Feed the detector the post-batch dictionary and loss; mirror any
+        // freeze/thaw/drift decisions onto the trace.
+        let events = self.detector.observe(j, self.dict.write_mut(), tstats.mean_loss);
+        emit_conv_events(&self.obs, conv_stamp_us, events);
         Ok(())
     }
 
@@ -499,6 +528,7 @@ impl UpdaterState {
             ),
             None => (Vec::new(), Vec::new(), None),
         };
+        let frozen_batches = self.detector.frozen_batches();
         SessionAccum {
             dict: self.dict.into_write(),
             batch_losses: self.batch_losses,
@@ -507,6 +537,8 @@ impl UpdaterState {
             latencies_ms: self.latencies_ms,
             decisions,
             depth_trace,
+            conv_events: self.detector.into_events(),
+            frozen_batches,
             virtual_duration_us,
         }
     }
@@ -660,6 +692,8 @@ pub fn run_pipelined(
         slo_violation_frac: slo_violation_frac(&accum.latencies_ms, cfg.control.slo_p99_ms),
         decisions: accum.decisions,
         depth_trace: accum.depth_trace,
+        conv_events: accum.conv_events,
+        frozen_batches: accum.frozen_batches,
     };
     log(&format!(
         "serve[{}]: {} samples / {} batches in {:.3} s ({:.1} samples/s)",

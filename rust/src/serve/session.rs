@@ -21,7 +21,7 @@ use crate::config::experiment::ServeConfig;
 use crate::error::{DdlError, Result};
 use crate::graph::{metropolis_csr, metropolis_weights, Graph, Topology};
 use crate::infer::{DiffusionEngine, DiffusionParams};
-use crate::learn::{OnlineTrainer, TrainerOptions};
+use crate::learn::{ConvEvent, ConvergenceDetector, OnlineTrainer, TrainerOptions};
 use crate::math::stats;
 use crate::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use crate::net::MessageStats;
@@ -90,6 +90,13 @@ pub struct ServeReport {
     /// as `depth_replan` instants on the `depth` controller lane of the
     /// trace (`--trace` / `[obs]`).
     pub depth_trace: Vec<DepthDecision>,
+    /// Convergence-detector trace (empty unless `[convergence] tol > 0`):
+    /// drift measurements and freeze/thaw decisions in batch order. The
+    /// same events appear as `drift_norm`/`freeze`/`thaw` instants on the
+    /// `conv` controller lane of the trace.
+    pub conv_events: Vec<ConvEvent>,
+    /// Batches served inference-only under a convergence freeze.
+    pub frozen_batches: usize,
 }
 
 impl ServeReport {
@@ -107,6 +114,16 @@ impl ServeReport {
                 self.depth_trace.len(),
                 self.slo_p99_ms,
                 100.0 * self.slo_violation_frac,
+            ));
+        }
+        if !self.conv_events.is_empty() || self.frozen_batches > 0 {
+            let freezes =
+                self.conv_events.iter().filter(|e| matches!(e, ConvEvent::Freeze { .. })).count();
+            let thaws =
+                self.conv_events.iter().filter(|e| matches!(e, ConvEvent::Thaw { .. })).count();
+            out.push_str(&format!(
+                "\nconvergence: {} freezes, {} thaws, {} of {} batches served frozen",
+                freezes, thaws, self.frozen_batches, self.batches,
             ));
         }
         out
@@ -156,8 +173,12 @@ pub fn build_topology(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<(Graph, Topo
     Ok((Graph::generate(cfg.agents, &topo, rng), topo))
 }
 
-/// Synthetic request stream: sparse non-negative combinations of a planted
-/// dictionary plus light noise — the service's "patches". Returns
+/// Synthetic request stream, dispatched on `cfg.stream`: `planted`
+/// (default; sparse non-negative combinations of one planted dictionary
+/// plus light noise — the service's "patches"), `shift` (piecewise-
+/// stationary: the planted dictionary is redrawn at seed-derived
+/// boundaries), or `field` (spatially-correlated sensor snapshots,
+/// [`crate::data::FieldModel`]). Returns
 /// `(arrival_us, x)` pairs in arrival order (all zeros when
 /// `cfg.rate == 0`, Poisson gaps otherwise). With `cfg.burst > 1` the
 /// requests arrive in clumps of `burst` sharing one timestamp, with
@@ -169,6 +190,31 @@ pub fn build_topology(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<(Graph, Topo
 /// and the examples draw from it too, so BENCH_serve.json always measures
 /// the stream the session serves.
 pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, Vec<f32>)>> {
+    match cfg.stream.as_str() {
+        "planted" => planted_stream(cfg, rng),
+        "shift" => shift_stream(cfg, rng),
+        "field" => field_stream(cfg, rng),
+        other => Err(DdlError::Config(format!(
+            "serve: unknown stream '{other}' (planted|shift|field)"
+        ))),
+    }
+}
+
+/// Advance the Poisson-clump arrival clock for sample `i` — one
+/// exponential gap per clump of `burst` requests, mean scaled so the
+/// long-run rate is the configured one (`burst = 1` is the plain Poisson
+/// stream). Shared by every stream kind so their arrival processes are
+/// identical for identical RNG states.
+fn arrival_advance(rng: &mut Pcg64, mean_gap_us: f64, burst: usize, i: usize, t_us: &mut f64) {
+    if mean_gap_us > 0.0 && i % burst == 0 {
+        let u = rng.next_f64().max(1e-12);
+        *t_us += -u.ln() * mean_gap_us * burst as f64;
+    }
+}
+
+/// The default stationary workload: 2-sparse combinations of one planted
+/// dictionary (bit-for-bit the pre-`stream` behavior).
+fn planted_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, Vec<f32>)>> {
     let m = cfg.dim;
     let planted = DistributedDictionary::random(
         m,
@@ -191,16 +237,124 @@ pub fn generate_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, V
         for v in x.iter_mut() {
             *v += 0.01 * rng.next_normal();
         }
-        if mean_gap_us > 0.0 && i % burst == 0 {
-            // Poisson clump arrivals: one exponential gap per clump of
-            // `burst` requests, mean scaled so the long-run rate is the
-            // configured one (burst = 1 is the plain Poisson stream).
-            let u = rng.next_f64().max(1e-12);
-            t_us += -u.ln() * mean_gap_us * burst as f64;
-        }
+        arrival_advance(rng, mean_gap_us, burst, i, &mut t_us);
         out.push((t_us as u64, x));
     }
     Ok(out)
+}
+
+/// Piecewise-stationary workload: `shift_count + 1` stationary segments,
+/// each drawing from its own planted dictionary, with segment boundaries
+/// jittered around the equal partition by seed-derived offsets — shift
+/// times are pure functions of the stream seed, so shift scenarios replay
+/// bit-identically. This is the thaw/controller test bed: at each boundary
+/// the frozen dictionary's loss jumps, which is exactly the signal the
+/// convergence detector thaws on.
+fn shift_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, Vec<f32>)>> {
+    let m = cfg.dim;
+    let segments = cfg.shift_count + 1;
+    // All segment dictionaries are drawn before the boundary jitter so the
+    // sample values of segment 0 do not depend on `shift_count` ordering
+    // subtleties — everything is still one deterministic draw sequence.
+    let dicts = (0..segments)
+        .map(|_| {
+            DistributedDictionary::random(m, cfg.agents, cfg.agents, AtomConstraint::UnitBall, rng)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut bounds = Vec::with_capacity(cfg.shift_count);
+    for s in 1..segments {
+        let base = (s * cfg.samples / segments) as i64;
+        let span = (cfg.samples / (4 * segments)).max(1) as i64;
+        let jitter = rng.next_below((2 * span + 1) as u64) as i64 - span;
+        bounds.push((base + jitter).clamp(1, cfg.samples.saturating_sub(1) as i64) as usize);
+    }
+    bounds.sort_unstable();
+    let mut out = Vec::with_capacity(cfg.samples);
+    let mut t_us = 0f64;
+    let mean_gap_us = if cfg.rate > 0.0 { 1e6 / cfg.rate } else { 0.0 };
+    let burst = cfg.burst.max(1);
+    let mut seg = 0usize;
+    for i in 0..cfg.samples {
+        while seg < bounds.len() && i >= bounds[seg] {
+            seg += 1;
+        }
+        let planted = &dicts[seg];
+        let mut x = vec![0.0f32; m];
+        for _ in 0..2 {
+            let q = rng.next_below(cfg.agents as u64) as usize;
+            let c = 0.5 + rng.next_f32();
+            crate::math::vector::axpy(c, &planted.atom(q), &mut x);
+        }
+        for v in x.iter_mut() {
+            *v += 0.01 * rng.next_normal();
+        }
+        arrival_advance(rng, mean_gap_us, burst, i, &mut t_us);
+        out.push((t_us as u64, x));
+    }
+    Ok(out)
+}
+
+/// Sensor-network field-monitoring workload (arXiv:1304.3568 setting):
+/// each request is one spatially-correlated snapshot of an `M`-sensor
+/// field ([`crate::data::FieldModel`]).
+fn field_stream(cfg: &ServeConfig, rng: &mut Pcg64) -> Result<Vec<(u64, Vec<f32>)>> {
+    let model = crate::data::FieldModel::new(
+        cfg.dim,
+        cfg.field_sources,
+        cfg.field_width,
+        cfg.field_noise,
+    );
+    let mut out = Vec::with_capacity(cfg.samples);
+    let mut t_us = 0f64;
+    let mean_gap_us = if cfg.rate > 0.0 { 1e6 / cfg.rate } else { 0.0 };
+    let burst = cfg.burst.max(1);
+    let mut x = vec![0.0f32; cfg.dim];
+    for i in 0..cfg.samples {
+        model.sample_into(rng, &mut x);
+        arrival_advance(rng, mean_gap_us, burst, i, &mut t_us);
+        out.push((t_us as u64, x.clone()));
+    }
+    Ok(out)
+}
+
+/// Boundary sample indices at which the `shift` stream's planted
+/// dictionary changes, for a given config — recomputed from the seed the
+/// same way the stream generator derives them (the coordinator and tests
+/// use this to line thaw events up with shifts).
+pub fn shift_boundaries(cfg: &ServeConfig) -> Result<Vec<usize>> {
+    if cfg.stream != "shift" {
+        return Ok(Vec::new());
+    }
+    // Re-run the setup draw order (topology → dict0 → stream prefix) so
+    // the jitter draws land on the same RNG offsets as in `setup`.
+    let mut rng = Pcg64::new(cfg.seed);
+    build_topology(cfg, &mut rng)?;
+    DistributedDictionary::random(
+        cfg.dim,
+        cfg.agents,
+        cfg.agents,
+        serve_task(cfg).atom_constraint(),
+        &mut rng,
+    )?;
+    let segments = cfg.shift_count + 1;
+    for _ in 0..segments {
+        DistributedDictionary::random(
+            cfg.dim,
+            cfg.agents,
+            cfg.agents,
+            AtomConstraint::UnitBall,
+            &mut rng,
+        )?;
+    }
+    let mut bounds = Vec::with_capacity(cfg.shift_count);
+    for s in 1..segments {
+        let base = (s * cfg.samples / segments) as i64;
+        let span = (cfg.samples / (4 * segments)).max(1) as i64;
+        let jitter = rng.next_below((2 * span + 1) as u64) as i64 - span;
+        bounds.push((base + jitter).clamp(1, cfg.samples.saturating_sub(1) as i64) as usize);
+    }
+    bounds.sort_unstable();
+    Ok(bounds)
 }
 
 /// The serving task: sparse coding with the configured elastic-net knobs.
@@ -316,6 +470,9 @@ fn run_serial(
         OnlineTrainer::from_engine(engine, TrainerOptions { infer: params, prox: DictProx::None });
 
     let adaptive = cfg.control.enabled;
+    // Convergence detector: with `[convergence] tol = 0` (the default) it
+    // observes nothing and this loop is bit-for-bit the always-adapt run.
+    let mut detector = ConvergenceDetector::new(cfg.convergence.clone());
     let model = ServiceModel::from_config(&cfg.control);
     // Optional service-model calibration: measure the first K batches on
     // the wall clock, least-squares fit the affine law, freeze it for the
@@ -423,11 +580,19 @@ fn run_serial(
         // sessions advance the clock by the deterministic service model
         // instead of the measured wall time (the replay anchor).
         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
+        // A frozen batch runs pure inference (the Eq. 51 update is
+        // skipped); the decision was made at the previous batch boundary,
+        // so it is deterministic regardless of wall timing.
+        let frozen = detector.is_frozen();
         let t0 = Instant::now();
-        let step = trainer.step(&mut dict, &task, &refs, cfg.mu_w)?;
+        let step = if frozen {
+            trainer.step_frozen(&dict, &task, &refs)?
+        } else {
+            trainer.step(&mut dict, &task, &refs, cfg.mu_w)?
+        };
         let wall_us = (t0.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
         let service_us = if adaptive {
-            if let Some(cal) = calibrator.as_mut() {
+            let mdl = if let Some(cal) = calibrator.as_mut() {
                 // Pre-freeze the configured model drives the clock while
                 // the calibrator records wall measurements on the side;
                 // from the freeze on the fitted model takes over.
@@ -438,9 +603,18 @@ fn run_serial(
                         cfg.control.calib_batches, fitted.base_us, fitted.per_sample_us
                     ));
                 }
-                cal.model().service_us(batch.len())
+                cal.model()
             } else {
-                model.service_us(batch.len())
+                model
+            };
+            let full = mdl.service_us(batch.len());
+            if frozen {
+                // The serial loop pays inference + update in one charge;
+                // a frozen batch skips the update share — the serial form
+                // of "the update slot is released to pure inference".
+                full.saturating_sub(mdl.update_us(batch.len()))
+            } else {
+                full
             }
         } else {
             wall_us
@@ -454,6 +628,16 @@ fn run_serial(
         }
 
         batch_losses.push(step.mean_loss);
+        let was_frozen = detector.is_frozen();
+        let events = detector.observe(batch_losses.len() - 1, &dict, step.mean_loss);
+        emit_conv_events(&obs, now_us, events);
+        if detector.is_frozen() != was_frozen {
+            log(&format!(
+                "  convergence: {} adaptation at batch {}",
+                if detector.is_frozen() { "froze" } else { "thawed" },
+                batch_losses.len() - 1,
+            ));
+        }
         served += batch.len();
         for r in &batch {
             latencies_ms.push(now_us.saturating_sub(r.arrival_us) as f64 / 1e3);
@@ -524,6 +708,8 @@ fn run_serial(
         slo_violation_frac: slo_violation_frac(&latencies_ms, cfg.control.slo_p99_ms),
         decisions: controller.map(|c| c.into_decisions()).unwrap_or_default(),
         depth_trace: Vec::new(),
+        frozen_batches: detector.frozen_batches(),
+        conv_events: detector.into_events(),
     };
     if let Some(n) = crate::obs::export(&cfg.obs, &obs)? {
         log(&format!(
@@ -532,6 +718,57 @@ fn run_serial(
         ));
     }
     Ok((report, dict))
+}
+
+/// Mirror convergence-detector events as obs instants on the `conv`
+/// controller lane, stamped at the executor's current virtual clock.
+/// Shared by the serial loop and the pipelined updater stage so the trace
+/// vocabulary is identical across executors.
+pub(crate) fn emit_conv_events(
+    obs: &crate::obs::ObsHandle,
+    t_us: u64,
+    events: &[ConvEvent],
+) {
+    if !obs.enabled() || events.is_empty() {
+        return;
+    }
+    let lane = || crate::obs::Track::Controller("conv");
+    for ev in events {
+        match *ev {
+            ConvEvent::Drift { batch, norm } => obs.instant(
+                t_us,
+                "drift_norm",
+                lane(),
+                vec![
+                    ("batch", crate::obs::ArgValue::U(batch as u64)),
+                    ("norm", crate::obs::ArgValue::F(norm)),
+                    ("frozen", crate::obs::ArgValue::B(false)),
+                ],
+            ),
+            ConvEvent::LossRatio { batch, ratio } => obs.instant(
+                t_us,
+                "drift_norm",
+                lane(),
+                vec![
+                    ("batch", crate::obs::ArgValue::U(batch as u64)),
+                    ("norm", crate::obs::ArgValue::F(ratio)),
+                    ("frozen", crate::obs::ArgValue::B(true)),
+                ],
+            ),
+            ConvEvent::Freeze { batch } => obs.instant(
+                t_us,
+                "freeze",
+                lane(),
+                vec![("batch", crate::obs::ArgValue::U(batch as u64))],
+            ),
+            ConvEvent::Thaw { batch } => obs.instant(
+                t_us,
+                "thaw",
+                lane(),
+                vec![("batch", crate::obs::ArgValue::U(batch as u64))],
+            ),
+        }
+    }
 }
 
 /// Fraction of request latencies exceeding the SLO (0.0 on an empty run).
@@ -665,6 +902,71 @@ mod tests {
         assert_eq!(replay.samples, 10);
         // The default unbounded queue never sheds.
         assert_eq!(run_service(&tiny_cfg(), &mut |_| {}).unwrap().shed, 0);
+    }
+
+    /// Stream dispatch: shift/field streams replay per seed, differ from
+    /// the planted stream, and unknown kinds are rejected with a typed
+    /// config error. Shift boundaries recompute identically from the seed.
+    #[test]
+    fn stream_kinds_dispatch_and_replay() {
+        let mut cfg = tiny_cfg();
+        cfg.stream = "shift".into();
+        let a = setup(&cfg).unwrap().stream;
+        let b = setup(&cfg).unwrap().stream;
+        assert_eq!(a, b, "shift stream must replay bit-identically");
+        let bounds = shift_boundaries(&cfg).unwrap();
+        assert_eq!(bounds.len(), cfg.shift_count);
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        assert!(bounds.iter().all(|&x| x >= 1 && x < cfg.samples));
+        assert_eq!(bounds, shift_boundaries(&cfg).unwrap());
+        cfg.stream = "field".into();
+        let f = setup(&cfg).unwrap().stream;
+        assert_eq!(f.len(), cfg.samples);
+        assert_ne!(f[0].1, a[0].1, "field snapshots differ from planted patches");
+        assert!(shift_boundaries(&cfg).unwrap().is_empty(), "only shift streams shift");
+        cfg.stream = "fourier".into();
+        assert!(run_service(&cfg, &mut |_| {}).is_err());
+    }
+
+    /// An aggressive convergence config freezes the adaptive session, the
+    /// frozen batches stop paying the update charge (strictly shorter
+    /// virtual duration than the always-adapt run), and a stationary
+    /// stream never thaws.
+    #[test]
+    fn convergence_freeze_speeds_up_adaptive_session() {
+        let mut cfg = tiny_cfg();
+        cfg.samples = 96;
+        cfg.control.enabled = true;
+        cfg.convergence.tol = 10.0; // any measured drift counts as converged
+        cfg.convergence.window = 2;
+        cfg.convergence.max_no_improvement = 1;
+        let frozen = run_service(&cfg, &mut |_| {}).unwrap();
+        assert!(frozen.frozen_batches > 0, "session never froze");
+        assert!(frozen
+            .conv_events
+            .iter()
+            .any(|e| matches!(e, crate::learn::ConvEvent::Freeze { .. })));
+        assert!(
+            frozen.conv_events.iter().all(|e| !matches!(e, crate::learn::ConvEvent::Thaw { .. })),
+            "stationary stream must not thaw"
+        );
+        // Replay contract: decisions and clock are bit-stable.
+        let replay = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(frozen.conv_events, replay.conv_events);
+        assert_eq!(frozen.duration_s.to_bits(), replay.duration_s.to_bits());
+        // The tol = 0 baseline adapts every batch and pays for it.
+        let mut base = cfg.clone();
+        base.convergence.tol = 0.0;
+        let adapt = run_service(&base, &mut |_| {}).unwrap();
+        assert_eq!(adapt.frozen_batches, 0);
+        assert!(adapt.conv_events.is_empty());
+        assert!(
+            frozen.duration_s < adapt.duration_s,
+            "frozen batches must shed the update charge: {} vs {}",
+            frozen.duration_s,
+            adapt.duration_s
+        );
+        assert!(frozen.throughput_rps > adapt.throughput_rps);
     }
 
     #[test]

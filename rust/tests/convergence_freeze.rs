@@ -1,0 +1,283 @@
+//! Convergence-aware freeze/thaw contracts (ISSUE: convergence-aware
+//! online adaptation):
+//!
+//! (a) **Replay** — freeze/thaw points and every report figure replay
+//!     bit-identically across runs, for several seeds, on the adaptive
+//!     virtual clock.
+//! (b) **Inertness** — `tol = 0` (the default) leaves the session
+//!     bit-for-bit identical to the pre-detector behavior, and an
+//!     *enabled* detector that never fires is bitwise indistinguishable
+//!     from a disabled one on every non-trace field.
+//! (c) **Frozen pipeline parity** — with the detector freezing mid-stream,
+//!     the threaded pipelined executor still matches its serial reference
+//!     executor bit-for-bit (final dictionary, losses, ψ MessageStats,
+//!     and the freeze/thaw event trace itself).
+//! (d) **Stationarity** — on a stationary stream a frozen session never
+//!     thaws; on a distribution-shift stream the post-shift loss jump
+//!     thaws it at a deterministic batch boundary.
+
+use ddl::config::experiment::{ControlConfig, InferenceConfig, ServeConfig};
+use ddl::learn::ConvEvent;
+use ddl::serve::pipeline::{run_pipelined, PipelineExec};
+use ddl::serve::{run_service_with_dict, shift_boundaries, ServeReport};
+
+/// Small serving config; saturated arrivals, serial executor.
+fn base_cfg(seed: u64) -> ServeConfig {
+    ServeConfig {
+        seed,
+        agents: 16,
+        dim: 8,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 8,
+        max_wait_us: 2_000,
+        samples: 128,
+        rate: 0.0,
+        mu_w: 0.08,
+        pipeline: false,
+        pipeline_depth: 1,
+        infer: InferenceConfig { mu: 0.4, iters: 10, gamma: 0.08, delta: 0.2, threads: 1 },
+        ..ServeConfig::default()
+    }
+}
+
+/// Detector knobs that guarantee an early freeze on any stream: `tol` is
+/// huge, so the first drift windows all count as converged.
+fn freeze_fast(cfg: &mut ServeConfig) {
+    cfg.convergence.tol = 10.0;
+    cfg.convergence.window = 2;
+    cfg.convergence.max_no_improvement = 1;
+    cfg.convergence.loss_window = 4;
+}
+
+/// Adaptive control plane on the deterministic virtual clock (same shape
+/// as `tests/control_adaptive.rs`), so *every* report figure — including
+/// durations and throughput — is bit-reproducible.
+fn adaptive(cfg: &mut ServeConfig) {
+    cfg.control = ControlConfig {
+        enabled: true,
+        slo_p99_ms: 5.0,
+        tick_us: 1_000,
+        batch_min: 1,
+        batch_max: 16,
+        wait_min_us: 0,
+        wait_max_us: 4_000,
+        window: 64,
+        svc_base_us: 200,
+        svc_per_sample_us: 50,
+        upd_per_sample_us: 30,
+        depth_min: 1,
+        depth_max: 3,
+        epoch_batches: 4,
+        ..ControlConfig::default()
+    };
+}
+
+/// Fields that are pure functions of (config, seed, stream) under *any*
+/// executor — excludes wall-clock-derived figures, which only replay on
+/// the adaptive virtual clock.
+fn assert_deterministic_fields_equal(a: &ServeReport, b: &ServeReport, label: &str) {
+    assert_eq!(a.samples, b.samples, "{label}: samples");
+    assert_eq!(a.batches, b.batches, "{label}: batches");
+    assert_eq!(a.shed, b.shed, "{label}: shed");
+    assert_eq!(a.mean_batch.to_bits(), b.mean_batch.to_bits(), "{label}: mean batch");
+    assert_eq!(
+        a.loss_first_quarter.to_bits(),
+        b.loss_first_quarter.to_bits(),
+        "{label}: first-quarter loss"
+    );
+    assert_eq!(
+        a.loss_last_quarter.to_bits(),
+        b.loss_last_quarter.to_bits(),
+        "{label}: last-quarter loss"
+    );
+    assert_eq!(a.stats, b.stats, "{label}: ψ MessageStats");
+    assert_eq!(a.decisions, b.decisions, "{label}: controller trace");
+    assert_eq!(a.depth_trace, b.depth_trace, "{label}: depth trace");
+}
+
+/// Conv-trace equality: every freeze/thaw/drift decision, with exact
+/// float bits inside the drift events (`ConvEvent: PartialEq` compares
+/// norms by value, which is what the replay contract promises — NaN never
+/// occurs by construction).
+fn assert_conv_trace_equal(a: &ServeReport, b: &ServeReport, label: &str) {
+    assert_eq!(a.conv_events, b.conv_events, "{label}: conv events");
+    assert_eq!(a.frozen_batches, b.frozen_batches, "{label}: frozen batches");
+}
+
+fn freeze_batch(report: &ServeReport) -> Option<usize> {
+    report.conv_events.iter().find_map(|e| match e {
+        ConvEvent::Freeze { batch } => Some(*batch),
+        _ => None,
+    })
+}
+
+fn has_thaw(report: &ServeReport) -> bool {
+    report.conv_events.iter().any(|e| matches!(e, ConvEvent::Thaw { .. }))
+}
+
+// ---------------------------------------------------------------------
+// (a) Replay across seeds
+// ---------------------------------------------------------------------
+
+#[test]
+fn freeze_thaw_replays_bitwise_across_seeds() {
+    for seed in [0xF1_01u64, 0xF1_02, 0xF1_03] {
+        let mut cfg = base_cfg(seed);
+        freeze_fast(&mut cfg);
+        adaptive(&mut cfg);
+        let (r1, d1) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+        let (r2, d2) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+        assert!(
+            r1.frozen_batches > 0,
+            "seed {seed:#x}: detector must freeze under tol = 10"
+        );
+        assert!(freeze_batch(&r1).is_some(), "seed {seed:#x}: Freeze event missing");
+        assert_deterministic_fields_equal(&r1, &r2, "freeze replay");
+        assert_conv_trace_equal(&r1, &r2, "freeze replay");
+        // Adaptive mode: even the virtual duration replays.
+        assert_eq!(r1.duration_s.to_bits(), r2.duration_s.to_bits(), "virtual duration");
+        assert_eq!(d1.mat().as_slice(), d2.mat().as_slice(), "final dictionaries");
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) tol = 0 and the never-firing detector are inert
+// ---------------------------------------------------------------------
+
+#[test]
+fn tol_zero_is_bitwise_always_adapt() {
+    // Baseline: detector off (tol = 0 is the ServeConfig default).
+    let off = base_cfg(0xF1_10);
+    assert!(!off.convergence.enabled());
+    let (r_off, d_off) = run_service_with_dict(&off, &mut |_| {}).unwrap();
+    assert!(r_off.conv_events.is_empty(), "disabled detector must observe nothing");
+    assert_eq!(r_off.frozen_batches, 0);
+
+    // Enabled but never firing: tol so small that adaptation drift always
+    // exceeds it. Every batch still takes the full adapt path, so all
+    // non-trace fields — and the dictionary — are bit-identical to `off`.
+    let mut on = base_cfg(0xF1_10);
+    on.convergence.tol = 1e-12;
+    on.convergence.window = 4;
+    on.convergence.max_no_improvement = 2;
+    let (r_on, d_on) = run_service_with_dict(&on, &mut |_| {}).unwrap();
+    assert!(
+        r_on.conv_events.iter().all(|e| matches!(e, ConvEvent::Drift { .. })),
+        "a never-firing detector may only log drift measurements"
+    );
+    assert!(
+        r_on.conv_events.iter().any(|e| match e {
+            ConvEvent::Drift { norm, .. } => *norm > 1e-12,
+            _ => false,
+        }),
+        "adaptation under mu_w > 0 must register drift"
+    );
+    assert_eq!(r_on.frozen_batches, 0, "tol = 1e-12 must never freeze here");
+    assert_deterministic_fields_equal(&r_off, &r_on, "tol0 vs never-firing");
+    assert_eq!(d_off.mat().as_slice(), d_on.mat().as_slice(), "final dictionaries");
+}
+
+// ---------------------------------------------------------------------
+// (c) Frozen-mode pipeline parity
+// ---------------------------------------------------------------------
+
+#[test]
+fn frozen_pipeline_threaded_matches_reference() {
+    for &threads in &[1usize, 2] {
+        let mut cfg = base_cfg(0xF1_20);
+        cfg.pipeline = true;
+        freeze_fast(&mut cfg);
+        cfg.infer.threads = threads;
+        let (r_ref, d_ref) = run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).unwrap();
+        let (r_thr, d_thr) = run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).unwrap();
+        let label = format!("frozen pipeline t{threads}");
+        assert!(r_ref.frozen_batches > 0, "{label}: freeze must fire");
+        assert_deterministic_fields_equal(&r_ref, &r_thr, &label);
+        assert_conv_trace_equal(&r_ref, &r_thr, &label);
+        assert_eq!(
+            d_ref.mat().as_slice(),
+            d_thr.mat().as_slice(),
+            "{label}: final dictionaries must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn frozen_adaptive_pipeline_parity_and_replay() {
+    // Adaptive + frozen: the PipeSim update-slot discount is part of the
+    // shared schedule, so threaded ≡ reference including virtual timing.
+    let mut cfg = base_cfg(0xF1_21);
+    cfg.pipeline = true;
+    freeze_fast(&mut cfg);
+    adaptive(&mut cfg);
+    let (r_ref, d_ref) = run_pipelined(&cfg, PipelineExec::Reference, &mut |_| {}).unwrap();
+    let (r_thr, d_thr) = run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).unwrap();
+    let (r_thr2, _) = run_pipelined(&cfg, PipelineExec::Threaded, &mut |_| {}).unwrap();
+    assert!(r_ref.frozen_batches > 0, "freeze must fire under tol = 10");
+    assert_deterministic_fields_equal(&r_ref, &r_thr, "frozen adaptive parity");
+    assert_conv_trace_equal(&r_ref, &r_thr, "frozen adaptive parity");
+    assert_eq!(r_ref.duration_s.to_bits(), r_thr.duration_s.to_bits(), "virtual duration");
+    assert_eq!(d_ref.mat().as_slice(), d_thr.mat().as_slice());
+    assert_deterministic_fields_equal(&r_thr, &r_thr2, "threaded replay");
+    assert_conv_trace_equal(&r_thr, &r_thr2, "threaded replay");
+}
+
+// ---------------------------------------------------------------------
+// (d) Stationary streams never thaw; shift streams do
+// ---------------------------------------------------------------------
+
+#[test]
+fn stationary_stream_never_thaws_after_freezing() {
+    let mut cfg = base_cfg(0xF1_30);
+    freeze_fast(&mut cfg);
+    // Default thaw_ratio 1.5: a stationary planted stream stays within a
+    // 1.5x band of its freeze-time loss.
+    let (report, _) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    let froze_at = freeze_batch(&report).expect("freeze must fire under tol = 10");
+    assert!(!has_thaw(&report), "stationary stream must never thaw");
+    // Frozen from the batch after the freeze decision to the end.
+    assert_eq!(
+        report.frozen_batches,
+        report.batches - froze_at - 1,
+        "every batch after the freeze must be served frozen"
+    );
+}
+
+#[test]
+fn distribution_shift_thaws_at_deterministic_boundary() {
+    let mut cfg = base_cfg(0xF1_31);
+    cfg.samples = 256; // 32 batches: freeze ≈ batch 8, shift ≈ batch 12–20
+    cfg.mu_w = 0.25; // adapt fast so the freeze-time loss sits well below
+                     // the mismatched post-shift loss
+    cfg.stream = "shift".into();
+    cfg.shift_count = 1;
+    cfg.convergence.tol = 10.0;
+    cfg.convergence.window = 4;
+    cfg.convergence.max_no_improvement = 2;
+    cfg.convergence.loss_window = 4;
+    cfg.convergence.thaw_ratio = 1.25;
+    let bounds = shift_boundaries(&cfg).unwrap();
+    assert_eq!(bounds.len(), 1, "one shift boundary for shift_count = 1");
+    assert!(bounds[0] >= 96 && bounds[0] <= 160, "jitter stays within its span");
+    let (r1, _) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    let froze_at = freeze_batch(&r1).expect("freeze must fire before the shift");
+    assert!(
+        froze_at * cfg.batch < bounds[0],
+        "freeze (batch {froze_at}) must land before the shift at sample {}",
+        bounds[0]
+    );
+    let thawed_at = r1
+        .conv_events
+        .iter()
+        .find_map(|e| match e {
+            ConvEvent::Thaw { batch } => Some(*batch),
+            _ => None,
+        })
+        .expect("post-shift loss jump must thaw adaptation");
+    assert!(thawed_at > froze_at, "thaw follows the freeze");
+    // The thaw point is itself part of the replay contract.
+    let (r2, _) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    assert_conv_trace_equal(&r1, &r2, "shift thaw replay");
+    assert_deterministic_fields_equal(&r1, &r2, "shift thaw replay");
+}

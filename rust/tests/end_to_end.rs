@@ -1,108 +1,352 @@
 //! End-to-end integration: the full stack composes.
 //!
-//! * quickstart: artifacts load, HLO inference matches native, update runs;
-//! * HLO-driven training: a short online training loop where *inference
-//!   runs through the PJRT executable* and the dictionary update runs
-//!   through the update artifact — Python never appears on this path.
-//!
-//! Compiled only with the `xla` feature (the PJRT bridge is optional).
-#![cfg(feature = "xla")]
+//! * golden trajectories (always compiled): final-dictionary checksums for
+//!   a fixed ring-of-50 problem across the BSP, async τ=2, and
+//!   serve-batched paths, pinned against `tests/golden/end_to_end.golden`.
+//!   Any change to RNG draw order, combine arithmetic, update order, or
+//!   stream generation shows up as a checksum mismatch here before it
+//!   shows up as a silently different "reproduction" of the paper;
+//! * HLO path (`--features xla` only): artifacts load, PJRT inference
+//!   matches native, and an HLO-driven training loop reduces loss.
 
 use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::rng::Pcg64;
-use ddl::runtime::exec::ParamPack;
-use ddl::runtime::Runtime;
-use std::path::Path;
+use std::path::PathBuf;
 
-fn artifacts_dir() -> Option<&'static Path> {
-    let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
-        None
+// ---------------------------------------------------------------------
+// Golden trajectories (pure-rust build)
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64 over the f32 bit patterns, in matrix order. One flipped
+/// mantissa bit anywhere in the final dictionary changes the digest.
+fn fnv1a64(data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in data {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/end_to_end.golden")
+}
+
+/// Load the committed golden digests (`key value-in-hex` per line).
+fn load_golden() -> Option<Vec<(String, u64)>> {
+    let text = std::fs::read_to_string(golden_path()).ok()?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, hex) = line.split_once(' ')?;
+        out.push((key.to_string(), u64::from_str_radix(hex.trim(), 16).ok()?));
+    }
+    Some(out)
+}
+
+const N: usize = 50; // ring of 50 agents, one atom each
+const M: usize = 16;
+const SEED: u64 = 0x601D;
+const MU_W: f32 = 0.05;
+const TRAIN_SAMPLES: usize = 20;
+
+/// Fixed planted-dictionary sampler shared by the BSP and async paths:
+/// every draw count is constant per sample, so the three paths consume
+/// their own RNGs independently of inference internals.
+struct PlantedSampler {
+    planted: DistributedDictionary,
+    rng: Pcg64,
+}
+
+impl PlantedSampler {
+    fn new(seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let planted =
+            DistributedDictionary::random(M, N, N, AtomConstraint::UnitBall, &mut rng).unwrap();
+        PlantedSampler { planted, rng }
+    }
+
+    fn next(&mut self) -> Vec<f32> {
+        let mut x = vec![0.0f32; M];
+        for _ in 0..2 {
+            let q = self.rng.next_below(N as u64) as usize;
+            ddl::math::vector::axpy(0.5 + self.rng.next_f32(), &self.planted.atom(q), &mut x);
+        }
+        x
     }
 }
 
-#[test]
-fn quickstart_runs() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut lines = Vec::new();
-    ddl::coordinator::quickstart::run_quickstart(dir, &mut |s| lines.push(s.to_string()))
-        .expect("quickstart should succeed");
-    assert!(lines.iter().any(|l| l.contains("quickstart OK")));
+/// Primal recovery from per-agent duals (Eq. 37 / Table II), mirroring
+/// `infer::diffusion::recover_y_into` for executors that expose `nu(k)`
+/// directly instead of a `NuView`.
+fn recover_y(dict: &DistributedDictionary, task: &TaskSpec, nu_of: &dyn Fn(usize) -> Vec<f32>) -> Vec<f32> {
+    let mut y = vec![0.0f32; dict.k()];
+    let mut scratch = vec![0.0f32; dict.k()];
+    let inv_delta = 1.0 / task.delta();
+    for k in 0..dict.agents() {
+        let nu = nu_of(k);
+        dict.block_correlations(k, &nu, &mut scratch);
+        let (start, len) = dict.block(k);
+        for q in start..start + len {
+            y[q] = task.threshold(scratch[q]) * inv_delta;
+        }
+    }
+    y
 }
 
-/// Train on planted-dictionary data with inference + update both on the
-/// HLO path; the representation loss must drop.
-#[test]
-fn hlo_training_loop_reduces_loss() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::new(dir).unwrap();
-    let infer = rt.load_infer("quickstart_infer").unwrap();
-    let (n, m) = (infer.info.n, infer.info.m);
+/// Eq. 51 block update + projection for one sample's duals.
+fn update_dict(
+    dict: &mut DistributedDictionary,
+    task: &TaskSpec,
+    nu_of: &dyn Fn(usize) -> Vec<f32>,
+) {
+    let y = recover_y(dict, task, nu_of);
+    let constraint = task.atom_constraint();
+    for k in 0..dict.agents() {
+        let nu = nu_of(k);
+        dict.block_gradient_step(k, MU_W, &nu, &y);
+        dict.project_block(k, constraint);
+    }
+}
 
-    // The update artifact shapes must match quickstart's; otherwise use the
-    // native update (still an end-to-end inference test).
-    let update = rt.load_update("denoise_update").ok().filter(|u| u.info.n == n && u.info.m == m);
-
-    let mut rng = Pcg64::new(0xE2E);
-    let planted = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
-    let sample = |rng: &mut Pcg64| -> Vec<f32> {
-        let mut x = vec![0.0f32; m];
-        for _ in 0..2 {
-            let q = rng.next_below(n as u64) as usize;
-            ddl::math::vector::axpy(0.5 + rng.next_f32(), &planted.atom(q), &mut x);
-        }
-        x
-    };
-
-    let mut dict = DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
-    let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
-    let a = metropolis_weights(&g);
-    let at = a.transpose();
-    let theta = vec![1.0 / n as f32; n];
+fn ring_problem() -> (Graph, ddl::math::Mat, DistributedDictionary, TaskSpec) {
+    let mut rng = Pcg64::new(SEED);
+    let graph = Graph::generate(N, &Topology::Ring { k: 2 }, &mut rng);
+    let weights = metropolis_weights(&graph);
+    let dict =
+        DistributedDictionary::random(M, N, N, AtomConstraint::UnitBall, &mut rng).unwrap();
     let task = TaskSpec::SparseCoding { gamma: 0.05, delta: 0.2 };
-    let pack = ParamPack::from_task(&task, n, 0.3);
-    let mu_w = 0.05f32;
+    (graph, weights, dict, task)
+}
 
-    let loss = |dict: &DistributedDictionary, xs: &[Vec<f32>]| -> f32 {
-        xs.iter()
-            .map(|x| {
-                let out = infer
-                    .run(&dict.mat().transpose(), x, &at, &theta, pack)
-                    .unwrap();
-                let wy = dict.mat().matvec(&out.y).unwrap();
-                let r = ddl::math::vector::sub(x, &wy);
-                task.f_loss(&r)
-            })
-            .sum::<f32>()
+/// BSP online training: fresh synchronous rounds per sample.
+fn bsp_trajectory() -> u64 {
+    use ddl::infer::DiffusionParams;
+    use ddl::net::BspNetwork;
+    let (graph, weights, mut dict, task) = ring_problem();
+    let mut sampler = PlantedSampler::new(SEED ^ 0xB59);
+    for _ in 0..TRAIN_SAMPLES {
+        let x = sampler.next();
+        let mut net = BspNetwork::new(graph.clone(), weights.clone(), M, None);
+        net.run(&dict, &task, &x, DiffusionParams::new(0.5, 30)).unwrap();
+        update_dict(&mut dict, &task, &|k| net.nu(k).to_vec());
+    }
+    fnv1a64(dict.mat().as_slice())
+}
+
+/// Async τ=2 online training under a constant-delay model: the bounded
+/// staleness gate and the event schedule are part of the pinned bits.
+fn async_tau2_trajectory() -> u64 {
+    use ddl::infer::DiffusionParams;
+    use ddl::net::{AsyncNetwork, AsyncParams, DelayDist};
+    let (graph, weights, mut dict, task) = ring_problem();
+    let mut sampler = PlantedSampler::new(SEED ^ 0xA54);
+    for t in 0..TRAIN_SAMPLES {
+        let x = sampler.next();
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Constant { us: 80 }, DelayDist::Constant { us: 15 })
+            .with_seed(SEED + t as u64);
+        let mut net =
+            AsyncNetwork::new(graph.clone(), weights.clone(), M, None, ap).unwrap();
+        net.run(&dict, &task, &x, DiffusionParams::new(0.5, 30)).unwrap();
+        update_dict(&mut dict, &task, &|k| net.nu(k).to_vec());
+    }
+    fnv1a64(dict.mat().as_slice())
+}
+
+/// Serve-batched path: the streaming session's final dictionary (serial
+/// executor, planted stream, saturated arrivals).
+fn serve_trajectory() -> u64 {
+    use ddl::config::experiment::{InferenceConfig, ServeConfig};
+    let cfg = ServeConfig {
+        seed: SEED,
+        agents: N,
+        dim: M,
+        topology: "ring".into(),
+        ring_k: 2,
+        batch: 8,
+        max_wait_us: 2_000,
+        samples: 64,
+        rate: 0.0,
+        mu_w: MU_W,
+        pipeline: false,
+        infer: InferenceConfig { mu: 0.5, iters: 30, gamma: 0.05, delta: 0.2, threads: 1 },
+        ..ServeConfig::default()
     };
+    let (_, dict) = ddl::serve::run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    fnv1a64(dict.mat().as_slice())
+}
 
-    let probe: Vec<Vec<f32>> = (0..8).map(|_| sample(&mut rng)).collect();
-    let before = loss(&dict, &probe);
-
-    for _ in 0..120 {
-        let x = sample(&mut rng);
-        let out = infer.run(&dict.mat().transpose(), &x, &at, &theta, pack).unwrap();
-        let nu = out.v.row(0).to_vec(); // any agent's estimate post-consensus
-        match &update {
-            Some(u) => {
-                let wt2 = u.run(&dict.mat().transpose(), &nu, &out.y, mu_w).unwrap();
-                *dict.mat_mut() = wt2.transpose();
+/// Pin the three trajectories against the committed golden file. On first
+/// run (no toolchain had produced the file yet) the digests are written
+/// out for committing — see `tests/golden/README.md`.
+#[test]
+fn golden_trajectories_ring50() {
+    let current = vec![
+        ("bsp".to_string(), bsp_trajectory()),
+        ("async_tau2".to_string(), async_tau2_trajectory()),
+        ("serve_batched".to_string(), serve_trajectory()),
+    ];
+    match load_golden() {
+        Some(golden) => {
+            for (key, digest) in &current {
+                let pinned = golden.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+                assert_eq!(
+                    Some(*digest),
+                    pinned,
+                    "golden trajectory '{key}' diverged: got {digest:016x}, pinned \
+                     {pinned:?} — if the change is intentional, delete \
+                     tests/golden/end_to_end.golden, re-run, and commit the reseeded file"
+                );
             }
-            None => {
-                for k in 0..n {
-                    dict.block_gradient_step(k, mu_w, &nu, &out.y);
-                    dict.project_block(k, task.atom_constraint());
+            assert_eq!(golden.len(), current.len(), "golden file has stale extra entries");
+        }
+        None => {
+            let mut text = String::from(
+                "# FNV-1a-64 digests of final dictionaries (ring N=50, fixed seed).\n\
+                 # Self-seeded by tests/end_to_end.rs::golden_trajectories_ring50 —\n\
+                 # commit this file; see tests/golden/README.md.\n",
+            );
+            for (key, digest) in &current {
+                text.push_str(&format!("{key} {digest:016x}\n"));
+            }
+            std::fs::create_dir_all(golden_path().parent().unwrap()).unwrap();
+            std::fs::write(golden_path(), text).unwrap();
+            eprintln!(
+                "SEEDED {}: commit it to pin the trajectories",
+                golden_path().display()
+            );
+        }
+    }
+}
+
+/// The two sample-level paths really are different executors (staleness
+/// changes the duals), yet each replays itself bitwise.
+#[test]
+fn golden_trajectories_replay_and_differ() {
+    assert_eq!(bsp_trajectory(), bsp_trajectory(), "BSP trajectory must replay");
+    assert_eq!(
+        async_tau2_trajectory(),
+        async_tau2_trajectory(),
+        "async trajectory must replay"
+    );
+    assert_ne!(
+        bsp_trajectory(),
+        async_tau2_trajectory(),
+        "τ=2 staleness must perturb the trajectory relative to BSP"
+    );
+}
+
+// ---------------------------------------------------------------------
+// HLO path (PJRT bridge; compiled only with the `xla` feature)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod hlo {
+    use super::*;
+    use ddl::runtime::exec::ParamPack;
+    use ddl::runtime::Runtime;
+    use std::path::Path;
+
+    fn artifacts_dir() -> Option<&'static Path> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn quickstart_runs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut lines = Vec::new();
+        ddl::coordinator::quickstart::run_quickstart(dir, &mut |s| lines.push(s.to_string()))
+            .expect("quickstart should succeed");
+        assert!(lines.iter().any(|l| l.contains("quickstart OK")));
+    }
+
+    /// Train on planted-dictionary data with inference + update both on the
+    /// HLO path; the representation loss must drop.
+    #[test]
+    fn hlo_training_loop_reduces_loss() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::new(dir).unwrap();
+        let infer = rt.load_infer("quickstart_infer").unwrap();
+        let (n, m) = (infer.info.n, infer.info.m);
+
+        // The update artifact shapes must match quickstart's; otherwise use the
+        // native update (still an end-to-end inference test).
+        let update =
+            rt.load_update("denoise_update").ok().filter(|u| u.info.n == n && u.info.m == m);
+
+        let mut rng = Pcg64::new(0xE2E);
+        let planted =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let sample = |rng: &mut Pcg64| -> Vec<f32> {
+            let mut x = vec![0.0f32; m];
+            for _ in 0..2 {
+                let q = rng.next_below(n as u64) as usize;
+                ddl::math::vector::axpy(0.5 + rng.next_f32(), &planted.atom(q), &mut x);
+            }
+            x
+        };
+
+        let mut dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::ErdosRenyi { p: 0.5 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let at = a.transpose();
+        let theta = vec![1.0 / n as f32; n];
+        let task = TaskSpec::SparseCoding { gamma: 0.05, delta: 0.2 };
+        let pack = ParamPack::from_task(&task, n, 0.3);
+        let mu_w = 0.05f32;
+
+        let loss = |dict: &DistributedDictionary, xs: &[Vec<f32>]| -> f32 {
+            xs.iter()
+                .map(|x| {
+                    let out = infer
+                        .run(&dict.mat().transpose(), x, &at, &theta, pack)
+                        .unwrap();
+                    let wy = dict.mat().matvec(&out.y).unwrap();
+                    let r = ddl::math::vector::sub(x, &wy);
+                    task.f_loss(&r)
+                })
+                .sum::<f32>()
+        };
+
+        let probe: Vec<Vec<f32>> = (0..8).map(|_| sample(&mut rng)).collect();
+        let before = loss(&dict, &probe);
+
+        for _ in 0..120 {
+            let x = sample(&mut rng);
+            let out = infer.run(&dict.mat().transpose(), &x, &at, &theta, pack).unwrap();
+            let nu = out.v.row(0).to_vec(); // any agent's estimate post-consensus
+            match &update {
+                Some(u) => {
+                    let wt2 = u.run(&dict.mat().transpose(), &nu, &out.y, mu_w).unwrap();
+                    *dict.mat_mut() = wt2.transpose();
+                }
+                None => {
+                    for k in 0..n {
+                        dict.block_gradient_step(k, mu_w, &nu, &out.y);
+                        dict.project_block(k, task.atom_constraint());
+                    }
                 }
             }
         }
+        let after = loss(&dict, &probe);
+        assert!(
+            after < 0.8 * before,
+            "HLO training loop did not reduce loss: {before} → {after}"
+        );
     }
-    let after = loss(&dict, &probe);
-    assert!(
-        after < 0.8 * before,
-        "HLO training loop did not reduce loss: {before} → {after}"
-    );
 }

@@ -339,6 +339,105 @@ fn serve_traced_matches_untraced() {
     }
 }
 
+/// Convergence freeze/thaw instrumentation: with the detector freezing
+/// mid-stream, tracing must not perturb the freeze point, the frozen-batch
+/// count, or any downstream bit — on the serial loop, the static pipeline,
+/// and the adaptive pipeline (where the frozen update-slot discount feeds
+/// the virtual clock the controllers read). Also pins that the
+/// `freeze` / `thaw` / `drift_norm` instants actually reach an exported
+/// trace.
+#[test]
+fn convergence_traced_matches_untraced() {
+    let base = |pipeline: bool, adaptive: bool| {
+        let mut cfg = ServeConfig {
+            seed: 0x0B60,
+            agents: 30,
+            dim: 10,
+            topology: "ring".into(),
+            ring_k: 2,
+            batch: 4,
+            max_wait_us: 500,
+            samples: 48,
+            rate: 0.0,
+            mu_w: 0.05,
+            pipeline,
+            pipeline_depth: 2,
+            infer: InferenceConfig { mu: 0.4, iters: 8, gamma: 0.08, delta: 0.2, threads: 1 },
+            control: if adaptive {
+                ControlConfig {
+                    enabled: true,
+                    slo_p99_ms: 10.0,
+                    tick_us: 2_000,
+                    batch_min: 1,
+                    batch_max: 8,
+                    wait_min_us: 0,
+                    wait_max_us: 5_000,
+                    window: 64,
+                    svc_base_us: 800,
+                    svc_per_sample_us: 150,
+                    ..ControlConfig::default()
+                }
+            } else {
+                ControlConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        // Freeze early and reliably: any drift counts as converged.
+        cfg.convergence.tol = 10.0;
+        cfg.convergence.window = 2;
+        cfg.convergence.max_no_improvement = 1;
+        cfg
+    };
+
+    for (label, pipeline, adaptive) in
+        [("serial", false, false), ("pipelined", true, false), ("adaptive", true, true)]
+    {
+        let cfg = base(pipeline, adaptive);
+        let (r_plain, d_plain) = run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+        assert!(r_plain.frozen_batches > 0, "{label}: freeze must fire under tol = 10");
+
+        let mut traced_cfg = cfg.clone();
+        traced_cfg.obs.enabled = true; // recorder on, no trace path → no IO
+        let (r_obs, d_obs) = run_service_with_dict(&traced_cfg, &mut |_| {}).unwrap();
+
+        assert_eq!(
+            d_plain.mat().as_slice(),
+            d_obs.mat().as_slice(),
+            "{label}: final dictionary must be bit-identical"
+        );
+        assert_eq!(r_plain.conv_events, r_obs.conv_events, "{label}: freeze/thaw trace");
+        assert_eq!(r_plain.frozen_batches, r_obs.frozen_batches, "{label}: frozen batches");
+        assert_eq!(r_plain.batches, r_obs.batches, "{label}: batches");
+        assert_eq!(r_plain.stats, r_obs.stats, "{label}: ψ-traffic MessageStats");
+        assert_eq!(
+            r_plain.loss_last_quarter.to_bits(),
+            r_obs.loss_last_quarter.to_bits(),
+            "{label}: last-quarter loss"
+        );
+        assert_eq!(r_plain.decisions, r_obs.decisions, "{label}: controller decision trace");
+        if adaptive {
+            assert_eq!(
+                r_plain.throughput_rps.to_bits(),
+                r_obs.throughput_rps.to_bits(),
+                "{label}: virtual throughput (frozen slots discount the same way)"
+            );
+        }
+    }
+
+    // The instants land in an exported trace under their contract names.
+    let mut cfg = base(false, false);
+    cfg.obs.enabled = true;
+    let path = std::env::temp_dir().join("ddl_conv_obs_parity.jsonl");
+    cfg.obs.trace_path = Some(path.to_string_lossy().into_owned());
+    cfg.obs.format = "jsonl".into();
+    run_service_with_dict(&cfg, &mut |_| {}).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"freeze\""), "freeze instant missing from trace");
+    assert!(text.contains("\"drift_norm\""), "drift_norm instants missing from trace");
+    ddl::obs::check_jsonl(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
 /// Serve fault paths: bounded admission (overflow sheds, `queue_shed`
 /// instants) and a mid-stream worker death (`worker_death` /
 /// `batch_redispatch` instants) — tracing must not perturb the shed
