@@ -34,6 +34,21 @@
 //!   bar ([`ddl::coordinator::run_byzantine`]);
 //! * `chaos_byzantine_replay_bitwise` — **1.0** when both attacked runs
 //!   replay bit-identically under the identical Byzantine schedule.
+//! * `chaos_detection_excludes_colluders` — **1.0** when, under f = 2
+//!   *adjacent colluding* sign-flip attackers on the k = 2 ring
+//!   (`--byzantine-agents --detect`), the reputation layer flags and
+//!   excludes both colluders, the detection-defended run lands within
+//!   1e-3 MSD of its own clean defended trajectory (where `TrimmedMean(1)`
+//!   masking alone stays biased), and the detection pass replays
+//!   bit-identically — flagged/excluded sets included (PR 10 acceptance);
+//! * `chaos_detection_zero_false_positives` — **1.0** when the clean run
+//!   with detection armed is bitwise the clean defended run and records
+//!   zero flags and zero exclusions;
+//! * `serve_poison_quarantine_recovers` — **1.0** when a poisoned serve
+//!   session (`ddl serve --poison`) quarantines the corrupted samples
+//!   before the Eq. 51 update and its tail loss stays well below the
+//!   unscreened run, a zero-poison stream is never quarantined, and the
+//!   poisoned defended session replays bit-identically.
 //!
 //! Wall-clock cost of the fault-injected discrete-event core is timed as
 //! `chaos DES ring (churn)` — agent-iterations/s with an 8-window churn
@@ -43,7 +58,7 @@
 //! Pass `--fast` (or `BENCH_FAST=1`) for the CI smoke configuration.
 
 use ddl::bench::Bencher;
-use ddl::config::experiment::AsyncConfig;
+use ddl::config::experiment::{AsyncConfig, ServeConfig};
 use ddl::coordinator::{run_byzantine, run_chaos, run_pushsum_bias};
 use ddl::graph::{metropolis_weights, Graph, Topology};
 use ddl::infer::DiffusionParams;
@@ -117,6 +132,77 @@ fn main() {
     derived.push((
         "chaos_byzantine_replay_bitwise".to_string(),
         if byz.replay_bitwise { 1.0 } else { 0.0 },
+    ));
+
+    // Detection probe (PR 10 acceptance): f = 2 adjacent colluding
+    // sign-flip attackers on the k = 2 ring, detection armed on top of
+    // TrimmedMean(1). Honest judges between the colluders see both at
+    // once, so masking alone leaks one of them into every combine;
+    // detection excludes the pair and recovers.
+    let mut det_cfg = cfg.clone();
+    det_cfg.agents = if fast { 24 } else { 50 };
+    det_cfg.ring_k = 2;
+    det_cfg.infer.iters = if fast { 600 } else { 1000 };
+    det_cfg.chaos.byzantine_agents = "5,6".to_string();
+    det_cfg.chaos.byzantine_policy = "sign-flip".to_string();
+    det_cfg.chaos.detect = true;
+    let det = run_byzantine(&det_cfg, &mut |s| println!("{s}")).unwrap();
+    println!("{}", det.summary());
+    let colluders_out = det.flagged.contains(&5)
+        && det.flagged.contains(&6)
+        && det.excluded.contains(&5)
+        && det.excluded.contains(&6);
+    derived.push((
+        "chaos_detection_excludes_colluders".to_string(),
+        if colluders_out && det.detect_gap <= 1e-3 && det.detect_replay_bitwise {
+            1.0
+        } else {
+            0.0
+        },
+    ));
+    derived.push((
+        "chaos_detection_zero_false_positives".to_string(),
+        if det.detect_zero_fp { 1.0 } else { 0.0 },
+    ));
+
+    // Serve data-poisoning probe (`ddl serve --poison`): the robust
+    // norm-outlier screen quarantines the corrupted samples before the
+    // Eq. 51 update; the unscreened run's tail loss shows what they
+    // would have done; a zero-poison stream is never quarantined and the
+    // defended session replays bit-identically.
+    let mut sp = ServeConfig {
+        samples: if fast { 96 } else { 240 },
+        rate: 0.0,
+        ..ServeConfig::default()
+    };
+    sp.infer.iters = if fast { 30 } else { 60 };
+    sp.mu_w = 0.08;
+    sp.poison = true;
+    sp.poison_frac = 0.2;
+    let defended = ddl::serve::run_service(&sp, &mut |s| println!("{s}")).unwrap();
+    let mut unscreened = sp.clone();
+    unscreened.poison_screen = false;
+    let undefended = ddl::serve::run_service(&unscreened, &mut |_| {}).unwrap();
+    let mut zero = sp.clone();
+    zero.poison_frac = 0.0;
+    let zfp = ddl::serve::run_service(&zero, &mut |_| {}).unwrap();
+    let replayed = ddl::serve::run_service(&sp, &mut |_| {}).unwrap();
+    println!(
+        "poison probe: defended quarantined {} (tail loss {:.3e}) vs unscreened {:.3e}; \
+         zero-poison quarantined {}",
+        defended.quarantined,
+        defended.loss_last_quarter,
+        undefended.loss_last_quarter,
+        zfp.quarantined,
+    );
+    let poison_ok = defended.quarantined > 0
+        && undefended.loss_last_quarter > 2.0 * defended.loss_last_quarter
+        && zfp.quarantined == 0
+        && replayed.quarantined == defended.quarantined
+        && replayed.loss_last_quarter.to_bits() == defended.loss_last_quarter.to_bits();
+    derived.push((
+        "serve_poison_quarantine_recovers".to_string(),
+        if poison_ok { 1.0 } else { 0.0 },
     ));
 
     // Cost of the fault-injected DES machinery itself: same shape as the

@@ -390,6 +390,25 @@ pub struct ServeConfig {
     pub field_width: f32,
     /// Per-sensor observation noise σ (`field` stream).
     pub field_noise: f32,
+    /// Data poisoning (`ddl serve --poison`): corrupt a seed-derived
+    /// fraction of inbound sample vectors with large additive noise
+    /// *after* stream generation, from a dedicated RNG stream — the
+    /// arrival process and honest sample bits are untouched, so a
+    /// `poison_frac = 0` run is bit-identical to an unpoisoned one.
+    pub poison: bool,
+    /// Fraction of stream samples the poisoner corrupts.
+    pub poison_frac: f64,
+    /// Scale of the additive Gaussian corruption per coordinate.
+    pub poison_scale: f32,
+    /// Robust norm-outlier screen in the batch former: quarantine
+    /// poisoned samples before they reach the Eq. 51 update
+    /// (`serve/queue.rs::screen_batch`). Only meaningful with
+    /// [`Self::poison`]; on by default so `--poison` is defended unless
+    /// the screen is explicitly disabled (the undefended comparison run).
+    pub poison_screen: bool,
+    /// Screen aggressiveness `z`: threshold = median + max(z·1.4826·MAD,
+    /// 0.5·median) over the post-poison stream norms.
+    pub poison_screen_z: f64,
     /// Convergence detector (`[convergence]` TOML block, `--conv-tol`).
     pub convergence: ConvergenceConfig,
     /// Feedback control plane (`[control]` TOML block, `--adaptive`).
@@ -425,6 +444,11 @@ impl Default for ServeConfig {
             field_sources: 3,
             field_width: 0.15,
             field_noise: 0.02,
+            poison: false,
+            poison_frac: 0.08,
+            poison_scale: 25.0,
+            poison_screen: true,
+            poison_screen_z: 6.0,
             convergence: ConvergenceConfig::default(),
             control: ControlConfig::default(),
             obs: ObsConfig::default(),
@@ -471,6 +495,13 @@ impl ServeConfig {
         c.field_sources = doc.usize_or("serve", "field_sources", c.field_sources).max(1);
         c.field_width = doc.f32_or("serve", "field_width", c.field_width);
         c.field_noise = doc.f32_or("serve", "field_noise", c.field_noise);
+        c.poison = doc.bool_or("serve", "poison", c.poison);
+        c.poison_frac =
+            (doc.f32_or("serve", "poison_frac", c.poison_frac as f32) as f64).clamp(0.0, 1.0);
+        c.poison_scale = doc.f32_or("serve", "poison_scale", c.poison_scale);
+        c.poison_screen = doc.bool_or("serve", "poison_screen", c.poison_screen);
+        c.poison_screen_z =
+            (doc.f32_or("serve", "poison_screen_z", c.poison_screen_z as f32) as f64).max(0.0);
         c.convergence = ConvergenceConfig::from_toml(doc);
         c.control = ControlConfig::from_toml(doc);
         c.obs = ObsConfig::from_toml(doc);
@@ -524,6 +555,32 @@ pub struct ChaosConfig {
     /// `constant` | `colluding-offset` (unit parameters; see
     /// [`crate::net::CorruptPolicy`]).
     pub byzantine_policy: String,
+    /// Colluding attacker set (f > 1): comma-separated agent indices, e.g.
+    /// `byzantine_agents = "3,7"`. Every listed agent transmits under the
+    /// same [`Self::byzantine_policy`] for the whole run. Merged with
+    /// [`Self::byzantine_agent`] (either spelling works; both together
+    /// dedup). Empty (default) = use `byzantine_agent` alone.
+    pub byzantine_agents: String,
+    /// Detection-and-exclusion layer over the resilient combine
+    /// (`--detect`): per-neighbor reputation scores accumulate
+    /// trimmed-tail + distance evidence each combine; past
+    /// [`Self::detect_exclude_after`] consecutive strikes the neighbor is
+    /// excluded and its weight renormalized away. Pure function of
+    /// (config, sim-time, ψ bits) — zero RNG draws — so detection runs
+    /// replay bit-identically and a zero-attacker detection run is
+    /// bitwise the detection-off run.
+    pub detect: bool,
+    /// Consecutive evidence strikes before a neighbor is flagged
+    /// (observability only; exclusion is the enforcement step).
+    pub detect_flag_after: usize,
+    /// Consecutive evidence strikes before a neighbor is excluded.
+    pub detect_exclude_after: usize,
+    /// Probation: re-admit an excluded neighbor after this much sim-time
+    /// (µs) with a clean slate; `0` (default) = exclusion is permanent.
+    pub detect_probation_us: u64,
+    /// Local iterations before the evidence pass arms (the transient
+    /// phase looks anomalous to any distance statistic).
+    pub detect_warmup: usize,
 }
 
 impl Default for ChaosConfig {
@@ -540,6 +597,12 @@ impl Default for ChaosConfig {
             pushsum: "auto".into(),
             byzantine_agent: None,
             byzantine_policy: "sign-flip".into(),
+            byzantine_agents: String::new(),
+            detect: false,
+            detect_flag_after: 6,
+            detect_exclude_after: 12,
+            detect_probation_us: 0,
+            detect_warmup: 8,
         }
     }
 }
@@ -571,7 +634,60 @@ impl ChaosConfig {
         }
         c.byzantine_policy =
             doc.str_or("chaos", "byzantine_policy", &c.byzantine_policy).to_string();
+        c.byzantine_agents =
+            doc.str_or("chaos", "byzantine_agents", &c.byzantine_agents).to_string();
+        c.detect = doc.bool_or("chaos", "detect", c.detect);
+        c.detect_flag_after =
+            doc.usize_or("chaos", "detect_flag_after", c.detect_flag_after).max(1);
+        c.detect_exclude_after = doc
+            .usize_or("chaos", "detect_exclude_after", c.detect_exclude_after)
+            .max(c.detect_flag_after);
+        c.detect_probation_us =
+            doc.usize_or("chaos", "detect_probation_us", c.detect_probation_us as usize) as u64;
+        c.detect_warmup = doc.usize_or("chaos", "detect_warmup", c.detect_warmup);
         c
+    }
+
+    /// The full colluding attacker set: [`Self::byzantine_agents`] parsed
+    /// as comma-separated indices, merged with [`Self::byzantine_agent`],
+    /// sorted and deduped. A malformed entry is a config error, not a
+    /// silently-shrunk attacker set.
+    pub fn byzantine_set(&self) -> crate::Result<Vec<usize>> {
+        let mut set: Vec<usize> = Vec::new();
+        if let Some(k) = self.byzantine_agent {
+            set.push(k);
+        }
+        for tok in self.byzantine_agents.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let k: usize = tok.parse().map_err(|_| {
+                crate::DdlError::Config(format!(
+                    "chaos.byzantine_agents: bad agent index '{tok}' in '{}'",
+                    self.byzantine_agents
+                ))
+            })?;
+            set.push(k);
+        }
+        set.sort_unstable();
+        set.dedup();
+        Ok(set)
+    }
+
+    /// Materialize the executor-facing detection configuration: the
+    /// score-law thresholds stay at the library defaults
+    /// ([`crate::net::DetectionConfig::default`]); the ladder lengths,
+    /// probation, and warmup come from this config.
+    pub fn detection(&self) -> crate::net::DetectionConfig {
+        crate::net::DetectionConfig {
+            enabled: self.detect,
+            flag_after: self.detect_flag_after,
+            exclude_after: self.detect_exclude_after,
+            probation_us: self.detect_probation_us,
+            warmup_iters: self.detect_warmup,
+            ..crate::net::DetectionConfig::default()
+        }
     }
 
     /// Parse [`Self::pushsum`] into the executor's combine selector.
@@ -1265,6 +1381,76 @@ mod tests {
         assert_eq!(trim.combine_mode().unwrap(), crate::net::CombineMode::TrimmedMean(2));
         let bad_trim = ChaosConfig { pushsum: "trimmed:x".into(), ..ChaosConfig::default() };
         assert!(bad_trim.combine_mode().is_err());
+    }
+
+    /// Round trip for the detection / collusion knobs: the colluding set
+    /// parses, merges with the single-attacker spelling, and dedups; a
+    /// malformed index is a typed config error; detection defaults off
+    /// with the library score-law thresholds.
+    #[test]
+    fn chaos_detection_and_collusion_round_trip() {
+        let d = ChaosConfig::default();
+        assert!(!d.detect, "detection must be opt-in");
+        assert_eq!(d.byzantine_agents, "");
+        assert!(d.byzantine_set().unwrap().is_empty());
+        assert!(!d.detection().enabled);
+        assert_eq!(d.detection().flag_after, 6);
+        assert_eq!(d.detection().exclude_after, 12);
+        assert_eq!(d.detection().warmup_iters, 8);
+        let doc = TomlDoc::parse(
+            "[chaos]\nenabled = true\nbyzantine_agent = 7\nbyzantine_agents = \"3, 7,12\"\n\
+             detect = true\ndetect_flag_after = 4\ndetect_exclude_after = 9\n\
+             detect_probation_us = 5000\ndetect_warmup = 3\n",
+        )
+        .unwrap();
+        let c = ChaosConfig::from_toml(&doc);
+        assert_eq!(c.byzantine_set().unwrap(), vec![3, 7, 12], "merged, sorted, deduped");
+        assert!(c.detect);
+        let det = c.detection();
+        assert!(det.enabled);
+        assert_eq!(det.flag_after, 4);
+        assert_eq!(det.exclude_after, 9);
+        assert_eq!(det.probation_us, 5_000);
+        assert_eq!(det.warmup_iters, 3);
+        det.validate().unwrap();
+        let bad =
+            ChaosConfig { byzantine_agents: "3,x".into(), ..ChaosConfig::default() };
+        assert!(bad.byzantine_set().is_err());
+        // exclude_after is clamped to >= flag_after at load time.
+        let clamped = ChaosConfig::from_toml(
+            &TomlDoc::parse("[chaos]\ndetect_flag_after = 10\ndetect_exclude_after = 2\n")
+                .unwrap(),
+        );
+        assert!(clamped.detect_exclude_after >= clamped.detect_flag_after);
+    }
+
+    /// Round trip for the serve poisoning knobs; poisoning defaults off
+    /// and the screen defaults on (a `--poison` run is defended unless
+    /// the screen is explicitly disabled).
+    #[test]
+    fn serve_poison_toml_round_trip() {
+        let d = ServeConfig::default();
+        assert!(!d.poison, "poisoning must be opt-in");
+        assert!(d.poison_screen, "screen defends by default");
+        assert!((d.poison_frac - 0.08).abs() < 1e-9);
+        assert!((d.poison_scale - 25.0).abs() < 1e-6);
+        assert!((d.poison_screen_z - 6.0).abs() < 1e-9);
+        let doc = TomlDoc::parse(
+            "[serve]\npoison = true\npoison_frac = 0.2\npoison_scale = 10.0\n\
+             poison_screen = false\npoison_screen_z = 4.0\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc);
+        assert!(c.poison);
+        assert!((c.poison_frac - 0.2).abs() < 1e-6);
+        assert!((c.poison_scale - 10.0).abs() < 1e-6);
+        assert!(!c.poison_screen);
+        assert!((c.poison_screen_z - 4.0).abs() < 1e-6);
+        // The fraction is clamped into [0, 1].
+        let wild = ServeConfig::from_toml(
+            &TomlDoc::parse("[serve]\npoison_frac = 7.0\n").unwrap(),
+        );
+        assert_eq!(wild.poison_frac, 1.0);
     }
 
     #[test]

@@ -133,6 +133,7 @@ impl ChaosReport {
              completion: clean {:.4} s, chaos {:.4} s; combine {:?}{}; {} fault windows\n\
              degradation: {} dropped, {} retries, {} abandoned, {} crash deferrals, \
              {} forced combines, {} stale fallbacks, {} exclusions, {} corrupted\n\
+             detection: {} flagged, {} excluded, {} readmitted\n\
              replay bit-identical: {}; empty schedule bitwise fault-free: {}\n\
              traffic: {} msgs, {:.2} MB, {} rounds, {:.1} B/agent/round, max staleness {}",
             self.recovery_gap,
@@ -149,6 +150,9 @@ impl ChaosReport {
             self.chaos_stats.stale_fallbacks,
             self.chaos_stats.excluded_neighbors,
             self.chaos_stats.corrupted,
+            self.chaos_stats.flagged,
+            self.chaos_stats.detect_excluded,
+            self.chaos_stats.readmitted,
             self.replay_bitwise,
             self.empty_parity,
             self.stats.messages,
@@ -195,13 +199,14 @@ fn build_schedule(c: &ChaosConfig, graph: &Graph, horizon_us: u64) -> Result<Fau
     if c.drop_prob > 0.0 {
         s = s.with_drops(c.drop_prob, 0, t);
     }
-    if let Some(k) = c.byzantine_agent {
-        if k >= n {
-            return Err(DdlError::Config(format!(
-                "chaos.byzantine_agent = {k} out of range for N = {n}"
-            )));
-        }
-        s = s.with_byzantine(k, c.corrupt_policy()?, 0, t);
+    let byz = c.byzantine_set()?;
+    if let Some(&k) = byz.iter().find(|&&k| k >= n) {
+        return Err(DdlError::Config(format!(
+            "chaos byzantine agent {k} out of range for N = {n}"
+        )));
+    }
+    if !byz.is_empty() {
+        s = s.with_colluders(&byz, c.corrupt_policy()?, 0, t);
     }
     s.validate(n)?;
     Ok(s)
@@ -271,7 +276,8 @@ pub fn run_chaos(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<ChaosRe
         chaos: schedule.clone(),
         combine: mode,
         ..base.clone()
-    };
+    }
+    .with_detect(cfg.chaos.detection());
     let mut chaos_net =
         AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, chaos_params.clone())?;
     let mut clean_net =
@@ -494,11 +500,14 @@ pub fn run_pushsum_bias(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<
 }
 
 /// Outcome of the Byzantine attack/defense probe ([`run_byzantine`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ByzantineReport {
-    /// Agent whose *outbound* ψ messages are corrupted.
+    /// First attacker of the colluding set (legacy single-attacker view).
     pub attacker: usize,
-    /// Corruption policy the attacker applies.
+    /// Full colluding set whose *outbound* ψ messages are corrupted
+    /// (`[chaos] byzantine_agent` ∪ `byzantine_agents`).
+    pub attackers: Vec<usize>,
+    /// Corruption policy every colluder applies.
     pub policy: CorruptPolicy,
     /// Resilient combine used by the defended runs.
     pub defense: CombineMode,
@@ -521,6 +530,28 @@ pub struct ByzantineReport {
     pub replay_bitwise: bool,
     /// Corrupted ψ messages the defended run absorbed.
     pub corrupted: usize,
+    /// Was the detection layer armed (`[chaos] detect = true`)?
+    pub detect: bool,
+    /// Converged MSD of the detection-defended run under attack (NaN
+    /// when detection is off).
+    pub msd_detected: f64,
+    /// `|msd_detected − msd_clean_defended|` — how far the attack moves
+    /// the *detection-defended* trajectory from the clean defended fixed
+    /// point (NaN when detection is off).
+    pub detect_gap: f64,
+    /// Suspects flagged by at least one honest judge in the detection
+    /// pass (empty when detection is off).
+    pub flagged: Vec<usize>,
+    /// Suspects excluded by at least one judge in the detection pass.
+    pub excluded: Vec<usize>,
+    /// Zero-false-positive contract: the clean run with detection armed
+    /// is bitwise the clean defended run and records no flags or
+    /// exclusions. Vacuously true when detection is off.
+    pub detect_zero_fp: bool,
+    /// Did the detection pass replay bit-identically — same MSD bits,
+    /// clocks, stats, and the same flagged/excluded sets? Vacuously true
+    /// when detection is off.
+    pub detect_replay_bitwise: bool,
 }
 
 impl ByzantineReport {
@@ -539,13 +570,13 @@ impl ByzantineReport {
     /// Multi-line human-readable summary (the `ddl chaos --byzantine`
     /// output body).
     pub fn summary(&self) -> String {
-        format!(
-            "byzantine probe: attacker {} ({}), defense {:?}\n\
+        let mut out = format!(
+            "byzantine probe: attackers {:?} ({}), defense {:?}\n\
              clean: metropolis {:.3e}, defended {:.3e}\n\
              under attack: metropolis {:.3e} ({}), defended {:.3e}\n\
              defense gap vs clean defended: {:.3e}; {} corrupted messages\n\
              replay bit-identical: {}",
-            self.attacker,
+            self.attackers,
             self.policy.name(),
             self.defense,
             self.msd_clean,
@@ -560,7 +591,22 @@ impl ByzantineReport {
             self.defense_gap,
             self.corrupted,
             self.replay_bitwise,
-        )
+        );
+        if self.detect {
+            out.push_str(&format!(
+                "\ndetection: flagged {:?}, excluded {:?}; detected msd {:.3e}, \
+                 gap vs clean defended {:.3e}\n\
+                 detection zero false positives on clean run: {}; \
+                 detection replay bit-identical: {}",
+                self.flagged,
+                self.excluded,
+                self.msd_detected,
+                self.detect_gap,
+                self.detect_zero_fp,
+                self.detect_replay_bitwise,
+            ));
+        }
+        out
     }
 }
 
@@ -591,10 +637,16 @@ pub fn run_byzantine(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<Byz
     let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000)?;
 
     let n = graph.n();
-    let attacker = cfg.chaos.byzantine_agent.unwrap_or(0);
-    if attacker >= n {
+    let attackers = {
+        let mut a = cfg.chaos.byzantine_set()?;
+        if a.is_empty() {
+            a.push(0);
+        }
+        a
+    };
+    if let Some(&k) = attackers.iter().find(|&&k| k >= n) {
         return Err(DdlError::Config(format!(
-            "chaos.byzantine_agent = {attacker} out of range for N = {n}"
+            "chaos byzantine agent {k} out of range for N = {n}"
         )));
     }
     let policy = cfg.chaos.corrupt_policy()?;
@@ -602,51 +654,87 @@ pub fn run_byzantine(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<Byz
         m @ (CombineMode::Median | CombineMode::TrimmedMean(_)) => m,
         _ => CombineMode::TrimmedMean(1),
     };
+    let det = cfg.chaos.detection();
     let schedule =
-        FaultSchedule::new(cfg.chaos.seed).with_byzantine(attacker, policy, 0, u64::MAX);
+        FaultSchedule::new(cfg.chaos.seed).with_colluders(&attackers, policy, 0, u64::MAX);
     log(&format!(
-        "byzantine probe: attacker {attacker} applies {} for the whole run; defense {defense:?}",
+        "byzantine probe: attackers {attackers:?} apply {} for the whole run; defense \
+         {defense:?}{}",
         policy.name(),
+        if det.enabled { ", detection armed" } else { "" },
     ));
 
-    // Trace only the defended attacked run — the instance whose
-    // psi_corrupt / combine_trimmed events tell the story. Replay
-    // instances stay untraced (traced ≡ untraced is proven elsewhere).
+    // Trace only the attacked run whose events tell the story: the
+    // detection pass when armed (agent_flagged / agent_excluded), else
+    // the masking-only defended pass (psi_corrupt / combine_trimmed).
+    // Replay instances stay untraced (traced ≡ untraced is proven
+    // elsewhere).
     let obs = crate::obs::handle_for(&cfg.obs);
-    let mut run = |combine: CombineMode,
-                   chaos: FaultSchedule,
-                   trace: bool|
-     -> Result<(f64, u64, ChaosStats, MessageStats)> {
-        let mut net = AsyncNetwork::new(
-            graph.clone(),
-            weights.clone(),
-            cfg.dim,
-            None,
-            AsyncParams { chaos, combine, ..base.clone() },
-        )?;
-        if trace {
-            net.attach_obs(obs.clone());
-        }
-        net.run(&dict, &task, &x, params)?;
-        Ok((net.msd_vs(&exact.nu), net.sim_time_us(), net.chaos_stats(), net.stats()))
+    type Pass = (f64, u64, ChaosStats, MessageStats, Vec<usize>, Vec<usize>);
+    let mut run =
+        |combine: CombineMode, chaos: FaultSchedule, detect: bool, trace: bool| -> Result<Pass> {
+            let mut p = AsyncParams { chaos, combine, ..base.clone() };
+            if detect {
+                p = p.with_detect(det);
+            }
+            let mut net = AsyncNetwork::new(graph.clone(), weights.clone(), cfg.dim, None, p)?;
+            if trace {
+                net.attach_obs(obs.clone());
+            }
+            net.run(&dict, &task, &x, params)?;
+            Ok((
+                net.msd_vs(&exact.nu),
+                net.sim_time_us(),
+                net.chaos_stats(),
+                net.stats(),
+                net.flagged_suspects(),
+                net.excluded_suspects(),
+            ))
+        };
+    let eq = |a: &Pass, b: &Pass| {
+        a.0.to_bits() == b.0.to_bits() && a.1 == b.1 && a.2 == b.2 && a.3 == b.3 && a.4 == b.4
+            && a.5 == b.5
     };
     let empty = || FaultSchedule::new(cfg.chaos.seed);
-    let (msd_clean, ..) = run(CombineMode::Metropolis, empty(), false)?;
-    let (msd_clean_defended, ..) = run(defense, empty(), false)?;
-    let attacked_u = run(CombineMode::Metropolis, schedule.clone(), false)?;
-    let attacked_d = run(defense, schedule.clone(), true)?;
+    let (msd_clean, ..) = run(CombineMode::Metropolis, empty(), false, false)?;
+    let clean_d = run(defense, empty(), false, false)?;
+    let msd_clean_defended = clean_d.0;
+    let attacked_u = run(CombineMode::Metropolis, schedule.clone(), false, false)?;
+    let attacked_d = run(defense, schedule.clone(), false, !det.enabled)?;
     log(&format!(
         "byzantine probe: undefended {:.3e}, defended {:.3e} (clean {:.3e} / {:.3e})",
         attacked_u.0, attacked_d.0, msd_clean, msd_clean_defended,
     ));
 
-    // Replay contract: both attacked runs reproduce bit-for-bit.
-    let replay_u = run(CombineMode::Metropolis, schedule.clone(), false)?;
-    let replay_d = run(defense, schedule, false)?;
-    let eq = |a: &(f64, u64, ChaosStats, MessageStats), b: &(f64, u64, ChaosStats, MessageStats)| {
-        a.0.to_bits() == b.0.to_bits() && a.1 == b.1 && a.2 == b.2 && a.3 == b.3
+    // Detection passes (`--detect`): the clean run with detection armed
+    // must be bitwise the clean defended run with zero flags (the
+    // zero-false-positive contract), and the attacked detection run —
+    // the traced instance — yields the detected MSD and evidence sets.
+    let (detect_zero_fp, attacked_det) = if det.enabled {
+        let clean_det = run(defense, empty(), true, false)?;
+        let zero_fp = eq(&clean_det, &clean_d) && clean_det.4.is_empty() && clean_det.5.is_empty();
+        let attacked_det = run(defense, schedule.clone(), true, true)?;
+        log(&format!(
+            "detection: msd {:.3e}, flagged {:?}, excluded {:?}, zero false positives {}",
+            attacked_det.0, attacked_det.4, attacked_det.5, zero_fp,
+        ));
+        (zero_fp, Some(attacked_det))
+    } else {
+        (true, None)
     };
+
+    // Replay contract: every attacked run reproduces bit-for-bit —
+    // including, for the detection pass, the flagged/excluded sets.
+    let replay_u = run(CombineMode::Metropolis, schedule.clone(), false, false)?;
+    let replay_d = run(defense, schedule.clone(), false, false)?;
     let replay_bitwise = eq(&attacked_u, &replay_u) && eq(&attacked_d, &replay_d);
+    let detect_replay_bitwise = match &attacked_det {
+        Some(det_pass) => {
+            let replay_det = run(defense, schedule, true, false)?;
+            eq(det_pass, &replay_det)
+        }
+        None => true,
+    };
 
     if let Some(events) = crate::obs::export(&cfg.obs, &obs)? {
         log(&format!(
@@ -655,8 +743,13 @@ pub fn run_byzantine(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<Byz
         ));
     }
 
+    let (msd_detected, detect_gap, flagged, excluded) = match attacked_det {
+        Some(p) => (p.0, (p.0 - msd_clean_defended).abs(), p.4, p.5),
+        None => (f64::NAN, f64::NAN, Vec::new(), Vec::new()),
+    };
     Ok(ByzantineReport {
-        attacker,
+        attacker: attackers[0],
+        attackers,
         policy,
         defense,
         msd_clean,
@@ -666,6 +759,13 @@ pub fn run_byzantine(cfg: &AsyncConfig, log: &mut dyn FnMut(&str)) -> Result<Byz
         defense_gap: (attacked_d.0 - msd_clean_defended).abs(),
         replay_bitwise,
         corrupted: attacked_d.2.corrupted,
+        detect: det.enabled,
+        msd_detected,
+        detect_gap,
+        flagged,
+        excluded,
+        detect_zero_fp,
+        detect_replay_bitwise,
     })
 }
 
@@ -767,6 +867,11 @@ mod tests {
         let mut lines = Vec::new();
         let r = run_byzantine(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
         assert_eq!(r.attacker, 3);
+        assert_eq!(r.attackers, vec![3]);
+        assert!(!r.detect, "detection defaults off");
+        assert!(r.msd_detected.is_nan() && r.detect_gap.is_nan());
+        assert!(r.flagged.is_empty() && r.excluded.is_empty());
+        assert!(r.detect_zero_fp && r.detect_replay_bitwise, "vacuous when detection is off");
         assert_eq!(r.policy, CorruptPolicy::SignFlip, "default policy is sign-flip");
         assert_eq!(r.defense, CombineMode::TrimmedMean(1), "default defense trims one");
         assert!(r.corrupted > 0, "attack never fired");
@@ -784,6 +889,57 @@ mod tests {
         );
         assert!(r.msd_clean_defended.is_finite() && r.msd_defended.is_finite());
         assert!(!r.summary().is_empty());
+        assert!(!lines.is_empty());
+    }
+
+    #[test]
+    fn byzantine_colluders_detection_excludes_and_recovers() {
+        // f = 2 adjacent colluders on the k=2 ring: honest judges between
+        // them see *both* colluders among their neighbors, so
+        // TrimmedMean(1) masking alone trims only the more extreme one
+        // per coordinate and the other leaks into the mean — while
+        // detection excludes the pair (the leaker cascades once its
+        // partner is excluded and it becomes the sole tail extreme) and
+        // returns the defended trajectory to its clean fixed point.
+        let mut cfg = tiny_cfg();
+        cfg.ring_k = 2;
+        cfg.infer.iters = 800;
+        cfg.chaos.byzantine_agents = "3,4".into();
+        cfg.chaos.detect = true;
+        let mut lines = Vec::new();
+        let r = run_byzantine(&cfg, &mut |s| lines.push(s.to_string())).unwrap();
+        assert_eq!(r.attackers, vec![3, 4]);
+        assert_eq!(r.attacker, 3);
+        assert!(r.detect);
+        assert_eq!(r.defense, CombineMode::TrimmedMean(1));
+        assert!(r.corrupted > 0, "colluders never fired");
+        // Detection flags and excludes the full colluding set...
+        assert!(
+            r.excluded.contains(&3) && r.excluded.contains(&4),
+            "detection must exclude both colluders: excluded {:?}",
+            r.excluded
+        );
+        assert!(r.flagged.contains(&3) && r.flagged.contains(&4));
+        // ...with zero false positives on the clean run and a
+        // bit-identical replay of the exclusion sequence.
+        assert!(r.detect_zero_fp, "clean run with detection armed must stay bitwise clean");
+        assert!(r.detect_replay_bitwise, "detection pass must replay bit-identically");
+        assert!(r.replay_bitwise);
+        // The detection-defended run recovers to its clean fixed point;
+        // masking alone stays measurably biased under the collusion.
+        assert!(r.msd_detected.is_finite());
+        assert!(
+            r.detect_gap < 1e-3,
+            "detection should recover to the clean defended trajectory: gap {:.3e}",
+            r.detect_gap
+        );
+        assert!(
+            r.detect_gap < r.defense_gap,
+            "detection ({:.3e}) must beat masking alone ({:.3e}) under collusion",
+            r.detect_gap,
+            r.defense_gap
+        );
+        assert!(r.summary().contains("detection"));
         assert!(!lines.is_empty());
     }
 
@@ -812,11 +968,18 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.chaos.byzantine_agent = Some(2);
         cfg.chaos.pushsum = "trimmed:1".into();
+        cfg.chaos.detect = true;
         let r = run_chaos(&cfg, &mut |_| {}).unwrap();
-        assert!(r.replay_bitwise);
+        assert!(r.replay_bitwise, "detection state must replay inside run_chaos too");
         assert!(r.empty_parity);
         assert_eq!(r.combine, CombineMode::TrimmedMean(1));
         assert!(r.chaos_stats.corrupted > 0, "attack never fired inside run_chaos");
+        assert!(
+            r.chaos_stats.detect_excluded > 0,
+            "detection never excluded the attacker inside run_chaos: {:?}",
+            r.chaos_stats
+        );
+        assert!(r.summary(cfg.agents).contains("detection:"));
         // Bursty churn windows come from the Gilbert–Elliott generator.
         let mut cfg = tiny_cfg();
         cfg.chaos.churn_windows = 3;

@@ -938,6 +938,108 @@ pub fn resilient_combine(
     out
 }
 
+/// [`resilient_combine`] with the detection-and-exclusion scoring law of
+/// the async executor's `combine_resilient`, restated in matrix form —
+/// the BSP-side mirror used to unit-test the evidence rule without the
+/// event machinery. `scores` and `excluded` are `n × n` row-major
+/// reputation state (`[judge * n + suspect]`), carried by the caller
+/// across rounds; `iter` is the round index (the evidence pass arms at
+/// `det.warmup_iters`). Per judge the participants are itself plus every
+/// in-neighbor not yet excluded *by that judge*; the aggregate arithmetic
+/// is exactly [`resilient_combine`]'s (a separate augmented sort does the
+/// tail attribution), so with detection disabled — or enabled against
+/// zero attackers — the output is bit-for-bit `resilient_combine` over
+/// the same participant sets. Evidence per round requires all three
+/// [`crate::net::DetectionConfig`] conditions (trimmed-tail membership
+/// fraction, distance dominance over the median participant, distance
+/// significance against the aggregate's L1 scale); evidence increments
+/// the score, a clean round resets it, and crossing `exclude_after`
+/// excludes the suspect permanently (probation is a sim-time concept the
+/// round-indexed mirror does not model).
+#[allow(clippy::too_many_arguments)]
+pub fn resilient_combine_detect(
+    a: &Mat,
+    values: &[f32],
+    n: usize,
+    m: usize,
+    trim: Option<usize>,
+    iter: usize,
+    det: &crate::net::chaos::DetectionConfig,
+    scores: &mut [usize],
+    excluded: &mut [bool],
+) -> Vec<f32> {
+    assert_eq!(a.rows(), n);
+    assert_eq!(a.cols(), n);
+    assert_eq!(values.len(), n * m);
+    assert_eq!(scores.len(), n * n);
+    assert_eq!(excluded.len(), n * n);
+    let mut out = vec![0.0f32; n * m];
+    let mut scratch: Vec<(f32, f32)> = Vec::with_capacity(n);
+    let mut order: Vec<(f32, usize)> = Vec::with_capacity(n);
+    for k in 0..n {
+        let parts: Vec<(usize, f32)> = (0..n)
+            .filter_map(|l| {
+                let w = a.get(l, k);
+                if l == k || (w > 0.0 && !(det.enabled && excluded[k * n + l])) {
+                    Some((l, w))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let pn = parts.len();
+        let cap = pn.saturating_sub(1) / 2;
+        let g = trim.map_or(cap, |f| f.min(cap));
+        let score_pass = det.enabled && pn > 1 && iter >= det.warmup_iters;
+        let mut tail_hits = vec![0usize; pn];
+        for i in 0..m {
+            scratch.clear();
+            scratch.extend(parts.iter().map(|&(l, w)| (values[l * m + i], w)));
+            if score_pass && g > 0 {
+                order.clear();
+                order.extend(parts.iter().enumerate().map(|(p, &(l, _))| (values[l * m + i], p)));
+                order.sort_by(|x, y| x.0.total_cmp(&y.0));
+                for &(_, p) in order[..g].iter().chain(order[pn - g..].iter()) {
+                    tail_hits[p] += 1;
+                }
+            }
+            out[k * m + i] = trimmed_weighted_mean(&mut scratch, trim);
+        }
+        if score_pass {
+            let nu_k = &out[k * m..(k + 1) * m];
+            let dist: Vec<f64> = parts
+                .iter()
+                .map(|&(l, _)| {
+                    (0..m).map(|i| (values[l * m + i] - nu_k[i]).abs() as f64).sum()
+                })
+                .collect();
+            let mut sorted = dist.clone();
+            sorted.sort_by(f64::total_cmp);
+            let med = sorted[(pn - 1) / 2].max(1e-12);
+            let nu_l1: f64 = nu_k.iter().map(|v| v.abs() as f64).sum();
+            for (p, &(l, _)) in parts.iter().enumerate() {
+                if l == k {
+                    continue;
+                }
+                let tail_frac = tail_hits[p] as f64 / m.max(1) as f64;
+                let evidence = tail_frac >= det.tail_frac_min
+                    && dist[p] >= det.dist_ratio * med
+                    && dist[p] >= det.rel_dist_min * (nu_l1 + 1e-6);
+                let s = &mut scores[k * n + l];
+                if evidence {
+                    *s += 1;
+                    if *s >= det.exclude_after {
+                        excluded[k * n + l] = true;
+                    }
+                } else {
+                    *s = 0;
+                }
+            }
+        }
+    }
+    out
+}
+
 /// One agent's adapt step (Eq. 31a) over the whole minibatch, shared
 /// verbatim by the serial and threaded paths so their per-row arithmetic
 /// is identical. `nu`/`psi` are the agent's `B·M` row windows; `thr` is
@@ -1129,6 +1231,102 @@ mod tests {
         for v in &z1 {
             assert!((0.0..=1.0).contains(v));
         }
+    }
+
+    /// The matrix-form detection mirror: a persistent sign-flip agent is
+    /// excluded by every judge after `warmup + exclude_after` rounds,
+    /// honest agents accumulate no score, and both the detection-off path
+    /// and the zero-attacker detection-on path are bit-for-bit
+    /// [`resilient_combine`].
+    #[test]
+    fn resilient_combine_detect_excludes_sign_flipper() {
+        let n = 8usize;
+        let m = 6usize;
+        let mut rng = Pcg64::new(29);
+        let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+        let a = metropolis_weights(&g);
+        let base: Vec<f32> = vec![2.0, -1.5, 3.0, -2.5, 1.0, -3.5];
+        let mut values = vec![0.0f32; n * m];
+        for k in 0..n {
+            for i in 0..m {
+                values[k * m + i] = base[i] + 0.01 * rng.next_normal();
+            }
+        }
+        let mut poisoned = values.clone();
+        for i in 0..m {
+            poisoned[3 * m + i] = -values[3 * m + i];
+        }
+        let det = crate::net::chaos::DetectionConfig::armed();
+        let mut scores = vec![0usize; n * n];
+        let mut excluded = vec![false; n * n];
+        for iter in 0..det.warmup_iters + det.exclude_after + 3 {
+            let out = resilient_combine_detect(
+                &a, &poisoned, n, m, Some(1), iter, &det, &mut scores, &mut excluded,
+            );
+            assert_eq!(out.len(), n * m);
+        }
+        for k in 0..n {
+            for l in 0..n {
+                if k == l {
+                    continue;
+                }
+                if l == 3 && a.get(l, k) > 0.0 {
+                    assert!(excluded[k * n + l], "judge {k} must exclude the attacker");
+                } else {
+                    assert!(!excluded[k * n + l], "honest pair ({k},{l}) excluded");
+                    assert_eq!(scores[k * n + l], 0, "honest pair ({k},{l}) scored");
+                }
+            }
+        }
+        // Post-exclusion the judges aggregate over honest participants
+        // only: estimates return to the honest value range.
+        let out = resilient_combine_detect(
+            &a,
+            &poisoned,
+            n,
+            m,
+            Some(1),
+            det.warmup_iters + det.exclude_after + 4,
+            &det,
+            &mut scores,
+            &mut excluded,
+        );
+        for k in 0..n {
+            if k == 3 || a.get(3, k) == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                let v = out[k * m + i];
+                assert!(
+                    (v - base[i]).abs() < 0.1,
+                    "judge {k} dim {i}: post-exclusion estimate {v} far from honest {b}",
+                    b = base[i]
+                );
+            }
+        }
+        // Detection off, and detection on with zero attackers, are both
+        // bit-for-bit the plain resilient combine.
+        let plain = resilient_combine(&a, &values, n, m, Some(1));
+        let off = resilient_combine_detect(
+            &a,
+            &values,
+            n,
+            m,
+            Some(1),
+            100,
+            &crate::net::chaos::DetectionConfig::default(),
+            &mut vec![0usize; n * n],
+            &mut vec![false; n * n],
+        );
+        let mut s2 = vec![0usize; n * n];
+        let mut e2 = vec![false; n * n];
+        let on_clean =
+            resilient_combine_detect(&a, &values, n, m, Some(1), 100, &det, &mut s2, &mut e2);
+        for ((p, o), c) in plain.iter().zip(&off).zip(&on_clean) {
+            assert_eq!(p.to_bits(), o.to_bits());
+            assert_eq!(p.to_bits(), c.to_bits());
+        }
+        assert!(e2.iter().all(|&e| !e), "zero-attacker run excluded someone");
     }
 
     /// Consensus disagreement is O(μ): it must shrink proportionally as μ

@@ -73,6 +73,8 @@ COMMANDS:
               [--stream planted|shift|field] [--shift-count n]
               [--conv-tol x] [--conv-window w] [--conv-patience p]
               [--thaw-ratio x]
+              [--poison] [--poison-frac x] [--poison-scale x]
+              [--no-poison-screen] [--poison-screen-z x]
               [--trace path] [--trace-format f]
               (three-stage concurrent pipeline: batch formation | diffusion
               inference | Eq. 51 update overlap on separate threads;
@@ -103,7 +105,12 @@ COMMANDS:
               (reports near/far sensor-pair correlation and adaptation
               gain on top of the serve report; pairs naturally with
               --conv-tol: the field is stationary, so adaptation freezes
-              once the dictionary captures the spatial modes)
+              once the dictionary captures the spatial modes;
+              --poison corrupts a chaos-seeded fraction of inbound sample
+              vectors before admission; the batch former's deterministic
+              robust norm-outlier screen (median + z*1.4826*MAD over the
+              stream norms) quarantines them before the Eq. 51 update —
+              --no-poison-screen measures the undefended run)
   async       sync-vs-async diffusion, straggler modeling [--config f]
               [--tau t] [--agents n] [--dim m] [--topology ring|grid|er|full]
               [--mu x] [--iters n] [--compute-dist zero|const|uniform|exp]
@@ -123,8 +130,10 @@ COMMANDS:
               [--chaos-seed n] [--partition-frac x] [--partition-start-frac x]
               [--partition-len-frac x] [--drop-prob p] [--crash-agent k]
               [--churn-windows w] [--pushsum auto|on|off|median|trimmed:f]
-              [--byzantine] [--byzantine-agent k]
+              [--byzantine] [--byzantine-agent k] [--byzantine-agents k1,k2]
               [--byzantine-policy sign-flip|scaled-noise|constant|colluding-offset]
+              [--detect] [--detect-flag-after n] [--detect-exclude-after n]
+              [--detect-probation-us t] [--detect-warmup n]
               [--adaptive-tau] [--bias-probe] [--trace path] [--trace-format f]
               (FaultSchedule of healing partitions, Gilbert-Elliott bursty
               links, message drops, agent crash/recovery windows, and
@@ -136,7 +145,17 @@ COMMANDS:
               directed; median / trimmed:f select coordinate-wise
               resilient combine; --byzantine runs the attack-vs-defense
               probe: MSD under a corrupted-psi attacker with Metropolis
-              vs trimmed-mean combine, plus bitwise replay; TOML [chaos])
+              vs trimmed-mean combine, plus bitwise replay;
+              --byzantine-agents names a *colluding set* (f > 1);
+              --detect arms per-neighbor reputation scoring on top of the
+              resilient combine: consistent trimmed-tail membership plus
+              robust distance outliers accumulate evidence, flag at
+              --detect-flag-after, exclude (weights renormalized) at
+              --detect-exclude-after, optional probation re-admission
+              after --detect-probation-us; every score update is a pure
+              function of (config, sim-time, psi bits), so detection
+              replays bit-identically and zero-attacker runs stay
+              bitwise clean; TOML [chaos])
   trace-check validate a JSONL trace written by --trace: --trace path
               (parses every line, checks the Chrome trace_event fields)
   bench-gate  compare derived speedups in --current json against --baseline
@@ -338,6 +357,14 @@ fn serve_cfg_from_args(args: &Args) -> ddl::Result<ServeConfig> {
     }
     cfg.control.enabled = cfg.control.enabled || args.flag("adaptive");
     cfg.control.slo_p99_ms = args.f32_or("slo-ms", cfg.control.slo_p99_ms as f32)? as f64;
+    // Data-poisoning injection + the robust norm-outlier screen.
+    cfg.poison = cfg.poison || args.flag("poison");
+    cfg.poison_frac = (args.f32_or("poison-frac", cfg.poison_frac as f32)? as f64).clamp(0.0, 1.0);
+    cfg.poison_scale = args.f32_or("poison-scale", cfg.poison_scale)?;
+    if args.flag("no-poison-screen") {
+        cfg.poison_screen = false;
+    }
+    cfg.poison_screen_z = (args.f32_or("poison-screen-z", cfg.poison_screen_z as f32)? as f64).max(0.0);
     // Workload stream + distribution-shift knobs.
     cfg.stream = args.str_or("stream", &cfg.stream).to_string();
     cfg.shift_count = args.usize_or("shift-count", cfg.shift_count)?;
@@ -463,6 +490,17 @@ fn cmd_chaos(args: &Args) -> i32 {
         }
         cfg.chaos.byzantine_policy =
             args.str_or("byzantine-policy", &cfg.chaos.byzantine_policy).to_string();
+        cfg.chaos.byzantine_agents =
+            args.str_or("byzantine-agents", &cfg.chaos.byzantine_agents).to_string();
+        cfg.chaos.detect = cfg.chaos.detect || args.flag("detect");
+        cfg.chaos.detect_flag_after =
+            args.usize_or("detect-flag-after", cfg.chaos.detect_flag_after)?.max(1);
+        cfg.chaos.detect_exclude_after = args
+            .usize_or("detect-exclude-after", cfg.chaos.detect_exclude_after)?
+            .max(cfg.chaos.detect_flag_after);
+        cfg.chaos.detect_probation_us =
+            args.u64_or("detect-probation-us", cfg.chaos.detect_probation_us)?;
+        cfg.chaos.detect_warmup = args.usize_or("detect-warmup", cfg.chaos.detect_warmup)?;
         cfg.control.adaptive_tau = cfg.control.adaptive_tau || args.flag("adaptive-tau");
         apply_trace_args(&mut cfg.obs, args);
         if args.flag("byzantine") {

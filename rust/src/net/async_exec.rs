@@ -101,7 +101,9 @@ use crate::graph::Graph;
 use crate::infer::DiffusionParams;
 use crate::math::Mat;
 use crate::model::{DistributedDictionary, TaskSpec};
-use crate::net::chaos::{ChaosPolicy, ChaosStats, CombineMode, CorruptPolicy, Fault, FaultSchedule};
+use crate::net::chaos::{
+    ChaosPolicy, ChaosStats, CombineMode, CorruptPolicy, DetectionConfig, Fault, FaultSchedule,
+};
 use crate::net::message::MessageStats;
 use crate::obs::{ArgValue, MetricsRegistry, ObsHandle, Track};
 use crate::ops::project::clip_linf;
@@ -207,6 +209,12 @@ pub struct AsyncParams {
     /// Combine rule; `Auto` (default) resolves at construction to
     /// push-sum iff the schedule contains directed faults.
     pub combine: CombineMode,
+    /// Byzantine detection-and-exclusion layer over the resilient combine
+    /// (see [`DetectionConfig`]). Disabled by default; consulted only by
+    /// `Median`/`TrimmedMean` combines, and even when enabled its scoring
+    /// pass never touches the aggregate arithmetic or any RNG stream — a
+    /// zero-attacker run is bit-for-bit the detection-off run.
+    pub detect: DetectionConfig,
 }
 
 impl Default for AsyncParams {
@@ -226,6 +234,7 @@ impl Default for AsyncParams {
             chaos: FaultSchedule::default(),
             chaos_policy: ChaosPolicy::default(),
             combine: CombineMode::Auto,
+            detect: DetectionConfig::default(),
         }
     }
 }
@@ -282,6 +291,29 @@ impl AsyncParams {
         self.combine = mode;
         self
     }
+
+    /// Builder-style detection layer (see [`DetectionConfig`]).
+    pub fn with_detect(mut self, detect: DetectionConfig) -> Self {
+        self.detect = detect;
+        self
+    }
+}
+
+/// Per-(judge, neighbor-slot) reputation state of the detection layer.
+/// Every transition is a pure function of (config, sim-time, ψ bits) —
+/// no randomness, no wall clock — so detection runs replay bit-identically.
+#[derive(Clone, Copy, Debug, Default)]
+struct NbrScore {
+    /// Consecutive combines with full Byzantine evidence (resets to 0 on
+    /// the first clean combine).
+    score: usize,
+    /// Crossed [`DetectionConfig::flag_after`] at least once.
+    flagged: bool,
+    /// Crossed [`DetectionConfig::exclude_after`]: the suspect's ψ no
+    /// longer enters this judge's aggregate.
+    excluded: bool,
+    /// Sim-time of the exclusion (probation timer origin).
+    excluded_at_us: u64,
 }
 
 /// Discrete-event kinds. ψ payloads ride inside the event queue — the
@@ -403,6 +435,10 @@ pub struct AsyncNetwork {
     /// True when `Auto` upgraded Metropolis → push-sum (directed faults).
     auto_pushsum: bool,
     chaos_stats: ChaosStats,
+    /// Detection-layer reputation state, `det[judge][nb_slot]` aligned
+    /// with `graph.neighbors(judge)`. All-default (and never read) when
+    /// [`AsyncParams::detect`] is disabled.
+    det: Vec<Vec<NbrScore>>,
     /// Trace sink (default: disabled). Emitting never consumes
     /// randomness or advances the clock — traced runs replay untraced
     /// runs bit-for-bit (`tests/obs_parity.rs`).
@@ -429,6 +465,7 @@ impl AsyncNetwork {
             }
         }
         params.chaos.validate(n)?;
+        params.detect.validate()?;
         let (mode, auto_pushsum) = match params.combine {
             CombineMode::Auto => {
                 if params.chaos.has_directed_faults() {
@@ -486,6 +523,7 @@ impl AsyncNetwork {
         }
         let chaos_rng = Pcg64::new(params.chaos.seed ^ 0xC4A0_55ED);
         let chaos_active = !params.chaos.is_empty();
+        let det = (0..n).map(|k| vec![NbrScore::default(); graph.degree(k)]).collect();
         Ok(AsyncNetwork {
             agents,
             graph,
@@ -516,6 +554,7 @@ impl AsyncNetwork {
             pushsum,
             auto_pushsum,
             chaos_stats: ChaosStats::default(),
+            det,
             obs: ObsHandle::null(),
         })
     }
@@ -1166,6 +1205,19 @@ impl AsyncNetwork {
     /// neighbors per neighborhood at the cost of a consensus estimate
     /// that is no longer a fixed linear map — so this mode is opt-in,
     /// never `Auto`-selected.
+    ///
+    /// With [`AsyncParams::detect`] enabled, a scoring pass runs *after*
+    /// the aggregate: per delivered neighbor it gathers per-combine
+    /// evidence (trimmed-tail membership fraction + L1
+    /// distance-to-aggregate against both the median participant distance
+    /// and the aggregate's own scale — see [`DetectionConfig`]) on a
+    /// **separate** augmented sort, so the aggregate arithmetic and every
+    /// RNG stream are untouched and a zero-attacker detection run stays
+    /// bit-for-bit the detection-off run. A neighbor past
+    /// `exclude_after` consecutive evidence combines is excluded: its ψ
+    /// never enters this judge's participant set again (renormalization
+    /// is inherent in the trimmed weighted mean — the same never-heard
+    /// machinery path), until optional probation re-admits it.
     fn combine_resilient(
         &mut self,
         k: usize,
@@ -1178,23 +1230,50 @@ impl AsyncNetwork {
         let clip = task.dual_clip();
         let m = self.m;
         let neighbors = self.graph.neighbors(k);
+        let det = self.params.detect;
         let mut staleness_max = 0usize;
         let mut fallbacks = 0usize;
         let mut fallback_stale = 0usize;
         let mut excluded = 0usize;
+        let mut readmitted: Vec<usize> = Vec::new();
+        let mut newly_flagged: Vec<usize> = Vec::new();
+        let mut newly_excluded: Vec<usize> = Vec::new();
         let waited_us;
         let participants;
+        let trimmed_each_side;
         {
             let ag = &mut self.agents[k];
             waited_us = t.saturating_sub(ag.wait_since);
+            // Probation sweep: re-admit suspects whose exclusion has aged
+            // past the probation window. Scores reset to zero — a
+            // re-offender walks the full evidence ladder again.
+            if det.enabled && det.probation_us > 0 {
+                for (j, s) in self.det[k].iter_mut().enumerate() {
+                    if s.excluded && t >= s.excluded_at_us.saturating_add(det.probation_us) {
+                        *s = NbrScore::default();
+                        readmitted.push(j);
+                    }
+                }
+            }
             // Participants: (weight, ψ) — self first, then neighbors in
             // ascending order (the Metropolis accumulation order; the sort
             // inside the aggregate makes the order immaterial, but keeping
-            // it fixed keeps the trace readable).
+            // it fixed keeps the trace readable). `src[p]` remembers which
+            // neighbor slot produced `parts[p]` (`usize::MAX` = self) for
+            // the detection pass.
             let mut parts: Vec<(f32, Vec<f32>)> = Vec::with_capacity(neighbors.len() + 1);
+            let mut src: Vec<usize> = Vec::with_capacity(neighbors.len() + 1);
             parts.push((akk, ag.psi.clone()));
+            src.push(usize::MAX);
             for (j, &nb) in neighbors.iter().enumerate() {
                 let slots = &mut ag.inbox[j];
+                if det.enabled && self.det[k][j].excluded {
+                    // Detection exclusion: the suspect's ψ never enters the
+                    // aggregate; its inbox is drained so state stays
+                    // bounded while it keeps transmitting.
+                    slots.clear();
+                    continue;
+                }
                 let mut best = None;
                 for e in slots.iter() {
                     if e.0 <= i && best.map_or(true, |b| e.0 > b) {
@@ -1219,18 +1298,79 @@ impl AsyncNetwork {
                 let w = self.weights.get(nb, k);
                 if let Some(e) = slots.iter().find(|e| e.0 == used) {
                     parts.push((w, e.1.clone()));
+                    src.push(j);
                 }
                 slots.retain(|e| e.0 >= used);
             }
             participants = parts.len();
+            let g = match trim {
+                None => participants.saturating_sub(1) / 2,
+                Some(f) => f.min(participants.saturating_sub(1) / 2),
+            };
+            trimmed_each_side = g;
             // Coordinate-wise trimmed weighted mean (renormalization is
             // inside the aggregate, so exclusions need no extra pass).
+            let mut tail_hits = vec![0usize; participants];
             let mut scratch: Vec<(f32, f32)> = Vec::with_capacity(participants);
+            let mut order: Vec<(f32, usize)> = Vec::with_capacity(participants);
             for idx in 0..m {
                 scratch.clear();
                 scratch.extend(parts.iter().map(|(w, v)| (v[idx], *w)));
+                if det.enabled && g > 0 && i >= det.warmup_iters {
+                    // Augmented (value, participant) sort for tail
+                    // attribution — separate from the aggregate's own
+                    // sort, so detection cannot perturb the trajectory.
+                    order.clear();
+                    order.extend(parts.iter().enumerate().map(|(p, (_, v))| (v[idx], p)));
+                    order.sort_by(|a, b| a.0.total_cmp(&b.0));
+                    for &(_, p) in order[..g].iter().chain(order[participants - g..].iter()) {
+                        tail_hits[p] += 1;
+                    }
+                }
                 ag.nu[idx] =
                     crate::infer::diffusion::trimmed_weighted_mean(&mut scratch, trim);
+            }
+            // Evidence pass — a pure function of (config, ψ bits, the
+            // pre-clip aggregate just computed). Evidence requires ALL
+            // THREE: tail-membership frequency, distance dominance over
+            // the median participant, and distance significance against
+            // the aggregate's own L1 scale (suppresses transient-phase
+            // false positives, when everything is still near zero).
+            if det.enabled && participants > 1 && i >= det.warmup_iters {
+                let mut dist = vec![0f64; participants];
+                for (p, (_, v)) in parts.iter().enumerate() {
+                    let mut d = 0f64;
+                    for idx in 0..m {
+                        d += (v[idx] - ag.nu[idx]).abs() as f64;
+                    }
+                    dist[p] = d;
+                }
+                let mut sorted = dist.clone();
+                sorted.sort_by(f64::total_cmp);
+                let med = sorted[(participants - 1) / 2].max(1e-12);
+                let nu_l1: f64 = ag.nu.iter().map(|v| v.abs() as f64).sum();
+                for p in 1..participants {
+                    let j = src[p];
+                    let tail_frac = tail_hits[p] as f64 / m.max(1) as f64;
+                    let evidence = tail_frac >= det.tail_frac_min
+                        && dist[p] >= det.dist_ratio * med
+                        && dist[p] >= det.rel_dist_min * (nu_l1 + 1e-6);
+                    let s = &mut self.det[k][j];
+                    if evidence {
+                        s.score += 1;
+                        if !s.flagged && s.score >= det.flag_after {
+                            s.flagged = true;
+                            newly_flagged.push(j);
+                        }
+                        if !s.excluded && s.score >= det.exclude_after {
+                            s.excluded = true;
+                            s.excluded_at_us = t;
+                            newly_excluded.push(j);
+                        }
+                    } else {
+                        s.score = 0;
+                    }
+                }
             }
             if let Some(b) = clip {
                 clip_linf(&mut ag.nu, b);
@@ -1238,11 +1378,42 @@ impl AsyncNetwork {
             ag.waiting = false;
             ag.done = i + 1;
         }
+        self.chaos_stats.readmitted += readmitted.len();
+        self.chaos_stats.flagged += newly_flagged.len();
+        self.chaos_stats.detect_excluded += newly_excluded.len();
         if self.obs.enabled() {
-            let g = match trim {
-                None => participants.saturating_sub(1) / 2,
-                Some(f) => f.min(participants.saturating_sub(1) / 2),
-            };
+            for &j in &readmitted {
+                self.obs.instant(
+                    t,
+                    "agent_readmitted",
+                    Track::Agent(neighbors[j]),
+                    vec![("judge", ArgValue::U(k as u64)), ("iter", ArgValue::U(i as u64))],
+                );
+            }
+            for &j in &newly_flagged {
+                self.obs.instant(
+                    t,
+                    "agent_flagged",
+                    Track::Agent(neighbors[j]),
+                    vec![
+                        ("judge", ArgValue::U(k as u64)),
+                        ("iter", ArgValue::U(i as u64)),
+                        ("score", ArgValue::U(det.flag_after as u64)),
+                    ],
+                );
+            }
+            for &j in &newly_excluded {
+                self.obs.instant(
+                    t,
+                    "agent_excluded",
+                    Track::Agent(neighbors[j]),
+                    vec![
+                        ("judge", ArgValue::U(k as u64)),
+                        ("iter", ArgValue::U(i as u64)),
+                        ("score", ArgValue::U(det.exclude_after as u64)),
+                    ],
+                );
+            }
             self.obs.instant(
                 t,
                 "combine_trimmed",
@@ -1250,7 +1421,7 @@ impl AsyncNetwork {
                 vec![
                     ("iter", ArgValue::U(i as u64)),
                     ("participants", ArgValue::U(participants as u64)),
-                    ("trimmed_each_side", ArgValue::U(g as u64)),
+                    ("trimmed_each_side", ArgValue::U(trimmed_each_side as u64)),
                 ],
             );
         }
@@ -1446,6 +1617,38 @@ impl AsyncNetwork {
     /// The installed fault schedule.
     pub fn fault_schedule(&self) -> &FaultSchedule {
         &self.params.chaos
+    }
+
+    /// The installed detection configuration.
+    pub fn detection(&self) -> DetectionConfig {
+        self.params.detect
+    }
+
+    /// Agents currently excluded by at least one judge's detection state
+    /// (ascending, deduplicated). Always empty when detection is off.
+    pub fn excluded_suspects(&self) -> Vec<usize> {
+        self.collect_suspects(|s| s.excluded)
+    }
+
+    /// Agents flagged (suspicion threshold crossed) by at least one judge
+    /// (ascending, deduplicated). A superset of
+    /// [`Self::excluded_suspects`] while the flag bit persists.
+    pub fn flagged_suspects(&self) -> Vec<usize> {
+        self.collect_suspects(|s| s.flagged)
+    }
+
+    fn collect_suspects(&self, pred: impl Fn(&NbrScore) -> bool) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (k, scores) in self.det.iter().enumerate() {
+            for (j, s) in scores.iter().enumerate() {
+                if pred(s) {
+                    out.push(self.graph.neighbors(k)[j]);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// Normalized mean-square deviation of the agents' duals from a
@@ -2221,5 +2424,112 @@ mod tests {
         }
         assert_eq!(a1.stats(), a2.stats());
         assert_eq!(a1.sim_time_us(), a2.sim_time_us());
+    }
+
+    /// Detection contract, zero-attacker side: arming the detector on a
+    /// run with no Byzantine fault is bitwise inert — same trajectories,
+    /// same stats, same clock as detection-off — and no honest agent is
+    /// ever flagged or excluded (zero false positives).
+    #[test]
+    fn detection_zero_attacker_is_bitwise_inert() {
+        let (n, m, iters) = (12, 5, 600);
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.3, iters);
+        let mk = |detect: DetectionConfig| {
+            AsyncParams::default()
+                .with_tau(2)
+                .with_delays(DelayDist::Exp { mean_us: 60.0 }, DelayDist::Exp { mean_us: 15.0 })
+                .with_seed(31)
+                .with_combine(CombineMode::TrimmedMean(1))
+                .with_detect(detect)
+        };
+        let (dict, g, a, x) = problem(n, m, 0xDE_7E, &Topology::Ring { k: 2 });
+        let mut off = AsyncNetwork::new(g.clone(), a.clone(), m, None, mk(DetectionConfig::default()))
+            .unwrap();
+        off.run(&dict, &task, &x, params).unwrap();
+        let mut on = AsyncNetwork::new(g, a, m, None, mk(DetectionConfig::armed())).unwrap();
+        on.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(off.nu(k), on.nu(k), "agent {k}: detection must not perturb the run");
+        }
+        assert_eq!(off.stats(), on.stats());
+        assert_eq!(off.sim_time_us(), on.sim_time_us());
+        assert_eq!(on.chaos_stats().flagged, 0, "no honest agent may be flagged");
+        assert_eq!(on.chaos_stats().detect_excluded, 0, "no honest agent may be excluded");
+        assert!(on.flagged_suspects().is_empty());
+        assert!(on.excluded_suspects().is_empty());
+    }
+
+    /// Detection contract, attacker side: a persistent sign-flip attacker
+    /// is flagged and excluded by its neighbors, only the attacker is
+    /// suspected, the post-exclusion MSD approaches the clean defended
+    /// fixed point, and the detection run replays bit-identically.
+    #[test]
+    fn detection_excludes_sign_flip_attacker_and_replays() {
+        let (n, m, iters) = (12, 5, 1500);
+        let (dict, g, a, x) = problem(n, m, 0xDE_7F, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.4, iters);
+        let exact = crate::infer::exact_dual(&dict, &task, &x, 1e-6, 20_000).unwrap();
+        let schedule = FaultSchedule::new(0xDE_7F)
+            .with_byzantine(3, CorruptPolicy::SignFlip, 0, u64::MAX);
+        let mk = || {
+            AsyncParams::default()
+                .with_tau(1)
+                .with_delays(DelayDist::Constant { us: 40 }, DelayDist::Constant { us: 10 })
+                .with_seed(17)
+                .with_chaos(schedule.clone())
+                .with_combine(CombineMode::TrimmedMean(1))
+                .with_detect(DetectionConfig::armed())
+        };
+        let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, mk()).unwrap();
+        net.run(&dict, &task, &x, params).unwrap();
+        assert_eq!(net.excluded_suspects(), vec![3], "exactly the attacker is excluded");
+        assert!(net.flagged_suspects().contains(&3), "the attacker is flagged");
+        assert!(net.chaos_stats().flagged > 0);
+        assert!(net.chaos_stats().detect_excluded > 0);
+        let msd = net.msd_vs(&exact.nu);
+        assert!(msd < 1e-2, "post-exclusion MSD should be near the clean optimum: {msd:.3e}");
+
+        let mut replay = AsyncNetwork::new(g, a, m, None, mk()).unwrap();
+        replay.run(&dict, &task, &x, params).unwrap();
+        for k in 0..n {
+            assert_eq!(net.nu(k), replay.nu(k), "agent {k}");
+        }
+        assert_eq!(net.chaos_stats(), replay.chaos_stats());
+        assert_eq!(net.sim_time_us(), replay.sim_time_us());
+    }
+
+    /// Probation: when the Byzantine window closes before the run ends and
+    /// probation is armed, the excluded (now honest) agent is re-admitted
+    /// and participates again — the readmission counter lights up and no
+    /// exclusion is left standing at the end.
+    #[test]
+    fn detection_probation_readmits_reformed_agent() {
+        let (n, m, iters) = (12, 5, 1200);
+        let (dict, g, a, x) = problem(n, m, 0xDE_80, &Topology::Ring { k: 2 });
+        let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+        let params = DiffusionParams::new(0.4, iters);
+        // Constant 40+10 µs steps ⇒ one iteration ≈ 50 µs; attack for the
+        // first ~300 iterations, probation 5 000 µs ≈ 100 iterations.
+        let schedule = FaultSchedule::new(0xDE_80)
+            .with_byzantine(5, CorruptPolicy::SignFlip, 0, 15_000);
+        let detect = DetectionConfig { probation_us: 5_000, ..DetectionConfig::armed() };
+        let ap = AsyncParams::default()
+            .with_tau(1)
+            .with_delays(DelayDist::Constant { us: 40 }, DelayDist::Constant { us: 10 })
+            .with_seed(19)
+            .with_chaos(schedule)
+            .with_combine(CombineMode::TrimmedMean(1))
+            .with_detect(detect);
+        let mut net = AsyncNetwork::new(g, a, m, None, ap).unwrap();
+        net.run(&dict, &task, &x, params).unwrap();
+        assert!(net.chaos_stats().detect_excluded > 0, "attacker was excluded");
+        assert!(net.chaos_stats().readmitted > 0, "probation re-admitted it");
+        assert!(
+            net.excluded_suspects().is_empty(),
+            "no exclusion left standing once the agent reforms: {:?}",
+            net.excluded_suspects()
+        );
     }
 }

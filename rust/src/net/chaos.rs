@@ -200,6 +200,25 @@ impl FaultSchedule {
         self
     }
 
+    /// Add a **colluding set**: every agent in `agents` transmits ψ
+    /// corrupted by the *same* `policy` over the same window. Sharing one
+    /// policy is what makes the set coordinated — e.g. a common
+    /// [`CorruptPolicy::ColludingOffset`] pushes every neighborhood in
+    /// the same direction, and `f` colluders defeat a `trimmed:f−1`
+    /// combine (one corrupted value survives each coordinate's trim).
+    pub fn with_colluders(
+        mut self,
+        agents: &[usize],
+        policy: CorruptPolicy,
+        from_us: u64,
+        until_us: u64,
+    ) -> Self {
+        for &agent in agents {
+            self.faults.push(Fault::Byzantine { agent, policy, from_us, until_us });
+        }
+        self
+    }
+
     /// Convenience: a bipartition putting the first `⌈frac·n⌉` agents
     /// (clamped to `[1, n−1]` so both sides are non-empty) on one side.
     pub fn split_side(n: usize, frac: f64) -> Vec<bool> {
@@ -432,6 +451,113 @@ impl FaultSchedule {
     pub fn has_byzantine(&self) -> bool {
         self.faults.iter().any(|f| matches!(f, Fault::Byzantine { .. }))
     }
+
+    /// Sorted, deduplicated agents with at least one Byzantine window —
+    /// the attacker set the detection probe checks exclusions against.
+    pub fn byzantine_agents(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::Byzantine { agent, .. } => Some(*agent),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Deterministic detection-and-exclusion knobs for the resilient combine
+/// (the layer above masking: instead of paying the trimming tax forever,
+/// persistently suspicious neighbors are *excluded* and the surviving
+/// weights renormalize through the existing never-heard machinery).
+///
+/// Every judgement is a pure function of (this config, sim-time, ψ bits):
+/// per combine, a receiving agent accumulates **evidence** against each
+/// participating neighbor, where evidence requires all three of
+///
+/// 1. the neighbor's value landed in the trimmed tail in at least
+///    `tail_frac_min` of the coordinates,
+/// 2. its L1 distance to the aggregate is at least `dist_ratio` × the
+///    median participant distance (scale-free outlier test), and
+/// 3. that distance is at least `rel_dist_min` × the aggregate's own L1
+///    norm (suppresses the transient, where everything is far from
+///    everything).
+///
+/// Evidence increments a per-neighbor score; any combine without evidence
+/// resets it (honest neighbors cannot drift into exclusion). At
+/// `flag_after` consecutive evidence combines the neighbor is *flagged*
+/// (`agent_flagged` instant), at `exclude_after` it is *excluded* from
+/// this agent's future combines (`agent_excluded`). With
+/// `probation_us > 0` an excluded neighbor is re-admitted with a clean
+/// score after that long (`agent_readmitted`) — re-offending re-excludes
+/// it. No RNG is drawn and no clock is moved, so detection runs replay
+/// bit-identically and (since the aggregate arithmetic is untouched) a
+/// zero-attacker run is bitwise identical to a detection-off run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DetectionConfig {
+    /// Master switch; `false` (default) is bitwise-inert.
+    pub enabled: bool,
+    /// Minimum fraction of coordinates in the trimmed tail (condition 1).
+    pub tail_frac_min: f64,
+    /// Multiple of the median participant distance (condition 2).
+    pub dist_ratio: f64,
+    /// Multiple of the aggregate's L1 norm (condition 3).
+    pub rel_dist_min: f64,
+    /// Consecutive evidence combines before flagging.
+    pub flag_after: usize,
+    /// Consecutive evidence combines before exclusion (≥ `flag_after`).
+    pub exclude_after: usize,
+    /// Probation: µs after exclusion at which the neighbor is re-admitted
+    /// (0 = exclusion is permanent for the run).
+    pub probation_us: u64,
+    /// Local iterations before the evidence pass arms. During the early
+    /// transient every agent is far from the (near-zero) aggregate, so
+    /// scoring there would be pure false-positive risk; a persistent
+    /// attacker loses nothing to a short warmup.
+    pub warmup_iters: usize,
+}
+
+impl Default for DetectionConfig {
+    fn default() -> Self {
+        DetectionConfig {
+            enabled: false,
+            tail_frac_min: 0.40,
+            dist_ratio: 1.4,
+            rel_dist_min: 0.5,
+            flag_after: 6,
+            exclude_after: 12,
+            probation_us: 0,
+            warmup_iters: 8,
+        }
+    }
+}
+
+impl DetectionConfig {
+    /// An enabled config with the default thresholds.
+    pub fn armed() -> Self {
+        DetectionConfig { enabled: true, ..Self::default() }
+    }
+
+    /// Sanity-check the thresholds.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        let ok = (0.0..=1.0).contains(&self.tail_frac_min)
+            && self.dist_ratio.is_finite()
+            && self.dist_ratio >= 1.0
+            && self.rel_dist_min.is_finite()
+            && self.rel_dist_min >= 0.0
+            && self.flag_after >= 1
+            && self.exclude_after >= self.flag_after;
+        if !ok {
+            return Err(DdlError::Config(format!("invalid detection config: {self:?}")));
+        }
+        Ok(())
+    }
 }
 
 /// Combine rule of the async executor.
@@ -514,6 +640,15 @@ pub struct ChaosStats {
     /// ψ copies corrupted before transmission by a Byzantine window
     /// (one per outgoing message of a corrupted adapt).
     pub corrupted: usize,
+    /// (judge, suspect) pairs flagged by the detection layer (a suspect
+    /// is counted once per flagging judge).
+    pub flagged: usize,
+    /// (judge, suspect) pairs excluded by the detection layer — distinct
+    /// from `excluded_neighbors`, which counts never-heard exclusions in
+    /// forced combines.
+    pub detect_excluded: usize,
+    /// (judge, suspect) pairs re-admitted after probation.
+    pub readmitted: usize,
 }
 
 #[cfg(test)]
@@ -645,6 +780,43 @@ mod tests {
             Some(CorruptPolicy::ScaledNoise { sigma: 0.5 })
         );
         assert!(!FaultSchedule::new(0).with_drops(0.1, 0, 10).has_byzantine());
+    }
+
+    #[test]
+    fn colluder_builder_and_query_agree() {
+        let s = FaultSchedule::new(0).with_colluders(
+            &[4, 1, 4],
+            CorruptPolicy::SignFlip,
+            100,
+            200,
+        );
+        assert!(s.validate(6).is_ok());
+        assert_eq!(s.faults().len(), 3, "one window per listed agent");
+        assert_eq!(s.byzantine_agents(), vec![1, 4], "sorted + deduped");
+        assert_eq!(s.byzantine_policy(1, 150), Some(CorruptPolicy::SignFlip));
+        assert_eq!(s.byzantine_policy(4, 150), Some(CorruptPolicy::SignFlip));
+        assert_eq!(s.byzantine_policy(2, 150), None);
+        assert!(FaultSchedule::new(0).byzantine_agents().is_empty());
+    }
+
+    #[test]
+    fn detection_config_defaults_and_validation() {
+        let d = DetectionConfig::default();
+        assert!(!d.enabled, "detection is off by default (bitwise-inert)");
+        assert!(d.validate().is_ok());
+        let armed = DetectionConfig::armed();
+        assert!(armed.enabled);
+        assert!(armed.validate().is_ok());
+        assert!(armed.exclude_after >= armed.flag_after);
+        let bad = DetectionConfig { flag_after: 0, ..DetectionConfig::armed() };
+        assert!(bad.validate().is_err());
+        let bad = DetectionConfig { exclude_after: 1, flag_after: 4, ..DetectionConfig::armed() };
+        assert!(bad.validate().is_err());
+        let bad = DetectionConfig { tail_frac_min: 1.5, ..DetectionConfig::armed() };
+        assert!(bad.validate().is_err());
+        // A disabled config never fails validation, whatever the knobs.
+        let off = DetectionConfig { enabled: false, flag_after: 0, ..DetectionConfig::default() };
+        assert!(off.validate().is_ok());
     }
 
     #[test]

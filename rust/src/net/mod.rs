@@ -52,7 +52,9 @@ pub mod tau_control;
 
 pub use async_exec::{AsyncNetwork, AsyncParams, DelayDist};
 pub use bsp::BspNetwork;
-pub use chaos::{ChaosPolicy, ChaosStats, CombineMode, CorruptPolicy, Fault, FaultSchedule};
+pub use chaos::{
+    ChaosPolicy, ChaosStats, CombineMode, CorruptPolicy, DetectionConfig, Fault, FaultSchedule,
+};
 pub use message::{MessageStats, PsiMessage};
 pub use pool::{chunk_range, PersistentPool, SharedRows, WorkerPool};
 pub use tau_control::{TauController, TauDecision};

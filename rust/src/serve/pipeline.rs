@@ -92,7 +92,7 @@ use crate::serve::control::{
     clamped_policy, BatchController, ControlDecision, DepthController, DepthDecision, PipeSim,
     ServiceModel,
 };
-use crate::serve::queue::{BatchPolicy, Request, SharedQueue};
+use crate::serve::queue::{screen_batch, BatchPolicy, Request, SharedQueue};
 use crate::serve::session::{
     build_engine, emit_conv_events, loss_quarters, serve_params, serve_task, setup,
     slo_violation_frac, ServeReport, SessionSetup,
@@ -129,6 +129,16 @@ pub struct BatchFormer {
     now_us: u64,
     /// Queue sheds already handed out via [`Self::take_shed`].
     reported_shed: u64,
+    /// Poisoned-sample screen threshold (`None` = screen off): formed
+    /// batches are filtered through
+    /// [`crate::serve::queue::screen_batch`] before release, so screening
+    /// stays part of the deterministic formation stage and both executors
+    /// quarantine identically.
+    screen: Option<f64>,
+    /// Samples quarantined by the screen since construction.
+    quarantined: u64,
+    /// Quarantines already handed out via [`Self::take_quarantined`].
+    reported_quarantined: u64,
 }
 
 impl BatchFormer {
@@ -151,7 +161,31 @@ impl BatchFormer {
             stream: stream.into(),
             now_us: 0,
             reported_shed: 0,
+            screen: None,
+            quarantined: 0,
+            reported_quarantined: 0,
         }
+    }
+
+    /// Arm (or disarm) the poisoned-sample norm screen.
+    pub fn with_screen(mut self, threshold: Option<f64>) -> Self {
+        self.screen = threshold;
+        self
+    }
+
+    /// Quarantines recorded by the screen since the last call. Travels
+    /// with the next formed batch like [`Self::take_shed`], so the updater
+    /// traces and the controller observe them at a deterministic point of
+    /// the batch sequence.
+    pub fn take_quarantined(&mut self) -> usize {
+        let delta = self.quarantined - self.reported_quarantined;
+        self.reported_quarantined = self.quarantined;
+        delta as usize
+    }
+
+    /// Total samples quarantined by the screen.
+    pub fn quarantined_total(&self) -> u64 {
+        self.quarantined
     }
 
     /// Sheds recorded by the bounded queue since the last call (always 0
@@ -190,14 +224,16 @@ impl BatchFormer {
                 }
             }
             if self.queue.ready(self.now_us) {
-                return Some(self.queue.drain_batch());
+                let batch = self.queue.drain_batch();
+                return Some(self.apply_screen(batch));
             }
             match self.stream.front() {
                 None => {
                     if self.queue.is_empty() {
                         return None;
                     }
-                    return Some(self.queue.drain_batch());
+                    let batch = self.queue.drain_batch();
+                    return Some(self.apply_screen(batch));
                 }
                 Some(&(t_arrival, _)) => {
                     // Idle: jump to the next arrival or batch deadline.
@@ -208,6 +244,20 @@ impl BatchFormer {
                     self.now_us = self.now_us.max(t_next);
                 }
             }
+        }
+    }
+
+    /// Filter one formed batch through the norm screen (identity with the
+    /// screen off). The min-norm sample always survives, so a released
+    /// batch is never empty.
+    fn apply_screen(&mut self, batch: Vec<Request>) -> Vec<Request> {
+        match self.screen {
+            Some(threshold) => {
+                let (kept, dropped) = screen_batch(batch, threshold);
+                self.quarantined += dropped.len() as u64;
+                kept
+            }
+            None => batch,
         }
     }
 }
@@ -363,6 +413,17 @@ impl UpdaterState {
                 vec![("j", ArgValue::U(j as u64)), ("count", ArgValue::U(formed.shed as u64))],
             );
         }
+        if formed.quarantined > 0 && self.obs.enabled() {
+            self.obs.instant(
+                formed.at_us,
+                "sample_quarantined",
+                Track::Stage("form"),
+                vec![
+                    ("j", ArgValue::U(j as u64)),
+                    ("count", ArgValue::U(formed.quarantined as u64)),
+                ],
+            );
+        }
         let refs: Vec<&[f32]> = batch.iter().map(|r| r.x.as_slice()).collect();
         let tstats = recover_and_stats(
             &snap,
@@ -412,8 +473,10 @@ impl UpdaterState {
                     .push(done_us.saturating_sub(r.arrival_us) as f64 / 1e3);
             }
             // Load the bounded queue shed before this batch formed is
-            // the controller's overload signal ([`BatchController::observe_shed`]).
-            ctl.batch.observe_shed(formed.shed);
+            // the controller's overload signal
+            // ([`BatchController::observe_shed`]); quarantined samples
+            // ride the same path — load the service refused to process.
+            ctl.batch.observe_shed(formed.shed + formed.quarantined);
             ctl.batch.observe_batch(batch.len(), formed.cap, &self.latencies_ms[from..]);
             if let Some(policy) = ctl.batch.maybe_decide(done_us) {
                 // PR 5's `ServeReport::decisions` row, as a trace instant.
@@ -555,6 +618,9 @@ struct Formed {
     /// Requests the bounded admission queue shed since the previous
     /// batch formed (0 for unbounded queues).
     shed: usize,
+    /// Samples the poison screen quarantined since the previous batch
+    /// formed (0 with the screen off).
+    quarantined: usize,
 }
 
 /// Dispatch of one formed batch to an inference worker.
@@ -594,7 +660,7 @@ pub fn run_pipelined(
     } else {
         cfg.pipeline_depth.max(1)
     };
-    let SessionSetup { graph, topo, dict0, stream } = setup(cfg)?;
+    let SessionSetup { graph, topo, dict0, stream, screen } = setup(cfg)?;
     let directed_edges = 2 * graph.edge_count();
     let policy = if adaptive {
         clamped_policy(&cfg.control, cfg.batch, cfg.max_wait_us)
@@ -639,7 +705,8 @@ pub fn run_pipelined(
     ));
 
     let obs = crate::obs::handle_for(&cfg.obs);
-    let mut former = BatchFormer::with_capacity(policy, cfg.queue_capacity, stream);
+    let mut former =
+        BatchFormer::with_capacity(policy, cfg.queue_capacity, stream).with_screen(screen);
     let mut updater = UpdaterState::new(cfg, dict0, directed_edges, depth, slots);
     updater.obs = obs.clone();
     let mode: &'static str = match (exec, adaptive) {
@@ -676,6 +743,7 @@ pub fn run_pipelined(
         samples: served,
         batches,
         shed,
+        quarantined: former.quarantined_total() as usize,
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         duration_s,
         throughput_rps: served as f64 / duration_s,
@@ -751,8 +819,12 @@ fn run_reference(
             Some(b) => b,
             None => break,
         };
-        let formed =
-            Formed { at_us: former.now_us(), cap: queue.policy().max_batch, shed: former.take_shed() };
+        let formed = Formed {
+            at_us: former.now_us(),
+            cap: queue.policy().max_batch,
+            shed: former.take_shed(),
+            quarantined: former.take_quarantined(),
+        };
         // Residual admission-queue depth after the drain, on the
         // formation clock.
         obs.counter(formed.at_us, "queue_depth", Track::Stage("form"), queue.len() as f64);
@@ -922,6 +994,7 @@ fn run_threaded_pipeline(
                 at_us: former.now_us(),
                 cap: queue.policy().max_batch,
                 shed: former.take_shed(),
+                quarantined: former.take_quarantined(),
             };
             // Formation-side gauge; in the threaded executor this
             // interleaves with the updater's events in recorder order

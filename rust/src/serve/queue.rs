@@ -187,6 +187,64 @@ impl MicroBatchQueue {
     }
 }
 
+/// L2 norm of one sample vector, accumulated in f64 in index order — the
+/// screen statistic is a pure function of the sample bits, so poisoning
+/// screens replay bit-identically.
+pub fn sample_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Robust threshold for the poisoned-sample screen over a set of sample
+/// norms: `median + max(z · 1.4826 · MAD, 0.5 · median)`.
+///
+/// The MAD term is the classic robust scale estimate (breakdown point
+/// 50%, far above any realistic poison fraction); the `0.5 · median`
+/// floor keeps the screen from turning paranoid on tightly-clustered
+/// honest streams, where MAD ≈ 0 would otherwise quarantine every sample
+/// a hair above the median. Sorts use `total_cmp`, so the threshold is a
+/// deterministic function of the norm multiset. An empty slice yields
+/// `+∞` (the screen is inert).
+pub fn poison_norm_threshold(norms: &[f64], z: f64) -> f64 {
+    if norms.is_empty() {
+        return f64::INFINITY;
+    }
+    let mut sorted = norms.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let med = sorted[sorted.len() / 2];
+    let mut dev: Vec<f64> = sorted.iter().map(|&n| (n - med).abs()).collect();
+    dev.sort_by(|a, b| a.total_cmp(b));
+    let mad = dev[dev.len() / 2];
+    med + (z * 1.4826 * mad).max(0.5 * med)
+}
+
+/// Split a formed batch into `(kept, quarantined)` by the norm screen:
+/// samples whose L2 norm exceeds `threshold` are quarantined before they
+/// can reach the Eq. 51 update. The minimum-norm sample is always kept so
+/// a batch never screens down to empty (the engine requires B ≥ 1), and
+/// admission order is preserved within both halves.
+pub fn screen_batch(batch: Vec<Request>, threshold: f64) -> (Vec<Request>, Vec<Request>) {
+    if batch.is_empty() {
+        return (batch, Vec::new());
+    }
+    let norms: Vec<f64> = batch.iter().map(|r| sample_norm(&r.x)).collect();
+    let mut min_i = 0usize;
+    for (i, &n) in norms.iter().enumerate() {
+        if n < norms[min_i] {
+            min_i = i;
+        }
+    }
+    let mut kept = Vec::with_capacity(batch.len());
+    let mut quarantined = Vec::new();
+    for (i, r) in batch.into_iter().enumerate() {
+        if norms[i] <= threshold || i == min_i {
+            kept.push(r);
+        } else {
+            quarantined.push(r);
+        }
+    }
+    (kept, quarantined)
+}
+
 /// Concurrent admission handle over a [`MicroBatchQueue`].
 ///
 /// Producers push from any thread; the pipeline's formation stage pops
@@ -461,6 +519,46 @@ mod tests {
         }
         assert!(q.is_empty());
         assert_eq!(seen.len(), 24);
+    }
+
+    /// The norm screen: a clean, clustered stream is never quarantined
+    /// (the 0.5·median floor defeats the MAD ≈ 0 trap), a gross outlier
+    /// is, and an all-poisoned batch still keeps its min-norm sample.
+    #[test]
+    fn poison_screen_quarantines_outliers_only() {
+        let req = |id: u64, x: Vec<f32>| Request { id, arrival_us: 0, x };
+        // Tightly clustered honest norms: MAD is tiny, yet nothing may be
+        // quarantined (zero false positives on clean streams).
+        let clean: Vec<Request> =
+            (0..8).map(|i| req(i, vec![1.0 + 0.001 * i as f32, 0.0])).collect();
+        let norms: Vec<f64> = clean.iter().map(|r| sample_norm(&r.x)).collect();
+        let th = poison_norm_threshold(&norms, 6.0);
+        assert!(th >= 1.5, "floor must hold: {th}");
+        let (kept, quarantined) = screen_batch(clean, th);
+        assert_eq!(kept.len(), 8);
+        assert!(quarantined.is_empty());
+        // One poisoned sample far above the cluster is quarantined; order
+        // is preserved among the kept.
+        let mut mixed: Vec<Request> = (0..7).map(|i| req(i, vec![1.0, 0.01 * i as f32])).collect();
+        mixed.insert(3, req(99, vec![50.0, -50.0]));
+        let norms: Vec<f64> = mixed.iter().map(|r| sample_norm(&r.x)).collect();
+        let th = poison_norm_threshold(&norms, 6.0);
+        let (kept, quarantined) = screen_batch(mixed, th);
+        assert_eq!(quarantined.len(), 1);
+        assert_eq!(quarantined[0].id, 99);
+        assert_eq!(kept.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5, 6]);
+        // Every sample above threshold: the min-norm one survives anyway.
+        let storm: Vec<Request> =
+            (0..4).map(|i| req(i, vec![40.0 + i as f32, 0.0])).collect();
+        let (kept, quarantined) = screen_batch(storm, 1.0);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].id, 0);
+        assert_eq!(quarantined.len(), 3);
+        // Empty inputs are inert.
+        assert!(poison_norm_threshold(&[], 6.0).is_infinite());
+        let (kept, quarantined) = screen_batch(Vec::new(), 0.0);
+        assert!(kept.is_empty() && quarantined.is_empty());
+        assert_eq!(sample_norm(&[3.0, 4.0]), 5.0);
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub struct ServeReport {
     /// Requests shed by the bounded admission queue (`[serve]
     /// queue_capacity`; always 0 when the queue is unbounded).
     pub shed: usize,
+    /// Samples quarantined by the poisoned-sample norm screen before
+    /// reaching the Eq. 51 update (`--poison`; always 0 with the screen
+    /// off). Quarantined samples are not served and pay no latency entry.
+    pub quarantined: usize,
     /// Mean formed batch size.
     pub mean_batch: f64,
     /// Virtual session duration (arrival waits + measured service time).
@@ -114,6 +118,12 @@ impl ServeReport {
                 self.depth_trace.len(),
                 self.slo_p99_ms,
                 100.0 * self.slo_violation_frac,
+            ));
+        }
+        if self.quarantined > 0 {
+            out.push_str(&format!(
+                "\npoison screen: {} samples quarantined before the dictionary update",
+                self.quarantined,
             ));
         }
         if !self.conv_events.is_empty() || self.frozen_batches > 0 {
@@ -390,6 +400,10 @@ pub(crate) struct SessionSetup {
     pub topo: Topology,
     pub dict0: DistributedDictionary,
     pub stream: Vec<(u64, Vec<f32>)>,
+    /// Norm threshold of the poisoned-sample screen (`None` = screen off).
+    /// Computed at setup over the post-poison stream, so it is a pure
+    /// function of (config, seed) and both executors screen identically.
+    pub screen: Option<f64>,
 }
 
 pub(crate) fn setup(cfg: &ServeConfig) -> Result<SessionSetup> {
@@ -402,8 +416,35 @@ pub(crate) fn setup(cfg: &ServeConfig) -> Result<SessionSetup> {
         serve_task(cfg).atom_constraint(),
         &mut rng,
     )?;
-    let stream = generate_stream(cfg, &mut rng)?;
-    Ok(SessionSetup { graph, topo, dict0, stream })
+    let mut stream = generate_stream(cfg, &mut rng)?;
+    if cfg.poison {
+        poison_stream(cfg, &mut stream);
+    }
+    let screen = (cfg.poison && cfg.poison_screen).then(|| {
+        let norms: Vec<f64> =
+            stream.iter().map(|(_, x)| crate::serve::queue::sample_norm(x)).collect();
+        crate::serve::queue::poison_norm_threshold(&norms, cfg.poison_screen_z)
+    });
+    Ok(SessionSetup { graph, topo, dict0, stream, screen })
+}
+
+/// Data-poisoning attack on the inbound stream (`--poison`): each sample
+/// is corrupted with probability `poison_frac` by large additive Gaussian
+/// noise of scale `poison_scale` per coordinate. The poisoner draws from
+/// its own dedicated RNG stream (`seed ^ 0x5015_0EED`), *after* stream
+/// generation — the arrival process, the honest sample bits, and every
+/// other RNG stream of the session are untouched, so a `poison_frac = 0`
+/// run is bit-identical to an unpoisoned one and poisoned runs replay
+/// bit-identically.
+fn poison_stream(cfg: &ServeConfig, stream: &mut [(u64, Vec<f32>)]) {
+    let mut rng = Pcg64::new(cfg.seed ^ 0x5015_0EED);
+    for (_, x) in stream.iter_mut() {
+        if rng.next_f64() < cfg.poison_frac {
+            for v in x.iter_mut() {
+                *v += cfg.poison_scale * rng.next_normal();
+            }
+        }
+    }
 }
 
 /// Loss of the first and last quarter of batches (the gap shows online
@@ -451,7 +492,7 @@ fn run_serial(
     log: &mut dyn FnMut(&str),
 ) -> Result<(ServeReport, DistributedDictionary)> {
     let m = cfg.dim;
-    let SessionSetup { graph, topo, dict0: mut dict, stream } = setup(cfg)?;
+    let SessionSetup { graph, topo, dict0: mut dict, stream, screen } = setup(cfg)?;
     let directed_edges = 2 * graph.edge_count();
 
     let mut engine = build_engine(cfg, &graph, &topo)?;
@@ -509,6 +550,7 @@ fn run_serial(
     let mut batch_losses: Vec<f64> = Vec::new();
     let mut now_us: u64 = 0;
     let mut served = 0usize;
+    let mut quarantined = 0usize;
     let mut next = 0usize;
 
     while next < stream.len() || !queue.is_empty() {
@@ -559,6 +601,36 @@ fn run_serial(
             }
             now_us = now_us.max(t_next);
             continue;
+        };
+
+        // Poisoned-sample screen: quarantine norm outliers before they
+        // reach the engine or the Eq. 51 update. The min-norm sample is
+        // always kept, so the batch never screens down to empty.
+        // Quarantined samples are not served — they pay no latency entry
+        // and ride the controller's shed/overload path.
+        let batch = match screen {
+            Some(threshold) => {
+                let (kept, dropped) = crate::serve::queue::screen_batch(batch, threshold);
+                if !dropped.is_empty() {
+                    quarantined += dropped.len();
+                    if obs.enabled() {
+                        obs.instant(
+                            now_us,
+                            "sample_quarantined",
+                            crate::obs::Track::Stage("form"),
+                            vec![(
+                                "count",
+                                crate::obs::ArgValue::U(dropped.len() as u64),
+                            )],
+                        );
+                    }
+                    if let Some(ctl) = controller.as_mut() {
+                        ctl.observe_shed(dropped.len());
+                    }
+                }
+                kept
+            }
+            None => batch,
         };
 
         if obs.enabled() {
@@ -692,6 +764,7 @@ fn run_serial(
         samples: served,
         batches,
         shed: queue.shed_count() as usize,
+        quarantined,
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         duration_s,
         throughput_rps: served as f64 / duration_s,
@@ -967,6 +1040,59 @@ mod tests {
             adapt.duration_s
         );
         assert!(frozen.throughput_rps > adapt.throughput_rps);
+    }
+
+    /// The poisoning attack and its screen: a poisoned session
+    /// quarantines the corrupted samples before they reach Eq. 51 and the
+    /// defended loss stays far below the undefended run; `poison_frac = 0`
+    /// with the screen armed quarantines nothing and is bit-identical to
+    /// the unpoisoned session (zero false positives); poisoned runs
+    /// replay bit-identically.
+    #[test]
+    fn poison_screen_quarantines_and_recovers() {
+        let mut cfg = tiny_cfg();
+        cfg.samples = 96;
+        cfg.infer.iters = 40;
+        cfg.mu_w = 0.08;
+        let clean = run_service(&cfg, &mut |_| {}).unwrap();
+        assert_eq!(clean.quarantined, 0);
+
+        let mut p = cfg.clone();
+        p.poison = true;
+        p.poison_frac = 0.3;
+        let defended = run_service(&p, &mut |_| {}).unwrap();
+        assert!(defended.quarantined >= 10, "got {}", defended.quarantined);
+        assert_eq!(defended.samples + defended.quarantined, 96);
+        assert!(defended.summary(p.agents).contains("quarantined"));
+
+        let mut u = p.clone();
+        u.poison_screen = false;
+        let undefended = run_service(&u, &mut |_| {}).unwrap();
+        assert_eq!(undefended.quarantined, 0);
+        assert_eq!(undefended.samples, 96);
+        assert!(
+            undefended.loss_last_quarter > 4.0 * defended.loss_last_quarter,
+            "screen must shield the update: undefended {} vs defended {}",
+            undefended.loss_last_quarter,
+            defended.loss_last_quarter
+        );
+
+        // Zero false positives: the armed screen over a clean stream
+        // (poison on, frac 0 — no sample is touched) quarantines nothing
+        // and the session is bit-identical to the unpoisoned run.
+        let mut z = cfg.clone();
+        z.poison = true;
+        z.poison_frac = 0.0;
+        let zfp = run_service(&z, &mut |_| {}).unwrap();
+        assert_eq!(zfp.quarantined, 0, "clean stream must never be quarantined");
+        assert_eq!(zfp.samples, clean.samples);
+        assert_eq!(zfp.batches, clean.batches);
+        assert_eq!(zfp.loss_last_quarter.to_bits(), clean.loss_last_quarter.to_bits());
+
+        // Replay contract: the poisoned, defended run is bit-stable.
+        let replay = run_service(&p, &mut |_| {}).unwrap();
+        assert_eq!(replay.quarantined, defended.quarantined);
+        assert_eq!(replay.loss_last_quarter.to_bits(), defended.loss_last_quarter.to_bits());
     }
 
     #[test]

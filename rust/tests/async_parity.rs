@@ -17,7 +17,7 @@ use ddl::infer::{exact_dual, DiffusionParams};
 use ddl::model::{AtomConstraint, DistributedDictionary, TaskSpec};
 use ddl::net::{
     AsyncNetwork, AsyncParams, BspNetwork, ChaosStats, CombineMode, CorruptPolicy, DelayDist,
-    FaultSchedule,
+    DetectionConfig, FaultSchedule,
 };
 use ddl::rng::Pcg64;
 
@@ -456,6 +456,201 @@ fn prop_trimmed_defense_survives_corrupted_neighbor() {
             assert_eq!(net.nu(k), again.nu(k), "case {case}: replay agent {k}");
         }
     }
+}
+
+/// Property (detection zero false positives): arming the reputation
+/// layer on a run with **zero attackers** is a bitwise no-op — same ν
+/// bits, traffic, and clock as the same run without detection, and no
+/// agent is ever flagged or excluded — across random topologies, delay
+/// models, resilient combine modes, and stragglers.
+#[test]
+fn prop_detection_zero_false_positives_fault_free() {
+    let mut rng = Pcg64::new(0xC4_A5);
+    let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+    for case in 0..8 {
+        let n = 6 + rng.next_below(14) as usize;
+        let m = 3 + rng.next_below(6) as usize;
+        let iters = 20 + rng.next_below(40) as usize;
+        let tau = rng.next_below(4) as usize;
+        let topo = random_topology(&mut rng);
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &topo, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let params = DiffusionParams::new(0.25, iters);
+        let (compute, link) = random_delays(&mut rng);
+        let combine =
+            if case % 2 == 0 { CombineMode::Median } else { CombineMode::TrimmedMean(1) };
+        let mut ap = AsyncParams::default()
+            .with_tau(tau)
+            .with_delays(compute, link)
+            .with_seed(7000 + case)
+            .with_chaos(FaultSchedule::new(rng.next_u64()))
+            .with_combine(combine);
+        if rng.next_below(2) == 1 {
+            ap = ap.with_slow_agent(rng.next_below(n as u64) as usize, 6.0);
+        }
+        let run = |ap: AsyncParams| {
+            let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let plain = run(ap.clone());
+        let armed = run(ap.with_detect(DetectionConfig { enabled: true, ..Default::default() }));
+        for k in 0..n {
+            assert_eq!(
+                plain.nu(k),
+                armed.nu(k),
+                "case {case} ({topo:?}, {combine:?}): detection perturbed agent {k}"
+            );
+        }
+        assert_eq!(plain.stats(), armed.stats(), "case {case}: traffic");
+        assert_eq!(plain.sim_time_us(), armed.sim_time_us(), "case {case}: clock");
+        assert!(
+            armed.flagged_suspects().is_empty() && armed.excluded_suspects().is_empty(),
+            "case {case} ({topo:?}): false positive on a fault-free run: flagged {:?} \
+             excluded {:?}",
+            armed.flagged_suspects(),
+            armed.excluded_suspects()
+        );
+        let cs = armed.chaos_stats();
+        assert_eq!((cs.flagged, cs.detect_excluded, cs.readmitted), (0, 0, 0), "case {case}");
+    }
+}
+
+/// Property (detection replay): a sign-flip attacker against
+/// `TrimmedMean(1)` with detection armed is flagged and excluded, and a
+/// second run under the identical configuration reproduces the entire
+/// detection trajectory bit-for-bit — ν bits, clocks, stats, and the
+/// exact flagged/excluded sets — across random ring sizes and delays.
+#[test]
+fn prop_detection_exclusion_replays_bit_identical() {
+    let mut rng = Pcg64::new(0xC4_A6);
+    let task = TaskSpec::SparseCoding { gamma: 0.15, delta: 0.5 };
+    for case in 0..6 {
+        let n = 8 + rng.next_below(12) as usize;
+        let m = 4 + rng.next_below(6) as usize;
+        let iters = 60 + rng.next_below(40) as usize;
+        let dict =
+            DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+        let g = Graph::generate(n, &Topology::Ring { k: 1 + rng.next_below(2) as usize }, &mut rng);
+        let a = metropolis_weights(&g);
+        let x = rng.normal_vec(m);
+        let params = DiffusionParams::new(0.3, iters);
+        let attacker = rng.next_below(n as u64) as usize;
+        let (compute, link) = random_delays(&mut rng);
+        let schedule = FaultSchedule::new(rng.next_u64()).with_byzantine(
+            attacker,
+            CorruptPolicy::SignFlip,
+            0,
+            u64::MAX,
+        );
+        let ap = AsyncParams::default()
+            .with_tau(rng.next_below(4) as usize)
+            .with_delays(compute, link)
+            .with_seed(8000 + case)
+            .with_chaos(schedule)
+            .with_combine(CombineMode::TrimmedMean(1))
+            .with_detect(DetectionConfig { enabled: true, ..Default::default() });
+        let run = || {
+            let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap.clone()).unwrap();
+            net.run(&dict, &task, &x, params).unwrap();
+            net
+        };
+        let net = run();
+        assert_eq!(
+            net.excluded_suspects(),
+            vec![attacker],
+            "case {case} (n={n}): detection must exclude exactly the attacker"
+        );
+        assert_eq!(net.flagged_suspects(), vec![attacker], "case {case}: flag set");
+        assert!(net.chaos_stats().detect_excluded > 0, "case {case}: counter");
+        let again = run();
+        assert_eq!(net.excluded_suspects(), again.excluded_suspects(), "case {case}: replay set");
+        assert_eq!(net.flagged_suspects(), again.flagged_suspects(), "case {case}: replay flags");
+        assert_eq!(net.chaos_stats(), again.chaos_stats(), "case {case}: replay counters");
+        assert_eq!(net.stats(), again.stats(), "case {case}: replay traffic");
+        assert_eq!(net.sim_time_us(), again.sim_time_us(), "case {case}: replay clock");
+        for k in 0..n {
+            assert_eq!(net.nu(k), again.nu(k), "case {case}: replay agent {k}");
+        }
+    }
+}
+
+/// The f = 2 collusion acceptance shape at test scale: two *adjacent*
+/// sign-flip colluders on a k = 2 ring, so the honest judges between
+/// them see both colluders at once. `TrimmedMean(1)` masking alone can
+/// trim only the more extreme colluder per coordinate — the other leaks
+/// into every combine and holds the trajectory off its clean fixed
+/// point — while masking + detection excludes the pair (the leaker
+/// cascades once its partner is gone) and recovers to within 1e-3 of
+/// the clean defended trajectory.
+#[test]
+fn detection_survives_colluding_pair_where_masking_stays_biased() {
+    let (n, m, iters) = (20, 8, 800);
+    let mut rng = Pcg64::new(0xC4_A7);
+    let dict =
+        DistributedDictionary::random(m, n, n, AtomConstraint::UnitBall, &mut rng).unwrap();
+    let g = Graph::generate(n, &Topology::Ring { k: 2 }, &mut rng);
+    let a = metropolis_weights(&g);
+    let x = rng.normal_vec(m);
+    let task = TaskSpec::SparseCoding { gamma: 0.1, delta: 0.5 };
+    let params = DiffusionParams::new(0.4, iters);
+    let exact = exact_dual(&dict, &task, &x, 1e-6, 20_000).unwrap();
+
+    let colluders = [5usize, 6usize];
+    let attacked = FaultSchedule::new(0xD00D).with_colluders(
+        &colluders,
+        CorruptPolicy::SignFlip,
+        0,
+        u64::MAX,
+    );
+    let scenario = |chaos: FaultSchedule, detect: bool| {
+        let ap = AsyncParams::default()
+            .with_tau(2)
+            .with_delays(DelayDist::Constant { us: 50 }, DelayDist::Constant { us: 10 })
+            .with_seed(0xFEED)
+            .with_chaos(chaos)
+            .with_combine(CombineMode::TrimmedMean(1));
+        if detect {
+            ap.with_detect(DetectionConfig { enabled: true, ..Default::default() })
+        } else {
+            ap
+        }
+    };
+    let run = |ap: AsyncParams| {
+        let mut net = AsyncNetwork::new(g.clone(), a.clone(), m, None, ap).unwrap();
+        net.run(&dict, &task, &x, params).unwrap();
+        net
+    };
+    let clean = run(scenario(FaultSchedule::new(0xD00D), false));
+    let masked = run(scenario(attacked.clone(), false));
+    let detected = run(scenario(attacked, true));
+
+    let msd_clean = clean.msd_vs(&exact.nu);
+    let masking_gap = (masked.msd_vs(&exact.nu) - msd_clean).abs();
+    let detect_gap = (detected.msd_vs(&exact.nu) - msd_clean).abs();
+    let excluded = detected.excluded_suspects();
+    assert!(
+        excluded.contains(&colluders[0]) && excluded.contains(&colluders[1]),
+        "detection must exclude both colluders: {excluded:?}"
+    );
+    assert!(
+        detect_gap <= 1e-3,
+        "detection must recover to the clean defended trajectory: gap {detect_gap:.3e}"
+    );
+    assert!(
+        masking_gap > 1e-3,
+        "premise broken: TrimmedMean(1) masking alone should stay biased under f = 2 \
+         collusion (gap {masking_gap:.3e})"
+    );
+    assert!(
+        detect_gap < masking_gap,
+        "detection ({detect_gap:.3e}) must beat masking alone ({masking_gap:.3e})"
+    );
+    // Corruption really fired in both attacked runs.
+    assert!(masked.chaos_stats().corrupted > 0 && detected.chaos_stats().corrupted > 0);
 }
 
 /// Property (satellite of the τ-invariant): edge churn — links flapping
